@@ -1,0 +1,31 @@
+use sparge::tensor::{matmul, Tensor};
+use sparge::util::rng::Pcg;
+use std::time::Instant;
+fn main() {
+    let mut rng = Pcg::seeded(1);
+    let (m, n, k) = (1024, 1024, 64);
+    let a = Tensor::randn(&[m, k], &mut rng);
+    let b = Tensor::randn(&[n, k], &mut rng);
+    let mut c = vec![0f32; m * n];
+    matmul::matmul_nt_into(a.data(), b.data(), &mut c, m, n, k);
+    let t0 = Instant::now();
+    let reps = 20;
+    for _ in 0..reps { matmul::matmul_nt_into(a.data(), b.data(), &mut c, m, n, k); }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    let gflops = 2.0 * (m * n * k) as f64 / dt / 1e9;
+    println!("matmul_nt: {:.2} GFLOP/s ({:.1} ms)", gflops, dt * 1e3);
+    // nn kernel
+    let b2 = Tensor::randn(&[k, n], &mut rng);
+    let t0 = Instant::now();
+    for _ in 0..reps { matmul::matmul_nn_acc(a.data(), b2.data(), &mut c, m, n, k, true); }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("matmul_nn: {:.2} GFLOP/s", 2.0 * (m * n * k) as f64 / dt / 1e9);
+    // i8 kernel
+    let ai: Vec<i8> = (0..m*k).map(|i| (i % 200) as i8).collect();
+    let bi: Vec<i8> = (0..n*k).map(|i| (i % 180) as i8).collect();
+    let mut ci = vec![0i32; m*n];
+    let t0 = Instant::now();
+    for _ in 0..reps { matmul::matmul_nt_i8(&ai, &bi, &mut ci, m, n, k); }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("matmul_i8: {:.2} GOPS", 2.0 * (m * n * k) as f64 / dt / 1e9);
+}

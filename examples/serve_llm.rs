@@ -1,0 +1,154 @@
+//! End-to-end driver (DESIGN.md §5 / EXPERIMENTS.md §E2E): proves all
+//! three layers compose on a real workload.
+//!
+//! 1. **Train** the byte-level tiny LM *through the Rust runtime* — the
+//!    `lm_train_step` HLO artifact (JAX-authored fwd+bwd+Adam) executed
+//!    step by step from Rust on synthetic text; logs the loss curve.
+//! 2. **Serve** the trained model through the coordinator (queue → dynamic
+//!    batcher → engine): batched generation requests in dense and sparge
+//!    attention modes, reporting latency/throughput.
+//! 3. **Evaluate**: held-out perplexity and a Needle-in-a-Haystack
+//!    retrieval check (the paper's Table 1 text row), dense vs sparge.
+//!
+//!     cargo run --release --example serve_llm -- [--steps 300] [--requests 8]
+//!
+//! Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use sparge::coordinator::{AttnMode, BatchPolicy, Coordinator, EngineHandle};
+use sparge::coordinator::engine::{TRAIN_B, TRAIN_T};
+use sparge::runtime::Manifest;
+use sparge::tensor::Tensor;
+use sparge::util::cli::Args;
+use sparge::util::rng::Pcg;
+use sparge::util::table::{fnum, Table};
+use sparge::workloads::{text, trace};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.get_usize("steps", 300);
+    let n_requests = args.get_usize("requests", 8);
+    let dir = Manifest::default_dir();
+
+    println!("=== [1/3] train byte-LM through lm_train_step HLO ({steps} steps of {TRAIN_B}x{TRAIN_T}) ===");
+    let engine = EngineHandle::spawn(&dir)?;
+    let mut rng = Pcg::seeded(42);
+    let corpus = text::corpus_with_kv(1 << 20, &mut rng);
+    let t0 = std::time::Instant::now();
+    let mut first = f64::NAN;
+    let mut last = f64::NAN;
+    for step in 0..steps {
+        let mut batch = Vec::with_capacity(TRAIN_B * TRAIN_T);
+        for _ in 0..TRAIN_B {
+            let start = rng.range(0, corpus.len() - TRAIN_T - 1);
+            batch.extend(corpus[start..start + TRAIN_T].iter().map(|&b| b as i32));
+        }
+        let loss = engine.train_step(batch)?;
+        if step == 0 {
+            first = loss;
+        }
+        last = loss;
+        if step % 25 == 0 || step + 1 == steps {
+            println!("  step {step:4}  loss {loss:.4}  ppl {:7.2}  ({:.0}s)", loss.exp(), t0.elapsed().as_secs_f64());
+        }
+    }
+    println!("  loss curve: {first:.3} -> {last:.3} (ppl {:.1} -> {:.1})", first.exp(), last.exp());
+    // checkpoint the trained weights for `sparge serve --weights`
+    let params = engine.get_params()?;
+    let ckpt = dir.join("lm_trained.spg");
+    trace::save(&ckpt, &[Tensor::from_vec(&[params.len()], params)])?;
+    println!("  checkpoint: {}", ckpt.display());
+
+    println!("\n=== [2/3] serve batched generation (coordinator: queue -> batcher -> engine) ===");
+    let coordinator = Arc::new(Coordinator::start(engine, BatchPolicy::default()));
+    let mut serve_table = Table::new(
+        "batched serving",
+        &["mode", "requests", "p50 latency (ms)", "p99 latency (ms)", "tokens/s"],
+    );
+    for mode in [AttnMode::Dense, AttnMode::Sparge] {
+        // warm-up: first request per mode pays one-time XLA compilation
+        coordinator.generate(corpus[..32].to_vec(), 1, mode)?;
+        // fire a burst of requests so the batcher actually batches
+        let mut rxs = Vec::new();
+        let mut prompt_rng = Pcg::seeded(9);
+        for _ in 0..n_requests {
+            let start = prompt_rng.range(0, corpus.len() - 64);
+            let prompt = corpus[start..start + 48].to_vec();
+            rxs.push(coordinator.submit(prompt, 8, mode)?);
+        }
+        let mut lats = Vec::new();
+        let mut toks = 0usize;
+        let mut compute = 0f64;
+        for rx in rxs {
+            let resp = rx.recv()?;
+            lats.push(resp.latency * 1e3);
+            toks += resp.output.len();
+            compute += resp.compute;
+        }
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        serve_table.row(&[
+            mode.name().into(),
+            n_requests.to_string(),
+            fnum(sparge::util::stats::percentile_sorted(&lats, 0.5), 0),
+            fnum(sparge::util::stats::percentile_sorted(&lats, 0.99), 0),
+            fnum(toks as f64 / compute, 1),
+        ]);
+    }
+    serve_table.print();
+    println!("note: on the HLO path sparge runs *simulated* skipping (masking) plus in-graph");
+    println!("prediction, so it does not beat dense wall-clock here; real skipping speedups");
+    println!("are measured in the Rust engine benches (quickstart, fig10, table2).");
+
+    println!("\n=== [3/3] evaluate: held-out perplexity + NIAH retrieval (dense vs sparge) ===");
+    let engine = coordinator.engine().clone();
+    let mut eval_rng = Pcg::seeded(1234);
+    let heldout = text::corpus(TRAIN_T * 4, &mut eval_rng);
+    let mut eval_table = Table::new(
+        "quality (paper Table 1 text row, proxy scale)",
+        &["mode", "ppl (held-out)", "NIAH acc", "mean gen latency (ms)"],
+    );
+    for mode in [AttnMode::Dense, AttnMode::Sparge] {
+        // score in train-context-sized windows (the model was trained at
+        // 256 tokens; longer windows would measure length extrapolation)
+        let mut nll = 0.0;
+        let chunks = 4;
+        for c in 0..chunks {
+            nll += engine.score_nll(&heldout[c * TRAIN_T..(c + 1) * TRAIN_T], mode)?;
+        }
+        let nll = nll / chunks as f64;
+        // NIAH: 4 depths at the longest exported context
+        let mut acc_sum = 0f64;
+        let mut lat_sum = 0f64;
+        let n_niah = 4;
+        for i in 0..n_niah {
+            let depth = (i as f64 + 0.5) / n_niah as f64;
+            let mut nrng = Pcg::new(77, i as u64);
+            // within the training context length (the 0.9M byte-LM does not
+            // length-generalize; the paper's Llama evaluates at 24K-128K)
+            let inst = text::niah(236, depth, &mut nrng);
+            let t0 = std::time::Instant::now();
+            let out = engine.generate(&inst.prompt, inst.answer.len(), mode)?;
+            lat_sum += t0.elapsed().as_secs_f64();
+            acc_sum += text::niah_score(&out, &inst.answer);
+        }
+        eval_table.row(&[
+            mode.name().into(),
+            fnum(nll.exp(), 3),
+            fnum(acc_sum / n_niah as f64, 2),
+            fnum(lat_sum / n_niah as f64 * 1e3, 0),
+        ]);
+    }
+    eval_table.print();
+
+    let snap = coordinator.metrics.snapshot();
+    println!(
+        "\ncoordinator metrics: {} requests, {} tokens, p50 {:.0}ms, p99 {:.0}ms, {} errors",
+        snap.requests,
+        snap.tokens_out,
+        snap.latency_p50 * 1e3,
+        snap.latency_p99 * 1e3,
+        snap.errors
+    );
+    Ok(())
+}

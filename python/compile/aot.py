@@ -1,0 +1,215 @@
+"""AOT export: lower the L1/L2 computations to HLO *text* artifacts the
+Rust runtime loads via PJRT.
+
+HLO text (not ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+xla_extension 0.5.1 (the version the published ``xla`` crate binds)
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``make artifacts``). Python never runs after this step.
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import trace_io
+from .kernels import ref as kref
+from .kernels import sparge as ksparge
+
+# attention artifact geometry (single head, paper-style head dim)
+ATTN_D = 64
+ATTN_SEQ_LENS = (1024, 2048)
+ATTN_BQ, ATTN_BK, ATTN_CW = 64, 64, 4
+ATTN_TAU, ATTN_THETA, ATTN_LAMBDA = 0.95, 0.4, -8.0
+
+# model artifact geometry
+LM_CFG = M.LmCfg()
+LM_SEQ_LENS = (256, 1024, 2048)
+TRAIN_B, TRAIN_T = 8, 256
+DIT_CFG = M.DitCfg()
+DIT_N = 1152  # 2 x 24 x 24 latent grid
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _iospec(shapes_dtypes):
+    return [{"shape": list(s), "dtype": d} for s, d in shapes_dtypes]
+
+
+class Exporter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {"version": 1, "artifacts": {}}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name, fn, arg_specs, inputs, outputs, meta=None):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        self.manifest["artifacts"][name] = {
+            "path": path,
+            "inputs": _iospec(inputs),
+            "outputs": _iospec(outputs),
+            "meta": meta or {},
+        }
+        print(f"  [{time.time()-t0:6.1f}s] {name}: {len(text)/1e6:.2f} MB")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"wrote manifest with {len(self.manifest['artifacts'])} artifacts")
+
+
+def export_attention(ex: Exporter):
+    """Single-head attention ops: dense oracle and the SpargeAttn Pallas
+    kernel (stage-1 mask computed in-graph; tau/theta/lambda baked)."""
+    for n in ATTN_SEQ_LENS:
+        qkv = [_spec((n, ATTN_D))] * 3
+
+        ex.export(
+            f"attn_dense_{n}",
+            lambda q, k, v: (kref.attention_dense(q, k, v),),
+            qkv,
+            inputs=[((n, ATTN_D), "f32")] * 3,
+            outputs=[((n, ATTN_D), "f32")],
+            meta={"kind": "attn_dense", "seq": n, "d": ATTN_D},
+        )
+
+        def sparge_fn(q, k, v):
+            out, mask = ksparge.sparge_attention(
+                q, k, v, tau=ATTN_TAU, theta=ATTN_THETA, lam=ATTN_LAMBDA,
+                bq=ATTN_BQ, bk=ATTN_BK, cw=ATTN_CW,
+            )
+            density = jnp.mean(mask.astype(jnp.float32))
+            return out, density
+
+        ex.export(
+            f"attn_sparge_{n}",
+            sparge_fn,
+            qkv,
+            inputs=[((n, ATTN_D), "f32")] * 3,
+            outputs=[((n, ATTN_D), "f32"), ((), "f32")],
+            meta={
+                "kind": "attn_sparge", "seq": n, "d": ATTN_D,
+                "tau": ATTN_TAU, "theta": ATTN_THETA, "lambda": ATTN_LAMBDA,
+                "bq": ATTN_BQ, "bk": ATTN_BK, "cw": ATTN_CW,
+            },
+        )
+
+
+def export_lm(ex: Exporter):
+    spec = M.lm_param_spec(LM_CFG)
+    pcount = M.param_count(spec)
+    meta_base = {
+        "d_model": LM_CFG.d_model, "n_heads": LM_CFG.n_heads,
+        "n_layers": LM_CFG.n_layers, "vocab": LM_CFG.vocab,
+        "params": pcount,
+    }
+
+    # initial weights + Adam state seeds, via the shared trace format
+    params0 = M.init_params(spec, seed=0)
+    trace_io.save(os.path.join(ex.out_dir, "lm_init.spg"), [params0])
+    print(f"  lm params: {pcount/1e6:.2f}M")
+
+    for t in LM_SEQ_LENS:
+        for mode in ("dense", "sparge"):
+            fn = functools.partial(
+                lambda fp, toks, mode: (M.lm_forward(LM_CFG, fp, toks, mode=mode),),
+                mode=mode,
+            )
+            ex.export(
+                f"lm_fwd_{mode}_{t}",
+                fn,
+                [_spec((pcount,)), _spec((t,), jnp.int32)],
+                inputs=[((pcount,), "f32"), ((t,), "i32")],
+                outputs=[((t, LM_CFG.vocab), "f32")],
+                meta={**meta_base, "kind": f"lm_fwd_{mode}", "seq": t,
+                      **({"tau": LM_CFG.sparge.tau, "theta": LM_CFG.sparge.theta,
+                          "bq": LM_CFG.sparge.bq, "bk": LM_CFG.sparge.bk}
+                         if mode == "sparge" else {})},
+            )
+
+    def train_fn(fp, m, v, step, tokens):
+        return M.lm_train_step(LM_CFG, fp, m, v, step, tokens)
+
+    ex.export(
+        f"lm_train_step_{TRAIN_B}x{TRAIN_T}",
+        train_fn,
+        [_spec((pcount,)), _spec((pcount,)), _spec((pcount,)), _spec(()),
+         _spec((TRAIN_B, TRAIN_T), jnp.int32)],
+        inputs=[((pcount,), "f32")] * 3 + [((), "f32"), ((TRAIN_B, TRAIN_T), "i32")],
+        outputs=[((pcount,), "f32")] * 3 + [((), "f32"), ((), "f32")],
+        meta={**meta_base, "kind": "lm_train_step", "batch": TRAIN_B, "seq": TRAIN_T},
+    )
+
+
+def export_dit(ex: Exporter):
+    spec = M.dit_param_spec(DIT_CFG)
+    pcount = M.param_count(spec)
+    params0 = M.init_params(spec, seed=1)
+    trace_io.save(os.path.join(ex.out_dir, "dit_init.spg"), [params0])
+
+    for mode in ("dense", "sparge"):
+        fn = functools.partial(
+            lambda fp, x, t, mode: (M.dit_forward(DIT_CFG, fp, x, t, mode=mode),),
+            mode=mode,
+        )
+        ex.export(
+            f"dit_fwd_{mode}_{DIT_N}",
+            fn,
+            [_spec((pcount,)), _spec((DIT_N, DIT_CFG.d_in)), _spec(())],
+            inputs=[((pcount,), "f32"), ((DIT_N, DIT_CFG.d_in), "f32"), ((), "f32")],
+            outputs=[((DIT_N, DIT_CFG.d_in), "f32")],
+            meta={"kind": f"dit_fwd_{mode}", "seq": DIT_N, "d_in": DIT_CFG.d_in,
+                  "params": pcount},
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: attn,lm,dit")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else {"attn", "lm", "dit"}
+
+    ex = Exporter(args.out_dir)
+    if "attn" in only:
+        print("== attention artifacts ==")
+        export_attention(ex)
+    if "lm" in only:
+        print("== LM artifacts ==")
+        export_lm(ex)
+    if "dit" in only:
+        print("== DiT artifacts ==")
+        export_dit(ex)
+    ex.finish()
+
+
+if __name__ == "__main__":
+    main()

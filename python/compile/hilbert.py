@@ -1,0 +1,63 @@
+"""Hilbert-curve token permutation (paper Sec. 3.7) — Python port of
+rust/src/sparge/hilbert.rs (Skilling transform + index sort). A golden-file
+test (test_hilbert.py vs `sparge analyze --hilbert-golden`) keeps the two
+implementations bit-identical."""
+
+import numpy as np
+
+
+def hilbert_index(point, bits):
+    """Hilbert index of a 3-D point with `bits` bits per axis (Skilling's
+    AxestoTranspose + bit interleave). point: (3,) ints."""
+    x = list(int(v) for v in point)
+    n = 3
+    m = 1 << (bits - 1)
+
+    q = m
+    while q > 1:
+        p = q - 1
+        for i in range(n):
+            if x[i] & q:
+                x[0] ^= p
+            else:
+                t = (x[0] ^ x[i]) & p
+                x[0] ^= t
+                x[i] ^= t
+        q >>= 1
+    for i in range(1, n):
+        x[i] ^= x[i - 1]
+    t = 0
+    q = m
+    while q > 1:
+        if x[n - 1] & q:
+            t ^= q - 1
+        q >>= 1
+    for i in range(n):
+        x[i] ^= t
+
+    out = 0
+    for b in range(bits - 1, -1, -1):
+        for i in range(n):
+            out = (out << 1) | ((x[i] >> b) & 1)
+    return out
+
+
+def hilbert_order(t, h, w):
+    """Token order for a T*H*W grid: order[pos] = row-major linear index of
+    the token at flattened position pos (matches Rust `token_order` for
+    Permutation::HilbertCurve)."""
+    maxdim = max(t, h, w, 1)
+    bits = max((maxdim - 1).bit_length(), 1)
+    cells = []
+    for tt in range(t):
+        for hh in range(h):
+            for ww in range(w):
+                cells.append((hilbert_index((tt, hh, ww), bits), (tt * h + hh) * w + ww))
+    cells.sort()
+    return np.array([lin for _, lin in cells], dtype=np.int64)
+
+
+def invert_order(order):
+    inv = np.empty_like(order)
+    inv[order] = np.arange(len(order))
+    return inv

@@ -1,0 +1,95 @@
+"""Stage-1 sparse mask prediction in jnp (paper Sec. 3.2-3.3, Alg. 1
+lines 4-6). Semantics match the Rust implementation exactly (including the
+inclusive TopCdf crossing element — see rust/src/sparge/predict.rs).
+
+Shapes here require N % bq == 0 and N % bk == 0 (the AOT path pads inputs
+to block multiples before calling in).
+"""
+
+import jax.numpy as jnp
+
+
+def compress_blocks(x, block_rows):
+    """Mean-token compression: (N, d) -> (N/block_rows, d)."""
+    n, d = x.shape
+    assert n % block_rows == 0, f"N={n} not a multiple of {block_rows}"
+    return x.reshape(n // block_rows, block_rows, d).mean(axis=1)
+
+
+def cos_sim_blocks(x, block_rows):
+    """Per-block mean cosine self-similarity: CosSim(X) = mean(XX^T/|max|).
+
+    Rows are L2-normalized first (matching the Rust engine), so Gram
+    entries are true cosines; the |max| normalization then guards
+    degenerate blocks. Returns (N/block_rows,).
+    """
+    n, d = x.shape
+    nb = n // block_rows
+    xb = x.reshape(nb, block_rows, d)
+    norms = jnp.linalg.norm(xb, axis=-1, keepdims=True)
+    xn = jnp.where(norms > 0, xb / jnp.maximum(norms, 1e-30), 0.0)
+    gram = jnp.einsum("bid,bjd->bij", xn, xn)
+    mean = gram.mean(axis=(1, 2))
+    maxabs = jnp.max(jnp.abs(gram), axis=(1, 2))
+    return jnp.where(maxabs > 0, mean / jnp.maximum(maxabs, 1e-30), 1.0)
+
+
+def top_cdf(p_hat, tau):
+    """Row-wise TopCdf: minimal descending prefix whose mass *reaches*
+    tau * row-sum, crossing element included (the prose semantics; the
+    paper's `cusum <= tau*sum` pseudocode drops the crossing element —
+    see the Rust kernel for the full rationale). Returns bool (Tm, Tn).
+
+    Implemented as sort → cumsum → per-row threshold → `p >= threshold`
+    (one sort instead of argsort + inverse-argsort scatter: the xla 0.5.1
+    CPU backend the Rust runtime binds compiles the scatter form ~10x
+    slower). Equivalent to the prefix form except for exact value ties,
+    which have measure zero for real attention scores."""
+    sorted_p = -jnp.sort(-p_hat, axis=-1)  # descending
+    cum = jnp.cumsum(sorted_p, axis=-1)
+    budget = tau * jnp.sum(p_hat, axis=-1, keepdims=True)
+    # keep ranks up to and including the first position where cum >= budget
+    reached_before = jnp.concatenate(
+        [jnp.zeros_like(cum[:, :1], dtype=bool), cum[:, :-1] >= budget], axis=-1
+    )
+    keep_sorted = jnp.logical_not(reached_before)
+    count = jnp.sum(keep_sorted, axis=-1, keepdims=True)  # >= 1
+    threshold = jnp.take_along_axis(sorted_p, count - 1, axis=-1)
+    return p_hat >= threshold
+
+
+def predict_mask(q, k, bq, bk, tau, theta, *, causal=False, scale=None):
+    """Full stage-1 prediction. Returns (mask bool (Tm,Tn), sim_q, sim_k,
+    p_hat)."""
+    n, d = q.shape
+    m = k.shape[0]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qt = compress_blocks(q, bq)
+    kt = compress_blocks(k, bk)
+    sim_q = cos_sim_blocks(q, bq)
+    sim_k = cos_sim_blocks(k, bk)
+    tm, tn = qt.shape[0], kt.shape[0]
+
+    s_hat = (qt @ kt.T) * scale
+    s_hat = jnp.where((sim_k < theta)[None, :], -jnp.inf, s_hat)
+    if causal:
+        # block (i,j) outside the causal domain when j*bk > (i+1)*bq - 1
+        qi_last = (jnp.arange(tm) + 1) * bq - 1
+        kj_first = jnp.arange(tn) * bk
+        domain = kj_first[None, :] <= qi_last[:, None]
+        s_hat = jnp.where(domain, s_hat, -jnp.inf)
+
+    mx = jnp.max(s_hat, axis=-1, keepdims=True)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    p = jnp.where(jnp.isfinite(s_hat), jnp.exp(s_hat - mx), 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p_hat = jnp.where(denom > 0, p / jnp.maximum(denom, 1e-30), 0.0)
+
+    mask = top_cdf(p_hat, tau)
+    # fix blocks are never skipped (Eq. 5)
+    mask = jnp.where((sim_q < theta)[:, None], True, mask)
+    mask = jnp.where((sim_k < theta)[None, :], True, mask)
+    if causal:
+        mask = jnp.logical_and(mask, domain)
+    return mask, sim_q, sim_k, p_hat

@@ -1,0 +1,55 @@
+"""SageAttention-style per-block INT8 quantization in jnp (paper Sec. 3.5,
+Alg. 1 lines 3 & 12). Semantics mirror rust/src/tensor/quant.rs: symmetric
+int8 with per-block scale delta = absmax/127, K smoothed by its global
+per-channel mean before quantization (softmax-invariant shift)."""
+
+import jax.numpy as jnp
+
+
+def quantize_blockwise(x, block_rows):
+    """Quantize (N, d) into int8 blocks of `block_rows` rows.
+
+    Returns (q_int8 (N, d), scales (N/block_rows,)).
+    """
+    n, d = x.shape
+    assert n % block_rows == 0
+    nb = n // block_rows
+    xb = x.reshape(nb, block_rows, d)
+    absmax = jnp.max(jnp.abs(xb), axis=(1, 2))
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0 / 127.0)
+    q = jnp.clip(jnp.round(xb / scale[:, None, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(n, d), scale
+
+
+def dequantize_blockwise(q, scale, block_rows):
+    """Inverse of quantize_blockwise (for tests)."""
+    n, d = q.shape
+    nb = n // block_rows
+    return (q.reshape(nb, block_rows, d).astype(jnp.float32) * scale[:, None, None]).reshape(n, d)
+
+
+def smooth_k(k):
+    """Subtract K's per-channel mean (over tokens). Returns (k_smoothed,
+    mean). Row softmax is invariant to the induced per-row score shift."""
+    mean = k.mean(axis=0)
+    return k - mean[None, :], mean
+
+
+def qk_scores_quantized(q, k, bq, bk, *, scale=None):
+    """Dequantized QK^T computed through the int8 path:
+    S = (Qq @ Kq^T) * dQ_i * dK_j * scale, with K smoothing.
+
+    The int8 matmul accumulates in int32 (exact), so the only error vs f32
+    is the quantization rounding — matching the Rust engine bit-for-bit in
+    structure if not in float rounding."""
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    ks, _ = smooth_k(k)
+    qq, dq = quantize_blockwise(q, bq)
+    kq, dk = quantize_blockwise(ks, bk)
+    acc = jnp.matmul(qq.astype(jnp.int32), kq.astype(jnp.int32).T)
+    n, m = q.shape[0], k.shape[0]
+    row_scale = jnp.repeat(dq, bq)[:n]
+    col_scale = jnp.repeat(dk, bk)[:m]
+    return acc.astype(jnp.float32) * row_scale[:, None] * col_scale[None, :] * scale

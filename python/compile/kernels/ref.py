@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the SpargeAttn kernels.
+
+Every Pallas kernel and every exported HLO module is validated against
+these reference implementations (pytest + hypothesis sweeps in
+``python/tests/``); the Rust engine checks against the same semantics
+through golden trace files.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_dense(q, k, v, *, causal=False, scale=None):
+    """Full-matrix attention: O = softmax(QK^T*scale [+ causal]) V.
+
+    q, k, v: (N, d) single-head arrays (f32).
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    s = (q @ k.T) * scale
+    if causal:
+        n, m = s.shape
+        mask = jnp.tril(jnp.ones((n, m), dtype=bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v
+
+
+def attention_block_masked(q, k, v, block_mask, bq, bk, *, causal=False, scale=None):
+    """Attention with a *block* mask: score entries whose (i//bq, j//bk)
+    block is masked out are set to -inf before softmax.
+
+    Numerically identical to skipping those block matmuls in the sparse
+    kernel — this is the oracle for the "skipping == masking" invariant.
+    Rows that lose every block produce zeros (matching the kernel).
+    """
+    d = q.shape[-1]
+    n, m = q.shape[0], k.shape[0]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    s = (q @ k.T) * scale
+    elem_mask = jnp.repeat(jnp.repeat(block_mask.astype(bool), bq, axis=0), bk, axis=1)[:n, :m]
+    if causal:
+        elem_mask = jnp.logical_and(elem_mask, jnp.tril(jnp.ones((n, m), dtype=bool)))
+    s = jnp.where(elem_mask, s, -jnp.inf)
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)  # all-masked rows
+    p = jnp.where(jnp.isfinite(s), jnp.exp(s - mx), 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(denom > 0, p / jnp.maximum(denom, 1e-30), 0.0)
+    return p @ v
+
+
+def rel_l1(candidate, reference):
+    """The paper's accuracy metric (Sec. 3.6): sum|O-O'| / sum|O|."""
+    num = jnp.sum(jnp.abs(candidate - reference))
+    den = jnp.sum(jnp.abs(reference))
+    return num / den

@@ -1,0 +1,147 @@
+"""L1: the SpargeAttn sparse FlashAttention kernel in Pallas (Alg. 1).
+
+The kernel runs one query tile per grid step and streams key/value blocks
+through an online-softmax loop, consuming the stage-1 block mask M_g
+(skip whole blocks) and applying the stage-2 lambda filter (skip the PV
+product per row group when max(m_local - m_new) < lambda).
+
+interpret=True is mandatory on this substrate: CPU PJRT cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel to plain HLO so
+the exported artifact runs on the Rust runtime. Real block skipping (and
+therefore wall-clock speedup) lives in the Rust engine; this kernel's
+masked-update semantics are numerically identical to skipping (the
+"skipping == masking" invariant, tested both here and in Rust).
+
+TPU adaptation notes (DESIGN.md Hardware-Adaptation): the (bq, d) query
+tile + (bk, d) streamed K/V blocks are the VMEM working set; the paper's
+c_w CUDA warps become c_w row groups of the query tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import predict as predict_mod
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, bq, bk, cw, n_kblocks, scale, lam, causal):
+    i = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32)  # (bq, d)
+    d = q.shape[-1]
+    mask_row = mask_ref[...].reshape(-1)  # (n_kblocks,)
+
+    m0 = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, d), dtype=jnp.float32)
+
+    rows_per_group = bq // cw
+    group_id = jax.lax.broadcasted_iota(jnp.int32, (bq,), 0) // rows_per_group
+
+    def body(j, carry):
+        m_prev, l_prev, acc_prev = carry
+        kj = pl.load(k_ref, (pl.dslice(j * bk, bk), slice(None))).astype(jnp.float32)
+        vj = pl.load(v_ref, (pl.dslice(j * bk, bk), slice(None))).astype(jnp.float32)
+        s = (q @ kj.T) * scale  # (bq, bk)
+        if causal:
+            qi = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kjg = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kjg <= qi, s, NEG_INF)
+
+        m_local = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_local)
+        rescale = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        # entries at NEG_INF must contribute exactly zero
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        l_new = l_prev * rescale + jnp.sum(p, axis=-1)
+
+        # stage-2 lambda filter: per row group, skip PV when
+        # max(m_local - m_new) < lambda  (Alg. 1 line 15)
+        diff = m_local - m_new
+        group_worst = jax.ops.segment_max(diff, group_id, num_segments=cw)
+        skip_pv = (group_worst < lam)[group_id]  # (bq,)
+
+        pv = p @ vj
+        pv = jnp.where(skip_pv[:, None], 0.0, pv)
+        acc_new = acc_prev * rescale[:, None] + pv
+
+        # stage-1 block mask: masked blocks contribute nothing at all
+        on = mask_row[j] != 0
+        m_out = jnp.where(on, m_new, m_prev)
+        l_out = jnp.where(on, l_new, l_prev)
+        acc_out = jnp.where(on, acc_new, acc_prev)
+        return m_out, l_out, acc_out
+
+    m, l, acc = jax.lax.fori_loop(0, n_kblocks, body, (m0, l0, acc0))
+    safe_l = jnp.where(l > 0, l, 1.0)
+    out = jnp.where((l > 0)[:, None], acc / safe_l[:, None], 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def sparge_attention_pallas(q, k, v, mask, *, bq=64, bk=64, cw=4, lam=None,
+                            causal=False, scale=None, interpret=True):
+    """Sparse flash attention over one head.
+
+    q: (N, d); k, v: (M, d); mask: (N//bq, M//bk) int32/bool (M_g).
+    lam: stage-2 threshold (negative float) or None to disable.
+    """
+    n, d = q.shape
+    m = k.shape[0]
+    assert n % bq == 0 and m % bk == 0, "pad inputs to block multiples"
+    assert bq % cw == 0, "bq must divide into cw row groups"
+    if scale is None:
+        scale = float(1.0 / (d ** 0.5))
+    n_qblocks = n // bq
+    n_kblocks = m // bk
+    lam_val = float(lam) if lam is not None else -1e30
+
+    kernel = functools.partial(
+        _kernel, bq=bq, bk=bk, cw=cw, n_kblocks=n_kblocks,
+        scale=scale, lam=lam_val, causal=causal,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n_qblocks,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),        # Q tile
+            pl.BlockSpec((m, d), lambda i: (0, 0)),          # full K
+            pl.BlockSpec((m, d), lambda i: (0, 0)),          # full V
+            pl.BlockSpec((1, n_kblocks), lambda i: (i, 0)),  # mask row
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v, mask.astype(jnp.int32))
+
+
+def sparge_attention(q, k, v, *, tau, theta, lam=None, bq=64, bk=64, cw=4,
+                     causal=False, scale=None, interpret=True):
+    """End-to-end SpargeAttn: stage-1 prediction (jnp) + the Pallas sparse
+    kernel. Returns (out, mask)."""
+    mask, _, _, _ = predict_mod.predict_mask(
+        q, k, bq, bk, tau, theta, causal=causal, scale=scale
+    )
+    out = sparge_attention_pallas(
+        q, k, v, mask, bq=bq, bk=bk, cw=cw, lam=lam,
+        causal=causal, scale=scale, interpret=interpret,
+    )
+    return out, mask
+
+
+def sparge_attention_simulated(q, k, v, *, tau, theta, bq=64, bk=64,
+                               causal=False, scale=None):
+    """Pure-jnp simulated sparge (prediction + block-masked dense attention,
+    no Pallas). Used inside the L2 model artifacts where a lean HLO module
+    matters more than exercising the kernel; numerics match the kernel with
+    lam=None by the skipping==masking invariant."""
+    from . import ref
+
+    mask, _, _, _ = predict_mod.predict_mask(
+        q, k, bq, bk, tau, theta, causal=causal, scale=scale
+    )
+    out = ref.attention_block_masked(q, k, v, mask, bq, bk, causal=causal, scale=scale)
+    return out, mask

@@ -1,0 +1,253 @@
+"""L2: JAX models whose attention dispatches to the SpargeAttn kernels.
+
+Two model families, both defined over a single flat f32 parameter vector
+(so the Rust runtime feeds/receives a handful of opaque buffers instead of
+dozens of named arrays):
+
+- ``TextLM``: byte-level causal transformer (the Llama3.1 proxy of
+  DESIGN.md Sec. 3) with sinusoidal positions, trained from scratch through
+  the exported ``lm_train_step`` HLO by the Rust e2e driver.
+- ``DiT``: bidirectional diffusion-transformer proxy over latent token
+  grids (the CogvideoX / Mochi / Flux proxy), used by the video/image
+  benches and the denoise-loop example.
+
+Attention mode is a build-time switch: ``dense`` (exact) or ``sparge``
+(stage-1 prediction + block-masked attention — numerically identical to
+the skipping kernel; see kernels/sparge.py for why the lean simulated form
+is used inside model artifacts).
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref as kref
+from .kernels import sparge as ksparge
+
+
+# ----------------------------------------------------------------------
+# configuration
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SpargeCfg:
+    tau: float = 0.95
+    theta: float = 0.4
+    bq: int = 32
+    bk: int = 32
+
+
+@dataclass(frozen=True)
+class LmCfg:
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    sparge: SpargeCfg = field(default_factory=SpargeCfg)
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class DitCfg:
+    d_in: int = 16
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    sparge: SpargeCfg = field(default_factory=lambda: SpargeCfg(tau=0.9, theta=0.35))
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+# ----------------------------------------------------------------------
+# flat parameter packing
+# ----------------------------------------------------------------------
+
+def _block_spec(prefix, d_model, d_ff):
+    return [
+        (prefix + "ln1_g", (d_model,)),
+        (prefix + "ln1_b", (d_model,)),
+        (prefix + "wq", (d_model, d_model)),
+        (prefix + "wk", (d_model, d_model)),
+        (prefix + "wv", (d_model, d_model)),
+        (prefix + "wo", (d_model, d_model)),
+        (prefix + "ln2_g", (d_model,)),
+        (prefix + "ln2_b", (d_model,)),
+        (prefix + "w1", (d_model, d_ff)),
+        (prefix + "b1", (d_ff,)),
+        (prefix + "w2", (d_ff, d_model)),
+        (prefix + "b2", (d_model,)),
+    ]
+
+
+def lm_param_spec(cfg: LmCfg):
+    """Ordered (name, shape) list defining the flat layout."""
+    spec = [("tok_emb", (cfg.vocab, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        spec += _block_spec(f"layer{i}.", cfg.d_model, cfg.d_ff)
+    spec += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,)), ("head", (cfg.d_model, cfg.vocab))]
+    return spec
+
+
+def dit_param_spec(cfg: DitCfg):
+    spec = [("proj_in", (cfg.d_in, cfg.d_model)), ("t_emb", (cfg.d_model,))]
+    for i in range(cfg.n_layers):
+        spec += _block_spec(f"layer{i}.", cfg.d_model, cfg.d_ff)
+    spec += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,)), ("proj_out", (cfg.d_model, cfg.d_in))]
+    return spec
+
+
+def param_count(spec):
+    return sum(int(np.prod(shape)) for _, shape in spec)
+
+
+def unflatten(flat, spec):
+    """Slice the flat vector into named arrays (static offsets — lowers to
+    plain slices in HLO)."""
+    out = {}
+    off = 0
+    for name, shape in spec:
+        size = int(np.prod(shape))
+        out[name] = flat[off:off + size].reshape(shape)
+        off += size
+    return out
+
+
+def init_params(spec, seed=0, scale=0.02):
+    """Gaussian init, ones/zeros for norms & biases. Returns np.float32."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in spec:
+        base = name.split(".")[-1]
+        if base.endswith("_g"):
+            arr = np.ones(shape, np.float32)
+        elif base.endswith("_b") or base in ("b1", "b2"):
+            arr = np.zeros(shape, np.float32)
+        else:
+            arr = rng.standard_normal(shape).astype(np.float32) * scale
+        chunks.append(arr.ravel())
+    return np.concatenate(chunks)
+
+
+# ----------------------------------------------------------------------
+# building blocks
+# ----------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def sinusoidal_positions(t, d):
+    pos = jnp.arange(t)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    angles = pos / jnp.power(10000.0, 2.0 * i / d)
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+def _head_attention(q, k, v, *, causal, mode, sp: SpargeCfg):
+    """Single-head dispatch: exact dense or simulated sparge."""
+    if mode == "dense":
+        return kref.attention_dense(q, k, v, causal=causal)
+    out, _ = ksparge.sparge_attention_simulated(
+        q, k, v, tau=sp.tau, theta=sp.theta, bq=sp.bq, bk=sp.bk, causal=causal
+    )
+    return out
+
+
+def multi_head_attention(x, wq, wk, wv, wo, n_heads, *, causal, mode, sp):
+    t, dm = x.shape
+    dh = dm // n_heads
+    q = (x @ wq).reshape(t, n_heads, dh).transpose(1, 0, 2)
+    k = (x @ wk).reshape(t, n_heads, dh).transpose(1, 0, 2)
+    v = (x @ wv).reshape(t, n_heads, dh).transpose(1, 0, 2)
+    # vmap over heads (not a Python loop): one sort/predict instance per
+    # layer in the lowered HLO instead of n_heads — the old xla_extension
+    # the Rust runtime binds compiles repeated sort instances superlinearly.
+    heads = jax.vmap(
+        lambda qh, kh, vh: _head_attention(qh, kh, vh, causal=causal, mode=mode, sp=sp)
+    )(q, k, v)
+    concat = heads.transpose(1, 0, 2).reshape(t, dm)
+    return concat @ wo
+
+
+def _block(x, p, prefix, n_heads, *, causal, mode, sp):
+    h = layer_norm(x, p[prefix + "ln1_g"], p[prefix + "ln1_b"])
+    x = x + multi_head_attention(
+        h, p[prefix + "wq"], p[prefix + "wk"], p[prefix + "wv"], p[prefix + "wo"],
+        n_heads, causal=causal, mode=mode, sp=sp,
+    )
+    h = layer_norm(x, p[prefix + "ln2_g"], p[prefix + "ln2_b"])
+    h = jax.nn.gelu(h @ p[prefix + "w1"] + p[prefix + "b1"])
+    return x + h @ p[prefix + "w2"] + p[prefix + "b2"]
+
+
+# ----------------------------------------------------------------------
+# TextLM
+# ----------------------------------------------------------------------
+
+def lm_forward(cfg: LmCfg, flat_params, tokens, *, mode="dense"):
+    """tokens: (T,) int32 -> logits (T, vocab)."""
+    p = unflatten(flat_params, lm_param_spec(cfg))
+    x = p["tok_emb"][tokens] + sinusoidal_positions(tokens.shape[0], cfg.d_model)
+    for i in range(cfg.n_layers):
+        x = _block(x, p, f"layer{i}.", cfg.n_heads, causal=True, mode=mode, sp=cfg.sparge)
+    x = layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["head"]
+
+
+def lm_loss(cfg: LmCfg, flat_params, tokens, *, mode="dense"):
+    """Next-byte cross-entropy over a (T,) sequence."""
+    logits = lm_forward(cfg, flat_params, tokens, mode=mode)
+    logp = jax.nn.log_softmax(logits[:-1], axis=-1)
+    tgt = tokens[1:]
+    nll = -jnp.take_along_axis(logp, tgt[:, None], axis=-1).mean()
+    return nll
+
+
+def lm_batch_loss(cfg: LmCfg, flat_params, tokens, *, mode="dense"):
+    """tokens: (B, T) int32 -> scalar mean loss."""
+    return jax.vmap(lambda t: lm_loss(cfg, flat_params, t, mode=mode))(tokens).mean()
+
+
+def lm_train_step(cfg: LmCfg, flat_params, m, v, step, tokens,
+                  lr=3e-3, beta1=0.9, beta2=0.99, eps=1e-8):
+    """One Adam step on the batch loss. All state is flat f32 vectors.
+
+    Returns (params', m', v', step', loss)."""
+    loss, grads = jax.value_and_grad(
+        lambda fp: lm_batch_loss(cfg, fp, tokens, mode="dense")
+    )(flat_params)
+    step = step + 1.0
+    m = beta1 * m + (1 - beta1) * grads
+    v = beta2 * v + (1 - beta2) * grads * grads
+    mhat = m / (1 - beta1 ** step)
+    vhat = v / (1 - beta2 ** step)
+    new_params = flat_params - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_params, m, v, step, loss
+
+
+# ----------------------------------------------------------------------
+# DiT proxy
+# ----------------------------------------------------------------------
+
+def dit_forward(cfg: DitCfg, flat_params, latents, t_scalar, *, mode="dense"):
+    """latents: (N, d_in) tokens; t_scalar: () diffusion timestep in [0,1].
+    Returns the predicted denoising direction, (N, d_in)."""
+    p = unflatten(flat_params, dit_param_spec(cfg))
+    x = latents @ p["proj_in"]
+    x = x + jnp.sin(t_scalar * 100.0) * p["t_emb"][None, :]
+    x = x + sinusoidal_positions(latents.shape[0], cfg.d_model)
+    for i in range(cfg.n_layers):
+        x = _block(x, p, f"layer{i}.", cfg.n_heads, causal=False, mode=mode, sp=cfg.sparge)
+    x = layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["proj_out"]

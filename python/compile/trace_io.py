@@ -1,0 +1,42 @@
+"""Writer/reader for the binary tensor-trace format shared with the Rust
+runtime (rust/src/workloads/trace.rs). Little-endian, versioned:
+
+    magic u32 = 0x53504721 ("SPG!"), version u32 = 1, ntensor u32,
+    then per tensor: ndim u32, dims u32*ndim, f32 data row-major.
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = 0x53504721
+VERSION = 1
+
+
+def save(path, tensors):
+    """tensors: iterable of float32-convertible numpy arrays."""
+    with open(path, "wb") as f:
+        tensors = list(tensors)
+        f.write(struct.pack("<III", MAGIC, VERSION, len(tensors)))
+        for t in tensors:
+            a = np.ascontiguousarray(np.asarray(t), dtype=np.float32)
+            f.write(struct.pack("<I", a.ndim))
+            f.write(struct.pack(f"<{a.ndim}I", *a.shape))
+            f.write(a.tobytes())
+
+
+def load(path):
+    with open(path, "rb") as f:
+        magic, version, count = struct.unpack("<III", f.read(12))
+        if magic != MAGIC:
+            raise ValueError(f"bad magic {magic:#x}")
+        if version != VERSION:
+            raise ValueError(f"unsupported version {version}")
+        out = []
+        for _ in range(count):
+            (ndim,) = struct.unpack("<I", f.read(4))
+            shape = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            total = int(np.prod(shape)) if ndim else 1
+            data = np.frombuffer(f.read(4 * total), dtype="<f4").reshape(shape)
+            out.append(data.copy())
+        return out

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# make `compile` importable when pytest runs from python/ or repo root
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+settings.register_profile("sparge", max_examples=20, deadline=None)
+settings.load_profile("sparge")

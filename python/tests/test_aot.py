@@ -1,0 +1,50 @@
+"""AOT export path: HLO text artifacts parse and the manifest is complete."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile import model as M
+
+
+def test_to_hlo_text_contains_module():
+    lowered = jax.jit(lambda x: (x * 2,)).lower(jax.ShapeDtypeStruct((2, 2), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[2,2]" in text
+
+
+def test_export_small_artifact(tmp_path):
+    ex = aot.Exporter(str(tmp_path))
+    ex.export(
+        "toy",
+        lambda x: (x + 1.0,),
+        [jax.ShapeDtypeStruct((4,), jnp.float32)],
+        inputs=[((4,), "f32")],
+        outputs=[((4,), "f32")],
+        meta={"kind": "toy"},
+    )
+    ex.finish()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    art = manifest["artifacts"]["toy"]
+    assert art["path"] == "toy.hlo.txt"
+    assert art["inputs"][0]["shape"] == [4]
+    text = (tmp_path / "toy.hlo.txt").read_text()
+    assert "HloModule" in text
+
+
+def test_lm_fwd_lowering_has_expected_signature(tmp_path):
+    """The exported LM forward takes (params, tokens) and yields logits."""
+    cfg = M.LmCfg(n_layers=1, d_model=32, d_ff=64, n_heads=2)
+    spec = M.lm_param_spec(cfg)
+    pcount = M.param_count(spec)
+    lowered = jax.jit(lambda fp, t: (M.lm_forward(cfg, fp, t),)).lower(
+        jax.ShapeDtypeStruct((pcount,), jnp.float32),
+        jax.ShapeDtypeStruct((32,), jnp.int32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert f"f32[{pcount}]" in text
+    assert "s32[32]" in text
+    assert "f32[32,256]" in text  # logits

@@ -1,0 +1,99 @@
+"""Stage-1 prediction: compression, self-similarity, TopCdf invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import predict
+
+
+def test_compress_means():
+    x = jnp.array([[1., 0.], [3., 0.], [10., 2.], [20., 4.]], jnp.float32)
+    out = np.asarray(predict.compress_blocks(x, 2))
+    np.testing.assert_allclose(out, [[2., 0.], [15., 3.]])
+
+
+def test_cos_sim_identical_rows_is_one():
+    x = jnp.tile(jnp.array([[1., 2., -1.]], jnp.float32), (8, 1))
+    sim = np.asarray(predict.cos_sim_blocks(x, 4))
+    np.testing.assert_allclose(sim, 1.0, atol=1e-5)
+
+
+def test_cos_sim_orthogonal_rows():
+    x = jnp.array([[1., 0.], [0., 1.], [1., 0.], [0., 1.]], jnp.float32)
+    sim = np.asarray(predict.cos_sim_blocks(x, 4))
+    np.testing.assert_allclose(sim, 0.5, atol=1e-5)
+
+
+@given(n=st.integers(1, 30), tau=st.floats(0.01, 0.999), seed=st.integers(0, 10**6))
+def test_top_cdf_coverage_and_minimality(n, tau, seed):
+    rng = np.random.default_rng(seed)
+    p = jnp.array(rng.random((1, n)) + 1e-6, jnp.float32)
+    sel = np.asarray(predict.top_cdf(p, tau))[0]
+    pn = np.asarray(p)[0]
+    picked = pn[sel].sum()
+    total = pn.sum()
+    assert sel.sum() >= 1
+    assert picked >= tau * total - 1e-4          # coverage reached
+    if sel.sum() > 1:                             # minimality
+        assert picked - pn[sel].min() < tau * total + 1e-4
+    # order property: unselected <= selected min
+    if (~sel).any() and sel.any():
+        assert pn[~sel].max() <= pn[sel].min() + 1e-6
+
+
+def test_top_cdf_crossing_element_included():
+    p = jnp.array([[0.50, 0.48, 0.02]], jnp.float32)
+    sel = np.asarray(predict.top_cdf(p, 0.95))[0]
+    assert sel.tolist() == [True, True, False]
+
+
+def test_predict_tau_one_selects_all():
+    rng = np.random.default_rng(0)
+    q = jnp.array(rng.standard_normal((32, 8)), jnp.float32)
+    k = jnp.array(rng.standard_normal((32, 8)), jnp.float32)
+    mask, _, _, _ = predict.predict_mask(q, k, 8, 8, tau=1.0, theta=-1.0)
+    assert bool(np.asarray(mask).all())
+
+
+def test_fix_blocks_force_rows_cols():
+    rng = np.random.default_rng(1)
+    q = jnp.array(rng.standard_normal((16, 4)), jnp.float32)
+    k = np.asarray(rng.standard_normal((16, 4)), dtype=np.float32)
+    # make K block 1 anti-correlated
+    k[4:8] = np.array([[1, 0, 0, 0], [-1, 0, 0, 0], [1, 0, 0, 0], [-1, 0, 0, 0]], np.float32) * 3
+    mask, sim_q, sim_k, _ = predict.predict_mask(q, jnp.array(k), 4, 4, tau=0.1, theta=0.9)
+    mask = np.asarray(mask)
+    sim_k = np.asarray(sim_k)
+    for j in range(4):
+        if sim_k[j] < 0.9:
+            assert mask[:, j].all(), f"fix col {j} not forced"
+
+
+@given(seed=st.integers(0, 10**6), tau=st.floats(0.05, 1.0))
+def test_causal_mask_lower_triangular(seed, tau):
+    rng = np.random.default_rng(seed)
+    n, b = 64, 8
+    q = jnp.array(rng.standard_normal((n, 8)), jnp.float32)
+    k = jnp.array(rng.standard_normal((n, 8)), jnp.float32)
+    mask, _, _, _ = predict.predict_mask(q, k, b, b, tau=tau, theta=0.0, causal=True)
+    mask = np.asarray(mask)
+    for i in range(mask.shape[0]):
+        for j in range(mask.shape[1]):
+            if j > i:
+                assert not mask[i, j]
+    # every row keeps at least one block
+    assert (mask.sum(axis=1) >= 1).all()
+
+
+def test_local_pattern_selects_diagonal():
+    n, d, b = 64, 16, 8
+    q = np.zeros((n, d), np.float32)
+    k = np.zeros((n, d), np.float32)
+    for t in range(n):
+        q[t, (t // b) % d] = 4.0
+        k[t, (t // b) % d] = 4.0
+    mask, _, _, _ = predict.predict_mask(jnp.array(q), jnp.array(k), b, b, tau=0.3, theta=0.0)
+    mask = np.asarray(mask)
+    assert all(mask[i, i] for i in range(mask.shape[0]))
+    assert mask.mean() < 0.5

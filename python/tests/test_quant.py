@@ -1,0 +1,64 @@
+"""SageAttention INT8 quantization semantics (Sec. 3.5)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile.kernels import quant, ref
+
+
+@given(nb=st.integers(1, 4), b=st.sampled_from([8, 16]), d=st.sampled_from([4, 16]),
+       seed=st.integers(0, 10**6))
+def test_roundtrip_error_within_half_step(nb, b, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.standard_normal((nb * b, d)), jnp.float32)
+    q, scale = quant.quantize_blockwise(x, b)
+    back = quant.dequantize_blockwise(q, scale, b)
+    xb = np.asarray(x).reshape(nb, b, d)
+    step = np.abs(xb).max(axis=(1, 2)) / 127.0
+    err = np.abs(np.asarray(back).reshape(nb, b, d) - xb)
+    assert (err <= step[:, None, None] * 0.5 + 1e-6).all()
+
+
+def test_zero_block():
+    q, scale = quant.quantize_blockwise(jnp.zeros((8, 4), jnp.float32), 8)
+    assert np.all(np.asarray(q) == 0)
+
+
+def test_smoothing_removes_common_offset():
+    rng = np.random.default_rng(1)
+    k = jnp.array(rng.standard_normal((32, 8)) + 10.0, jnp.float32)
+    ks, mean = quant.smooth_k(k)
+    assert float(jnp.abs(ks).max()) < float(jnp.abs(k).max()) / 2
+
+
+def test_smoothing_is_softmax_invariant():
+    """softmax(Q (K - mean)^T) == softmax(Q K^T) row-wise."""
+    rng = np.random.default_rng(2)
+    q = jnp.array(rng.standard_normal((16, 8)), jnp.float32)
+    k = jnp.array(rng.standard_normal((24, 8)), jnp.float32)
+    v = jnp.array(rng.standard_normal((24, 8)), jnp.float32)
+    ks, _ = quant.smooth_k(k)
+    np.testing.assert_allclose(
+        np.asarray(ref.attention_dense(q, k, v)),
+        np.asarray(ref.attention_dense(q, ks, v)),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+@given(seed=st.integers(0, 10**6))
+def test_quantized_scores_close(seed):
+    rng = np.random.default_rng(seed)
+    n, d, b = 64, 32, 16
+    q = jnp.array(rng.standard_normal((n, d)), jnp.float32)
+    k = jnp.array(rng.standard_normal((n, d)), jnp.float32)
+    s_q = quant.qk_scores_quantized(q, k, b, b)
+    s_f = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    # softmax-level agreement is what matters: compare attention outputs
+    v = jnp.array(rng.standard_normal((n, d)), jnp.float32)
+    pq = jnp.exp(s_q - s_q.max(-1, keepdims=True))
+    pq = pq / pq.sum(-1, keepdims=True)
+    pf = jnp.exp(s_f - s_f.max(-1, keepdims=True))
+    pf = pf / pf.sum(-1, keepdims=True)
+    err = float(ref.rel_l1(pq @ v, pf @ v))
+    assert err < 0.08, f"attention-output rel_l1 {err}"

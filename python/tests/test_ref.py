@@ -1,0 +1,68 @@
+"""Oracle sanity: the dense reference must satisfy attention identities."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import ref
+
+
+def mk(rng, *shape):
+    return jnp.array(rng.standard_normal(shape), jnp.float32)
+
+
+def test_uniform_scores_average_v():
+    rng = np.random.default_rng(0)
+    n, d = 16, 8
+    q = jnp.zeros((n, d), jnp.float32)
+    k, v = mk(rng, n, d), mk(rng, n, d)
+    out = ref.attention_dense(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.tile(np.asarray(v).mean(0), (n, 1)), atol=1e-5)
+
+
+def test_causal_first_row_is_v0():
+    rng = np.random.default_rng(1)
+    q, k, v = (mk(rng, 8, 4) for _ in range(3))
+    out = ref.attention_dense(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out)[0], np.asarray(v)[0], atol=1e-5)
+
+
+@given(n=st.integers(2, 24), d=st.integers(1, 16), seed=st.integers(0, 10**6))
+def test_convex_combination(n, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k = mk(rng, n, d), mk(rng, n, d)
+    v = jnp.ones((n, d), jnp.float32)
+    out = ref.attention_dense(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-4)
+
+
+def test_block_mask_all_ones_equals_dense():
+    rng = np.random.default_rng(2)
+    n, d, b = 32, 8, 8
+    q, k, v = (mk(rng, n, d) for _ in range(3))
+    mask = jnp.ones((n // b, n // b), bool)
+    np.testing.assert_allclose(
+        np.asarray(ref.attention_block_masked(q, k, v, mask, b, b)),
+        np.asarray(ref.attention_dense(q, k, v)),
+        atol=1e-5,
+    )
+
+
+def test_block_mask_zero_rows_output_zero():
+    rng = np.random.default_rng(3)
+    n, d, b = 16, 4, 8
+    q, k, v = (mk(rng, n, d) for _ in range(3))
+    mask = jnp.zeros((2, 2), bool).at[1, :].set(True)
+    out = np.asarray(ref.attention_block_masked(q, k, v, mask, b, b))
+    assert np.all(out[:8] == 0.0)
+    assert np.any(out[8:] != 0.0)
+
+
+@given(seed=st.integers(0, 10**6))
+def test_rel_l1_properties(seed):
+    rng = np.random.default_rng(seed)
+    a = mk(rng, 4, 4)
+    assert float(ref.rel_l1(a, a)) == pytest.approx(0.0, abs=1e-7)
+    b = a + 0.1
+    assert float(ref.rel_l1(b, a)) > 0.0

@@ -1,0 +1,111 @@
+"""Combined-path integration tests for the L1 kernel: stage-1 mask +
+stage-2 lambda + causality together, and agreement between the predicted
+mask and the realized attention mass."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import predict, ref, sparge
+
+
+def structured_qk(rng, n, d, nb, signal=6.0, noise=0.3):
+    dirs = rng.standard_normal((nb, d)).astype(np.float32)
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    q = np.zeros((n, d), np.float32)
+    k = np.zeros((n, d), np.float32)
+    for t in range(n):
+        g = (t * nb) // n
+        q[t] = dirs[g] * signal + rng.standard_normal(d) * noise
+        k[t] = dirs[g] * signal + rng.standard_normal(d) * noise
+    return jnp.array(q), jnp.array(k)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_causal_sparse_with_lambda_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    n, d, b = 256, 16, 32
+    q, k = structured_qk(rng, n, d, nb=8)
+    v = jnp.array(rng.standard_normal((n, d)), jnp.float32)
+    out, mask = sparge.sparge_attention(
+        q, k, v, tau=0.95, theta=0.3, lam=-8.0, bq=b, bk=b, causal=True
+    )
+    want = ref.attention_dense(q, k, v, causal=True)
+    err = float(ref.rel_l1(out, want))
+    assert err < 0.08, f"causal sparge rel_l1 {err}"
+    # causal mask domain respected
+    m = np.asarray(mask)
+    for i in range(m.shape[0]):
+        for j in range(m.shape[1]):
+            if j > i:
+                assert not m[i, j]
+
+
+def test_mask_covers_the_attention_mass():
+    """The realized dense attention mass inside the predicted mask must be
+    at least ~tau on structured inputs (the prediction-is-accurate claim)."""
+    rng = np.random.default_rng(3)
+    n, d, b = 256, 16, 32
+    q, k = structured_qk(rng, n, d, nb=8)
+    tau = 0.9
+    mask, _, _, _ = predict.predict_mask(q, k, b, b, tau=tau, theta=0.3)
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    elem = jnp.repeat(jnp.repeat(mask, b, axis=0), b, axis=1)
+    covered = float((p * elem).sum() / p.sum())
+    assert covered > tau - 0.07, f"mask covers only {covered:.3f} of mass"
+
+
+def test_quantized_sparge_pipeline():
+    """INT8 scores + stage-1 mask compose: output close to f32 dense."""
+    from compile.kernels import quant
+
+    rng = np.random.default_rng(4)
+    n, d, b = 128, 32, 32
+    q, k = structured_qk(rng, n, d, nb=4)
+    v = jnp.array(rng.standard_normal((n, d)), jnp.float32)
+    mask, _, _, _ = predict.predict_mask(q, k, b, b, tau=0.98, theta=0.2)
+    s_q = quant.qk_scores_quantized(q, k, b, b)
+    elem = jnp.repeat(jnp.repeat(mask, b, axis=0), b, axis=1)
+    s_q = jnp.where(elem, s_q, -jnp.inf)
+    p = jnp.exp(s_q - s_q.max(-1, keepdims=True))
+    p = jnp.where(jnp.isfinite(s_q), p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = p @ v
+    want = ref.attention_dense(q, k, v)
+    err = float(ref.rel_l1(out, want))
+    assert err < 0.08, f"quant+mask rel_l1 {err}"
+
+
+def test_kernel_accepts_rectangular_blocks():
+    rng = np.random.default_rng(5)
+    n, m, d = 128, 192, 16
+    q = jnp.array(rng.standard_normal((n, d)), jnp.float32)
+    k = jnp.array(rng.standard_normal((m, d)), jnp.float32)
+    v = jnp.array(rng.standard_normal((m, d)), jnp.float32)
+    mask = jnp.ones((n // 32, m // 64), jnp.int32)
+    out = sparge.sparge_attention_pallas(q, k, v, mask, bq=32, bk=64, cw=2)
+    want = ref.attention_dense(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_lambda_respects_row_group_granularity():
+    """cw=1 (whole tile is one group) must skip no more than cw=4."""
+    rng = np.random.default_rng(6)
+    n, d, b = 128, 16, 32
+    q = jnp.array(rng.standard_normal((n, d)), jnp.float32)
+    karr = np.asarray(rng.standard_normal((n, d)), np.float32)
+    karr[::32] *= 12.0
+    k = jnp.array(karr)
+    v = jnp.array(rng.standard_normal((n, d)), jnp.float32)
+    mask = jnp.ones((4, 4), jnp.int32)
+    dense = ref.attention_dense(q, k, v)
+    out1 = sparge.sparge_attention_pallas(q, k, v, mask, bq=b, bk=b, cw=1, lam=-6.0)
+    out4 = sparge.sparge_attention_pallas(q, k, v, mask, bq=b, bk=b, cw=4, lam=-6.0)
+    err1 = float(ref.rel_l1(out1, dense))
+    err4 = float(ref.rel_l1(out4, dense))
+    # coarser groups are *more* conservative (a single active row vetoes
+    # the whole group), so cw=1 error <= cw=4 error + slack
+    assert err1 <= err4 + 0.02, f"cw=1 err {err1} vs cw=4 err {err4}"

@@ -1,0 +1,43 @@
+"""Trace interchange format: roundtrip + byte-level golden (the format the
+Rust side reads/writes — rust/src/workloads/trace.rs)."""
+
+import struct
+
+import numpy as np
+
+from compile import trace_io
+
+
+def test_roundtrip(tmp_path):
+    p = tmp_path / "t.spg"
+    a = np.arange(12, dtype=np.float32).reshape(3, 4)
+    b = np.float32([[1.5]])
+    trace_io.save(p, [a, b])
+    back = trace_io.load(p)
+    assert len(back) == 2
+    np.testing.assert_array_equal(back[0], a)
+    np.testing.assert_array_equal(back[1], b)
+
+
+def test_header_bytes(tmp_path):
+    p = tmp_path / "h.spg"
+    trace_io.save(p, [np.zeros((2,), np.float32)])
+    raw = p.read_bytes()
+    magic, version, count = struct.unpack("<III", raw[:12])
+    assert magic == 0x53504721
+    assert version == 1
+    assert count == 1
+    (ndim,) = struct.unpack("<I", raw[12:16])
+    assert ndim == 1
+    (dim0,) = struct.unpack("<I", raw[16:20])
+    assert dim0 == 2
+
+
+def test_rejects_bad_magic(tmp_path):
+    p = tmp_path / "bad.spg"
+    p.write_bytes(b"NOPE" + b"\x00" * 8)
+    try:
+        trace_io.load(p)
+        assert False, "should raise"
+    except ValueError:
+        pass

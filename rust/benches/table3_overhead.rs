@@ -1,0 +1,55 @@
+//! Table 3 reproduction: overhead of sparse block prediction vs full
+//! attention latency across sequence lengths.
+//!
+//! Expected shape: overhead falls from a few percent at 8K to well under
+//! 1% at 64K+ (prediction is O(N²·d/(bq·bk)) vs attention's O(N²·d)).
+//!
+//! Run: `cargo bench --bench table3_overhead`
+//! (8K–32K by default; SPARGE_BENCH_FULL=1 adds 64K and 128K — dense
+//! attention at 128K takes minutes per repetition on CPU.)
+
+use sparge::attention::flash::attention_flash;
+use sparge::attention::types::AttnConfig;
+use sparge::experiments::{bench_reps, full_scale};
+use sparge::sparge::predict::{predict, PredictParams};
+use sparge::util::rng::Pcg;
+use sparge::util::table::{fnum, Table};
+use sparge::util::timer::time_once;
+use sparge::workloads::{synthetic, SyntheticSpec};
+
+fn main() {
+    let mut lens = vec![8_192usize, 16_384, 32_768];
+    if full_scale() {
+        lens.push(65_536);
+        lens.push(131_072);
+    }
+    let reps = bench_reps();
+    println!("Table 3 — prediction overhead vs full attention (reps {reps})\n");
+
+    let cfg = AttnConfig { bq: 128, bk: 64, causal: false, scale: None, cw: 4 };
+    let params = PredictParams { tau: 0.95, theta: 0.4 };
+    let mut table = Table::new(
+        "overhead of sparse block prediction (paper Table 3 shape)",
+        &["Sequence Len", "Prediction (ms)", "Full Attention (ms)", "Overhead"],
+    );
+    for &n in &lens {
+        let mut rng = Pcg::seeded(303);
+        let s = synthetic::generate(&SyntheticSpec::lm_like(n, 64), &mut rng);
+        let mut t_pred = f64::INFINITY;
+        let mut t_attn = f64::INFINITY;
+        for _ in 0..reps {
+            let (_, tp) = time_once(|| predict(&s.q, &s.k, &cfg, &params));
+            t_pred = t_pred.min(tp);
+            let (_, ta) = time_once(|| attention_flash(&s.q, &s.k, &s.v, &cfg));
+            t_attn = t_attn.min(ta);
+        }
+        table.row(&[
+            format!("{}k", n / 1024),
+            fnum(t_pred * 1e3, 3),
+            fnum(t_attn * 1e3, 2),
+            format!("{:.3}%", 100.0 * t_pred / t_attn),
+        ]);
+    }
+    table.print();
+    println!("\npaper: 3.78% @8k, 1.82% @16k, 0.91% @32k, 0.61% @64k, 0.52% @128k");
+}

@@ -1,0 +1,54 @@
+//! Table 7 reproduction: sparsity increases with sequence length under a
+//! constant accuracy bound (Llama3.1-proxy, l1=0.08/l2=0.09).
+//!
+//! Expected shape (paper): 6.8% @8K → 26.4% @16K → 35.7% @24K →
+//! 49.8% @48K → 54% @128K. Mechanism: the attention neighbourhood is
+//! roughly constant in tokens, so its *share* of the sequence shrinks
+//! as N grows.
+//!
+//! Run: `cargo bench --bench table7_seqlen` (up to 32K by default;
+//! SPARGE_BENCH_FULL=1 adds 64K and 128K).
+
+use sparge::experiments::full_scale;
+use sparge::models::suite;
+use sparge::sparge::tune::{tune_layer, CalibSample, TuneOptions};
+use sparge::util::rng::Pcg;
+use sparge::util::table::{pct, Table};
+use sparge::workloads::{synthetic, SyntheticSpec};
+
+fn main() {
+    let mut lens = vec![4_096usize, 8_192, 16_384];
+    if full_scale() {
+        lens.push(32_768);
+        lens.push(65_536);
+        lens.push(131_072);
+    }
+    let card = suite(1).into_iter().find(|c| c.name == "Llama3.1-proxy").unwrap();
+    let cfg = card.attn_config();
+    println!("Table 7 — sparsity vs sequence length (constant bound l1={}, l2={})\n", card.l1, card.l2);
+
+    let opts = TuneOptions {
+        l1: card.l1,
+        l2: card.l2,
+        tau_grid: vec![0.98, 0.95, 0.9],
+        theta_grid: vec![0.0, 0.3],
+        lambda_grid: vec![-5.0],
+        quant: false,
+    };
+
+    let mut header = vec!["Sequence Len".to_string()];
+    let mut row = vec!["Sparsity".to_string()];
+    for &n in &lens {
+        let mut rng = Pcg::seeded(707);
+        let s = synthetic::generate(&SyntheticSpec::lm_like(n, 64), &mut rng);
+        let res = tune_layer(&[CalibSample { q: s.q, k: s.k, v: s.v }], &cfg, &opts);
+        header.push(format!("{}K", n / 1024));
+        row.push(pct(res.sparsity));
+        eprintln!("  N={n}: sparsity {:.3} (tau={}, theta={}, L1={:.4})", res.sparsity, res.params.tau, res.params.theta, res.l1_error);
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new("sparsity grows with N (paper Table 7 shape)", &header_refs);
+    table.row(&row);
+    table.print();
+    println!("\npaper: 6.8% @8K, 26.4% @16K, 35.7% @24K, 49.8% @48K, 54% @128K");
+}

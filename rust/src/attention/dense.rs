@@ -1,0 +1,137 @@
+//! Naive O(N²·d) dense attention — the ground-truth oracle every other
+//! engine in the repo is checked against.
+
+use crate::tensor::{matmul, ops, Tensor};
+
+use super::types::AttnConfig;
+
+/// Full-matrix attention: O = softmax(QKᵀ·scale [+causal mask]) V.
+///
+/// Q, K, V are (N, d) single-head tensors. Materializes the N×N score
+/// matrix, so only suitable as a reference for moderate N.
+pub fn attention_naive(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -> Tensor {
+    assert_eq!(q.ndim(), 2);
+    assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
+    assert_eq!(k.dim(0), v.dim(0), "k/v length");
+    let n = q.dim(0);
+    let nk = k.dim(0);
+    let scale = cfg.scale_for(q.dim(1));
+
+    let mut s = matmul::matmul_nt(q, k);
+    s.scale(scale);
+    if cfg.causal {
+        assert_eq!(n, nk, "causal attention needs square scores");
+        for i in 0..n {
+            for j in (i + 1)..nk {
+                *s.at2_mut(i, j) = f32::NEG_INFINITY;
+            }
+        }
+    }
+    let p = ops::softmax_rows(&s);
+    matmul::matmul_nn(&p, v)
+}
+
+/// Multi-head wrapper over `attention_naive`: inputs are `h` stacked
+/// (N, d) heads laid out as a Vec; returns per-head outputs.
+pub fn attention_naive_heads(
+    q: &[Tensor],
+    k: &[Tensor],
+    v: &[Tensor],
+    cfg: &AttnConfig,
+) -> Vec<Tensor> {
+    assert_eq!(q.len(), k.len());
+    assert_eq!(k.len(), v.len());
+    q.iter().zip(k).zip(v).map(|((qh, kh), vh)| attention_naive(qh, kh, vh, cfg)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, Cases};
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn uniform_scores_average_v() {
+        // Q=0 ⇒ all scores equal ⇒ output is the mean of V rows.
+        let mut rng = Pcg::seeded(1);
+        let d = 8;
+        let n = 16;
+        let q = Tensor::zeros(&[n, d]);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let o = attention_naive(&q, &k, &v, &AttnConfig::default());
+        let mean = crate::tensor::ops::mean_axis0(&v);
+        for i in 0..n {
+            assert_allclose(o.row(i), &mean, 1e-5, 1e-5, "uniform").unwrap();
+        }
+    }
+
+    #[test]
+    fn causal_first_row_copies_v0() {
+        let mut rng = Pcg::seeded(2);
+        let (n, d) = (8, 4);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let o = attention_naive(&q, &k, &v, &AttnConfig::causal());
+        assert_allclose(o.row(0), v.row(0), 1e-5, 1e-5, "causal row0").unwrap();
+    }
+
+    #[test]
+    fn one_hot_attention_selects_row() {
+        // Huge scale makes softmax a hard argmax; K rows orthogonal.
+        let d = 4;
+        let k = Tensor::from_vec(&[4, d], {
+            let mut eye = vec![0.0; 16];
+            for i in 0..4 {
+                eye[i * 4 + i] = 1.0;
+            }
+            eye
+        });
+        let q = k.clone();
+        let mut v = Tensor::zeros(&[4, d]);
+        for i in 0..4 {
+            v.row_mut(i)[0] = i as f32;
+        }
+        let cfg = AttnConfig { scale: Some(100.0), ..Default::default() };
+        let o = attention_naive(&q, &k, &v, &cfg);
+        for i in 0..4 {
+            assert!((o.at2(i, 0) - i as f32).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        Cases::standard(401).check(|rng| {
+            let n = rng.range(2, 20);
+            let d = rng.range(1, 16);
+            let q = Tensor::randn(&[n, d], rng);
+            let k = Tensor::randn(&[n, d], rng);
+            let v = Tensor::full(&[n, d], 1.0); // constant V ⇒ output must be 1
+            let o = attention_naive(&q, &k, &v, &AttnConfig::default());
+            for &x in o.data() {
+                if (x - 1.0).abs() > 1e-4 {
+                    return Err(format!("convexity violated: {x}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn heads_wrapper_matches_single() {
+        let mut rng = Pcg::seeded(3);
+        let mk = |rng: &mut Pcg| Tensor::randn(&[12, 8], rng);
+        let (q0, k0, v0) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let (q1, k1, v1) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let cfg = AttnConfig::default();
+        let outs = attention_naive_heads(
+            &[q0.clone(), q1.clone()],
+            &[k0.clone(), k1.clone()],
+            &[v0.clone(), v1.clone()],
+            &cfg,
+        );
+        assert_eq!(outs[0], attention_naive(&q0, &k0, &v0, &cfg));
+        assert_eq!(outs[1], attention_naive(&q1, &k1, &v1, &cfg));
+    }
+}

@@ -1,0 +1,10 @@
+//! Attention engines: the naive dense oracle and the blockwise
+//! FlashAttention implementation the SpargeAttn kernel builds on.
+
+pub mod dense;
+pub mod flash;
+pub mod types;
+
+pub use dense::attention_naive;
+pub use flash::{attention_flash, attention_flash_stats, FlashTile};
+pub use types::{AttnConfig, BlockMask, SkipStats};

@@ -1,0 +1,204 @@
+//! Shared attention types: configuration, skip accounting, block masks.
+
+/// Attention engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnConfig {
+    /// Query block rows (paper default 128).
+    pub bq: usize,
+    /// Key/value block rows (paper default 64).
+    pub bk: usize,
+    /// Causal (decoder) masking.
+    pub causal: bool,
+    /// Softmax scale; `None` means 1/√d.
+    pub scale: Option<f32>,
+    /// Row groups per query tile — the paper's `c_w` GPU warps (§3.4).
+    pub cw: usize,
+}
+
+impl Default for AttnConfig {
+    fn default() -> Self {
+        AttnConfig { bq: 128, bk: 64, causal: false, scale: None, cw: 4 }
+    }
+}
+
+impl AttnConfig {
+    pub fn causal() -> Self {
+        AttnConfig { causal: true, ..Default::default() }
+    }
+
+    /// Effective softmax scale for head dimension `d`.
+    pub fn scale_for(&self, d: usize) -> f32 {
+        self.scale.unwrap_or(1.0 / (d as f32).sqrt())
+    }
+
+    /// Number of query blocks for sequence length n.
+    pub fn n_qblocks(&self, n: usize) -> usize {
+        n.div_ceil(self.bq)
+    }
+
+    /// Number of key blocks for sequence length n.
+    pub fn n_kblocks(&self, n: usize) -> usize {
+        n.div_ceil(self.bk)
+    }
+}
+
+/// A binary block mask of shape (n_qblocks, n_kblocks) — `M_g` in the paper.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockMask {
+    pub rows: usize,
+    pub cols: usize,
+    bits: Vec<bool>,
+}
+
+impl BlockMask {
+    pub fn new_all(rows: usize, cols: usize, value: bool) -> BlockMask {
+        BlockMask { rows, cols, bits: vec![value; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        self.bits[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: bool) {
+        self.bits[i * self.cols + j] = v;
+    }
+
+    /// Set an entire row.
+    pub fn set_row(&mut self, i: usize, v: bool) {
+        for j in 0..self.cols {
+            self.set(i, j, v);
+        }
+    }
+
+    /// Set an entire column.
+    pub fn set_col(&mut self, j: usize, v: bool) {
+        for i in 0..self.rows {
+            self.set(i, j, v);
+        }
+    }
+
+    /// Count of `true` entries.
+    pub fn count_active(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    /// Fraction of `false` (skipped) entries.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.count_active() as f64 / self.bits.len() as f64
+    }
+
+    /// Logical-or with another mask of identical shape.
+    pub fn union(&self, other: &BlockMask) -> BlockMask {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let bits = self.bits.iter().zip(&other.bits).map(|(&a, &b)| a || b).collect();
+        BlockMask { rows: self.rows, cols: self.cols, bits }
+    }
+}
+
+/// Counters for skipped vs executed block matmuls.
+///
+/// The paper defines **Sparsity** as the proportion of `Q_iK_jᵀ` plus
+/// `P̃_ijV_j` products skipped relative to the total a full attention needs
+/// (§4.1). Both stage-1 (`M_g`) and stage-2 (λ filter) skips are counted.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SkipStats {
+    /// Block QKᵀ products a dense attention would execute.
+    pub qk_total: usize,
+    /// Block QKᵀ products skipped (stage 1).
+    pub qk_skipped: usize,
+    /// Block P̃V products a dense attention would execute.
+    pub pv_total: usize,
+    /// Block P̃V products skipped — stage-1 skips count at full blocks,
+    /// stage-2 λ skips count per row group (fractional blocks accumulate in
+    /// units of 1/c_w, tracked via `pv_skipped_groups`).
+    pub pv_skipped: usize,
+    /// Row groups per PV block (c_w), for fractional accounting.
+    pub cw: usize,
+    /// Stage-2: skipped row groups across all visited blocks.
+    pub pv_skipped_groups: usize,
+}
+
+impl SkipStats {
+    /// Paper sparsity: skipped matmuls / total matmuls, QK and PV pooled.
+    pub fn sparsity(&self) -> f64 {
+        let total = (self.qk_total + self.pv_total) as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        let frac_pv = if self.cw > 0 { self.pv_skipped_groups as f64 / self.cw as f64 } else { 0.0 };
+        ((self.qk_skipped + self.pv_skipped) as f64 + frac_pv) / total
+    }
+
+    /// Sparsity from stage-1 only (`only M_g` row of Table 6).
+    pub fn sparsity_stage1(&self) -> f64 {
+        let total = (self.qk_total + self.pv_total) as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        (self.qk_skipped + self.pv_skipped) as f64 / total
+    }
+
+    /// Merge counters from another run (e.g. other heads).
+    pub fn merge(&mut self, other: &SkipStats) {
+        self.qk_total += other.qk_total;
+        self.qk_skipped += other.qk_skipped;
+        self.pv_total += other.pv_total;
+        self.pv_skipped += other.pv_skipped;
+        self.pv_skipped_groups += other.pv_skipped_groups;
+        if self.cw == 0 {
+            self.cw = other.cw;
+        } else {
+            debug_assert!(other.cw == 0 || other.cw == self.cw, "merging stats with different c_w");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults() {
+        let c = AttnConfig::default();
+        assert_eq!(c.bq, 128);
+        assert_eq!(c.bk, 64);
+        assert!((c.scale_for(64) - 0.125).abs() < 1e-7);
+        assert_eq!(c.n_qblocks(300), 3);
+        assert_eq!(c.n_kblocks(300), 5);
+    }
+
+    #[test]
+    fn mask_ops() {
+        let mut m = BlockMask::new_all(3, 4, false);
+        assert_eq!(m.count_active(), 0);
+        m.set(1, 2, true);
+        m.set_row(0, true);
+        m.set_col(3, true);
+        assert!(m.get(1, 2) && m.get(0, 0) && m.get(2, 3));
+        assert_eq!(m.count_active(), 4 + 1 + 2);
+        let u = m.union(&BlockMask::new_all(3, 4, true));
+        assert_eq!(u.count_active(), 12);
+        assert_eq!(u.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn skipstats_sparsity() {
+        let s = SkipStats { qk_total: 100, qk_skipped: 50, pv_total: 100, pv_skipped: 50, cw: 4, pv_skipped_groups: 40 };
+        // (50 + 50 + 40/4) / 200 = 110/200
+        assert!((s.sparsity() - 0.55).abs() < 1e-12);
+        assert!((s.sparsity_stage1() - 0.5).abs() < 1e-12);
+        assert_eq!(SkipStats::default().sparsity(), 0.0);
+    }
+
+    #[test]
+    fn skipstats_merge() {
+        let mut a = SkipStats { qk_total: 10, qk_skipped: 5, pv_total: 10, pv_skipped: 5, cw: 4, pv_skipped_groups: 2 };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.qk_total, 20);
+        assert_eq!(a.pv_skipped_groups, 4);
+        assert_eq!(a.cw, 4);
+    }
+}

@@ -1,0 +1,135 @@
+//! FlexPrefill baseline (Lai et al., ICLR 2025).
+//!
+//! FlexPrefill selects, per head, the minimal set of key blocks whose
+//! estimated attention mass reaches a *global* cumulative threshold γ
+//! (query-aware block selection). The key differences from SpargeAttn:
+//! the γ-budget is applied over the whole compressed map rather than per
+//! query row with a self-similarity judge, so heads with diffuse attention
+//! over-prune rows whose mass is spread out — the failure mode behind its
+//! diffusion-model collapse in Table 1.
+
+use crate::attention::types::{AttnConfig, BlockMask};
+use crate::sparge::predict::compress_blocks;
+use crate::tensor::{matmul, ops, Tensor};
+
+/// Construct a FlexPrefill-style mask: keep the smallest set of (i,j)
+/// blocks whose compressed-map mass reaches `gamma` of the total
+/// (γ ∈ (0,1]; the paper uses γ = 0.95 and 0.99).
+pub fn flexprefill_mask(q: &Tensor, k: &Tensor, cfg: &AttnConfig, gamma: f64) -> BlockMask {
+    assert!(gamma > 0.0 && gamma <= 1.0, "gamma in (0,1]");
+    let (qt, _) = compress_blocks(q, cfg.bq);
+    let (kt, _) = compress_blocks(k, cfg.bk);
+    let tm = qt.dim(0);
+    let tn = kt.dim(0);
+    let scale = cfg.scale_for(q.dim(1));
+
+    let mut s_hat = matmul::matmul_nt(&qt, &kt);
+    s_hat.scale(scale);
+    if cfg.causal {
+        for i in 0..tm {
+            let q_last = ((i + 1) * cfg.bq).min(q.dim(0)) - 1;
+            for j in 0..tn {
+                if j * cfg.bk > q_last {
+                    *s_hat.at2_mut(i, j) = f32::NEG_INFINITY;
+                }
+            }
+        }
+    }
+    let p_hat = ops::softmax_rows(&s_hat);
+
+    // Global selection: sort all in-domain blocks by mass, take the minimal
+    // prefix reaching gamma of the total.
+    let mut entries: Vec<(f32, usize, usize)> = Vec::with_capacity(tm * tn);
+    let mut total = 0f64;
+    for i in 0..tm {
+        for j in 0..tn {
+            let v = p_hat.at2(i, j);
+            if v > 0.0 || !cfg.causal {
+                entries.push((v, i, j));
+                total += v as f64;
+            }
+        }
+    }
+    entries.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+    let mut mask = BlockMask::new_all(tm, tn, false);
+    let budget = gamma * total;
+    let mut cum = 0f64;
+    for &(v, i, j) in &entries {
+        mask.set(i, j, true);
+        cum += v as f64;
+        if cum >= budget {
+            break;
+        }
+    }
+    // FlexPrefill guarantees the diagonal (local) blocks are present.
+    for i in 0..tm {
+        let jd = ((i * cfg.bq) / cfg.bk).min(tn - 1);
+        mask.set(i, jd, true);
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+    use crate::util::rng::Pcg;
+
+    fn cfg(bq: usize, bk: usize, causal: bool) -> AttnConfig {
+        AttnConfig { bq, bk, causal, scale: None, cw: 2 }
+    }
+
+    #[test]
+    fn gamma_one_keeps_everything_noncausal() {
+        let mut rng = Pcg::seeded(61);
+        let q = Tensor::randn(&[64, 8], &mut rng);
+        let k = Tensor::randn(&[64, 8], &mut rng);
+        let m = flexprefill_mask(&q, &k, &cfg(16, 16, false), 1.0);
+        assert_eq!(m.count_active(), 16);
+    }
+
+    #[test]
+    fn smaller_gamma_is_sparser() {
+        Cases::standard(902).check(|rng| {
+            let n = rng.range(32, 128);
+            let q = Tensor::randn(&[n, 8], rng);
+            let k = Tensor::randn(&[n, 8], rng);
+            let c = cfg(16, 16, false);
+            let dense = flexprefill_mask(&q, &k, &c, 0.99);
+            let sparse = flexprefill_mask(&q, &k, &c, 0.5);
+            if sparse.count_active() > dense.count_active() {
+                return Err("gamma monotonicity violated".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn diagonal_blocks_always_present() {
+        let mut rng = Pcg::seeded(62);
+        let q = Tensor::randn(&[128, 8], &mut rng);
+        let k = Tensor::randn(&[128, 8], &mut rng);
+        let c = cfg(16, 16, false);
+        let m = flexprefill_mask(&q, &k, &c, 0.3);
+        for i in 0..m.rows {
+            assert!(m.get(i, i));
+        }
+    }
+
+    #[test]
+    fn concentrated_mass_prunes_diffuse_rows() {
+        // Rows 0..1 blocks dominate; with a small gamma, far-off blocks of
+        // other rows get dropped (the over-pruning failure mode).
+        let n = 64;
+        let d = 8;
+        let mut q = Tensor::zeros(&[n, d]);
+        let mut k = Tensor::zeros(&[n, d]);
+        for i in 0..16 {
+            q.row_mut(i)[0] = 6.0;
+            k.row_mut(i)[0] = 6.0;
+        }
+        let c = cfg(16, 16, false);
+        let m = flexprefill_mask(&q, &k, &c, 0.5);
+        assert!(m.sparsity() > 0.4, "sparsity {}", m.sparsity());
+    }
+}

@@ -1,0 +1,15 @@
+//! Baseline sparse-attention mask constructors the paper compares against
+//! (§4.1): block-sparse MInference and FlexPrefill, plus a
+//! StreamingLLM-style sink+window pattern baseline.
+//!
+//! All baselines produce a [`BlockMask`] that is executed through the
+//! *identical* sparse kernel (`crate::sparge::sparse_flash`), isolating
+//! the mask-construction policy as the only experimental variable.
+
+pub mod flexprefill;
+pub mod minference;
+pub mod sliding_window;
+
+pub use flexprefill::flexprefill_mask;
+pub use minference::minference_mask;
+pub use sliding_window::sliding_window_mask;

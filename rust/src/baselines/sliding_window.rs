@@ -1,0 +1,91 @@
+//! StreamingLLM-style pattern baseline (Xiao et al., ICLR 2024):
+//! attention sinks (first blocks) + a sliding local window. This is the
+//! "pattern-required" family of §2 — input-independent, so it is cheap but
+//! cannot adapt to content (the universality limitation L1 the paper
+//! motivates with).
+
+use crate::attention::types::{AttnConfig, BlockMask};
+
+/// Sink + sliding-window block mask for an (n_q, n_k) token problem:
+/// every query block attends to the first `sink_blocks` key blocks and to
+/// the `window_blocks` key blocks nearest its own diagonal position.
+pub fn sliding_window_mask(
+    n_q: usize,
+    n_k: usize,
+    cfg: &AttnConfig,
+    sink_blocks: usize,
+    window_blocks: usize,
+) -> BlockMask {
+    let tm = cfg.n_qblocks(n_q);
+    let tn = cfg.n_kblocks(n_k);
+    let mut mask = BlockMask::new_all(tm, tn, false);
+    for i in 0..tm {
+        // causal upper limit for this query block
+        let q_last = ((i + 1) * cfg.bq).min(n_q) - 1;
+        let j_max = if cfg.causal { (q_last / cfg.bk).min(tn - 1) } else { tn - 1 };
+        for j in 0..sink_blocks.min(j_max + 1) {
+            mask.set(i, j, true);
+        }
+        // window centred at the diagonal position of this q block
+        let jd = ((i * cfg.bq) / cfg.bk).min(j_max);
+        let lo = jd.saturating_sub(window_blocks / 2);
+        let hi = (jd + window_blocks.div_ceil(2)).min(j_max + 1);
+        for j in lo..hi.max(lo + 1).min(tn) {
+            mask.set(i, j, true);
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(bq: usize, bk: usize, causal: bool) -> AttnConfig {
+        AttnConfig { bq, bk, causal, scale: None, cw: 2 }
+    }
+
+    #[test]
+    fn sink_and_window_present() {
+        let c = cfg(16, 16, true);
+        let m = sliding_window_mask(128, 128, &c, 1, 2);
+        for i in 0..m.rows {
+            assert!(m.get(i, 0), "sink missing at row {i}");
+            assert!(m.get(i, i), "diagonal missing at row {i}");
+        }
+    }
+
+    #[test]
+    fn causal_never_exceeds_diagonal() {
+        let c = cfg(16, 16, true);
+        let m = sliding_window_mask(128, 128, &c, 2, 4);
+        for i in 0..m.rows {
+            for j in (i + 1)..m.cols {
+                assert!(!m.get(i, j), "violation ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn long_sequences_are_sparse() {
+        let c = cfg(16, 16, false);
+        let m = sliding_window_mask(1024, 1024, &c, 1, 4);
+        assert!(m.sparsity() > 0.8, "sparsity {}", m.sparsity());
+    }
+
+    #[test]
+    fn window_larger_than_grid_is_dense() {
+        let c = cfg(16, 16, false);
+        let m = sliding_window_mask(64, 64, &c, 4, 100);
+        assert_eq!(m.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn every_row_nonempty() {
+        let c = cfg(32, 16, true);
+        let m = sliding_window_mask(320, 320, &c, 0, 1);
+        for i in 0..m.rows {
+            assert!((0..m.cols).any(|j| m.get(i, j)), "row {i} empty");
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Dynamic batcher: a bounded FIFO with condvar wakeups that groups
+//! queued generation requests into batches by attention mode, so the
+//! engine amortizes compilation/cache warmth across a batch (the
+//! vLLM-router-style structure scaled to this runtime).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::request::QueuedRequest;
+
+/// Batch-forming policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max requests per batch.
+    pub max_batch: usize,
+    /// How long to wait for more requests once one is pending.
+    pub max_wait: Duration,
+    /// Queue capacity (backpressure: submit fails beyond this).
+    pub capacity: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20), capacity: 1024 }
+    }
+}
+
+/// Thread-safe batching queue.
+pub struct Batcher {
+    policy: BatchPolicy,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct State {
+    queue: VecDeque<QueuedRequest>,
+    closed: bool,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy, state: Mutex::new(State::default()), cv: Condvar::new() }
+    }
+
+    /// Enqueue a request. Errors when the queue is full (backpressure) or
+    /// closed.
+    pub fn submit(&self, req: QueuedRequest) -> Result<(), QueuedRequest> {
+        let mut g = self.state.lock().unwrap();
+        if g.closed || g.queue.len() >= self.policy.capacity {
+            return Err(req);
+        }
+        g.queue.push_back(req);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Current queue depth.
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Pull the next batch: blocks until at least one request is queued
+    /// (or the batcher closes → `None`), then waits up to `max_wait` for
+    /// the batch to fill. All requests in a batch share the same attention
+    /// mode (front-runner's mode) so the engine hits one artifact.
+    pub fn next_batch(&self) -> Option<Vec<QueuedRequest>> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if !g.queue.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+        // wait briefly for more arrivals
+        let deadline = Instant::now() + self.policy.max_wait;
+        while g.queue.len() < self.policy.max_batch && !g.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (ng, timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = ng;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let mode = g.queue.front().unwrap().req.mode;
+        let mut batch = Vec::new();
+        let mut rest = VecDeque::new();
+        while let Some(item) = g.queue.pop_front() {
+            if batch.len() < self.policy.max_batch && item.req.mode == mode {
+                batch.push(item);
+            } else {
+                rest.push_back(item);
+            }
+        }
+        g.queue = rest;
+        Some(batch)
+    }
+
+    /// Close the queue; `next_batch` drains then returns `None`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{AttnMode, GenerateRequest};
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    fn mk(id: u64, mode: AttnMode) -> QueuedRequest {
+        let (tx, _rx) = mpsc::channel();
+        QueuedRequest {
+            req: GenerateRequest { id, prompt: vec![b'a'], max_new_tokens: 1, mode },
+            arrived: Instant::now(),
+            respond: tx,
+        }
+    }
+
+    #[test]
+    fn batches_same_mode_together() {
+        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1), capacity: 16 });
+        b.submit(mk(1, AttnMode::Sparge)).unwrap();
+        b.submit(mk(2, AttnMode::Sparge)).unwrap();
+        b.submit(mk(3, AttnMode::Dense)).unwrap();
+        b.submit(mk(4, AttnMode::Sparge)).unwrap();
+        let batch = b.next_batch().unwrap();
+        let ids: Vec<u64> = batch.iter().map(|q| q.req.id).collect();
+        assert_eq!(ids, vec![1, 2, 4]);
+        let batch2 = b.next_batch().unwrap();
+        assert_eq!(batch2[0].req.id, 3);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1), capacity: 16 });
+        for i in 0..5 {
+            b.submit(mk(i, AttnMode::Dense)).unwrap();
+        }
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert_eq!(b.next_batch().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn backpressure_when_full() {
+        let b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1), capacity: 2 });
+        b.submit(mk(1, AttnMode::Dense)).unwrap();
+        b.submit(mk(2, AttnMode::Dense)).unwrap();
+        assert!(b.submit(mk(3, AttnMode::Dense)).is_err());
+        assert_eq!(b.depth(), 2);
+    }
+
+    #[test]
+    fn close_unblocks_waiters() {
+        let b = Arc::new(Batcher::new(BatchPolicy::default()));
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn waits_to_fill_batch() {
+        let b = Arc::new(Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(200), capacity: 8 }));
+        let b2 = Arc::clone(&b);
+        b.submit(mk(1, AttnMode::Dense)).unwrap();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(30));
+        b.submit(mk(2, AttnMode::Dense)).unwrap();
+        let batch = h.join().unwrap().unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+}

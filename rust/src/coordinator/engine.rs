@@ -1,0 +1,273 @@
+//! The model engine: a dedicated thread owning the PJRT [`Runtime`]
+//! (executables hold non-`Send` pointers) behind a channel-based actor
+//! interface, so the multi-threaded coordinator can call it safely.
+//!
+//! Operations: LM logits / greedy generation / scoring (dense or sparge
+//! artifacts), LM train steps (the e2e training driver), and DiT denoise
+//! steps for the video benches.
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{Runtime, Value};
+
+use super::request::AttnMode;
+
+/// LM context lengths exported by aot.py, ascending.
+pub const LM_CTXS: &[usize] = &[256, 1024, 2048];
+/// Train-step geometry exported by aot.py.
+pub const TRAIN_B: usize = 8;
+pub const TRAIN_T: usize = 256;
+
+enum Msg {
+    LmLogits { tokens: Vec<i32>, mode: AttnMode, reply: mpsc::Sender<Result<Vec<f32>>> },
+    TrainStep { tokens: Vec<i32>, reply: mpsc::Sender<Result<f64>> },
+    DitDenoise { latents: Vec<f32>, n: usize, d: usize, t: f32, mode: AttnMode, reply: mpsc::Sender<Result<Vec<f32>>> },
+    LoadParams { params: Vec<f32>, reply: mpsc::Sender<Result<()>> },
+    GetParams { reply: mpsc::Sender<Result<Vec<f32>>> },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+/// Engine thread state.
+struct Engine {
+    rt: Runtime,
+    /// flat LM params (+ Adam state while training)
+    params: Vec<f32>,
+    adam_m: Vec<f32>,
+    adam_v: Vec<f32>,
+    step: f32,
+    dit_params: Option<Vec<f32>>,
+}
+
+impl Engine {
+    fn new(artifact_dir: &std::path::Path) -> Result<Engine> {
+        let rt = Runtime::new(artifact_dir)?;
+        // initial weights from the build-time trace
+        let init = crate::workloads::trace::load(&rt.dir().join("lm_init.spg"))
+            .context("loading lm_init.spg")?;
+        let params = init.into_iter().next().context("lm_init.spg empty")?.into_vec();
+        let n = params.len();
+        let dit_params = crate::workloads::trace::load(&rt.dir().join("dit_init.spg"))
+            .ok()
+            .and_then(|v| v.into_iter().next())
+            .map(|t| t.into_vec());
+        Ok(Engine { rt, params, adam_m: vec![0.0; n], adam_v: vec![0.0; n], step: 0.0, dit_params })
+    }
+
+    fn lm_artifact(&self, len: usize, mode: AttnMode) -> Result<(String, usize)> {
+        let ctx = *LM_CTXS
+            .iter()
+            .find(|&&c| c >= len)
+            .ok_or_else(|| anyhow!("prompt length {len} exceeds max context {}", LM_CTXS.last().unwrap()))?;
+        Ok((format!("lm_fwd_{}_{}", mode.name(), ctx), ctx))
+    }
+
+    fn lm_logits(&self, tokens: &[i32], mode: AttnMode) -> Result<Vec<f32>> {
+        let (name, ctx) = self.lm_artifact(tokens.len(), mode)?;
+        // left-pad with zeros to the artifact context (causal attention:
+        // padding on the left influences the suffix, so pad with byte 0x20
+        // (space) — inert filler in the byte vocabulary).
+        let mut padded = vec![b' ' as i32; ctx - tokens.len()];
+        padded.extend_from_slice(tokens);
+        let out = self.rt.run(
+            &name,
+            &[
+                Value::F32(self.params.clone(), vec![self.params.len()]),
+                Value::I32(padded, vec![ctx]),
+            ],
+        )?;
+        let logits = out.into_iter().next().context("no logits")?;
+        let vocab = logits.shape()[1];
+        let data = match logits {
+            Value::F32(d, _) => d,
+            _ => return Err(anyhow!("logits not f32")),
+        };
+        // return only the rows for the real (unpadded) tokens
+        let pad = ctx - tokens.len();
+        Ok(data[pad * vocab..].to_vec())
+    }
+
+    fn train_step(&mut self, tokens: &[i32]) -> Result<f64> {
+        anyhow::ensure!(tokens.len() == TRAIN_B * TRAIN_T, "train batch must be {TRAIN_B}x{TRAIN_T}");
+        let n = self.params.len();
+        let name = format!("lm_train_step_{TRAIN_B}x{TRAIN_T}");
+        let out = self.rt.run(
+            &name,
+            &[
+                Value::F32(self.params.clone(), vec![n]),
+                Value::F32(self.adam_m.clone(), vec![n]),
+                Value::F32(self.adam_v.clone(), vec![n]),
+                Value::scalar_f32(self.step),
+                Value::I32(tokens.to_vec(), vec![TRAIN_B, TRAIN_T]),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        self.params = match it.next().context("params out")? {
+            Value::F32(d, _) => d,
+            _ => return Err(anyhow!("bad params dtype")),
+        };
+        self.adam_m = match it.next().context("m out")? {
+            Value::F32(d, _) => d,
+            _ => return Err(anyhow!("bad m dtype")),
+        };
+        self.adam_v = match it.next().context("v out")? {
+            Value::F32(d, _) => d,
+            _ => return Err(anyhow!("bad v dtype")),
+        };
+        self.step = it.next().context("step out")?.scalar()? as f32;
+        let loss = it.next().context("loss out")?.scalar()?;
+        Ok(loss)
+    }
+
+    fn dit_denoise(&self, latents: &[f32], n: usize, d: usize, t: f32, mode: AttnMode) -> Result<Vec<f32>> {
+        let params = self.dit_params.as_ref().context("no dit params loaded")?;
+        let name = format!("dit_fwd_{}_{n}", mode.name());
+        let out = self.rt.run(
+            &name,
+            &[
+                Value::F32(params.clone(), vec![params.len()]),
+                Value::F32(latents.to_vec(), vec![n, d]),
+                Value::scalar_f32(t),
+            ],
+        )?;
+        match out.into_iter().next().context("no dit output")? {
+            Value::F32(data, _) => Ok(data),
+            _ => Err(anyhow!("dit output not f32")),
+        }
+    }
+
+    fn serve(mut self, rx: mpsc::Receiver<Msg>) {
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                Msg::LmLogits { tokens, mode, reply } => {
+                    let _ = reply.send(self.lm_logits(&tokens, mode));
+                }
+                Msg::TrainStep { tokens, reply } => {
+                    let _ = reply.send(self.train_step(&tokens));
+                }
+                Msg::DitDenoise { latents, n, d, t, mode, reply } => {
+                    let _ = reply.send(self.dit_denoise(&latents, n, d, t, mode));
+                }
+                Msg::LoadParams { params, reply } => {
+                    let _ = reply.send(if params.len() == self.params.len() {
+                        self.params = params;
+                        Ok(())
+                    } else {
+                        Err(anyhow!("param size mismatch: {} vs {}", params.len(), self.params.len()))
+                    });
+                }
+                Msg::GetParams { reply } => {
+                    let _ = reply.send(Ok(self.params.clone()));
+                }
+                Msg::Shutdown => break,
+            }
+        }
+    }
+}
+
+impl EngineHandle {
+    /// Spawn the engine thread over an artifact directory.
+    pub fn spawn(artifact_dir: &std::path::Path) -> Result<EngineHandle> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dir = artifact_dir.to_path_buf();
+        thread::Builder::new()
+            .name("sparge-engine".into())
+            .spawn(move || match Engine::new(&dir) {
+                Ok(engine) => {
+                    let _ = ready_tx.send(Ok(()));
+                    engine.serve(rx);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                }
+            })
+            .expect("spawn engine");
+        ready_rx.recv().context("engine thread died")??;
+        Ok(EngineHandle { tx })
+    }
+
+    fn call<T>(&self, build: impl FnOnce(mpsc::Sender<Result<T>>) -> Msg) -> Result<T> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(build(reply)).map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
+    }
+
+    /// Logits for all positions of `tokens` ((len × vocab) row-major).
+    pub fn lm_logits(&self, tokens: Vec<i32>, mode: AttnMode) -> Result<Vec<f32>> {
+        self.call(|reply| Msg::LmLogits { tokens, mode, reply })
+    }
+
+    /// One Adam step over a (TRAIN_B × TRAIN_T) token batch; returns loss.
+    pub fn train_step(&self, tokens: Vec<i32>) -> Result<f64> {
+        self.call(|reply| Msg::TrainStep { tokens, reply })
+    }
+
+    /// One DiT denoise step; `n` must match an exported artifact.
+    pub fn dit_denoise(&self, latents: Vec<f32>, n: usize, d: usize, t: f32, mode: AttnMode) -> Result<Vec<f32>> {
+        self.call(|reply| Msg::DitDenoise { latents, n, d, t, mode, reply })
+    }
+
+    /// Replace LM weights (e.g. after loading a trained checkpoint).
+    pub fn load_params(&self, params: Vec<f32>) -> Result<()> {
+        self.call(|reply| Msg::LoadParams { params, reply })
+    }
+
+    /// Snapshot LM weights (e.g. to save a checkpoint).
+    pub fn get_params(&self) -> Result<Vec<f32>> {
+        self.call(|reply| Msg::GetParams { reply })
+    }
+
+    /// Greedy generation: returns `max_new` generated bytes.
+    pub fn generate(&self, prompt: &[u8], max_new: usize, mode: AttnMode) -> Result<Vec<u8>> {
+        let max_ctx = *LM_CTXS.last().unwrap();
+        let mut tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
+        let mut out = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            if tokens.len() > max_ctx {
+                let excess = tokens.len() - max_ctx;
+                tokens.drain(..excess);
+            }
+            let logits = self.lm_logits(tokens.clone(), mode)?;
+            let vocab = 256;
+            let last = &logits[(tokens.len() - 1) * vocab..tokens.len() * vocab];
+            let next = last
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap();
+            out.push(next as u8);
+            tokens.push(next);
+        }
+        Ok(out)
+    }
+
+    /// Mean next-byte negative log-likelihood of `tokens` (perplexity =
+    /// exp of this).
+    pub fn score_nll(&self, tokens: &[u8], mode: AttnMode) -> Result<f64> {
+        let toks: Vec<i32> = tokens.iter().map(|&b| b as i32).collect();
+        let logits = self.lm_logits(toks.clone(), mode)?;
+        let vocab = 256;
+        let mut nll = 0f64;
+        let n = toks.len();
+        for t in 0..n - 1 {
+            let row = &logits[t * vocab..(t + 1) * vocab];
+            let lse = crate::tensor::ops::logsumexp(row) as f64;
+            nll += lse - row[toks[t + 1] as usize] as f64;
+        }
+        Ok(nll / (n - 1) as f64)
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}

@@ -1,0 +1,108 @@
+//! Serving metrics: thread-safe counters + latency reservoir.
+
+use std::sync::Mutex;
+
+/// Registry of serving counters. Cheap to share behind an `Arc`.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    tokens_out: u64,
+    errors: u64,
+    latencies: Vec<f64>,
+    compute: Vec<f64>,
+}
+
+/// A point-in-time snapshot for reporting.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub tokens_out: u64,
+    pub errors: u64,
+    pub latency_p50: f64,
+    pub latency_p99: f64,
+    pub mean_compute: f64,
+    pub tokens_per_sec: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Record a completed request.
+    pub fn record(&self, tokens_out: usize, latency: f64, compute: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        g.tokens_out += tokens_out as u64;
+        g.latencies.push(latency);
+        g.compute.push(compute);
+        // bound memory: keep the newest 4096 samples
+        if g.latencies.len() > 4096 {
+            let cut = g.latencies.len() - 4096;
+            g.latencies.drain(..cut);
+            g.compute.drain(..cut);
+        }
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let mut lat = g.latencies.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let total_compute: f64 = g.compute.iter().sum();
+        Snapshot {
+            requests: g.requests,
+            tokens_out: g.tokens_out,
+            errors: g.errors,
+            latency_p50: if lat.is_empty() { 0.0 } else { crate::util::stats::percentile_sorted(&lat, 0.5) },
+            latency_p99: if lat.is_empty() { 0.0 } else { crate::util::stats::percentile_sorted(&lat, 0.99) },
+            mean_compute: if g.compute.is_empty() { 0.0 } else { total_compute / g.compute.len() as f64 },
+            tokens_per_sec: if total_compute > 0.0 { g.tokens_out as f64 / total_compute } else { 0.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record(10, 0.5, 0.4);
+        m.record(20, 1.5, 1.2);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.tokens_out, 30);
+        assert_eq!(s.errors, 1);
+        assert!((s.latency_p50 - 1.0).abs() < 1e-9);
+        assert!((s.mean_compute - 0.8).abs() < 1e-9);
+        assert!((s.tokens_per_sec - 30.0 / 1.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.latency_p50, 0.0);
+    }
+
+    #[test]
+    fn reservoir_is_bounded() {
+        let m = Metrics::new();
+        for _ in 0..5000 {
+            m.record(1, 0.1, 0.1);
+        }
+        assert!(m.inner.lock().unwrap().latencies.len() <= 4096);
+        assert_eq!(m.snapshot().requests, 5000);
+    }
+}

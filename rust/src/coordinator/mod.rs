@@ -1,0 +1,17 @@
+//! L3 serving coordinator: request types, dynamic batcher, scheduler,
+//! engine actor (owns the non-`Send` PJRT runtime), TCP JSON-lines server,
+//! and metrics. Python never runs on this path — the engine executes
+//! AOT-compiled HLO artifacts only.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use engine::EngineHandle;
+pub use metrics::Metrics;
+pub use request::{AttnMode, GenerateRequest, GenerateResponse};
+pub use scheduler::Coordinator;

@@ -1,0 +1,69 @@
+//! Request/response types for the serving coordinator.
+
+use std::time::Instant;
+
+/// Attention execution mode for a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnMode {
+    Dense,
+    Sparge,
+}
+
+impl AttnMode {
+    pub fn parse(s: &str) -> Option<AttnMode> {
+        match s {
+            "dense" => Some(AttnMode::Dense),
+            "sparge" => Some(AttnMode::Sparge),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttnMode::Dense => "dense",
+            AttnMode::Sparge => "sparge",
+        }
+    }
+}
+
+/// A text-generation request (byte-level LM).
+#[derive(Clone, Debug)]
+pub struct GenerateRequest {
+    pub id: u64,
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+    pub mode: AttnMode,
+}
+
+/// Response to a generation request.
+#[derive(Clone, Debug)]
+pub struct GenerateResponse {
+    pub id: u64,
+    pub output: Vec<u8>,
+    /// End-to-end latency (seconds) including queueing.
+    pub latency: f64,
+    /// Pure model-execution time (seconds).
+    pub compute: f64,
+    pub mode: AttnMode,
+}
+
+/// A queued request with its arrival timestamp.
+#[derive(Debug)]
+pub struct QueuedRequest {
+    pub req: GenerateRequest,
+    pub arrived: Instant,
+    pub respond: std::sync::mpsc::Sender<GenerateResponse>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        assert_eq!(AttnMode::parse("dense"), Some(AttnMode::Dense));
+        assert_eq!(AttnMode::parse("sparge"), Some(AttnMode::Sparge));
+        assert_eq!(AttnMode::parse("???"), None);
+        assert_eq!(AttnMode::parse(AttnMode::Sparge.name()), Some(AttnMode::Sparge));
+    }
+}

@@ -1,0 +1,125 @@
+//! Scheduler: the worker loop that drains the batcher and drives the
+//! engine, plus the top-level [`Coordinator`] facade tying queue, engine,
+//! and metrics together.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::engine::EngineHandle;
+use super::metrics::Metrics;
+use super::request::{AttnMode, GenerateRequest, GenerateResponse, QueuedRequest};
+
+/// The serving coordinator: submit generation requests from any thread;
+/// a scheduler thread batches them and executes on the engine.
+pub struct Coordinator {
+    batcher: Arc<Batcher>,
+    pub metrics: Arc<Metrics>,
+    engine: EngineHandle,
+    next_id: AtomicU64,
+    worker: Option<thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the scheduler over an engine.
+    pub fn start(engine: EngineHandle, policy: BatchPolicy) -> Coordinator {
+        let batcher = Arc::new(Batcher::new(policy));
+        let metrics = Arc::new(Metrics::new());
+        let worker = {
+            let batcher = Arc::clone(&batcher);
+            let metrics = Arc::clone(&metrics);
+            let engine = engine.clone();
+            thread::Builder::new()
+                .name("sparge-scheduler".into())
+                .spawn(move || {
+                    while let Some(batch) = batcher.next_batch() {
+                        for item in batch {
+                            run_one(&engine, &metrics, item);
+                        }
+                    }
+                })
+                .expect("spawn scheduler")
+        };
+        Coordinator { batcher, metrics, engine, next_id: AtomicU64::new(1), worker: Some(worker) }
+    }
+
+    /// Fire-and-forget submit; the response arrives on the returned channel.
+    pub fn submit(
+        &self,
+        prompt: Vec<u8>,
+        max_new_tokens: usize,
+        mode: AttnMode,
+    ) -> Result<mpsc::Receiver<GenerateResponse>> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let item = QueuedRequest {
+            req: GenerateRequest { id, prompt, max_new_tokens, mode },
+            arrived: Instant::now(),
+            respond: tx,
+        };
+        self.batcher.submit(item).map_err(|_| anyhow!("queue full or closed (backpressure)"))?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn generate(&self, prompt: Vec<u8>, max_new: usize, mode: AttnMode) -> Result<GenerateResponse> {
+        let rx = self.submit(prompt, max_new, mode)?;
+        rx.recv().map_err(|_| anyhow!("request dropped"))
+    }
+
+    /// Direct engine access (training, scoring, denoise).
+    pub fn engine(&self) -> &EngineHandle {
+        &self.engine
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    /// Graceful shutdown: drain the queue, stop the worker.
+    pub fn shutdown(mut self) {
+        self.batcher.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.engine.shutdown();
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.batcher.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn run_one(engine: &EngineHandle, metrics: &Metrics, item: QueuedRequest) {
+    let QueuedRequest { req, arrived, respond } = item;
+    let t0 = Instant::now();
+    match engine.generate(&req.prompt, req.max_new_tokens, req.mode) {
+        Ok(output) => {
+            let compute = t0.elapsed().as_secs_f64();
+            let latency = arrived.elapsed().as_secs_f64();
+            metrics.record(output.len(), latency, compute);
+            let _ = respond.send(GenerateResponse { id: req.id, output, latency, compute, mode: req.mode });
+        }
+        Err(e) => {
+            metrics.record_error();
+            crate::log_error!("request {} failed: {e:#}", req.id);
+            let _ = respond.send(GenerateResponse {
+                id: req.id,
+                output: Vec::new(),
+                latency: arrived.elapsed().as_secs_f64(),
+                compute: t0.elapsed().as_secs_f64(),
+                mode: req.mode,
+            });
+        }
+    }
+}

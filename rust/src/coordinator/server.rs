@@ -1,0 +1,120 @@
+//! TCP JSON-lines server: the external interface of the coordinator.
+//!
+//! Protocol (one JSON object per line, response per line):
+//!   {"op":"generate","prompt":"...","max_new":16,"mode":"sparge"}
+//!     -> {"id":1,"output":"...","latency_ms":12.3,"compute_ms":11.0}
+//!   {"op":"stats"} -> {"requests":...,"tokens_out":...,...}
+//!   {"op":"ping"}  -> {"ok":true}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+
+use super::request::AttnMode;
+use super::scheduler::Coordinator;
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7071").
+pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    crate::log_info!("serving on {addr}");
+    let pool = ThreadPool::default_size();
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let c = Arc::clone(&coordinator);
+                pool.submit(move || {
+                    if let Err(e) = handle_conn(&c, s) {
+                        crate::log_warn!("connection error: {e:#}");
+                    }
+                });
+            }
+            Err(e) => crate::log_warn!("accept error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Handle one client connection (many requests per connection).
+pub fn handle_conn(coordinator: &Coordinator, stream: TcpStream) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    crate::log_debug!("client connected: {peer:?}");
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = dispatch(coordinator, &line);
+        writer.write_all(response.dump().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Parse and execute one request line (exposed for tests).
+pub fn dispatch(coordinator: &Coordinator, line: &str) -> Json {
+    match dispatch_inner(coordinator, line) {
+        Ok(j) => j,
+        Err(e) => Json::obj(vec![("error", Json::str(&format!("{e:#}")))]),
+    }
+}
+
+fn dispatch_inner(coordinator: &Coordinator, line: &str) -> Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let op = req.get("op").and_then(|v| v.as_str()).context("missing 'op'")?;
+    match op {
+        "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+        "stats" => {
+            let s = coordinator.metrics.snapshot();
+            Ok(Json::obj(vec![
+                ("requests", Json::num(s.requests as f64)),
+                ("tokens_out", Json::num(s.tokens_out as f64)),
+                ("errors", Json::num(s.errors as f64)),
+                ("latency_p50_ms", Json::num(s.latency_p50 * 1e3)),
+                ("latency_p99_ms", Json::num(s.latency_p99 * 1e3)),
+                ("tokens_per_sec", Json::num(s.tokens_per_sec)),
+                ("queue_depth", Json::num(coordinator.queue_depth() as f64)),
+            ]))
+        }
+        "generate" => {
+            let prompt = req.get("prompt").and_then(|v| v.as_str()).context("missing 'prompt'")?;
+            let max_new = req.get("max_new").and_then(|v| v.as_usize()).unwrap_or(16);
+            let mode = req
+                .get("mode")
+                .and_then(|v| v.as_str())
+                .map(|s| AttnMode::parse(s).context("bad mode"))
+                .transpose()?
+                .unwrap_or(AttnMode::Sparge);
+            let resp = coordinator.generate(prompt.as_bytes().to_vec(), max_new, mode)?;
+            Ok(Json::obj(vec![
+                ("id", Json::num(resp.id as f64)),
+                ("output", Json::str(&String::from_utf8_lossy(&resp.output))),
+                ("latency_ms", Json::num(resp.latency * 1e3)),
+                ("compute_ms", Json::num(resp.compute * 1e3)),
+                ("mode", Json::str(resp.mode.name())),
+            ]))
+        }
+        other => anyhow::bail!("unknown op '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bad_json_reports_error() {
+        // dispatch without a coordinator is impossible; parse errors are
+        // caught before the coordinator is touched, so a dangling ref works
+        // via a never-called closure. Instead test the JSON layer directly:
+        let parsed = Json::parse("not json");
+        assert!(parsed.is_err());
+    }
+}

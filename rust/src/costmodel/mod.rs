@@ -1,0 +1,97 @@
+//! Cost model: operation counting and the paper's TOPS speed metric.
+//!
+//! The paper defines `TOPS = O(attn) / t` where `O(attn)` is the op count
+//! of a *standard* attention on the same inputs and `t` the measured
+//! latency including mask prediction (§4.1) — so sparse methods earn
+//! higher TOPS only by genuinely finishing sooner. We report two views:
+//!
+//! - **measured TOPS** from Rust wall-clock (CPU; absolute values are far
+//!   below GPU numbers, comparisons across methods are meaningful);
+//! - **GPU-translated TOPS**: measured skip ratios + prediction overhead
+//!   folded into the paper's full-attention baseline speed, isolating the
+//!   algorithmic effect from the substrate (used for Table 1's shape).
+
+use crate::attention::types::SkipStats;
+
+/// Op count of one standard (dense) attention head: QKᵀ + P̃V, 2 FLOPs per
+/// MAC.
+pub fn attention_ops(n_q: usize, n_k: usize, d: usize, causal: bool) -> f64 {
+    let pairs = if causal {
+        // lower-triangle token pairs (incl. diagonal)
+        (n_q.min(n_k) as f64 * (n_q.min(n_k) as f64 + 1.0)) / 2.0
+            + (n_q.saturating_sub(n_k) as f64) * n_k as f64
+    } else {
+        n_q as f64 * n_k as f64
+    };
+    // QK^T: pairs*d MACs; PV: pairs*d MACs; 2 FLOPs per MAC
+    2.0 * 2.0 * pairs * d as f64
+}
+
+/// TOPS (tera-ops/sec) given op count and seconds.
+pub fn tops(ops: f64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    ops / seconds / 1e12
+}
+
+/// The paper's reference full-attention speed on its testbed (RTX4090,
+/// Table 1: 156.9–166 TOPS). Used by the GPU-translated view.
+pub const PAPER_FULL_ATTENTION_TOPS: f64 = 160.0;
+
+/// Fraction of dense attention time a sparse run would take on the paper's
+/// GPU: compute scales with (1 − sparsity), plus prediction overhead as a
+/// fraction of dense time (Table 3 shape).
+pub fn gpu_translated_time_fraction(stats: &SkipStats, predict_overhead: f64) -> f64 {
+    (1.0 - stats.sparsity()) + predict_overhead
+}
+
+/// GPU-translated TOPS for a sparse method (see module docs).
+pub fn gpu_translated_tops(stats: &SkipStats, predict_overhead: f64) -> f64 {
+    PAPER_FULL_ATTENTION_TOPS / gpu_translated_time_fraction(stats, predict_overhead)
+}
+
+/// Roofline-style estimate of L1 (Pallas/TPU) block residency: bytes of
+/// VMEM needed per grid step for the kernel's BlockSpec (DESIGN.md §8).
+pub fn vmem_bytes(bq: usize, bk: usize, d: usize, bytes_per_el: usize) -> usize {
+    // Q tile + one K block + one V block + P̃ scratch + O accumulator
+    (bq * d + 2 * (bk * d) + bq * bk + bq * d) * bytes_per_el
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_ops_formula() {
+        // n=nk=2, d=1: 4 pairs * 2 matmuls * 2 flops = 16
+        assert_eq!(attention_ops(2, 2, 1, false), 16.0);
+        // causal 2x2: 3 pairs
+        assert_eq!(attention_ops(2, 2, 1, true), 12.0);
+    }
+
+    #[test]
+    fn tops_basic() {
+        assert!((tops(2e12, 1.0) - 2.0).abs() < 1e-12);
+        assert_eq!(tops(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn translated_speed_increases_with_sparsity() {
+        let dense = SkipStats { qk_total: 100, pv_total: 100, ..Default::default() };
+        let mut sparse = dense;
+        sparse.qk_skipped = 50;
+        sparse.pv_skipped = 50;
+        let t_dense = gpu_translated_tops(&dense, 0.0);
+        let t_sparse = gpu_translated_tops(&sparse, 0.01);
+        assert!((t_dense - PAPER_FULL_ATTENTION_TOPS).abs() < 1e-9);
+        assert!(t_sparse > t_dense * 1.8, "sparse {t_sparse} dense {t_dense}");
+    }
+
+    #[test]
+    fn vmem_fits_budget_for_paper_blocks() {
+        // paper blocks (128, 64) at d=128, bf16: must be far below 16 MiB
+        let bytes = vmem_bytes(128, 64, 128, 2);
+        assert!(bytes < 16 * 1024 * 1024 / 8, "VMEM {bytes}");
+    }
+}

@@ -1,0 +1,171 @@
+//! Experiment harness shared by `rust/benches/*`: one entry point per
+//! attention *method* (ours + baselines), executed through the identical
+//! sparse kernel so mask policy is the only variable, with TOPS
+//! accounting per the paper's §4.1 definition.
+
+use crate::attention::flash::attention_flash_stats;
+use crate::attention::types::{AttnConfig, BlockMask, SkipStats};
+use crate::baselines;
+use crate::costmodel;
+use crate::sparge::kernel::{sparse_flash, SpargeParams};
+use crate::sparge::predict::{predict, PredictParams};
+use crate::tensor::Tensor;
+use crate::util::timer::time_once;
+use crate::workloads::QkvSample;
+
+/// An attention method under test.
+#[derive(Clone, Debug)]
+pub enum Method {
+    /// Dense FlashAttention (the paper's Full-Attention row).
+    Full,
+    /// SpargeAttn with the given params (quant=true ⇒ Sage-integrated).
+    Sparge(SpargeParams),
+    /// Block-sparse MInference with a keep-budget ∈ (0,1].
+    Minference { budget: f64 },
+    /// FlexPrefill with cumulative threshold γ.
+    FlexPrefill { gamma: f64 },
+    /// StreamingLLM-style sink+window pattern.
+    SlidingWindow { sinks: usize, window: usize },
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Full => "Full-Attention".into(),
+            Method::Sparge(p) if p.quant => "SpargeAttn".into(),
+            Method::Sparge(_) => "SpargeAttn+FA2".into(),
+            Method::Minference { budget } => format!("MInference ({:.1})", 1.0 - budget),
+            Method::FlexPrefill { gamma } => format!("FlexPrefill (g={gamma})"),
+            Method::SlidingWindow { .. } => "StreamingLLM".into(),
+        }
+    }
+}
+
+/// Result of one method run on one head.
+#[derive(Clone, Debug)]
+pub struct MethodRun {
+    pub out: Tensor,
+    pub stats: SkipStats,
+    /// Total seconds (mask construction + sparse attention).
+    pub seconds: f64,
+    /// Seconds spent constructing the mask (prediction overhead).
+    pub predict_seconds: f64,
+}
+
+impl MethodRun {
+    /// Measured TOPS per the paper: ops of a *standard* attention divided
+    /// by total latency including prediction.
+    pub fn tops(&self, n_q: usize, n_k: usize, d: usize, causal: bool) -> f64 {
+        costmodel::tops(costmodel::attention_ops(n_q, n_k, d, causal), self.seconds)
+    }
+
+    /// GPU-translated TOPS (see `costmodel`).
+    pub fn gpu_tops(&self, dense_seconds: f64) -> f64 {
+        let overhead = if dense_seconds > 0.0 { self.predict_seconds / dense_seconds } else { 0.0 };
+        costmodel::gpu_translated_tops(&self.stats, overhead)
+    }
+}
+
+/// Run a method on a single head.
+pub fn run_method(s: &QkvSample, cfg: &AttnConfig, method: &Method) -> MethodRun {
+    match method {
+        Method::Full => {
+            let ((out, stats), secs) = time_once(|| attention_flash_stats(&s.q, &s.k, &s.v, cfg));
+            MethodRun { out, stats, seconds: secs, predict_seconds: 0.0 }
+        }
+        Method::Sparge(params) => {
+            let (pred, t_pred) = time_once(|| predict(&s.q, &s.k, cfg, &params.predict_params()));
+            let ((out, stats), t_attn) = time_once(|| sparse_flash(&s.q, &s.k, &s.v, &pred.mask, cfg, params));
+            MethodRun { out, stats, seconds: t_pred + t_attn, predict_seconds: t_pred }
+        }
+        Method::Minference { budget } => {
+            let (mask, t_pred) = time_once(|| baselines::minference_mask(&s.q, &s.k, cfg, *budget));
+            run_with_mask(s, cfg, mask, t_pred)
+        }
+        Method::FlexPrefill { gamma } => {
+            let (mask, t_pred) = time_once(|| baselines::flexprefill_mask(&s.q, &s.k, cfg, *gamma));
+            run_with_mask(s, cfg, mask, t_pred)
+        }
+        Method::SlidingWindow { sinks, window } => {
+            let (mask, t_pred) =
+                time_once(|| baselines::sliding_window_mask(s.q.dim(0), s.k.dim(0), cfg, *sinks, *window));
+            run_with_mask(s, cfg, mask, t_pred)
+        }
+    }
+}
+
+fn run_with_mask(s: &QkvSample, cfg: &AttnConfig, mask: BlockMask, t_pred: f64) -> MethodRun {
+    // baselines run through the identical kernel, no λ stage, no quant
+    let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false };
+    let ((out, stats), t_attn) = time_once(|| sparse_flash(&s.q, &s.k, &s.v, &mask, cfg, &params));
+    MethodRun { out, stats, seconds: t_pred + t_attn, predict_seconds: t_pred }
+}
+
+/// "Without self-similarity judge" ablation (Table 5/10): θ = −1 treats
+/// every block as selective.
+pub fn predict_without_judge(q: &Tensor, k: &Tensor, cfg: &AttnConfig, tau: f32) -> BlockMask {
+    predict(q, k, cfg, &PredictParams { tau, theta: -1.0 }).mask
+}
+
+/// Standard env knob: full-scale benches (paper sequence lengths) are
+/// opt-in because CPU dense attention at 128K takes minutes per point.
+pub fn full_scale() -> bool {
+    std::env::var("SPARGE_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Repetitions for timing loops in benches.
+pub fn bench_reps() -> usize {
+    std::env::var("SPARGE_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+    use crate::workloads::{synthetic, SyntheticSpec};
+
+    fn sample() -> QkvSample {
+        let mut rng = Pcg::seeded(1);
+        synthetic::generate(&SyntheticSpec::lm_like(512, 32), &mut rng)
+    }
+
+    #[test]
+    fn all_methods_run_and_report() {
+        let s = sample();
+        let cfg = AttnConfig { bq: 64, bk: 32, causal: false, scale: None, cw: 2 };
+        let methods = [
+            Method::Full,
+            Method::Sparge(SpargeParams::default()),
+            Method::Minference { budget: 0.5 },
+            Method::FlexPrefill { gamma: 0.95 },
+            Method::SlidingWindow { sinks: 1, window: 4 },
+        ];
+        let dense = run_method(&s, &cfg, &Method::Full);
+        for m in &methods {
+            let r = run_method(&s, &cfg, m);
+            assert_eq!(r.out.shape(), s.v.shape(), "{}", m.label());
+            assert!(r.seconds > 0.0);
+            assert!(r.tops(512, 512, 32, false) > 0.0);
+            assert!(r.gpu_tops(dense.seconds) > 0.0);
+            if matches!(m, Method::Full) {
+                assert_eq!(r.stats.sparsity(), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_match_paper_convention() {
+        assert_eq!(Method::Minference { budget: 0.5 }.label(), "MInference (0.5)");
+        assert_eq!(Method::Full.label(), "Full-Attention");
+        assert!(Method::Sparge(SpargeParams { quant: true, ..Default::default() }).label() == "SpargeAttn");
+    }
+
+    #[test]
+    fn without_judge_masks_are_sparser_or_equal() {
+        let s = sample();
+        let cfg = AttnConfig { bq: 64, bk: 32, causal: false, scale: None, cw: 2 };
+        let with = predict(&s.q, &s.k, &cfg, &PredictParams { tau: 0.9, theta: 0.5 }).mask;
+        let without = predict_without_judge(&s.q, &s.k, &cfg, 0.9);
+        assert!(without.sparsity() >= with.sparsity() - 1e-12);
+    }
+}

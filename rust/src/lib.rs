@@ -1,0 +1,29 @@
+//! # SpargeAttn — training-free sparse + quantized attention (reproduction)
+//!
+//! Rust + JAX + Pallas three-layer reproduction of *SpargeAttention:
+//! Accurate and Training-free Sparse Attention Accelerating Any Model
+//! Inference* (Zhang et al., ICML 2025).
+//!
+//! Layers:
+//! - **L1** (`python/compile/kernels/`): Pallas sparse-attention kernel,
+//!   interpret-mode, validated against a pure-jnp oracle.
+//! - **L2** (`python/compile/model.py`): JAX transformer (text LM + DiT
+//!   proxy) whose attention dispatches to the kernel; AOT-lowered to HLO
+//!   text artifacts by `python/compile/aot.py`.
+//! - **L3** (this crate): the serving coordinator, the block-sparse
+//!   attention engine with *real* skipping (wall-clock measurements), the
+//!   mask-prediction pipeline, baselines, workloads, tuner, cost model, and
+//!   the PJRT runtime that loads and executes the artifacts. Python never
+//!   runs on the request path.
+
+pub mod attention;
+pub mod baselines;
+pub mod coordinator;
+pub mod costmodel;
+pub mod experiments;
+pub mod models;
+pub mod runtime;
+pub mod sparge;
+pub mod tensor;
+pub mod util;
+pub mod workloads;

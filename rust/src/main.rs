@@ -1,0 +1,289 @@
+//! `sparge` — CLI for the SpargeAttn reproduction.
+//!
+//! Subcommands:
+//!   serve       start the TCP serving coordinator over the artifacts
+//!   train       train the tiny byte-LM through the lm_train_step artifact
+//!   generate    one-shot generation through the engine (dense|sparge)
+//!   tune        per-layer (τ, θ, λ) grid search on a workload
+//!   analyze     pattern/sparsity dumps (Fig. 2 / Fig. 4 / golden orders)
+//!   selfcheck   end-to-end smoke: artifacts load, kernels agree
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use sparge::attention::types::AttnConfig;
+use sparge::coordinator::{AttnMode, BatchPolicy, Coordinator, EngineHandle};
+use sparge::runtime::{Manifest, Runtime, Value};
+use sparge::sparge::{sparge_attention, SpargeParams};
+use sparge::util::cli::Args;
+use sparge::util::rng::Pcg;
+use sparge::util::table::{fnum, pct, Table};
+use sparge::workloads::{self, text};
+use sparge::{log_info, tensor::Tensor};
+
+fn main() {
+    let args = Args::from_env();
+    if args.flag("debug") {
+        sparge::util::log::set_level(sparge::util::log::Level::Debug);
+    }
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "serve" => cmd_serve(&args),
+        "train" => cmd_train(&args),
+        "generate" => cmd_generate(&args),
+        "tune" => cmd_tune(&args),
+        "analyze" => cmd_analyze(&args),
+        "selfcheck" => cmd_selfcheck(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "sparge — SpargeAttn (ICML 2025) reproduction\n\n\
+         USAGE: sparge <command> [--options]\n\n\
+         COMMANDS:\n  \
+         serve      --addr 127.0.0.1:7071 --artifacts artifacts [--weights w.spg]\n  \
+         train      --steps 200 --out artifacts/lm_trained.spg [--log-every 10]\n  \
+         generate   --prompt 'text' --max-new 32 --mode sparge [--weights w.spg]\n  \
+         tune       --model Mochi-proxy --scale 8 [--out tuned.json]\n  \
+         analyze    --patterns | --qk | --hilbert-golden\n  \
+         selfcheck  [--artifacts artifacts]\n"
+    );
+}
+
+fn artifact_dir(args: &Args) -> PathBuf {
+    args.get("artifacts").map(PathBuf::from).unwrap_or_else(Manifest::default_dir)
+}
+
+fn engine_with_weights(args: &Args) -> Result<EngineHandle> {
+    let engine = EngineHandle::spawn(&artifact_dir(args))?;
+    if let Some(w) = args.get("weights") {
+        let t = workloads::trace::load(std::path::Path::new(w))?;
+        let params = t.into_iter().next().context("weights file empty")?.into_vec();
+        engine.load_params(params)?;
+        log_info!("loaded weights from {w}");
+    }
+    Ok(engine)
+}
+
+// ----------------------------------------------------------------------
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7071");
+    let engine = engine_with_weights(args)?;
+    let coordinator = Arc::new(Coordinator::start(
+        engine,
+        BatchPolicy {
+            max_batch: args.get_usize("max-batch", 8),
+            max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms", 20) as u64),
+            capacity: args.get_usize("capacity", 1024),
+        },
+    ));
+    sparge::coordinator::server::serve(coordinator, addr)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    use sparge::coordinator::engine::{TRAIN_B, TRAIN_T};
+    let steps = args.get_usize("steps", 200);
+    let log_every = args.get_usize("log-every", 10);
+    let out = args.get_or("out", "artifacts/lm_trained.spg").to_string();
+    let engine = engine_with_weights(args)?;
+
+    let mut rng = Pcg::seeded(args.get_usize("seed", 42) as u64);
+    let corpus = text::corpus_with_kv(1 << 20, &mut rng);
+    log_info!("training byte-LM: {steps} steps of {TRAIN_B}x{TRAIN_T}");
+    let t0 = std::time::Instant::now();
+    let mut losses = Vec::new();
+    for step in 0..steps {
+        let mut batch = Vec::with_capacity(TRAIN_B * TRAIN_T);
+        for _ in 0..TRAIN_B {
+            let start = rng.range(0, corpus.len() - TRAIN_T - 1);
+            batch.extend(corpus[start..start + TRAIN_T].iter().map(|&b| b as i32));
+        }
+        let loss = engine.train_step(batch)?;
+        losses.push(loss);
+        if step % log_every == 0 || step + 1 == steps {
+            println!("step {step:4}  loss {loss:.4}  ppl {:.2}  ({:.1}s)", loss.exp(), t0.elapsed().as_secs_f64());
+        }
+    }
+    let params = engine.get_params()?;
+    workloads::trace::save(std::path::Path::new(&out), &[Tensor::from_vec(&[params.len()], params)])?;
+    println!("saved weights to {out}");
+    println!("loss: {:.4} -> {:.4}", losses[0], losses[losses.len() - 1]);
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let prompt = args.get_or("prompt", "the attention is ");
+    let max_new = args.get_usize("max-new", 32);
+    let mode = AttnMode::parse(args.get_or("mode", "sparge")).context("bad --mode")?;
+    let engine = engine_with_weights(args)?;
+    let t0 = std::time::Instant::now();
+    let out = engine.generate(prompt.as_bytes(), max_new, mode)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}{}", prompt, String::from_utf8_lossy(&out));
+    println!("[{} tokens in {:.2}s, {:.1} tok/s, mode={}]", out.len(), dt, out.len() as f64 / dt, mode.name());
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    use sparge::models::{suite, Workload};
+    use sparge::sparge::tune::{tune_layer, CalibSample, TuneOptions};
+
+    let scale = args.get_usize("scale", 8);
+    let model_name = args.get_or("model", "Mochi-proxy");
+    let cards = suite(scale);
+    let card = cards.iter().find(|c| c.name == model_name).with_context(|| {
+        format!("unknown model '{model_name}'; have: {:?}", cards.iter().map(|c| c.name).collect::<Vec<_>>())
+    })?;
+
+    let cfg = card.attn_config();
+    let mut samples = Vec::new();
+    for i in 0..args.get_usize("samples", 3) {
+        let mut rng = Pcg::new(7, i as u64 + 1);
+        let s = match card.workload {
+            Workload::Lm(spec) => workloads::synthetic::generate(&spec, &mut rng),
+            Workload::Grid(spec) => workloads::video::generate_grid(&spec, &mut rng),
+        };
+        samples.push(CalibSample { q: s.q, k: s.k, v: s.v });
+    }
+    let opts = TuneOptions { l1: card.l1, l2: card.l2, ..Default::default() };
+    log_info!("tuning {model_name} (N={}, l1={}, l2={})", card.seq_len(), card.l1, card.l2);
+    let res = tune_layer(&samples, &cfg, &opts);
+    println!(
+        "tuned {model_name}: tau={} theta={} lambda={:?}  sparsity={} L1={:.4} ({} grid points)",
+        res.params.tau,
+        res.params.theta,
+        res.params.lambda,
+        pct(res.sparsity),
+        res.l1_error,
+        res.evaluated
+    );
+    if let Some(out) = args.get("out") {
+        let cfg_out = sparge::sparge::ModelSpargeConfig::uniform(model_name, card.layers, res.params, card.l1, card.l2);
+        cfg_out.save(std::path::Path::new(out))?;
+        println!("saved config to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    if args.flag("hilbert-golden") {
+        let order = sparge::sparge::hilbert::token_order(sparge::sparge::hilbert::Permutation::HilbertCurve, 2, 4, 4, 0);
+        println!("{order:?}");
+        return Ok(());
+    }
+    if args.flag("patterns") {
+        return analyze_patterns(args);
+    }
+    if args.flag("qk") {
+        return analyze_qk(args);
+    }
+    bail!("analyze needs one of --patterns | --qk | --hilbert-golden");
+}
+
+/// Fig. 2 reproduction: compressed attention-map patterns per proxy model.
+fn analyze_patterns(args: &Args) -> Result<()> {
+    use sparge::models::{suite, Workload};
+    use sparge::sparge::predict::{predict, PredictParams};
+
+    let scale = args.get_usize("scale", 16);
+    for card in suite(scale) {
+        let mut rng = Pcg::seeded(1);
+        let s = match card.workload {
+            Workload::Lm(spec) => workloads::synthetic::generate(&spec, &mut rng),
+            Workload::Grid(spec) => workloads::video::generate_grid(&spec, &mut rng),
+        };
+        let cfg = card.attn_config();
+        let pred = predict(&s.q, &s.k, &cfg, &PredictParams::default());
+        println!("\n== {} (N={}) — compressed P-hat, '#'=high '.'=low ==", card.name, card.seq_len());
+        let (tm, tn) = (pred.p_hat.dim(0), pred.p_hat.dim(1));
+        let show = 32.min(tm);
+        for i in 0..show {
+            let row: String = (0..tn.min(64))
+                .map(|j| {
+                    let v = pred.p_hat.at2(i, j);
+                    if v > 0.1 { '#' } else if v > 0.01 { '+' } else if v > 0.001 { ':' } else { '.' }
+                })
+                .collect();
+            println!("{row}");
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 4 reproduction: Q/K block self-similarity per proxy model.
+fn analyze_qk(args: &Args) -> Result<()> {
+    use sparge::models::{suite, Workload};
+    use sparge::sparge::metrics::avg_block_similarity;
+
+    let scale = args.get_usize("scale", 16);
+    let mut table = Table::new("Fig. 4 — average block self-similarity", &["model", "N", "Sim-q", "Sim-k"]);
+    for card in suite(scale) {
+        let mut rng = Pcg::seeded(1);
+        let s = match card.workload {
+            Workload::Lm(spec) => workloads::synthetic::generate(&spec, &mut rng),
+            Workload::Grid(spec) => workloads::video::generate_grid(&spec, &mut rng),
+        };
+        let cfg = card.attn_config();
+        table.row(&[
+            card.name.to_string(),
+            card.seq_len().to_string(),
+            fnum(avg_block_similarity(&s.q, cfg.bq), 3),
+            fnum(avg_block_similarity(&s.k, cfg.bk), 3),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    // 1. Rust engine invariant
+    let mut rng = Pcg::seeded(3);
+    let n = 256;
+    let q = Tensor::randn(&[n, 64], &mut rng);
+    let k = Tensor::randn(&[n, 64], &mut rng);
+    let v = Tensor::randn(&[n, 64], &mut rng);
+    let cfg = AttnConfig { bq: 64, bk: 64, causal: false, scale: None, cw: 4 };
+    let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false };
+    let res = sparge_attention(&q, &k, &v, &cfg, &params);
+    let dense = sparge::attention::attention_flash(&q, &k, &v, &cfg);
+    let err = sparge::sparge::metrics::rel_l1(&res.out, &dense);
+    anyhow::ensure!(err < 1e-5, "engine selfcheck: rel-L1 {err}");
+    println!("[1/3] rust engine: sparge(tau=1) == dense  (rel-L1 {err:.2e})");
+
+    // 2. runtime loads + runs an artifact, matches the Rust engine
+    let rt = Runtime::new(&artifact_dir(args))?;
+    let name = "attn_dense_1024";
+    let mut rng = Pcg::seeded(4);
+    let (nq, d) = (1024, 64);
+    let q = Tensor::randn(&[nq, d], &mut rng);
+    let k = Tensor::randn(&[nq, d], &mut rng);
+    let v = Tensor::randn(&[nq, d], &mut rng);
+    let out = rt.run(name, &[Value::from_tensor(&q), Value::from_tensor(&k), Value::from_tensor(&v)])?;
+    let hlo_out = out[0].to_tensor()?;
+    let rust_out = sparge::attention::attention_naive(&q, &k, &v, &AttnConfig::default());
+    let err = sparge::sparge::metrics::rel_l1(&hlo_out, &rust_out);
+    anyhow::ensure!(err < 1e-4, "artifact-vs-engine rel-L1 {err}");
+    println!("[2/3] runtime: {name} matches rust engine (rel-L1 {err:.2e})");
+
+    // 3. sparge artifact runs and reports plausible density
+    let out = rt.run("attn_sparge_1024", &[Value::from_tensor(&q), Value::from_tensor(&k), Value::from_tensor(&v)])?;
+    let density = out[1].scalar()?;
+    let err = sparge::sparge::metrics::rel_l1(&out[0].to_tensor()?, &rust_out);
+    anyhow::ensure!((0.0..=1.0).contains(&density), "bad density {density}");
+    anyhow::ensure!(err < 0.15, "sparge artifact rel-L1 {err}");
+    println!("[3/3] runtime: attn_sparge_1024 ok (mask density {density:.2}, rel-L1 {err:.3})");
+    println!("selfcheck OK");
+    Ok(())
+}

@@ -1,0 +1,158 @@
+//! Model cards: the proxy-model suite standing in for the paper's
+//! evaluation models (DESIGN.md §3 substitution table), with per-model
+//! attention geometry, workload spec, and the paper's tuning bounds
+//! (l1, l2 from §4.1 Implementation).
+
+use crate::attention::types::AttnConfig;
+use crate::workloads::{SyntheticSpec, VideoSpec};
+
+/// Task family of a model card.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Text,
+    Video,
+    Image,
+}
+
+/// Workload description attached to a card.
+#[derive(Clone, Copy, Debug)]
+pub enum Workload {
+    /// LM-style correlated tokens of the given sequence length.
+    Lm(SyntheticSpec),
+    /// Spatially-correlated latent grid.
+    Grid(VideoSpec),
+}
+
+/// A proxy-model card.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelCard {
+    /// Paper model this proxies.
+    pub name: &'static str,
+    pub task: Task,
+    pub heads: usize,
+    pub layers: usize,
+    pub workload: Workload,
+    /// Tuning error bounds (paper §4.1).
+    pub l1: f64,
+    pub l2: f64,
+}
+
+impl ModelCard {
+    pub fn attn_config(&self) -> AttnConfig {
+        AttnConfig {
+            bq: 128,
+            bk: 64,
+            causal: matches!(self.task, Task::Text),
+            scale: None,
+            cw: 4,
+        }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        match self.workload {
+            Workload::Lm(s) => s.n,
+            Workload::Grid(g) => g.tokens(),
+        }
+    }
+}
+
+/// The Table-1 suite. `scale` divides sequence lengths to keep CPU runs
+/// tractable (1 = paper scale).
+pub fn suite(scale: usize) -> Vec<ModelCard> {
+    let scale = scale.max(1);
+    vec![
+        ModelCard {
+            name: "Llama3.1-proxy",
+            task: Task::Text,
+            heads: 4,
+            layers: 4,
+            workload: Workload::Lm(SyntheticSpec::lm_like(131_072 / scale, 64)),
+            l1: 0.08,
+            l2: 0.09,
+        },
+        ModelCard {
+            name: "CogvideoX-proxy",
+            task: Task::Video,
+            heads: 4,
+            layers: 4,
+            workload: Workload::Grid(VideoSpec::cogvideo_proxy(scale)),
+            l1: 0.05,
+            l2: 0.06,
+        },
+        ModelCard {
+            name: "Mochi-proxy",
+            task: Task::Video,
+            heads: 4,
+            layers: 4,
+            workload: Workload::Grid(VideoSpec::mochi_proxy(scale)),
+            l1: 0.05,
+            l2: 0.06,
+        },
+        ModelCard {
+            name: "OpenSoraPlan-proxy",
+            task: Task::Video,
+            heads: 4,
+            layers: 4,
+            workload: Workload::Grid(VideoSpec { t: (38 / scale.max(1)).max(1), h: 32, w: 31, d: 64, smooth: 0.96, signal: 11.0 }),
+            l1: 0.03,
+            l2: 0.035,
+        },
+        ModelCard {
+            name: "Flux-proxy",
+            task: Task::Image,
+            heads: 4,
+            layers: 4,
+            workload: Workload::Grid(VideoSpec::image_proxy()),
+            l1: 0.07,
+            l2: 0.08,
+        },
+        ModelCard {
+            name: "SD3.5-proxy",
+            task: Task::Image,
+            heads: 4,
+            layers: 4,
+            workload: Workload::Grid(VideoSpec { t: 1, h: 67, w: 67, d: 64, smooth: 0.93, signal: 9.0 }),
+            l1: 0.07,
+            l2: 0.08,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_covers_all_tasks() {
+        let s = suite(8);
+        assert_eq!(s.len(), 6);
+        assert!(s.iter().any(|c| c.task == Task::Text));
+        assert!(s.iter().any(|c| c.task == Task::Video));
+        assert!(s.iter().any(|c| c.task == Task::Image));
+    }
+
+    #[test]
+    fn text_models_are_causal() {
+        for c in suite(8) {
+            assert_eq!(c.attn_config().causal, c.task == Task::Text, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn scale_reduces_seq_len() {
+        let full = suite(1);
+        let small = suite(8);
+        for (f, s) in full.iter().zip(&small) {
+            assert!(s.seq_len() <= f.seq_len(), "{}", f.name);
+        }
+    }
+
+    #[test]
+    fn paper_bounds_match_section_4_1() {
+        let s = suite(1);
+        let llama = s.iter().find(|c| c.name.contains("Llama")).unwrap();
+        assert_eq!((llama.l1, llama.l2), (0.08, 0.09));
+        let osp = s.iter().find(|c| c.name.contains("OpenSora")).unwrap();
+        assert_eq!((osp.l1, osp.l2), (0.03, 0.035));
+    }
+}

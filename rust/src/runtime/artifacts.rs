@@ -1,0 +1,191 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. `manifest.json` describes every exported HLO module —
+//! path, input/output shapes+dtypes, and build-time metadata (baked
+//! hyper-parameters, model geometry).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Dtype of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<IoSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .context("iospec: shape")?
+            .iter()
+            .map(|d| d.as_usize().context("iospec: dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(j.get("dtype").and_then(|v| v.as_str()).context("iospec: dtype")?)?;
+        Ok(IoSpec { shape, dtype })
+    }
+}
+
+/// One exported HLO module.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl Artifact {
+    /// Metadata number (e.g. baked τ) if present.
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str())
+    }
+}
+
+/// The full artifact registry.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let version = j.get("version").and_then(|v| v.as_usize()).context("manifest: version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let arts = j.get("artifacts").context("manifest: artifacts")?;
+        let Json::Obj(pairs) = arts else { bail!("manifest: artifacts must be an object") };
+        let mut artifacts = BTreeMap::new();
+        for (name, aj) in pairs {
+            let rel = aj.get("path").and_then(|v| v.as_str()).context("artifact: path")?;
+            let inputs = aj
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .context("artifact: inputs")?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = aj
+                .get("outputs")
+                .and_then(|v| v.as_arr())
+                .context("artifact: outputs")?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let meta = aj.get("meta").and_then(|v| v.as_map()).unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                Artifact { name: name.clone(), path: dir.join(rel), inputs, outputs, meta },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Default location: `$SPARGE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SPARGE_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest ({} available)", self.artifacts.len()))
+    }
+
+    /// All artifacts whose meta `kind` matches.
+    pub fn by_kind(&self, kind: &str) -> Vec<&Artifact> {
+        self.artifacts.values().filter(|a| a.meta_str("kind") == Some(kind)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("sparge_manifest_test1");
+        write_manifest(
+            &dir,
+            r#"{"version":1,"artifacts":{"toy":{"path":"toy.hlo.txt",
+                "inputs":[{"shape":[4],"dtype":"f32"}],
+                "outputs":[{"shape":[4],"dtype":"f32"}],
+                "meta":{"kind":"toy","tau":0.95}}}}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("toy").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![4]);
+        assert_eq!(a.inputs[0].dtype, Dtype::F32);
+        assert_eq!(a.meta_f64("tau"), Some(0.95));
+        assert_eq!(m.by_kind("toy").len(), 1);
+        assert!(m.get("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let dir = std::env::temp_dir().join("sparge_manifest_test2");
+        write_manifest(&dir, r#"{"version":99,"artifacts":{}}"#);
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let dir = std::env::temp_dir().join("sparge_manifest_test3");
+        write_manifest(
+            &dir,
+            r#"{"version":1,"artifacts":{"x":{"path":"x","inputs":[{"shape":[1],"dtype":"f64"}],"outputs":[]}}}"#,
+        );
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn iospec_elements() {
+        let s = IoSpec { shape: vec![2, 3, 4], dtype: Dtype::F32 };
+        assert_eq!(s.elements(), 24);
+        let scalar = IoSpec { shape: vec![], dtype: Dtype::F32 };
+        assert_eq!(scalar.elements(), 1);
+    }
+}

@@ -1,0 +1,229 @@
+//! PJRT executor: compile HLO-text artifacts once, execute many times.
+//!
+//! Wraps the `xla` crate exactly like /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Executables hold raw PJRT pointers (not
+//! `Send`), so the coordinator owns a `Runtime` on a dedicated engine
+//! thread (see `crate::coordinator::engine`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::{Artifact, Dtype, Manifest};
+use crate::tensor::Tensor;
+
+/// A typed host value crossing the runtime boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Value {
+    pub fn scalar_f32(x: f32) -> Value {
+        Value::F32(vec![x], vec![])
+    }
+
+    pub fn from_tensor(t: &Tensor) -> Value {
+        Value::F32(t.data().to_vec(), t.shape().to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(_, s) | Value::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Value::F32(..) => Dtype::F32,
+            Value::I32(..) => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(d, _) => Ok(d),
+            _ => bail!("value is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32(d, _) => Ok(d),
+            _ => bail!("value is not i32"),
+        }
+    }
+
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        let d = self.as_f32()?;
+        Ok(Tensor::from_vec(self.shape(), d.to_vec()))
+    }
+
+    /// First element as f64 (scalar outputs).
+    pub fn scalar(&self) -> Result<f64> {
+        match self {
+            Value::F32(d, _) => Ok(*d.first().context("empty value")? as f64),
+            Value::I32(d, _) => Ok(*d.first().context("empty value")? as f64),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32(data, shape) => {
+                if shape.is_empty() {
+                    xla::Literal::from(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            }
+            Value::I32(data, shape) => {
+                if shape.is_empty() {
+                    xla::Literal::from(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, dtype: Dtype, shape: &[usize]) -> Result<Value> {
+        Ok(match dtype {
+            Dtype::F32 => Value::F32(lit.to_vec::<f32>()?, shape.to_vec()),
+            Dtype::I32 => Value::I32(lit.to_vec::<i32>()?, shape.to_vec()),
+        })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executor {
+    pub artifact: Artifact,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    /// Execute with shape/dtype validation against the manifest.
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        if inputs.len() != self.artifact.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                self.artifact.name,
+                self.artifact.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (v, spec)) in inputs.iter().zip(&self.artifact.inputs).enumerate() {
+            if v.shape() != spec.shape.as_slice() || v.dtype() != spec.dtype {
+                bail!(
+                    "artifact '{}' input {i}: expected {:?} {:?}, got {:?} {:?}",
+                    self.artifact.name,
+                    spec.dtype,
+                    spec.shape,
+                    v.dtype(),
+                    v.shape()
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.artifact.outputs.len() {
+            bail!(
+                "artifact '{}': {} outputs in tuple, manifest says {}",
+                self.artifact.name,
+                parts.len(),
+                self.artifact.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.artifact.outputs)
+            .map(|(lit, spec)| Value::from_literal(lit, spec.dtype, &spec.shape))
+            .collect()
+    }
+}
+
+/// The PJRT runtime: one CPU client + a compile cache over the manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create from an artifact directory (must contain manifest.json).
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        crate::log_info!(
+            "PJRT client up: platform={} devices={} ({} artifacts)",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Create from the default artifact dir ($SPARGE_ARTIFACTS or ./artifacts).
+    pub fn from_default_dir() -> Result<Runtime> {
+        Self::new(&Manifest::default_dir())
+    }
+
+    /// Artifact directory in use.
+    pub fn dir(&self) -> &PathBuf {
+        &self.manifest.dir
+    }
+
+    /// Get (compiling and caching on first use) an executor for `name`.
+    pub fn executor(&self, name: &str) -> Result<Executor> {
+        let artifact = self.manifest.get(name)?.clone();
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(Executor { artifact, exe: Rc::clone(exe) });
+        }
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            artifact.path.to_str().context("artifact path not utf-8")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        crate::log_info!("compiled '{name}' in {:.2}s", t0.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(Executor { artifact, exe })
+    }
+
+    /// Run an artifact by name in one call.
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        self.executor(name)?.run(inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_accessors() {
+        let v = Value::F32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(v.shape(), &[2]);
+        assert_eq!(v.as_f32().unwrap(), &[1.0, 2.0]);
+        assert!(v.as_i32().is_err());
+        assert_eq!(v.scalar().unwrap(), 1.0);
+        let s = Value::scalar_f32(3.5);
+        assert!(s.shape().is_empty());
+        let t = Tensor::from_vec(&[1, 2], vec![5.0, 6.0]);
+        let vt = Value::from_tensor(&t);
+        assert_eq!(vt.to_tensor().unwrap(), t);
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_integration.rs (they
+    // need built artifacts); here we only check the host-side plumbing.
+}

@@ -1,0 +1,9 @@
+//! Runtime: load AOT HLO-text artifacts and execute them on the PJRT CPU
+//! client from the L3 hot path. Python never runs here — artifacts are
+//! produced once by `make artifacts` (python/compile/aot.py).
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{Artifact, IoSpec, Manifest};
+pub use executor::{Executor, Runtime, Value};

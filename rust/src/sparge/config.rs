@@ -1,0 +1,139 @@
+//! Per-layer hyper-parameter tables with JSON persistence.
+//!
+//! The paper tunes (τ, θ, λ) per attention layer (§3.6, §4.3 "setting
+//! different hyperparameters for each layer and head is necessary"). This
+//! module stores a model's full table and round-trips it through the
+//! repo's JSON substrate so the Rust coordinator can load tuned configs
+//! produced by `sparge tune`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::kernel::SpargeParams;
+
+/// Hyper-parameters for every attention layer of one model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpargeConfig {
+    pub model: String,
+    /// Error bounds used during tuning (provenance).
+    pub l1: f64,
+    pub l2: f64,
+    pub layers: Vec<SpargeParams>,
+}
+
+impl ModelSpargeConfig {
+    /// Uniform config (same params for all layers).
+    pub fn uniform(model: &str, n_layers: usize, params: SpargeParams, l1: f64, l2: f64) -> Self {
+        ModelSpargeConfig { model: model.to_string(), l1, l2, layers: vec![params; n_layers] }
+    }
+
+    /// Params for layer `i` (clamped to the last entry, so a shorter table
+    /// still covers deeper models).
+    pub fn layer(&self, i: usize) -> &SpargeParams {
+        &self.layers[i.min(self.layers.len() - 1)]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("l1", Json::num(self.l1)),
+            ("l2", Json::num(self.l2)),
+            (
+                "layers",
+                Json::arr(self.layers.iter().map(|p| {
+                    Json::obj(vec![
+                        ("tau", Json::num(p.tau as f64)),
+                        ("theta", Json::num(p.theta as f64)),
+                        ("lambda", p.lambda.map(|l| Json::num(l as f64)).unwrap_or(Json::Null)),
+                        ("quant", Json::Bool(p.quant)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let model = j.get("model").and_then(|v| v.as_str()).context("config: missing 'model'")?.to_string();
+        let l1 = j.get("l1").and_then(|v| v.as_f64()).context("config: missing 'l1'")?;
+        let l2 = j.get("l2").and_then(|v| v.as_f64()).context("config: missing 'l2'")?;
+        let layers_json = j.get("layers").and_then(|v| v.as_arr()).context("config: missing 'layers'")?;
+        if layers_json.is_empty() {
+            bail!("config: empty layers");
+        }
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for (i, lj) in layers_json.iter().enumerate() {
+            let tau = lj.get("tau").and_then(|v| v.as_f64()).with_context(|| format!("layer {i}: tau"))? as f32;
+            let theta = lj.get("theta").and_then(|v| v.as_f64()).with_context(|| format!("layer {i}: theta"))? as f32;
+            let lambda = match lj.get("lambda") {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(v.as_f64().with_context(|| format!("layer {i}: lambda"))? as f32),
+            };
+            let quant = lj.get("quant").and_then(|v| v.as_bool()).unwrap_or(false);
+            layers.push(SpargeParams { tau, theta, lambda, quant });
+        }
+        Ok(ModelSpargeConfig { model, l1, l2, layers })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().dump()).with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ModelSpargeConfig {
+        ModelSpargeConfig {
+            model: "llama-proxy".into(),
+            l1: 0.08,
+            l2: 0.09,
+            layers: vec![
+                SpargeParams { tau: 0.9, theta: 0.4, lambda: Some(-5.0), quant: true },
+                SpargeParams { tau: 0.8, theta: 0.2, lambda: None, quant: false },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = sample();
+        let j = cfg.to_json();
+        let back = ModelSpargeConfig::from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let cfg = sample();
+        let dir = std::env::temp_dir().join("sparge_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        cfg.save(&path).unwrap();
+        let back = ModelSpargeConfig::load(&path).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn layer_clamps_to_last() {
+        let cfg = sample();
+        assert_eq!(cfg.layer(0), &cfg.layers[0]);
+        assert_eq!(cfg.layer(99), &cfg.layers[1]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ModelSpargeConfig::from_json(&Json::parse("{}").unwrap()).is_err());
+        let missing_layers = r#"{"model":"m","l1":0.1,"l2":0.2,"layers":[]}"#;
+        assert!(ModelSpargeConfig::from_json(&Json::parse(missing_layers).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,313 @@
+//! Token permutations for visual models (paper §3.7, Table 8/9).
+//!
+//! Attention is permutation-invariant (modulo the inverse permutation on
+//! the output), so flattening T×H×W visual tokens along a locality-
+//! preserving curve raises block self-similarity and therefore sparsity.
+//! Implements the generalized Hilbert ("gilbert") curve for arbitrary
+//! cuboids plus the paper's ablation orders: row-major, column-major,
+//! time-major, random.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
+
+/// Permutation methods ablated in Table 8/9.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Permutation {
+    Random,
+    RowMajor,
+    ColumnMajor,
+    TimeMajor,
+    HilbertCurve,
+}
+
+impl Permutation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Permutation::Random => "Random",
+            Permutation::RowMajor => "Rowmajor",
+            Permutation::ColumnMajor => "Columnmajor",
+            Permutation::TimeMajor => "Timemajor",
+            Permutation::HilbertCurve => "HilbertCurve",
+        }
+    }
+
+    pub fn all() -> [Permutation; 5] {
+        [
+            Permutation::Random,
+            Permutation::RowMajor,
+            Permutation::ColumnMajor,
+            Permutation::TimeMajor,
+            Permutation::HilbertCurve,
+        ]
+    }
+}
+
+/// Token order for a T×H×W grid: `order[pos] = row-major linear index` of
+/// the token that lands at flattened position `pos`.
+pub fn token_order(perm: Permutation, t: usize, h: usize, w: usize, seed: u64) -> Vec<usize> {
+    let n = t * h * w;
+    let lin = |tt: usize, hh: usize, ww: usize| (tt * h + hh) * w + ww;
+    match perm {
+        Permutation::RowMajor => (0..n).collect(),
+        Permutation::ColumnMajor => {
+            let mut out = Vec::with_capacity(n);
+            for tt in 0..t {
+                for ww in 0..w {
+                    for hh in 0..h {
+                        out.push(lin(tt, hh, ww));
+                    }
+                }
+            }
+            out
+        }
+        Permutation::TimeMajor => {
+            let mut out = Vec::with_capacity(n);
+            for hh in 0..h {
+                for ww in 0..w {
+                    for tt in 0..t {
+                        out.push(lin(tt, hh, ww));
+                    }
+                }
+            }
+            out
+        }
+        Permutation::Random => {
+            let mut rng = Pcg::seeded(seed);
+            rng.permutation(n)
+        }
+        Permutation::HilbertCurve => gilbert3d(t, h, w).iter().map(|&(tt, hh, ww)| lin(tt, hh, ww)).collect(),
+    }
+}
+
+/// Hilbert-curve traversal of an arbitrary t×h×w cuboid.
+///
+/// Cells are assigned their Hilbert index inside the smallest enclosing
+/// power-of-two cube (computed with Skilling's axes→transpose transform)
+/// and visited in index order. On exact power-of-two cubes this *is* the
+/// Hilbert curve (every step adjacent); on ragged grids it is the standard
+/// restriction of the curve, which preserves the locality the paper's
+/// permutation needs (§3.7) while remaining a bijection by construction.
+pub fn gilbert3d(t: usize, h: usize, w: usize) -> Vec<(usize, usize, usize)> {
+    let maxdim = t.max(h).max(w).max(1);
+    let bits = (usize::BITS - (maxdim - 1).leading_zeros()).max(1);
+    let mut cells: Vec<(u128, (usize, usize, usize))> = Vec::with_capacity(t * h * w);
+    for tt in 0..t {
+        for hh in 0..h {
+            for ww in 0..w {
+                let idx = hilbert_index([tt as u32, hh as u32, ww as u32], bits);
+                cells.push((idx, (tt, hh, ww)));
+            }
+        }
+    }
+    cells.sort_by_key(|&(idx, _)| idx);
+    cells.into_iter().map(|(_, c)| c).collect()
+}
+
+/// Hilbert index of a 3-D point with `bits` bits per axis — Skilling's
+/// "AxestoTranspose" (J. Skilling, *Programming the Hilbert curve*, 2004)
+/// followed by bit interleaving of the transposed coordinates.
+pub fn hilbert_index(mut x: [u32; 3], bits: u32) -> u128 {
+    let n = 3usize;
+    let m = 1u32 << (bits - 1);
+
+    // Inverse undo excess work.
+    let mut q = m;
+    while q > 1 {
+        let p = q - 1;
+        for i in 0..n {
+            if x[i] & q != 0 {
+                x[0] ^= p; // invert low bits of x[0]
+            } else {
+                let tswap = (x[0] ^ x[i]) & p;
+                x[0] ^= tswap;
+                x[i] ^= tswap;
+            }
+        }
+        q >>= 1;
+    }
+    // Gray encode.
+    for i in 1..n {
+        x[i] ^= x[i - 1];
+    }
+    let mut tbit = 0u32;
+    q = m;
+    while q > 1 {
+        if x[n - 1] & q != 0 {
+            tbit ^= q - 1;
+        }
+        q >>= 1;
+    }
+    for xi in x.iter_mut() {
+        *xi ^= tbit;
+    }
+
+    // Interleave: bit b of axis i lands at position (bits-1-b)*3 + (n-1-i)
+    // reading x[0] as the most significant axis.
+    let mut out: u128 = 0;
+    for b in (0..bits).rev() {
+        for xi in x.iter() {
+            out = (out << 1) | ((xi >> b) & 1) as u128;
+        }
+    }
+    out
+}
+
+/// Apply a token order to an (N, d) tensor: `out[pos] = x[order[pos]]`.
+pub fn permute_rows(x: &Tensor, order: &[usize]) -> Tensor {
+    assert_eq!(x.ndim(), 2);
+    assert_eq!(x.dim(0), order.len());
+    let d = x.dim(1);
+    let mut out = Tensor::zeros(&[order.len(), d]);
+    for (pos, &src) in order.iter().enumerate() {
+        out.row_mut(pos).copy_from_slice(x.row(src));
+    }
+    out
+}
+
+/// Inverse of `order`: `inv[order[pos]] = pos`.
+pub fn invert_order(order: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; order.len()];
+    for (pos, &src) in order.iter().enumerate() {
+        inv[src] = pos;
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+
+    #[test]
+    fn gilbert_visits_every_cell_once() {
+        Cases::standard(801).check(|rng| {
+            let t = rng.range(1, 6);
+            let h = rng.range(1, 9);
+            let w = rng.range(1, 9);
+            let path = gilbert3d(t, h, w);
+            if path.len() != t * h * w {
+                return Err(format!("len {} != {}", path.len(), t * h * w));
+            }
+            let mut seen = vec![false; t * h * w];
+            for &(a, b, c) in &path {
+                if a >= t || b >= h || c >= w {
+                    return Err(format!("out of bounds ({a},{b},{c})"));
+                }
+                let i = (a * h + b) * w + c;
+                if seen[i] {
+                    return Err(format!("revisit ({a},{b},{c})"));
+                }
+                seen[i] = true;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hilbert_steps_are_adjacent_on_pow2_cubes() {
+        for &(t, h, w) in &[(2usize, 2usize, 2usize), (4, 4, 4), (8, 8, 8)] {
+            let path = gilbert3d(t, h, w);
+            assert_eq!(path.len(), t * h * w);
+            for win in path.windows(2) {
+                let (a, b) = (win[0], win[1]);
+                let dist = a.0.abs_diff(b.0) + a.1.abs_diff(b.1) + a.2.abs_diff(b.2);
+                assert_eq!(dist, 1, "non-adjacent step {a:?} -> {b:?} in {t}x{h}x{w}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_figure_grid_1x6x6_is_local() {
+        // Fig. 5's 1×6×6 example: ragged grids are the restriction of the
+        // enclosing cube's curve — steps stay short on average (vs ~4.0 for
+        // a random order on this grid).
+        let path = gilbert3d(1, 6, 6);
+        assert_eq!(path.len(), 36);
+        let total: usize = path
+            .windows(2)
+            .map(|w| w[0].0.abs_diff(w[1].0) + w[0].1.abs_diff(w[1].1) + w[0].2.abs_diff(w[1].2))
+            .sum();
+        let mean = total as f64 / 35.0;
+        assert!(mean < 1.5, "mean step distance {mean}");
+    }
+
+    #[test]
+    fn hilbert_index_is_bijective_on_cube() {
+        let bits = 3;
+        let mut seen = std::collections::BTreeSet::new();
+        for a in 0..8u32 {
+            for b in 0..8u32 {
+                for c in 0..8u32 {
+                    assert!(seen.insert(hilbert_index([a, b, c], bits)));
+                }
+            }
+        }
+        assert_eq!(seen.len(), 512);
+        assert_eq!(*seen.iter().next_back().unwrap(), 511);
+    }
+
+    #[test]
+    fn all_orders_are_bijections() {
+        Cases::standard(802).check(|rng| {
+            let t = rng.range(1, 5);
+            let h = rng.range(1, 7);
+            let w = rng.range(1, 7);
+            for perm in Permutation::all() {
+                let order = token_order(perm, t, h, w, 42);
+                let mut seen = vec![false; t * h * w];
+                for &i in &order {
+                    if seen[i] {
+                        return Err(format!("{}: duplicate {i}", perm.name()));
+                    }
+                    seen[i] = true;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn inverse_composes_to_identity() {
+        Cases::standard(803).check(|rng| {
+            let n = rng.range(1, 200);
+            let order = rng.permutation(n);
+            let inv = invert_order(&order);
+            for pos in 0..n {
+                if inv[order[pos]] != pos {
+                    return Err("inv(order) != id".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn permute_then_unpermute_restores_tensor() {
+        let mut rng = Pcg::seeded(17);
+        let x = Tensor::randn(&[24, 4], &mut rng);
+        let order = token_order(Permutation::HilbertCurve, 2, 3, 4, 0);
+        let y = permute_rows(&x, &order);
+        let back = permute_rows(&y, &invert_order(&order));
+        assert_eq!(x, back);
+    }
+
+    #[test]
+    fn row_major_is_identity_order() {
+        let order = token_order(Permutation::RowMajor, 2, 3, 4, 0);
+        assert_eq!(order, (0..24).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn time_major_groups_time_contiguously() {
+        let order = token_order(Permutation::TimeMajor, 3, 2, 2, 0);
+        // first 3 entries share (h,w)=(0,0) across t=0,1,2
+        assert_eq!(&order[..3], &[0, 4, 8]);
+    }
+
+    #[test]
+    fn column_major_groups_columns() {
+        let order = token_order(Permutation::ColumnMajor, 1, 3, 2, 0);
+        // w=0 column first: (0,0,0),(0,1,0),(0,2,0) => 0,2,4
+        assert_eq!(&order[..3], &[0, 2, 4]);
+    }
+}

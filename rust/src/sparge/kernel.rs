@@ -1,0 +1,455 @@
+//! The SpargeAttn sparse FlashAttention kernel (Alg. 1) — L3 engine with
+//! *real* block skipping, in both f32 and SageAttention-INT8 variants.
+//!
+//! Stage 1: blocks with `M_g[i,j] = 0` skip both `Q_iK_jᵀ` and `P̃_ijV_j`.
+//! Stage 2: inside visited blocks, a row group (warp, `c_w` groups per
+//! q-tile) skips its `P̃V` product when `max(m_local − m_ij) < λ`.
+
+use crate::attention::flash::{score_block, FlashTile};
+use crate::attention::types::{AttnConfig, BlockMask, SkipStats};
+use crate::tensor::quant::{self, QuantBlock};
+use crate::tensor::Tensor;
+
+use super::predict::{predict, PredictParams};
+
+/// Full SpargeAttn hyper-parameter set for one attention layer/head.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpargeParams {
+    /// TopCdf coverage τ ∈ (0,1).
+    pub tau: f32,
+    /// Self-similarity threshold θ ∈ (−1,1).
+    pub theta: f32,
+    /// Stage-2 online-softmax threshold λ < 0 (`None` disables stage 2).
+    pub lambda: Option<f32>,
+    /// Use the SageAttention INT8 quantized QKᵀ path.
+    pub quant: bool,
+}
+
+impl Default for SpargeParams {
+    fn default() -> Self {
+        SpargeParams { tau: 0.9, theta: 0.5, lambda: Some(-5.0), quant: false }
+    }
+}
+
+impl SpargeParams {
+    pub fn predict_params(&self) -> PredictParams {
+        PredictParams { tau: self.tau, theta: self.theta }
+    }
+}
+
+/// Result of a sparse attention call.
+#[derive(Clone, Debug)]
+pub struct SpargeOutput {
+    pub out: Tensor,
+    pub stats: SkipStats,
+    /// The stage-1 mask that was used (for analysis benches).
+    pub mask: BlockMask,
+}
+
+/// Run SpargeAttn end to end: predict `M_g`, then sparse flash attention.
+pub fn sparge_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    params: &SpargeParams,
+) -> SpargeOutput {
+    let pred = predict(q, k, cfg, &params.predict_params());
+    let (out, stats) = sparse_flash(q, k, v, &pred.mask, cfg, params);
+    SpargeOutput { out, stats, mask: pred.mask }
+}
+
+/// Sparse flash attention with a given block mask (stage 1) and λ filter
+/// (stage 2). Exposed separately so benches can drive baseline masks
+/// (MInference / FlexPrefill) through the identical kernel.
+pub fn sparse_flash(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    params: &SpargeParams,
+) -> (Tensor, SkipStats) {
+    if params.quant {
+        sparse_flash_quant(q, k, v, mask, cfg, params)
+    } else {
+        sparse_flash_f32(q, k, v, mask, cfg, params)
+    }
+}
+
+fn sparse_flash_f32(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    params: &SpargeParams,
+) -> (Tensor, SkipStats) {
+    assert_eq!(q.dim(1), k.dim(1));
+    assert_eq!(k.dim(0), v.dim(0));
+    let n = q.dim(0);
+    let nk = k.dim(0);
+    let dv = v.dim(1);
+    let scale = cfg.scale_for(q.dim(1));
+    assert_eq!(mask.rows, cfg.n_qblocks(n), "mask rows");
+    assert_eq!(mask.cols, cfg.n_kblocks(nk), "mask cols");
+
+    let mut out = Tensor::zeros(&[n, dv]);
+    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
+    let mut sbuf = vec![0f32; cfg.bq * cfg.bk];
+
+    for bi in 0..mask.rows {
+        let q0 = bi * cfg.bq;
+        let q1 = (q0 + cfg.bq).min(n);
+        let mut tile = FlashTile::new(q1 - q0, dv, cfg.bk);
+        for bj in 0..mask.cols {
+            let k0 = bj * cfg.bk;
+            let k1 = (k0 + cfg.bk).min(nk);
+            if cfg.causal && k0 > q1 - 1 {
+                break; // outside full-attention domain: not counted
+            }
+            stats.qk_total += 1;
+            stats.pv_total += 1;
+            if !mask.get(bi, bj) {
+                stats.qk_skipped += 1;
+                stats.pv_skipped += 1;
+                continue;
+            }
+            score_block(q, k, q0, q1, k0, k1, scale, cfg.causal, &mut sbuf);
+            tile.ingest(
+                &sbuf[..(q1 - q0) * (k1 - k0)],
+                k1 - k0,
+                &v.data()[k0 * dv..k1 * dv],
+                params.lambda,
+                cfg.cw,
+                &mut stats,
+            );
+        }
+        out.data_mut()[q0 * dv..q1 * dv].copy_from_slice(&tile.finalize());
+    }
+    (out, stats)
+}
+
+/// SageAttention-integrated path: per-block INT8 Q/K with K smoothing; the
+/// QKᵀ product runs in int8→i32 and is dequantized with δ_Q·δ_K (Alg. 1
+/// lines 3 & 12). P̃ and V stay f32 (SageAttention keeps PV in higher
+/// precision).
+fn sparse_flash_quant(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    params: &SpargeParams,
+) -> (Tensor, SkipStats) {
+    assert_eq!(q.dim(1), k.dim(1));
+    assert_eq!(k.dim(0), v.dim(0));
+    let n = q.dim(0);
+    let _nk = k.dim(0);
+    let d = q.dim(1);
+    let dv = v.dim(1);
+    let scale = cfg.scale_for(d);
+
+    // K smoothing: subtracting the per-channel mean shifts every row of
+    // S_ij by the same amount (Q_i·k̄ᵀ), which row-softmax cancels — but
+    // only when *all* key blocks see the same shift. That holds because the
+    // smoothing mean is global over K.
+    let kmean = quant::channel_mean(k);
+    let ksm = quant::smooth(k, &kmean);
+    let qb: Vec<QuantBlock> = quant::quantize_blocks(q, cfg.bq);
+    let kb: Vec<QuantBlock> = quant::quantize_blocks(&ksm, cfg.bk);
+
+    let mut out = Tensor::zeros(&[n, dv]);
+    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
+    let mut sbuf = vec![0f32; cfg.bq * cfg.bk];
+
+    for (bi, qblk) in qb.iter().enumerate() {
+        let q0 = bi * cfg.bq;
+        let q1 = q0 + qblk.rows;
+        let mut tile = FlashTile::new(qblk.rows, dv, cfg.bk);
+        for (bj, kblk) in kb.iter().enumerate() {
+            let k0 = bj * cfg.bk;
+            let k1 = k0 + kblk.rows;
+            if cfg.causal && k0 > q1 - 1 {
+                break;
+            }
+            stats.qk_total += 1;
+            stats.pv_total += 1;
+            if !mask.get(bi, bj) {
+                stats.qk_skipped += 1;
+                stats.pv_skipped += 1;
+                continue;
+            }
+            let sb = &mut sbuf[..qblk.rows * kblk.rows];
+            quant::qk_dequant(qblk, kblk, scale, sb);
+            if cfg.causal {
+                for i in 0..qblk.rows {
+                    let gi = q0 + i;
+                    for j in 0..kblk.rows {
+                        if k0 + j > gi {
+                            sb[i * kblk.rows + j] = f32::NEG_INFINITY;
+                        }
+                    }
+                }
+            }
+            tile.ingest(sb, kblk.rows, &v.data()[k0 * dv..k1 * dv], params.lambda, cfg.cw, &mut stats);
+        }
+        out.data_mut()[q0 * dv..q1 * dv].copy_from_slice(&tile.finalize());
+    }
+    (out, stats)
+}
+
+/// Multi-head sparge attention with per-head stats, parallel over heads.
+pub fn sparge_attention_heads(
+    q: &[Tensor],
+    k: &[Tensor],
+    v: &[Tensor],
+    cfg: &AttnConfig,
+    params: &SpargeParams,
+    threads: usize,
+) -> (Vec<Tensor>, SkipStats) {
+    assert_eq!(q.len(), k.len());
+    assert_eq!(k.len(), v.len());
+    let results = crate::util::threadpool::parallel_map(q.len(), threads, |h| {
+        sparge_attention(&q[h], &k[h], &v[h], cfg, params)
+    });
+    let mut stats = SkipStats::default();
+    let mut outs = Vec::with_capacity(results.len());
+    for r in results {
+        stats.merge(&r.stats);
+        outs.push(r.out);
+    }
+    (outs, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::attention_naive;
+    use crate::attention::flash::attention_flash;
+    use crate::util::prop::{assert_allclose, rel_l1, Cases};
+    use crate::util::rng::Pcg;
+
+    fn cfg(bq: usize, bk: usize, causal: bool, cw: usize) -> AttnConfig {
+        AttnConfig { bq, bk, causal, scale: None, cw }
+    }
+
+    fn dense_params() -> SpargeParams {
+        SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false }
+    }
+
+    #[test]
+    fn full_mask_no_lambda_equals_dense_flash() {
+        Cases::standard(701).check(|rng| {
+            let n = rng.range(4, 70);
+            let d = 8;
+            let c = cfg(rng.range(2, 17), rng.range(2, 17), rng.chance(0.5), rng.range(1, 4));
+            let q = Tensor::randn(&[n, d], rng);
+            let k = Tensor::randn(&[n, d], rng);
+            let v = Tensor::randn(&[n, d], rng);
+            let mask = BlockMask::new_all(c.n_qblocks(n), c.n_kblocks(n), true);
+            let (sparse, stats) = sparse_flash(&q, &k, &v, &mask, &c, &dense_params());
+            let dense = attention_flash(&q, &k, &v, &c);
+            if stats.sparsity() != 0.0 {
+                return Err("full mask must have zero sparsity".into());
+            }
+            assert_allclose(sparse.data(), dense.data(), 1e-4, 1e-3, "full-mask")
+        });
+    }
+
+    /// The core semantic invariant: skipping a masked block must equal
+    /// computing it with S = −∞ (i.e. masking in the oracle).
+    #[test]
+    fn skipping_equals_masking_property() {
+        Cases::standard(702).check(|rng| {
+            let n = rng.range(8, 64);
+            let d = 8;
+            let c = cfg(8, 8, false, 2);
+            let q = Tensor::randn(&[n, d], rng);
+            let k = Tensor::randn(&[n, d], rng);
+            let v = Tensor::randn(&[n, d], rng);
+            // random mask, at least one block per row
+            let (tm, tn) = (c.n_qblocks(n), c.n_kblocks(n));
+            let mut mask = BlockMask::new_all(tm, tn, false);
+            for i in 0..tm {
+                mask.set(i, rng.range(0, tn), true);
+                for j in 0..tn {
+                    if rng.chance(0.5) {
+                        mask.set(i, j, true);
+                    }
+                }
+            }
+            let (sparse, _) = sparse_flash(&q, &k, &v, &mask, &c, &dense_params());
+
+            // oracle: dense with masked blocks set to -inf pre-softmax
+            let scale = c.scale_for(d);
+            let mut s = crate::tensor::matmul::matmul_nt(&q, &k);
+            s.scale(scale);
+            for i in 0..n {
+                for j in 0..n {
+                    if !mask.get(i / c.bq, j / c.bk) {
+                        *s.at2_mut(i, j) = f32::NEG_INFINITY;
+                    }
+                }
+            }
+            let p = crate::tensor::ops::softmax_rows(&s);
+            let oracle = crate::tensor::matmul::matmul_nn(&p, &v);
+            assert_allclose(sparse.data(), oracle.data(), 1e-4, 1e-3, "skip-vs-mask")
+        });
+    }
+
+    #[test]
+    fn lambda_very_negative_is_lossless() {
+        Cases::standard(703).check(|rng| {
+            let n = rng.range(8, 64);
+            let d = 8;
+            let c = cfg(8, 8, false, 2);
+            let q = Tensor::randn(&[n, d], rng);
+            let k = Tensor::randn(&[n, d], rng);
+            let v = Tensor::randn(&[n, d], rng);
+            let mask = BlockMask::new_all(c.n_qblocks(n), c.n_kblocks(n), true);
+            let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: Some(-1e30), quant: false };
+            let (sparse, _) = sparse_flash(&q, &k, &v, &mask, &c, &params);
+            let dense = attention_flash(&q, &k, &v, &c);
+            assert_allclose(sparse.data(), dense.data(), 1e-4, 1e-3, "lambda-lossless")
+        });
+    }
+
+    #[test]
+    fn lambda_moderate_bounds_l1_error() {
+        let mut rng = Pcg::seeded(31);
+        let n = 256;
+        let d = 16;
+        let c = cfg(32, 32, false, 4);
+        // spiky scores: a few huge keys dominate => many skippable blocks
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let mut k = Tensor::randn(&[n, d], &mut rng);
+        for r in 0..8 {
+            for x in k.row_mut(r * 32) {
+                *x *= 12.0;
+            }
+        }
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let mask = BlockMask::new_all(c.n_qblocks(n), c.n_kblocks(n), true);
+        let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: Some(-8.0), quant: false };
+        let (sparse, stats) = sparse_flash(&q, &k, &v, &mask, &c, &params);
+        let dense = attention_flash(&q, &k, &v, &c);
+        let err = rel_l1(sparse.data(), dense.data());
+        assert!(err < 0.02, "lambda path rel-L1 {err}");
+        assert!(stats.pv_skipped_groups > 0, "lambda never fired");
+    }
+
+    #[test]
+    fn quant_path_close_to_f32() {
+        Cases::standard(704).check(|rng| {
+            let n = rng.range(16, 80);
+            let d = 16;
+            let c = cfg(16, 16, rng.chance(0.5), 2);
+            let q = Tensor::randn(&[n, d], rng);
+            let k = Tensor::randn(&[n, d], rng);
+            let v = Tensor::randn(&[n, d], rng);
+            let mask = BlockMask::new_all(c.n_qblocks(n), c.n_kblocks(n), true);
+            let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: true };
+            let (qout, _) = sparse_flash(&q, &k, &v, &mask, &c, &params);
+            let dense = attention_naive(&q, &k, &v, &c);
+            let err = rel_l1(qout.data(), dense.data());
+            if err > 0.03 {
+                return Err(format!("int8 rel-L1 {err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quant_k_smoothing_handles_offset_keys() {
+        // A large common K offset would wreck naive int8; smoothing fixes it.
+        let mut rng = Pcg::seeded(33);
+        let (n, d) = (64, 16);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let mut k = Tensor::randn(&[n, d], &mut rng);
+        for i in 0..n {
+            for x in k.row_mut(i) {
+                *x += 12.0;
+            }
+        }
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let c = cfg(16, 16, false, 2);
+        let mask = BlockMask::new_all(c.n_qblocks(n), c.n_kblocks(n), true);
+        let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: true };
+        let (qout, _) = sparse_flash(&q, &k, &v, &mask, &c, &params);
+        let dense = attention_naive(&q, &k, &v, &c);
+        let err = rel_l1(qout.data(), dense.data());
+        assert!(err < 0.03, "smoothed int8 rel-L1 {err}");
+    }
+
+    #[test]
+    fn end_to_end_sparge_accuracy_on_local_pattern() {
+        // Strong local attention: sparge should reach decent sparsity with
+        // tiny L1 error.
+        let mut rng = Pcg::seeded(34);
+        let n = 512;
+        let d = 32;
+        let c = cfg(64, 32, false, 4);
+        // locality: token t's q/k dominated by block direction
+        let nb = 8;
+        let mut dirs = Vec::new();
+        for _ in 0..nb {
+            let mut u = rng.gauss_vec(d);
+            let nm = crate::tensor::ops::norm(&u);
+            for x in &mut u {
+                *x /= nm;
+            }
+            dirs.push(u);
+        }
+        let mut q = Tensor::zeros(&[n, d]);
+        let mut k = Tensor::zeros(&[n, d]);
+        for t in 0..n {
+            let b = (t * nb) / n;
+            for (i, x) in q.row_mut(t).iter_mut().enumerate() {
+                *x = dirs[b][i] * 6.0 + rng.gauss() * 0.3;
+            }
+            for (i, x) in k.row_mut(t).iter_mut().enumerate() {
+                *x = dirs[b][i] * 6.0 + rng.gauss() * 0.3;
+            }
+        }
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let params = SpargeParams { tau: 0.95, theta: 0.3, lambda: Some(-6.0), quant: false };
+        let res = sparge_attention(&q, &k, &v, &c, &params);
+        let dense = attention_flash(&q, &k, &v, &c);
+        let err = rel_l1(res.out.data(), dense.data());
+        assert!(err < 0.05, "rel-L1 {err}");
+        assert!(res.stats.sparsity() > 0.3, "sparsity {}", res.stats.sparsity());
+    }
+
+    #[test]
+    fn heads_parallel_matches_serial() {
+        let mut rng = Pcg::seeded(35);
+        let mk = |rng: &mut Pcg| Tensor::randn(&[64, 8], rng);
+        let q: Vec<Tensor> = (0..4).map(|_| mk(&mut rng)).collect();
+        let k: Vec<Tensor> = (0..4).map(|_| mk(&mut rng)).collect();
+        let v: Vec<Tensor> = (0..4).map(|_| mk(&mut rng)).collect();
+        let c = cfg(16, 16, false, 2);
+        let p = SpargeParams::default();
+        let (par, stats) = sparge_attention_heads(&q, &k, &v, &c, &p, 4);
+        for h in 0..4 {
+            let serial = sparge_attention(&q[h], &k[h], &v[h], &c, &p);
+            assert_eq!(par[h], serial.out, "head {h}");
+        }
+        assert_eq!(stats.qk_total, 4 * 16);
+    }
+
+    #[test]
+    fn causal_sparge_matches_causal_dense_at_tau1() {
+        let mut rng = Pcg::seeded(36);
+        let (n, d) = (96, 8);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let c = cfg(16, 16, true, 2);
+        let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false };
+        let res = sparge_attention(&q, &k, &v, &c, &params);
+        let dense = attention_naive(&q, &k, &v, &c);
+        assert_allclose(res.out.data(), dense.data(), 1e-4, 1e-3, "causal-tau1").unwrap();
+        assert_eq!(res.stats.sparsity(), 0.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Accuracy and sparsity metrics (paper §3.6 & §4.1).
+
+use crate::tensor::Tensor;
+
+use super::predict::compress_blocks;
+
+/// Relative L1 distance `Σ|O−O′| / Σ|O|` — the paper's attention-accuracy
+/// metric, with `reference` as O.
+pub fn rel_l1(candidate: &Tensor, reference: &Tensor) -> f64 {
+    crate::util::prop::rel_l1(candidate.data(), reference.data())
+}
+
+/// Average block self-similarity of an (N, d) tensor under `block_rows`
+/// blocking — the Sim-q / Sim-k columns of Table 4.
+pub fn avg_block_similarity(x: &Tensor, block_rows: usize) -> f64 {
+    let (_, sims) = compress_blocks(x, block_rows);
+    crate::util::stats::mean_f32(&sims)
+}
+
+/// PSNR between two tensors (used as the image/video fidelity proxy in the
+/// Table 1 reproduction; higher is better).
+pub fn psnr(candidate: &Tensor, reference: &Tensor) -> f64 {
+    assert_eq!(candidate.len(), reference.len());
+    let mse: f64 = candidate
+        .data()
+        .iter()
+        .zip(reference.data())
+        .map(|(&a, &b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / candidate.len() as f64;
+    let peak: f64 = reference.data().iter().fold(0f32, |m, &x| m.max(x.abs())) as f64;
+    if mse == 0.0 {
+        return f64::INFINITY;
+    }
+    if peak == 0.0 {
+        return 0.0;
+    }
+    10.0 * ((peak * peak) / mse).log10()
+}
+
+/// Cosine similarity between two flattened tensors (CLIP-style alignment
+/// proxy for Table 1's CLIPSIM column).
+pub fn cosine(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let dot: f64 = a.data().iter().zip(b.data()).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
+    let na: f64 = a.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    let nb: f64 = b.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    dot / (na * nb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn rel_l1_zero_for_identical() {
+        let mut rng = Pcg::seeded(1);
+        let t = Tensor::randn(&[8, 8], &mut rng);
+        assert_eq!(rel_l1(&t, &t), 0.0);
+    }
+
+    #[test]
+    fn psnr_infinite_for_identical_and_finite_otherwise() {
+        let mut rng = Pcg::seeded(2);
+        let t = Tensor::randn(&[16, 4], &mut rng);
+        assert_eq!(psnr(&t, &t), f64::INFINITY);
+        let mut u = t.clone();
+        u.data_mut()[0] += 0.5;
+        let p = psnr(&u, &t);
+        assert!(p.is_finite() && p > 0.0);
+    }
+
+    #[test]
+    fn psnr_decreases_with_noise() {
+        let mut rng = Pcg::seeded(3);
+        let t = Tensor::randn(&[64, 8], &mut rng);
+        let mut small = t.clone();
+        let mut big = t.clone();
+        for i in 0..t.len() {
+            let n = rng.gauss();
+            small.data_mut()[i] += 0.01 * n;
+            big.data_mut()[i] += 0.5 * n;
+        }
+        assert!(psnr(&small, &t) > psnr(&big, &t));
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 0.0]);
+        let b = Tensor::from_vec(&[2], vec![0.0, 1.0]);
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-12);
+        assert!(cosine(&a, &b).abs() < 1e-12);
+        let neg = Tensor::from_vec(&[2], vec![-1.0, 0.0]);
+        assert!((cosine(&a, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn block_similarity_high_for_repeated_rows() {
+        let row = [0.3f32, -0.2, 0.9, 0.5];
+        let mut data = Vec::new();
+        for _ in 0..32 {
+            data.extend_from_slice(&row);
+        }
+        let x = Tensor::from_vec(&[32, 4], data);
+        assert!(avg_block_similarity(&x, 8) > 0.999);
+    }
+
+    #[test]
+    fn block_similarity_low_for_random() {
+        let mut rng = Pcg::seeded(5);
+        let x = Tensor::randn(&[256, 64], &mut rng);
+        let s = avg_block_similarity(&x, 64);
+        assert!(s < 0.3, "random sim {s}");
+    }
+}

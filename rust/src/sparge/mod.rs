@@ -1,0 +1,24 @@
+//! The paper's contribution: SpargeAttn — universal training-free sparse +
+//! quantized attention.
+//!
+//! - [`predict`]: stage-1 sparse mask prediction via selective token
+//!   compression (§3.2–3.3);
+//! - [`kernel`]: the sparse FlashAttention kernel with stage-1 block skips
+//!   and the stage-2 sparse warp online softmax (§3.4), plus the
+//!   SageAttention INT8 integration (§3.5);
+//! - [`hilbert`]: HilbertCurve token permutation for visual models (§3.7);
+//! - [`tune`]: per-layer hyper-parameter grid search (§3.6);
+//! - [`config`]: per-layer parameter tables with JSON persistence;
+//! - [`metrics`]: relative-L1 / sparsity / similarity metrics (§4.1).
+
+pub mod config;
+pub mod hilbert;
+pub mod kernel;
+pub mod metrics;
+pub mod predict;
+pub mod tune;
+
+pub use config::ModelSpargeConfig;
+pub use kernel::{sparge_attention, sparge_attention_heads, sparse_flash, SpargeOutput, SpargeParams};
+pub use predict::{predict, PredictParams, Prediction};
+pub use tune::{tune_layer, CalibSample, TuneOptions, TuneResult};

@@ -1,0 +1,412 @@
+//! Stage-1 sparse mask prediction (paper §3.2–3.3, Alg. 1 lines 4–6).
+//!
+//! Pipeline:
+//! 1. compress each Q/K block to its mean token (`mean(Q_i, axis=0)`);
+//! 2. per-block mean cosine self-similarity `CosSim`;
+//! 3. compressed score map `Ŝ = q kᵀ`, with columns of non-self-similar
+//!    (fix) K blocks set to −∞;
+//! 4. row softmax → `P̂`; per-row `TopCdf(τ)` selects the block set whose
+//!    cumulative probability reaches τ;
+//! 5. rows of fix Q blocks and columns of fix K blocks are forced to 1.
+
+use crate::attention::types::{AttnConfig, BlockMask};
+use crate::tensor::{matmul, ops, Tensor};
+
+/// Output of the prediction pass.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    /// The stage-1 block mask `M_g`.
+    pub mask: BlockMask,
+    /// Per-Q-block mean self-similarity `s_q`.
+    pub sim_q: Vec<f32>,
+    /// Per-K-block mean self-similarity `s_k`.
+    pub sim_k: Vec<f32>,
+    /// The compressed attention map P̂ (n_qblocks × n_kblocks) for analysis
+    /// (Fig. 2 pattern dumps).
+    pub p_hat: Tensor,
+}
+
+/// Hyper-parameters of the prediction stage.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PredictParams {
+    /// CDF coverage threshold τ ∈ (0,1).
+    pub tau: f32,
+    /// Self-similarity threshold θ ∈ (−1,1).
+    pub theta: f32,
+}
+
+impl Default for PredictParams {
+    fn default() -> Self {
+        PredictParams { tau: 0.9, theta: 0.5 }
+    }
+}
+
+/// Mean pairwise cosine similarity of the rows of `block` —
+/// `CosSim(X) = mean(XXᵀ / |max(XXᵀ)|)` per the paper. Rows are
+/// L2-normalized first so XXᵀ entries are true cosines in [−1, 1]
+/// (`|max|` normalization then is a no-op but guards degenerate blocks).
+pub fn cos_sim(block: &[f32], rows: usize, d: usize) -> f32 {
+    debug_assert_eq!(block.len(), rows * d);
+    if rows <= 1 {
+        return 1.0;
+    }
+    // normalize rows
+    let mut normed = vec![0f32; rows * d];
+    for i in 0..rows {
+        let row = &block[i * d..(i + 1) * d];
+        let n = ops::norm(row);
+        let inv = if n > 0.0 { 1.0 / n } else { 0.0 };
+        for (o, &v) in normed[i * d..(i + 1) * d].iter_mut().zip(row) {
+            *o = v * inv;
+        }
+    }
+    // mean of the full Gram matrix (including diagonal, as in the paper's
+    // formula mean(XXᵀ)).
+    let mut sum = 0f64;
+    let mut maxabs = 0f32;
+    for i in 0..rows {
+        for j in 0..rows {
+            let g = matmul::dot(&normed[i * d..(i + 1) * d], &normed[j * d..(j + 1) * d]);
+            sum += g as f64;
+            maxabs = maxabs.max(g.abs());
+        }
+    }
+    if maxabs == 0.0 {
+        return 1.0;
+    }
+    (sum / (rows * rows) as f64) as f32 / maxabs
+}
+
+/// Compress each block of `x` (N×d) into its mean token; returns
+/// (compressed tokens as (n_blocks × d), per-block self-similarity).
+pub fn compress_blocks(x: &Tensor, block_rows: usize) -> (Tensor, Vec<f32>) {
+    assert_eq!(x.ndim(), 2);
+    let (n, d) = (x.dim(0), x.dim(1));
+    let nb = n.div_ceil(block_rows);
+    let mut tokens = Tensor::zeros(&[nb, d]);
+    let mut sims = Vec::with_capacity(nb);
+    for b in 0..nb {
+        let r0 = b * block_rows;
+        let r1 = (r0 + block_rows).min(n);
+        let block = &x.data()[r0 * d..r1 * d];
+        let rows = r1 - r0;
+        let mean = {
+            let sub = Tensor::from_vec(&[rows, d], block.to_vec());
+            ops::mean_axis0(&sub)
+        };
+        tokens.row_mut(b).copy_from_slice(&mean);
+        sims.push(cos_sim(block, rows, d));
+    }
+    (tokens, sims)
+}
+
+/// The paper's TopCdf: "select the positions of the top values whose
+/// cumulative sum *reaches* τ·ΣP̂[i]" — i.e. the minimal prefix of the
+/// descending-sorted row whose mass ≥ τ·total, *including* the element
+/// that crosses the threshold. (The paper's torch pseudocode
+/// `cusum ≤ τ·sum` excludes the crossing element; taken literally that
+/// drops up to half the attention mass when it concentrates in few blocks
+/// — e.g. two blocks at 0.50/0.48 with τ=0.95 would keep only one — so we
+/// implement the inclusive reading the prose describes.)
+pub fn top_cdf(p_row: &[f32], tau: f32) -> Vec<bool> {
+    let n = p_row.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| p_row[b].partial_cmp(&p_row[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let total: f32 = p_row.iter().sum();
+    let budget = tau * total;
+    let mut out = vec![false; n];
+    let mut cum = 0f32;
+    for &i in &idx {
+        out[i] = true;
+        cum += p_row[i];
+        if cum >= budget {
+            break;
+        }
+    }
+    out
+}
+
+/// Run the full stage-1 prediction for one attention head.
+///
+/// `causal` restricts both P̂'s softmax support and the mask to the block
+/// lower triangle (blocks fully above the diagonal are never computed, so
+/// they are outside the mask domain).
+pub fn predict(q: &Tensor, k: &Tensor, cfg: &AttnConfig, params: &PredictParams) -> Prediction {
+    let (qt, sim_q) = compress_blocks(q, cfg.bq);
+    let (kt, sim_k) = compress_blocks(k, cfg.bk);
+    let tm = qt.dim(0);
+    let tn = kt.dim(0);
+    let d = q.dim(1);
+    let scale = cfg.scale_for(d);
+
+    // Ŝ = q kᵀ (scaled like the real scores so λ/τ operate on the same
+    // scale); fix-K columns → −∞ before softmax.
+    let mut s_hat = matmul::matmul_nt(&qt, &kt);
+    s_hat.scale(scale);
+    for j in 0..tn {
+        if sim_k[j] < params.theta {
+            for i in 0..tm {
+                *s_hat.at2_mut(i, j) = f32::NEG_INFINITY;
+            }
+        }
+    }
+    if cfg.causal {
+        // Block (i,j) is outside the causal domain when its *first* key row
+        // is past the q-block's last query row.
+        for i in 0..tm {
+            let q_last = ((i + 1) * cfg.bq).min(q.dim(0)) - 1;
+            for j in 0..tn {
+                if j * cfg.bk > q_last {
+                    *s_hat.at2_mut(i, j) = f32::NEG_INFINITY;
+                }
+            }
+        }
+    }
+    let p_hat = ops::softmax_rows(&s_hat);
+
+    let mut mask = BlockMask::new_all(tm, tn, false);
+    for i in 0..tm {
+        let sel = top_cdf(p_hat.row(i), params.tau);
+        for (j, &on) in sel.iter().enumerate() {
+            if on {
+                mask.set(i, j, true);
+            }
+        }
+    }
+    // Fix blocks are never skipped (Eq. 5).
+    for i in 0..tm {
+        if sim_q[i] < params.theta {
+            mask.set_row(i, true);
+        }
+    }
+    for j in 0..tn {
+        if sim_k[j] < params.theta {
+            mask.set_col(j, true);
+        }
+    }
+    // Causal: clear mask bits outside the causal domain again (fix-block
+    // row/col fills may have re-set them); the kernel never visits them.
+    if cfg.causal {
+        for i in 0..tm {
+            let q_last = ((i + 1) * cfg.bq).min(q.dim(0)) - 1;
+            for j in 0..tn {
+                if j * cfg.bk > q_last {
+                    mask.set(i, j, false);
+                }
+            }
+        }
+    }
+    Prediction { mask, sim_q, sim_k, p_hat }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+    use crate::util::rng::Pcg;
+
+    fn cfg(bq: usize, bk: usize, causal: bool) -> AttnConfig {
+        AttnConfig { bq, bk, causal, scale: None, cw: 2 }
+    }
+
+    #[test]
+    fn cos_sim_identical_rows_is_one() {
+        let block = [1.0f32, 2.0, 1.0, 2.0, 1.0, 2.0];
+        let s = cos_sim(&block, 3, 2);
+        assert!((s - 1.0).abs() < 1e-5, "sim {s}");
+    }
+
+    #[test]
+    fn cos_sim_orthogonal_rows_is_low() {
+        // rows alternate between e0 and e1 → mean gram = 0.5
+        let block = [1.0f32, 0.0, 0.0, 1.0];
+        let s = cos_sim(&block, 2, 2);
+        assert!((s - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cos_sim_opposed_rows_is_negative() {
+        let block = [1.0f32, 0.0, -1.0, 0.0];
+        let s = cos_sim(&block, 2, 2);
+        assert!(s < 0.1, "sim {s}");
+    }
+
+    #[test]
+    fn cos_sim_single_row_and_zero_block() {
+        assert_eq!(cos_sim(&[3.0, 4.0], 1, 2), 1.0);
+        assert_eq!(cos_sim(&[0.0; 8], 4, 2), 1.0);
+    }
+
+    #[test]
+    fn compress_means() {
+        let x = Tensor::from_vec(&[4, 2], vec![1., 0., 3., 0., 10., 2., 20., 4.]);
+        let (tokens, sims) = compress_blocks(&x, 2);
+        assert_eq!(tokens.row(0), &[2.0, 0.0]);
+        assert_eq!(tokens.row(1), &[15.0, 3.0]);
+        assert_eq!(sims.len(), 2);
+    }
+
+    #[test]
+    fn compress_ragged_tail() {
+        let x = Tensor::from_vec(&[3, 1], vec![1., 2., 6.]);
+        let (tokens, _) = compress_blocks(&x, 2);
+        assert_eq!(tokens.shape(), &[2, 1]);
+        assert_eq!(tokens.at2(0, 0), 1.5);
+        assert_eq!(tokens.at2(1, 0), 6.0);
+    }
+
+    #[test]
+    fn top_cdf_crossing_element_included() {
+        // sorted: .5 .3 .2 ; cumsum .5 .8 ; τ=.8 is reached at the second
+        // element -> first two selected.
+        let sel = top_cdf(&[0.3, 0.5, 0.2], 0.8);
+        assert_eq!(sel, vec![true, true, false]);
+        // mass split .50/.48/.02: τ=.95 must keep BOTH heavy blocks.
+        let sel = top_cdf(&[0.50, 0.48, 0.02], 0.95);
+        assert_eq!(sel, vec![true, true, false]);
+    }
+
+    #[test]
+    fn top_cdf_small_tau_keeps_top1_only() {
+        let sel = top_cdf(&[0.9, 0.1], 0.05);
+        assert_eq!(sel, vec![true, false]);
+    }
+
+    #[test]
+    fn top_cdf_tau_one_keeps_all() {
+        let sel = top_cdf(&[0.25; 4], 1.0);
+        assert!(sel.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn top_cdf_coverage_invariant() {
+        // Property: (a) selected mass reaches τ·total; (b) selection is a
+        // minimal prefix of the descending order: dropping the smallest
+        // selected element would fall below τ·total; (c) every unselected
+        // element is ≤ every selected element.
+        Cases::standard(601).check(|rng| {
+            let n = rng.range(1, 40);
+            let p: Vec<f32> = (0..n).map(|_| rng.f32() + 1e-6).collect();
+            let tau = rng.f32();
+            let sel = top_cdf(&p, tau);
+            let total: f32 = p.iter().sum();
+            let picked: f32 = p.iter().zip(&sel).filter(|(_, &s)| s).map(|(&v, _)| v).sum();
+            let n_sel = sel.iter().filter(|&&s| s).count();
+            if n_sel == 0 {
+                return Err("nothing selected".into());
+            }
+            if picked < tau * total - 1e-4 {
+                return Err(format!("coverage {picked} < tau*total {}", tau * total));
+            }
+            let min_sel = p.iter().zip(&sel).filter(|(_, &s)| s).map(|(&v, _)| v).fold(f32::INFINITY, f32::min);
+            for (&v, &s) in p.iter().zip(&sel) {
+                if !s && v > min_sel + 1e-6 {
+                    return Err(format!("unselected {v} > selected min {min_sel}"));
+                }
+            }
+            if n_sel > 1 && picked - min_sel >= tau * total + 1e-4 {
+                return Err("selection not minimal".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn predict_tau_one_selects_everything_noncausal() {
+        let mut rng = Pcg::seeded(21);
+        let q = Tensor::randn(&[32, 8], &mut rng);
+        let k = Tensor::randn(&[32, 8], &mut rng);
+        let pred = predict(&q, &k, &cfg(8, 8, false), &PredictParams { tau: 1.0, theta: -1.0 });
+        assert_eq!(pred.mask.count_active(), 16);
+    }
+
+    #[test]
+    fn predict_fix_blocks_force_rows_and_cols() {
+        // Build K whose block 1 is wildly non-self-similar.
+        let mut rng = Pcg::seeded(22);
+        let q = Tensor::randn(&[16, 4], &mut rng);
+        let mut k = Tensor::randn(&[16, 4], &mut rng);
+        // make K block 1 rows opposite signs => low self-sim
+        for r in 4..8 {
+            let sign = if r % 2 == 0 { 1.0 } else { -1.0 };
+            for v in k.row_mut(r) {
+                *v = sign * (1.0 + v.abs());
+            }
+        }
+        let pred = predict(&q, &k, &cfg(4, 4, false), &PredictParams { tau: 0.1, theta: 0.9 });
+        // column(s) with sim_k < theta are fully on
+        for (j, &s) in pred.sim_k.iter().enumerate() {
+            if s < 0.9 {
+                for i in 0..pred.mask.rows {
+                    assert!(pred.mask.get(i, j), "fix col {j} not forced at row {i}");
+                }
+            }
+        }
+        for (i, &s) in pred.sim_q.iter().enumerate() {
+            if s < 0.9 {
+                for j in 0..pred.mask.cols {
+                    assert!(pred.mask.get(i, j), "fix row {i} not forced at col {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn predict_causal_mask_stays_lower_triangular() {
+        Cases::standard(602).check(|rng| {
+            let n = rng.range(8, 65);
+            let q = Tensor::randn(&[n, 8], rng);
+            let k = Tensor::randn(&[n, 8], rng);
+            let c = cfg(8, 8, true);
+            let pred = predict(&q, &k, &c, &PredictParams { tau: rng.f32(), theta: rng.f32() * 2.0 - 1.0 });
+            for i in 0..pred.mask.rows {
+                let q_last = ((i + 1) * c.bq).min(n) - 1;
+                for j in 0..pred.mask.cols {
+                    if j * c.bk > q_last && pred.mask.get(i, j) {
+                        return Err(format!("causal violation at block ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn predict_every_row_keeps_at_least_one_block() {
+        Cases::standard(603).check(|rng| {
+            let n = rng.range(4, 80);
+            let q = Tensor::randn(&[n, 8], rng);
+            let k = Tensor::randn(&[n, 8], rng);
+            let c = cfg(rng.range(2, 12), rng.range(2, 12), false);
+            let pred = predict(&q, &k, &c, &PredictParams { tau: 0.01, theta: 0.0 });
+            for i in 0..pred.mask.rows {
+                if (0..pred.mask.cols).all(|j| !pred.mask.get(i, j)) {
+                    return Err(format!("row {i} lost all blocks"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn locality_raises_selected_diagonal() {
+        // Q/K with strong local structure: token t points at direction of
+        // its block => diagonal of P̂ dominates; with small τ the mask
+        // should prefer the diagonal.
+        let n = 64;
+        let d = 16;
+        let bq = 8;
+        let mut q = Tensor::zeros(&[n, d]);
+        let mut k = Tensor::zeros(&[n, d]);
+        for t in 0..n {
+            let b = t / bq;
+            q.row_mut(t)[b % d] = 4.0;
+            k.row_mut(t)[b % d] = 4.0;
+        }
+        let pred = predict(&q, &k, &cfg(bq, bq, false), &PredictParams { tau: 0.3, theta: 0.0 });
+        for i in 0..pred.mask.rows {
+            assert!(pred.mask.get(i, i), "diagonal block ({i},{i}) not selected");
+        }
+        assert!(pred.mask.sparsity() > 0.5, "sparsity {}", pred.mask.sparsity());
+    }
+}

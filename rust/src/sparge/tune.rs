@@ -1,0 +1,207 @@
+//! Per-layer hyper-parameter determination (paper §3.6).
+//!
+//! Two-stage grid search over a small calibration set (the paper uses five
+//! model inputs per layer): first (τ, θ) maximizing sparsity subject to
+//! rel-L1 < l1, then λ maximizing sparsity subject to rel-L1 < l2.
+
+use crate::attention::flash::attention_flash;
+use crate::attention::types::AttnConfig;
+use crate::tensor::Tensor;
+
+use super::kernel::{sparge_attention, SpargeParams};
+use super::metrics::rel_l1;
+
+/// One calibration sample: a single head's (Q, K, V).
+#[derive(Clone, Debug)]
+pub struct CalibSample {
+    pub q: Tensor,
+    pub k: Tensor,
+    pub v: Tensor,
+}
+
+/// Tuning configuration.
+#[derive(Clone, Debug)]
+pub struct TuneOptions {
+    /// Stage-1 error bound l1 (e.g. 0.05).
+    pub l1: f64,
+    /// Stage-2 error bound l2 (e.g. 0.06), l2 ≥ l1.
+    pub l2: f64,
+    /// τ grid (descending coverage = ascending sparsity).
+    pub tau_grid: Vec<f32>,
+    /// θ grid.
+    pub theta_grid: Vec<f32>,
+    /// λ grid (negative).
+    pub lambda_grid: Vec<f32>,
+    /// Quantized kernel during tuning.
+    pub quant: bool,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions {
+            l1: 0.05,
+            l2: 0.06,
+            tau_grid: vec![0.99, 0.95, 0.9, 0.8, 0.65, 0.5],
+            theta_grid: vec![0.0, 0.25, 0.45, 0.65],
+            lambda_grid: vec![-12.0, -8.0, -5.0, -3.5],
+            quant: false,
+        }
+    }
+}
+
+/// Result of tuning one layer.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub params: SpargeParams,
+    /// Mean sparsity over the calibration set at the chosen params.
+    pub sparsity: f64,
+    /// Worst-case rel-L1 over the calibration set at the chosen params.
+    pub l1_error: f64,
+    /// Grid points evaluated (for overhead reporting).
+    pub evaluated: usize,
+}
+
+/// Evaluate one parameter set over the calibration samples: returns
+/// (mean sparsity, max rel-L1 vs dense flash).
+pub fn evaluate(
+    samples: &[CalibSample],
+    cfg: &AttnConfig,
+    params: &SpargeParams,
+) -> (f64, f64) {
+    let denses: Vec<Tensor> = samples.iter().map(|s| attention_flash(&s.q, &s.k, &s.v, cfg)).collect();
+    evaluate_cached(samples, &denses, cfg, params)
+}
+
+/// `evaluate` with precomputed dense references (the tuner computes them
+/// once instead of once per grid point — a ~2x wall-clock saving).
+fn evaluate_cached(
+    samples: &[CalibSample],
+    denses: &[Tensor],
+    cfg: &AttnConfig,
+    params: &SpargeParams,
+) -> (f64, f64) {
+    let mut sp_sum = 0f64;
+    let mut worst = 0f64;
+    for (s, dense) in samples.iter().zip(denses) {
+        let res = sparge_attention(&s.q, &s.k, &s.v, cfg, params);
+        sp_sum += res.stats.sparsity();
+        worst = worst.max(rel_l1(&res.out, dense));
+    }
+    (sp_sum / samples.len() as f64, worst)
+}
+
+/// Run the two-stage grid search of §3.6.
+pub fn tune_layer(samples: &[CalibSample], cfg: &AttnConfig, opts: &TuneOptions) -> TuneResult {
+    assert!(!samples.is_empty(), "tuning needs calibration samples");
+    assert!(opts.l2 >= opts.l1, "l2 must be >= l1");
+
+    let denses: Vec<Tensor> = samples.iter().map(|s| attention_flash(&s.q, &s.k, &s.v, cfg)).collect();
+
+    // Stage 1: (τ, θ), λ disabled.
+    let mut best: Option<(SpargeParams, f64, f64)> = None;
+    let mut evaluated = 0usize;
+    for &tau in &opts.tau_grid {
+        for &theta in &opts.theta_grid {
+            let p = SpargeParams { tau, theta, lambda: None, quant: opts.quant };
+            let (sp, err) = evaluate_cached(samples, &denses, cfg, &p);
+            evaluated += 1;
+            if err < opts.l1 && best.as_ref().map(|(_, bs, _)| sp > *bs).unwrap_or(true) {
+                best = Some((p, sp, err));
+            }
+        }
+    }
+    // Fallback: the densest setting (always meets the bound: τ=1,θ=−1 is
+    // exactly dense attention).
+    let (mut params, mut sparsity, mut l1_error) = best.unwrap_or_else(|| {
+        let p = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: opts.quant };
+        let (sp, err) = evaluate_cached(samples, &denses, cfg, &p);
+        (p, sp, err)
+    });
+
+    // Stage 2: λ grid on top of the stage-1 winner.
+    for &lam in &opts.lambda_grid {
+        let p = SpargeParams { lambda: Some(lam), ..params };
+        let (sp, err) = evaluate_cached(samples, &denses, cfg, &p);
+        evaluated += 1;
+        if err < opts.l2 && sp > sparsity {
+            params = p;
+            sparsity = sp;
+            l1_error = err;
+        }
+    }
+
+    TuneResult { params, sparsity, l1_error, evaluated }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn local_sample(rng: &mut Pcg, n: usize, d: usize, nb: usize) -> CalibSample {
+        // strongly block-local Q/K so real sparsity is attainable
+        let mut dirs = Vec::new();
+        for _ in 0..nb {
+            let mut u = rng.gauss_vec(d);
+            let nm = crate::tensor::ops::norm(&u);
+            for x in &mut u {
+                *x /= nm;
+            }
+            dirs.push(u);
+        }
+        let mut q = Tensor::zeros(&[n, d]);
+        let mut k = Tensor::zeros(&[n, d]);
+        for t in 0..n {
+            let b = (t * nb) / n;
+            for (i, x) in q.row_mut(t).iter_mut().enumerate() {
+                *x = dirs[b][i] * 5.0 + rng.gauss() * 0.25;
+            }
+            for (i, x) in k.row_mut(t).iter_mut().enumerate() {
+                *x = dirs[b][i] * 5.0 + rng.gauss() * 0.25;
+            }
+        }
+        CalibSample { q, k, v: Tensor::randn(&[n, d], rng) }
+    }
+
+    #[test]
+    fn tuned_params_respect_error_bounds() {
+        let mut rng = Pcg::seeded(41);
+        let cfg = AttnConfig { bq: 32, bk: 16, causal: false, scale: None, cw: 2 };
+        let samples: Vec<CalibSample> = (0..3).map(|_| local_sample(&mut rng, 256, 16, 8)).collect();
+        let opts = TuneOptions { l1: 0.05, l2: 0.06, ..Default::default() };
+        let res = tune_layer(&samples, &cfg, &opts);
+        assert!(res.l1_error < opts.l2, "err {} >= l2", res.l1_error);
+        assert!(res.sparsity > 0.2, "sparsity {}", res.sparsity);
+        assert!(res.evaluated > 10);
+    }
+
+    #[test]
+    fn tighter_bound_gives_denser_params() {
+        let mut rng = Pcg::seeded(42);
+        let cfg = AttnConfig { bq: 32, bk: 16, causal: false, scale: None, cw: 2 };
+        let samples: Vec<CalibSample> = (0..2).map(|_| local_sample(&mut rng, 192, 16, 6)).collect();
+        let loose = tune_layer(&samples, &cfg, &TuneOptions { l1: 0.10, l2: 0.12, ..Default::default() });
+        let tight = tune_layer(&samples, &cfg, &TuneOptions { l1: 0.005, l2: 0.006, ..Default::default() });
+        assert!(loose.sparsity >= tight.sparsity - 1e-9, "loose {} < tight {}", loose.sparsity, tight.sparsity);
+        assert!(tight.l1_error < 0.006);
+    }
+
+    #[test]
+    fn fallback_is_dense_when_nothing_fits() {
+        // Impossible bound -> dense fallback with ~zero error.
+        let mut rng = Pcg::seeded(43);
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: false, scale: None, cw: 2 };
+        let samples = vec![local_sample(&mut rng, 64, 8, 4)];
+        let opts = TuneOptions {
+            l1: 1e-12,
+            l2: 2e-12,
+            tau_grid: vec![0.5],
+            theta_grid: vec![0.5],
+            lambda_grid: vec![-5.0],
+            quant: false,
+        };
+        let res = tune_layer(&samples, &cfg, &opts);
+        assert_eq!(res.params.tau, 1.0);
+        assert_eq!(res.params.theta, -1.0);
+    }
+}

@@ -1,0 +1,340 @@
+//! Blocked matmul microkernels — the compute hot path of the L3 attention
+//! engine. Hand-tuned for the attention shapes: tall-skinny A·Bᵀ
+//! (`matmul_nt`, used for Q·Kᵀ where both operands are row-major over
+//! tokens) and A·B (`matmul_nn`, used for P̃·V).
+//!
+//! Layout note: keeping K row-major and using the NT kernel means the inner
+//! loop over `d` walks both operands contiguously — this is the single
+//! biggest lever for the sparse engine's wall-clock (see EXPERIMENTS.md
+//! §Perf).
+
+use super::Tensor;
+
+/// C = A · Bᵀ where A is (m,k) and B is (n,k); C is (m,n).
+/// Both inner loops stride contiguously over `k`.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.dim(0), a.dim(1));
+    let (n, kb) = (b.dim(0), b.dim(1));
+    assert_eq!(k, kb, "matmul_nt inner dims: {k} vs {kb}");
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_nt_into(a.data(), b.data(), c.data_mut(), m, n, k);
+    c
+}
+
+/// SIMD lane width for the explicit-lane kernels: 8 f32 = one AVX2
+/// register; narrower targets still vectorize the lane arrays.
+const LANES: usize = 8;
+
+/// NT kernel into a caller-provided buffer (len m*n).
+#[inline]
+pub fn matmul_nt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    // 4-wide j-unroll × 8-wide explicit k-lanes: each a-row is dotted
+    // against 4 b-rows at once, with [f32; 8] lane accumulators so the
+    // inner loop compiles to packed FMAs instead of a scalar reduction
+    // chain (the dot-product dependency is the bottleneck otherwise —
+    // EXPERIMENTS.md §Perf).
+    let n4 = n & !3;
+    let kl = k & !(LANES - 1);
+    let m2 = m & !1;
+    let mut i = 0;
+    // 2×4 register tile: each loaded B vector feeds two A rows, halving
+    // B-side bandwidth (the NT kernel is bandwidth-bound once B spills L1).
+    while i < m2 {
+        let ar0 = &a[i * k..(i + 1) * k];
+        let ar1 = &a[(i + 1) * k..(i + 2) * k];
+        let (chead, ctail) = c[i * n..].split_at_mut(n);
+        let cr0 = chead;
+        let cr1 = &mut ctail[..n];
+        let mut j = 0;
+        while j < n4 {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let mut a00 = [0f32; LANES];
+            let mut a01 = [0f32; LANES];
+            let mut a02 = [0f32; LANES];
+            let mut a03 = [0f32; LANES];
+            let mut a10 = [0f32; LANES];
+            let mut a11 = [0f32; LANES];
+            let mut a12 = [0f32; LANES];
+            let mut a13 = [0f32; LANES];
+            let mut p = 0;
+            while p < kl {
+                for l in 0..LANES {
+                    let av0 = ar0[p + l];
+                    let av1 = ar1[p + l];
+                    let bv0 = b0[p + l];
+                    let bv1 = b1[p + l];
+                    let bv2 = b2[p + l];
+                    let bv3 = b3[p + l];
+                    a00[l] += av0 * bv0;
+                    a01[l] += av0 * bv1;
+                    a02[l] += av0 * bv2;
+                    a03[l] += av0 * bv3;
+                    a10[l] += av1 * bv0;
+                    a11[l] += av1 * bv1;
+                    a12[l] += av1 * bv2;
+                    a13[l] += av1 * bv3;
+                }
+                p += LANES;
+            }
+            let mut s = [
+                a00.iter().sum::<f32>(),
+                a01.iter().sum::<f32>(),
+                a02.iter().sum::<f32>(),
+                a03.iter().sum::<f32>(),
+                a10.iter().sum::<f32>(),
+                a11.iter().sum::<f32>(),
+                a12.iter().sum::<f32>(),
+                a13.iter().sum::<f32>(),
+            ];
+            while p < k {
+                let av0 = ar0[p];
+                let av1 = ar1[p];
+                s[0] += av0 * b0[p];
+                s[1] += av0 * b1[p];
+                s[2] += av0 * b2[p];
+                s[3] += av0 * b3[p];
+                s[4] += av1 * b0[p];
+                s[5] += av1 * b1[p];
+                s[6] += av1 * b2[p];
+                s[7] += av1 * b3[p];
+                p += 1;
+            }
+            cr0[j] = s[0];
+            cr0[j + 1] = s[1];
+            cr0[j + 2] = s[2];
+            cr0[j + 3] = s[3];
+            cr1[j] = s[4];
+            cr1[j + 1] = s[5];
+            cr1[j + 2] = s[6];
+            cr1[j + 3] = s[7];
+            j += 4;
+        }
+        while j < n {
+            let br = &b[j * k..(j + 1) * k];
+            cr0[j] = dot(ar0, br);
+            cr1[j] = dot(ar1, br);
+            j += 1;
+        }
+        i += 2;
+    }
+    // odd tail row
+    while i < m {
+        let ar = &a[i * k..(i + 1) * k];
+        let cr = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            cr[j] = dot(ar, &b[j * k..(j + 1) * k]);
+        }
+        i += 1;
+    }
+}
+
+/// C = A · B where A is (m,k), B is (k,n); C is (m,n).
+pub fn matmul_nn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.dim(0), a.dim(1));
+    let (kb, n) = (b.dim(0), b.dim(1));
+    assert_eq!(k, kb, "matmul_nn inner dims: {k} vs {kb}");
+    let mut c = Tensor::zeros(&[m, n]);
+    matmul_nn_acc(a.data(), b.data(), c.data_mut(), m, n, k, false);
+    c
+}
+
+/// NN kernel, optionally accumulating into `c` (C += A·B when `acc`).
+/// i-k-j loop order: the inner loop is a contiguous AXPY over B's row `p`
+/// and C's row `i`, which auto-vectorizes.
+#[inline]
+pub fn matmul_nn_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize, acc: bool) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if !acc {
+        c.fill(0.0);
+    }
+    for i in 0..m {
+        let cr = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let br = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in cr.iter_mut().zip(br) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Dot product of two equal-length slices (lane-parallel).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let k = a.len();
+    let kl = k & !(LANES - 1);
+    let mut acc = [0f32; LANES];
+    let mut p = 0;
+    while p < kl {
+        for l in 0..LANES {
+            acc[l] += a[p + l] * b[p + l];
+        }
+        p += LANES;
+    }
+    let mut s: f32 = acc.iter().sum();
+    while p < k {
+        s += a[p] * b[p];
+        p += 1;
+    }
+    s
+}
+
+/// int8 NT kernel with i32 accumulation: C[i][j] = Σ_p a[i][p]·b[j][p].
+/// Used by the SageAttention-quantized path (dequantized by the caller).
+pub fn matmul_nt_i8(a: &[i8], b: &[i8], c: &mut [i32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    let n4 = n & !3;
+    let kl = k & !(LANES - 1);
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        let cr = &mut c[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j < n4 {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let mut acc0 = [0i32; LANES];
+            let mut acc1 = [0i32; LANES];
+            let mut acc2 = [0i32; LANES];
+            let mut acc3 = [0i32; LANES];
+            let mut p = 0;
+            while p < kl {
+                for l in 0..LANES {
+                    let av = ar[p + l] as i32;
+                    acc0[l] += av * b0[p + l] as i32;
+                    acc1[l] += av * b1[p + l] as i32;
+                    acc2[l] += av * b2[p + l] as i32;
+                    acc3[l] += av * b3[p + l] as i32;
+                }
+                p += LANES;
+            }
+            let (mut s0, mut s1, mut s2, mut s3) = (
+                acc0.iter().sum::<i32>(),
+                acc1.iter().sum::<i32>(),
+                acc2.iter().sum::<i32>(),
+                acc3.iter().sum::<i32>(),
+            );
+            while p < k {
+                let av = ar[p] as i32;
+                s0 += av * b0[p] as i32;
+                s1 += av * b1[p] as i32;
+                s2 += av * b2[p] as i32;
+                s3 += av * b3[p] as i32;
+                p += 1;
+            }
+            cr[j] = s0;
+            cr[j + 1] = s1;
+            cr[j + 2] = s2;
+            cr[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            let br = &b[j * k..(j + 1) * k];
+            let mut s = 0i32;
+            for p in 0..k {
+                s += ar[p] as i32 * br[p] as i32;
+            }
+            cr[j] = s;
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, Cases};
+    use crate::util::rng::Pcg;
+
+    fn naive_nt(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.dim(0), a.dim(1), b.dim(0));
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0f32;
+                for p in 0..k {
+                    s += a.at2(i, p) * b.at2(j, p);
+                }
+                *c.at2_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn nt_matches_naive_property() {
+        Cases::standard(101).check(|rng| {
+            let m = rng.range(1, 17);
+            let n = rng.range(1, 17);
+            let k = rng.range(1, 33);
+            let a = Tensor::randn(&[m, k], rng);
+            let b = Tensor::randn(&[n, k], rng);
+            let fast = matmul_nt(&a, &b);
+            let slow = naive_nt(&a, &b);
+            assert_allclose(fast.data(), slow.data(), 1e-4, 1e-4, "nt")
+        });
+    }
+
+    #[test]
+    fn nn_matches_nt_of_transpose() {
+        Cases::standard(102).check(|rng| {
+            let m = rng.range(1, 12);
+            let k = rng.range(1, 12);
+            let n = rng.range(1, 12);
+            let a = Tensor::randn(&[m, k], rng);
+            let b = Tensor::randn(&[k, n], rng);
+            let via_nn = matmul_nn(&a, &b);
+            let via_nt = matmul_nt(&a, &b.transpose2());
+            assert_allclose(via_nn.data(), via_nt.data(), 1e-4, 1e-4, "nn-vs-nt")
+        });
+    }
+
+    #[test]
+    fn nn_accumulate() {
+        let a = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2, 1], vec![3.0, 4.0]);
+        let mut c = vec![10.0];
+        matmul_nn_acc(a.data(), b.data(), &mut c, 1, 1, 2, true);
+        assert_eq!(c[0], 10.0 + 11.0);
+        matmul_nn_acc(a.data(), b.data(), &mut c, 1, 1, 2, false);
+        assert_eq!(c[0], 11.0);
+    }
+
+    #[test]
+    fn i8_kernel_exact() {
+        let mut rng = Pcg::seeded(7);
+        let (m, n, k) = (5, 6, 16);
+        let a: Vec<i8> = (0..m * k).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+        let b: Vec<i8> = (0..n * k).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+        let mut c = vec![0i32; m * n];
+        matmul_nt_i8(&a, &b, &mut c, m, n, k);
+        for i in 0..m {
+            for j in 0..n {
+                let want: i32 = (0..k).map(|p| a[i * k + p] as i32 * b[j * k + p] as i32).sum();
+                assert_eq!(c[i * n + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+}

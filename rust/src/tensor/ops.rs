@@ -1,0 +1,136 @@
+//! Row-wise tensor operations used across the attention engines.
+
+use super::Tensor;
+
+/// Row-wise softmax of a 2-D tensor (numerically stable).
+pub fn softmax_rows(x: &Tensor) -> Tensor {
+    assert_eq!(x.ndim(), 2);
+    let (r, c) = (x.dim(0), x.dim(1));
+    let mut out = Tensor::zeros(&[r, c]);
+    for i in 0..r {
+        let row = x.row(i);
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let orow = out.row_mut(i);
+        if m == f32::NEG_INFINITY {
+            // all-masked row: softmax of all -inf is defined here as zeros
+            // (matches the masked-attention convention: contributes nothing).
+            continue;
+        }
+        let mut sum = 0f32;
+        for (o, &v) in orow.iter_mut().zip(row) {
+            let e = (v - m).exp();
+            *o = e;
+            sum += e;
+        }
+        if sum > 0.0 {
+            let inv = 1.0 / sum;
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
+        }
+    }
+    out
+}
+
+/// Row maxima of a 2-D tensor.
+pub fn rowmax(x: &Tensor) -> Vec<f32> {
+    assert_eq!(x.ndim(), 2);
+    (0..x.dim(0)).map(|i| x.row(i).iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))).collect()
+}
+
+/// Row sums of a 2-D tensor.
+pub fn rowsum(x: &Tensor) -> Vec<f32> {
+    assert_eq!(x.ndim(), 2);
+    (0..x.dim(0)).map(|i| x.row(i).iter().sum()).collect()
+}
+
+/// Mean across rows: (r,c) -> (c,). This is the paper's block→token
+/// compression `mean(Q_i, axis=0)`.
+pub fn mean_axis0(x: &Tensor) -> Vec<f32> {
+    assert_eq!(x.ndim(), 2);
+    let (r, c) = (x.dim(0), x.dim(1));
+    let mut out = vec![0f32; c];
+    for i in 0..r {
+        for (o, &v) in out.iter_mut().zip(x.row(i)) {
+            *o += v;
+        }
+    }
+    let inv = 1.0 / r as f32;
+    for o in &mut out {
+        *o *= inv;
+    }
+    out
+}
+
+/// L2 norm of a slice.
+pub fn norm(x: &[f32]) -> f32 {
+    x.iter().map(|v| v * v).sum::<f32>().sqrt()
+}
+
+/// Numerically-stable log-sum-exp of a slice.
+pub fn logsumexp(x: &[f32]) -> f32 {
+    let m = x.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    if m == f32::NEG_INFINITY {
+        return f32::NEG_INFINITY;
+    }
+    m + x.iter().map(|&v| (v - m).exp()).sum::<f32>().ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, Cases};
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        Cases::standard(201).check(|rng| {
+            let r = rng.range(1, 9);
+            let c = rng.range(1, 33);
+            let x = Tensor::randn(&[r, c], rng);
+            let p = softmax_rows(&x);
+            for i in 0..r {
+                let s: f32 = p.row(i).iter().sum();
+                if (s - 1.0).abs() > 1e-5 {
+                    return Err(format!("row {i} sums to {s}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn softmax_shift_invariance() {
+        let x = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let mut y = x.clone();
+        y.data_mut().iter_mut().for_each(|v| *v += 100.0);
+        assert_allclose(softmax_rows(&x).data(), softmax_rows(&y).data(), 1e-6, 0.0, "shift").unwrap();
+    }
+
+    #[test]
+    fn softmax_all_masked_row_is_zero() {
+        let x = Tensor::from_vec(&[1, 2], vec![f32::NEG_INFINITY, f32::NEG_INFINITY]);
+        let p = softmax_rows(&x);
+        assert_eq!(p.data(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn row_reductions() {
+        let x = Tensor::from_vec(&[2, 3], vec![1., 5., 3., -1., -2., -3.]);
+        assert_eq!(rowmax(&x), vec![5.0, -1.0]);
+        assert_eq!(rowsum(&x), vec![9.0, -6.0]);
+        assert_eq!(mean_axis0(&x), vec![0.0, 1.5, 0.0]);
+    }
+
+    #[test]
+    fn logsumexp_matches_direct() {
+        let xs = [0.1f32, 0.7, -0.3];
+        let direct = xs.iter().map(|v| v.exp()).sum::<f32>().ln();
+        assert!((logsumexp(&xs) - direct).abs() < 1e-6);
+        assert_eq!(logsumexp(&[f32::NEG_INFINITY]), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn norm_basic() {
+        assert_eq!(norm(&[3.0, 4.0]), 5.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! SageAttention-style per-block INT8 quantization (paper §3.5 /
+//! Alg. 1 lines 3 & 12).
+//!
+//! Q and K blocks are quantized symmetrically to int8 with a per-block
+//! scale δ = absmax/127; the QKᵀ product is accumulated in i32 and
+//! dequantized with δ_Q·δ_K. Following SageAttention, K is *smoothed*
+//! first: the per-channel mean of K across tokens is subtracted before
+//! quantization. Softmax is shift-invariant per row, because
+//! Q_i · mean_kᵀ is constant across j within a row — so smoothing changes
+//! no attention output while shrinking K's quantization range.
+
+use super::Tensor;
+
+/// An int8-quantized block with its dequantization scale.
+#[derive(Clone, Debug)]
+pub struct QuantBlock {
+    /// Row-major int8 payload, shape (rows, d).
+    pub data: Vec<i8>,
+    pub rows: usize,
+    pub d: usize,
+    /// Dequant scale: f32 value ≈ data * scale.
+    pub scale: f32,
+}
+
+impl QuantBlock {
+    /// Quantize a (rows, d) f32 slice symmetrically to int8.
+    pub fn quantize(block: &[f32], rows: usize, d: usize) -> QuantBlock {
+        debug_assert_eq!(block.len(), rows * d);
+        let absmax = block.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let scale = if absmax == 0.0 { 1.0 / 127.0 } else { absmax / 127.0 };
+        let inv = 1.0 / scale;
+        let data = block.iter().map(|&x| (x * inv).round().clamp(-127.0, 127.0) as i8).collect();
+        QuantBlock { data, rows, d, scale }
+    }
+
+    /// Dequantize back to f32 (tests / debugging).
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.data.iter().map(|&q| q as f32 * self.scale).collect()
+    }
+}
+
+/// Per-channel mean of a (n, d) tensor across rows — the K-smoothing vector.
+pub fn channel_mean(x: &Tensor) -> Vec<f32> {
+    super::ops::mean_axis0(x)
+}
+
+/// Subtract a channel vector from every row (K smoothing).
+pub fn smooth(x: &Tensor, mean: &[f32]) -> Tensor {
+    assert_eq!(x.ndim(), 2);
+    assert_eq!(x.dim(1), mean.len());
+    let mut out = x.clone();
+    let d = mean.len();
+    for i in 0..out.dim(0) {
+        let row = &mut out.data_mut()[i * d..(i + 1) * d];
+        for (v, &m) in row.iter_mut().zip(mean) {
+            *v -= m;
+        }
+    }
+    out
+}
+
+/// Quantize a full (N, d) matrix into blocks of `block_rows` rows.
+/// The final block may be shorter.
+pub fn quantize_blocks(x: &Tensor, block_rows: usize) -> Vec<QuantBlock> {
+    assert_eq!(x.ndim(), 2);
+    let (n, d) = (x.dim(0), x.dim(1));
+    let mut out = Vec::with_capacity(n.div_ceil(block_rows));
+    let mut r = 0;
+    while r < n {
+        let r1 = (r + block_rows).min(n);
+        out.push(QuantBlock::quantize(&x.data()[r * d..r1 * d], r1 - r, d));
+        r = r1;
+    }
+    out
+}
+
+/// Dequantized QKᵀ for a pair of quantized blocks:
+/// S[i][j] = (Σ_p q[i][p]·k[j][p]) · δ_Q·δ_K · scale_extra.
+pub fn qk_dequant(q: &QuantBlock, k: &QuantBlock, scale_extra: f32, out: &mut [f32]) {
+    debug_assert_eq!(q.d, k.d);
+    debug_assert_eq!(out.len(), q.rows * k.rows);
+    let mut acc = vec![0i32; q.rows * k.rows];
+    super::matmul::matmul_nt_i8(&q.data, &k.data, &mut acc, q.rows, k.rows, q.d);
+    let s = q.scale * k.scale * scale_extra;
+    for (o, &a) in out.iter_mut().zip(&acc) {
+        *o = a as f32 * s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{rel_l1, Cases};
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        Cases::standard(301).check(|rng| {
+            let rows = rng.range(1, 65);
+            let d = rng.range(1, 129);
+            let x: Vec<f32> = rng.gauss_vec(rows * d);
+            let qb = QuantBlock::quantize(&x, rows, d);
+            let y = qb.dequantize();
+            let absmax = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let step = absmax / 127.0;
+            for (&xi, &yi) in x.iter().zip(&y) {
+                if (xi - yi).abs() > step * 0.5 + 1e-6 {
+                    return Err(format!("roundtrip error {} > half-step {}", (xi - yi).abs(), step / 2.0));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_block_quantizes_to_zero() {
+        let qb = QuantBlock::quantize(&[0.0; 8], 2, 4);
+        assert!(qb.data.iter().all(|&q| q == 0));
+        assert!(qb.dequantize().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn qk_dequant_close_to_f32() {
+        let mut rng = Pcg::seeded(9);
+        let d = 64;
+        let q = Tensor::randn(&[16, d], &mut rng);
+        let k = Tensor::randn(&[16, d], &mut rng);
+        let exact = crate::tensor::matmul::matmul_nt(&q, &k);
+        let qq = QuantBlock::quantize(q.data(), 16, d);
+        let qk = QuantBlock::quantize(k.data(), 16, d);
+        let mut approx = vec![0f32; 16 * 16];
+        qk_dequant(&qq, &qk, 1.0, &mut approx);
+        let err = rel_l1(&approx, exact.data());
+        assert!(err < 0.02, "int8 rel-L1 {err}");
+    }
+
+    #[test]
+    fn smoothing_reduces_k_range() {
+        // K rows share a large common offset; smoothing should strip it.
+        let mut rng = Pcg::seeded(11);
+        let d = 32;
+        let mut k = Tensor::randn(&[64, d], &mut rng);
+        for i in 0..64 {
+            for v in k.row_mut(i) {
+                *v += 10.0;
+            }
+        }
+        let mean = channel_mean(&k);
+        let ks = smooth(&k, &mean);
+        assert!(ks.abs_max() < k.abs_max() / 2.0);
+    }
+
+    #[test]
+    fn quantize_blocks_partitions_rows() {
+        let mut rng = Pcg::seeded(13);
+        let x = Tensor::randn(&[100, 8], &mut rng);
+        let blocks = quantize_blocks(&x, 32);
+        assert_eq!(blocks.len(), 4);
+        assert_eq!(blocks[3].rows, 4);
+        let total: usize = blocks.iter().map(|b| b.rows).sum();
+        assert_eq!(total, 100);
+    }
+}

@@ -1,0 +1,106 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process's own args.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> f32 {
+        self.get_f64(name, default as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["serve", "--port", "8080", "--model=lm", "--verbose"]);
+        assert_eq!(a.positional, vec!["serve"]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("model"), Some("lm"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--n", "42", "--tau", "0.9"]);
+        assert_eq!(a.get_usize("n", 0), 42);
+        assert!((a.get_f64("tau", 0.0) - 0.9).abs() < 1e-12);
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--fast"]);
+        assert!(a.flag("fast"));
+        assert!(a.options.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_int_panics() {
+        let a = parse(&["--n", "xyz"]);
+        a.get_usize("n", 0);
+    }
+}

@@ -1,0 +1,86 @@
+//! Leveled stderr logging with a process-global verbosity switch.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log levels in increasing verbosity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Set the global level.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::SeqCst);
+}
+
+/// Current global level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::SeqCst) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Whether a message at `l` would be emitted.
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::SeqCst)
+}
+
+/// Emit a log line (used via the macros below).
+pub fn emit(l: Level, module: &str, msg: &str) {
+    if !enabled(l) {
+        return;
+    }
+    let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+    };
+    eprintln!("[{}.{:03} {} {}] {}", t.as_secs(), t.subsec_millis(), tag, module, msg);
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Info, module_path!(), &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Warn, module_path!(), &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Error, module_path!(), &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Debug, module_path!(), &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

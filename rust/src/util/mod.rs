@@ -1,0 +1,14 @@
+//! Substrate utilities built from scratch for the offline environment
+//! (only `xla` and `anyhow` are vendored): RNG, JSON, CLI parsing, thread
+//! pool, statistics, ASCII tables, timing, logging, and a property-test
+//! driver.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,126 @@
+//! Minimal property-testing harness (proptest substitute).
+//!
+//! `Cases` drives a closure over many PCG-seeded random cases; on failure it
+//! reports the failing case index + seed so the case is exactly replayable
+//! with `Cases::replay(seed, idx)`.
+
+use super::rng::Pcg;
+
+/// Property-test driver.
+pub struct Cases {
+    seed: u64,
+    n: usize,
+}
+
+impl Cases {
+    /// `n` cases derived from `seed`.
+    pub fn new(seed: u64, n: usize) -> Cases {
+        Cases { seed, n }
+    }
+
+    /// Standard size for module-level property tests.
+    pub fn standard(seed: u64) -> Cases {
+        // Allow override so CI can crank coverage: SPARGE_PROP_CASES=500.
+        let n = std::env::var("SPARGE_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(40);
+        Cases::new(seed, n)
+    }
+
+    /// Run `f(case_rng)` for each case; each case gets an independent
+    /// deterministic RNG stream. Returns an error message naming the failing
+    /// case on the first panic-free `Err`.
+    pub fn check<F>(&self, mut f: F)
+    where
+        F: FnMut(&mut Pcg) -> Result<(), String>,
+    {
+        for idx in 0..self.n {
+            let mut rng = Pcg::new(self.seed, idx as u64 + 1);
+            if let Err(msg) = f(&mut rng) {
+                panic!("property failed at case {idx} (seed {seed}): {msg}", seed = self.seed);
+            }
+        }
+    }
+
+    /// Re-create the RNG of a specific failing case for debugging.
+    pub fn replay(seed: u64, idx: usize) -> Pcg {
+        Pcg::new(seed, idx as u64 + 1)
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length mismatch {} vs {}", a.len(), b.len()));
+    }
+    let mut worst = 0f32;
+    let mut worst_i = 0usize;
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        let err = (x - y).abs();
+        if err > tol && err - tol > worst {
+            worst = err - tol;
+            worst_i = i;
+        }
+    }
+    if worst > 0.0 {
+        return Err(format!(
+            "{what}: mismatch at [{worst_i}]: {} vs {} (excess {worst:.3e}, atol {atol}, rtol {rtol})",
+            a[worst_i], b[worst_i]
+        ));
+    }
+    Ok(())
+}
+
+/// Relative L1 distance Σ|a−b| / Σ|b| — the paper's accuracy metric (§3.6).
+pub fn rel_l1(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let num: f64 = a.iter().zip(b).map(|(&x, &y)| (x - y).abs() as f64).sum();
+    let den: f64 = b.iter().map(|&y| y.abs() as f64).sum();
+    if den == 0.0 {
+        if num == 0.0 { 0.0 } else { f64::INFINITY }
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_run_and_pass() {
+        let mut count = 0;
+        Cases::new(1, 10).check(|rng| {
+            count += 1;
+            let x = rng.f32();
+            if (0.0..1.0).contains(&x) { Ok(()) } else { Err("out of range".into()) }
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn cases_report_failure() {
+        Cases::new(2, 5).check(|_| Err("boom".into()));
+    }
+
+    #[test]
+    fn replay_matches_case_stream() {
+        let mut seen = Vec::new();
+        Cases::new(3, 4).check(|rng| {
+            seen.push(rng.next_u64());
+            Ok(())
+        });
+        let mut replayed = Cases::replay(3, 2);
+        assert_eq!(replayed.next_u64(), seen[2]);
+    }
+
+    #[test]
+    fn allclose_and_rel_l1() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-5, 0.0, "t").is_ok());
+        assert!(assert_allclose(&[1.0], &[2.0], 1e-5, 0.0, "t").is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-5, 0.0, "t").is_err());
+        assert!((rel_l1(&[1.0, 1.0], &[1.0, 2.0]) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(rel_l1(&[0.0], &[0.0]), 0.0);
+        assert_eq!(rel_l1(&[1.0], &[0.0]), f64::INFINITY);
+    }
+}

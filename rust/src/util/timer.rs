@@ -1,0 +1,121 @@
+//! Wall-clock timing + a minimal benchmark loop (criterion substitute —
+//! the offline vendor set has no external bench crate).
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Time a single invocation, returning (result, seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Options for `bench`.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    /// Warmup iterations (not measured).
+    pub warmup: usize,
+    /// Measured iterations.
+    pub iters: usize,
+    /// Hard cap on total measured wall-clock; the loop stops early once
+    /// exceeded (at least one sample is always taken).
+    pub max_total: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup: 2, iters: 10, max_total: Duration::from_secs(20) }
+    }
+}
+
+impl BenchOpts {
+    /// Quick preset for cheap operations.
+    pub fn quick() -> Self {
+        BenchOpts { warmup: 1, iters: 5, max_total: Duration::from_secs(5) }
+    }
+}
+
+/// Run `f` repeatedly and summarize per-iteration seconds.
+pub fn bench<T>(opts: BenchOpts, mut f: impl FnMut() -> T) -> Summary {
+    for _ in 0..opts.warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(opts.iters);
+    let start = Instant::now();
+    for i in 0..opts.iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        if i > 0 && start.elapsed() > opts.max_total {
+            break;
+        }
+    }
+    Summary::from(&samples)
+}
+
+/// A stopwatch accumulating named segments (used to split prediction time
+/// from attention time for Table 3).
+#[derive(Default, Debug)]
+pub struct Stopwatch {
+    segments: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure and record it under `name`.
+    pub fn measure<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, secs) = time_once(f);
+        self.segments.push((name.to_string(), secs));
+        out
+    }
+
+    /// Total seconds recorded under `name`.
+    pub fn total(&self, name: &str) -> f64 {
+        self.segments.iter().filter(|(n, _)| n == name).map(|(_, s)| s).sum()
+    }
+
+    /// Total of all segments.
+    pub fn grand_total(&self) -> f64 {
+        self.segments.iter().map(|(_, s)| s).sum()
+    }
+
+    /// All recorded (name, seconds) pairs.
+    pub fn segments(&self) -> &[(String, f64)] {
+        &self.segments
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_measures_positive() {
+        let (v, secs) = time_once(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499500);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn bench_returns_requested_samples() {
+        let s = bench(BenchOpts { warmup: 0, iters: 4, max_total: Duration::from_secs(60) }, || 1 + 1);
+        assert_eq!(s.n, 4);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.measure("a", || {});
+        sw.measure("a", || {});
+        sw.measure("b", || {});
+        assert_eq!(sw.segments().len(), 3);
+        assert!(sw.total("a") >= 0.0);
+        assert!(sw.grand_total() >= sw.total("a"));
+        assert_eq!(sw.total("missing"), 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Workload generators and traces: correlated synthetic attention inputs,
+//! text corpora + Needle-in-a-Haystack, video latent grids, and the binary
+//! tensor-trace interchange format.
+
+pub mod synthetic;
+pub mod text;
+pub mod trace;
+pub mod video;
+
+pub use synthetic::{generate, generate_heads, QkvSample, SyntheticSpec};
+pub use video::VideoSpec;

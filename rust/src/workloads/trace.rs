@@ -1,0 +1,137 @@
+//! Binary tensor-trace format shared between the Python build path and the
+//! Rust runtime (little-endian, versioned):
+//!
+//! ```text
+//! magic  u32  = 0x53504721   ("SPG!")
+//! version u32 = 1
+//! ntensor u32
+//! per tensor: ndim u32, dims u32×ndim, f32 data (row-major, LE)
+//! ```
+//!
+//! Used for QKV calibration dumps (`sparge tune --trace`), cross-layer
+//! integration fixtures (pytest writes, cargo test reads), and model
+//! weights exported by `python/compile/aot.py`.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: u32 = 0x5350_4721;
+const VERSION: u32 = 1;
+
+/// Write tensors to `path`.
+pub fn save(path: &Path, tensors: &[Tensor]) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&MAGIC.to_le_bytes())?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for t in tensors {
+        w.write_all(&(t.ndim() as u32).to_le_bytes())?;
+        for &dim in t.shape() {
+            w.write_all(&(dim as u32).to_le_bytes())?;
+        }
+        for &v in t.data() {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read tensors from `path`.
+pub fn load(path: &Path) -> Result<Vec<Tensor>> {
+    let f = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let magic = read_u32(&mut r)?;
+    if magic != MAGIC {
+        bail!("bad magic {magic:#x} in {}", path.display());
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported trace version {version}");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let ndim = read_u32(&mut r)? as usize;
+        if ndim > 8 {
+            bail!("implausible ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        let mut total = 1usize;
+        for _ in 0..ndim {
+            let d = read_u32(&mut r)? as usize;
+            total = total.checked_mul(d).context("shape overflow")?;
+            shape.push(d);
+        }
+        let mut buf = vec![0u8; total * 4];
+        r.read_exact(&mut buf).context("truncated tensor data")?;
+        let data: Vec<f32> = buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+        out.push(Tensor::from_vec(&shape, data));
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("truncated header")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sparge_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_multiple_tensors() {
+        let mut rng = Pcg::seeded(1);
+        let tensors = vec![
+            Tensor::randn(&[4, 8], &mut rng),
+            Tensor::randn(&[2, 3, 5], &mut rng),
+            Tensor::from_vec(&[1], vec![42.0]),
+        ];
+        let p = tmp("roundtrip.spg");
+        save(&p, &tensors).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.len(), 3);
+        for (a, b) in tensors.iter().zip(&back) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn empty_list_roundtrips() {
+        let p = tmp("empty.spg");
+        save(&p, &[]).unwrap();
+        assert!(load(&p).unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("bad.spg");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut rng = Pcg::seeded(2);
+        let p = tmp("trunc.spg");
+        save(&p, &[Tensor::randn(&[16, 16], &mut rng)]).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&p).is_err());
+    }
+}

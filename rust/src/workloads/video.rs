@@ -1,0 +1,214 @@
+//! Video/image latent workloads: T×H×W token grids with spatial
+//! correlation — the proxy for CogvideoX / Mochi / Open-Sora-Plan /
+//! Flux / SD3.5 attention inputs (DESIGN.md §3 substitution table).
+//!
+//! Correlation is generated over the *3-D grid* (separable AR(1) smoothing
+//! along T, H, W), so locality follows spatial adjacency rather than flat
+//! token order. That is exactly the structure the HilbertCurve permutation
+//! exploits (§3.7): a row-major flattening breaks H/T adjacency while the
+//! Hilbert order preserves it.
+
+use crate::sparge::hilbert::{permute_rows, token_order, Permutation};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
+
+use super::synthetic::QkvSample;
+
+/// Specification for a correlated video-grid workload.
+#[derive(Clone, Copy, Debug)]
+pub struct VideoSpec {
+    pub t: usize,
+    pub h: usize,
+    pub w: usize,
+    pub d: usize,
+    /// Spatial smoothing strength ∈ [0,1): higher = smoother latents.
+    pub smooth: f32,
+    /// Directional signal scale vs iid noise.
+    pub signal: f32,
+}
+
+impl VideoSpec {
+    pub fn tokens(&self) -> usize {
+        self.t * self.h * self.w
+    }
+
+    /// Mochi-proxy: longer clips, moderate resolution (≈22K tokens scaled
+    /// down by `scale` to keep CPU runs tractable).
+    pub fn mochi_proxy(scale: usize) -> VideoSpec {
+        VideoSpec { t: (28 / scale.max(1)).max(1), h: 30, w: 26, d: 64, smooth: 0.96, signal: 11.0 }
+    }
+
+    /// CogvideoX-proxy (≈17K tokens full scale).
+    pub fn cogvideo_proxy(scale: usize) -> VideoSpec {
+        VideoSpec { t: (24 / scale.max(1)).max(1), h: 27, w: 26, d: 64, smooth: 0.95, signal: 10.0 }
+    }
+
+    /// Image (Flux/SD3.5) proxy: single frame, ≈4.5K tokens.
+    pub fn image_proxy() -> VideoSpec {
+        VideoSpec { t: 1, h: 68, w: 66, d: 64, smooth: 0.94, signal: 10.0 }
+    }
+}
+
+/// Generate one attention head over the grid in **row-major token order**
+/// (T, then H, then W). Apply [`permute`] to re-order.
+///
+/// Q and K are both derived from one shared *content* field (plus small
+/// independent components): that is what makes attention spatially local —
+/// a query matches keys whose content correlates with its own, and content
+/// correlates over the grid. Independent Q/K fields would give high block
+/// self-similarity but a position-free attention map with no exploitable
+/// sparsity.
+pub fn generate_grid(spec: &VideoSpec, rng: &mut Pcg) -> QkvSample {
+    let n = spec.tokens();
+    let d = spec.d;
+    let content = smooth_field(spec, rng);
+    let q_own = smooth_field(spec, rng);
+    let k_own = smooth_field(spec, rng);
+    let mut q = Tensor::zeros(&[n, d]);
+    let mut k = Tensor::zeros(&[n, d]);
+    // noise sized vs the (unit-norm) signal rows — see synthetic.rs
+    let noise = 0.4 * spec.signal / (d as f32).sqrt();
+    let mix = 0.45; // weight of the head-specific component vs shared content
+    for i in 0..n {
+        for c in 0..d {
+            let qdir = content.at2(i, c) + mix * q_own.at2(i, c);
+            let kdir = content.at2(i, c) + mix * k_own.at2(i, c);
+            *q.at2_mut(i, c) = spec.signal * qdir + rng.gauss() * noise;
+            *k.at2_mut(i, c) = spec.signal * kdir + rng.gauss() * noise;
+        }
+    }
+    QkvSample { q, k, v: Tensor::randn(&[n, d], rng) }
+}
+
+/// Smooth latent field: iid Gaussians smoothed separably along W, H, T
+/// with AR coefficient `smooth`, then row-normalized to ~unit directions.
+fn smooth_field(spec: &VideoSpec, rng: &mut Pcg) -> Tensor {
+    let (t, h, w, d) = (spec.t, spec.h, spec.w, spec.d);
+    let n = t * h * w;
+    let mut f = Tensor::randn(&[n, d], rng);
+    let rho = spec.smooth.clamp(0.0, 0.999);
+    // variance-preserving innovation: keeps correlation *local* (length
+    // ≈ 1/(1−ρ)) instead of collapsing the whole field to one direction.
+    let nu = (1.0 - rho * rho).sqrt();
+    let lin = |tt: usize, hh: usize, ww: usize| (tt * h + hh) * w + ww;
+
+    // forward AR pass along each axis (in-place, per channel)
+    for tt in 0..t {
+        for hh in 0..h {
+            for ww in 1..w {
+                let (prev, cur) = (lin(tt, hh, ww - 1), lin(tt, hh, ww));
+                for c in 0..d {
+                    let pv = f.at2(prev, c);
+                    let cv = f.at2(cur, c);
+                    *f.at2_mut(cur, c) = rho * pv + nu * cv;
+                }
+            }
+        }
+    }
+    for tt in 0..t {
+        for ww in 0..w {
+            for hh in 1..h {
+                let (prev, cur) = (lin(tt, hh - 1, ww), lin(tt, hh, ww));
+                for c in 0..d {
+                    let pv = f.at2(prev, c);
+                    let cv = f.at2(cur, c);
+                    *f.at2_mut(cur, c) = rho * pv + nu * cv;
+                }
+            }
+        }
+    }
+    for hh in 0..h {
+        for ww in 0..w {
+            for tt in 1..t {
+                let (prev, cur) = (lin(tt - 1, hh, ww), lin(tt, hh, ww));
+                for c in 0..d {
+                    let pv = f.at2(prev, c);
+                    let cv = f.at2(cur, c);
+                    *f.at2_mut(cur, c) = rho * pv + nu * cv;
+                }
+            }
+        }
+    }
+    // normalize rows to unit directions
+    for i in 0..n {
+        let nm = crate::tensor::ops::norm(f.row(i));
+        if nm > 0.0 {
+            for v in f.row_mut(i) {
+                *v /= nm;
+            }
+        }
+    }
+    f
+}
+
+/// Re-order a grid sample's tokens by a permutation method.
+pub fn permute(sample: &QkvSample, spec: &VideoSpec, perm: Permutation, seed: u64) -> QkvSample {
+    let order = token_order(perm, spec.t, spec.h, spec.w, seed);
+    QkvSample {
+        q: permute_rows(&sample.q, &order),
+        k: permute_rows(&sample.k, &order),
+        v: permute_rows(&sample.v, &order),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparge::metrics::avg_block_similarity;
+
+    fn small_spec() -> VideoSpec {
+        VideoSpec { t: 4, h: 12, w: 12, d: 16, smooth: 0.93, signal: 4.0 }
+    }
+
+    #[test]
+    fn grid_shapes() {
+        let spec = small_spec();
+        let mut rng = Pcg::seeded(1);
+        let s = generate_grid(&spec, &mut rng);
+        assert_eq!(s.q.shape(), &[spec.tokens(), spec.d]);
+    }
+
+    #[test]
+    fn hilbert_beats_random_similarity() {
+        let spec = small_spec();
+        let mut rng = Pcg::seeded(2);
+        let s = generate_grid(&spec, &mut rng);
+        let hil = permute(&s, &spec, Permutation::HilbertCurve, 0);
+        let rnd = permute(&s, &spec, Permutation::Random, 0);
+        let sim_h = avg_block_similarity(&hil.k, 64);
+        let sim_r = avg_block_similarity(&rnd.k, 64);
+        assert!(sim_h > sim_r + 0.05, "hilbert {sim_h} vs random {sim_r}");
+    }
+
+    #[test]
+    fn hilbert_at_least_matches_rowmajor_similarity() {
+        let spec = small_spec();
+        let mut rng = Pcg::seeded(3);
+        let s = generate_grid(&spec, &mut rng);
+        let hil = permute(&s, &spec, Permutation::HilbertCurve, 0);
+        let row = permute(&s, &spec, Permutation::RowMajor, 0);
+        let sim_h = avg_block_similarity(&hil.k, 64) + avg_block_similarity(&hil.q, 64);
+        let sim_r = avg_block_similarity(&row.k, 64) + avg_block_similarity(&row.q, 64);
+        assert!(sim_h > sim_r - 0.02, "hilbert {sim_h} vs rowmajor {sim_r}");
+    }
+
+    #[test]
+    fn permutation_preserves_token_multiset() {
+        let spec = small_spec();
+        let mut rng = Pcg::seeded(4);
+        let s = generate_grid(&spec, &mut rng);
+        let p = permute(&s, &spec, Permutation::HilbertCurve, 0);
+        let mut a: Vec<u32> = s.q.data().iter().map(|f| f.to_bits()).collect();
+        let mut b: Vec<u32> = p.q.data().iter().map(|f| f.to_bits()).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn proxies_have_expected_scale() {
+        assert!((VideoSpec::mochi_proxy(1).tokens() as i64 - 22_000).abs() < 2_000);
+        assert!((VideoSpec::cogvideo_proxy(1).tokens() as i64 - 17_000).abs() < 2_000);
+        assert!((VideoSpec::image_proxy().tokens() as i64 - 4_500).abs() < 200);
+    }
+}

@@ -1,0 +1,114 @@
+//! Cross-module property tests over the pure-Rust engine (no artifacts
+//! needed): the paper's semantic invariants at the integration level.
+
+use sparge::attention::flash::attention_flash;
+use sparge::attention::types::{AttnConfig, BlockMask};
+use sparge::baselines;
+use sparge::sparge::kernel::{sparse_flash, sparge_attention, SpargeParams};
+use sparge::sparge::metrics::rel_l1;
+use sparge::sparge::predict::{predict, PredictParams};
+use sparge::util::prop::Cases;
+use sparge::util::rng::Pcg;
+use sparge::workloads::{synthetic, video, SyntheticSpec, VideoSpec};
+
+/// τ monotonicity: lowering τ can only raise (or keep) sparsity and can
+/// only raise (or keep) the error.
+#[test]
+fn tau_monotonicity_on_structured_workloads() {
+    Cases::new(9001, 8).check(|rng| {
+        let n = 512 + rng.range(0, 4) * 128;
+        let s = synthetic::generate(&SyntheticSpec::lm_like(n, 32), rng);
+        let cfg = AttnConfig { bq: 64, bk: 32, causal: false, scale: None, cw: 2 };
+        let dense = attention_flash(&s.q, &s.k, &s.v, &cfg);
+        let mut last_sparsity = -1.0f64;
+        for tau in [0.99f32, 0.9, 0.7, 0.5] {
+            let res = sparge_attention(&s.q, &s.k, &s.v, &cfg, &SpargeParams { tau, theta: 0.3, lambda: None, quant: false });
+            if res.stats.sparsity() + 1e-9 < last_sparsity {
+                return Err(format!("sparsity not monotone at tau={tau}"));
+            }
+            last_sparsity = res.stats.sparsity();
+            let _ = rel_l1(&res.out, &dense);
+        }
+        Ok(())
+    });
+}
+
+/// Baseline masks through the kernel: every method's output rows remain
+/// convex combinations of V rows (|out| bounded by max |V|).
+#[test]
+fn outputs_bounded_by_value_range() {
+    Cases::new(9002, 6).check(|rng| {
+        let s = synthetic::generate(&SyntheticSpec::lm_like(256, 16), rng);
+        let cfg = AttnConfig { bq: 32, bk: 32, causal: false, scale: None, cw: 2 };
+        let vmax = s.v.abs_max();
+        let masks = [
+            baselines::minference_mask(&s.q, &s.k, &cfg, 0.5),
+            baselines::flexprefill_mask(&s.q, &s.k, &cfg, 0.9),
+            baselines::sliding_window_mask(256, 256, &cfg, 1, 3),
+            predict(&s.q, &s.k, &cfg, &PredictParams::default()).mask,
+        ];
+        for mask in &masks {
+            let (out, _) = sparse_flash(&s.q, &s.k, &s.v, mask, &cfg, &SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false });
+            if out.abs_max() > vmax + 1e-4 {
+                return Err(format!("output {} exceeds value range {}", out.abs_max(), vmax));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Permutation invariance: sparge on permuted inputs, un-permuted, equals
+/// sparge-quality on the original ordering within the dense-error budget —
+/// i.e. attention itself commutes with the permutation (§3.7's premise).
+#[test]
+fn attention_commutes_with_permutation() {
+    let spec = VideoSpec { t: 2, h: 8, w: 8, d: 16, smooth: 0.9, signal: 6.0 };
+    let mut rng = Pcg::seeded(9003);
+    let s = video::generate_grid(&spec, &mut rng);
+    let cfg = AttnConfig { bq: 16, bk: 16, causal: false, scale: None, cw: 2 };
+
+    let dense = attention_flash(&s.q, &s.k, &s.v, &cfg);
+    let order = sparge::sparge::hilbert::token_order(sparge::sparge::hilbert::Permutation::HilbertCurve, 2, 8, 8, 0);
+    let ps = video::permute(&s, &spec, sparge::sparge::hilbert::Permutation::HilbertCurve, 0);
+    let dense_perm = attention_flash(&ps.q, &ps.k, &ps.v, &cfg);
+    let back = sparge::sparge::hilbert::permute_rows(&dense_perm, &sparge::sparge::hilbert::invert_order(&order));
+    let err = rel_l1(&back, &dense);
+    assert!(err < 1e-5, "dense attention not permutation invariant: {err}");
+}
+
+/// Combined-filter dominance: (M_g + λ) sparsity ≥ M_g-only sparsity on
+/// any workload/params.
+#[test]
+fn lambda_only_adds_sparsity() {
+    Cases::new(9004, 6).check(|rng| {
+        let s = synthetic::generate(&SyntheticSpec::lm_like(384, 16), rng);
+        let cfg = AttnConfig { bq: 32, bk: 32, causal: rng.chance(0.5), scale: None, cw: 2 };
+        let pred = predict(&s.q, &s.k, &cfg, &PredictParams { tau: 0.9, theta: 0.3 });
+        let p1 = SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false };
+        let p2 = SpargeParams { lambda: Some(-5.0), ..p1 };
+        let (_, st1) = sparse_flash(&s.q, &s.k, &s.v, &pred.mask, &cfg, &p1);
+        let (_, st2) = sparse_flash(&s.q, &s.k, &s.v, &pred.mask, &cfg, &p2);
+        if st2.sparsity() + 1e-12 < st1.sparsity() {
+            return Err(format!("lambda reduced sparsity: {} vs {}", st2.sparsity(), st1.sparsity()));
+        }
+        Ok(())
+    });
+}
+
+/// Quantized and f32 kernels agree on structured inputs within the INT8
+/// budget, for identical masks.
+#[test]
+fn quant_and_f32_kernels_agree() {
+    Cases::new(9005, 5).check(|rng| {
+        let s = synthetic::generate(&SyntheticSpec::lm_like(256, 32), rng);
+        let cfg = AttnConfig { bq: 32, bk: 32, causal: false, scale: None, cw: 2 };
+        let mask = BlockMask::new_all(cfg.n_qblocks(256), cfg.n_kblocks(256), true);
+        let (f32_out, _) = sparse_flash(&s.q, &s.k, &s.v, &mask, &cfg, &SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false });
+        let (q_out, _) = sparse_flash(&s.q, &s.k, &s.v, &mask, &cfg, &SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: true });
+        let err = rel_l1(&q_out, &f32_out);
+        if err > 0.05 {
+            return Err(format!("int8 rel-L1 {err}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,32 @@
+//! Cross-language golden test: the Rust Hilbert order must match the
+//! Python implementation bit-for-bit (python/tests/test_hilbert.py holds
+//! the same constant).
+
+use sparge::sparge::hilbert::{token_order, Permutation};
+
+const GOLDEN_2X4X4: [usize; 32] = [
+    0, 4, 20, 16, 17, 21, 5, 1, 2, 3, 19, 18, 22, 23, 7, 6, 10, 11, 15, 14, 30, 31, 27, 26, 25,
+    9, 13, 29, 28, 12, 8, 24,
+];
+
+#[test]
+fn golden_order_2x4x4_matches_python() {
+    let order = token_order(Permutation::HilbertCurve, 2, 4, 4, 0);
+    assert_eq!(order, GOLDEN_2X4X4.to_vec());
+}
+
+#[test]
+fn golden_index_values() {
+    use sparge::sparge::hilbert::hilbert_index;
+    assert_eq!(hilbert_index([0, 0, 0], 2), 0);
+    let mut vals: Vec<u128> = Vec::new();
+    for a in 0..2 {
+        for b in 0..2 {
+            for c in 0..2 {
+                vals.push(hilbert_index([a, b, c], 1));
+            }
+        }
+    }
+    vals.sort_unstable();
+    assert_eq!(vals, (0..8).collect::<Vec<u128>>());
+}
