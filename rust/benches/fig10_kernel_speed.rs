@@ -4,20 +4,37 @@
 //!
 //! Series: SpargeAttn (ours, INT8), SpargeAttn+FA2 (ours, f32),
 //! MInference, and the dense FlashAttention2 horizontal line. Sparsity is
-//! swept via τ (ours) / keep-budget (MInference).
+//! swept via τ (ours) / keep-budget (MInference). All methods run through
+//! the unified tiled driver with `SPARGE_BENCH_THREADS` row workers
+//! (default: one per core).
 //!
 //! Expected shape: both Sparge variants scale up with sparsity and
 //! dominate MInference at every operating point; the INT8 variant sits
 //! above the f32 one.
 //!
+//! A second section measures intra-head row parallelism on a single head
+//! at n ≥ 4096: wall-clock speedup of `threads = cores` over
+//! `threads = 1`, with bitwise-identical outputs and SkipStats.
+//!
 //! Run: `cargo bench --bench fig10_kernel_speed`
 
 use sparge::attention::types::AttnConfig;
-use sparge::experiments::{bench_reps, full_scale, run_method, Method};
+use sparge::experiments::{bench_reps, bench_threads, full_scale, run_method_threads, Method};
 use sparge::sparge::kernel::SpargeParams;
 use sparge::util::rng::Pcg;
 use sparge::util::table::{fnum, Table};
 use sparge::workloads::{video, VideoSpec};
+
+fn best_of(reps: usize, f: impl Fn() -> sparge::experiments::MethodRun) -> sparge::experiments::MethodRun {
+    let mut best: Option<sparge::experiments::MethodRun> = None;
+    for _ in 0..reps {
+        let r = f();
+        if best.as_ref().map(|b| r.seconds < b.seconds).unwrap_or(true) {
+            best = Some(r);
+        }
+    }
+    best.unwrap()
+}
 
 fn main() {
     let (spec, label) = if full_scale() {
@@ -26,14 +43,15 @@ fn main() {
         (VideoSpec { t: 4, h: 24, w: 24, d: 128, smooth: 0.96, signal: 11.0 }, "2.3K")
     };
     let reps = bench_reps();
-    println!("Fig. 10 — kernel speed vs sparsity (seq {label}, head dim 128, reps {reps})\n");
+    let threads = bench_threads();
+    println!("Fig. 10 — kernel speed vs sparsity (seq {label}, head dim 128, reps {reps}, threads {threads})\n");
 
     let cfg = AttnConfig { bq: 128, bk: 64, causal: false, scale: None, cw: 4 };
     let mut rng = Pcg::seeded(1010);
     let s = video::generate_grid(&spec, &mut rng);
     let (nq, nk, d) = (s.q.dim(0), s.k.dim(0), s.q.dim(1));
 
-    let dense = run_method(&s, &cfg, &Method::Full);
+    let dense = best_of(reps, || run_method_threads(&s, &cfg, &Method::Full, threads));
     let dense_tops = dense.tops(nq, nk, d, false) * 1e3;
 
     let mut table = Table::new(
@@ -44,14 +62,7 @@ fn main() {
     for &tau in &[0.99f32, 0.97, 0.95, 0.9, 0.8, 0.7] {
         for quant in [false, true] {
             let m = Method::Sparge(SpargeParams { tau, theta: 0.3, lambda: Some(-8.0), quant });
-            let mut best: Option<sparge::experiments::MethodRun> = None;
-            for _ in 0..reps {
-                let r = run_method(&s, &cfg, &m);
-                if best.as_ref().map(|b| r.seconds < b.seconds).unwrap_or(true) {
-                    best = Some(r);
-                }
-            }
-            let r = best.unwrap();
+            let r = best_of(reps, || run_method_threads(&s, &cfg, &m, threads));
             table.row(&[
                 m.label(),
                 format!("tau={tau}"),
@@ -65,14 +76,7 @@ fn main() {
     // MInference sweep
     for &budget in &[0.7f64, 0.5, 0.3] {
         let m = Method::Minference { budget };
-        let mut best: Option<sparge::experiments::MethodRun> = None;
-        for _ in 0..reps {
-            let r = run_method(&s, &cfg, &m);
-            if best.as_ref().map(|b| r.seconds < b.seconds).unwrap_or(true) {
-                best = Some(r);
-            }
-        }
-        let r = best.unwrap();
+        let r = best_of(reps, || run_method_threads(&s, &cfg, &m, threads));
         table.row(&[
             m.label(),
             format!("keep={budget}"),
@@ -84,4 +88,36 @@ fn main() {
     }
     table.print();
     println!("\npaper Fig.10 shape: ours > ours+FA2 > baselines at every sparsity; all rise with sparsity");
+
+    // -- intra-head row-parallel scaling: one head, n >= 4096 ------------
+    let scale_spec = if full_scale() {
+        spec
+    } else {
+        VideoSpec { t: 8, h: 24, w: 24, d: 128, smooth: 0.96, signal: 11.0 }
+    };
+    let mut rng = Pcg::seeded(1011);
+    let ss = video::generate_grid(&scale_spec, &mut rng);
+    let n = ss.q.dim(0);
+    println!("\nrow-parallel scaling — single head, n={n}, threads 1 vs {threads}");
+    let mut scaling = Table::new(
+        "unified-driver row parallelism (bitwise-identical outputs)",
+        &["method", "t=1 (s)", &format!("t={threads} (s)"), "speedup", "stats identical"],
+    );
+    for m in [
+        Method::Full,
+        Method::Sparge(SpargeParams { tau: 0.95, theta: 0.3, lambda: Some(-8.0), quant: false }),
+    ] {
+        let serial = best_of(reps, || run_method_threads(&ss, &cfg, &m, 1));
+        let par = best_of(reps, || run_method_threads(&ss, &cfg, &m, threads));
+        let same = serial.stats == par.stats && serial.out == par.out;
+        assert!(same, "{}: parallel run diverged from serial", m.label());
+        scaling.row(&[
+            m.label(),
+            fnum(serial.seconds, 3),
+            fnum(par.seconds, 3),
+            format!("{:.2}x", serial.seconds / par.seconds),
+            "yes".into(),
+        ]);
+    }
+    scaling.print();
 }

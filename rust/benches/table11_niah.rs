@@ -17,7 +17,7 @@
 use sparge::attention::types::AttnConfig;
 use sparge::coordinator::engine::{TRAIN_B, TRAIN_T};
 use sparge::coordinator::{AttnMode, EngineHandle};
-use sparge::experiments::{run_method, Method};
+use sparge::experiments::{bench_threads, run_method_threads, Method};
 use sparge::runtime::Manifest;
 use sparge::sparge::kernel::SpargeParams;
 use sparge::sparge::metrics::rel_l1;
@@ -108,7 +108,7 @@ fn part2_attention_level() {
         }
     }
 
-    let dense = run_method(&s, &cfg, &Method::Full);
+    let dense = run_method_threads(&s, &cfg, &Method::Full, bench_threads());
     let methods = [
         Method::Minference { budget: 0.5 },
         Method::FlexPrefill { gamma: 0.95 },
@@ -120,7 +120,7 @@ fn part2_attention_level() {
     );
     table.row(&["Full-Attention".into(), "0.00".into(), "0".into(), "0".into()]);
     for m in &methods {
-        let r = run_method(&s, &cfg, m);
+        let r = run_method_threads(&s, &cfg, m, bench_threads());
         let post = |t: &sparge::tensor::Tensor| t.rows(needle_at + 32, n.min(needle_at + 4096));
         table.row(&[
             m.label(),

@@ -16,7 +16,7 @@
 //! Run: `cargo bench --bench table1_end2end` (SPARGE_BENCH_FULL=1 for
 //! paper-scale sequence lengths).
 
-use sparge::experiments::{full_scale, run_method, Method};
+use sparge::experiments::{bench_threads, full_scale, run_method_threads, Method};
 use sparge::models::{suite, Workload};
 use sparge::sparge::kernel::SpargeParams;
 use sparge::sparge::metrics::{cosine, psnr, rel_l1};
@@ -54,14 +54,14 @@ fn main() {
             Method::Sparge(sparge_params),
         ];
 
-        let dense = run_method(&sample, &cfg, &Method::Full);
+        let dense = run_method_threads(&sample, &cfg, &Method::Full, bench_threads());
         let (nq, nk, d) = (sample.q.dim(0), sample.k.dim(0), sample.q.dim(1));
         let mut table = Table::new(
             &format!("{} (seq {}, l1={}, l2={})", card.name, card.seq_len(), card.l1, card.l2),
             &["Attention (Sparsity)", "TOPS(cpu)", "TOPS(gpu-translated)", "rel-L1 v", "Cos ^", "PSNR ^"],
         );
         for m in &methods {
-            let r = run_method(&sample, &cfg, m);
+            let r = run_method_threads(&sample, &cfg, m, bench_threads());
             table.row(&[
                 format!("{} ({:.2})", m.label(), r.stats.sparsity()),
                 fnum(r.tops(nq, nk, d, cfg.causal) * 1e3, 2), // CPU GOPS reads better

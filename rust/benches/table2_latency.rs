@@ -12,7 +12,7 @@
 //! Run: `cargo bench --bench table2_latency`
 
 use sparge::attention::types::AttnConfig;
-use sparge::experiments::{bench_reps, full_scale, run_method, Method};
+use sparge::experiments::{bench_reps, bench_threads, full_scale, run_method_threads, Method};
 use sparge::models::{suite, Task, Workload};
 use sparge::sparge::kernel::SpargeParams;
 use sparge::sparge::tune::{tune_layer, CalibSample, TuneOptions};
@@ -25,7 +25,7 @@ use sparge::workloads::{self, QkvSample};
 const NON_ATTN_FRACTION: f64 = 0.38;
 
 fn attention_stack_seconds(samples: &[QkvSample], cfg: &AttnConfig, method: &Method) -> f64 {
-    samples.iter().map(|s| run_method(s, cfg, method).seconds).sum()
+    samples.iter().map(|s| run_method_threads(s, cfg, method, bench_threads()).seconds).sum()
 }
 
 fn main() {

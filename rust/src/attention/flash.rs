@@ -1,170 +1,11 @@
-//! Blockwise FlashAttention (online softmax) in f32 — the dense tiled
-//! engine (§3.1) and the `FlashTile` accumulator shared with the sparse
-//! SpargeAttn kernel in `crate::sparge::kernel`.
+//! Dense blockwise FlashAttention (online softmax) in f32 — a thin
+//! composition over the unified tiled pipeline: the [`F32Kernel`] score
+//! path with the all-blocks [`DenseFilter`] (§3.1 of the paper).
 
-use crate::tensor::{matmul, Tensor};
+use crate::tensor::Tensor;
 
+use super::pipeline::{run_tiled, DenseFilter, F32Kernel};
 use super::types::{AttnConfig, SkipStats};
-
-/// Per-query-tile online-softmax state: running row maxima `m`, partition
-/// sums `l`, and unnormalized output `O` (Eq. 1 of the paper).
-pub struct FlashTile {
-    pub rows: usize,
-    pub d: usize,
-    pub m: Vec<f32>,
-    pub l: Vec<f32>,
-    pub o: Vec<f32>,
-    /// Scratch for P̃ (rows × current bk).
-    p: Vec<f32>,
-}
-
-impl FlashTile {
-    pub fn new(rows: usize, d: usize, max_bk: usize) -> FlashTile {
-        FlashTile {
-            rows,
-            d,
-            m: vec![f32::NEG_INFINITY; rows],
-            l: vec![0.0; rows],
-            o: vec![0.0; rows * d],
-            p: vec![0.0; rows * max_bk],
-        }
-    }
-
-    /// Ingest one score block `s` (rows × bk, already scaled and causal-
-    /// masked). `v` is the (bk × d) value block. When `lambda` is set, the
-    /// tile is split into `cw` row groups and a group's P̃V product is
-    /// skipped when `max(m_local − m_new) < λ` over the group (§3.4);
-    /// skipped groups are counted into `stats.pv_skipped_groups`.
-    pub fn ingest(
-        &mut self,
-        s: &[f32],
-        bk: usize,
-        v: &[f32],
-        lambda: Option<f32>,
-        cw: usize,
-        stats: &mut SkipStats,
-    ) {
-        debug_assert_eq!(s.len(), self.rows * bk);
-        debug_assert_eq!(v.len(), bk * self.d);
-        let rows = self.rows;
-        let d = self.d;
-
-        // Per-row: local max, new max, rescale o/l, exponentiate into p.
-        let mut m_local = vec![f32::NEG_INFINITY; rows];
-        for i in 0..rows {
-            let srow = &s[i * bk..(i + 1) * bk];
-            let ml = srow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-            m_local[i] = ml;
-            let m_new = self.m[i].max(ml);
-            if m_new == f32::NEG_INFINITY {
-                // fully-masked so far; nothing to accumulate
-                for pv in &mut self.p[i * bk..(i + 1) * bk] {
-                    *pv = 0.0;
-                }
-                continue;
-            }
-            let factor = if self.m[i] == f32::NEG_INFINITY { 0.0 } else { (self.m[i] - m_new).exp() };
-            if factor != 1.0 {
-                self.l[i] *= factor;
-                for ov in &mut self.o[i * d..(i + 1) * d] {
-                    *ov *= factor;
-                }
-            }
-            self.m[i] = m_new;
-            let prow = &mut self.p[i * bk..(i + 1) * bk];
-            let mut lsum = 0f32;
-            for (pv, &sv) in prow.iter_mut().zip(srow) {
-                let e = if sv == f32::NEG_INFINITY { 0.0 } else { (sv - m_new).exp() };
-                *pv = e;
-                lsum += e;
-            }
-            self.l[i] += lsum;
-        }
-
-        // P̃V per row group, with optional λ skipping.
-        let cw = cw.max(1).min(rows);
-        let group = rows.div_ceil(cw);
-        let mut g0 = 0;
-        while g0 < rows {
-            let g1 = (g0 + group).min(rows);
-            let skip = match lambda {
-                Some(lam) => {
-                    let worst = (g0..g1)
-                        .map(|i| m_local[i] - self.m[i])
-                        .fold(f32::NEG_INFINITY, f32::max);
-                    worst < lam
-                }
-                None => false,
-            };
-            if skip {
-                stats.pv_skipped_groups += 1;
-            } else {
-                matmul::matmul_nn_acc(
-                    &self.p[g0 * bk..g1 * bk],
-                    v,
-                    &mut self.o[g0 * d..g1 * d],
-                    g1 - g0,
-                    d,
-                    bk,
-                    true,
-                );
-            }
-            g0 = g1;
-        }
-    }
-
-    /// Normalize and return the output rows (rows × d).
-    pub fn finalize(mut self) -> Vec<f32> {
-        for i in 0..self.rows {
-            let l = self.l[i];
-            let inv = if l > 0.0 { 1.0 / l } else { 0.0 };
-            for ov in &mut self.o[i * self.d..(i + 1) * self.d] {
-                *ov *= inv;
-            }
-        }
-        self.o
-    }
-}
-
-/// Compute a scaled, causal-masked score block S_ij = Q_i K_jᵀ·scale.
-///
-/// `q0`/`k0` are the global row offsets of the blocks (for causal masking).
-pub fn score_block(
-    q: &Tensor,
-    k: &Tensor,
-    q0: usize,
-    q1: usize,
-    k0: usize,
-    k1: usize,
-    scale: f32,
-    causal: bool,
-    out: &mut [f32],
-) {
-    let d = q.dim(1);
-    let (bq, bk) = (q1 - q0, k1 - k0);
-    debug_assert!(out.len() >= bq * bk);
-    matmul::matmul_nt_into(
-        &q.data()[q0 * d..q1 * d],
-        &k.data()[k0 * d..k1 * d],
-        &mut out[..bq * bk],
-        bq,
-        bk,
-        d,
-    );
-    for s in &mut out[..bq * bk] {
-        *s *= scale;
-    }
-    if causal {
-        for i in 0..bq {
-            let gi = q0 + i;
-            for j in 0..bk {
-                if k0 + j > gi {
-                    out[i * bk + j] = f32::NEG_INFINITY;
-                }
-            }
-        }
-    }
-}
 
 /// Dense blockwise FlashAttention over a single head. Numerically matches
 /// `attention_naive` to fp32 rounding.
@@ -180,39 +21,20 @@ pub fn attention_flash_stats(
     v: &Tensor,
     cfg: &AttnConfig,
 ) -> (Tensor, SkipStats) {
-    assert_eq!(q.dim(1), k.dim(1));
-    assert_eq!(k.dim(0), v.dim(0));
-    let n = q.dim(0);
-    let nk = k.dim(0);
-    let d = q.dim(1);
-    let scale = cfg.scale_for(d);
-    let mut out = Tensor::zeros(&[n, v.dim(1)]);
-    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
-    let mut sbuf = vec![0f32; cfg.bq * cfg.bk];
+    attention_flash_stats_threads(q, k, v, cfg, 1)
+}
 
-    let mut q0 = 0;
-    while q0 < n {
-        let q1 = (q0 + cfg.bq).min(n);
-        let mut tile = FlashTile::new(q1 - q0, v.dim(1), cfg.bk);
-        let mut k0 = 0;
-        while k0 < nk {
-            let k1 = (k0 + cfg.bk).min(nk);
-            // causal: skip blocks strictly above the diagonal entirely;
-            // they are not part of "full attention required".
-            if cfg.causal && k0 > q1 - 1 {
-                break;
-            }
-            stats.qk_total += 1;
-            stats.pv_total += 1;
-            score_block(q, k, q0, q1, k0, k1, scale, cfg.causal, &mut sbuf);
-            tile.ingest(&sbuf[..(q1 - q0) * (k1 - k0)], k1 - k0, &v.data()[k0 * v.dim(1)..k1 * v.dim(1)], None, cfg.cw, &mut stats);
-            k0 = k1;
-        }
-        let rows = tile.finalize();
-        out.data_mut()[q0 * v.dim(1)..q1 * v.dim(1)].copy_from_slice(&rows);
-        q0 = q1;
-    }
-    (out, stats)
+/// Dense flash with query-block rows partitioned across `threads` workers.
+/// Output and stats are bitwise identical for every thread count.
+pub fn attention_flash_stats_threads(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    threads: usize,
+) -> (Tensor, SkipStats) {
+    let kernel = F32Kernel::new(q, k, cfg);
+    run_tiled(q, k, v, cfg, &kernel, &DenseFilter, threads)
 }
 
 #[cfg(test)]
@@ -293,19 +115,16 @@ mod tests {
     }
 
     #[test]
-    fn lambda_zero_threshold_never_fires_on_first_block() {
-        // With one block, m_local == m_new so the λ test (strict <) never
-        // triggers for λ<=0; output must equal dense.
-        let mut rng = crate::util::rng::Pcg::seeded(12);
-        let (n, d) = (8, 4);
+    fn threaded_dense_bitwise_equals_serial() {
+        let mut rng = crate::util::rng::Pcg::seeded(16);
+        let (n, d) = (200, 16);
         let q = Tensor::randn(&[n, d], &mut rng);
         let k = Tensor::randn(&[n, d], &mut rng);
         let v = Tensor::randn(&[n, d], &mut rng);
-        let mut tile = FlashTile::new(n, d, n);
-        let mut s = vec![0f32; n * n];
-        score_block(&q, &k, 0, n, 0, n, 0.5, false, &mut s);
-        let mut stats = SkipStats::default();
-        tile.ingest(&s, n, v.data(), Some(-0.1), 2, &mut stats);
-        assert_eq!(stats.pv_skipped_groups, 0);
+        let cfg = AttnConfig { bq: 32, bk: 16, causal: true, scale: None, cw: 2 };
+        let (o1, s1) = attention_flash_stats_threads(&q, &k, &v, &cfg, 1);
+        let (o8, s8) = attention_flash_stats_threads(&q, &k, &v, &cfg, 8);
+        assert_eq!(o1, o8);
+        assert_eq!(s1, s8);
     }
 }

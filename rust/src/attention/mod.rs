@@ -1,10 +1,20 @@
-//! Attention engines: the naive dense oracle and the blockwise
-//! FlashAttention implementation the SpargeAttn kernel builds on.
+//! Attention engines, organized around **one** tiled loop.
+//!
+//! [`pipeline`] owns the single q-block × k-block driver ([`run_tiled`])
+//! and the two seams every engine composes from: [`ScoreKernel`] (how a
+//! score block is produced — f32 matmul vs. INT8 dequant) and
+//! [`BlockFilter`] (which blocks run — dense, stage-1 mask, stage-2 λ,
+//! causal bound). [`flash`] is the dense composition, [`dense`] the naive
+//! softmax oracle used by tests, and `crate::sparge::kernel` the sparse +
+//! quantized compositions. Adding an engine means adding a kernel or
+//! filter impl — never another loop.
 
 pub mod dense;
 pub mod flash;
+pub mod pipeline;
 pub mod types;
 
 pub use dense::attention_naive;
-pub use flash::{attention_flash, attention_flash_stats, FlashTile};
+pub use flash::{attention_flash, attention_flash_stats, attention_flash_stats_threads};
+pub use pipeline::{run_tiled, score_block, BlockFilter, DenseFilter, F32Kernel, FlashTile, MaskFilter, ScoreKernel};
 pub use types::{AttnConfig, BlockMask, SkipStats};

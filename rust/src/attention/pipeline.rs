@@ -1,0 +1,449 @@
+//! The unified tiled-attention pipeline: **the one q-block × k-block loop
+//! in the crate**.
+//!
+//! Every attention engine — dense FlashAttention, SpargeAttn f32, the
+//! SageAttention INT8 variant, and every baseline mask policy — is a thin
+//! composition over [`run_tiled`] with two pluggable seams:
+//!
+//! - [`ScoreKernel`]: how a visited score block `S_ij = Q_i K_jᵀ · scale`
+//!   is produced (plain f32 matmul vs. INT8 dequant scoring). The kernel
+//!   owns whatever precomputed state it needs (e.g. quantized blocks) and
+//!   applies its own causal masking, so the driver never touches scores.
+//! - [`BlockFilter`]: which blocks are computed at all — the stage-1
+//!   `M_g` lookup (§3.2–3.3), the stage-2 online-softmax λ threshold
+//!   (§3.4), and the causal-domain bound that keeps upper-triangle blocks
+//!   out of both the loop and the [`SkipStats`] totals.
+//!
+//! The driver partitions query-block rows across [`crate::util::threadpool`]
+//! workers: each row's [`FlashTile`] is independent and writes a disjoint
+//! slice of the output, so the result is **bitwise identical** for every
+//! thread count (accumulation order within a tile never changes) and
+//! per-row [`SkipStats`] are merged in row order.
+//!
+//! Extension recipe: a new sparse-attention baseline is a new
+//! [`BlockFilter`] impl; a new score path (a different precision, a new
+//! dequant scheme) is a new [`ScoreKernel`] impl. Neither requires touching
+//! this loop again.
+
+use crate::tensor::{matmul, Tensor};
+use crate::util::threadpool;
+
+use super::types::{AttnConfig, BlockMask, SkipStats};
+
+/// Per-query-tile online-softmax state: running row maxima `m`, partition
+/// sums `l`, and unnormalized output `O` (Eq. 1 of the paper).
+pub struct FlashTile {
+    pub rows: usize,
+    pub d: usize,
+    pub m: Vec<f32>,
+    pub l: Vec<f32>,
+    pub o: Vec<f32>,
+    /// Scratch for P̃ (rows × current bk).
+    p: Vec<f32>,
+    /// Scratch for per-row local maxima, reused across ingested blocks.
+    m_local: Vec<f32>,
+}
+
+impl FlashTile {
+    pub fn new(rows: usize, d: usize, max_bk: usize) -> FlashTile {
+        FlashTile {
+            rows,
+            d,
+            m: vec![f32::NEG_INFINITY; rows],
+            l: vec![0.0; rows],
+            o: vec![0.0; rows * d],
+            p: vec![0.0; rows * max_bk],
+            m_local: vec![f32::NEG_INFINITY; rows],
+        }
+    }
+
+    /// Ingest one score block `s` (rows × bk, already scaled and causal-
+    /// masked). `v` is the (bk × d) value block. When `lambda` is set, the
+    /// tile is split into `cw` row groups and a group's P̃V product is
+    /// skipped when `max(m_local − m_new) < λ` over the group (§3.4);
+    /// skipped groups are counted into `stats.pv_skipped_groups`.
+    pub fn ingest(
+        &mut self,
+        s: &[f32],
+        bk: usize,
+        v: &[f32],
+        lambda: Option<f32>,
+        cw: usize,
+        stats: &mut SkipStats,
+    ) {
+        debug_assert_eq!(s.len(), self.rows * bk);
+        debug_assert_eq!(v.len(), bk * self.d);
+        let rows = self.rows;
+        let d = self.d;
+
+        // Per-row: local max, new max, rescale o/l, exponentiate into p.
+        // `m_local[i]` is written before any early-out below, so the group
+        // pass always sees this block's values.
+        for i in 0..rows {
+            let srow = &s[i * bk..(i + 1) * bk];
+            let ml = srow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            self.m_local[i] = ml;
+            let m_new = self.m[i].max(ml);
+            if m_new == f32::NEG_INFINITY {
+                // fully-masked so far; nothing to accumulate
+                for pv in &mut self.p[i * bk..(i + 1) * bk] {
+                    *pv = 0.0;
+                }
+                continue;
+            }
+            let factor = if self.m[i] == f32::NEG_INFINITY { 0.0 } else { (self.m[i] - m_new).exp() };
+            if factor != 1.0 {
+                self.l[i] *= factor;
+                for ov in &mut self.o[i * d..(i + 1) * d] {
+                    *ov *= factor;
+                }
+            }
+            self.m[i] = m_new;
+            let prow = &mut self.p[i * bk..(i + 1) * bk];
+            let mut lsum = 0f32;
+            for (pv, &sv) in prow.iter_mut().zip(srow) {
+                let e = if sv == f32::NEG_INFINITY { 0.0 } else { (sv - m_new).exp() };
+                *pv = e;
+                lsum += e;
+            }
+            self.l[i] += lsum;
+        }
+
+        // P̃V per row group, with optional λ skipping.
+        let cw = cw.max(1).min(rows);
+        let group = rows.div_ceil(cw);
+        let mut g0 = 0;
+        while g0 < rows {
+            let g1 = (g0 + group).min(rows);
+            let skip = match lambda {
+                Some(lam) => {
+                    let worst = (g0..g1)
+                        .map(|i| self.m_local[i] - self.m[i])
+                        .fold(f32::NEG_INFINITY, f32::max);
+                    worst < lam
+                }
+                None => false,
+            };
+            if skip {
+                stats.pv_skipped_groups += 1;
+            } else {
+                matmul::matmul_nn_acc(
+                    &self.p[g0 * bk..g1 * bk],
+                    v,
+                    &mut self.o[g0 * d..g1 * d],
+                    g1 - g0,
+                    d,
+                    bk,
+                    true,
+                );
+            }
+            g0 = g1;
+        }
+    }
+
+    /// Normalize and return the output rows (rows × d).
+    pub fn finalize(mut self) -> Vec<f32> {
+        for i in 0..self.rows {
+            let l = self.l[i];
+            let inv = if l > 0.0 { 1.0 / l } else { 0.0 };
+            for ov in &mut self.o[i * self.d..(i + 1) * self.d] {
+                *ov *= inv;
+            }
+        }
+        self.o
+    }
+}
+
+/// Compute a scaled, causal-masked score block S_ij = Q_i K_jᵀ·scale.
+///
+/// `q0`/`k0` are the global row offsets of the blocks (for causal masking).
+#[allow(clippy::too_many_arguments)]
+pub fn score_block(
+    q: &Tensor,
+    k: &Tensor,
+    q0: usize,
+    q1: usize,
+    k0: usize,
+    k1: usize,
+    scale: f32,
+    causal: bool,
+    out: &mut [f32],
+) {
+    let d = q.dim(1);
+    let (bq, bk) = (q1 - q0, k1 - k0);
+    debug_assert!(out.len() >= bq * bk);
+    matmul::matmul_nt_into(
+        &q.data()[q0 * d..q1 * d],
+        &k.data()[k0 * d..k1 * d],
+        &mut out[..bq * bk],
+        bq,
+        bk,
+        d,
+    );
+    for s in &mut out[..bq * bk] {
+        *s *= scale;
+    }
+    if causal {
+        for i in 0..bq {
+            let gi = q0 + i;
+            for j in 0..bk {
+                if k0 + j > gi {
+                    out[i * bk + j] = f32::NEG_INFINITY;
+                }
+            }
+        }
+    }
+}
+
+/// How a visited score block is produced. Implementations hold whatever
+/// precomputed state they need (Q/K views, quantized blocks, scales) and
+/// are shared read-only across row workers (`Sync`).
+pub trait ScoreKernel: Sync {
+    /// Write the scaled, causal-masked score block for global query rows
+    /// `[q0, q1)` × key rows `[k0, k1)` into `out[..(q1-q0)*(k1-k0)]`.
+    fn score_block(&self, q0: usize, q1: usize, k0: usize, k1: usize, out: &mut [f32]);
+}
+
+/// Which blocks the driver visits, and with what stage-2 threshold.
+pub trait BlockFilter: Sync {
+    /// Stage-1 decision for block (bi, bj). Only called inside the causal
+    /// domain; `false` counts the block as skipped in [`SkipStats`].
+    fn keep(&self, bi: usize, bj: usize) -> bool;
+
+    /// Stage-2 online-softmax threshold λ (`None` disables the filter).
+    fn lambda(&self) -> Option<f32> {
+        None
+    }
+
+    /// Exclusive k-block bound for the query rows ending at `q1` — the
+    /// causal-domain edge. Blocks at or past the bound are outside "full
+    /// attention required" and excluded from both the loop and the
+    /// [`SkipStats`] totals.
+    fn kblock_end(&self, q1: usize, cfg: &AttnConfig, tn: usize) -> usize {
+        if cfg.causal {
+            q1.div_ceil(cfg.bk).min(tn)
+        } else {
+            tn
+        }
+    }
+}
+
+/// Plain f32 scoring over borrowed Q/K (the FlashAttention-2 path).
+pub struct F32Kernel<'a> {
+    q: &'a Tensor,
+    k: &'a Tensor,
+    scale: f32,
+    causal: bool,
+}
+
+impl<'a> F32Kernel<'a> {
+    pub fn new(q: &'a Tensor, k: &'a Tensor, cfg: &AttnConfig) -> F32Kernel<'a> {
+        assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
+        F32Kernel { q, k, scale: cfg.scale_for(q.dim(1)), causal: cfg.causal }
+    }
+}
+
+impl ScoreKernel for F32Kernel<'_> {
+    fn score_block(&self, q0: usize, q1: usize, k0: usize, k1: usize, out: &mut [f32]) {
+        score_block(self.q, self.k, q0, q1, k0, k1, self.scale, self.causal, out);
+    }
+}
+
+/// Dense filter: every in-domain block is computed, no λ stage.
+pub struct DenseFilter;
+
+impl BlockFilter for DenseFilter {
+    fn keep(&self, _bi: usize, _bj: usize) -> bool {
+        true
+    }
+}
+
+/// Stage-1 `BlockMask` lookup plus optional stage-2 λ — the SpargeAttn
+/// filter, also driven by every baseline's mask (MInference, FlexPrefill,
+/// sliding-window) so mask policy is the only variable between methods.
+pub struct MaskFilter<'a> {
+    mask: &'a BlockMask,
+    lambda: Option<f32>,
+}
+
+impl<'a> MaskFilter<'a> {
+    pub fn new(mask: &'a BlockMask, lambda: Option<f32>) -> MaskFilter<'a> {
+        MaskFilter { mask, lambda }
+    }
+}
+
+impl BlockFilter for MaskFilter<'_> {
+    fn keep(&self, bi: usize, bj: usize) -> bool {
+        self.mask.get(bi, bj)
+    }
+
+    fn lambda(&self) -> Option<f32> {
+        self.lambda
+    }
+}
+
+/// The unified tiled-attention driver, parallel over query-block rows.
+///
+/// Runs blockwise online-softmax attention of `q` against `k`/`v` under
+/// `cfg`, producing scores through `kernel` and block decisions through
+/// `filter`. Query-block rows are partitioned across up to `threads`
+/// workers; each row writes a disjoint output slice and accumulates its
+/// own [`SkipStats`], merged in row order afterwards — so outputs *and*
+/// stats are identical for every thread count.
+pub fn run_tiled(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    kernel: &impl ScoreKernel,
+    filter: &impl BlockFilter,
+    threads: usize,
+) -> (Tensor, SkipStats) {
+    assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
+    assert_eq!(k.dim(0), v.dim(0), "k/v rows");
+    let n = q.dim(0);
+    let nk = k.dim(0);
+    let dv = v.dim(1);
+    let tm = cfg.n_qblocks(n);
+    let tn = cfg.n_kblocks(nk);
+
+    let mut out = Tensor::zeros(&[n, dv]);
+    let row_stats = {
+        // Disjoint per-row output slices; each worker locks only its own
+        // (uncontended) mutex, so no copies and no write races.
+        let row_chunks: Vec<std::sync::Mutex<&mut [f32]>> =
+            out.data_mut().chunks_mut(cfg.bq * dv).map(std::sync::Mutex::new).collect();
+        threadpool::parallel_map(tm, threads, |bi| {
+            let q0 = bi * cfg.bq;
+            let q1 = (q0 + cfg.bq).min(n);
+            let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
+            let mut tile = FlashTile::new(q1 - q0, dv, cfg.bk);
+            let mut sbuf = vec![0f32; (q1 - q0) * cfg.bk];
+            for bj in 0..filter.kblock_end(q1, cfg, tn) {
+                let k0 = bj * cfg.bk;
+                let k1 = (k0 + cfg.bk).min(nk);
+                stats.qk_total += 1;
+                stats.pv_total += 1;
+                if !filter.keep(bi, bj) {
+                    stats.qk_skipped += 1;
+                    stats.pv_skipped += 1;
+                    continue;
+                }
+                let sb = &mut sbuf[..(q1 - q0) * (k1 - k0)];
+                kernel.score_block(q0, q1, k0, k1, sb);
+                tile.ingest(sb, k1 - k0, &v.data()[k0 * dv..k1 * dv], filter.lambda(), cfg.cw, &mut stats);
+            }
+            row_chunks[bi].lock().unwrap().copy_from_slice(&tile.finalize());
+            stats
+        })
+    };
+    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
+    for s in &row_stats {
+        stats.merge(s);
+    }
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::attention_naive;
+    use crate::util::prop::{assert_allclose, Cases};
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn lambda_zero_threshold_never_fires_on_first_block() {
+        // With one block, m_local == m_new so the λ test (strict <) never
+        // triggers for λ<=0; output must equal dense.
+        let mut rng = Pcg::seeded(12);
+        let (n, d) = (8, 4);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let mut tile = FlashTile::new(n, d, n);
+        let mut s = vec![0f32; n * n];
+        score_block(&q, &k, 0, n, 0, n, 0.5, false, &mut s);
+        let mut stats = SkipStats::default();
+        tile.ingest(&s, n, v.data(), Some(-0.1), 2, &mut stats);
+        assert_eq!(stats.pv_skipped_groups, 0);
+    }
+
+    #[test]
+    fn ingest_scratch_is_reused_across_blocks() {
+        // Two sequential ingests through the same tile must equal one
+        // dense pass — the hoisted m_local scratch must not leak state.
+        let mut rng = Pcg::seeded(13);
+        let (n, d) = (8, 4);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let cfg = AttnConfig { bq: 8, bk: 4, causal: false, scale: None, cw: 2 };
+        let kernel = F32Kernel::new(&q, &k, &cfg);
+        let (out, _) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, 1);
+        let oracle = attention_naive(&q, &k, &v, &cfg);
+        assert_allclose(out.data(), oracle.data(), 1e-4, 1e-3, "scratch-reuse").unwrap();
+    }
+
+    #[test]
+    fn driver_matches_oracle_under_threads() {
+        Cases::standard(801).check(|rng| {
+            let n = rng.range(1, 70);
+            let d = [4, 8, 16][rng.range(0, 3)];
+            let cfg = AttnConfig {
+                bq: rng.range(1, 20),
+                bk: rng.range(1, 20),
+                causal: rng.chance(0.5),
+                scale: None,
+                cw: rng.range(1, 5),
+            };
+            let q = Tensor::randn(&[n, d], rng);
+            let k = Tensor::randn(&[n, d], rng);
+            let v = Tensor::randn(&[n, d], rng);
+            let kernel = F32Kernel::new(&q, &k, &cfg);
+            let (o1, s1) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, 1);
+            let (o4, s4) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, 4);
+            if o1 != o4 {
+                return Err("threaded driver not bitwise equal".into());
+            }
+            if s1 != s4 {
+                return Err("threaded stats differ".into());
+            }
+            let oracle = attention_naive(&q, &k, &v, &cfg);
+            assert_allclose(o1.data(), oracle.data(), 1e-4, 1e-3, "driver-vs-oracle")
+        });
+    }
+
+    #[test]
+    fn causal_domain_bound_excludes_upper_triangle() {
+        let mut rng = Pcg::seeded(14);
+        let (n, d) = (64, 8);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2 };
+        let kernel = F32Kernel::new(&q, &k, &cfg);
+        let (_, stats) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, 1);
+        // 4 q-blocks; block row i visits i+1 k-blocks => 1+2+3+4 = 10
+        assert_eq!(stats.qk_total, 10);
+        assert_eq!(stats.pv_total, 10);
+    }
+
+    #[test]
+    fn mask_filter_skips_and_counts() {
+        let mut rng = Pcg::seeded(15);
+        let (n, d) = (32, 8);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let cfg = AttnConfig { bq: 8, bk: 8, causal: false, scale: None, cw: 2 };
+        let mut mask = BlockMask::new_all(4, 4, true);
+        mask.set(0, 3, false);
+        mask.set(2, 1, false);
+        let kernel = F32Kernel::new(&q, &k, &cfg);
+        let filter = MaskFilter::new(&mask, None);
+        let (_, stats) = run_tiled(&q, &k, &v, &cfg, &kernel, &filter, 1);
+        assert_eq!(stats.qk_total, 16);
+        assert_eq!(stats.qk_skipped, 2);
+        assert_eq!(stats.pv_skipped, 2);
+    }
+}

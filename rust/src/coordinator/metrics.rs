@@ -13,8 +13,10 @@ struct Inner {
     requests: u64,
     tokens_out: u64,
     errors: u64,
+    sparse_requests: u64,
     latencies: Vec<f64>,
     compute: Vec<f64>,
+    sparsity: Vec<f64>,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -23,10 +25,14 @@ pub struct Snapshot {
     pub requests: u64,
     pub tokens_out: u64,
     pub errors: u64,
+    /// Requests that reported a kernel sparsity.
+    pub sparse_requests: u64,
     pub latency_p50: f64,
     pub latency_p99: f64,
     pub mean_compute: f64,
     pub tokens_per_sec: f64,
+    /// Mean achieved sparsity over sparsity-reporting requests (0 if none).
+    pub mean_sparsity: f64,
 }
 
 impl Metrics {
@@ -34,19 +40,40 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// Record a completed request.
-    pub fn record(&self, tokens_out: usize, latency: f64, compute: f64) {
+    /// Bound a sample reservoir: keep the newest 4096 samples.
+    fn trim(v: &mut Vec<f64>) {
+        if v.len() > 4096 {
+            let cut = v.len() - 4096;
+            v.drain(..cut);
+        }
+    }
+
+    /// Record a completed request. `sparsity` is the achieved kernel
+    /// sparsity when the request ran through the sparse pipeline and
+    /// reported it, else `None`.
+    pub fn record(&self, tokens_out: usize, latency: f64, compute: f64, sparsity: Option<f64>) {
         let mut g = self.inner.lock().unwrap();
         g.requests += 1;
         g.tokens_out += tokens_out as u64;
         g.latencies.push(latency);
         g.compute.push(compute);
-        // bound memory: keep the newest 4096 samples
-        if g.latencies.len() > 4096 {
-            let cut = g.latencies.len() - 4096;
-            g.latencies.drain(..cut);
-            g.compute.drain(..cut);
+        if let Some(s) = sparsity {
+            g.sparse_requests += 1;
+            g.sparsity.push(s);
+            Self::trim(&mut g.sparsity);
         }
+        Self::trim(&mut g.latencies);
+        Self::trim(&mut g.compute);
+    }
+
+    /// Record a kernel-level `attn` probe: only its per-request sparsity.
+    /// Probe timings deliberately stay out of the request/latency/compute
+    /// reservoirs so serving metrics keep describing generation traffic.
+    pub fn record_probe(&self, sparsity: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.sparse_requests += 1;
+        g.sparsity.push(sparsity);
+        Self::trim(&mut g.sparsity);
     }
 
     pub fn record_error(&self) {
@@ -58,14 +85,17 @@ impl Metrics {
         let mut lat = g.latencies.clone();
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let total_compute: f64 = g.compute.iter().sum();
+        let total_sparsity: f64 = g.sparsity.iter().sum();
         Snapshot {
             requests: g.requests,
             tokens_out: g.tokens_out,
             errors: g.errors,
+            sparse_requests: g.sparse_requests,
             latency_p50: if lat.is_empty() { 0.0 } else { crate::util::stats::percentile_sorted(&lat, 0.5) },
             latency_p99: if lat.is_empty() { 0.0 } else { crate::util::stats::percentile_sorted(&lat, 0.99) },
             mean_compute: if g.compute.is_empty() { 0.0 } else { total_compute / g.compute.len() as f64 },
             tokens_per_sec: if total_compute > 0.0 { g.tokens_out as f64 / total_compute } else { 0.0 },
+            mean_sparsity: if g.sparsity.is_empty() { 0.0 } else { total_sparsity / g.sparsity.len() as f64 },
         }
     }
 }
@@ -77,16 +107,18 @@ mod tests {
     #[test]
     fn records_and_snapshots() {
         let m = Metrics::new();
-        m.record(10, 0.5, 0.4);
-        m.record(20, 1.5, 1.2);
+        m.record(10, 0.5, 0.4, None);
+        m.record(20, 1.5, 1.2, None);
         m.record_error();
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.tokens_out, 30);
         assert_eq!(s.errors, 1);
+        assert_eq!(s.sparse_requests, 0);
         assert!((s.latency_p50 - 1.0).abs() < 1e-9);
         assert!((s.mean_compute - 0.8).abs() < 1e-9);
         assert!((s.tokens_per_sec - 30.0 / 1.6).abs() < 1e-9);
+        assert_eq!(s.mean_sparsity, 0.0);
     }
 
     #[test]
@@ -94,15 +126,46 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.latency_p50, 0.0);
+        assert_eq!(s.mean_sparsity, 0.0);
+    }
+
+    #[test]
+    fn per_request_sparsity_is_aggregated() {
+        let m = Metrics::new();
+        m.record(0, 0.1, 0.1, Some(0.6));
+        m.record(0, 0.1, 0.1, Some(0.8));
+        m.record(5, 0.1, 0.1, None);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.sparse_requests, 2);
+        assert!((s.mean_sparsity - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn probes_do_not_pollute_serving_reservoirs() {
+        let m = Metrics::new();
+        m.record(10, 0.5, 0.4, None);
+        m.record_probe(0.25);
+        m.record_probe(0.75);
+        let s = m.snapshot();
+        // probes count toward sparsity aggregates only
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.tokens_out, 10);
+        assert_eq!(s.sparse_requests, 2);
+        assert!((s.mean_sparsity - 0.5).abs() < 1e-9);
+        assert!((s.latency_p50 - 0.5).abs() < 1e-9);
+        assert!((s.mean_compute - 0.4).abs() < 1e-9);
     }
 
     #[test]
     fn reservoir_is_bounded() {
         let m = Metrics::new();
         for _ in 0..5000 {
-            m.record(1, 0.1, 0.1);
+            m.record(1, 0.1, 0.1, Some(0.5));
         }
         assert!(m.inner.lock().unwrap().latencies.len() <= 4096);
+        assert!(m.inner.lock().unwrap().sparsity.len() <= 4096);
         assert_eq!(m.snapshot().requests, 5000);
+        assert_eq!(m.snapshot().sparse_requests, 5000);
     }
 }

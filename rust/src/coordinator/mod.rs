@@ -1,7 +1,9 @@
 //! L3 serving coordinator: request types, dynamic batcher, scheduler,
 //! engine actor (owns the non-`Send` PJRT runtime), TCP JSON-lines server,
 //! and metrics. Python never runs on this path — the engine executes
-//! AOT-compiled HLO artifacts only.
+//! AOT-compiled HLO artifacts only. Kernel-level `attn` probe requests run
+//! the unified tiled pipeline directly (no engine) and feed per-request
+//! sparsity into the serving metrics.
 
 pub mod batcher;
 pub mod engine;
@@ -14,4 +16,4 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use engine::EngineHandle;
 pub use metrics::Metrics;
 pub use request::{AttnMode, GenerateRequest, GenerateResponse};
-pub use scheduler::Coordinator;
+pub use scheduler::{AttnProbeResult, Coordinator};

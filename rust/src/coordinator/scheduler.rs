@@ -15,6 +15,18 @@ use super::engine::EngineHandle;
 use super::metrics::Metrics;
 use super::request::{AttnMode, GenerateRequest, GenerateResponse, QueuedRequest};
 
+/// Result of a kernel-level attention probe request.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnProbeResult {
+    /// Achieved sparsity (stage-1 + stage-2 skips over dense totals).
+    pub sparsity: f64,
+    /// Wall-clock seconds for predict + sparse attention.
+    pub seconds: f64,
+    pub n: usize,
+    pub d: usize,
+    pub threads: usize,
+}
+
 /// The serving coordinator: submit generation requests from any thread;
 /// a scheduler thread batches them and executes on the engine.
 pub struct Coordinator {
@@ -77,6 +89,35 @@ impl Coordinator {
         &self.engine
     }
 
+    /// Kernel-level attention probe: run single-head SpargeAttn on a
+    /// seeded synthetic workload through the unified tiled pipeline
+    /// (`attention::pipeline::run_tiled`), with query-block rows fanned
+    /// across `threads` workers, and record the achieved per-request
+    /// sparsity into the serving metrics (sparsity aggregates only).
+    ///
+    /// Runs on the caller's thread: it needs no PJRT engine, so probes
+    /// never queue behind generation traffic.
+    pub fn attention_probe(
+        &self,
+        n: usize,
+        d: usize,
+        seed: u64,
+        params: &crate::sparge::SpargeParams,
+        threads: usize,
+    ) -> AttnProbeResult {
+        let mut rng = crate::util::rng::Pcg::seeded(seed);
+        let s = crate::workloads::synthetic::generate(&crate::workloads::SyntheticSpec::lm_like(n, d), &mut rng);
+        let cfg = crate::attention::AttnConfig::default();
+        let t0 = Instant::now();
+        let res = crate::sparge::sparge_attention_threads(&s.q, &s.k, &s.v, &cfg, params, threads);
+        let seconds = t0.elapsed().as_secs_f64();
+        let sparsity = res.stats.sparsity();
+        // probes feed the sparsity aggregates only; their timings must not
+        // distort generation latency/throughput metrics
+        self.metrics.record_probe(sparsity);
+        AttnProbeResult { sparsity, seconds, n, d, threads }
+    }
+
     pub fn queue_depth(&self) -> usize {
         self.batcher.depth()
     }
@@ -107,7 +148,8 @@ fn run_one(engine: &EngineHandle, metrics: &Metrics, item: QueuedRequest) {
         Ok(output) => {
             let compute = t0.elapsed().as_secs_f64();
             let latency = arrived.elapsed().as_secs_f64();
-            metrics.record(output.len(), latency, compute);
+            // LM artifacts don't report kernel sparsity; attention probes do.
+            metrics.record(output.len(), latency, compute, None);
             let _ = respond.send(GenerateResponse { id: req.id, output, latency, compute, mode: req.mode });
         }
         Err(e) => {

@@ -3,7 +3,11 @@
 //! Protocol (one JSON object per line, response per line):
 //!   {"op":"generate","prompt":"...","max_new":16,"mode":"sparge"}
 //!     -> {"id":1,"output":"...","latency_ms":12.3,"compute_ms":11.0}
-//!   {"op":"stats"} -> {"requests":...,"tokens_out":...,...}
+//!   {"op":"attn","n":2048,"d":64,"seed":7,"tau":0.9,"threads":8}
+//!     -> {"sparsity":0.42,"latency_ms":8.1,"n":2048,"threads":8}
+//!        (kernel probe through the unified tiled pipeline; sparsity is
+//!        recorded per request into the serving metrics)
+//!   {"op":"stats"} -> {"requests":...,"mean_sparsity":...,...}
 //!   {"op":"ping"}  -> {"ok":true}
 
 use std::io::{BufRead, BufReader, Write};
@@ -81,6 +85,37 @@ fn dispatch_inner(coordinator: &Coordinator, line: &str) -> Result<Json> {
                 ("latency_p99_ms", Json::num(s.latency_p99 * 1e3)),
                 ("tokens_per_sec", Json::num(s.tokens_per_sec)),
                 ("queue_depth", Json::num(coordinator.queue_depth() as f64)),
+                ("sparse_requests", Json::num(s.sparse_requests as f64)),
+                ("mean_sparsity", Json::num(s.mean_sparsity)),
+            ]))
+        }
+        "attn" => {
+            let n = req.get("n").and_then(|v| v.as_usize()).unwrap_or(1024);
+            let d = req.get("d").and_then(|v| v.as_usize()).unwrap_or(64);
+            let seed = req.get("seed").and_then(|v| v.as_usize()).unwrap_or(1) as u64;
+            let threads = req
+                .get("threads")
+                .and_then(|v| v.as_usize())
+                .unwrap_or_else(crate::util::threadpool::default_threads)
+                .clamp(1, crate::util::threadpool::default_threads());
+            let params = crate::sparge::SpargeParams {
+                tau: req.get("tau").and_then(|v| v.as_f64()).unwrap_or(0.9) as f32,
+                theta: req.get("theta").and_then(|v| v.as_f64()).unwrap_or(0.3) as f32,
+                lambda: req.get("lambda").and_then(|v| v.as_f64()).map(|l| l as f32),
+                quant: req.get("quant").and_then(|v| v.as_bool()).unwrap_or(false),
+            };
+            // keep probes survivable: probes run synchronously on connection
+            // workers, so cap the synthesized QKV (~25 MB at 8192×256) and
+            // the attention cost; threads never exceed the machine's cores
+            anyhow::ensure!(n > 0 && n <= 1 << 13, "n out of range (1..=8192)");
+            anyhow::ensure!(d > 0 && d <= 256, "d out of range (1..=256)");
+            let r = coordinator.attention_probe(n, d, seed, &params, threads);
+            Ok(Json::obj(vec![
+                ("sparsity", Json::num(r.sparsity)),
+                ("latency_ms", Json::num(r.seconds * 1e3)),
+                ("n", Json::num(r.n as f64)),
+                ("d", Json::num(r.d as f64)),
+                ("threads", Json::num(r.threads as f64)),
             ]))
         }
         "generate" => {

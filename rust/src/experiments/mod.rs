@@ -3,11 +3,11 @@
 //! sparse kernel so mask policy is the only variable, with TOPS
 //! accounting per the paper's §4.1 definition.
 
-use crate::attention::flash::attention_flash_stats;
+use crate::attention::flash::attention_flash_stats_threads;
 use crate::attention::types::{AttnConfig, BlockMask, SkipStats};
 use crate::baselines;
 use crate::costmodel;
-use crate::sparge::kernel::{sparse_flash, SpargeParams};
+use crate::sparge::kernel::{sparse_flash_threads, SpargeParams};
 use crate::sparge::predict::{predict, PredictParams};
 use crate::tensor::Tensor;
 use crate::util::timer::time_once;
@@ -66,38 +66,47 @@ impl MethodRun {
     }
 }
 
-/// Run a method on a single head.
-pub fn run_method(s: &QkvSample, cfg: &AttnConfig, method: &Method) -> MethodRun {
+/// Run a method on a single head, with query-block rows fanned across
+/// `threads` workers inside the unified tiled driver (1 = serial; outputs
+/// and stats are identical for every thread count).
+pub fn run_method_threads(s: &QkvSample, cfg: &AttnConfig, method: &Method, threads: usize) -> MethodRun {
     match method {
         Method::Full => {
-            let ((out, stats), secs) = time_once(|| attention_flash_stats(&s.q, &s.k, &s.v, cfg));
+            let ((out, stats), secs) = time_once(|| attention_flash_stats_threads(&s.q, &s.k, &s.v, cfg, threads));
             MethodRun { out, stats, seconds: secs, predict_seconds: 0.0 }
         }
         Method::Sparge(params) => {
             let (pred, t_pred) = time_once(|| predict(&s.q, &s.k, cfg, &params.predict_params()));
-            let ((out, stats), t_attn) = time_once(|| sparse_flash(&s.q, &s.k, &s.v, &pred.mask, cfg, params));
+            let ((out, stats), t_attn) =
+                time_once(|| sparse_flash_threads(&s.q, &s.k, &s.v, &pred.mask, cfg, params, threads));
             MethodRun { out, stats, seconds: t_pred + t_attn, predict_seconds: t_pred }
         }
         Method::Minference { budget } => {
             let (mask, t_pred) = time_once(|| baselines::minference_mask(&s.q, &s.k, cfg, *budget));
-            run_with_mask(s, cfg, mask, t_pred)
+            run_with_mask(s, cfg, mask, t_pred, threads)
         }
         Method::FlexPrefill { gamma } => {
             let (mask, t_pred) = time_once(|| baselines::flexprefill_mask(&s.q, &s.k, cfg, *gamma));
-            run_with_mask(s, cfg, mask, t_pred)
+            run_with_mask(s, cfg, mask, t_pred, threads)
         }
         Method::SlidingWindow { sinks, window } => {
             let (mask, t_pred) =
                 time_once(|| baselines::sliding_window_mask(s.q.dim(0), s.k.dim(0), cfg, *sinks, *window));
-            run_with_mask(s, cfg, mask, t_pred)
+            run_with_mask(s, cfg, mask, t_pred, threads)
         }
     }
 }
 
-fn run_with_mask(s: &QkvSample, cfg: &AttnConfig, mask: BlockMask, t_pred: f64) -> MethodRun {
+/// Run a method on a single head, serial (the paper's single-kernel view).
+pub fn run_method(s: &QkvSample, cfg: &AttnConfig, method: &Method) -> MethodRun {
+    run_method_threads(s, cfg, method, 1)
+}
+
+fn run_with_mask(s: &QkvSample, cfg: &AttnConfig, mask: BlockMask, t_pred: f64, threads: usize) -> MethodRun {
     // baselines run through the identical kernel, no λ stage, no quant
     let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false };
-    let ((out, stats), t_attn) = time_once(|| sparse_flash(&s.q, &s.k, &s.v, &mask, cfg, &params));
+    let ((out, stats), t_attn) =
+        time_once(|| sparse_flash_threads(&s.q, &s.k, &s.v, &mask, cfg, &params, threads));
     MethodRun { out, stats, seconds: t_pred + t_attn, predict_seconds: t_pred }
 }
 
@@ -116,6 +125,15 @@ pub fn full_scale() -> bool {
 /// Repetitions for timing loops in benches.
 pub fn bench_reps() -> usize {
     std::env::var("SPARGE_BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(3)
+}
+
+/// Row-parallel worker count for benches: `SPARGE_BENCH_THREADS`, default
+/// one worker per core (capped like the pool).
+pub fn bench_threads() -> usize {
+    std::env::var("SPARGE_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(crate::util::threadpool::default_threads)
 }
 
 #[cfg(test)]
@@ -150,6 +168,18 @@ mod tests {
             if matches!(m, Method::Full) {
                 assert_eq!(r.stats.sparsity(), 0.0);
             }
+        }
+    }
+
+    #[test]
+    fn threaded_methods_match_serial() {
+        let s = sample();
+        let cfg = AttnConfig { bq: 64, bk: 32, causal: false, scale: None, cw: 2 };
+        for m in [Method::Full, Method::Sparge(SpargeParams::default()), Method::Minference { budget: 0.5 }] {
+            let serial = run_method(&s, &cfg, &m);
+            let par = run_method_threads(&s, &cfg, &m, 4);
+            assert_eq!(serial.out, par.out, "{}", m.label());
+            assert_eq!(serial.stats, par.stats, "{}", m.label());
         }
     }
 

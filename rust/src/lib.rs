@@ -10,11 +10,18 @@
 //! - **L2** (`python/compile/model.py`): JAX transformer (text LM + DiT
 //!   proxy) whose attention dispatches to the kernel; AOT-lowered to HLO
 //!   text artifacts by `python/compile/aot.py`.
-//! - **L3** (this crate): the serving coordinator, the block-sparse
-//!   attention engine with *real* skipping (wall-clock measurements), the
-//!   mask-prediction pipeline, baselines, workloads, tuner, cost model, and
-//!   the PJRT runtime that loads and executes the artifacts. Python never
-//!   runs on the request path.
+//! - **L3** (this crate): the serving coordinator plus the block-sparse
+//!   attention engine with *real* skipping (wall-clock measurements). All
+//!   attention — dense flash, SpargeAttn f32, SageAttention INT8, and every
+//!   baseline mask policy — runs through **one** tiled q-block × k-block
+//!   driver, [`attention::pipeline::run_tiled`], parallel over query-block
+//!   rows, with two pluggable seams: [`attention::pipeline::ScoreKernel`]
+//!   (how a score block is produced) and
+//!   [`attention::pipeline::BlockFilter`] (stage-1 mask lookup, stage-2 λ,
+//!   causal-domain bound). Around it: the mask-prediction pipeline,
+//!   baselines (each just a mask constructor), workloads, tuner, cost
+//!   model, and the PJRT runtime that loads and executes the artifacts.
+//!   Python never runs on the request path.
 
 pub mod attention;
 pub mod baselines;

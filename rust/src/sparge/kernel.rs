@@ -1,11 +1,17 @@
 //! The SpargeAttn sparse FlashAttention kernel (Alg. 1) — L3 engine with
 //! *real* block skipping, in both f32 and SageAttention-INT8 variants.
 //!
+//! Both variants are thin compositions over the unified tiled pipeline
+//! (`crate::attention::pipeline::run_tiled`): the stage-1/stage-2 filter is
+//! a [`MaskFilter`] (`M_g` lookup + λ threshold), and the score path is
+//! either the shared [`F32Kernel`] or the [`QuantScoreKernel`] defined
+//! here (SageAttention INT8 dequant scoring, §3.5).
+//!
 //! Stage 1: blocks with `M_g[i,j] = 0` skip both `Q_iK_jᵀ` and `P̃_ijV_j`.
 //! Stage 2: inside visited blocks, a row group (warp, `c_w` groups per
 //! q-tile) skips its `P̃V` product when `max(m_local − m_ij) < λ`.
 
-use crate::attention::flash::{score_block, FlashTile};
+use crate::attention::pipeline::{run_tiled, F32Kernel, MaskFilter, ScoreKernel};
 use crate::attention::types::{AttnConfig, BlockMask, SkipStats};
 use crate::tensor::quant::{self, QuantBlock};
 use crate::tensor::Tensor;
@@ -46,6 +52,71 @@ pub struct SpargeOutput {
     pub mask: BlockMask,
 }
 
+/// SageAttention-integrated score path: per-block INT8 Q/K with K
+/// smoothing; the QKᵀ product runs in int8→i32 and is dequantized with
+/// δ_Q·δ_K (Alg. 1 lines 3 & 12). P̃ and V stay f32 (SageAttention keeps
+/// PV in higher precision). Causal masking of the dequantized block is
+/// applied here, inside the kernel, like every other `ScoreKernel`.
+pub struct QuantScoreKernel {
+    qb: Vec<QuantBlock>,
+    kb: Vec<QuantBlock>,
+    scale: f32,
+    causal: bool,
+    bq: usize,
+    bk: usize,
+}
+
+impl QuantScoreKernel {
+    /// Pre-quantize Q and (smoothed) K. Under causal masking only the key
+    /// blocks inside the causal domain — those whose first row is ≤ the
+    /// last query row — are ever scored, so quantization stops at that
+    /// bound instead of wastefully covering the unreachable upper triangle.
+    pub fn new(q: &Tensor, k: &Tensor, cfg: &AttnConfig) -> QuantScoreKernel {
+        assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
+        let n = q.dim(0);
+        let nk = k.dim(0);
+
+        // K smoothing: subtracting the per-channel mean shifts every row of
+        // S_ij by the same amount (Q_i·k̄ᵀ), which row-softmax cancels — but
+        // only when *all* key blocks see the same shift. That holds because
+        // the smoothing mean is global over K (including any rows past the
+        // causal bound).
+        let kmean = quant::channel_mean(k);
+        let ksm = quant::smooth(k, &kmean);
+
+        // Causal domain: the deepest q-tile ends at row n, reaching key
+        // blocks bj with bj·bk < n.
+        let k_reach = if cfg.causal { nk.min(n.div_ceil(cfg.bk) * cfg.bk) } else { nk };
+        let qb = quant::quantize_blocks(q, cfg.bq);
+        let kb = if k_reach == nk {
+            quant::quantize_blocks(&ksm, cfg.bk)
+        } else {
+            quant::quantize_blocks(&ksm.rows(0, k_reach), cfg.bk)
+        };
+        QuantScoreKernel { qb, kb, scale: cfg.scale_for(q.dim(1)), causal: cfg.causal, bq: cfg.bq, bk: cfg.bk }
+    }
+}
+
+impl ScoreKernel for QuantScoreKernel {
+    fn score_block(&self, q0: usize, q1: usize, k0: usize, k1: usize, out: &mut [f32]) {
+        let qblk = &self.qb[q0 / self.bq];
+        let kblk = &self.kb[k0 / self.bk];
+        debug_assert_eq!(qblk.rows, q1 - q0);
+        debug_assert_eq!(kblk.rows, k1 - k0);
+        quant::qk_dequant(qblk, kblk, self.scale, out);
+        if self.causal {
+            for i in 0..qblk.rows {
+                let gi = q0 + i;
+                for j in 0..kblk.rows {
+                    if k0 + j > gi {
+                        out[i * kblk.rows + j] = f32::NEG_INFINITY;
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Run SpargeAttn end to end: predict `M_g`, then sparse flash attention.
 pub fn sparge_attention(
     q: &Tensor,
@@ -54,8 +125,21 @@ pub fn sparge_attention(
     cfg: &AttnConfig,
     params: &SpargeParams,
 ) -> SpargeOutput {
+    sparge_attention_threads(q, k, v, cfg, params, 1)
+}
+
+/// [`sparge_attention`] with query-block rows fanned across `threads`
+/// workers inside the kernel (for single-head long-sequence workloads).
+pub fn sparge_attention_threads(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    params: &SpargeParams,
+    threads: usize,
+) -> SpargeOutput {
     let pred = predict(q, k, cfg, &params.predict_params());
-    let (out, stats) = sparse_flash(q, k, v, &pred.mask, cfg, params);
+    let (out, stats) = sparse_flash_threads(q, k, v, &pred.mask, cfg, params, threads);
     SpargeOutput { out, stats, mask: pred.mask }
 }
 
@@ -70,136 +154,38 @@ pub fn sparse_flash(
     cfg: &AttnConfig,
     params: &SpargeParams,
 ) -> (Tensor, SkipStats) {
+    sparse_flash_threads(q, k, v, mask, cfg, params, 1)
+}
+
+/// [`sparse_flash`] parallel over query-block rows. Output and stats are
+/// bitwise identical for every thread count.
+pub fn sparse_flash_threads(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    params: &SpargeParams,
+    threads: usize,
+) -> (Tensor, SkipStats) {
+    assert_eq!(q.dim(1), k.dim(1));
+    assert_eq!(k.dim(0), v.dim(0));
+    assert_eq!(mask.rows, cfg.n_qblocks(q.dim(0)), "mask rows");
+    assert_eq!(mask.cols, cfg.n_kblocks(k.dim(0)), "mask cols");
+    let filter = MaskFilter::new(mask, params.lambda);
     if params.quant {
-        sparse_flash_quant(q, k, v, mask, cfg, params)
+        let kernel = QuantScoreKernel::new(q, k, cfg);
+        run_tiled(q, k, v, cfg, &kernel, &filter, threads)
     } else {
-        sparse_flash_f32(q, k, v, mask, cfg, params)
+        let kernel = F32Kernel::new(q, k, cfg);
+        run_tiled(q, k, v, cfg, &kernel, &filter, threads)
     }
-}
-
-fn sparse_flash_f32(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    mask: &BlockMask,
-    cfg: &AttnConfig,
-    params: &SpargeParams,
-) -> (Tensor, SkipStats) {
-    assert_eq!(q.dim(1), k.dim(1));
-    assert_eq!(k.dim(0), v.dim(0));
-    let n = q.dim(0);
-    let nk = k.dim(0);
-    let dv = v.dim(1);
-    let scale = cfg.scale_for(q.dim(1));
-    assert_eq!(mask.rows, cfg.n_qblocks(n), "mask rows");
-    assert_eq!(mask.cols, cfg.n_kblocks(nk), "mask cols");
-
-    let mut out = Tensor::zeros(&[n, dv]);
-    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
-    let mut sbuf = vec![0f32; cfg.bq * cfg.bk];
-
-    for bi in 0..mask.rows {
-        let q0 = bi * cfg.bq;
-        let q1 = (q0 + cfg.bq).min(n);
-        let mut tile = FlashTile::new(q1 - q0, dv, cfg.bk);
-        for bj in 0..mask.cols {
-            let k0 = bj * cfg.bk;
-            let k1 = (k0 + cfg.bk).min(nk);
-            if cfg.causal && k0 > q1 - 1 {
-                break; // outside full-attention domain: not counted
-            }
-            stats.qk_total += 1;
-            stats.pv_total += 1;
-            if !mask.get(bi, bj) {
-                stats.qk_skipped += 1;
-                stats.pv_skipped += 1;
-                continue;
-            }
-            score_block(q, k, q0, q1, k0, k1, scale, cfg.causal, &mut sbuf);
-            tile.ingest(
-                &sbuf[..(q1 - q0) * (k1 - k0)],
-                k1 - k0,
-                &v.data()[k0 * dv..k1 * dv],
-                params.lambda,
-                cfg.cw,
-                &mut stats,
-            );
-        }
-        out.data_mut()[q0 * dv..q1 * dv].copy_from_slice(&tile.finalize());
-    }
-    (out, stats)
-}
-
-/// SageAttention-integrated path: per-block INT8 Q/K with K smoothing; the
-/// QKᵀ product runs in int8→i32 and is dequantized with δ_Q·δ_K (Alg. 1
-/// lines 3 & 12). P̃ and V stay f32 (SageAttention keeps PV in higher
-/// precision).
-fn sparse_flash_quant(
-    q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
-    mask: &BlockMask,
-    cfg: &AttnConfig,
-    params: &SpargeParams,
-) -> (Tensor, SkipStats) {
-    assert_eq!(q.dim(1), k.dim(1));
-    assert_eq!(k.dim(0), v.dim(0));
-    let n = q.dim(0);
-    let _nk = k.dim(0);
-    let d = q.dim(1);
-    let dv = v.dim(1);
-    let scale = cfg.scale_for(d);
-
-    // K smoothing: subtracting the per-channel mean shifts every row of
-    // S_ij by the same amount (Q_i·k̄ᵀ), which row-softmax cancels — but
-    // only when *all* key blocks see the same shift. That holds because the
-    // smoothing mean is global over K.
-    let kmean = quant::channel_mean(k);
-    let ksm = quant::smooth(k, &kmean);
-    let qb: Vec<QuantBlock> = quant::quantize_blocks(q, cfg.bq);
-    let kb: Vec<QuantBlock> = quant::quantize_blocks(&ksm, cfg.bk);
-
-    let mut out = Tensor::zeros(&[n, dv]);
-    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
-    let mut sbuf = vec![0f32; cfg.bq * cfg.bk];
-
-    for (bi, qblk) in qb.iter().enumerate() {
-        let q0 = bi * cfg.bq;
-        let q1 = q0 + qblk.rows;
-        let mut tile = FlashTile::new(qblk.rows, dv, cfg.bk);
-        for (bj, kblk) in kb.iter().enumerate() {
-            let k0 = bj * cfg.bk;
-            let k1 = k0 + kblk.rows;
-            if cfg.causal && k0 > q1 - 1 {
-                break;
-            }
-            stats.qk_total += 1;
-            stats.pv_total += 1;
-            if !mask.get(bi, bj) {
-                stats.qk_skipped += 1;
-                stats.pv_skipped += 1;
-                continue;
-            }
-            let sb = &mut sbuf[..qblk.rows * kblk.rows];
-            quant::qk_dequant(qblk, kblk, scale, sb);
-            if cfg.causal {
-                for i in 0..qblk.rows {
-                    let gi = q0 + i;
-                    for j in 0..kblk.rows {
-                        if k0 + j > gi {
-                            sb[i * kblk.rows + j] = f32::NEG_INFINITY;
-                        }
-                    }
-                }
-            }
-            tile.ingest(sb, kblk.rows, &v.data()[k0 * dv..k1 * dv], params.lambda, cfg.cw, &mut stats);
-        }
-        out.data_mut()[q0 * dv..q1 * dv].copy_from_slice(&tile.finalize());
-    }
-    (out, stats)
 }
 
 /// Multi-head sparge attention with per-head stats, parallel over heads.
+/// Rows within a head stay serial — head-level fan-out already saturates
+/// the `threads` budget; use [`sparge_attention_threads`] for single-head
+/// workloads.
 pub fn sparge_attention_heads(
     q: &[Tensor],
     k: &[Tensor],
@@ -382,6 +368,59 @@ mod tests {
         assert!(err < 0.03, "smoothed int8 rel-L1 {err}");
     }
 
+    /// Regression: the quant and f32 paths must report *identical* block
+    /// counters on the same mask — the causal-domain bound is shared by the
+    /// unified driver, never re-derived per score path.
+    #[test]
+    fn quant_and_f32_stats_are_byte_identical() {
+        Cases::standard(705).check(|rng| {
+            let n = rng.range(16, 96);
+            let d = 16;
+            let c = cfg(rng.range(4, 20), rng.range(4, 20), rng.chance(0.5), 2);
+            let q = Tensor::randn(&[n, d], rng);
+            let k = Tensor::randn(&[n, d], rng);
+            let v = Tensor::randn(&[n, d], rng);
+            let (tm, tn) = (c.n_qblocks(n), c.n_kblocks(n));
+            let mut mask = BlockMask::new_all(tm, tn, false);
+            for i in 0..tm {
+                mask.set(i, rng.range(0, tn), true);
+                for j in 0..tn {
+                    if rng.chance(0.6) {
+                        mask.set(i, j, true);
+                    }
+                }
+            }
+            let (_, st_f) = sparse_flash(&q, &k, &v, &mask, &c, &dense_params());
+            let (_, st_q) =
+                sparse_flash(&q, &k, &v, &mask, &c, &SpargeParams { quant: true, ..dense_params() });
+            if st_f != st_q {
+                return Err(format!("stats diverge: f32 {st_f:?} vs quant {st_q:?}"));
+            }
+            if st_f.qk_total != st_q.qk_total {
+                return Err("qk_total asymmetry".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// The causal-domain bound on K quantization must not change outputs:
+    /// causal quant attention only ever reads the blocks that remain.
+    #[test]
+    fn causal_quant_matches_noncausal_prefix_quantization() {
+        let mut rng = Pcg::seeded(37);
+        let (n, d) = (96, 16);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let c = cfg(16, 16, true, 2);
+        let mask = BlockMask::new_all(c.n_qblocks(n), c.n_kblocks(n), true);
+        let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: true };
+        let (qout, _) = sparse_flash(&q, &k, &v, &mask, &c, &params);
+        let dense = attention_naive(&q, &k, &v, &c);
+        let err = rel_l1(qout.data(), dense.data());
+        assert!(err < 0.03, "causal int8 rel-L1 {err}");
+    }
+
     #[test]
     fn end_to_end_sparge_accuracy_on_local_pattern() {
         // Strong local attention: sparge should reach decent sparsity with
@@ -436,6 +475,24 @@ mod tests {
             assert_eq!(par[h], serial.out, "head {h}");
         }
         assert_eq!(stats.qk_total, 4 * 16);
+    }
+
+    #[test]
+    fn row_parallel_matches_serial_all_backends() {
+        let mut rng = Pcg::seeded(38);
+        let (n, d) = (128, 16);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let c = cfg(16, 16, true, 2);
+        let mask = predict(&q, &k, &c, &PredictParams { tau: 0.9, theta: 0.3 }).mask;
+        for quant in [false, true] {
+            let p = SpargeParams { tau: 0.9, theta: 0.3, lambda: Some(-6.0), quant };
+            let (o1, s1) = sparse_flash_threads(&q, &k, &v, &mask, &c, &p, 1);
+            let (o4, s4) = sparse_flash_threads(&q, &k, &v, &mask, &c, &p, 4);
+            assert_eq!(o1, o4, "quant={quant}");
+            assert_eq!(s1, s4, "quant={quant}");
+        }
     }
 
     #[test]

@@ -95,8 +95,15 @@ fn tcp_server_json_protocol() {
     assert!(!gen.get("output").unwrap().as_str().unwrap().is_empty());
     assert!(gen.get("latency_ms").unwrap().as_f64().unwrap() > 0.0);
 
+    let probe = ask(r#"{"op":"attn","n":256,"d":32,"seed":7,"tau":0.9,"threads":2}"#);
+    let sparsity = probe.get("sparsity").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&sparsity));
+    assert_eq!(probe.get("threads").unwrap().as_usize().unwrap(), 2);
+
     let stats = ask(r#"{"op":"stats"}"#);
     assert!(stats.get("requests").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(stats.get("sparse_requests").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(stats.get("mean_sparsity").unwrap().as_f64().is_some());
 
     let err = ask(r#"{"op":"nonsense"}"#);
     assert!(err.get("error").is_some());
@@ -107,6 +114,21 @@ fn tcp_server_json_protocol() {
     drop(client);
     drop(reader);
     server.join().unwrap();
+}
+
+#[test]
+fn attention_probe_records_per_request_sparsity() {
+    let Some(c) = coordinator() else { return };
+    let params = sparge::sparge::SpargeParams::default();
+    let r = c.attention_probe(512, 32, 7, &params, 4);
+    assert!((0.0..=1.0).contains(&r.sparsity));
+    assert!(r.seconds > 0.0);
+    // determinism: same seed + params => same sparsity at any thread count
+    let r2 = c.attention_probe(512, 32, 7, &params, 1);
+    assert_eq!(r.sparsity, r2.sparsity);
+    let snap = c.metrics.snapshot();
+    assert_eq!(snap.sparse_requests, 2);
+    assert!((snap.mean_sparsity - r.sparsity).abs() < 1e-12);
 }
 
 #[test]

@@ -1,0 +1,332 @@
+//! Golden parity suite for the unified tiled-attention pipeline.
+//!
+//! The pre-refactor engines each carried their own q-block × k-block loop
+//! (dense flash, sparge f32, sparge quant, baselines-through-the-kernel).
+//! Those loops are reproduced here, verbatim, as *reference*
+//! implementations built from the same public tile/score primitives; the
+//! unified driver must match them **bitwise** (stronger than the 1e-6
+//! budget) and report byte-identical `SkipStats`, for random shapes,
+//! masks, and parameters — and the parallel-row driver must be bitwise
+//! equal to `threads = 1` for every backend.
+
+use sparge::attention::flash::{attention_flash_stats, attention_flash_stats_threads};
+use sparge::attention::types::{AttnConfig, BlockMask, SkipStats};
+use sparge::attention::{score_block, FlashTile};
+use sparge::baselines;
+use sparge::sparge::kernel::{sparse_flash, sparse_flash_threads, SpargeParams};
+use sparge::tensor::quant::{self, QuantBlock};
+use sparge::tensor::Tensor;
+use sparge::util::prop::{assert_allclose, Cases};
+use sparge::util::rng::Pcg;
+
+// ---------------------------------------------------------------------
+// Reference implementations: the pre-refactor loops, kept verbatim.
+// ---------------------------------------------------------------------
+
+/// Pre-refactor `attention_flash_stats`: the dense tiled loop.
+fn reference_flash_stats(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -> (Tensor, SkipStats) {
+    let n = q.dim(0);
+    let nk = k.dim(0);
+    let scale = cfg.scale_for(q.dim(1));
+    let mut out = Tensor::zeros(&[n, v.dim(1)]);
+    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
+    let mut sbuf = vec![0f32; cfg.bq * cfg.bk];
+
+    let mut q0 = 0;
+    while q0 < n {
+        let q1 = (q0 + cfg.bq).min(n);
+        let mut tile = FlashTile::new(q1 - q0, v.dim(1), cfg.bk);
+        let mut k0 = 0;
+        while k0 < nk {
+            let k1 = (k0 + cfg.bk).min(nk);
+            if cfg.causal && k0 > q1 - 1 {
+                break;
+            }
+            stats.qk_total += 1;
+            stats.pv_total += 1;
+            score_block(q, k, q0, q1, k0, k1, scale, cfg.causal, &mut sbuf);
+            tile.ingest(
+                &sbuf[..(q1 - q0) * (k1 - k0)],
+                k1 - k0,
+                &v.data()[k0 * v.dim(1)..k1 * v.dim(1)],
+                None,
+                cfg.cw,
+                &mut stats,
+            );
+            k0 = k1;
+        }
+        out.data_mut()[q0 * v.dim(1)..q1 * v.dim(1)].copy_from_slice(&tile.finalize());
+        q0 = q1;
+    }
+    (out, stats)
+}
+
+/// Pre-refactor `sparse_flash_f32`: the masked tiled loop with λ.
+fn reference_sparse_f32(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    lambda: Option<f32>,
+) -> (Tensor, SkipStats) {
+    let n = q.dim(0);
+    let nk = k.dim(0);
+    let dv = v.dim(1);
+    let scale = cfg.scale_for(q.dim(1));
+    let mut out = Tensor::zeros(&[n, dv]);
+    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
+    let mut sbuf = vec![0f32; cfg.bq * cfg.bk];
+
+    for bi in 0..mask.rows {
+        let q0 = bi * cfg.bq;
+        let q1 = (q0 + cfg.bq).min(n);
+        let mut tile = FlashTile::new(q1 - q0, dv, cfg.bk);
+        for bj in 0..mask.cols {
+            let k0 = bj * cfg.bk;
+            let k1 = (k0 + cfg.bk).min(nk);
+            if cfg.causal && k0 > q1 - 1 {
+                break;
+            }
+            stats.qk_total += 1;
+            stats.pv_total += 1;
+            if !mask.get(bi, bj) {
+                stats.qk_skipped += 1;
+                stats.pv_skipped += 1;
+                continue;
+            }
+            score_block(q, k, q0, q1, k0, k1, scale, cfg.causal, &mut sbuf);
+            tile.ingest(&sbuf[..(q1 - q0) * (k1 - k0)], k1 - k0, &v.data()[k0 * dv..k1 * dv], lambda, cfg.cw, &mut stats);
+        }
+        out.data_mut()[q0 * dv..q1 * dv].copy_from_slice(&tile.finalize());
+    }
+    (out, stats)
+}
+
+/// Pre-refactor `sparse_flash_quant`: INT8 dequant scoring with inline
+/// causal masking, pre-quantizing *all* K blocks (the old behavior the
+/// causal-domain bound now avoids — outputs must be unchanged by it).
+fn reference_sparse_quant(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    lambda: Option<f32>,
+) -> (Tensor, SkipStats) {
+    let n = q.dim(0);
+    let dv = v.dim(1);
+    let scale = cfg.scale_for(q.dim(1));
+
+    let kmean = quant::channel_mean(k);
+    let ksm = quant::smooth(k, &kmean);
+    let qb: Vec<QuantBlock> = quant::quantize_blocks(q, cfg.bq);
+    let kb: Vec<QuantBlock> = quant::quantize_blocks(&ksm, cfg.bk);
+
+    let mut out = Tensor::zeros(&[n, dv]);
+    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
+    let mut sbuf = vec![0f32; cfg.bq * cfg.bk];
+
+    for (bi, qblk) in qb.iter().enumerate() {
+        let q0 = bi * cfg.bq;
+        let q1 = q0 + qblk.rows;
+        let mut tile = FlashTile::new(qblk.rows, dv, cfg.bk);
+        for (bj, kblk) in kb.iter().enumerate() {
+            let k0 = bj * cfg.bk;
+            let k1 = k0 + kblk.rows;
+            if cfg.causal && k0 > q1 - 1 {
+                break;
+            }
+            stats.qk_total += 1;
+            stats.pv_total += 1;
+            if !mask.get(bi, bj) {
+                stats.qk_skipped += 1;
+                stats.pv_skipped += 1;
+                continue;
+            }
+            let sb = &mut sbuf[..qblk.rows * kblk.rows];
+            quant::qk_dequant(qblk, kblk, scale, sb);
+            if cfg.causal {
+                for i in 0..qblk.rows {
+                    let gi = q0 + i;
+                    for j in 0..kblk.rows {
+                        if k0 + j > gi {
+                            sb[i * kblk.rows + j] = f32::NEG_INFINITY;
+                        }
+                    }
+                }
+            }
+            tile.ingest(sb, kblk.rows, &v.data()[k0 * dv..k1 * dv], lambda, cfg.cw, &mut stats);
+        }
+        out.data_mut()[q0 * dv..q1 * dv].copy_from_slice(&tile.finalize());
+    }
+    (out, stats)
+}
+
+// ---------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------
+
+fn random_mask(rng: &mut Pcg, tm: usize, tn: usize, density: f64) -> BlockMask {
+    let mut mask = BlockMask::new_all(tm, tn, false);
+    for i in 0..tm {
+        mask.set(i, rng.range(0, tn), true);
+        for j in 0..tn {
+            if rng.chance(density) {
+                mask.set(i, j, true);
+            }
+        }
+    }
+    mask
+}
+
+fn check_identical(
+    label: &str,
+    got: &(Tensor, SkipStats),
+    want: &(Tensor, SkipStats),
+) -> Result<(), String> {
+    if got.1 != want.1 {
+        return Err(format!("{label}: SkipStats diverge: {:?} vs {:?}", got.1, want.1));
+    }
+    if got.0 != want.0 {
+        return Err(format!("{label}: output not bitwise equal to the pre-refactor loop"));
+    }
+    // the 1e-6 budget the refactor was specified against (implied by
+    // bitwise equality; kept as an explicit, independent check)
+    assert_allclose(got.0.data(), want.0.data(), 1e-6, 1e-6, label)
+}
+
+fn random_cfg(rng: &mut Pcg) -> AttnConfig {
+    AttnConfig {
+        bq: rng.range(1, 24),
+        bk: rng.range(1, 24),
+        causal: rng.chance(0.5),
+        scale: None,
+        cw: rng.range(1, 5),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Parity: unified driver vs pre-refactor loops
+// ---------------------------------------------------------------------
+
+#[test]
+fn dense_flash_parity() {
+    Cases::standard(9101).check(|rng| {
+        let nq = rng.range(1, 90);
+        let nk = if rng.chance(0.3) { rng.range(1, 90) } else { nq };
+        let d = [4, 8, 16, 32][rng.range(0, 4)];
+        let mut cfg = random_cfg(rng);
+        // causal attention assumes nq == nk in this codebase
+        if nq != nk {
+            cfg.causal = false;
+        }
+        let q = Tensor::randn(&[nq, d], rng);
+        let k = Tensor::randn(&[nk, d], rng);
+        let v = Tensor::randn(&[nk, d], rng);
+        let got = attention_flash_stats(&q, &k, &v, &cfg);
+        let want = reference_flash_stats(&q, &k, &v, &cfg);
+        check_identical("dense-flash", &got, &want)
+    });
+}
+
+#[test]
+fn sparge_f32_parity() {
+    Cases::standard(9102).check(|rng| {
+        let n = rng.range(4, 96);
+        let d = 8;
+        let cfg = random_cfg(rng);
+        let q = Tensor::randn(&[n, d], rng);
+        let k = Tensor::randn(&[n, d], rng);
+        let v = Tensor::randn(&[n, d], rng);
+        let mask = random_mask(rng, cfg.n_qblocks(n), cfg.n_kblocks(n), 0.6);
+        let lambda = if rng.chance(0.5) { Some(-(rng.f32() * 10.0) - 0.5) } else { None };
+        let params = SpargeParams { tau: 1.0, theta: -1.0, lambda, quant: false };
+        let got = sparse_flash(&q, &k, &v, &mask, &cfg, &params);
+        let want = reference_sparse_f32(&q, &k, &v, &mask, &cfg, lambda);
+        check_identical("sparge-f32", &got, &want)
+    });
+}
+
+#[test]
+fn sparge_quant_parity() {
+    Cases::standard(9103).check(|rng| {
+        let n = rng.range(4, 96);
+        let d = 16;
+        let cfg = random_cfg(rng);
+        let q = Tensor::randn(&[n, d], rng);
+        let k = Tensor::randn(&[n, d], rng);
+        let v = Tensor::randn(&[n, d], rng);
+        let mask = random_mask(rng, cfg.n_qblocks(n), cfg.n_kblocks(n), 0.6);
+        let lambda = if rng.chance(0.5) { Some(-(rng.f32() * 10.0) - 0.5) } else { None };
+        let params = SpargeParams { tau: 1.0, theta: -1.0, lambda, quant: true };
+        let got = sparse_flash(&q, &k, &v, &mask, &cfg, &params);
+        let want = reference_sparse_quant(&q, &k, &v, &mask, &cfg, lambda);
+        check_identical("sparge-quant", &got, &want)
+    });
+}
+
+#[test]
+fn baseline_mask_parity() {
+    Cases::standard(9104).check(|rng| {
+        let n = rng.range(32, 128);
+        let d = 8;
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: rng.chance(0.5), scale: None, cw: 2 };
+        let q = Tensor::randn(&[n, d], rng);
+        let k = Tensor::randn(&[n, d], rng);
+        let v = Tensor::randn(&[n, d], rng);
+        let masks = [
+            baselines::minference_mask(&q, &k, &cfg, 0.5),
+            baselines::flexprefill_mask(&q, &k, &cfg, 0.9),
+            baselines::sliding_window_mask(n, n, &cfg, 1, 3),
+        ];
+        let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false };
+        for (mi, mask) in masks.iter().enumerate() {
+            let got = sparse_flash(&q, &k, &v, mask, &cfg, &params);
+            let want = reference_sparse_f32(&q, &k, &v, mask, &cfg, None);
+            check_identical(&format!("baseline-{mi}"), &got, &want)?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Determinism: parallel rows are bitwise equal to serial, all backends
+// ---------------------------------------------------------------------
+
+#[test]
+fn row_parallel_bitwise_determinism_all_backends() {
+    Cases::standard(9105).check(|rng| {
+        let n = rng.range(8, 160);
+        let d = 16;
+        let cfg = random_cfg(rng);
+        let q = Tensor::randn(&[n, d], rng);
+        let k = Tensor::randn(&[n, d], rng);
+        let v = Tensor::randn(&[n, d], rng);
+        let mask = random_mask(rng, cfg.n_qblocks(n), cfg.n_kblocks(n), 0.6);
+        let threads = [2, 3, 8][rng.range(0, 3)];
+
+        // dense flash
+        let (o1, s1) = attention_flash_stats_threads(&q, &k, &v, &cfg, 1);
+        let (ot, st) = attention_flash_stats_threads(&q, &k, &v, &cfg, threads);
+        if o1 != ot || s1 != st {
+            return Err(format!("dense flash diverges at threads={threads}"));
+        }
+
+        // sparge f32 + quant, with and without λ
+        for quant in [false, true] {
+            for lambda in [None, Some(-4.0f32)] {
+                let params = SpargeParams { tau: 1.0, theta: -1.0, lambda, quant };
+                let (o1, s1) = sparse_flash_threads(&q, &k, &v, &mask, &cfg, &params, 1);
+                let (ot, st) = sparse_flash_threads(&q, &k, &v, &mask, &cfg, &params, threads);
+                if o1 != ot {
+                    return Err(format!("quant={quant} λ={lambda:?} output diverges at threads={threads}"));
+                }
+                if s1 != st {
+                    return Err(format!("quant={quant} λ={lambda:?} stats diverge at threads={threads}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
