@@ -6,10 +6,10 @@
 //!
 //! No artifacts needed: this exercises the pure-Rust L3 engine.
 
-use sparge::attention::flash::attention_flash;
 use sparge::attention::types::AttnConfig;
+use sparge::attention::AttnEngine;
 use sparge::sparge::metrics::rel_l1;
-use sparge::sparge::{sparge_attention, SpargeParams};
+use sparge::sparge::SpargeParams;
 use sparge::util::rng::Pcg;
 use sparge::util::table::{fnum, pct, Table};
 use sparge::util::timer::time_once;
@@ -25,7 +25,7 @@ fn main() {
     let s = synthetic::generate(&spec, &mut rng);
 
     let cfg = AttnConfig { bq: 128, bk: 64, causal: false, scale: None, cw: 4 };
-    let (dense, t_dense) = time_once(|| attention_flash(&s.q, &s.k, &s.v, &cfg));
+    let (dense, t_dense) = time_once(|| AttnEngine::dense(cfg).attention(&s.q, &s.k, &s.v).out);
 
     let mut table = Table::new(
         "sparge vs dense (same inputs, same kernel family)",
@@ -45,7 +45,8 @@ fn main() {
         ("sparge tau=0.90", SpargeParams { tau: 0.90, theta: 0.4, lambda: Some(-8.0), quant: false }),
         ("sparge 0.95+int8", SpargeParams { tau: 0.95, theta: 0.4, lambda: Some(-8.0), quant: true }),
     ] {
-        let (res, t) = time_once(|| sparge_attention(&s.q, &s.k, &s.v, &cfg, &params));
+        let engine = AttnEngine::sparge(cfg, &params);
+        let (res, t) = time_once(|| engine.attention(&s.q, &s.k, &s.v));
         table.row(&[
             label.into(),
             pct(res.stats.sparsity()),

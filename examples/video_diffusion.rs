@@ -7,14 +7,14 @@
 //!
 //! Requires `make artifacts` (for part 1; part 2 is engine-only).
 
-use sparge::attention::flash::attention_flash;
+use sparge::attention::AttnEngine;
 use sparge::attention::types::AttnConfig;
 use sparge::coordinator::AttnMode;
 use sparge::coordinator::EngineHandle;
 use sparge::runtime::Manifest;
 use sparge::sparge::hilbert::Permutation;
 use sparge::sparge::metrics::{avg_block_similarity, psnr, rel_l1};
-use sparge::sparge::{sparge_attention, SpargeParams};
+use sparge::sparge::SpargeParams;
 use sparge::util::rng::Pcg;
 use sparge::util::table::{fnum, pct, Table};
 use sparge::workloads::video::{self, VideoSpec};
@@ -87,12 +87,14 @@ fn main() -> anyhow::Result<()> {
             &tune_opts,
         );
         let params: SpargeParams = tuned.params;
-        let dense = attention_flash(&ps.q, &ps.k, &ps.v, &cfg);
+        let dense_engine = AttnEngine::dense(cfg);
+        let dense = dense_engine.attention(&ps.q, &ps.k, &ps.v).out;
+        let sparge_engine = AttnEngine::sparge(cfg, &params);
         let t0 = std::time::Instant::now();
-        let res = sparge_attention(&ps.q, &ps.k, &ps.v, &cfg, &params);
+        let res = sparge_engine.attention(&ps.q, &ps.k, &ps.v);
         let t_sparse = t0.elapsed().as_secs_f64();
         let t1 = std::time::Instant::now();
-        let _ = attention_flash(&ps.q, &ps.k, &ps.v, &cfg);
+        let _ = dense_engine.attention(&ps.q, &ps.k, &ps.v);
         let t_dense = t1.elapsed().as_secs_f64();
         table.row(&[
             perm.name().into(),

@@ -11,17 +11,15 @@
 //! Run: `cargo bench --bench fig14_17_sparsity_analysis`
 
 use sparge::attention::types::AttnConfig;
-use sparge::sparge::kernel::{sparse_flash, SpargeParams};
-use sparge::sparge::predict::predict;
+use sparge::attention::AttnEngine;
+use sparge::sparge::kernel::SpargeParams;
 use sparge::tensor::Tensor;
 use sparge::util::rng::Pcg;
 use sparge::util::table::{fnum, Table};
 use sparge::workloads::video::{self, VideoSpec};
 
 fn sparsity_of(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig, params: &SpargeParams) -> f64 {
-    let pred = predict(q, k, cfg, &params.predict_params());
-    let (_, stats) = sparse_flash(q, k, v, &pred.mask, cfg, params);
-    stats.sparsity()
+    AttnEngine::sparge(*cfg, params).attention(q, k, v).stats.sparsity()
 }
 
 fn spec_for(layer: usize, head: usize) -> VideoSpec {

@@ -8,8 +8,8 @@
 //! (8K–32K by default; SPARGE_BENCH_FULL=1 adds 64K and 128K — dense
 //! attention at 128K takes minutes per repetition on CPU.)
 
-use sparge::attention::flash::attention_flash;
 use sparge::attention::types::AttnConfig;
+use sparge::attention::AttnEngine;
 use sparge::experiments::{bench_reps, full_scale};
 use sparge::sparge::predict::{predict, PredictParams};
 use sparge::util::rng::Pcg;
@@ -32,6 +32,7 @@ fn main() {
         "overhead of sparse block prediction (paper Table 3 shape)",
         &["Sequence Len", "Prediction (ms)", "Full Attention (ms)", "Overhead"],
     );
+    let dense = AttnEngine::dense(cfg);
     for &n in &lens {
         let mut rng = Pcg::seeded(303);
         let s = synthetic::generate(&SyntheticSpec::lm_like(n, 64), &mut rng);
@@ -40,7 +41,7 @@ fn main() {
         for _ in 0..reps {
             let (_, tp) = time_once(|| predict(&s.q, &s.k, &cfg, &params));
             t_pred = t_pred.min(tp);
-            let (_, ta) = time_once(|| attention_flash(&s.q, &s.k, &s.v, &cfg));
+            let (_, ta) = time_once(|| dense.attention(&s.q, &s.k, &s.v));
             t_attn = t_attn.min(ta);
         }
         table.row(&[

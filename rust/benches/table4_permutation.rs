@@ -12,12 +12,11 @@
 //!
 //! Run: `cargo bench --bench table4_permutation`
 
-use sparge::attention::flash::attention_flash;
+use sparge::attention::AttnEngine;
 use sparge::experiments::full_scale;
 use sparge::models::suite;
 use sparge::sparge::hilbert::Permutation;
 use sparge::sparge::metrics::{avg_block_similarity, rel_l1};
-use sparge::sparge::sparge_attention;
 use sparge::sparge::tune::{tune_layer, CalibSample, TuneOptions};
 use sparge::util::rng::Pcg;
 use sparge::util::table::{fnum, Table};
@@ -54,8 +53,8 @@ fn main() {
                 &cfg,
                 &tune_opts,
             );
-            let dense = attention_flash(&ps.q, &ps.k, &ps.v, &cfg);
-            let res = sparge_attention(&ps.q, &ps.k, &ps.v, &cfg, &tuned.params);
+            let dense = AttnEngine::dense(cfg).attention(&ps.q, &ps.k, &ps.v).out;
+            let res = AttnEngine::sparge(cfg, &tuned.params).attention(&ps.q, &ps.k, &ps.v);
             table.row(&[
                 perm.name().to_string(),
                 fnum(avg_block_similarity(&ps.q, cfg.bq), 3),

@@ -13,12 +13,12 @@
 //!
 //! Run: `cargo bench --bench table5_simjudge`
 
-use sparge::attention::flash::attention_flash;
 use sparge::attention::types::AttnConfig;
+use sparge::attention::{AttnEngine, SparsityPolicy};
 use sparge::experiments::full_scale;
 use sparge::models::suite;
 use sparge::sparge::hilbert::Permutation;
-use sparge::sparge::kernel::{sparse_flash, SpargeParams};
+use sparge::sparge::kernel::SpargeParams;
 use sparge::sparge::metrics::rel_l1;
 use sparge::sparge::predict::{predict, PredictParams};
 use sparge::util::rng::Pcg;
@@ -50,17 +50,25 @@ fn main() {
         let sample = video::generate_grid(&spec, &mut rng);
         for perm in [Permutation::RowMajor, Permutation::HilbertCurve, Permutation::Random] {
             let ps = video::permute(&sample, &spec, perm, seed);
-            let dense = attention_flash(&ps.q, &ps.k, &ps.v, &cfg);
+            let dense = AttnEngine::dense(cfg).attention(&ps.q, &ps.k, &ps.v).out;
 
-            let with = predict(&ps.q, &ps.k, &cfg, &PredictParams { tau: kernel_params.tau, theta: kernel_params.theta });
+            let pp = PredictParams { tau: kernel_params.tau, theta: kernel_params.theta };
+            let with = predict(&ps.q, &ps.k, &cfg, &pp);
             let without = predict(&ps.q, &ps.k, &cfg, &PredictParams { tau: kernel_params.tau, theta: -1.0 });
-            let (out_w, st_w) = sparse_flash(&ps.q, &ps.k, &ps.v, &with.mask, &cfg, &kernel_params);
-            let (out_wo, st_wo) = sparse_flash(&ps.q, &ps.k, &ps.v, &without.mask, &cfg, &kernel_params);
+            let run = |mask: &sparge::attention::BlockMask| {
+                AttnEngine::builder()
+                    .config(cfg)
+                    .policy(SparsityPolicy::External { mask: mask.clone(), lambda: kernel_params.lambda })
+                    .build()
+                    .attention(&ps.q, &ps.k, &ps.v)
+            };
+            let r_w = run(&with.mask);
+            let r_wo = run(&without.mask);
             cases.push(Case {
-                l1_with: rel_l1(&out_w, &dense),
-                l1_without: rel_l1(&out_wo, &dense),
-                sp_with: st_w.sparsity(),
-                sp_without: st_wo.sparsity(),
+                l1_with: rel_l1(&r_w.out, &dense),
+                l1_without: rel_l1(&r_wo.out, &dense),
+                sp_with: r_w.stats.sparsity(),
+                sp_without: r_wo.stats.sparsity(),
             });
         }
     }

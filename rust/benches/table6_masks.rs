@@ -8,9 +8,9 @@
 //! Run: `cargo bench --bench table6_masks`
 
 use sparge::attention::types::BlockMask;
+use sparge::attention::{AttnEngine, SparsityPolicy};
 use sparge::experiments::full_scale;
 use sparge::models::suite;
-use sparge::sparge::kernel::{sparse_flash, SpargeParams};
 use sparge::sparge::predict::{predict, PredictParams};
 use sparge::util::rng::Pcg;
 use sparge::util::table::{pct, Table};
@@ -36,19 +36,25 @@ fn main() {
     let lambda = tuned.params.lambda.unwrap_or(-5.0);
     println!("tuned operating point: tau={tau} theta={theta} lambda={lambda}\n");
 
+    let run = |mask: &BlockMask, lam: Option<f32>| {
+        AttnEngine::builder()
+            .config(cfg)
+            .policy(SparsityPolicy::External { mask: mask.clone(), lambda: lam })
+            .build()
+            .attention(&s.q, &s.k, &s.v)
+            .stats
+    };
+
     // only M_g
     let pred = predict(&s.q, &s.k, &cfg, &PredictParams { tau, theta });
-    let p_only_mg = SpargeParams { tau, theta, lambda: None, quant: false };
-    let (_, st_mg) = sparse_flash(&s.q, &s.k, &s.v, &pred.mask, &cfg, &p_only_mg);
+    let st_mg = run(&pred.mask, None);
 
     // only M_pv: full stage-1 mask, λ active
     let full_mask = BlockMask::new_all(pred.mask.rows, pred.mask.cols, true);
-    let p_only_pv = SpargeParams { tau: 1.0, theta: -1.0, lambda: Some(lambda), quant: false };
-    let (_, st_pv) = sparse_flash(&s.q, &s.k, &s.v, &full_mask, &cfg, &p_only_pv);
+    let st_pv = run(&full_mask, Some(lambda));
 
     // both
-    let p_both = SpargeParams { tau, theta, lambda: Some(lambda), quant: false };
-    let (_, st_both) = sparse_flash(&s.q, &s.k, &s.v, &pred.mask, &cfg, &p_both);
+    let st_both = run(&pred.mask, Some(lambda));
 
     let mut table = Table::new(
         "sparsity decomposition (paper Table 6 shape)",

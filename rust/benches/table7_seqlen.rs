@@ -44,7 +44,9 @@ fn main() {
         let res = tune_layer(&[CalibSample { q: s.q, k: s.k, v: s.v }], &cfg, &opts);
         header.push(format!("{}K", n / 1024));
         row.push(pct(res.sparsity));
-        eprintln!("  N={n}: sparsity {:.3} (tau={}, theta={}, L1={:.4})", res.sparsity, res.params.tau, res.params.theta, res.l1_error);
+        let p = res.params;
+        let sp = res.sparsity;
+        eprintln!("  N={n}: sparsity {sp:.3} (tau={}, theta={}, L1={:.4})", p.tau, p.theta, res.l1_error);
     }
     let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new("sparsity grows with N (paper Table 7 shape)", &header_refs);

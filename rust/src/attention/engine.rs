@@ -1,0 +1,683 @@
+//! `AttnEngine` + `AttnSession`: the composable attention API.
+//!
+//! An engine is built once from three orthogonal choices and then reused
+//! for any number of calls and sessions:
+//!
+//! - **precision** ([`Precision`]): f32 scoring ([`F32Kernel`]) or the
+//!   SageAttention INT8 path ([`crate::sparge::QuantScoreKernel`], §3.5);
+//! - **sparsity policy** ([`SparsityPolicy`]): dense, SpargeAttn stage-1
+//!   prediction + stage-2 λ (§3.2–3.4), or an external [`BlockMask`];
+//! - **execution** ([`Execution`]): inline, scoped threads per call, or a
+//!   persistent [`WorkerPool`] created once at `build()` — the hot path
+//!   then never spawns a thread.
+//!
+//! [`AttnEngine::attention`] is the one-shot (prefill-shaped) call and is
+//! bitwise-identical to the deprecated free functions it replaces
+//! (`attention_flash*`, `sparse_flash*`, `sparge_attention*`).
+//!
+//! [`AttnEngine::session`] opens per-sequence state for the serving path:
+//! a growing KV cache, incrementally maintained stage-1 pooling under the
+//! `Predicted` policy ([`KPool`]: block means + self-similarities, updated
+//! per appended row — never a full `compress_blocks` recompute), and
+//! cached per-block K quantization (quantized once, only the tail block
+//! requantized per decoded token).
+//! [`AttnSession::decode`] runs a decode-shaped (one query row) step
+//! through the *same* [`run_tiled`] driver as prefill.
+//!
+//! ## Decode/prefill parity
+//!
+//! For f32 precision with `lambda: None`, N tokens fed through
+//! [`AttnSession::decode`] produce bit-identical rows to one causal
+//! [`AttnSession::prefill`] of the full sequence (dense or external-mask
+//! policy; golden-tested in `tests/session_decode.rs`): every per-row
+//! quantity in the tiled pipeline is independent of its tile-mates, and
+//! the cache's block boundaries coincide with prefill's. Stage-2 λ makes
+//! group skip decisions across tile rows, and the predicted policy pools
+//! the query side at `b_q` granularity, so those compositions trade exact
+//! parity for sparsity — as on GPU, where decode kernels run their own
+//! tiling.
+
+use crate::sparge::kernel::{quant_score_block, QuantScoreKernel, SpargeParams};
+use crate::sparge::predict::{compress_blocks, predict_decode_row, predict_pooled, KPool, PredictParams};
+use crate::tensor::quant::{self, QuantBlock};
+use crate::tensor::Tensor;
+use crate::util::threadpool::WorkerPool;
+
+use super::pipeline::{run_tiled, BlockFilter, DenseFilter, Exec, F32Kernel, MaskFilter, ScoreKernel};
+use super::types::{AttnConfig, BlockMask, SkipStats};
+
+/// Score-path precision of an engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Plain f32 scoring (the FlashAttention-2 path).
+    F32,
+    /// SageAttention per-block INT8 scoring with K smoothing (§3.5).
+    Int8,
+}
+
+/// Which blocks run: the engine's sparsity policy.
+#[derive(Clone, Debug)]
+pub enum SparsityPolicy {
+    /// Every in-domain block is computed.
+    Dense,
+    /// SpargeAttn: predict the stage-1 mask `M_g` from the inputs
+    /// (§3.2–3.3), then apply the stage-2 online-softmax λ filter (§3.4).
+    Predicted { params: PredictParams, lambda: Option<f32> },
+    /// An externally-constructed block mask (baseline mask policies,
+    /// precomputed masks), plus optional stage-2 λ.
+    External { mask: BlockMask, lambda: Option<f32> },
+}
+
+/// How the tiled driver distributes query-block rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Execution {
+    /// Serial on the calling thread.
+    Inline,
+    /// Scoped threads spawned per call (legacy; prefer `Pool`).
+    Threads(usize),
+    /// A persistent worker pool of the given size, created once at
+    /// `build()` and reused across calls and sessions.
+    Pool(usize),
+}
+
+/// Builder for [`AttnEngine`]. Defaults: dense f32, inline execution,
+/// [`AttnConfig::default`].
+pub struct AttnEngineBuilder {
+    cfg: AttnConfig,
+    precision: Precision,
+    policy: SparsityPolicy,
+    execution: Execution,
+}
+
+impl AttnEngineBuilder {
+    pub fn config(mut self, cfg: AttnConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
+    pub fn policy(mut self, p: SparsityPolicy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    pub fn execution(mut self, e: Execution) -> Self {
+        self.execution = e;
+        self
+    }
+
+    /// Map a [`SpargeParams`] bundle onto precision + predicted policy:
+    /// `quant` selects INT8, (τ, θ) feed stage 1, λ feeds stage 2.
+    pub fn sparge(mut self, params: &SpargeParams) -> Self {
+        self.precision = if params.quant { Precision::Int8 } else { Precision::F32 };
+        self.policy = SparsityPolicy::Predicted { params: params.predict_params(), lambda: params.lambda };
+        self
+    }
+
+    /// Build the engine; `Execution::Pool(n)` spawns its workers here,
+    /// once.
+    pub fn build(self) -> AttnEngine {
+        let pool = match self.execution {
+            Execution::Pool(n) => Some(WorkerPool::new(n)),
+            _ => None,
+        };
+        AttnEngine {
+            cfg: self.cfg,
+            precision: self.precision,
+            policy: self.policy,
+            pool,
+            execution: self.execution,
+        }
+    }
+}
+
+/// A reusable, `Send + Sync` attention engine: one composition of
+/// precision × sparsity policy × execution (see module docs).
+pub struct AttnEngine {
+    cfg: AttnConfig,
+    precision: Precision,
+    policy: SparsityPolicy,
+    execution: Execution,
+    pool: Option<WorkerPool>,
+}
+
+/// Result of an engine call (one-shot, prefill, or one decode step).
+#[derive(Clone, Debug)]
+pub struct AttnOutput {
+    pub out: Tensor,
+    pub stats: SkipStats,
+    /// The stage-1 mask the call computed, when the policy produced one
+    /// (`Predicted` one-shot / prefill / decode step).
+    pub mask: Option<BlockMask>,
+}
+
+impl AttnEngine {
+    pub fn builder() -> AttnEngineBuilder {
+        AttnEngineBuilder {
+            cfg: AttnConfig::default(),
+            precision: Precision::F32,
+            policy: SparsityPolicy::Dense,
+            execution: Execution::Inline,
+        }
+    }
+
+    /// Dense f32 engine (the FlashAttention-2 composition), inline.
+    pub fn dense(cfg: AttnConfig) -> AttnEngine {
+        AttnEngine::builder().config(cfg).build()
+    }
+
+    /// Full SpargeAttn engine from a [`SpargeParams`] bundle, inline.
+    pub fn sparge(cfg: AttnConfig, params: &SpargeParams) -> AttnEngine {
+        AttnEngine::builder().config(cfg).sparge(params).build()
+    }
+
+    pub fn config(&self) -> &AttnConfig {
+        &self.cfg
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    pub fn policy(&self) -> &SparsityPolicy {
+        &self.policy
+    }
+
+    pub fn execution(&self) -> Execution {
+        self.execution
+    }
+
+    fn exec(&self) -> Exec<'_> {
+        match (&self.execution, &self.pool) {
+            (Execution::Inline, _) => Exec::Inline,
+            (Execution::Threads(t), _) => Exec::Threads(*t),
+            (Execution::Pool(_), Some(p)) => Exec::Pool(p),
+            // unreachable by construction (build() always spawns the pool)
+            (Execution::Pool(_), None) => Exec::Inline,
+        }
+    }
+
+    /// One-shot attention of `q` against `k`/`v` under the engine's
+    /// composition (the prefill shape). Bitwise-identical to the
+    /// deprecated free functions this API replaces.
+    pub fn attention(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> AttnOutput {
+        match &self.policy {
+            SparsityPolicy::Dense => {
+                let (out, stats) = self.run(q, k, v, &self.cfg, &DenseFilter);
+                AttnOutput { out, stats, mask: None }
+            }
+            SparsityPolicy::Predicted { params, lambda } => {
+                let (kt, sim_k) = compress_blocks(k, self.cfg.bk);
+                let pred = predict_pooled(q, &kt, &sim_k, &self.cfg, params);
+                let (out, stats) = {
+                    let filter = MaskFilter::new(&pred.mask, *lambda);
+                    self.run(q, k, v, &self.cfg, &filter)
+                };
+                AttnOutput { out, stats, mask: Some(pred.mask) }
+            }
+            SparsityPolicy::External { mask, lambda } => {
+                assert_eq!(mask.rows, self.cfg.n_qblocks(q.dim(0)), "external mask rows");
+                assert_eq!(mask.cols, self.cfg.n_kblocks(k.dim(0)), "external mask cols");
+                let filter = MaskFilter::new(mask, *lambda);
+                let (out, stats) = self.run(q, k, v, &self.cfg, &filter);
+                AttnOutput { out, stats, mask: None }
+            }
+        }
+    }
+
+    /// Open a stateful per-sequence session (KV cache, incremental
+    /// predictor pooling, cached K quantization) over this engine.
+    pub fn session(&self) -> AttnSession<'_> {
+        AttnSession {
+            engine: self,
+            d: 0,
+            dv: 0,
+            rows: 0,
+            k_data: Vec::new(),
+            v_data: Vec::new(),
+            kpool: None,
+            kmean: None,
+            kq: Vec::new(),
+            steps: 0,
+        }
+    }
+
+    fn run(
+        &self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        cfg: &AttnConfig,
+        filter: &impl BlockFilter,
+    ) -> (Tensor, SkipStats) {
+        match self.precision {
+            Precision::F32 => {
+                let kernel = F32Kernel::new(q, k, cfg);
+                run_tiled(q, k, v, cfg, &kernel, filter, self.exec())
+            }
+            Precision::Int8 => {
+                let kernel = QuantScoreKernel::new(q, k, cfg);
+                run_tiled(q, k, v, cfg, &kernel, filter, self.exec())
+            }
+        }
+    }
+}
+
+// The whole point of the builder: engines are shared across serving
+// threads. Compile-time proof of `Send + Sync`.
+#[allow(dead_code)]
+fn _assert_send_sync<T: Send + Sync>() {}
+#[allow(dead_code)]
+fn _engine_is_send_sync() {
+    _assert_send_sync::<AttnEngine>();
+}
+
+/// How the session's stage-1 predictor maintained its pooled state (see
+/// [`KPool`]); exposed so callers can assert the update discipline.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PredictorCounters {
+    /// Full scans over the whole K cache (the prefill bulk build).
+    pub full_recomputes: usize,
+    /// Per-row incremental updates (decode appends).
+    pub incremental_updates: usize,
+}
+
+/// Mutable per-sequence state over a shared [`AttnEngine`]: a growing KV
+/// cache, incrementally updated stage-1 pooling, and (for INT8 engines)
+/// cached per-block K quantization. See the module docs for the
+/// decode/prefill parity contract.
+pub struct AttnSession<'e> {
+    engine: &'e AttnEngine,
+    d: usize,
+    dv: usize,
+    rows: usize,
+    k_data: Vec<f32>,
+    v_data: Vec<f32>,
+    /// Stage-1 pooling state — maintained only under the `Predicted`
+    /// policy (the single consumer); dense/external sessions skip the
+    /// per-token pooling cost entirely.
+    kpool: Option<KPool>,
+    /// Frozen K-smoothing channel mean (INT8 only): fixed at the first
+    /// append so every cached block shares one shift and softmax's
+    /// shift-invariance holds exactly across the growing cache. A session
+    /// that decodes from empty freezes it at zero (no smoothing).
+    kmean: Option<Vec<f32>>,
+    /// Cached INT8 quantization of the smoothed K cache; only the tail
+    /// block is requantized per decoded token.
+    kq: Vec<QuantBlock>,
+    steps: usize,
+}
+
+impl AttnSession<'_> {
+    /// Cached sequence length (rows of K/V seen so far).
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Decode steps taken so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Predictor maintenance counters; all-zero for non-`Predicted`
+    /// policies (no pooled state is kept for them).
+    pub fn predictor_counters(&self) -> PredictorCounters {
+        match &self.kpool {
+            Some(p) => PredictorCounters {
+                full_recomputes: p.full_recomputes,
+                incremental_updates: p.incremental_updates,
+            },
+            None => PredictorCounters::default(),
+        }
+    }
+
+    /// Prefill an empty session: cache `k`/`v`, bulk-build the predictor
+    /// pooling state (one scan; decode steps after this are incremental),
+    /// and run the one-shot attention of `q` against the cache — the
+    /// result is bitwise-identical to `engine.attention(q, k, v)`.
+    pub fn prefill(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> AttnOutput {
+        assert_eq!(self.rows, 0, "prefill on a non-empty session; use decode() to extend it");
+        assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
+        assert_eq!(k.dim(0), v.dim(0), "k/v rows");
+        self.d = k.dim(1);
+        self.dv = v.dim(1);
+        self.k_data.extend_from_slice(k.data());
+        self.v_data.extend_from_slice(v.data());
+        self.rows = k.dim(0);
+        if matches!(self.engine.policy, SparsityPolicy::Predicted { .. }) {
+            let mut pool = KPool::new(self.engine.cfg.bk, self.d);
+            pool.build(k);
+            self.kpool = Some(pool);
+        }
+        if self.engine.precision == Precision::Int8 {
+            let mean = quant::channel_mean(k);
+            let ksm = quant::smooth(k, &mean);
+            self.kq = quant::quantize_blocks(&ksm, self.engine.cfg.bk);
+            self.kmean = Some(mean);
+        }
+        match &self.engine.policy {
+            SparsityPolicy::Dense => {
+                let (out, stats) = self.run_full(q, k, v, &DenseFilter);
+                AttnOutput { out, stats, mask: None }
+            }
+            SparsityPolicy::Predicted { params, lambda } => {
+                // reuse the pooled K side; bitwise-identical to predict()
+                let pool = self.kpool.as_ref().unwrap();
+                let pred = predict_pooled(q, &pool.means(), pool.sims(), &self.engine.cfg, params);
+                let (out, stats) = {
+                    let filter = MaskFilter::new(&pred.mask, *lambda);
+                    self.run_full(q, k, v, &filter)
+                };
+                AttnOutput { out, stats, mask: Some(pred.mask) }
+            }
+            SparsityPolicy::External { mask, lambda } => {
+                // a decode-ready mask may already cover positions past the
+                // prefill; require coverage, not exact geometry
+                assert!(mask.rows >= self.engine.cfg.n_qblocks(q.dim(0)), "external mask rows");
+                assert!(mask.cols >= self.engine.cfg.n_kblocks(k.dim(0)), "external mask cols");
+                let filter = MaskFilter::new(mask, *lambda);
+                let (out, stats) = self.run_full(q, k, v, &filter);
+                AttnOutput { out, stats, mask: None }
+            }
+        }
+    }
+
+    /// Prefill-shaped run over the freshly cached K/V. Same composition as
+    /// `engine.attention` — but the INT8 path reuses the session's cached
+    /// K quantization instead of re-smoothing and re-quantizing K (the
+    /// per-block payloads are identical: blocks are quantized
+    /// independently and the smoothing mean is global either way).
+    fn run_full(
+        &self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        filter: &impl BlockFilter,
+    ) -> (Tensor, SkipStats) {
+        let cfg = &self.engine.cfg;
+        match self.engine.precision {
+            Precision::F32 => {
+                let kernel = F32Kernel::new(q, k, cfg);
+                run_tiled(q, k, v, cfg, &kernel, filter, self.engine.exec())
+            }
+            Precision::Int8 => {
+                let kernel = QuantCacheKernel {
+                    qb: quant::quantize_blocks(q, cfg.bq),
+                    kb: &self.kq,
+                    scale: cfg.scale_for(q.dim(1)),
+                    causal: cfg.causal,
+                    bq: cfg.bq,
+                    bk: cfg.bk,
+                };
+                run_tiled(q, k, v, cfg, &kernel, filter, self.engine.exec())
+            }
+        }
+    }
+
+    /// Decode one token: append the (1 × d) key/value rows to the cache,
+    /// update the predictor pooling incrementally (and requantize only the
+    /// tail K block under INT8), then run the 1-row step through the same
+    /// tiled driver. Returns the (1 × dv) output row with per-step
+    /// [`SkipStats`] (exact fractional accounting — see
+    /// `SkipStats::pv_skipped_frac`).
+    pub fn decode(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> AttnOutput {
+        assert_eq!(q.dim(0), 1, "decode takes a single query row");
+        assert_eq!(k.dim(0), 1, "decode takes a single key row");
+        assert_eq!(v.dim(0), 1, "decode takes a single value row");
+        if self.rows == 0 {
+            self.d = k.dim(1);
+            self.dv = v.dim(1);
+            if matches!(self.engine.policy, SparsityPolicy::Predicted { .. }) {
+                self.kpool = Some(KPool::new(self.engine.cfg.bk, self.d));
+            }
+            if self.engine.precision == Precision::Int8 {
+                self.kmean = Some(vec![0.0; self.d]);
+            }
+        }
+        assert_eq!(q.dim(1), self.d, "q head dim");
+        assert_eq!(k.dim(1), self.d, "k head dim");
+        assert_eq!(v.dim(1), self.dv, "v dim");
+
+        // append + incremental predictor update (tail block only)
+        self.k_data.extend_from_slice(k.data());
+        self.v_data.extend_from_slice(v.data());
+        self.rows += 1;
+        let bk = self.engine.cfg.bk;
+        let tail_start = ((self.rows - 1) / bk) * bk;
+        if let Some(pool) = self.kpool.as_mut() {
+            let tail = &self.k_data[tail_start * self.d..self.rows * self.d];
+            pool.append_row(k.row(0), tail);
+        }
+        if self.engine.precision == Precision::Int8 {
+            self.requantize_tail(tail_start);
+        }
+
+        // the decode step sees exactly the visible prefix, so it runs
+        // non-causal over the cache; scale/bk/cw carry over from the engine
+        let step_cfg = AttnConfig { causal: false, ..self.engine.cfg };
+        let scale = step_cfg.scale_for(self.d);
+        let kt = Tensor::from_vec(&[self.rows, self.d], std::mem::take(&mut self.k_data));
+        let vt = Tensor::from_vec(&[self.rows, self.dv], std::mem::take(&mut self.v_data));
+        let (out, stats, mask) = match &self.engine.policy {
+            SparsityPolicy::Dense => {
+                let (o, s) = self.run_step(q, &kt, &vt, &step_cfg, &DenseFilter);
+                (o, s, None)
+            }
+            SparsityPolicy::Predicted { params, lambda } => {
+                let pool = self.kpool.as_ref().unwrap();
+                let mrow = predict_decode_row(q.row(0), &pool.means(), pool.sims(), scale, params);
+                let (o, s) = {
+                    let filter = MaskFilter::new(&mrow, *lambda);
+                    self.run_step(q, &kt, &vt, &step_cfg, &filter)
+                };
+                (o, s, Some(mrow))
+            }
+            SparsityPolicy::External { mask, lambda } => {
+                let bi = (self.rows - 1) / self.engine.cfg.bq;
+                assert!(bi < mask.rows, "external mask has {} block rows; decode is at row {bi}", mask.rows);
+                assert!(
+                    step_cfg.n_kblocks(self.rows) <= mask.cols,
+                    "external mask has {} block cols; cache needs {}",
+                    mask.cols,
+                    step_cfg.n_kblocks(self.rows)
+                );
+                let filter = RowMaskFilter { mask, row: bi, lambda: *lambda };
+                let (o, s) = self.run_step(q, &kt, &vt, &step_cfg, &filter);
+                (o, s, None)
+            }
+        };
+        self.k_data = kt.into_vec();
+        self.v_data = vt.into_vec();
+        self.steps += 1;
+        AttnOutput { out, stats, mask }
+    }
+
+    fn run_step(
+        &self,
+        q: &Tensor,
+        kt: &Tensor,
+        vt: &Tensor,
+        step_cfg: &AttnConfig,
+        filter: &impl BlockFilter,
+    ) -> (Tensor, SkipStats) {
+        match self.engine.precision {
+            Precision::F32 => {
+                let kernel = F32Kernel::new(q, kt, step_cfg);
+                run_tiled(q, kt, vt, step_cfg, &kernel, filter, self.engine.exec())
+            }
+            Precision::Int8 => {
+                let kernel = QuantCacheKernel {
+                    qb: vec![QuantBlock::quantize(q.data(), 1, self.d)],
+                    kb: &self.kq,
+                    scale: step_cfg.scale_for(self.d),
+                    causal: false,
+                    bq: self.engine.cfg.bq,
+                    bk: self.engine.cfg.bk,
+                };
+                run_tiled(q, kt, vt, step_cfg, &kernel, filter, self.engine.exec())
+            }
+        }
+    }
+
+    /// Requantize the tail K block (the one the newest row landed in)
+    /// with the frozen smoothing mean; all other cached blocks are reused.
+    fn requantize_tail(&mut self, tail_start: usize) {
+        let mean = self.kmean.as_ref().expect("kmean frozen at first append");
+        let rows = self.rows - tail_start;
+        let mut block = self.k_data[tail_start * self.d..self.rows * self.d].to_vec();
+        for r in 0..rows {
+            for (x, &m) in block[r * self.d..(r + 1) * self.d].iter_mut().zip(mean) {
+                *x -= m;
+            }
+        }
+        let qb = QuantBlock::quantize(&block, rows, self.d);
+        if rows == 1 {
+            self.kq.push(qb); // the new row opened a fresh block
+        } else {
+            *self.kq.last_mut().unwrap() = qb;
+        }
+    }
+}
+
+/// INT8 kernel over the session's cached K blocks: Q is quantized per call
+/// (all blocks at prefill, one row per decode step); K blocks are borrowed
+/// from the cache so they are quantized exactly once each.
+struct QuantCacheKernel<'a> {
+    qb: Vec<QuantBlock>,
+    kb: &'a [QuantBlock],
+    scale: f32,
+    causal: bool,
+    bq: usize,
+    bk: usize,
+}
+
+impl ScoreKernel for QuantCacheKernel<'_> {
+    fn score_block(&self, q0: usize, _q1: usize, k0: usize, _k1: usize, out: &mut [f32]) {
+        let qblk = &self.qb[q0 / self.bq];
+        quant_score_block(qblk, &self.kb[k0 / self.bk], q0, k0, self.scale, self.causal, out);
+    }
+}
+
+/// Filter for one decode step under an external full-sequence mask: block
+/// decisions come from the mask row the decoded position belongs to.
+struct RowMaskFilter<'a> {
+    mask: &'a BlockMask,
+    row: usize,
+    lambda: Option<f32>,
+}
+
+impl BlockFilter for RowMaskFilter<'_> {
+    fn keep(&self, _bi: usize, bj: usize) -> bool {
+        self.mask.get(self.row, bj)
+    }
+
+    fn lambda(&self) -> Option<f32> {
+        self.lambda
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::attention_naive;
+    use crate::util::prop::{assert_allclose, rel_l1};
+    use crate::util::rng::Pcg;
+
+    fn qkv(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Pcg::seeded(seed);
+        (Tensor::randn(&[n, d], &mut rng), Tensor::randn(&[n, d], &mut rng), Tensor::randn(&[n, d], &mut rng))
+    }
+
+    #[test]
+    fn builder_composes_and_matches_oracle() {
+        let (q, k, v) = qkv(48, 8, 71);
+        let cfg = AttnConfig { bq: 16, bk: 8, causal: false, scale: None, cw: 2 };
+        let engine = AttnEngine::dense(cfg);
+        let r = engine.attention(&q, &k, &v);
+        let oracle = attention_naive(&q, &k, &v, &cfg);
+        assert_allclose(r.out.data(), oracle.data(), 1e-4, 1e-3, "engine-dense").unwrap();
+        assert_eq!(r.stats.sparsity(), 0.0);
+        assert!(r.mask.is_none());
+    }
+
+    #[test]
+    fn execution_modes_are_bitwise_identical() {
+        let (q, k, v) = qkv(96, 16, 72);
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2 };
+        let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: Some(-6.0), quant: false };
+        let base = AttnEngine::sparge(cfg, &params).attention(&q, &k, &v);
+        for exec in [Execution::Threads(4), Execution::Pool(2), Execution::Pool(8)] {
+            let engine = AttnEngine::builder().config(cfg).sparge(&params).execution(exec).build();
+            let r = engine.attention(&q, &k, &v);
+            assert_eq!(r.out, base.out, "{exec:?}");
+            assert_eq!(r.stats, base.stats, "{exec:?}");
+            assert_eq!(r.mask, base.mask, "{exec:?}");
+        }
+    }
+
+    #[test]
+    fn engine_is_reusable_and_shared_across_threads() {
+        let (q, k, v) = qkv(64, 8, 73);
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: false, scale: None, cw: 2 };
+        let engine = AttnEngine::builder()
+            .config(cfg)
+            .sparge(&SpargeParams::default())
+            .execution(Execution::Pool(2))
+            .build();
+        let first = engine.attention(&q, &k, &v);
+        let outs: Vec<Tensor> = std::thread::scope(|scope| {
+            let handles: Vec<_> =
+                (0..4).map(|_| scope.spawn(|| engine.attention(&q, &k, &v).out)).collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for o in outs {
+            assert_eq!(o, first.out);
+        }
+    }
+
+    #[test]
+    fn external_policy_checks_geometry() {
+        let (q, k, v) = qkv(32, 8, 74);
+        let cfg = AttnConfig { bq: 8, bk: 8, causal: false, scale: None, cw: 2 };
+        let mask = BlockMask::new_all(4, 4, true);
+        let engine = AttnEngine::builder()
+            .config(cfg)
+            .policy(SparsityPolicy::External { mask, lambda: None })
+            .build();
+        let r = engine.attention(&q, &k, &v);
+        assert_eq!(r.stats.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn int8_session_decode_tracks_dense_reference() {
+        // quant decode is approximate (frozen smoothing mean, per-step row
+        // quantization) but must stay within the INT8 budget of the f32
+        // dense oracle.
+        let (q, k, v) = qkv(72, 16, 75);
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2 };
+        let engine = AttnEngine::builder().config(cfg).precision(Precision::Int8).build();
+        let mut session = engine.session();
+        let n0 = 48;
+        let pre = session.prefill(&q.rows(0, n0), &k.rows(0, n0), &v.rows(0, n0));
+        // the cached-K-quantization prefill path must equal the one-shot
+        let oneshot = engine.attention(&q.rows(0, n0), &k.rows(0, n0), &v.rows(0, n0));
+        assert_eq!(pre.out, oneshot.out);
+        assert_eq!(pre.stats, oneshot.stats);
+        let oracle = attention_naive(&q, &k, &v, &cfg);
+        for t in n0..72 {
+            let r = session.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1));
+            let err = rel_l1(r.out.data(), oracle.row(t));
+            assert!(err < 0.1, "int8 decode row {t} rel-L1 {err}");
+        }
+        assert_eq!(session.len(), 72);
+        assert_eq!(session.steps(), 24);
+    }
+}

@@ -1,31 +1,36 @@
-//! Dense blockwise FlashAttention (online softmax) in f32 — a thin
-//! composition over the unified tiled pipeline: the [`F32Kernel`] score
-//! path with the all-blocks [`DenseFilter`] (§3.1 of the paper).
+//! Dense blockwise FlashAttention (online softmax) in f32 — deprecated
+//! free-function shims over the [`AttnEngine`] composition (dense policy ×
+//! [`super::pipeline::F32Kernel`] × chosen execution). New code should
+//! build an engine once and reuse it; see the migration table in
+//! [`crate::attention`].
 
 use crate::tensor::Tensor;
 
-use super::pipeline::{run_tiled, DenseFilter, F32Kernel};
+use super::engine::{AttnEngine, Execution};
 use super::types::{AttnConfig, SkipStats};
 
 /// Dense blockwise FlashAttention over a single head. Numerically matches
 /// `attention_naive` to fp32 rounding.
+#[deprecated(note = "build an AttnEngine::dense(cfg) once and call .attention(q, k, v)")]
 pub fn attention_flash(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -> Tensor {
-    let (out, _) = attention_flash_stats(q, k, v, cfg);
-    out
+    AttnEngine::dense(*cfg).attention(q, k, v).out
 }
 
 /// Dense flash that also reports the block-op counters (all executed).
+#[deprecated(note = "build an AttnEngine::dense(cfg) once and call .attention(q, k, v)")]
 pub fn attention_flash_stats(
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
     cfg: &AttnConfig,
 ) -> (Tensor, SkipStats) {
-    attention_flash_stats_threads(q, k, v, cfg, 1)
+    let r = AttnEngine::dense(*cfg).attention(q, k, v);
+    (r.out, r.stats)
 }
 
 /// Dense flash with query-block rows partitioned across `threads` workers.
 /// Output and stats are bitwise identical for every thread count.
+#[deprecated(note = "use AttnEngine::builder().execution(Execution::Threads(n) or ::Pool(n))")]
 pub fn attention_flash_stats_threads(
     q: &Tensor,
     k: &Tensor,
@@ -33,8 +38,9 @@ pub fn attention_flash_stats_threads(
     cfg: &AttnConfig,
     threads: usize,
 ) -> (Tensor, SkipStats) {
-    let kernel = F32Kernel::new(q, k, cfg);
-    run_tiled(q, k, v, cfg, &kernel, &DenseFilter, threads)
+    let engine = AttnEngine::builder().config(*cfg).execution(Execution::Threads(threads)).build();
+    let r = engine.attention(q, k, v);
+    (r.out, r.stats)
 }
 
 #[cfg(test)]
@@ -43,16 +49,27 @@ mod tests {
     use crate::attention::dense::attention_naive;
     use crate::util::prop::{assert_allclose, Cases};
 
+    fn dense(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -> (Tensor, SkipStats) {
+        let r = AttnEngine::dense(*cfg).attention(q, k, v);
+        (r.out, r.stats)
+    }
+
     #[test]
     fn flash_matches_naive_noncausal() {
         Cases::standard(501).check(|rng| {
             let n = rng.range(1, 70);
             let d = [4, 8, 16][rng.range(0, 3)];
-            let cfg = AttnConfig { bq: rng.range(1, 20), bk: rng.range(1, 20), causal: false, scale: None, cw: rng.range(1, 5) };
+            let cfg = AttnConfig {
+                bq: rng.range(1, 20),
+                bk: rng.range(1, 20),
+                causal: false,
+                scale: None,
+                cw: rng.range(1, 5),
+            };
             let q = Tensor::randn(&[n, d], rng);
             let k = Tensor::randn(&[n, d], rng);
             let v = Tensor::randn(&[n, d], rng);
-            let fast = attention_flash(&q, &k, &v, &cfg);
+            let (fast, _) = dense(&q, &k, &v, &cfg);
             let slow = attention_naive(&q, &k, &v, &cfg);
             assert_allclose(fast.data(), slow.data(), 1e-4, 1e-3, "flash-vs-naive")
         });
@@ -63,11 +80,12 @@ mod tests {
         Cases::standard(502).check(|rng| {
             let n = rng.range(1, 70);
             let d = 8;
-            let cfg = AttnConfig { bq: rng.range(1, 20), bk: rng.range(1, 20), causal: true, scale: None, cw: 2 };
+            let cfg =
+                AttnConfig { bq: rng.range(1, 20), bk: rng.range(1, 20), causal: true, scale: None, cw: 2 };
             let q = Tensor::randn(&[n, d], rng);
             let k = Tensor::randn(&[n, d], rng);
             let v = Tensor::randn(&[n, d], rng);
-            let fast = attention_flash(&q, &k, &v, &cfg);
+            let (fast, _) = dense(&q, &k, &v, &cfg);
             let slow = attention_naive(&q, &k, &v, &cfg);
             assert_allclose(fast.data(), slow.data(), 1e-4, 1e-3, "flash-causal")
         });
@@ -81,7 +99,7 @@ mod tests {
         let k = Tensor::randn(&[nk, d], &mut rng);
         let v = Tensor::randn(&[nk, d], &mut rng);
         let cfg = AttnConfig { bq: 16, bk: 16, ..Default::default() };
-        let fast = attention_flash(&q, &k, &v, &cfg);
+        let (fast, _) = dense(&q, &k, &v, &cfg);
         let slow = attention_naive(&q, &k, &v, &cfg);
         assert_allclose(fast.data(), slow.data(), 1e-4, 1e-3, "rect").unwrap();
     }
@@ -94,7 +112,7 @@ mod tests {
         let k = Tensor::randn(&[n, d], &mut rng);
         let v = Tensor::randn(&[n, d], &mut rng);
         let cfg = AttnConfig { bq: 16, bk: 16, causal: false, scale: None, cw: 2 };
-        let (_, stats) = attention_flash_stats(&q, &k, &v, &cfg);
+        let (_, stats) = dense(&q, &k, &v, &cfg);
         assert_eq!(stats.qk_total, 16);
         assert_eq!(stats.pv_total, 16);
         assert_eq!(stats.qk_skipped, 0);
@@ -109,22 +127,30 @@ mod tests {
         let k = Tensor::randn(&[n, d], &mut rng);
         let v = Tensor::randn(&[n, d], &mut rng);
         let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2 };
-        let (_, stats) = attention_flash_stats(&q, &k, &v, &cfg);
+        let (_, stats) = dense(&q, &k, &v, &cfg);
         // 4 q-blocks; block row i visits i+1 k-blocks => 1+2+3+4 = 10
         assert_eq!(stats.qk_total, 10);
     }
 
     #[test]
-    fn threaded_dense_bitwise_equals_serial() {
+    fn deprecated_shims_match_engine() {
+        // the shims stay bitwise-faithful while call sites migrate
         let mut rng = crate::util::rng::Pcg::seeded(16);
         let (n, d) = (200, 16);
         let q = Tensor::randn(&[n, d], &mut rng);
         let k = Tensor::randn(&[n, d], &mut rng);
         let v = Tensor::randn(&[n, d], &mut rng);
         let cfg = AttnConfig { bq: 32, bk: 16, causal: true, scale: None, cw: 2 };
-        let (o1, s1) = attention_flash_stats_threads(&q, &k, &v, &cfg, 1);
-        let (o8, s8) = attention_flash_stats_threads(&q, &k, &v, &cfg, 8);
-        assert_eq!(o1, o8);
-        assert_eq!(s1, s8);
+        let (o, s) = dense(&q, &k, &v, &cfg);
+        #[allow(deprecated)]
+        {
+            assert_eq!(attention_flash(&q, &k, &v, &cfg), o);
+            let (o1, s1) = attention_flash_stats(&q, &k, &v, &cfg);
+            let (o8, s8) = attention_flash_stats_threads(&q, &k, &v, &cfg, 8);
+            assert_eq!(o1, o);
+            assert_eq!(s1, s);
+            assert_eq!(o8, o);
+            assert_eq!(s8, s);
+        }
     }
 }

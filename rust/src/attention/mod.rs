@@ -1,20 +1,51 @@
-//! Attention engines, organized around **one** tiled loop.
+//! Attention engines, organized around **one** tiled loop and **one**
+//! public composition API.
+//!
+//! [`engine`] is the front door: [`AttnEngine::builder`] composes
+//! precision ([`Precision`]) × sparsity policy ([`SparsityPolicy`]) ×
+//! execution ([`Execution`], including a persistent worker pool) into a
+//! reusable `Send + Sync` engine; [`AttnEngine::session`] adds per-sequence
+//! state (KV cache, incremental stage-1 pooling, cached K quantization)
+//! for prefill + decode serving.
 //!
 //! [`pipeline`] owns the single q-block × k-block driver ([`run_tiled`])
-//! and the two seams every engine composes from: [`ScoreKernel`] (how a
-//! score block is produced — f32 matmul vs. INT8 dequant) and
-//! [`BlockFilter`] (which blocks run — dense, stage-1 mask, stage-2 λ,
-//! causal bound). [`flash`] is the dense composition, [`dense`] the naive
-//! softmax oracle used by tests, and `crate::sparge::kernel` the sparse +
+//! and the seams every engine composes from: [`ScoreKernel`] (how a score
+//! block is produced — f32 matmul vs. INT8 dequant), [`BlockFilter`]
+//! (which blocks run — dense, stage-1 mask, stage-2 λ, causal bound), and
+//! [`Exec`] (inline / scoped threads / persistent pool). [`flash`] keeps
+//! the deprecated dense free-function shims, [`dense`] the naive softmax
+//! oracle used by tests, and `crate::sparge::kernel` the sparse +
 //! quantized compositions. Adding an engine means adding a kernel or
 //! filter impl — never another loop.
+//!
+//! ## Migration (old free functions → builder API)
+//!
+//! | Deprecated call | Replacement |
+//! |---|---|
+//! | `attention_flash(q,k,v,cfg)` | `AttnEngine::dense(cfg).attention(q,k,v).out` |
+//! | `attention_flash_stats(q,k,v,cfg)` | `AttnEngine::dense(cfg).attention(q,k,v)` |
+//! | `attention_flash_stats_threads(..,t)` | `..builder().config(cfg).execution(Execution::Threads(t)).build()` |
+//! | `sparge_attention(q,k,v,cfg,p)` | `AttnEngine::sparge(cfg, p).attention(q,k,v)` |
+//! | `sparge_attention_threads(..,t)` | `..builder().config(cfg).sparge(p).execution(Execution::Threads(t)).build()` |
+//! | `sparse_flash(q,k,v,mask,cfg,p)` | `..policy(SparsityPolicy::External { mask, lambda }) + .precision(..)` |
+//! | `sparse_flash_threads(..,t)` | as above plus `.execution(Execution::Threads(t))` |
+//! | per-call scoped threads | `.execution(Execution::Pool(n))` — pool spawned once at `build()` |
+//! | KV-cache decode (new) | `engine.session()` → `session.prefill(..)` / `session.decode(..)` |
 
 pub mod dense;
+pub mod engine;
 pub mod flash;
 pub mod pipeline;
 pub mod types;
 
 pub use dense::attention_naive;
+pub use engine::{
+    AttnEngine, AttnEngineBuilder, AttnOutput, AttnSession, Execution, Precision, PredictorCounters,
+    SparsityPolicy,
+};
+#[allow(deprecated)]
 pub use flash::{attention_flash, attention_flash_stats, attention_flash_stats_threads};
-pub use pipeline::{run_tiled, score_block, BlockFilter, DenseFilter, F32Kernel, FlashTile, MaskFilter, ScoreKernel};
+pub use pipeline::{
+    run_tiled, score_block, BlockFilter, DenseFilter, Exec, F32Kernel, FlashTile, MaskFilter, ScoreKernel,
+};
 pub use types::{AttnConfig, BlockMask, SkipStats};

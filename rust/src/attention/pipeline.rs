@@ -14,11 +14,13 @@
 //!   (§3.4), and the causal-domain bound that keeps upper-triangle blocks
 //!   out of both the loop and the [`SkipStats`] totals.
 //!
-//! The driver partitions query-block rows across [`crate::util::threadpool`]
-//! workers: each row's [`FlashTile`] is independent and writes a disjoint
-//! slice of the output, so the result is **bitwise identical** for every
-//! thread count (accumulation order within a tile never changes) and
-//! per-row [`SkipStats`] are merged in row order.
+//! The driver partitions query-block rows across workers chosen by the
+//! [`Exec`] seam — inline, scoped threads per call, or a persistent
+//! [`WorkerPool`] owned by an `AttnEngine`. Each row's [`FlashTile`] is
+//! independent and writes a disjoint slice of the output, so the result is
+//! **bitwise identical** for every execution mode and worker count
+//! (accumulation order within a tile never changes) and per-row
+//! [`SkipStats`] are merged in row order.
 //!
 //! Extension recipe: a new sparse-attention baseline is a new
 //! [`BlockFilter`] impl; a new score path (a different precision, a new
@@ -26,9 +28,35 @@
 //! this loop again.
 
 use crate::tensor::{matmul, Tensor};
-use crate::util::threadpool;
+use crate::util::threadpool::{self, WorkerPool};
 
 use super::types::{AttnConfig, BlockMask, SkipStats};
+
+/// How [`run_tiled`] distributes query-block rows across workers. All
+/// variants produce bitwise-identical outputs and stats: rows are
+/// independent and results are merged in row order.
+#[derive(Clone, Copy)]
+pub enum Exec<'p> {
+    /// Serial on the calling thread.
+    Inline,
+    /// Scoped threads spawned per call (the legacy mode behind the
+    /// deprecated `*_threads` free functions).
+    Threads(usize),
+    /// A persistent [`WorkerPool`] — created once (by `AttnEngine::build`)
+    /// and reused, so hot prefill/decode calls pay no spawn cost.
+    Pool(&'p WorkerPool),
+}
+
+impl Exec<'_> {
+    /// Deterministic map: `f(i)` for i in 0..n, results in index order.
+    pub fn map<T: Send>(&self, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+        match self {
+            Exec::Inline => (0..n).map(f).collect(),
+            Exec::Threads(t) => threadpool::parallel_map(n, *t, f),
+            Exec::Pool(p) => p.map(n, f),
+        }
+    }
+}
 
 /// Per-query-tile online-softmax state: running row maxima `m`, partition
 /// sums `l`, and unnormalized output `O` (Eq. 1 of the paper).
@@ -61,7 +89,8 @@ impl FlashTile {
     /// masked). `v` is the (bk × d) value block. When `lambda` is set, the
     /// tile is split into `cw` row groups and a group's P̃V product is
     /// skipped when `max(m_local − m_new) < λ` over the group (§3.4);
-    /// skipped groups are counted into `stats.pv_skipped_groups`.
+    /// each skipped group adds its exact share of the block,
+    /// `(group rows)/(tile rows)`, to `stats.pv_skipped_frac`.
     pub fn ingest(
         &mut self,
         s: &[f32],
@@ -125,7 +154,7 @@ impl FlashTile {
                 None => false,
             };
             if skip {
-                stats.pv_skipped_groups += 1;
+                stats.pv_skipped_frac += (g1 - g0) as f64 / rows as f64;
             } else {
                 matmul::matmul_nn_acc(
                     &self.p[g0 * bk..g1 * bk],
@@ -286,10 +315,11 @@ impl BlockFilter for MaskFilter<'_> {
 ///
 /// Runs blockwise online-softmax attention of `q` against `k`/`v` under
 /// `cfg`, producing scores through `kernel` and block decisions through
-/// `filter`. Query-block rows are partitioned across up to `threads`
-/// workers; each row writes a disjoint output slice and accumulates its
-/// own [`SkipStats`], merged in row order afterwards — so outputs *and*
-/// stats are identical for every thread count.
+/// `filter`. Query-block rows are partitioned across the workers named by
+/// `exec` (inline / scoped threads / persistent pool); each row writes a
+/// disjoint output slice and accumulates its own [`SkipStats`], merged in
+/// row order afterwards — so outputs *and* stats are identical for every
+/// execution mode and worker count.
 pub fn run_tiled(
     q: &Tensor,
     k: &Tensor,
@@ -297,7 +327,7 @@ pub fn run_tiled(
     cfg: &AttnConfig,
     kernel: &impl ScoreKernel,
     filter: &impl BlockFilter,
-    threads: usize,
+    exec: Exec<'_>,
 ) -> (Tensor, SkipStats) {
     assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
     assert_eq!(k.dim(0), v.dim(0), "k/v rows");
@@ -313,7 +343,7 @@ pub fn run_tiled(
         // (uncontended) mutex, so no copies and no write races.
         let row_chunks: Vec<std::sync::Mutex<&mut [f32]>> =
             out.data_mut().chunks_mut(cfg.bq * dv).map(std::sync::Mutex::new).collect();
-        threadpool::parallel_map(tm, threads, |bi| {
+        exec.map(tm, |bi| {
             let q0 = bi * cfg.bq;
             let q1 = (q0 + cfg.bq).min(n);
             let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
@@ -365,7 +395,7 @@ mod tests {
         score_block(&q, &k, 0, n, 0, n, 0.5, false, &mut s);
         let mut stats = SkipStats::default();
         tile.ingest(&s, n, v.data(), Some(-0.1), 2, &mut stats);
-        assert_eq!(stats.pv_skipped_groups, 0);
+        assert_eq!(stats.pv_skipped_frac, 0.0);
     }
 
     #[test]
@@ -379,13 +409,14 @@ mod tests {
         let v = Tensor::randn(&[n, d], &mut rng);
         let cfg = AttnConfig { bq: 8, bk: 4, causal: false, scale: None, cw: 2 };
         let kernel = F32Kernel::new(&q, &k, &cfg);
-        let (out, _) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, 1);
+        let (out, _) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline);
         let oracle = attention_naive(&q, &k, &v, &cfg);
         assert_allclose(out.data(), oracle.data(), 1e-4, 1e-3, "scratch-reuse").unwrap();
     }
 
     #[test]
-    fn driver_matches_oracle_under_threads() {
+    fn driver_matches_oracle_under_all_exec_modes() {
+        let pool = crate::util::threadpool::WorkerPool::new(3);
         Cases::standard(801).check(|rng| {
             let n = rng.range(1, 70);
             let d = [4, 8, 16][rng.range(0, 3)];
@@ -400,13 +431,14 @@ mod tests {
             let k = Tensor::randn(&[n, d], rng);
             let v = Tensor::randn(&[n, d], rng);
             let kernel = F32Kernel::new(&q, &k, &cfg);
-            let (o1, s1) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, 1);
-            let (o4, s4) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, 4);
-            if o1 != o4 {
-                return Err("threaded driver not bitwise equal".into());
+            let (o1, s1) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline);
+            let (o4, s4) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Threads(4));
+            let (op, sp) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Pool(&pool));
+            if o1 != o4 || o1 != op {
+                return Err("exec modes not bitwise equal".into());
             }
-            if s1 != s4 {
-                return Err("threaded stats differ".into());
+            if s1 != s4 || s1 != sp {
+                return Err("exec-mode stats differ".into());
             }
             let oracle = attention_naive(&q, &k, &v, &cfg);
             assert_allclose(o1.data(), oracle.data(), 1e-4, 1e-3, "driver-vs-oracle")
@@ -422,7 +454,7 @@ mod tests {
         let v = Tensor::randn(&[n, d], &mut rng);
         let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2 };
         let kernel = F32Kernel::new(&q, &k, &cfg);
-        let (_, stats) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, 1);
+        let (_, stats) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline);
         // 4 q-blocks; block row i visits i+1 k-blocks => 1+2+3+4 = 10
         assert_eq!(stats.qk_total, 10);
         assert_eq!(stats.pv_total, 10);
@@ -441,7 +473,7 @@ mod tests {
         mask.set(2, 1, false);
         let kernel = F32Kernel::new(&q, &k, &cfg);
         let filter = MaskFilter::new(&mask, None);
-        let (_, stats) = run_tiled(&q, &k, &v, &cfg, &kernel, &filter, 1);
+        let (_, stats) = run_tiled(&q, &k, &v, &cfg, &kernel, &filter, Exec::Inline);
         assert_eq!(stats.qk_total, 16);
         assert_eq!(stats.qk_skipped, 2);
         assert_eq!(stats.pv_skipped, 2);

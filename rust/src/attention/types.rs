@@ -102,7 +102,7 @@ impl BlockMask {
 /// The paper defines **Sparsity** as the proportion of `Q_iK_jᵀ` plus
 /// `P̃_ijV_j` products skipped relative to the total a full attention needs
 /// (§4.1). Both stage-1 (`M_g`) and stage-2 (λ filter) skips are counted.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct SkipStats {
     /// Block QKᵀ products a dense attention would execute.
     pub qk_total: usize,
@@ -110,14 +110,17 @@ pub struct SkipStats {
     pub qk_skipped: usize,
     /// Block P̃V products a dense attention would execute.
     pub pv_total: usize,
-    /// Block P̃V products skipped — stage-1 skips count at full blocks,
-    /// stage-2 λ skips count per row group (fractional blocks accumulate in
-    /// units of 1/c_w, tracked via `pv_skipped_groups`).
+    /// Block P̃V products skipped at full blocks (stage 1).
     pub pv_skipped: usize,
-    /// Row groups per PV block (c_w), for fractional accounting.
+    /// Row groups per query tile (c_w); carried for merge validation.
     pub cw: usize,
-    /// Stage-2: skipped row groups across all visited blocks.
-    pub pv_skipped_groups: usize,
+    /// Stage-2 λ skips, in *block* units: each skipped row group adds
+    /// `(group rows) / (tile rows)`, so ragged tiles and decode-shaped
+    /// steps (1 query row < b_q) are counted exactly — a 1-row tile that
+    /// skips its only group counts one full block, not 1/c_w of one.
+    /// Accumulation and merge order are deterministic (row order), so the
+    /// value is identical across thread counts.
+    pub pv_skipped_frac: f64,
 }
 
 impl SkipStats {
@@ -127,8 +130,7 @@ impl SkipStats {
         if total == 0.0 {
             return 0.0;
         }
-        let frac_pv = if self.cw > 0 { self.pv_skipped_groups as f64 / self.cw as f64 } else { 0.0 };
-        ((self.qk_skipped + self.pv_skipped) as f64 + frac_pv) / total
+        ((self.qk_skipped + self.pv_skipped) as f64 + self.pv_skipped_frac) / total
     }
 
     /// Sparsity from stage-1 only (`only M_g` row of Table 6).
@@ -140,17 +142,24 @@ impl SkipStats {
         (self.qk_skipped + self.pv_skipped) as f64 / total
     }
 
-    /// Merge counters from another run (e.g. other heads).
+    /// Merge counters from another run (e.g. other heads, other query-tile
+    /// rows). Hard-errors (also in release builds) when both sides carry a
+    /// nonzero, *different* c_w: pooling group-fraction accounting across
+    /// configurations would silently corrupt the sparsity metric.
     pub fn merge(&mut self, other: &SkipStats) {
+        assert!(
+            self.cw == 0 || other.cw == 0 || other.cw == self.cw,
+            "merging SkipStats with mismatched c_w: {} vs {}",
+            self.cw,
+            other.cw
+        );
         self.qk_total += other.qk_total;
         self.qk_skipped += other.qk_skipped;
         self.pv_total += other.pv_total;
         self.pv_skipped += other.pv_skipped;
-        self.pv_skipped_groups += other.pv_skipped_groups;
+        self.pv_skipped_frac += other.pv_skipped_frac;
         if self.cw == 0 {
             self.cw = other.cw;
-        } else {
-            debug_assert!(other.cw == 0 || other.cw == self.cw, "merging stats with different c_w");
         }
     }
 }
@@ -185,8 +194,15 @@ mod tests {
 
     #[test]
     fn skipstats_sparsity() {
-        let s = SkipStats { qk_total: 100, qk_skipped: 50, pv_total: 100, pv_skipped: 50, cw: 4, pv_skipped_groups: 40 };
-        // (50 + 50 + 40/4) / 200 = 110/200
+        let s = SkipStats {
+            qk_total: 100,
+            qk_skipped: 50,
+            pv_total: 100,
+            pv_skipped: 50,
+            cw: 4,
+            pv_skipped_frac: 10.0,
+        };
+        // (50 + 50 + 10) / 200 = 110/200
         assert!((s.sparsity() - 0.55).abs() < 1e-12);
         assert!((s.sparsity_stage1() - 0.5).abs() < 1e-12);
         assert_eq!(SkipStats::default().sparsity(), 0.0);
@@ -194,11 +210,30 @@ mod tests {
 
     #[test]
     fn skipstats_merge() {
-        let mut a = SkipStats { qk_total: 10, qk_skipped: 5, pv_total: 10, pv_skipped: 5, cw: 4, pv_skipped_groups: 2 };
+        let mut a = SkipStats {
+            qk_total: 10,
+            qk_skipped: 5,
+            pv_total: 10,
+            pv_skipped: 5,
+            cw: 4,
+            pv_skipped_frac: 0.5,
+        };
         let b = a;
         a.merge(&b);
         assert_eq!(a.qk_total, 20);
-        assert_eq!(a.pv_skipped_groups, 4);
+        assert_eq!(a.pv_skipped_frac, 1.0);
         assert_eq!(a.cw, 4);
+        // merging with a cw-less (e.g. default) side adopts the nonzero cw
+        let mut c = SkipStats::default();
+        c.merge(&a);
+        assert_eq!(c.cw, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched c_w")]
+    fn skipstats_merge_rejects_mismatched_cw() {
+        let mut a = SkipStats { cw: 4, ..Default::default() };
+        let b = SkipStats { cw: 2, ..Default::default() };
+        a.merge(&b);
     }
 }

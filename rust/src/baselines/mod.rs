@@ -3,8 +3,9 @@
 //! StreamingLLM-style sink+window pattern baseline.
 //!
 //! All baselines produce a [`BlockMask`] that is executed through the
-//! *identical* sparse kernel (`crate::sparge::sparse_flash`), isolating
-//! the mask-construction policy as the only experimental variable.
+//! *identical* sparse kernel (an `AttnEngine` with
+//! `SparsityPolicy::External`), isolating the mask-construction policy as
+//! the only experimental variable.
 
 pub mod flexprefill;
 pub mod minference;

@@ -172,7 +172,8 @@ mod tests {
 
     #[test]
     fn waits_to_fill_batch() {
-        let b = Arc::new(Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(200), capacity: 8 }));
+        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(200), capacity: 8 };
+        let b = Arc::new(Batcher::new(policy));
         let b2 = Arc::clone(&b);
         b.submit(mk(1, AttnMode::Dense)).unwrap();
         let h = std::thread::spawn(move || b2.next_batch());

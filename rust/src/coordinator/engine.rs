@@ -24,7 +24,14 @@ pub const TRAIN_T: usize = 256;
 enum Msg {
     LmLogits { tokens: Vec<i32>, mode: AttnMode, reply: mpsc::Sender<Result<Vec<f32>>> },
     TrainStep { tokens: Vec<i32>, reply: mpsc::Sender<Result<f64>> },
-    DitDenoise { latents: Vec<f32>, n: usize, d: usize, t: f32, mode: AttnMode, reply: mpsc::Sender<Result<Vec<f32>>> },
+    DitDenoise {
+        latents: Vec<f32>,
+        n: usize,
+        d: usize,
+        t: f32,
+        mode: AttnMode,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
     LoadParams { params: Vec<f32>, reply: mpsc::Sender<Result<()>> },
     GetParams { reply: mpsc::Sender<Result<Vec<f32>>> },
     Shutdown,
@@ -212,7 +219,14 @@ impl EngineHandle {
     }
 
     /// One DiT denoise step; `n` must match an exported artifact.
-    pub fn dit_denoise(&self, latents: Vec<f32>, n: usize, d: usize, t: f32, mode: AttnMode) -> Result<Vec<f32>> {
+    pub fn dit_denoise(
+        &self,
+        latents: Vec<f32>,
+        n: usize,
+        d: usize,
+        t: f32,
+        mode: AttnMode,
+    ) -> Result<Vec<f32>> {
         self.call(|reply| Msg::DitDenoise { latents, n, d, t, mode, reply })
     }
 

@@ -16,4 +16,4 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use engine::EngineHandle;
 pub use metrics::Metrics;
 pub use request::{AttnMode, GenerateRequest, GenerateResponse};
-pub use scheduler::{AttnProbeResult, Coordinator};
+pub use scheduler::{AttnProbeResult, Coordinator, DecodeProbeResult};

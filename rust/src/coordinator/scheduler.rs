@@ -27,6 +27,26 @@ pub struct AttnProbeResult {
     pub threads: usize,
 }
 
+/// Result of a decode-mode probe: per-step serving-path sparsity from an
+/// [`crate::attention::AttnSession`] (prefill `n` tokens, then `steps`
+/// single-row decode steps).
+#[derive(Clone, Debug)]
+pub struct DecodeProbeResult {
+    /// Sparsity of the prefill call.
+    pub prefill_sparsity: f64,
+    /// Sparsity of each decode step, in order (exact fractional
+    /// accounting — see `SkipStats::pv_skipped_frac`).
+    pub step_sparsity: Vec<f64>,
+    /// Mean over `step_sparsity` (0 when `steps` is 0).
+    pub mean_step_sparsity: f64,
+    /// Wall-clock seconds for prefill + all decode steps.
+    pub seconds: f64,
+    pub n: usize,
+    pub d: usize,
+    pub steps: usize,
+    pub threads: usize,
+}
+
 /// The serving coordinator: submit generation requests from any thread;
 /// a scheduler thread batches them and executes on the engine.
 pub struct Coordinator {
@@ -106,16 +126,76 @@ impl Coordinator {
         threads: usize,
     ) -> AttnProbeResult {
         let mut rng = crate::util::rng::Pcg::seeded(seed);
-        let s = crate::workloads::synthetic::generate(&crate::workloads::SyntheticSpec::lm_like(n, d), &mut rng);
+        let s =
+            crate::workloads::synthetic::generate(&crate::workloads::SyntheticSpec::lm_like(n, d), &mut rng);
         let cfg = crate::attention::AttnConfig::default();
+        let engine = crate::attention::AttnEngine::builder()
+            .config(cfg)
+            .sparge(params)
+            .execution(crate::attention::Execution::Threads(threads))
+            .build();
         let t0 = Instant::now();
-        let res = crate::sparge::sparge_attention_threads(&s.q, &s.k, &s.v, &cfg, params, threads);
+        let res = engine.attention(&s.q, &s.k, &s.v);
         let seconds = t0.elapsed().as_secs_f64();
         let sparsity = res.stats.sparsity();
         // probes feed the sparsity aggregates only; their timings must not
         // distort generation latency/throughput metrics
         self.metrics.record_probe(sparsity);
         AttnProbeResult { sparsity, seconds, n, d, threads }
+    }
+
+    /// Decode-mode probe for the serving path: open an
+    /// [`crate::attention::AttnSession`] over a seeded synthetic causal
+    /// workload of `n + steps` tokens, prefill the first `n`, decode the
+    /// rest one row at a time, and report per-step sparsity. The mean step
+    /// sparsity feeds the serving metrics' sparsity aggregates (like
+    /// [`Coordinator::attention_probe`], timings stay out of the
+    /// generation reservoirs).
+    pub fn attention_decode_probe(
+        &self,
+        n: usize,
+        d: usize,
+        seed: u64,
+        params: &crate::sparge::SpargeParams,
+        steps: usize,
+        threads: usize,
+    ) -> DecodeProbeResult {
+        let mut rng = crate::util::rng::Pcg::seeded(seed);
+        let s = crate::workloads::synthetic::generate(
+            &crate::workloads::SyntheticSpec::lm_like(n + steps, d),
+            &mut rng,
+        );
+        let cfg = crate::attention::AttnConfig { causal: true, ..Default::default() };
+        let engine = crate::attention::AttnEngine::builder()
+            .config(cfg)
+            .sparge(params)
+            .execution(crate::attention::Execution::Threads(threads))
+            .build();
+        let mut session = engine.session();
+        let t0 = Instant::now();
+        let prefill = session.prefill(&s.q.rows(0, n), &s.k.rows(0, n), &s.v.rows(0, n));
+        let mut step_sparsity = Vec::with_capacity(steps);
+        for t in n..n + steps {
+            let r = session.decode(&s.q.rows(t, t + 1), &s.k.rows(t, t + 1), &s.v.rows(t, t + 1));
+            step_sparsity.push(r.stats.sparsity());
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        let mean_step_sparsity = if step_sparsity.is_empty() {
+            0.0
+        } else {
+            step_sparsity.iter().sum::<f64>() / step_sparsity.len() as f64
+        };
+        self.metrics.record_probe(mean_step_sparsity);
+        DecodeProbeResult {
+            prefill_sparsity: prefill.stats.sparsity(),
+            step_sparsity,
+            mean_step_sparsity,
+            seconds,
+            n,
+            d,
+            steps,
+            threads,
+        }
     }
 
     pub fn queue_depth(&self) -> usize {

@@ -5,8 +5,13 @@
 //!     -> {"id":1,"output":"...","latency_ms":12.3,"compute_ms":11.0}
 //!   {"op":"attn","n":2048,"d":64,"seed":7,"tau":0.9,"threads":8}
 //!     -> {"sparsity":0.42,"latency_ms":8.1,"n":2048,"threads":8}
-//!        (kernel probe through the unified tiled pipeline; sparsity is
+//!        (kernel probe through the unified attention engine; sparsity is
 //!        recorded per request into the serving metrics)
+//!   {"op":"attn","mode":"decode","n":1024,"steps":16,"d":64,"tau":0.9}
+//!     -> {"mode":"decode","prefill_sparsity":0.4,
+//!         "per_step_sparsity":[...],"mean_step_sparsity":0.45,...}
+//!        (serving-path probe: AttnSession prefill + N single-row decode
+//!        steps, per-step sparsity observable end-to-end)
 //!   {"op":"stats"} -> {"requests":...,"mean_sparsity":...,...}
 //!   {"op":"ping"}  -> {"ok":true}
 
@@ -109,14 +114,35 @@ fn dispatch_inner(coordinator: &Coordinator, line: &str) -> Result<Json> {
             // the attention cost; threads never exceed the machine's cores
             anyhow::ensure!(n > 0 && n <= 1 << 13, "n out of range (1..=8192)");
             anyhow::ensure!(d > 0 && d <= 256, "d out of range (1..=256)");
-            let r = coordinator.attention_probe(n, d, seed, &params, threads);
-            Ok(Json::obj(vec![
-                ("sparsity", Json::num(r.sparsity)),
-                ("latency_ms", Json::num(r.seconds * 1e3)),
-                ("n", Json::num(r.n as f64)),
-                ("d", Json::num(r.d as f64)),
-                ("threads", Json::num(r.threads as f64)),
-            ]))
+            match req.get("mode").and_then(|v| v.as_str()).unwrap_or("prefill") {
+                "decode" => {
+                    let steps = req.get("steps").and_then(|v| v.as_usize()).unwrap_or(16);
+                    anyhow::ensure!(steps >= 1 && steps <= 1024, "steps out of range (1..=1024)");
+                    let r = coordinator.attention_decode_probe(n, d, seed, &params, steps, threads);
+                    Ok(Json::obj(vec![
+                        ("mode", Json::str("decode")),
+                        ("prefill_sparsity", Json::num(r.prefill_sparsity)),
+                        ("per_step_sparsity", Json::arr(r.step_sparsity.iter().map(|&s| Json::num(s)))),
+                        ("mean_step_sparsity", Json::num(r.mean_step_sparsity)),
+                        ("latency_ms", Json::num(r.seconds * 1e3)),
+                        ("n", Json::num(r.n as f64)),
+                        ("d", Json::num(r.d as f64)),
+                        ("steps", Json::num(r.steps as f64)),
+                        ("threads", Json::num(r.threads as f64)),
+                    ]))
+                }
+                "prefill" => {
+                    let r = coordinator.attention_probe(n, d, seed, &params, threads);
+                    Ok(Json::obj(vec![
+                        ("sparsity", Json::num(r.sparsity)),
+                        ("latency_ms", Json::num(r.seconds * 1e3)),
+                        ("n", Json::num(r.n as f64)),
+                        ("d", Json::num(r.d as f64)),
+                        ("threads", Json::num(r.threads as f64)),
+                    ]))
+                }
+                other => anyhow::bail!("unknown attn mode '{other}' (want 'prefill' or 'decode')"),
+            }
         }
         "generate" => {
             let prompt = req.get("prompt").and_then(|v| v.as_str()).context("missing 'prompt'")?;

@@ -3,11 +3,11 @@
 //! sparse kernel so mask policy is the only variable, with TOPS
 //! accounting per the paper's §4.1 definition.
 
-use crate::attention::flash::attention_flash_stats_threads;
+use crate::attention::engine::{AttnEngine, Execution, SparsityPolicy};
 use crate::attention::types::{AttnConfig, BlockMask, SkipStats};
 use crate::baselines;
 use crate::costmodel;
-use crate::sparge::kernel::{sparse_flash_threads, SpargeParams};
+use crate::sparge::kernel::SpargeParams;
 use crate::sparge::predict::{predict, PredictParams};
 use crate::tensor::Tensor;
 use crate::util::timer::time_once;
@@ -68,18 +68,26 @@ impl MethodRun {
 
 /// Run a method on a single head, with query-block rows fanned across
 /// `threads` workers inside the unified tiled driver (1 = serial; outputs
-/// and stats are identical for every thread count).
+/// and stats are identical for every thread count). Engines are built via
+/// [`AttnEngine`]; mask construction is timed separately from the kernel
+/// so prediction overhead stays reportable (Table 3).
 pub fn run_method_threads(s: &QkvSample, cfg: &AttnConfig, method: &Method, threads: usize) -> MethodRun {
     match method {
         Method::Full => {
-            let ((out, stats), secs) = time_once(|| attention_flash_stats_threads(&s.q, &s.k, &s.v, cfg, threads));
-            MethodRun { out, stats, seconds: secs, predict_seconds: 0.0 }
+            let engine = AttnEngine::builder().config(*cfg).execution(Execution::Threads(threads)).build();
+            let (r, secs) = time_once(|| engine.attention(&s.q, &s.k, &s.v));
+            MethodRun { out: r.out, stats: r.stats, seconds: secs, predict_seconds: 0.0 }
         }
         Method::Sparge(params) => {
             let (pred, t_pred) = time_once(|| predict(&s.q, &s.k, cfg, &params.predict_params()));
-            let ((out, stats), t_attn) =
-                time_once(|| sparse_flash_threads(&s.q, &s.k, &s.v, &pred.mask, cfg, params, threads));
-            MethodRun { out, stats, seconds: t_pred + t_attn, predict_seconds: t_pred }
+            let engine = AttnEngine::builder()
+                .config(*cfg)
+                .precision(params.precision())
+                .policy(SparsityPolicy::External { mask: pred.mask, lambda: params.lambda })
+                .execution(Execution::Threads(threads))
+                .build();
+            let (r, t_attn) = time_once(|| engine.attention(&s.q, &s.k, &s.v));
+            MethodRun { out: r.out, stats: r.stats, seconds: t_pred + t_attn, predict_seconds: t_pred }
         }
         Method::Minference { budget } => {
             let (mask, t_pred) = time_once(|| baselines::minference_mask(&s.q, &s.k, cfg, *budget));
@@ -104,10 +112,13 @@ pub fn run_method(s: &QkvSample, cfg: &AttnConfig, method: &Method) -> MethodRun
 
 fn run_with_mask(s: &QkvSample, cfg: &AttnConfig, mask: BlockMask, t_pred: f64, threads: usize) -> MethodRun {
     // baselines run through the identical kernel, no λ stage, no quant
-    let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false };
-    let ((out, stats), t_attn) =
-        time_once(|| sparse_flash_threads(&s.q, &s.k, &s.v, &mask, cfg, &params, threads));
-    MethodRun { out, stats, seconds: t_pred + t_attn, predict_seconds: t_pred }
+    let engine = AttnEngine::builder()
+        .config(*cfg)
+        .policy(SparsityPolicy::External { mask, lambda: None })
+        .execution(Execution::Threads(threads))
+        .build();
+    let (r, t_attn) = time_once(|| engine.attention(&s.q, &s.k, &s.v));
+    MethodRun { out: r.out, stats: r.stats, seconds: t_pred + t_attn, predict_seconds: t_pred }
 }
 
 /// "Without self-similarity judge" ablation (Table 5/10): θ = −1 treats

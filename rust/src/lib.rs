@@ -11,17 +11,32 @@
 //!   proxy) whose attention dispatches to the kernel; AOT-lowered to HLO
 //!   text artifacts by `python/compile/aot.py`.
 //! - **L3** (this crate): the serving coordinator plus the block-sparse
-//!   attention engine with *real* skipping (wall-clock measurements). All
-//!   attention — dense flash, SpargeAttn f32, SageAttention INT8, and every
-//!   baseline mask policy — runs through **one** tiled q-block × k-block
-//!   driver, [`attention::pipeline::run_tiled`], parallel over query-block
-//!   rows, with two pluggable seams: [`attention::pipeline::ScoreKernel`]
-//!   (how a score block is produced) and
-//!   [`attention::pipeline::BlockFilter`] (stage-1 mask lookup, stage-2 λ,
-//!   causal-domain bound). Around it: the mask-prediction pipeline,
-//!   baselines (each just a mask constructor), workloads, tuner, cost
-//!   model, and the PJRT runtime that loads and executes the artifacts.
-//!   Python never runs on the request path.
+//!   attention engine with *real* skipping (wall-clock measurements).
+//!
+//! The attention public API is the [`attention::AttnEngine`] builder:
+//! precision ([`attention::Precision`]: f32 / SageAttention INT8) ×
+//! sparsity policy ([`attention::SparsityPolicy`]: dense / predicted
+//!  stage-1+2 / external mask) × execution ([`attention::Execution`]:
+//! inline / scoped threads / persistent worker pool) compose into a
+//! reusable `Send + Sync` engine. `engine.attention(q, k, v)` is the
+//! one-shot (prefill) call; `engine.session()` opens stateful
+//! per-sequence serving: a growing KV cache, incremental stage-1
+//! predictor pooling, cached K quantization, and
+//! [`attention::AttnSession::decode`] steps that are bitwise-identical to
+//! a full-sequence prefill (f32, λ off). The old free functions
+//! (`attention_flash*`, `sparse_flash*`, `sparge_attention*`) remain as
+//! deprecated shims — see the migration table in [`attention`].
+//!
+//! Underneath, every composition runs through **one** tiled
+//! q-block × k-block driver, [`attention::pipeline::run_tiled`], parallel
+//! over query-block rows, with pluggable seams:
+//! [`attention::pipeline::ScoreKernel`] (how a score block is produced),
+//! [`attention::pipeline::BlockFilter`] (stage-1 mask lookup, stage-2 λ,
+//! causal-domain bound), and [`attention::pipeline::Exec`] (who runs the
+//! rows). Around it: the mask-prediction pipeline, baselines (each just a
+//! mask constructor), workloads, tuner, cost model, and the PJRT runtime
+//! that loads and executes the artifacts. Python never runs on the
+//! request path.
 
 pub mod attention;
 pub mod baselines;

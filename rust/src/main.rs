@@ -14,9 +14,10 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use sparge::attention::types::AttnConfig;
+use sparge::attention::AttnEngine;
 use sparge::coordinator::{AttnMode, BatchPolicy, Coordinator, EngineHandle};
 use sparge::runtime::{Manifest, Runtime, Value};
-use sparge::sparge::{sparge_attention, SpargeParams};
+use sparge::sparge::SpargeParams;
 use sparge::util::cli::Args;
 use sparge::util::rng::Pcg;
 use sparge::util::table::{fnum, pct, Table};
@@ -113,7 +114,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         let loss = engine.train_step(batch)?;
         losses.push(loss);
         if step % log_every == 0 || step + 1 == steps {
-            println!("step {step:4}  loss {loss:.4}  ppl {:.2}  ({:.1}s)", loss.exp(), t0.elapsed().as_secs_f64());
+            let dt = t0.elapsed().as_secs_f64();
+            println!("step {step:4}  loss {loss:.4}  ppl {:.2}  ({dt:.1}s)", loss.exp());
         }
     }
     let params = engine.get_params()?;
@@ -132,7 +134,8 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let out = engine.generate(prompt.as_bytes(), max_new, mode)?;
     let dt = t0.elapsed().as_secs_f64();
     println!("{}{}", prompt, String::from_utf8_lossy(&out));
-    println!("[{} tokens in {:.2}s, {:.1} tok/s, mode={}]", out.len(), dt, out.len() as f64 / dt, mode.name());
+    let tps = out.len() as f64 / dt;
+    println!("[{} tokens in {dt:.2}s, {tps:.1} tok/s, mode={}]", out.len(), mode.name());
     Ok(())
 }
 
@@ -170,7 +173,8 @@ fn cmd_tune(args: &Args) -> Result<()> {
         res.evaluated
     );
     if let Some(out) = args.get("out") {
-        let cfg_out = sparge::sparge::ModelSpargeConfig::uniform(model_name, card.layers, res.params, card.l1, card.l2);
+        let cfg_out =
+            sparge::sparge::ModelSpargeConfig::uniform(model_name, card.layers, res.params, card.l1, card.l2);
         cfg_out.save(std::path::Path::new(out))?;
         println!("saved config to {out}");
     }
@@ -179,7 +183,8 @@ fn cmd_tune(args: &Args) -> Result<()> {
 
 fn cmd_analyze(args: &Args) -> Result<()> {
     if args.flag("hilbert-golden") {
-        let order = sparge::sparge::hilbert::token_order(sparge::sparge::hilbert::Permutation::HilbertCurve, 2, 4, 4, 0);
+        use sparge::sparge::hilbert::{token_order, Permutation};
+        let order = token_order(Permutation::HilbertCurve, 2, 4, 4, 0);
         println!("{order:?}");
         return Ok(());
     }
@@ -256,8 +261,8 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
     let v = Tensor::randn(&[n, 64], &mut rng);
     let cfg = AttnConfig { bq: 64, bk: 64, causal: false, scale: None, cw: 4 };
     let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false };
-    let res = sparge_attention(&q, &k, &v, &cfg, &params);
-    let dense = sparge::attention::attention_flash(&q, &k, &v, &cfg);
+    let res = AttnEngine::sparge(cfg, &params).attention(&q, &k, &v);
+    let dense = AttnEngine::dense(cfg).attention(&q, &k, &v).out;
     let err = sparge::sparge::metrics::rel_l1(&res.out, &dense);
     anyhow::ensure!(err < 1e-5, "engine selfcheck: rel-L1 {err}");
     println!("[1/3] rust engine: sparge(tau=1) == dense  (rel-L1 {err:.2e})");
@@ -278,7 +283,8 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
     println!("[2/3] runtime: {name} matches rust engine (rel-L1 {err:.2e})");
 
     // 3. sparge artifact runs and reports plausible density
-    let out = rt.run("attn_sparge_1024", &[Value::from_tensor(&q), Value::from_tensor(&k), Value::from_tensor(&v)])?;
+    let inputs = [Value::from_tensor(&q), Value::from_tensor(&k), Value::from_tensor(&v)];
+    let out = rt.run("attn_sparge_1024", &inputs)?;
     let density = out[1].scalar()?;
     let err = sparge::sparge::metrics::rel_l1(&out[0].to_tensor()?, &rust_out);
     anyhow::ensure!((0.0..=1.0).contains(&density), "bad density {density}");

@@ -93,7 +93,14 @@ pub fn suite(scale: usize) -> Vec<ModelCard> {
             task: Task::Video,
             heads: 4,
             layers: 4,
-            workload: Workload::Grid(VideoSpec { t: (38 / scale.max(1)).max(1), h: 32, w: 31, d: 64, smooth: 0.96, signal: 11.0 }),
+            workload: Workload::Grid(VideoSpec {
+                t: (38 / scale.max(1)).max(1),
+                h: 32,
+                w: 31,
+                d: 64,
+                smooth: 0.96,
+                signal: 11.0,
+            }),
             l1: 0.03,
             l2: 0.035,
         },

@@ -125,9 +125,10 @@ impl Manifest {
     }
 
     pub fn get(&self, name: &str) -> Result<&Artifact> {
+        let available = self.artifacts.len();
         self.artifacts
             .get(name)
-            .with_context(|| format!("artifact '{name}' not in manifest ({} available)", self.artifacts.len()))
+            .with_context(|| format!("artifact '{name}' not in manifest ({available} available)"))
     }
 
     /// All artifacts whose meta `kind` matches.

@@ -65,8 +65,10 @@ impl ModelSpargeConfig {
         }
         let mut layers = Vec::with_capacity(layers_json.len());
         for (i, lj) in layers_json.iter().enumerate() {
-            let tau = lj.get("tau").and_then(|v| v.as_f64()).with_context(|| format!("layer {i}: tau"))? as f32;
-            let theta = lj.get("theta").and_then(|v| v.as_f64()).with_context(|| format!("layer {i}: theta"))? as f32;
+            let tau =
+                lj.get("tau").and_then(|v| v.as_f64()).with_context(|| format!("layer {i}: tau"))? as f32;
+            let theta = lj.get("theta").and_then(|v| v.as_f64()).with_context(|| format!("layer {i}: theta"))?
+                as f32;
             let lambda = match lj.get("lambda") {
                 Some(Json::Null) | None => None,
                 Some(v) => Some(v.as_f64().with_context(|| format!("layer {i}: lambda"))? as f32),

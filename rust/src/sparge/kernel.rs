@@ -1,22 +1,26 @@
 //! The SpargeAttn sparse FlashAttention kernel (Alg. 1) — L3 engine with
 //! *real* block skipping, in both f32 and SageAttention-INT8 variants.
 //!
-//! Both variants are thin compositions over the unified tiled pipeline
-//! (`crate::attention::pipeline::run_tiled`): the stage-1/stage-2 filter is
-//! a [`MaskFilter`] (`M_g` lookup + λ threshold), and the score path is
-//! either the shared [`F32Kernel`] or the [`QuantScoreKernel`] defined
-//! here (SageAttention INT8 dequant scoring, §3.5).
+//! Both variants are compositions over the unified attention API
+//! ([`crate::attention::AttnEngine`]): the stage-1/stage-2 filter is a
+//! `MaskFilter` (`M_g` lookup + λ threshold), and the score path is either
+//! the shared `F32Kernel` or the [`QuantScoreKernel`] defined here
+//! (SageAttention INT8 dequant scoring, §3.5).
 //!
 //! Stage 1: blocks with `M_g[i,j] = 0` skip both `Q_iK_jᵀ` and `P̃_ijV_j`.
 //! Stage 2: inside visited blocks, a row group (warp, `c_w` groups per
 //! q-tile) skips its `P̃V` product when `max(m_local − m_ij) < λ`.
+//!
+//! The free functions here are **deprecated shims** over the engine
+//! builder; see the migration table in [`crate::attention`].
 
-use crate::attention::pipeline::{run_tiled, F32Kernel, MaskFilter, ScoreKernel};
+use crate::attention::engine::{AttnEngine, Execution, Precision, SparsityPolicy};
+use crate::attention::pipeline::ScoreKernel;
 use crate::attention::types::{AttnConfig, BlockMask, SkipStats};
 use crate::tensor::quant::{self, QuantBlock};
 use crate::tensor::Tensor;
 
-use super::predict::{predict, PredictParams};
+use super::predict::PredictParams;
 
 /// Full SpargeAttn hyper-parameter set for one attention layer/head.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -40,6 +44,15 @@ impl Default for SpargeParams {
 impl SpargeParams {
     pub fn predict_params(&self) -> PredictParams {
         PredictParams { tau: self.tau, theta: self.theta }
+    }
+
+    /// Engine precision implied by `quant`.
+    pub fn precision(&self) -> Precision {
+        if self.quant {
+            Precision::Int8
+        } else {
+            Precision::F32
+        }
     }
 }
 
@@ -93,7 +106,8 @@ impl QuantScoreKernel {
         } else {
             quant::quantize_blocks(&ksm.rows(0, k_reach), cfg.bk)
         };
-        QuantScoreKernel { qb, kb, scale: cfg.scale_for(q.dim(1)), causal: cfg.causal, bq: cfg.bq, bk: cfg.bk }
+        let scale = cfg.scale_for(q.dim(1));
+        QuantScoreKernel { qb, kb, scale, causal: cfg.causal, bq: cfg.bq, bk: cfg.bk }
     }
 }
 
@@ -103,14 +117,29 @@ impl ScoreKernel for QuantScoreKernel {
         let kblk = &self.kb[k0 / self.bk];
         debug_assert_eq!(qblk.rows, q1 - q0);
         debug_assert_eq!(kblk.rows, k1 - k0);
-        quant::qk_dequant(qblk, kblk, self.scale, out);
-        if self.causal {
-            for i in 0..qblk.rows {
-                let gi = q0 + i;
-                for j in 0..kblk.rows {
-                    if k0 + j > gi {
-                        out[i * kblk.rows + j] = f32::NEG_INFINITY;
-                    }
+        quant_score_block(qblk, kblk, q0, k0, self.scale, self.causal, out);
+    }
+}
+
+/// Dequantized, optionally causal-masked score block for one (Q, K) block
+/// pair — shared by [`QuantScoreKernel`] and the session's decode-step
+/// kernel (which borrows cached K blocks instead of owning them).
+pub(crate) fn quant_score_block(
+    qblk: &QuantBlock,
+    kblk: &QuantBlock,
+    q0: usize,
+    k0: usize,
+    scale: f32,
+    causal: bool,
+    out: &mut [f32],
+) {
+    quant::qk_dequant(qblk, kblk, scale, out);
+    if causal {
+        for i in 0..qblk.rows {
+            let gi = q0 + i;
+            for j in 0..kblk.rows {
+                if k0 + j > gi {
+                    out[i * kblk.rows + j] = f32::NEG_INFINITY;
                 }
             }
         }
@@ -118,6 +147,7 @@ impl ScoreKernel for QuantScoreKernel {
 }
 
 /// Run SpargeAttn end to end: predict `M_g`, then sparse flash attention.
+#[deprecated(note = "build an AttnEngine::sparge(cfg, params) once and call .attention(q, k, v)")]
 pub fn sparge_attention(
     q: &Tensor,
     k: &Tensor,
@@ -125,11 +155,13 @@ pub fn sparge_attention(
     cfg: &AttnConfig,
     params: &SpargeParams,
 ) -> SpargeOutput {
-    sparge_attention_threads(q, k, v, cfg, params, 1)
+    let r = AttnEngine::sparge(*cfg, params).attention(q, k, v);
+    SpargeOutput { out: r.out, stats: r.stats, mask: r.mask.expect("predicted policy yields a mask") }
 }
 
 /// [`sparge_attention`] with query-block rows fanned across `threads`
 /// workers inside the kernel (for single-head long-sequence workloads).
+#[deprecated(note = "use AttnEngine::builder().sparge(params) + Execution::Threads(n) or ::Pool(n)")]
 pub fn sparge_attention_threads(
     q: &Tensor,
     k: &Tensor,
@@ -138,14 +170,15 @@ pub fn sparge_attention_threads(
     params: &SpargeParams,
     threads: usize,
 ) -> SpargeOutput {
-    let pred = predict(q, k, cfg, &params.predict_params());
-    let (out, stats) = sparse_flash_threads(q, k, v, &pred.mask, cfg, params, threads);
-    SpargeOutput { out, stats, mask: pred.mask }
+    let engine =
+        AttnEngine::builder().config(*cfg).sparge(params).execution(Execution::Threads(threads)).build();
+    let r = engine.attention(q, k, v);
+    SpargeOutput { out: r.out, stats: r.stats, mask: r.mask.expect("predicted policy yields a mask") }
 }
 
 /// Sparse flash attention with a given block mask (stage 1) and λ filter
-/// (stage 2). Exposed separately so benches can drive baseline masks
-/// (MInference / FlexPrefill) through the identical kernel.
+/// (stage 2).
+#[deprecated(note = "use AttnEngine::builder().policy(SparsityPolicy::External { mask, lambda })")]
 pub fn sparse_flash(
     q: &Tensor,
     k: &Tensor,
@@ -154,11 +187,18 @@ pub fn sparse_flash(
     cfg: &AttnConfig,
     params: &SpargeParams,
 ) -> (Tensor, SkipStats) {
-    sparse_flash_threads(q, k, v, mask, cfg, params, 1)
+    let engine = AttnEngine::builder()
+        .config(*cfg)
+        .precision(params.precision())
+        .policy(SparsityPolicy::External { mask: mask.clone(), lambda: params.lambda })
+        .build();
+    let r = engine.attention(q, k, v);
+    (r.out, r.stats)
 }
 
 /// [`sparse_flash`] parallel over query-block rows. Output and stats are
 /// bitwise identical for every thread count.
+#[deprecated(note = "use AttnEngine::builder().policy(SparsityPolicy::External) + Execution::Threads(n)")]
 pub fn sparse_flash_threads(
     q: &Tensor,
     k: &Tensor,
@@ -168,24 +208,20 @@ pub fn sparse_flash_threads(
     params: &SpargeParams,
     threads: usize,
 ) -> (Tensor, SkipStats) {
-    assert_eq!(q.dim(1), k.dim(1));
-    assert_eq!(k.dim(0), v.dim(0));
-    assert_eq!(mask.rows, cfg.n_qblocks(q.dim(0)), "mask rows");
-    assert_eq!(mask.cols, cfg.n_kblocks(k.dim(0)), "mask cols");
-    let filter = MaskFilter::new(mask, params.lambda);
-    if params.quant {
-        let kernel = QuantScoreKernel::new(q, k, cfg);
-        run_tiled(q, k, v, cfg, &kernel, &filter, threads)
-    } else {
-        let kernel = F32Kernel::new(q, k, cfg);
-        run_tiled(q, k, v, cfg, &kernel, &filter, threads)
-    }
+    let engine = AttnEngine::builder()
+        .config(*cfg)
+        .precision(params.precision())
+        .policy(SparsityPolicy::External { mask: mask.clone(), lambda: params.lambda })
+        .execution(Execution::Threads(threads))
+        .build();
+    let r = engine.attention(q, k, v);
+    (r.out, r.stats)
 }
 
 /// Multi-head sparge attention with per-head stats, parallel over heads.
-/// Rows within a head stay serial — head-level fan-out already saturates
-/// the `threads` budget; use [`sparge_attention_threads`] for single-head
-/// workloads.
+/// One shared engine serves every head worker (it is `Sync`); rows within
+/// a head stay serial — head-level fan-out already saturates the
+/// `threads` budget.
 pub fn sparge_attention_heads(
     q: &[Tensor],
     k: &[Tensor],
@@ -196,9 +232,9 @@ pub fn sparge_attention_heads(
 ) -> (Vec<Tensor>, SkipStats) {
     assert_eq!(q.len(), k.len());
     assert_eq!(k.len(), v.len());
-    let results = crate::util::threadpool::parallel_map(q.len(), threads, |h| {
-        sparge_attention(&q[h], &k[h], &v[h], cfg, params)
-    });
+    let engine = AttnEngine::sparge(*cfg, params);
+    let results =
+        crate::util::threadpool::parallel_map(q.len(), threads, |h| engine.attention(&q[h], &k[h], &v[h]));
     let mut stats = SkipStats::default();
     let mut outs = Vec::with_capacity(results.len());
     for r in results {
@@ -212,7 +248,8 @@ pub fn sparge_attention_heads(
 mod tests {
     use super::*;
     use crate::attention::dense::attention_naive;
-    use crate::attention::flash::attention_flash;
+    use crate::attention::engine::AttnOutput;
+    use crate::sparge::predict::predict;
     use crate::util::prop::{assert_allclose, rel_l1, Cases};
     use crate::util::rng::Pcg;
 
@@ -222,6 +259,33 @@ mod tests {
 
     fn dense_params() -> SpargeParams {
         SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false }
+    }
+
+    /// External-mask engine one-shot (the old `sparse_flash`).
+    fn sf(
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        mask: &BlockMask,
+        c: &AttnConfig,
+        params: &SpargeParams,
+    ) -> (Tensor, SkipStats) {
+        let engine = AttnEngine::builder()
+            .config(*c)
+            .precision(params.precision())
+            .policy(SparsityPolicy::External { mask: mask.clone(), lambda: params.lambda })
+            .build();
+        let r = engine.attention(q, k, v);
+        (r.out, r.stats)
+    }
+
+    /// Predicted-policy engine one-shot (the old `sparge_attention`).
+    fn sa(q: &Tensor, k: &Tensor, v: &Tensor, c: &AttnConfig, params: &SpargeParams) -> AttnOutput {
+        AttnEngine::sparge(*c, params).attention(q, k, v)
+    }
+
+    fn dense_flash(q: &Tensor, k: &Tensor, v: &Tensor, c: &AttnConfig) -> Tensor {
+        AttnEngine::dense(*c).attention(q, k, v).out
     }
 
     #[test]
@@ -234,8 +298,8 @@ mod tests {
             let k = Tensor::randn(&[n, d], rng);
             let v = Tensor::randn(&[n, d], rng);
             let mask = BlockMask::new_all(c.n_qblocks(n), c.n_kblocks(n), true);
-            let (sparse, stats) = sparse_flash(&q, &k, &v, &mask, &c, &dense_params());
-            let dense = attention_flash(&q, &k, &v, &c);
+            let (sparse, stats) = sf(&q, &k, &v, &mask, &c, &dense_params());
+            let dense = dense_flash(&q, &k, &v, &c);
             if stats.sparsity() != 0.0 {
                 return Err("full mask must have zero sparsity".into());
             }
@@ -265,7 +329,7 @@ mod tests {
                     }
                 }
             }
-            let (sparse, _) = sparse_flash(&q, &k, &v, &mask, &c, &dense_params());
+            let (sparse, _) = sf(&q, &k, &v, &mask, &c, &dense_params());
 
             // oracle: dense with masked blocks set to -inf pre-softmax
             let scale = c.scale_for(d);
@@ -295,8 +359,8 @@ mod tests {
             let v = Tensor::randn(&[n, d], rng);
             let mask = BlockMask::new_all(c.n_qblocks(n), c.n_kblocks(n), true);
             let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: Some(-1e30), quant: false };
-            let (sparse, _) = sparse_flash(&q, &k, &v, &mask, &c, &params);
-            let dense = attention_flash(&q, &k, &v, &c);
+            let (sparse, _) = sf(&q, &k, &v, &mask, &c, &params);
+            let dense = dense_flash(&q, &k, &v, &c);
             assert_allclose(sparse.data(), dense.data(), 1e-4, 1e-3, "lambda-lossless")
         });
     }
@@ -318,11 +382,11 @@ mod tests {
         let v = Tensor::randn(&[n, d], &mut rng);
         let mask = BlockMask::new_all(c.n_qblocks(n), c.n_kblocks(n), true);
         let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: Some(-8.0), quant: false };
-        let (sparse, stats) = sparse_flash(&q, &k, &v, &mask, &c, &params);
-        let dense = attention_flash(&q, &k, &v, &c);
+        let (sparse, stats) = sf(&q, &k, &v, &mask, &c, &params);
+        let dense = dense_flash(&q, &k, &v, &c);
         let err = rel_l1(sparse.data(), dense.data());
         assert!(err < 0.02, "lambda path rel-L1 {err}");
-        assert!(stats.pv_skipped_groups > 0, "lambda never fired");
+        assert!(stats.pv_skipped_frac > 0.0, "lambda never fired");
     }
 
     #[test]
@@ -336,7 +400,7 @@ mod tests {
             let v = Tensor::randn(&[n, d], rng);
             let mask = BlockMask::new_all(c.n_qblocks(n), c.n_kblocks(n), true);
             let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: true };
-            let (qout, _) = sparse_flash(&q, &k, &v, &mask, &c, &params);
+            let (qout, _) = sf(&q, &k, &v, &mask, &c, &params);
             let dense = attention_naive(&q, &k, &v, &c);
             let err = rel_l1(qout.data(), dense.data());
             if err > 0.03 {
@@ -362,7 +426,7 @@ mod tests {
         let c = cfg(16, 16, false, 2);
         let mask = BlockMask::new_all(c.n_qblocks(n), c.n_kblocks(n), true);
         let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: true };
-        let (qout, _) = sparse_flash(&q, &k, &v, &mask, &c, &params);
+        let (qout, _) = sf(&q, &k, &v, &mask, &c, &params);
         let dense = attention_naive(&q, &k, &v, &c);
         let err = rel_l1(qout.data(), dense.data());
         assert!(err < 0.03, "smoothed int8 rel-L1 {err}");
@@ -390,9 +454,8 @@ mod tests {
                     }
                 }
             }
-            let (_, st_f) = sparse_flash(&q, &k, &v, &mask, &c, &dense_params());
-            let (_, st_q) =
-                sparse_flash(&q, &k, &v, &mask, &c, &SpargeParams { quant: true, ..dense_params() });
+            let (_, st_f) = sf(&q, &k, &v, &mask, &c, &dense_params());
+            let (_, st_q) = sf(&q, &k, &v, &mask, &c, &SpargeParams { quant: true, ..dense_params() });
             if st_f != st_q {
                 return Err(format!("stats diverge: f32 {st_f:?} vs quant {st_q:?}"));
             }
@@ -415,7 +478,7 @@ mod tests {
         let c = cfg(16, 16, true, 2);
         let mask = BlockMask::new_all(c.n_qblocks(n), c.n_kblocks(n), true);
         let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: true };
-        let (qout, _) = sparse_flash(&q, &k, &v, &mask, &c, &params);
+        let (qout, _) = sf(&q, &k, &v, &mask, &c, &params);
         let dense = attention_naive(&q, &k, &v, &c);
         let err = rel_l1(qout.data(), dense.data());
         assert!(err < 0.03, "causal int8 rel-L1 {err}");
@@ -453,8 +516,8 @@ mod tests {
         }
         let v = Tensor::randn(&[n, d], &mut rng);
         let params = SpargeParams { tau: 0.95, theta: 0.3, lambda: Some(-6.0), quant: false };
-        let res = sparge_attention(&q, &k, &v, &c, &params);
-        let dense = attention_flash(&q, &k, &v, &c);
+        let res = sa(&q, &k, &v, &c, &params);
+        let dense = dense_flash(&q, &k, &v, &c);
         let err = rel_l1(res.out.data(), dense.data());
         assert!(err < 0.05, "rel-L1 {err}");
         assert!(res.stats.sparsity() > 0.3, "sparsity {}", res.stats.sparsity());
@@ -471,7 +534,7 @@ mod tests {
         let p = SpargeParams::default();
         let (par, stats) = sparge_attention_heads(&q, &k, &v, &c, &p, 4);
         for h in 0..4 {
-            let serial = sparge_attention(&q[h], &k[h], &v[h], &c, &p);
+            let serial = sa(&q[h], &k[h], &v[h], &c, &p);
             assert_eq!(par[h], serial.out, "head {h}");
         }
         assert_eq!(stats.qk_total, 4 * 16);
@@ -488,10 +551,18 @@ mod tests {
         let mask = predict(&q, &k, &c, &PredictParams { tau: 0.9, theta: 0.3 }).mask;
         for quant in [false, true] {
             let p = SpargeParams { tau: 0.9, theta: 0.3, lambda: Some(-6.0), quant };
-            let (o1, s1) = sparse_flash_threads(&q, &k, &v, &mask, &c, &p, 1);
-            let (o4, s4) = sparse_flash_threads(&q, &k, &v, &mask, &c, &p, 4);
-            assert_eq!(o1, o4, "quant={quant}");
-            assert_eq!(s1, s4, "quant={quant}");
+            let (o1, s1) = sf(&q, &k, &v, &mask, &c, &p);
+            for exec in [Execution::Threads(4), Execution::Pool(4)] {
+                let engine = AttnEngine::builder()
+                    .config(c)
+                    .precision(p.precision())
+                    .policy(SparsityPolicy::External { mask: mask.clone(), lambda: p.lambda })
+                    .execution(exec)
+                    .build();
+                let r = engine.attention(&q, &k, &v);
+                assert_eq!(o1, r.out, "quant={quant} {exec:?}");
+                assert_eq!(s1, r.stats, "quant={quant} {exec:?}");
+            }
         }
     }
 
@@ -504,9 +575,38 @@ mod tests {
         let v = Tensor::randn(&[n, d], &mut rng);
         let c = cfg(16, 16, true, 2);
         let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false };
-        let res = sparge_attention(&q, &k, &v, &c, &params);
+        let res = sa(&q, &k, &v, &c, &params);
         let dense = attention_naive(&q, &k, &v, &c);
         assert_allclose(res.out.data(), dense.data(), 1e-4, 1e-3, "causal-tau1").unwrap();
         assert_eq!(res.stats.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn deprecated_shims_match_engine() {
+        let mut rng = Pcg::seeded(39);
+        let (n, d) = (64, 8);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let c = cfg(16, 16, false, 2);
+        let p = SpargeParams::default();
+        let engine_res = sa(&q, &k, &v, &c, &p);
+        let mask = predict(&q, &k, &c, &p.predict_params()).mask;
+        let (mout, mstats) = sf(&q, &k, &v, &mask, &c, &p);
+        #[allow(deprecated)]
+        {
+            let shim = sparge_attention(&q, &k, &v, &c, &p);
+            assert_eq!(shim.out, engine_res.out);
+            assert_eq!(shim.stats, engine_res.stats);
+            assert_eq!(Some(shim.mask), engine_res.mask);
+            let shim_t = sparge_attention_threads(&q, &k, &v, &c, &p, 4);
+            assert_eq!(shim_t.out, engine_res.out);
+            let (so, ss) = sparse_flash(&q, &k, &v, &mask, &c, &p);
+            assert_eq!(so, mout);
+            assert_eq!(ss, mstats);
+            let (so, ss) = sparse_flash_threads(&q, &k, &v, &mask, &c, &p, 3);
+            assert_eq!(so, mout);
+            assert_eq!(ss, mstats);
+        }
     }
 }

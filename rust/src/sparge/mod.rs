@@ -1,22 +1,26 @@
 //! The paper's contribution: SpargeAttn — universal training-free sparse +
-//! quantized attention, expressed over the unified tiled pipeline.
+//! quantized attention, expressed over the unified attention API
+//! (`crate::attention::AttnEngine`) and tiled pipeline.
 //!
 //! - [`predict`]: stage-1 sparse mask prediction via selective token
 //!   compression (§3.2–3.3); its `M_g` drives the pipeline through a
-//!   `MaskFilter` (`crate::attention::pipeline`);
-//! - [`kernel`]: thin compositions over `run_tiled` — the f32 and
-//!   SageAttention-INT8 (`QuantScoreKernel`, §3.5) score paths under the
-//!   stage-1 mask + stage-2 λ filter (§3.4), serial or parallel over
-//!   query-block rows;
+//!   `MaskFilter` (`crate::attention::pipeline`). [`KPool`] is the
+//!   incremental (per-appended-row) form of the K-side pooling used by
+//!   decode sessions, and [`predict::predict_decode_row`] the one-row
+//!   decode-step prediction;
+//! - [`kernel`]: the SageAttention-INT8 score path ([`QuantScoreKernel`],
+//!   §3.5), [`SpargeParams`], and the deprecated free-function shims the
+//!   engine builder replaces (see the migration table in
+//!   `crate::attention`);
 //! - [`hilbert`]: HilbertCurve token permutation for visual models (§3.7);
 //! - [`tune`]: per-layer hyper-parameter grid search (§3.6);
 //! - [`config`]: per-layer parameter tables with JSON persistence;
 //! - [`metrics`]: relative-L1 / sparsity / similarity metrics (§4.1).
 //!
 //! Extension recipe: a new mask policy (a new baseline) is a new
-//! `BlockFilter` impl plus a mask constructor in `crate::baselines`; a new
-//! score precision is a new `ScoreKernel` impl like [`QuantScoreKernel`].
-//! Neither adds a loop.
+//! `BlockFilter` impl plus a mask constructor in `crate::baselines` driven
+//! through `SparsityPolicy::External`; a new score precision is a new
+//! `ScoreKernel` impl like [`QuantScoreKernel`]. Neither adds a loop.
 
 pub mod config;
 pub mod hilbert;
@@ -26,9 +30,10 @@ pub mod predict;
 pub mod tune;
 
 pub use config::ModelSpargeConfig;
+#[allow(deprecated)]
 pub use kernel::{
     sparge_attention, sparge_attention_heads, sparge_attention_threads, sparse_flash,
     sparse_flash_threads, QuantScoreKernel, SpargeOutput, SpargeParams,
 };
-pub use predict::{predict, PredictParams, Prediction};
+pub use predict::{predict, predict_pooled, KPool, PredictParams, Prediction};
 pub use tune::{tune_layer, CalibSample, TuneOptions, TuneResult};

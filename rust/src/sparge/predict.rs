@@ -132,8 +132,24 @@ pub fn top_cdf(p_row: &[f32], tau: f32) -> Vec<bool> {
 /// lower triangle (blocks fully above the diagonal are never computed, so
 /// they are outside the mask domain).
 pub fn predict(q: &Tensor, k: &Tensor, cfg: &AttnConfig, params: &PredictParams) -> Prediction {
-    let (qt, sim_q) = compress_blocks(q, cfg.bq);
     let (kt, sim_k) = compress_blocks(k, cfg.bk);
+    predict_pooled(q, &kt, &sim_k, cfg, params)
+}
+
+/// [`predict`] from an already-pooled K side: block mean tokens `kt`
+/// (n_kblocks × d) and per-block self-similarities `sim_k`. This is the
+/// session path — an `AttnSession` maintains exactly this state
+/// incrementally (see [`KPool`]) and reuses it here instead of
+/// re-compressing the whole K cache. With `kt`/`sim_k` from
+/// [`compress_blocks`] the result is identical to [`predict`].
+pub fn predict_pooled(
+    q: &Tensor,
+    kt: &Tensor,
+    sim_k: &[f32],
+    cfg: &AttnConfig,
+    params: &PredictParams,
+) -> Prediction {
+    let (qt, sim_q) = compress_blocks(q, cfg.bq);
     let tm = qt.dim(0);
     let tn = kt.dim(0);
     let d = q.dim(1);
@@ -141,7 +157,7 @@ pub fn predict(q: &Tensor, k: &Tensor, cfg: &AttnConfig, params: &PredictParams)
 
     // Ŝ = q kᵀ (scaled like the real scores so λ/τ operate on the same
     // scale); fix-K columns → −∞ before softmax.
-    let mut s_hat = matmul::matmul_nt(&qt, &kt);
+    let mut s_hat = matmul::matmul_nt(&qt, kt);
     s_hat.scale(scale);
     for j in 0..tn {
         if sim_k[j] < params.theta {
@@ -196,7 +212,179 @@ pub fn predict(q: &Tensor, k: &Tensor, cfg: &AttnConfig, params: &PredictParams)
             }
         }
     }
-    Prediction { mask, sim_q, sim_k, p_hat }
+    Prediction { mask, sim_q, sim_k: sim_k.to_vec(), p_hat }
+}
+
+/// One decode-step stage-1 prediction: the single query row scored against
+/// the pooled K block means. The q "block" is the row itself (a one-row
+/// block has self-similarity 1), so only the fix-K rule and TopCdf apply.
+/// Returns a 1 × n_kblocks mask; `scale` is the engine's softmax scale.
+pub fn predict_decode_row(
+    q_row: &[f32],
+    kt: &Tensor,
+    sim_k: &[f32],
+    scale: f32,
+    params: &PredictParams,
+) -> BlockMask {
+    let tn = kt.dim(0);
+    debug_assert_eq!(sim_k.len(), tn);
+    let mut s_hat = vec![0f32; tn];
+    for (j, sv) in s_hat.iter_mut().enumerate() {
+        *sv = matmul::dot(q_row, kt.row(j)) * scale;
+    }
+    for (sv, &sim) in s_hat.iter_mut().zip(sim_k) {
+        if sim < params.theta {
+            *sv = f32::NEG_INFINITY;
+        }
+    }
+    // stable row softmax (all blocks are in the causal domain of the last
+    // row, so no further masking applies)
+    let m = s_hat.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut p = vec![0f32; tn];
+    if m > f32::NEG_INFINITY {
+        let mut sum = 0f32;
+        for (pv, &sv) in p.iter_mut().zip(&s_hat) {
+            let e = if sv == f32::NEG_INFINITY { 0.0 } else { (sv - m).exp() };
+            *pv = e;
+            sum += e;
+        }
+        if sum > 0.0 {
+            let inv = 1.0 / sum;
+            for pv in &mut p {
+                *pv *= inv;
+            }
+        }
+    }
+    let sel = top_cdf(&p, params.tau);
+    let mut mask = BlockMask::new_all(1, tn, false);
+    for (j, &on) in sel.iter().enumerate() {
+        if on {
+            mask.set(0, j, true);
+        }
+    }
+    // Fix blocks are never skipped (Eq. 5); the one-row q block fires the
+    // fix-Q rule only for θ > 1.
+    for (j, &sim) in sim_k.iter().enumerate() {
+        if sim < params.theta {
+            mask.set(0, j, true);
+        }
+    }
+    if 1.0 < params.theta {
+        mask.set_row(0, true);
+    }
+    mask
+}
+
+/// Incrementally-maintained K-side pooling state for stage-1 prediction:
+/// per-block mean-token sums and self-similarities, grown row by row so a
+/// decode step never re-runs [`compress_blocks`] over the whole cache.
+///
+/// Bitwise contract: [`KPool::means`] and [`KPool::sims`] equal a
+/// from-scratch `compress_blocks` of the same rows exactly — the per-block
+/// mean accumulates rows in arrival order like `mean_axis0`, and the tail
+/// block's `cos_sim` is recomputed with the same function over the same
+/// slice. The counters let callers assert the update discipline: sessions
+/// require `full_recomputes` to stay flat across decode steps.
+#[derive(Clone, Debug)]
+pub struct KPool {
+    bk: usize,
+    d: usize,
+    /// Per-block running column sums, flat (n_blocks × d).
+    sums: Vec<f32>,
+    /// Rows accumulated per block.
+    rows: Vec<usize>,
+    /// Per-block self-similarity.
+    sims: Vec<f32>,
+    /// Full scans over the whole input (the prefill bulk [`KPool::build`]).
+    pub full_recomputes: usize,
+    /// Single-row incremental updates (decode appends).
+    pub incremental_updates: usize,
+}
+
+impl KPool {
+    pub fn new(bk: usize, d: usize) -> KPool {
+        assert!(bk > 0 && d > 0, "KPool needs bk > 0 and d > 0");
+        KPool {
+            bk,
+            d,
+            sums: Vec::new(),
+            rows: Vec::new(),
+            sims: Vec::new(),
+            full_recomputes: 0,
+            incremental_updates: 0,
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Bulk-build from all rows of `k` (pool must be empty): one full
+    /// scan, equivalent to `compress_blocks(k, bk)`.
+    pub fn build(&mut self, k: &Tensor) {
+        assert!(self.rows.is_empty(), "KPool::build on a non-empty pool");
+        assert_eq!(k.dim(1), self.d, "KPool::build head dim");
+        let n = k.dim(0);
+        let mut r0 = 0;
+        while r0 < n {
+            let r1 = (r0 + self.bk).min(n);
+            let base = self.sums.len();
+            self.sums.resize(base + self.d, 0.0);
+            for r in r0..r1 {
+                for (o, &v) in self.sums[base..].iter_mut().zip(k.row(r)) {
+                    *o += v;
+                }
+            }
+            self.rows.push(r1 - r0);
+            self.sims.push(cos_sim(&k.data()[r0 * self.d..r1 * self.d], r1 - r0, self.d));
+            r0 = r1;
+        }
+        self.full_recomputes += 1;
+    }
+
+    /// Incrementally append one row. `tail` must be the raw rows of the
+    /// block the new row lands in, *including* the new row (the caller —
+    /// the session — slices it out of its KV cache); only that block's
+    /// sum and self-similarity are touched.
+    pub fn append_row(&mut self, row: &[f32], tail: &[f32]) {
+        assert_eq!(row.len(), self.d, "KPool::append_row dim");
+        let open_new = self.rows.last().map(|&r| r == self.bk).unwrap_or(true);
+        if open_new {
+            self.sums.extend_from_slice(row);
+            self.rows.push(1);
+            self.sims.push(cos_sim(row, 1, self.d));
+        } else {
+            let b = self.rows.len() - 1;
+            *self.rows.last_mut().unwrap() += 1;
+            let rows = self.rows[b];
+            for (o, &v) in self.sums[b * self.d..(b + 1) * self.d].iter_mut().zip(row) {
+                *o += v;
+            }
+            debug_assert_eq!(tail.len(), rows * self.d, "tail slice must cover the block incl. the new row");
+            self.sims[b] = cos_sim(tail, rows, self.d);
+        }
+        self.incremental_updates += 1;
+    }
+
+    /// Block mean tokens as an (n_blocks × d) tensor — bitwise equal to
+    /// `compress_blocks(..).0` over the same rows.
+    pub fn means(&self) -> Tensor {
+        let nb = self.n_blocks();
+        let mut t = Tensor::zeros(&[nb, self.d]);
+        for b in 0..nb {
+            let inv = 1.0 / self.rows[b] as f32;
+            for (o, &s) in t.row_mut(b).iter_mut().zip(&self.sums[b * self.d..(b + 1) * self.d]) {
+                *o = s * inv;
+            }
+        }
+        t
+    }
+
+    /// Per-block self-similarities — bitwise equal to
+    /// `compress_blocks(..).1` over the same rows.
+    pub fn sims(&self) -> &[f32] {
+        &self.sims
+    }
 }
 
 #[cfg(test)]
@@ -298,7 +486,8 @@ mod tests {
             if picked < tau * total - 1e-4 {
                 return Err(format!("coverage {picked} < tau*total {}", tau * total));
             }
-            let min_sel = p.iter().zip(&sel).filter(|(_, &s)| s).map(|(&v, _)| v).fold(f32::INFINITY, f32::min);
+            let min_sel =
+                p.iter().zip(&sel).filter(|(_, &s)| s).map(|(&v, _)| v).fold(f32::INFINITY, f32::min);
             for (&v, &s) in p.iter().zip(&sel) {
                 if !s && v > min_sel + 1e-6 {
                     return Err(format!("unselected {v} > selected min {min_sel}"));
@@ -386,6 +575,91 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn kpool_incremental_matches_compress_blocks_bitwise() {
+        // Grow a pool row by row; at several snapshot lengths its means and
+        // sims must be bit-identical to a from-scratch compress_blocks.
+        let mut rng = Pcg::seeded(611);
+        let (n, d, bk) = (53, 8, 8); // ragged tail on purpose
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let mut pool = KPool::new(bk, d);
+        for r in 0..n {
+            let tail_start = (r / bk) * bk;
+            pool.append_row(k.row(r), &k.data()[tail_start * d..(r + 1) * d]);
+            if r % 7 == 0 || r + 1 == n {
+                let prefix = k.rows(0, r + 1);
+                let (tokens, sims) = compress_blocks(&prefix, bk);
+                assert_eq!(pool.means(), tokens, "means diverge at row {r}");
+                assert_eq!(pool.sims(), &sims[..], "sims diverge at row {r}");
+            }
+        }
+        assert_eq!(pool.full_recomputes, 0);
+        assert_eq!(pool.incremental_updates, n);
+    }
+
+    #[test]
+    fn kpool_build_matches_compress_blocks_and_counts_one_scan() {
+        let mut rng = Pcg::seeded(612);
+        let (n, d, bk) = (40, 4, 16);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let mut pool = KPool::new(bk, d);
+        pool.build(&k);
+        let (tokens, sims) = compress_blocks(&k, bk);
+        assert_eq!(pool.means(), tokens);
+        assert_eq!(pool.sims(), &sims[..]);
+        assert_eq!(pool.full_recomputes, 1);
+        assert_eq!(pool.incremental_updates, 0);
+        // subsequent appends stay incremental
+        let extra = Tensor::randn(&[1, d], &mut rng);
+        let mut all = k.data().to_vec();
+        all.extend_from_slice(extra.data());
+        let tail_start = (n / bk) * bk;
+        pool.append_row(extra.row(0), &all[tail_start * d..(n + 1) * d]);
+        assert_eq!(pool.full_recomputes, 1);
+        assert_eq!(pool.incremental_updates, 1);
+        let full = Tensor::from_vec(&[n + 1, d], all);
+        let (tokens, sims) = compress_blocks(&full, bk);
+        assert_eq!(pool.means(), tokens);
+        assert_eq!(pool.sims(), &sims[..]);
+    }
+
+    #[test]
+    fn predict_pooled_matches_predict() {
+        Cases::standard(613).check(|rng| {
+            let n = rng.range(8, 80);
+            let q = Tensor::randn(&[n, 8], rng);
+            let k = Tensor::randn(&[n, 8], rng);
+            let c = cfg(rng.range(2, 12), rng.range(2, 12), rng.chance(0.5));
+            let params = PredictParams { tau: rng.f32(), theta: rng.f32() - 0.5 };
+            let direct = predict(&q, &k, &c, &params);
+            let (kt, sim_k) = compress_blocks(&k, c.bk);
+            let pooled = predict_pooled(&q, &kt, &sim_k, &c, &params);
+            if direct.mask != pooled.mask {
+                return Err("pooled predict mask diverges".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn predict_decode_row_selects_dominant_block_and_forces_fix_cols() {
+        let d = 4;
+        // three K blocks with distinct directions; query aligned to block 1
+        let kt = Tensor::from_vec(&[3, d], vec![4., 0., 0., 0., 0., 4., 0., 0., 0., 0., 4., 0.]);
+        let q = [0f32, 2.0, 0.0, 0.0];
+        let sim = [0.9f32, 0.9, 0.9];
+        let mask = predict_decode_row(&q, &kt, &sim, 1.0, &PredictParams { tau: 0.5, theta: 0.0 });
+        assert!(mask.get(0, 1), "dominant block not selected");
+        assert!(!mask.get(0, 0) && !mask.get(0, 2), "small-mass blocks should be dropped at tau=0.5");
+        // a fix-K column (low self-similarity) is always kept
+        let sim_fix = [0.9f32, 0.9, -0.5];
+        let mask = predict_decode_row(&q, &kt, &sim_fix, 1.0, &PredictParams { tau: 0.5, theta: 0.0 });
+        assert!(mask.get(0, 2), "fix-K column must be forced on");
+        // tau=1 keeps every block
+        let mask = predict_decode_row(&q, &kt, &sim, 1.0, &PredictParams { tau: 1.0, theta: 0.0 });
+        assert_eq!(mask.count_active(), 3);
     }
 
     #[test]

@@ -4,11 +4,11 @@
 //! model inputs per layer): first (τ, θ) maximizing sparsity subject to
 //! rel-L1 < l1, then λ maximizing sparsity subject to rel-L1 < l2.
 
-use crate::attention::flash::attention_flash;
+use crate::attention::engine::AttnEngine;
 use crate::attention::types::AttnConfig;
 use crate::tensor::Tensor;
 
-use super::kernel::{sparge_attention, SpargeParams};
+use super::kernel::SpargeParams;
 use super::metrics::rel_l1;
 
 /// One calibration sample: a single head's (Q, K, V).
@@ -68,7 +68,8 @@ pub fn evaluate(
     cfg: &AttnConfig,
     params: &SpargeParams,
 ) -> (f64, f64) {
-    let denses: Vec<Tensor> = samples.iter().map(|s| attention_flash(&s.q, &s.k, &s.v, cfg)).collect();
+    let dense = AttnEngine::dense(*cfg);
+    let denses: Vec<Tensor> = samples.iter().map(|s| dense.attention(&s.q, &s.k, &s.v).out).collect();
     evaluate_cached(samples, &denses, cfg, params)
 }
 
@@ -80,10 +81,11 @@ fn evaluate_cached(
     cfg: &AttnConfig,
     params: &SpargeParams,
 ) -> (f64, f64) {
+    let engine = AttnEngine::sparge(*cfg, params);
     let mut sp_sum = 0f64;
     let mut worst = 0f64;
     for (s, dense) in samples.iter().zip(denses) {
-        let res = sparge_attention(&s.q, &s.k, &s.v, cfg, params);
+        let res = engine.attention(&s.q, &s.k, &s.v);
         sp_sum += res.stats.sparsity();
         worst = worst.max(rel_l1(&res.out, dense));
     }
@@ -95,7 +97,8 @@ pub fn tune_layer(samples: &[CalibSample], cfg: &AttnConfig, opts: &TuneOptions)
     assert!(!samples.is_empty(), "tuning needs calibration samples");
     assert!(opts.l2 >= opts.l1, "l2 must be >= l1");
 
-    let denses: Vec<Tensor> = samples.iter().map(|s| attention_flash(&s.q, &s.k, &s.v, cfg)).collect();
+    let dense = AttnEngine::dense(*cfg);
+    let denses: Vec<Tensor> = samples.iter().map(|s| dense.attention(&s.q, &s.k, &s.v).out).collect();
 
     // Stage 1: (τ, θ), λ disabled.
     let mut best: Option<(SpargeParams, f64, f64)> = None;
@@ -182,7 +185,8 @@ mod tests {
         let samples: Vec<CalibSample> = (0..2).map(|_| local_sample(&mut rng, 192, 16, 6)).collect();
         let loose = tune_layer(&samples, &cfg, &TuneOptions { l1: 0.10, l2: 0.12, ..Default::default() });
         let tight = tune_layer(&samples, &cfg, &TuneOptions { l1: 0.005, l2: 0.006, ..Default::default() });
-        assert!(loose.sparsity >= tight.sparsity - 1e-9, "loose {} < tight {}", loose.sparsity, tight.sparsity);
+        let (ls, ts) = (loose.sparsity, tight.sparsity);
+        assert!(ls >= ts - 1e-9, "loose {ls} < tight {ts}");
         assert!(tight.l1_error < 0.006);
     }
 

@@ -52,11 +52,15 @@ impl Args {
     }
 
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.get(name).map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))).unwrap_or(default)
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
     }
 
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
-        self.get(name).map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))).unwrap_or(default)
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
     }
 
     pub fn get_f32(&self, name: &str, default: f32) -> f32 {

@@ -51,22 +51,30 @@ pub fn emit(l: Level, module: &str, msg: &str) {
 
 #[macro_export]
 macro_rules! log_info {
-    ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Info, module_path!(), &format!($($arg)*)) };
+    ($($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Info, module_path!(), &format!($($arg)*))
+    };
 }
 
 #[macro_export]
 macro_rules! log_warn {
-    ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Warn, module_path!(), &format!($($arg)*)) };
+    ($($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Warn, module_path!(), &format!($($arg)*))
+    };
 }
 
 #[macro_export]
 macro_rules! log_error {
-    ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Error, module_path!(), &format!($($arg)*)) };
+    ($($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Error, module_path!(), &format!($($arg)*))
+    };
 }
 
 #[macro_export]
 macro_rules! log_debug {
-    ($($arg:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Debug, module_path!(), &format!($($arg)*)) };
+    ($($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Debug, module_path!(), &format!($($arg)*))
+    };
 }
 
 #[cfg(test)]

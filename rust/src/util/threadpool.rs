@@ -1,11 +1,18 @@
 //! Fixed-size thread pool + scoped parallel-for (tokio/rayon substitute).
 //!
-//! The coordinator uses `ThreadPool` for request handling; the attention
-//! engines use `parallel_for` to fan head-level work across cores.
+//! Three executors live here:
+//! - [`ThreadPool`]: fire-and-forget `'static` jobs (the coordinator's
+//!   connection handling);
+//! - [`parallel_map`] / [`parallel_for`]: scoped data-parallel loops that
+//!   spawn threads per call (`std::thread::scope`);
+//! - [`WorkerPool`]: a *persistent* pool for scoped data-parallel jobs —
+//!   workers are spawned once (e.g. by an `AttnEngine` at build time) and
+//!   reused across calls, so the hot decode/prefill path pays no per-call
+//!   thread-spawn cost.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -80,6 +87,181 @@ impl Drop for ThreadPool {
         drop(self.tx.take());
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+/// A persistent pool of workers for *scoped* data-parallel jobs.
+///
+/// Unlike [`ThreadPool`], jobs may borrow from the caller's stack: the
+/// submitting call blocks until every index has been processed, so the
+/// borrow outlives all worker accesses. Unlike [`parallel_map`], workers
+/// are spawned once and reused — an attention engine creates the pool at
+/// build time and every subsequent prefill/decode call is spawn-free.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for a new job (or shutdown).
+    work: Condvar,
+    /// Submitters wait here for job completion (and for the job slot).
+    done: Condvar,
+}
+
+#[derive(Default)]
+struct PoolState {
+    /// Epoch of the most recently installed job.
+    epoch: u64,
+    /// Most recent fully-completed epoch.
+    completed: u64,
+    job: Option<JobPtr>,
+    /// Next index to claim for the current job.
+    next: usize,
+    /// Indices finished for the current job.
+    finished: usize,
+    /// An index of the current job panicked; reported to the submitter so
+    /// a worker panic propagates like `std::thread::scope`'s join would,
+    /// instead of deadlocking the pool.
+    panicked: bool,
+    shutdown: bool,
+}
+
+/// Lifetime-erased pointer to the submitter's closure. Sound because
+/// [`WorkerPool::run`] does not return until `finished == n`, after which
+/// no worker can dereference the pointer again (index claims fail once
+/// `next >= n`, and a new job can only be installed by a new `run`).
+#[derive(Clone, Copy)]
+struct JobPtr {
+    f: *const (dyn Fn(usize) + Sync),
+    n: usize,
+}
+
+unsafe impl Send for JobPtr {}
+
+impl WorkerPool {
+    /// Spawn a pool of `n` persistent workers (n >= 1).
+    pub fn new(n: usize) -> WorkerPool {
+        let n = n.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("sparge-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, workers }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `f(0..n)` across the pool, blocking until every index has been
+    /// processed. Concurrent `run` calls from other threads serialize:
+    /// later jobs wait for the slot. Which worker runs which index is
+    /// nondeterministic; callers that need determinism collect per-index
+    /// results (see [`WorkerPool::map`]).
+    pub fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        // Erase the borrow lifetime; `run` does not return until all
+        // workers are done with the pointer (see [`JobPtr`]).
+        let ptr: *const (dyn Fn(usize) + Sync + '_) = f;
+        #[allow(clippy::missing_transmute_annotations)]
+        let job = JobPtr { f: unsafe { std::mem::transmute(ptr) }, n };
+        let mut st = self.shared.state.lock().unwrap();
+        while st.job.is_some() {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.epoch += 1;
+        let epoch = st.epoch;
+        st.job = Some(job);
+        st.next = 0;
+        st.finished = 0;
+        st.panicked = false;
+        self.shared.work.notify_all();
+        while st.completed < epoch {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        let panicked = st.panicked;
+        st.panicked = false;
+        drop(st);
+        assert!(!panicked, "WorkerPool job panicked on a worker thread");
+    }
+
+    /// Deterministic scoped map over the pool: results are collected per
+    /// index, so the output (and any caller-side merge in index order) is
+    /// identical for every pool size. `n <= 1` runs inline on the caller —
+    /// the decode-shaped fast path never crosses a thread.
+    pub fn map<T: Send>(&self, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+        if n == 0 {
+            return Vec::new();
+        }
+        if n == 1 {
+            return vec![f(0)];
+        }
+        let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let fill = |i: usize| {
+            *slots[i].lock().unwrap() = Some(f(i));
+        };
+        self.run(n, &fill);
+        slots.into_iter().map(|s| s.into_inner().unwrap().expect("pool filled slot")).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        // Claim an index (or sleep until there is work).
+        let (job, i) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(job) = st.job {
+                    if st.next < job.n {
+                        let i = st.next;
+                        st.next += 1;
+                        break (job, i);
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // Run outside the lock; catch panics so a failing job reports to
+        // the submitter instead of wedging `finished` below `n` forever.
+        let func = unsafe { &*job.f };
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| func(i))).is_ok();
+        let mut st = shared.state.lock().unwrap();
+        if !ok {
+            st.panicked = true;
+        }
+        st.finished += 1;
+        if st.finished == job.n {
+            st.completed = st.epoch;
+            st.job = None;
+            shared.done.notify_all();
         }
     }
 }
@@ -205,5 +387,78 @@ mod tests {
         let data: Vec<f64> = (0..32).map(|i| i as f64).collect();
         let out = parallel_map(32, 4, |i| data[i] * 2.0);
         assert_eq!(out[31], 62.0);
+    }
+
+    #[test]
+    fn worker_pool_map_ordered_and_borrowing() {
+        let pool = WorkerPool::new(4);
+        let data: Vec<u64> = (0..100).collect();
+        let out = pool.map(100, |i| data[i] * data[i]);
+        assert_eq!(out, (0..100u64).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_pool_reusable_across_jobs() {
+        let pool = WorkerPool::new(3);
+        for round in 0..20u64 {
+            let out = pool.map(17, |i| i as u64 + round);
+            assert_eq!(out, (0..17u64).map(|i| i + round).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn worker_pool_size_invariant_results() {
+        let data: Vec<u64> = (0..64).collect();
+        let mut outs = Vec::new();
+        for size in [1, 2, 8] {
+            let pool = WorkerPool::new(size);
+            assert_eq!(pool.size(), size);
+            outs.push(pool.map(64, |i| data[i] * 3));
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[1], outs[2]);
+    }
+
+    #[test]
+    fn worker_pool_empty_single_and_drop() {
+        let pool = WorkerPool::new(2);
+        assert!(pool.map(0, |i| i).is_empty());
+        assert_eq!(pool.map(1, |i| i + 1), vec![1]);
+        drop(pool); // must join cleanly
+    }
+
+    #[test]
+    fn worker_pool_propagates_job_panics_and_stays_usable() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, &|i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "worker panic must propagate to the submitter");
+        // the job slot was released; the pool keeps working
+        assert_eq!(pool.map(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn worker_pool_concurrent_submitters_serialize() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let hits = Arc::new(AtomicU64::new(0));
+        thread::scope(|scope| {
+            for _ in 0..4 {
+                let pool = Arc::clone(&pool);
+                let hits = Arc::clone(&hits);
+                scope.spawn(move || {
+                    for _ in 0..8 {
+                        pool.run(10, &|_i| {
+                            hits.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4 * 8 * 10);
     }
 }

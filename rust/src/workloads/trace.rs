@@ -71,7 +71,8 @@ pub fn load(path: &Path) -> Result<Vec<Tensor>> {
         }
         let mut buf = vec![0u8; total * 4];
         r.read_exact(&mut buf).context("truncated tensor data")?;
-        let data: Vec<f32> = buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+        let data: Vec<f32> =
+            buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
         out.push(Tensor::from_vec(&shape, data));
     }
     Ok(out)

@@ -132,6 +132,31 @@ fn attention_probe_records_per_request_sparsity() {
 }
 
 #[test]
+fn decode_probe_reports_per_step_sparsity() {
+    let Some(c) = coordinator() else { return };
+    let params = sparge::sparge::SpargeParams::default();
+    let r = c.attention_decode_probe(256, 32, 9, &params, 8, 2);
+    assert_eq!(r.step_sparsity.len(), 8);
+    assert!((0.0..=1.0).contains(&r.prefill_sparsity));
+    for (i, s) in r.step_sparsity.iter().enumerate() {
+        assert!((0.0..=1.0).contains(s), "step {i} sparsity {s}");
+    }
+    let mean = r.step_sparsity.iter().sum::<f64>() / 8.0;
+    assert!((r.mean_step_sparsity - mean).abs() < 1e-12);
+    // determinism across thread counts, like the prefill probe
+    let r2 = c.attention_decode_probe(256, 32, 9, &params, 8, 1);
+    assert_eq!(r.step_sparsity, r2.step_sparsity);
+    // wire protocol: decode mode responds with the per-step array
+    let resp = sparge::coordinator::server::dispatch(
+        &c,
+        r#"{"op":"attn","mode":"decode","n":128,"d":16,"steps":4,"seed":3,"threads":1}"#,
+    );
+    assert_eq!(resp.get("mode").and_then(|v| v.as_str()), Some("decode"));
+    assert_eq!(resp.get("per_step_sparsity").and_then(|v| v.as_arr()).map(|a| a.len()), Some(4));
+    assert!(resp.get("mean_step_sparsity").and_then(|v| v.as_f64()).is_some());
+}
+
+#[test]
 fn backpressure_rejects_when_full() {
     let Some(dir) = Some(Manifest::default_dir()) else { return };
     if !dir.join("manifest.json").exists() {

@@ -1,15 +1,37 @@
 //! Cross-module property tests over the pure-Rust engine (no artifacts
 //! needed): the paper's semantic invariants at the integration level.
 
-use sparge::attention::flash::attention_flash;
-use sparge::attention::types::{AttnConfig, BlockMask};
+use sparge::attention::types::{AttnConfig, BlockMask, SkipStats};
+use sparge::attention::{AttnEngine, SparsityPolicy};
 use sparge::baselines;
-use sparge::sparge::kernel::{sparse_flash, sparge_attention, SpargeParams};
+use sparge::sparge::kernel::SpargeParams;
 use sparge::sparge::metrics::rel_l1;
 use sparge::sparge::predict::{predict, PredictParams};
+use sparge::tensor::Tensor;
 use sparge::util::prop::Cases;
 use sparge::util::rng::Pcg;
 use sparge::workloads::{synthetic, video, SyntheticSpec, VideoSpec};
+
+fn dense_flash(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -> Tensor {
+    AttnEngine::dense(*cfg).attention(q, k, v).out
+}
+
+fn masked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    params: &SpargeParams,
+) -> (Tensor, SkipStats) {
+    let engine = AttnEngine::builder()
+        .config(*cfg)
+        .precision(params.precision())
+        .policy(SparsityPolicy::External { mask: mask.clone(), lambda: params.lambda })
+        .build();
+    let r = engine.attention(q, k, v);
+    (r.out, r.stats)
+}
 
 /// τ monotonicity: lowering τ can only raise (or keep) sparsity and can
 /// only raise (or keep) the error.
@@ -19,10 +41,11 @@ fn tau_monotonicity_on_structured_workloads() {
         let n = 512 + rng.range(0, 4) * 128;
         let s = synthetic::generate(&SyntheticSpec::lm_like(n, 32), rng);
         let cfg = AttnConfig { bq: 64, bk: 32, causal: false, scale: None, cw: 2 };
-        let dense = attention_flash(&s.q, &s.k, &s.v, &cfg);
+        let dense = dense_flash(&s.q, &s.k, &s.v, &cfg);
         let mut last_sparsity = -1.0f64;
         for tau in [0.99f32, 0.9, 0.7, 0.5] {
-            let res = sparge_attention(&s.q, &s.k, &s.v, &cfg, &SpargeParams { tau, theta: 0.3, lambda: None, quant: false });
+            let params = SpargeParams { tau, theta: 0.3, lambda: None, quant: false };
+            let res = AttnEngine::sparge(cfg, &params).attention(&s.q, &s.k, &s.v);
             if res.stats.sparsity() + 1e-9 < last_sparsity {
                 return Err(format!("sparsity not monotone at tau={tau}"));
             }
@@ -47,8 +70,9 @@ fn outputs_bounded_by_value_range() {
             baselines::sliding_window_mask(256, 256, &cfg, 1, 3),
             predict(&s.q, &s.k, &cfg, &PredictParams::default()).mask,
         ];
+        let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false };
         for mask in &masks {
-            let (out, _) = sparse_flash(&s.q, &s.k, &s.v, mask, &cfg, &SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false });
+            let (out, _) = masked(&s.q, &s.k, &s.v, mask, &cfg, &params);
             if out.abs_max() > vmax + 1e-4 {
                 return Err(format!("output {} exceeds value range {}", out.abs_max(), vmax));
             }
@@ -67,11 +91,12 @@ fn attention_commutes_with_permutation() {
     let s = video::generate_grid(&spec, &mut rng);
     let cfg = AttnConfig { bq: 16, bk: 16, causal: false, scale: None, cw: 2 };
 
-    let dense = attention_flash(&s.q, &s.k, &s.v, &cfg);
-    let order = sparge::sparge::hilbert::token_order(sparge::sparge::hilbert::Permutation::HilbertCurve, 2, 8, 8, 0);
-    let ps = video::permute(&s, &spec, sparge::sparge::hilbert::Permutation::HilbertCurve, 0);
-    let dense_perm = attention_flash(&ps.q, &ps.k, &ps.v, &cfg);
-    let back = sparge::sparge::hilbert::permute_rows(&dense_perm, &sparge::sparge::hilbert::invert_order(&order));
+    use sparge::sparge::hilbert::{invert_order, permute_rows, token_order, Permutation};
+    let dense = dense_flash(&s.q, &s.k, &s.v, &cfg);
+    let order = token_order(Permutation::HilbertCurve, 2, 8, 8, 0);
+    let ps = video::permute(&s, &spec, Permutation::HilbertCurve, 0);
+    let dense_perm = dense_flash(&ps.q, &ps.k, &ps.v, &cfg);
+    let back = permute_rows(&dense_perm, &invert_order(&order));
     let err = rel_l1(&back, &dense);
     assert!(err < 1e-5, "dense attention not permutation invariant: {err}");
 }
@@ -86,8 +111,8 @@ fn lambda_only_adds_sparsity() {
         let pred = predict(&s.q, &s.k, &cfg, &PredictParams { tau: 0.9, theta: 0.3 });
         let p1 = SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false };
         let p2 = SpargeParams { lambda: Some(-5.0), ..p1 };
-        let (_, st1) = sparse_flash(&s.q, &s.k, &s.v, &pred.mask, &cfg, &p1);
-        let (_, st2) = sparse_flash(&s.q, &s.k, &s.v, &pred.mask, &cfg, &p2);
+        let (_, st1) = masked(&s.q, &s.k, &s.v, &pred.mask, &cfg, &p1);
+        let (_, st2) = masked(&s.q, &s.k, &s.v, &pred.mask, &cfg, &p2);
         if st2.sparsity() + 1e-12 < st1.sparsity() {
             return Err(format!("lambda reduced sparsity: {} vs {}", st2.sparsity(), st1.sparsity()));
         }
@@ -103,8 +128,9 @@ fn quant_and_f32_kernels_agree() {
         let s = synthetic::generate(&SyntheticSpec::lm_like(256, 32), rng);
         let cfg = AttnConfig { bq: 32, bk: 32, causal: false, scale: None, cw: 2 };
         let mask = BlockMask::new_all(cfg.n_qblocks(256), cfg.n_kblocks(256), true);
-        let (f32_out, _) = sparse_flash(&s.q, &s.k, &s.v, &mask, &cfg, &SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false });
-        let (q_out, _) = sparse_flash(&s.q, &s.k, &s.v, &mask, &cfg, &SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: true });
+        let base = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false };
+        let (f32_out, _) = masked(&s.q, &s.k, &s.v, &mask, &cfg, &base);
+        let (q_out, _) = masked(&s.q, &s.k, &s.v, &mask, &cfg, &SpargeParams { quant: true, ..base });
         let err = rel_l1(&q_out, &f32_out);
         if err > 0.05 {
             return Err(format!("int8 rel-L1 {err}"));

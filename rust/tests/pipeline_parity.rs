@@ -9,15 +9,40 @@
 //! masks, and parameters — and the parallel-row driver must be bitwise
 //! equal to `threads = 1` for every backend.
 
-use sparge::attention::flash::{attention_flash_stats, attention_flash_stats_threads};
 use sparge::attention::types::{AttnConfig, BlockMask, SkipStats};
-use sparge::attention::{score_block, FlashTile};
+use sparge::attention::{score_block, AttnEngine, Execution, FlashTile, Precision, SparsityPolicy};
 use sparge::baselines;
-use sparge::sparge::kernel::{sparse_flash, sparse_flash_threads, SpargeParams};
+use sparge::sparge::kernel::SpargeParams;
 use sparge::tensor::quant::{self, QuantBlock};
 use sparge::tensor::Tensor;
 use sparge::util::prop::{assert_allclose, Cases};
 use sparge::util::rng::Pcg;
+
+/// Dense engine one-shot (the old `attention_flash_stats`).
+fn engine_dense(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -> (Tensor, SkipStats) {
+    let r = AttnEngine::dense(*cfg).attention(q, k, v);
+    (r.out, r.stats)
+}
+
+/// External-mask engine one-shot (the old `sparse_flash`), with execution.
+fn engine_masked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    mask: &BlockMask,
+    cfg: &AttnConfig,
+    params: &SpargeParams,
+    exec: Execution,
+) -> (Tensor, SkipStats) {
+    let engine = AttnEngine::builder()
+        .config(*cfg)
+        .precision(if params.quant { Precision::Int8 } else { Precision::F32 })
+        .policy(SparsityPolicy::External { mask: mask.clone(), lambda: params.lambda })
+        .execution(exec)
+        .build();
+    let r = engine.attention(q, k, v);
+    (r.out, r.stats)
+}
 
 // ---------------------------------------------------------------------
 // Reference implementations: the pre-refactor loops, kept verbatim.
@@ -96,7 +121,8 @@ fn reference_sparse_f32(
                 continue;
             }
             score_block(q, k, q0, q1, k0, k1, scale, cfg.causal, &mut sbuf);
-            tile.ingest(&sbuf[..(q1 - q0) * (k1 - k0)], k1 - k0, &v.data()[k0 * dv..k1 * dv], lambda, cfg.cw, &mut stats);
+            let vb = &v.data()[k0 * dv..k1 * dv];
+            tile.ingest(&sbuf[..(q1 - q0) * (k1 - k0)], k1 - k0, vb, lambda, cfg.cw, &mut stats);
         }
         out.data_mut()[q0 * dv..q1 * dv].copy_from_slice(&tile.finalize());
     }
@@ -224,7 +250,7 @@ fn dense_flash_parity() {
         let q = Tensor::randn(&[nq, d], rng);
         let k = Tensor::randn(&[nk, d], rng);
         let v = Tensor::randn(&[nk, d], rng);
-        let got = attention_flash_stats(&q, &k, &v, &cfg);
+        let got = engine_dense(&q, &k, &v, &cfg);
         let want = reference_flash_stats(&q, &k, &v, &cfg);
         check_identical("dense-flash", &got, &want)
     });
@@ -242,7 +268,7 @@ fn sparge_f32_parity() {
         let mask = random_mask(rng, cfg.n_qblocks(n), cfg.n_kblocks(n), 0.6);
         let lambda = if rng.chance(0.5) { Some(-(rng.f32() * 10.0) - 0.5) } else { None };
         let params = SpargeParams { tau: 1.0, theta: -1.0, lambda, quant: false };
-        let got = sparse_flash(&q, &k, &v, &mask, &cfg, &params);
+        let got = engine_masked(&q, &k, &v, &mask, &cfg, &params, Execution::Inline);
         let want = reference_sparse_f32(&q, &k, &v, &mask, &cfg, lambda);
         check_identical("sparge-f32", &got, &want)
     });
@@ -260,7 +286,7 @@ fn sparge_quant_parity() {
         let mask = random_mask(rng, cfg.n_qblocks(n), cfg.n_kblocks(n), 0.6);
         let lambda = if rng.chance(0.5) { Some(-(rng.f32() * 10.0) - 0.5) } else { None };
         let params = SpargeParams { tau: 1.0, theta: -1.0, lambda, quant: true };
-        let got = sparse_flash(&q, &k, &v, &mask, &cfg, &params);
+        let got = engine_masked(&q, &k, &v, &mask, &cfg, &params, Execution::Inline);
         let want = reference_sparse_quant(&q, &k, &v, &mask, &cfg, lambda);
         check_identical("sparge-quant", &got, &want)
     });
@@ -282,7 +308,7 @@ fn baseline_mask_parity() {
         ];
         let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false };
         for (mi, mask) in masks.iter().enumerate() {
-            let got = sparse_flash(&q, &k, &v, mask, &cfg, &params);
+            let got = engine_masked(&q, &k, &v, mask, &cfg, &params, Execution::Inline);
             let want = reference_sparse_f32(&q, &k, &v, mask, &cfg, None);
             check_identical(&format!("baseline-{mi}"), &got, &want)?;
         }
@@ -306,24 +332,29 @@ fn row_parallel_bitwise_determinism_all_backends() {
         let mask = random_mask(rng, cfg.n_qblocks(n), cfg.n_kblocks(n), 0.6);
         let threads = [2, 3, 8][rng.range(0, 3)];
 
-        // dense flash
-        let (o1, s1) = attention_flash_stats_threads(&q, &k, &v, &cfg, 1);
-        let (ot, st) = attention_flash_stats_threads(&q, &k, &v, &cfg, threads);
-        if o1 != ot || s1 != st {
-            return Err(format!("dense flash diverges at threads={threads}"));
+        // dense flash: inline vs scoped threads vs persistent pool
+        let (o1, s1) = engine_dense(&q, &k, &v, &cfg);
+        for exec in [Execution::Threads(threads), Execution::Pool(threads)] {
+            let engine = AttnEngine::builder().config(cfg).execution(exec).build();
+            let r = engine.attention(&q, &k, &v);
+            if o1 != r.out || s1 != r.stats {
+                return Err(format!("dense flash diverges at {exec:?}"));
+            }
         }
 
         // sparge f32 + quant, with and without λ
         for quant in [false, true] {
             for lambda in [None, Some(-4.0f32)] {
                 let params = SpargeParams { tau: 1.0, theta: -1.0, lambda, quant };
-                let (o1, s1) = sparse_flash_threads(&q, &k, &v, &mask, &cfg, &params, 1);
-                let (ot, st) = sparse_flash_threads(&q, &k, &v, &mask, &cfg, &params, threads);
-                if o1 != ot {
-                    return Err(format!("quant={quant} λ={lambda:?} output diverges at threads={threads}"));
-                }
-                if s1 != st {
-                    return Err(format!("quant={quant} λ={lambda:?} stats diverge at threads={threads}"));
+                let (o1, s1) = engine_masked(&q, &k, &v, &mask, &cfg, &params, Execution::Inline);
+                for exec in [Execution::Threads(threads), Execution::Pool(threads)] {
+                    let (ot, st) = engine_masked(&q, &k, &v, &mask, &cfg, &params, exec);
+                    if o1 != ot {
+                        return Err(format!("quant={quant} λ={lambda:?} output diverges at {exec:?}"));
+                    }
+                    if s1 != st {
+                        return Err(format!("quant={quant} λ={lambda:?} stats diverge at {exec:?}"));
+                    }
                 }
             }
         }

@@ -1,0 +1,213 @@
+//! Golden suite for the stateful serving path: `AttnSession` decode must
+//! reproduce full-sequence prefill **bitwise** (f32, λ off — see the
+//! parity contract in `attention::engine`), the stage-1 predictor must
+//! stay incremental across decode steps (update counters, never a full
+//! `compress_blocks` recompute), sessions must be deterministic and
+//! reusable, and results must be invariant to the engine's worker-pool
+//! size.
+
+use sparge::attention::types::{AttnConfig, BlockMask};
+use sparge::attention::{AttnEngine, Execution, SparsityPolicy};
+use sparge::sparge::kernel::SpargeParams;
+use sparge::tensor::Tensor;
+use sparge::util::rng::Pcg;
+
+fn qkv(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+    let mut rng = Pcg::seeded(seed);
+    (Tensor::randn(&[n, d], &mut rng), Tensor::randn(&[n, d], &mut rng), Tensor::randn(&[n, d], &mut rng))
+}
+
+/// Prefill the first `n0` rows, decode the rest token by token, and
+/// assemble the full (n × d) output.
+fn run_split(engine: &AttnEngine, q: &Tensor, k: &Tensor, v: &Tensor, n0: usize) -> Tensor {
+    let n = q.dim(0);
+    let mut session = engine.session();
+    let mut data = Vec::with_capacity(n * v.dim(1));
+    if n0 > 0 {
+        let pre = session.prefill(&q.rows(0, n0), &k.rows(0, n0), &v.rows(0, n0));
+        data.extend_from_slice(pre.out.data());
+    }
+    for t in n0..n {
+        let r = session.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1));
+        assert_eq!(r.out.shape(), &[1, v.dim(1)]);
+        data.extend_from_slice(r.out.data());
+    }
+    assert_eq!(session.len(), n);
+    assert_eq!(session.steps(), n - n0);
+    Tensor::from_vec(&[n, v.dim(1)], data)
+}
+
+#[test]
+fn decode_matches_prefill_bitwise_dense() {
+    // ragged everywhere on purpose: n not a multiple of bq or bk, and the
+    // prefill/decode split lands mid-block
+    for (n, n0, bq, bk) in [(57, 25, 16, 8), (64, 32, 16, 16), (41, 0, 8, 4), (33, 32, 32, 32)] {
+        let (q, k, v) = qkv(n, 16, 1000 + n as u64);
+        let cfg = AttnConfig { bq, bk, causal: true, scale: None, cw: 2 };
+        let engine = AttnEngine::dense(cfg);
+        let full = engine.attention(&q, &k, &v);
+        let split = run_split(&engine, &q, &k, &v, n0);
+        assert_eq!(split, full.out, "decode path diverged (n={n} n0={n0} bq={bq} bk={bk})");
+    }
+}
+
+#[test]
+fn decode_matches_prefill_bitwise_external_mask() {
+    // real stage-1 skipping during decode, still bitwise-equal to prefill
+    let (n, n0, d) = (96, 40, 16);
+    let (q, k, v) = qkv(n, d, 42);
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2 };
+    let mut rng = Pcg::seeded(43);
+    let (tm, tn) = (cfg.n_qblocks(n), cfg.n_kblocks(n));
+    let mut mask = BlockMask::new_all(tm, tn, false);
+    for i in 0..tm {
+        mask.set(i, 0, true); // causal rows always keep block 0
+        for j in 0..tn {
+            if rng.chance(0.5) {
+                mask.set(i, j, true);
+            }
+        }
+    }
+    let engine = AttnEngine::builder()
+        .config(cfg)
+        .policy(SparsityPolicy::External { mask: mask.clone(), lambda: None })
+        .build();
+    let full = engine.attention(&q, &k, &v);
+    assert!(full.stats.sparsity() > 0.0, "mask produced no skips; test is vacuous");
+    let split = run_split(&engine, &q, &k, &v, n0);
+    assert_eq!(split, full.out, "masked decode path diverged");
+}
+
+#[test]
+fn decode_predictor_is_incremental_with_counters() {
+    // The acceptance invariant: decoding N tokens performs N incremental
+    // predictor updates and zero additional full recomputes (the prefill
+    // bulk build is the only full scan in the session's lifetime).
+    let (n, n0, d) = (80, 48, 16);
+    let (q, k, v) = qkv(n, d, 7);
+    let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2 };
+    let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false };
+    let engine = AttnEngine::sparge(cfg, &params);
+    let mut session = engine.session();
+    session.prefill(&q.rows(0, n0), &k.rows(0, n0), &v.rows(0, n0));
+    let after_prefill = session.predictor_counters();
+    assert_eq!(after_prefill.full_recomputes, 1, "prefill is exactly one bulk scan");
+    assert_eq!(after_prefill.incremental_updates, 0);
+    for t in n0..n {
+        let r = session.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1));
+        let mask = r.mask.expect("predicted policy emits a per-step mask");
+        assert_eq!(mask.rows, 1);
+        assert_eq!(mask.cols, cfg.n_kblocks(t + 1));
+        assert!((0.0..=1.0).contains(&r.stats.sparsity()));
+        let c = session.predictor_counters();
+        assert_eq!(c.full_recomputes, 1, "decode step {t} re-ran a full compress_blocks scan");
+        assert_eq!(c.incremental_updates, t + 1 - n0, "decode step {t} missed an incremental update");
+    }
+}
+
+#[test]
+fn decode_parity_holds_while_predictor_stays_incremental() {
+    // Both halves of the acceptance criterion in one run: bitwise decode ==
+    // prefill AND per-token incremental predictor updates, on a *Predicted*
+    // policy. θ > 1 makes every block a fix block, so the predicted mask is
+    // deterministically full in both prefill and decode (no TopCdf float
+    // tie-breaks) while the stage-1 predictor still pools every row.
+    let (n, n0, d) = (72, 40, 16);
+    let (q, k, v) = qkv(n, d, 91);
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2 };
+    let params = SpargeParams { tau: 0.9, theta: 1.5, lambda: None, quant: false };
+    let engine = AttnEngine::sparge(cfg, &params);
+    let full = engine.attention(&q, &k, &v);
+    let full_mask = full.mask.as_ref().expect("predicted mask");
+    assert_eq!(full_mask.count_active(), {
+        // every causal-domain block is forced on by the θ>1 fix rule
+        let (tm, tn) = (cfg.n_qblocks(n), cfg.n_kblocks(n));
+        (0..tm).map(|i| tn.min(((i + 1) * cfg.bq).min(n).div_ceil(cfg.bk))).sum::<usize>()
+    });
+    let mut session = engine.session();
+    let pre = session.prefill(&q.rows(0, n0), &k.rows(0, n0), &v.rows(0, n0));
+    assert_eq!(pre.out.data(), &full.out.data()[..n0 * d]);
+    assert_eq!(session.predictor_counters().full_recomputes, 1);
+    for t in n0..n {
+        let r = session.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1));
+        assert_eq!(r.out.data(), &full.out.data()[t * d..(t + 1) * d], "row {t} diverged");
+        assert_eq!(r.mask.expect("step mask").count_active(), cfg.n_kblocks(t + 1));
+        let c = session.predictor_counters();
+        assert_eq!((c.full_recomputes, c.incremental_updates), (1, t + 1 - n0));
+    }
+}
+
+#[test]
+fn session_reuse_is_deterministic() {
+    // same engine, two sessions in sequence, identical inputs => identical
+    // outputs; plus two sessions concurrently from two threads
+    let (n, n0, d) = (48, 24, 8);
+    let (q, k, v) = qkv(n, d, 11);
+    let cfg = AttnConfig { bq: 8, bk: 8, causal: true, scale: None, cw: 2 };
+    let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: Some(-6.0), quant: false };
+    let engine = AttnEngine::sparge(cfg, &params);
+    let a = run_split(&engine, &q, &k, &v, n0);
+    let b = run_split(&engine, &q, &k, &v, n0);
+    assert_eq!(a, b, "sequential session reuse diverged");
+    let outs: Vec<Tensor> = std::thread::scope(|scope| {
+        let handles: Vec<_> =
+            (0..2).map(|_| scope.spawn(|| run_split(&engine, &q, &k, &v, n0))).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for o in outs {
+        assert_eq!(o, a, "concurrent session diverged");
+    }
+}
+
+#[test]
+fn pool_size_invariance_across_1_2_8_workers() {
+    let (n, n0, d) = (96, 64, 16);
+    let (q, k, v) = qkv(n, d, 12);
+    let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2 };
+    let reference = {
+        let engine = AttnEngine::dense(cfg);
+        run_split(&engine, &q, &k, &v, n0)
+    };
+    for exec in [Execution::Pool(1), Execution::Pool(2), Execution::Pool(8), Execution::Threads(4)] {
+        let engine = AttnEngine::builder().config(cfg).execution(exec).build();
+        let split = run_split(&engine, &q, &k, &v, n0);
+        assert_eq!(split, reference, "{exec:?} diverged from inline");
+    }
+}
+
+#[test]
+fn decode_lambda_skips_count_whole_blocks() {
+    // fractional tile accounting: a 1-row decode tile has one row group
+    // covering the whole block, so λ skips must land in whole-block units
+    // (the old per-c_w accounting would count 1/c_w here).
+    let (n, n0, d) = (128, 64, 16);
+    let (mut q, mut k, v) = qkv(n, d, 13);
+    // spiky keys early in the sequence so later rows concentrate there and
+    // λ fires on the rest
+    for r in 0..8 {
+        for x in k.row_mut(r) {
+            *x *= 10.0;
+        }
+    }
+    for r in 0..n {
+        for x in q.row_mut(r) {
+            *x *= 2.0;
+        }
+    }
+    let mask = BlockMask::new_all(8, 8, true);
+    let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 4 };
+    let engine = AttnEngine::builder()
+        .config(cfg)
+        .policy(SparsityPolicy::External { mask, lambda: Some(-4.0) })
+        .build();
+    let mut session = engine.session();
+    session.prefill(&q.rows(0, n0), &k.rows(0, n0), &v.rows(0, n0));
+    let mut any_skip = false;
+    for t in n0..n {
+        let r = session.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1));
+        let frac = r.stats.pv_skipped_frac;
+        assert_eq!(frac.fract(), 0.0, "decode λ skip not whole-block at t={t}: {frac}");
+        any_skip |= frac > 0.0;
+    }
+    assert!(any_skip, "λ never fired; accounting test is vacuous");
+}
