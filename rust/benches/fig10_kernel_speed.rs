@@ -46,7 +46,7 @@ fn main() {
     let threads = bench_threads();
     println!("Fig. 10 — kernel speed vs sparsity (seq {label}, head dim 128, reps {reps}, threads {threads})\n");
 
-    let cfg = AttnConfig { bq: 128, bk: 64, causal: false, scale: None, cw: 4 };
+    let cfg = AttnConfig { bq: 128, bk: 64, causal: false, scale: None, cw: 4, row_offset: 0 };
     let mut rng = Pcg::seeded(1010);
     let s = video::generate_grid(&spec, &mut rng);
     let (nq, nk, d) = (s.q.dim(0), s.k.dim(0), s.q.dim(1));

@@ -48,7 +48,7 @@ fn noisy_sample(spec: &VideoSpec, t: f32, seed: u64) -> sparge::workloads::QkvSa
 
 fn main() {
     println!("Fig. 14-17 — sparsity analysis over the CogvideoX-proxy\n");
-    let cfg = AttnConfig { bq: 128, bk: 64, causal: false, scale: None, cw: 4 };
+    let cfg = AttnConfig { bq: 128, bk: 64, causal: false, scale: None, cw: 4, row_offset: 0 };
     let params = SpargeParams { tau: 0.95, theta: 0.35, lambda: Some(-8.0), quant: false };
 
     // Fig. 14: layer-wise

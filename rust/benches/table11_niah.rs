@@ -97,7 +97,7 @@ fn part2_attention_level() {
     // of the attention output restricted to rows that attend to the needle
     let n = 16_384;
     let d = 64;
-    let cfg = AttnConfig { bq: 128, bk: 64, causal: true, scale: None, cw: 4 };
+    let cfg = AttnConfig { bq: 128, bk: 64, causal: true, scale: None, cw: 4, row_offset: 0 };
     let mut rng = Pcg::seeded(2222);
     let mut s = synthetic::generate(&SyntheticSpec::lm_like(n, d), &mut rng);
     // implant the needle: 32 keys at 40% depth with a distinctive direction

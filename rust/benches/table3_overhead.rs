@@ -26,7 +26,7 @@ fn main() {
     let reps = bench_reps();
     println!("Table 3 — prediction overhead vs full attention (reps {reps})\n");
 
-    let cfg = AttnConfig { bq: 128, bk: 64, causal: false, scale: None, cw: 4 };
+    let cfg = AttnConfig { bq: 128, bk: 64, causal: false, scale: None, cw: 4, row_offset: 0 };
     let params = PredictParams { tau: 0.95, theta: 0.4 };
     let mut table = Table::new(
         "overhead of sparse block prediction (paper Table 3 shape)",

@@ -8,7 +8,10 @@ use super::types::AttnConfig;
 /// Full-matrix attention: O = softmax(QKᵀ·scale [+causal mask]) V.
 ///
 /// Q, K, V are (N, d) single-head tensors. Materializes the N×N score
-/// matrix, so only suitable as a reference for moderate N.
+/// matrix, so only suitable as a reference for moderate N. Causal masking
+/// honors the offset-aware contract: query row `i` sits at absolute
+/// position `cfg.row_offset + i` and sees key rows `0..=row_offset + i`
+/// (whole-sequence callers use offset 0 and need square scores).
 pub fn attention_naive(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -> Tensor {
     assert_eq!(q.ndim(), 2);
     assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
@@ -20,9 +23,9 @@ pub fn attention_naive(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -> 
     let mut s = matmul::matmul_nt(q, k);
     s.scale(scale);
     if cfg.causal {
-        assert_eq!(n, nk, "causal attention needs square scores");
+        assert_eq!(cfg.row_offset + n, nk, "causal attention needs offset + q rows == k rows");
         for i in 0..n {
-            for j in (i + 1)..nk {
+            for j in (cfg.row_offset + i + 1)..nk {
                 *s.at2_mut(i, j) = f32::NEG_INFINITY;
             }
         }
@@ -75,6 +78,18 @@ mod tests {
         let v = Tensor::randn(&[n, d], &mut rng);
         let o = attention_naive(&q, &k, &v, &AttnConfig::causal());
         assert_allclose(o.row(0), v.row(0), 1e-5, 1e-5, "causal row0").unwrap();
+    }
+
+    #[test]
+    fn causal_offset_rows_match_full_run() {
+        let mut rng = Pcg::seeded(4);
+        let (n, d, c0) = (24, 8, 10);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let full = attention_naive(&q, &k, &v, &AttnConfig::causal());
+        let chunk = attention_naive(&q.rows(c0, n), &k, &v, &AttnConfig::causal().at_offset(c0));
+        assert_eq!(chunk.data(), &full.data()[c0 * d..], "offset oracle diverged");
     }
 
     #[test]

@@ -18,24 +18,51 @@
 //! [`AttnEngine::session`] opens per-sequence state for the serving path:
 //! a growing KV cache, incrementally maintained stage-1 pooling under the
 //! `Predicted` policy ([`KPool`]: block means + self-similarities, updated
-//! per appended row — never a full `compress_blocks` recompute), and
-//! cached per-block K quantization (quantized once, only the tail block
-//! requantized per decoded token).
-//! [`AttnSession::decode`] runs a decode-shaped (one query row) step
-//! through the *same* [`run_tiled`] driver as prefill.
+//! per appended row or chunk — never a full `compress_blocks` recompute),
+//! and cached per-block K quantization (quantized once, only the tail
+//! block requantized per decoded token). The session lifecycle is the
+//! serving loop's unit of work:
 //!
-//! ## Decode/prefill parity
+//! ```text
+//! engine.session() ── prefill_chunk(q,k,v) ··· prefill_chunk ──► decode ─┐
+//!      (open)           (bounded chunks, offset-aware causal)    ▲       │ per token
+//!                                                                └───────┘
+//! ```
 //!
-//! For f32 precision with `lambda: None`, N tokens fed through
-//! [`AttnSession::decode`] produce bit-identical rows to one causal
-//! [`AttnSession::prefill`] of the full sequence (dense or external-mask
-//! policy; golden-tested in `tests/session_decode.rs`): every per-row
-//! quantity in the tiled pipeline is independent of its tile-mates, and
-//! the cache's block boundaries coincide with prefill's. Stage-2 λ makes
-//! group skip decisions across tile rows, and the predicted policy pools
-//! the query side at `b_q` granularity, so those compositions trade exact
-//! parity for sparsity — as on GPU, where decode kernels run their own
-//! tiling.
+//! [`AttnSession::prefill_chunk`] appends one prompt chunk to the cache
+//! and runs its query rows against the *whole* cache with
+//! `row_offset = rows already cached` (the offset-aware causal contract
+//! in [`crate::attention::pipeline`]), so a long prompt can be fed in
+//! bounded slices between decode ticks of other sessions.
+//! [`AttnSession::prefill`] is the one-shot convenience (a single chunk
+//! from empty); [`AttnSession::decode`] runs a decode-shaped (one query
+//! row) step. All of them run through the *same* [`run_tiled`] driver.
+//!
+//! ## Chunked-prefill / decode / prefill parity
+//!
+//! For f32 precision with `lambda: None` (dense or external-mask policy;
+//! golden-tested in `tests/session_decode.rs`):
+//!
+//! - N tokens fed through [`AttnSession::decode`] produce bit-identical
+//!   rows to one causal [`AttnSession::prefill`] of the full sequence;
+//! - a multi-chunk prefill produces bit-identical rows to the one-shot
+//!   [`AttnSession::prefill`], for *any* chunk edges: every per-row
+//!   quantity in the tiled pipeline is independent of its tile-mates,
+//!   each query row sees the same visible key set either way, and
+//!   fully-masked tail entries of ragged cache blocks are exact float
+//!   no-ops. When chunk edges are multiples of `b_q` the chunk tiling
+//!   coincides with the one-shot tiling, so the summed [`SkipStats`]
+//!   match exactly too (and stage-2 λ group decisions, being per-tile,
+//!   also coincide — λ-on parity needs aligned edges).
+//!
+//! The predicted policy pools the query side at `b_q` granularity and
+//! pools K over the rows cached *so far*, so its chunked mask matches the
+//! one-shot mask exactly when chunk edges are multiples of both `b_q`
+//! and `b_k`; Int8 additionally freezes the K-smoothing mean at the first
+//! chunk (one-shot parity holds for a single chunk, multi-chunk stays
+//! within the INT8 error budget). As on GPU, those compositions trade
+//! exact parity for sparsity/precision — decode kernels run their own
+//! tiling there too.
 
 use crate::sparge::kernel::{quant_score_block, QuantScoreKernel, SpargeParams};
 use crate::sparge::predict::{compress_blocks, predict_decode_row, predict_pooled, KPool, PredictParams};
@@ -232,6 +259,8 @@ impl AttnEngine {
     /// Open a stateful per-sequence session (KV cache, incremental
     /// predictor pooling, cached K quantization) over this engine.
     pub fn session(&self) -> AttnSession<'_> {
+        // chunked prefill sets the offset per call from the cache length
+        assert_eq!(self.cfg.row_offset, 0, "sessions manage row_offset; build the engine with offset 0");
         AttnSession {
             engine: self,
             d: 0,
@@ -280,10 +309,14 @@ fn _engine_is_send_sync() {
 /// [`KPool`]); exposed so callers can assert the update discipline.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PredictorCounters {
-    /// Full scans over the whole K cache (the prefill bulk build).
+    /// Full scans over the whole K cache (the prefill bulk build — the
+    /// first chunk of a chunked prefill counts here too).
     pub full_recomputes: usize,
     /// Per-row incremental updates (decode appends).
     pub incremental_updates: usize,
+    /// Blockwise multi-row extensions (prefill chunks after the first);
+    /// each scans only the new rows plus the boundary block.
+    pub chunk_extends: usize,
 }
 
 /// Mutable per-sequence state over a shared [`AttnEngine`]: a growing KV
@@ -334,79 +367,145 @@ impl AttnSession<'_> {
             Some(p) => PredictorCounters {
                 full_recomputes: p.full_recomputes,
                 incremental_updates: p.incremental_updates,
+                chunk_extends: p.chunk_extends,
             },
             None => PredictorCounters::default(),
         }
     }
 
-    /// Prefill an empty session: cache `k`/`v`, bulk-build the predictor
-    /// pooling state (one scan; decode steps after this are incremental),
-    /// and run the one-shot attention of `q` against the cache — the
-    /// result is bitwise-identical to `engine.attention(q, k, v)`.
+    /// Prefill an empty session in one shot — a single
+    /// [`AttnSession::prefill_chunk`] from empty; the result is
+    /// bitwise-identical to `engine.attention(q, k, v)`.
     pub fn prefill(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> AttnOutput {
-        assert_eq!(self.rows, 0, "prefill on a non-empty session; use decode() to extend it");
-        assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
-        assert_eq!(k.dim(0), v.dim(0), "k/v rows");
-        self.d = k.dim(1);
-        self.dv = v.dim(1);
-        self.k_data.extend_from_slice(k.data());
-        self.v_data.extend_from_slice(v.data());
-        self.rows = k.dim(0);
-        if matches!(self.engine.policy, SparsityPolicy::Predicted { .. }) {
-            let mut pool = KPool::new(self.engine.cfg.bk, self.d);
-            pool.build(k);
-            self.kpool = Some(pool);
-        }
-        if self.engine.precision == Precision::Int8 {
-            let mean = quant::channel_mean(k);
-            let ksm = quant::smooth(k, &mean);
-            self.kq = quant::quantize_blocks(&ksm, self.engine.cfg.bk);
-            self.kmean = Some(mean);
-        }
-        match &self.engine.policy {
-            SparsityPolicy::Dense => {
-                let (out, stats) = self.run_full(q, k, v, &DenseFilter);
-                AttnOutput { out, stats, mask: None }
-            }
-            SparsityPolicy::Predicted { params, lambda } => {
-                // reuse the pooled K side; bitwise-identical to predict()
-                let pool = self.kpool.as_ref().unwrap();
-                let pred = predict_pooled(q, &pool.means(), pool.sims(), &self.engine.cfg, params);
-                let (out, stats) = {
-                    let filter = MaskFilter::new(&pred.mask, *lambda);
-                    self.run_full(q, k, v, &filter)
-                };
-                AttnOutput { out, stats, mask: Some(pred.mask) }
-            }
-            SparsityPolicy::External { mask, lambda } => {
-                // a decode-ready mask may already cover positions past the
-                // prefill; require coverage, not exact geometry
-                assert!(mask.rows >= self.engine.cfg.n_qblocks(q.dim(0)), "external mask rows");
-                assert!(mask.cols >= self.engine.cfg.n_kblocks(k.dim(0)), "external mask cols");
-                let filter = MaskFilter::new(mask, *lambda);
-                let (out, stats) = self.run_full(q, k, v, &filter);
-                AttnOutput { out, stats, mask: None }
-            }
-        }
+        assert_eq!(self.rows, 0, "prefill on a non-empty session; use prefill_chunk()/decode()");
+        self.prefill_chunk(q, k, v)
     }
 
-    /// Prefill-shaped run over the freshly cached K/V. Same composition as
-    /// `engine.attention` — but the INT8 path reuses the session's cached
-    /// K quantization instead of re-smoothing and re-quantizing K (the
-    /// per-block payloads are identical: blocks are quantized
-    /// independently and the smoothing mean is global either way).
-    fn run_full(
+    /// Append one prompt chunk (`m` rows of q/k/v) to the session and run
+    /// the chunk's query rows against the **whole** cache, offset-aware:
+    /// query row `i` of the chunk sits at absolute position
+    /// `cached rows + i`, so causal masking and the causal-domain block
+    /// bound keep referring to absolute positions (see the `row_offset`
+    /// contract in [`crate::attention::pipeline`]). The predictor pooling
+    /// is extended blockwise over just the new rows ([`KPool::extend`])
+    /// and, under INT8, only the boundary block is requantized and fresh
+    /// blocks quantized — earlier cached state is reused untouched.
+    ///
+    /// Parity: for f32/λ-off (dense or external mask), any sequence of
+    /// chunks is bitwise-identical row-for-row to the one-shot
+    /// [`AttnSession::prefill`]; chunk edges on `b_q` boundaries
+    /// additionally reproduce its summed [`SkipStats`] (and λ-on / the
+    /// predicted policy — see the parity notes in the module docs).
+    /// Chunks after the first require a causal engine: later positions
+    /// are not cached yet, so a non-causal chunk could not see them.
+    pub fn prefill_chunk(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> AttnOutput {
+        assert_eq!(q.dim(0), k.dim(0), "prefill chunk q/k rows");
+        assert_eq!(k.dim(0), v.dim(0), "k/v rows");
+        assert!(k.dim(0) > 0, "empty prefill chunk");
+        let row0 = self.rows;
+        assert!(
+            row0 == 0 || self.engine.cfg.causal,
+            "multi-chunk prefill needs a causal engine (later rows are not cached yet)"
+        );
+        if row0 == 0 {
+            self.d = k.dim(1);
+            self.dv = v.dim(1);
+            if matches!(self.engine.policy, SparsityPolicy::Predicted { .. }) {
+                self.kpool = Some(KPool::new(self.engine.cfg.bk, self.d));
+            }
+            if self.engine.precision == Precision::Int8 {
+                // freeze the smoothing mean on the first chunk: every
+                // cached block must share one shift for softmax's
+                // shift-invariance to hold across the growing cache (a
+                // single chunk reproduces the one-shot global mean exactly)
+                self.kmean = Some(quant::channel_mean(k));
+            }
+        }
+        assert_eq!(q.dim(1), self.d, "q head dim");
+        assert_eq!(k.dim(1), self.d, "k head dim");
+        assert_eq!(v.dim(1), self.dv, "v dim");
+
+        self.k_data.extend_from_slice(k.data());
+        self.v_data.extend_from_slice(v.data());
+        self.rows += k.dim(0);
+        if let Some(pool) = self.kpool.as_mut() {
+            pool.extend(row0, &self.k_data);
+        }
+        if self.engine.precision == Precision::Int8 {
+            self.requantize_from(row0);
+        }
+
+        let cfg = self.engine.cfg.at_offset(row0);
+        let kt = Tensor::from_vec(&[self.rows, self.d], std::mem::take(&mut self.k_data));
+        let vt = Tensor::from_vec(&[self.rows, self.dv], std::mem::take(&mut self.v_data));
+        let (out, stats, mask) = match &self.engine.policy {
+            SparsityPolicy::Dense => {
+                let (o, s) = self.run_cache(q, &kt, &vt, &cfg, &DenseFilter);
+                (o, s, None)
+            }
+            SparsityPolicy::Predicted { params, lambda } => {
+                // reuse the incrementally-pooled K side; for a one-shot
+                // prefill this is bitwise-identical to predict()
+                let pool = self.kpool.as_ref().unwrap();
+                let pred = predict_pooled(q, &pool.means(), pool.sims(), &cfg, params);
+                let (o, s) = {
+                    let filter = MaskFilter::new(&pred.mask, *lambda);
+                    self.run_cache(q, &kt, &vt, &cfg, &filter)
+                };
+                (o, s, Some(pred.mask))
+            }
+            SparsityPolicy::External { mask, lambda } => {
+                // the external mask is indexed by *global* block rows, so
+                // a chunk must start on a query-block boundary to map
+                // onto it; a decode-ready mask may already cover positions
+                // past the chunk — require coverage, not exact geometry
+                assert_eq!(
+                    row0 % cfg.bq,
+                    0,
+                    "chunked prefill under an external mask must start at a b_q boundary"
+                );
+                let row0_blocks = row0 / cfg.bq;
+                assert!(
+                    mask.rows >= row0_blocks + cfg.n_qblocks(q.dim(0)),
+                    "external mask has {} block rows; chunk needs {}",
+                    mask.rows,
+                    row0_blocks + cfg.n_qblocks(q.dim(0))
+                );
+                assert!(
+                    mask.cols >= cfg.n_kblocks(self.rows),
+                    "external mask has {} block cols; cache needs {}",
+                    mask.cols,
+                    cfg.n_kblocks(self.rows)
+                );
+                let filter = OffsetMaskFilter { mask, row0: row0_blocks, lambda: *lambda };
+                let (o, s) = self.run_cache(q, &kt, &vt, &cfg, &filter);
+                (o, s, None)
+            }
+        };
+        self.k_data = kt.into_vec();
+        self.v_data = vt.into_vec();
+        AttnOutput { out, stats, mask }
+    }
+
+    /// Run `q` against the cached K/V under `cfg` (which carries the
+    /// chunk's `row_offset` and, for decode steps, `causal: false`). One
+    /// code path serves one-shot prefill, prefill chunks, and decode
+    /// steps; the INT8 side reuses the session's cached K quantization
+    /// instead of re-smoothing and re-quantizing (the per-block payloads
+    /// are identical: blocks are quantized independently and the
+    /// smoothing mean is shared either way).
+    fn run_cache(
         &self,
         q: &Tensor,
-        k: &Tensor,
-        v: &Tensor,
+        kt: &Tensor,
+        vt: &Tensor,
+        cfg: &AttnConfig,
         filter: &impl BlockFilter,
     ) -> (Tensor, SkipStats) {
-        let cfg = &self.engine.cfg;
         match self.engine.precision {
             Precision::F32 => {
-                let kernel = F32Kernel::new(q, k, cfg);
-                run_tiled(q, k, v, cfg, &kernel, filter, self.engine.exec())
+                let kernel = F32Kernel::new(q, kt, cfg);
+                run_tiled(q, kt, vt, cfg, &kernel, filter, self.engine.exec())
             }
             Precision::Int8 => {
                 let kernel = QuantCacheKernel {
@@ -414,10 +513,11 @@ impl AttnSession<'_> {
                     kb: &self.kq,
                     scale: cfg.scale_for(q.dim(1)),
                     causal: cfg.causal,
+                    row_offset: cfg.row_offset,
                     bq: cfg.bq,
                     bk: cfg.bk,
                 };
-                run_tiled(q, k, v, cfg, &kernel, filter, self.engine.exec())
+                run_tiled(q, kt, vt, cfg, &kernel, filter, self.engine.exec())
             }
         }
     }
@@ -457,7 +557,7 @@ impl AttnSession<'_> {
             pool.append_row(k.row(0), tail);
         }
         if self.engine.precision == Precision::Int8 {
-            self.requantize_tail(tail_start);
+            self.requantize_from(self.rows - 1);
         }
 
         // the decode step sees exactly the visible prefix, so it runs
@@ -468,7 +568,7 @@ impl AttnSession<'_> {
         let vt = Tensor::from_vec(&[self.rows, self.dv], std::mem::take(&mut self.v_data));
         let (out, stats, mask) = match &self.engine.policy {
             SparsityPolicy::Dense => {
-                let (o, s) = self.run_step(q, &kt, &vt, &step_cfg, &DenseFilter);
+                let (o, s) = self.run_cache(q, &kt, &vt, &step_cfg, &DenseFilter);
                 (o, s, None)
             }
             SparsityPolicy::Predicted { params, lambda } => {
@@ -476,7 +576,7 @@ impl AttnSession<'_> {
                 let mrow = predict_decode_row(q.row(0), &pool.means(), pool.sims(), scale, params);
                 let (o, s) = {
                     let filter = MaskFilter::new(&mrow, *lambda);
-                    self.run_step(q, &kt, &vt, &step_cfg, &filter)
+                    self.run_cache(q, &kt, &vt, &step_cfg, &filter)
                 };
                 (o, s, Some(mrow))
             }
@@ -490,7 +590,7 @@ impl AttnSession<'_> {
                     step_cfg.n_kblocks(self.rows)
                 );
                 let filter = RowMaskFilter { mask, row: bi, lambda: *lambda };
-                let (o, s) = self.run_step(q, &kt, &vt, &step_cfg, &filter);
+                let (o, s) = self.run_cache(q, &kt, &vt, &step_cfg, &filter);
                 (o, s, None)
             }
         };
@@ -500,61 +600,44 @@ impl AttnSession<'_> {
         AttnOutput { out, stats, mask }
     }
 
-    fn run_step(
-        &self,
-        q: &Tensor,
-        kt: &Tensor,
-        vt: &Tensor,
-        step_cfg: &AttnConfig,
-        filter: &impl BlockFilter,
-    ) -> (Tensor, SkipStats) {
-        match self.engine.precision {
-            Precision::F32 => {
-                let kernel = F32Kernel::new(q, kt, step_cfg);
-                run_tiled(q, kt, vt, step_cfg, &kernel, filter, self.engine.exec())
-            }
-            Precision::Int8 => {
-                let kernel = QuantCacheKernel {
-                    qb: vec![QuantBlock::quantize(q.data(), 1, self.d)],
-                    kb: &self.kq,
-                    scale: step_cfg.scale_for(self.d),
-                    causal: false,
-                    bq: self.engine.cfg.bq,
-                    bk: self.engine.cfg.bk,
-                };
-                run_tiled(q, kt, vt, step_cfg, &kernel, filter, self.engine.exec())
-            }
-        }
-    }
-
-    /// Requantize the tail K block (the one the newest row landed in)
-    /// with the frozen smoothing mean; all other cached blocks are reused.
-    fn requantize_tail(&mut self, tail_start: usize) {
+    /// (Re)quantize the K cache from the block containing row
+    /// `rows_before` through the cache end, with the frozen smoothing
+    /// mean: a decode step touches only the tail block, a prefill chunk
+    /// additionally quantizes the fresh blocks it appended; every earlier
+    /// cached block is reused as-is. Blocks are quantized independently,
+    /// so the surviving prefix is bit-identical to a from-scratch
+    /// `quantize_blocks` of the smoothed cache.
+    fn requantize_from(&mut self, rows_before: usize) {
         let mean = self.kmean.as_ref().expect("kmean frozen at first append");
-        let rows = self.rows - tail_start;
-        let mut block = self.k_data[tail_start * self.d..self.rows * self.d].to_vec();
-        for r in 0..rows {
-            for (x, &m) in block[r * self.d..(r + 1) * self.d].iter_mut().zip(mean) {
-                *x -= m;
+        let bk = self.engine.cfg.bk;
+        let first = rows_before / bk;
+        self.kq.truncate(first);
+        let mut r0 = first * bk;
+        while r0 < self.rows {
+            let r1 = (r0 + bk).min(self.rows);
+            let mut block = self.k_data[r0 * self.d..r1 * self.d].to_vec();
+            for row in block.chunks_mut(self.d) {
+                for (x, &m) in row.iter_mut().zip(mean) {
+                    *x -= m;
+                }
             }
-        }
-        let qb = QuantBlock::quantize(&block, rows, self.d);
-        if rows == 1 {
-            self.kq.push(qb); // the new row opened a fresh block
-        } else {
-            *self.kq.last_mut().unwrap() = qb;
+            self.kq.push(QuantBlock::quantize(&block, r1 - r0, self.d));
+            r0 = r1;
         }
     }
 }
 
 /// INT8 kernel over the session's cached K blocks: Q is quantized per call
-/// (all blocks at prefill, one row per decode step); K blocks are borrowed
-/// from the cache so they are quantized exactly once each.
+/// (all blocks of a prefill chunk, one row per decode step); K blocks are
+/// borrowed from the cache so they are quantized exactly once each.
+/// `row_offset` places the chunk's query rows at absolute positions for
+/// causal masking.
 struct QuantCacheKernel<'a> {
     qb: Vec<QuantBlock>,
     kb: &'a [QuantBlock],
     scale: f32,
     causal: bool,
+    row_offset: usize,
     bq: usize,
     bk: usize,
 }
@@ -562,7 +645,27 @@ struct QuantCacheKernel<'a> {
 impl ScoreKernel for QuantCacheKernel<'_> {
     fn score_block(&self, q0: usize, _q1: usize, k0: usize, _k1: usize, out: &mut [f32]) {
         let qblk = &self.qb[q0 / self.bq];
-        quant_score_block(qblk, &self.kb[k0 / self.bk], q0, k0, self.scale, self.causal, out);
+        let kblk = &self.kb[k0 / self.bk];
+        quant_score_block(qblk, kblk, self.row_offset + q0, k0, self.scale, self.causal, out);
+    }
+}
+
+/// Filter for one prefill chunk under an external full-sequence mask:
+/// block-row lookups are shifted by the chunk's starting block row, so
+/// local tile `bi` reads global mask row `row0 + bi`.
+struct OffsetMaskFilter<'a> {
+    mask: &'a BlockMask,
+    row0: usize,
+    lambda: Option<f32>,
+}
+
+impl BlockFilter for OffsetMaskFilter<'_> {
+    fn keep(&self, bi: usize, bj: usize) -> bool {
+        self.mask.get(self.row0 + bi, bj)
+    }
+
+    fn lambda(&self) -> Option<f32> {
+        self.lambda
     }
 }
 
@@ -599,7 +702,7 @@ mod tests {
     #[test]
     fn builder_composes_and_matches_oracle() {
         let (q, k, v) = qkv(48, 8, 71);
-        let cfg = AttnConfig { bq: 16, bk: 8, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 16, bk: 8, causal: false, scale: None, cw: 2, row_offset: 0 };
         let engine = AttnEngine::dense(cfg);
         let r = engine.attention(&q, &k, &v);
         let oracle = attention_naive(&q, &k, &v, &cfg);
@@ -611,7 +714,7 @@ mod tests {
     #[test]
     fn execution_modes_are_bitwise_identical() {
         let (q, k, v) = qkv(96, 16, 72);
-        let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2, row_offset: 0 };
         let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: Some(-6.0), quant: false };
         let base = AttnEngine::sparge(cfg, &params).attention(&q, &k, &v);
         for exec in [Execution::Threads(4), Execution::Pool(2), Execution::Pool(8)] {
@@ -626,7 +729,7 @@ mod tests {
     #[test]
     fn engine_is_reusable_and_shared_across_threads() {
         let (q, k, v) = qkv(64, 8, 73);
-        let cfg = AttnConfig { bq: 16, bk: 16, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: false, scale: None, cw: 2, row_offset: 0 };
         let engine = AttnEngine::builder()
             .config(cfg)
             .sparge(&SpargeParams::default())
@@ -646,7 +749,7 @@ mod tests {
     #[test]
     fn external_policy_checks_geometry() {
         let (q, k, v) = qkv(32, 8, 74);
-        let cfg = AttnConfig { bq: 8, bk: 8, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 8, bk: 8, causal: false, scale: None, cw: 2, row_offset: 0 };
         let mask = BlockMask::new_all(4, 4, true);
         let engine = AttnEngine::builder()
             .config(cfg)
@@ -662,7 +765,7 @@ mod tests {
         // quantization) but must stay within the INT8 budget of the f32
         // dense oracle.
         let (q, k, v) = qkv(72, 16, 75);
-        let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2, row_offset: 0 };
         let engine = AttnEngine::builder().config(cfg).precision(Precision::Int8).build();
         let mut session = engine.session();
         let n0 = 48;

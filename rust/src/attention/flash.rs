@@ -65,6 +65,7 @@ mod tests {
                 causal: false,
                 scale: None,
                 cw: rng.range(1, 5),
+                row_offset: 0,
             };
             let q = Tensor::randn(&[n, d], rng);
             let k = Tensor::randn(&[n, d], rng);
@@ -80,8 +81,14 @@ mod tests {
         Cases::standard(502).check(|rng| {
             let n = rng.range(1, 70);
             let d = 8;
-            let cfg =
-                AttnConfig { bq: rng.range(1, 20), bk: rng.range(1, 20), causal: true, scale: None, cw: 2 };
+            let cfg = AttnConfig {
+                bq: rng.range(1, 20),
+                bk: rng.range(1, 20),
+                causal: true,
+                scale: None,
+                cw: 2,
+                row_offset: 0,
+            };
             let q = Tensor::randn(&[n, d], rng);
             let k = Tensor::randn(&[n, d], rng);
             let v = Tensor::randn(&[n, d], rng);
@@ -111,7 +118,7 @@ mod tests {
         let q = Tensor::randn(&[n, d], &mut rng);
         let k = Tensor::randn(&[n, d], &mut rng);
         let v = Tensor::randn(&[n, d], &mut rng);
-        let cfg = AttnConfig { bq: 16, bk: 16, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: false, scale: None, cw: 2, row_offset: 0 };
         let (_, stats) = dense(&q, &k, &v, &cfg);
         assert_eq!(stats.qk_total, 16);
         assert_eq!(stats.pv_total, 16);
@@ -126,7 +133,7 @@ mod tests {
         let q = Tensor::randn(&[n, d], &mut rng);
         let k = Tensor::randn(&[n, d], &mut rng);
         let v = Tensor::randn(&[n, d], &mut rng);
-        let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2, row_offset: 0 };
         let (_, stats) = dense(&q, &k, &v, &cfg);
         // 4 q-blocks; block row i visits i+1 k-blocks => 1+2+3+4 = 10
         assert_eq!(stats.qk_total, 10);
@@ -140,7 +147,7 @@ mod tests {
         let q = Tensor::randn(&[n, d], &mut rng);
         let k = Tensor::randn(&[n, d], &mut rng);
         let v = Tensor::randn(&[n, d], &mut rng);
-        let cfg = AttnConfig { bq: 32, bk: 16, causal: true, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 32, bk: 16, causal: true, scale: None, cw: 2, row_offset: 0 };
         let (o, s) = dense(&q, &k, &v, &cfg);
         #[allow(deprecated)]
         {

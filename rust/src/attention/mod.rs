@@ -1,12 +1,28 @@
 //! Attention engines, organized around **one** tiled loop and **one**
-//! public composition API.
+//! public composition API — built to be *served from*, not just called.
 //!
 //! [`engine`] is the front door: [`AttnEngine::builder`] composes
 //! precision ([`Precision`]) × sparsity policy ([`SparsityPolicy`]) ×
 //! execution ([`Execution`], including a persistent worker pool) into a
-//! reusable `Send + Sync` engine; [`AttnEngine::session`] adds per-sequence
-//! state (KV cache, incremental stage-1 pooling, cached K quantization)
-//! for prefill + decode serving.
+//! reusable `Send + Sync` engine; [`AttnEngine::session`] adds
+//! per-sequence state (KV cache, incremental stage-1 pooling, cached K
+//! quantization). One engine serves many concurrent sessions — the
+//! coordinator's continuous-batching loop
+//! (`crate::coordinator::session_manager`) holds N live sessions over a
+//! single engine/pool and interleaves their work per tick:
+//!
+//! ```text
+//! admit ──► chunked prefill ──► decode ticks ──► retire
+//!           session.prefill_chunk(..)   session.decode(..)
+//!           bounded, b_q-aligned,       one row per tick,
+//!           offset-aware causal         per-step SkipStats
+//! ```
+//!
+//! Chunked prefill runs each prompt slice against the whole cache with
+//! an absolute-position causal mask (`AttnConfig::row_offset`; contract
+//! in [`pipeline`]), bitwise-faithful to one-shot prefill for f32/λ-off
+//! — so a long prompt never monopolizes the engine, which is what caps
+//! time-to-first-token under mixed traffic.
 //!
 //! [`pipeline`] owns the single q-block × k-block driver ([`run_tiled`])
 //! and the seams every engine composes from: [`ScoreKernel`] (how a score
@@ -31,6 +47,7 @@
 //! | `sparse_flash_threads(..,t)` | as above plus `.execution(Execution::Threads(t))` |
 //! | per-call scoped threads | `.execution(Execution::Pool(n))` — pool spawned once at `build()` |
 //! | KV-cache decode (new) | `engine.session()` → `session.prefill(..)` / `session.decode(..)` |
+//! | chunked prefill (new) | `session.prefill_chunk(..)` per prompt slice — offset-aware causal |
 
 pub mod dense;
 pub mod engine;

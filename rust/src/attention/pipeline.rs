@@ -22,6 +22,25 @@
 //! (accumulation order within a tile never changes) and per-row
 //! [`SkipStats`] are merged in row order.
 //!
+//! ## The `row_offset` causal contract
+//!
+//! Causal masking is computed against **absolute positions**, not tensor
+//! rows: `AttnConfig::row_offset` names the absolute position of query
+//! row 0, so query row `i` sits at position `row_offset + i` while key
+//! rows are always absolute (`k0 + j`). A whole-sequence call uses
+//! `row_offset = 0` (the classic lower triangle); a chunked prefill runs
+//! each chunk's query rows against the *full* K/V cache with
+//! `row_offset = rows already cached`. Both the per-entry mask (inside
+//! every [`ScoreKernel`]) and the causal-domain block bound
+//! ([`BlockFilter::kblock_end`]) honor the offset, so for f32 (λ off)
+//! an offset chunk is bitwise-identical to the same rows of the one-shot
+//! causal run — each query row sees exactly the same visible key set,
+//! and fully-masked tail entries contribute exact float no-ops. When the
+//! chunk boundaries are multiples of `b_q` the query tiles coincide with
+//! the one-shot tiling too, so the summed [`SkipStats`] also match
+//! exactly (off-boundary chunks re-tile the rows and may visit a
+//! different number of masked-out blocks).
+//!
 //! Extension recipe: a new sparse-attention baseline is a new
 //! [`BlockFilter`] impl; a new score path (a different precision, a new
 //! dequant scheme) is a new [`ScoreKernel`] impl. Neither requires touching
@@ -185,7 +204,12 @@ impl FlashTile {
 
 /// Compute a scaled, causal-masked score block S_ij = Q_i K_jᵀ·scale.
 ///
-/// `q0`/`k0` are the global row offsets of the blocks (for causal masking).
+/// `q0`/`k0` are the tensor-row offsets of the blocks; `row_offset` is the
+/// absolute position of query row 0 (the offset-aware causal contract:
+/// query row `q0 + i` sits at position `row_offset + q0 + i`, key row
+/// `k0 + j` at position `k0 + j`, and `S[i][j]` is masked to −∞ when the
+/// key position is past the query position). Whole-sequence callers pass
+/// `row_offset = 0` and recover the classic lower-triangle mask.
 #[allow(clippy::too_many_arguments)]
 pub fn score_block(
     q: &Tensor,
@@ -194,6 +218,7 @@ pub fn score_block(
     q1: usize,
     k0: usize,
     k1: usize,
+    row_offset: usize,
     scale: f32,
     causal: bool,
     out: &mut [f32],
@@ -214,7 +239,7 @@ pub fn score_block(
     }
     if causal {
         for i in 0..bq {
-            let gi = q0 + i;
+            let gi = row_offset + q0 + i;
             for j in 0..bk {
                 if k0 + j > gi {
                     out[i * bk + j] = f32::NEG_INFINITY;
@@ -245,12 +270,13 @@ pub trait BlockFilter: Sync {
     }
 
     /// Exclusive k-block bound for the query rows ending at `q1` — the
-    /// causal-domain edge. Blocks at or past the bound are outside "full
-    /// attention required" and excluded from both the loop and the
+    /// causal-domain edge, computed against *absolute* positions
+    /// (`cfg.row_offset + q1`). Blocks at or past the bound are outside
+    /// "full attention required" and excluded from both the loop and the
     /// [`SkipStats`] totals.
     fn kblock_end(&self, q1: usize, cfg: &AttnConfig, tn: usize) -> usize {
         if cfg.causal {
-            q1.div_ceil(cfg.bk).min(tn)
+            (cfg.row_offset + q1).div_ceil(cfg.bk).min(tn)
         } else {
             tn
         }
@@ -263,18 +289,19 @@ pub struct F32Kernel<'a> {
     k: &'a Tensor,
     scale: f32,
     causal: bool,
+    row_offset: usize,
 }
 
 impl<'a> F32Kernel<'a> {
     pub fn new(q: &'a Tensor, k: &'a Tensor, cfg: &AttnConfig) -> F32Kernel<'a> {
         assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
-        F32Kernel { q, k, scale: cfg.scale_for(q.dim(1)), causal: cfg.causal }
+        F32Kernel { q, k, scale: cfg.scale_for(q.dim(1)), causal: cfg.causal, row_offset: cfg.row_offset }
     }
 }
 
 impl ScoreKernel for F32Kernel<'_> {
     fn score_block(&self, q0: usize, q1: usize, k0: usize, k1: usize, out: &mut [f32]) {
-        score_block(self.q, self.k, q0, q1, k0, k1, self.scale, self.causal, out);
+        score_block(self.q, self.k, q0, q1, k0, k1, self.row_offset, self.scale, self.causal, out);
     }
 }
 
@@ -392,7 +419,7 @@ mod tests {
         let v = Tensor::randn(&[n, d], &mut rng);
         let mut tile = FlashTile::new(n, d, n);
         let mut s = vec![0f32; n * n];
-        score_block(&q, &k, 0, n, 0, n, 0.5, false, &mut s);
+        score_block(&q, &k, 0, n, 0, n, 0, 0.5, false, &mut s);
         let mut stats = SkipStats::default();
         tile.ingest(&s, n, v.data(), Some(-0.1), 2, &mut stats);
         assert_eq!(stats.pv_skipped_frac, 0.0);
@@ -407,7 +434,7 @@ mod tests {
         let q = Tensor::randn(&[n, d], &mut rng);
         let k = Tensor::randn(&[n, d], &mut rng);
         let v = Tensor::randn(&[n, d], &mut rng);
-        let cfg = AttnConfig { bq: 8, bk: 4, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 8, bk: 4, causal: false, scale: None, cw: 2, row_offset: 0 };
         let kernel = F32Kernel::new(&q, &k, &cfg);
         let (out, _) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline);
         let oracle = attention_naive(&q, &k, &v, &cfg);
@@ -426,6 +453,7 @@ mod tests {
                 causal: rng.chance(0.5),
                 scale: None,
                 cw: rng.range(1, 5),
+                row_offset: 0,
             };
             let q = Tensor::randn(&[n, d], rng);
             let k = Tensor::randn(&[n, d], rng);
@@ -452,12 +480,63 @@ mod tests {
         let q = Tensor::randn(&[n, d], &mut rng);
         let k = Tensor::randn(&[n, d], &mut rng);
         let v = Tensor::randn(&[n, d], &mut rng);
-        let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2, row_offset: 0 };
         let kernel = F32Kernel::new(&q, &k, &cfg);
         let (_, stats) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline);
         // 4 q-blocks; block row i visits i+1 k-blocks => 1+2+3+4 = 10
         assert_eq!(stats.qk_total, 10);
         assert_eq!(stats.pv_total, 10);
+    }
+
+    #[test]
+    fn row_offset_chunk_matches_rows_of_full_causal_run() {
+        // The offset-aware causal contract: running query rows [c0, n) with
+        // row_offset = c0 against the full K/V must reproduce rows c0.. of
+        // the whole-sequence causal run bitwise — every query row sees the
+        // same visible key set, and tile re-partitioning cannot change
+        // per-row online-softmax state (f32, λ off).
+        let pool = crate::util::threadpool::WorkerPool::new(2);
+        Cases::standard(802).check(|rng| {
+            let n = rng.range(8, 80);
+            let c0 = rng.range(1, n);
+            let d = 8;
+            let cfg = AttnConfig {
+                bq: rng.range(1, 20),
+                bk: rng.range(1, 20),
+                causal: true,
+                scale: None,
+                cw: rng.range(1, 4),
+                row_offset: 0,
+            };
+            let q = Tensor::randn(&[n, d], rng);
+            let k = Tensor::randn(&[n, d], rng);
+            let v = Tensor::randn(&[n, d], rng);
+            let kernel = F32Kernel::new(&q, &k, &cfg);
+            let (full, _) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline);
+            let qc = q.rows(c0, n);
+            let ccfg = cfg.at_offset(c0);
+            let ckernel = F32Kernel::new(&qc, &k, &ccfg);
+            let (chunk, _) = run_tiled(&qc, &k, &v, &ccfg, &ckernel, &DenseFilter, Exec::Pool(&pool));
+            if chunk.data() != &full.data()[c0 * d..] {
+                return Err(format!("offset chunk diverged (n={n} c0={c0} bq={} bk={})", cfg.bq, cfg.bk));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn row_offset_extends_causal_domain_bound() {
+        // A 1-row query at offset p must visit exactly the k blocks a
+        // decode step at position p would: ceil((p+1)/bk).
+        let mut rng = Pcg::seeded(16);
+        let (n, d) = (40, 4);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let q = Tensor::randn(&[1, d], &mut rng);
+        let cfg = AttnConfig { bq: 8, bk: 8, causal: true, scale: None, cw: 1, row_offset: 25 };
+        let kernel = F32Kernel::new(&q, &k, &cfg);
+        let (_, stats) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline);
+        assert_eq!(stats.qk_total, 26usize.div_ceil(8));
     }
 
     #[test]
@@ -467,7 +546,7 @@ mod tests {
         let q = Tensor::randn(&[n, d], &mut rng);
         let k = Tensor::randn(&[n, d], &mut rng);
         let v = Tensor::randn(&[n, d], &mut rng);
-        let cfg = AttnConfig { bq: 8, bk: 8, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 8, bk: 8, causal: false, scale: None, cw: 2, row_offset: 0 };
         let mut mask = BlockMask::new_all(4, 4, true);
         mask.set(0, 3, false);
         mask.set(2, 1, false);

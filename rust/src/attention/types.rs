@@ -13,17 +13,28 @@ pub struct AttnConfig {
     pub scale: Option<f32>,
     /// Row groups per query tile — the paper's `c_w` GPU warps (§3.4).
     pub cw: usize,
+    /// Global position of query row 0: under `causal`, query row `i` sits
+    /// at absolute position `row_offset + i` while key rows stay absolute.
+    /// 0 for whole-sequence calls; a chunked prefill sets it to the number
+    /// of rows already cached so causal masking keeps referring to
+    /// absolute positions (see the contract in `attention::pipeline`).
+    pub row_offset: usize,
 }
 
 impl Default for AttnConfig {
     fn default() -> Self {
-        AttnConfig { bq: 128, bk: 64, causal: false, scale: None, cw: 4 }
+        AttnConfig { bq: 128, bk: 64, causal: false, scale: None, cw: 4, row_offset: 0 }
     }
 }
 
 impl AttnConfig {
     pub fn causal() -> Self {
         AttnConfig { causal: true, ..Default::default() }
+    }
+
+    /// This config with query row 0 placed at absolute position `row_offset`.
+    pub fn at_offset(self, row_offset: usize) -> Self {
+        AttnConfig { row_offset, ..self }
     }
 
     /// Effective softmax scale for head dimension `d`.
@@ -176,6 +187,9 @@ mod tests {
         assert!((c.scale_for(64) - 0.125).abs() < 1e-7);
         assert_eq!(c.n_qblocks(300), 3);
         assert_eq!(c.n_kblocks(300), 5);
+        assert_eq!(c.row_offset, 0);
+        assert_eq!(c.at_offset(256).row_offset, 256);
+        assert_eq!(c.at_offset(256).bq, 128);
     }
 
     #[test]

@@ -76,7 +76,7 @@ mod tests {
     use crate::util::rng::Pcg;
 
     fn cfg(bq: usize, bk: usize, causal: bool) -> AttnConfig {
-        AttnConfig { bq, bk, causal, scale: None, cw: 2 }
+        AttnConfig { bq, bk, causal, scale: None, cw: 2, row_offset: 0 }
     }
 
     #[test]

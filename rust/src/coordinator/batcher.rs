@@ -1,7 +1,16 @@
 //! Dynamic batcher: a bounded FIFO with condvar wakeups that groups
-//! queued generation requests into batches by attention mode, so the
-//! engine amortizes compilation/cache warmth across a batch (the
-//! vLLM-router-style structure scaled to this runtime).
+//! queued generation requests by attention mode, so the engine amortizes
+//! compilation/cache warmth across a batch (the vLLM-router-style
+//! structure scaled to this runtime).
+//!
+//! Fairness: the queue is never reordered — a batch drains matching
+//! requests *in place* (matching prefix pops free; stragglers behind a
+//! non-matching item are extracted with bounded `VecDeque::remove`s, not
+//! a full pop-and-rebuild of the queue), and the batch mode is always the
+//! *oldest* waiter's mode, so a minority mode can never be stranded
+//! behind a steady front-runner stream. [`BatchPolicy::max_age`] is the
+//! aging bound: once the oldest waiter has aged past it, `next_batch`
+//! skips the fill wait and ships immediately.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -12,17 +21,26 @@ use super::request::QueuedRequest;
 /// Batch-forming policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
-    /// Max requests per batch.
+    /// Max requests per batch — and, in the continuous-batching loop, the
+    /// max concurrently active sessions.
     pub max_batch: usize,
     /// How long to wait for more requests once one is pending.
     pub max_wait: Duration,
     /// Queue capacity (backpressure: submit fails beyond this).
     pub capacity: usize,
+    /// Aging bound: when the oldest queued request has waited at least
+    /// this long, the next batch ships without waiting to fill.
+    pub max_age: Duration,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20), capacity: 1024 }
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+            capacity: 1024,
+            max_age: Duration::from_millis(250),
+        }
     }
 }
 
@@ -61,10 +79,36 @@ impl Batcher {
         self.state.lock().unwrap().queue.len()
     }
 
+    /// Drain up to `max` requests of the oldest waiter's mode, in place:
+    /// the matching prefix pops for free and any stragglers behind a
+    /// non-matching item are removed individually, so non-matching
+    /// requests keep their (arrival-order) positions.
+    fn drain_mode(queue: &mut VecDeque<QueuedRequest>, max: usize) -> Vec<QueuedRequest> {
+        let mut batch = Vec::new();
+        let Some(front) = queue.front() else {
+            return batch;
+        };
+        let mode = front.req.mode;
+        while batch.len() < max && queue.front().is_some_and(|q| q.req.mode == mode) {
+            batch.push(queue.pop_front().unwrap());
+        }
+        let mut i = 0;
+        while i < queue.len() && batch.len() < max {
+            if queue[i].req.mode == mode {
+                batch.push(queue.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+        batch
+    }
+
     /// Pull the next batch: blocks until at least one request is queued
     /// (or the batcher closes → `None`), then waits up to `max_wait` for
-    /// the batch to fill. All requests in a batch share the same attention
-    /// mode (front-runner's mode) so the engine hits one artifact.
+    /// the batch to fill — unless the oldest waiter has already aged past
+    /// `max_age`, in which case it ships immediately. All requests in a
+    /// batch share the oldest waiter's attention mode so the engine hits
+    /// one artifact.
     pub fn next_batch(&self) -> Option<Vec<QueuedRequest>> {
         let mut g = self.state.lock().unwrap();
         loop {
@@ -76,31 +120,35 @@ impl Batcher {
             }
             g = self.cv.wait(g).unwrap();
         }
-        // wait briefly for more arrivals
-        let deadline = Instant::now() + self.policy.max_wait;
-        while g.queue.len() < self.policy.max_batch && !g.closed {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            let (ng, timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
-            g = ng;
-            if timeout.timed_out() {
-                break;
-            }
-        }
-        let mode = g.queue.front().unwrap().req.mode;
-        let mut batch = Vec::new();
-        let mut rest = VecDeque::new();
-        while let Some(item) = g.queue.pop_front() {
-            if batch.len() < self.policy.max_batch && item.req.mode == mode {
-                batch.push(item);
-            } else {
-                rest.push_back(item);
+        // wait briefly for more arrivals, but never hold back an aged front
+        if g.queue.front().unwrap().arrived.elapsed() < self.policy.max_age {
+            let deadline = Instant::now() + self.policy.max_wait;
+            while g.queue.len() < self.policy.max_batch && !g.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (ng, timeout) = self.cv.wait_timeout(g, deadline - now).unwrap();
+                g = ng;
+                if timeout.timed_out() {
+                    break;
+                }
             }
         }
-        g.queue = rest;
-        Some(batch)
+        Some(Self::drain_mode(&mut g.queue, self.policy.max_batch))
+    }
+
+    /// Non-blocking admission for the continuous-batching loop: pop up to
+    /// `max` requests in arrival order, regardless of mode (iteration-level
+    /// scheduling interleaves per-token steps, so there is no per-batch
+    /// artifact affinity to preserve). Empty when the queue is empty.
+    pub fn poll(&self, max: usize) -> Vec<QueuedRequest> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let mut g = self.state.lock().unwrap();
+        let take = max.min(g.queue.len());
+        g.queue.drain(..take).collect()
     }
 
     /// Close the queue; `next_batch` drains then returns `None`.
@@ -113,22 +161,37 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::{AttnMode, GenerateRequest};
+    use crate::coordinator::request::{AttnMode, GenerateRequest, Payload};
     use std::sync::mpsc;
     use std::sync::Arc;
 
     fn mk(id: u64, mode: AttnMode) -> QueuedRequest {
         let (tx, _rx) = mpsc::channel();
         QueuedRequest {
-            req: GenerateRequest { id, prompt: vec![b'a'], max_new_tokens: 1, mode },
+            req: GenerateRequest {
+                id,
+                mode,
+                payload: Payload::Generate { prompt: vec![b'a'], max_new_tokens: 1 },
+            },
             arrived: Instant::now(),
             respond: tx,
         }
     }
 
+    fn mk_aged(id: u64, mode: AttnMode, age: Duration) -> QueuedRequest {
+        let mut q = mk(id, mode);
+        q.arrived = Instant::now() - age;
+        q
+    }
+
     #[test]
     fn batches_same_mode_together() {
-        let b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1), capacity: 16 });
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            capacity: 16,
+            ..Default::default()
+        });
         b.submit(mk(1, AttnMode::Sparge)).unwrap();
         b.submit(mk(2, AttnMode::Sparge)).unwrap();
         b.submit(mk(3, AttnMode::Dense)).unwrap();
@@ -142,7 +205,12 @@ mod tests {
 
     #[test]
     fn respects_max_batch() {
-        let b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1), capacity: 16 });
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            capacity: 16,
+            ..Default::default()
+        });
         for i in 0..5 {
             b.submit(mk(i, AttnMode::Dense)).unwrap();
         }
@@ -152,8 +220,65 @@ mod tests {
     }
 
     #[test]
+    fn minority_mode_is_never_stranded() {
+        // A steady sparge stream with one dense request in the middle: the
+        // dense request must be served as soon as it is the oldest waiter
+        // (second batch), not starved behind later sparge arrivals.
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            capacity: 64,
+            ..Default::default()
+        });
+        b.submit(mk(1, AttnMode::Sparge)).unwrap();
+        b.submit(mk(2, AttnMode::Dense)).unwrap();
+        for id in 3..9 {
+            b.submit(mk(id, AttnMode::Sparge)).unwrap();
+        }
+        let first: Vec<u64> = b.next_batch().unwrap().iter().map(|q| q.req.id).collect();
+        assert_eq!(first, vec![1, 3]);
+        let second: Vec<u64> = b.next_batch().unwrap().iter().map(|q| q.req.id).collect();
+        assert_eq!(second, vec![2], "oldest waiter's mode must define the batch");
+        let third: Vec<u64> = b.next_batch().unwrap().iter().map(|q| q.req.id).collect();
+        assert_eq!(third, vec![4, 5]);
+    }
+
+    #[test]
+    fn aged_front_ships_without_fill_wait() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(5), // would stall the test if waited
+            capacity: 16,
+            max_age: Duration::from_millis(50),
+        });
+        b.submit(mk_aged(1, AttnMode::Dense, Duration::from_millis(200))).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(1), "aged request waited for fill");
+    }
+
+    #[test]
+    fn poll_is_nonblocking_and_fifo_across_modes() {
+        let b = Batcher::new(BatchPolicy::default());
+        assert!(b.poll(4).is_empty());
+        b.submit(mk(1, AttnMode::Sparge)).unwrap();
+        b.submit(mk(2, AttnMode::Dense)).unwrap();
+        b.submit(mk(3, AttnMode::Sparge)).unwrap();
+        let ids: Vec<u64> = b.poll(2).iter().map(|q| q.req.id).collect();
+        assert_eq!(ids, vec![1, 2], "poll admits in arrival order, mode-blind");
+        assert_eq!(b.depth(), 1);
+        assert!(b.poll(0).is_empty());
+    }
+
+    #[test]
     fn backpressure_when_full() {
-        let b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1), capacity: 2 });
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            capacity: 2,
+            ..Default::default()
+        });
         b.submit(mk(1, AttnMode::Dense)).unwrap();
         b.submit(mk(2, AttnMode::Dense)).unwrap();
         assert!(b.submit(mk(3, AttnMode::Dense)).is_err());
@@ -172,7 +297,12 @@ mod tests {
 
     #[test]
     fn waits_to_fill_batch() {
-        let policy = BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(200), capacity: 8 };
+        let policy = BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(200),
+            capacity: 8,
+            ..Default::default()
+        };
         let b = Arc::new(Batcher::new(policy));
         let b2 = Arc::clone(&b);
         b.submit(mk(1, AttnMode::Dense)).unwrap();

@@ -240,27 +240,38 @@ impl EngineHandle {
         self.call(|reply| Msg::GetParams { reply })
     }
 
+    /// One greedy token step: trim `tokens` to the artifact context, run
+    /// the forward pass, argmax the last row, append, and return the new
+    /// byte. **The** single source of truth for the LM decode step — both
+    /// [`EngineHandle::generate`] and the scheduler's per-tick LM step go
+    /// through it, which is what makes the continuous-batching loop with
+    /// `max_batch = 1` reproduce sequential outputs exactly.
+    pub fn lm_next_token(&self, tokens: &mut Vec<i32>, mode: AttnMode) -> Result<u8> {
+        anyhow::ensure!(!tokens.is_empty(), "empty token context");
+        let max_ctx = *LM_CTXS.last().unwrap();
+        if tokens.len() > max_ctx {
+            let excess = tokens.len() - max_ctx;
+            tokens.drain(..excess);
+        }
+        let logits = self.lm_logits(tokens.clone(), mode)?;
+        let vocab = 256;
+        let last = &logits[(tokens.len() - 1) * vocab..tokens.len() * vocab];
+        let next = last
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap();
+        tokens.push(next);
+        Ok(next as u8)
+    }
+
     /// Greedy generation: returns `max_new` generated bytes.
     pub fn generate(&self, prompt: &[u8], max_new: usize, mode: AttnMode) -> Result<Vec<u8>> {
-        let max_ctx = *LM_CTXS.last().unwrap();
         let mut tokens: Vec<i32> = prompt.iter().map(|&b| b as i32).collect();
         let mut out = Vec::with_capacity(max_new);
         for _ in 0..max_new {
-            if tokens.len() > max_ctx {
-                let excess = tokens.len() - max_ctx;
-                tokens.drain(..excess);
-            }
-            let logits = self.lm_logits(tokens.clone(), mode)?;
-            let vocab = 256;
-            let last = &logits[(tokens.len() - 1) * vocab..tokens.len() * vocab];
-            let next = last
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i as i32)
-                .unwrap();
-            out.push(next as u8);
-            tokens.push(next);
+            out.push(self.lm_next_token(&mut tokens, mode)?);
         }
         Ok(out)
     }
@@ -284,4 +295,46 @@ impl EngineHandle {
     pub fn shutdown(&self) {
         let _ = self.tx.send(Msg::Shutdown);
     }
+}
+
+/// Test-only stub engine: a real `sparge-engine`-named thread behind a
+/// normal [`EngineHandle`], with no PJRT runtime — every model op answers
+/// with an error. The returned receiver reports how the thread exited:
+/// `true` for an explicit [`Msg::Shutdown`] (what `Coordinator` must
+/// deliver), `false` for a dropped channel. Lets coordinator lifecycle
+/// and error paths run where no artifacts exist.
+#[cfg(test)]
+pub(crate) fn stub_engine() -> (EngineHandle, mpsc::Receiver<bool>) {
+    let (tx, rx) = mpsc::channel::<Msg>();
+    let (exit_tx, exit_rx) = mpsc::channel::<bool>();
+    thread::Builder::new()
+        .name("sparge-engine".into())
+        .spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::LmLogits { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("stub engine")));
+                    }
+                    Msg::TrainStep { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("stub engine")));
+                    }
+                    Msg::DitDenoise { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("stub engine")));
+                    }
+                    Msg::LoadParams { reply, .. } => {
+                        let _ = reply.send(Err(anyhow!("stub engine")));
+                    }
+                    Msg::GetParams { reply } => {
+                        let _ = reply.send(Err(anyhow!("stub engine")));
+                    }
+                    Msg::Shutdown => {
+                        let _ = exit_tx.send(true);
+                        return;
+                    }
+                }
+            }
+            let _ = exit_tx.send(false);
+        })
+        .expect("spawn stub engine");
+    (EngineHandle { tx }, exit_rx)
 }

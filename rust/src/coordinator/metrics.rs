@@ -17,6 +17,12 @@ struct Inner {
     latencies: Vec<f64>,
     compute: Vec<f64>,
     sparsity: Vec<f64>,
+    /// Time-to-first-token samples (seconds), recorded by the serving loop
+    /// per request that produced at least one token.
+    ttft: Vec<f64>,
+    /// Per-output-token latency samples (seconds) for tokens after the
+    /// first — the continuous-batching loop's decode-tick cadence.
+    tpot: Vec<f64>,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -33,6 +39,14 @@ pub struct Snapshot {
     pub tokens_per_sec: f64,
     /// Mean achieved sparsity over sparsity-reporting requests (0 if none).
     pub mean_sparsity: f64,
+    /// Requests that recorded a time-to-first-token.
+    pub ttft_count: u64,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    /// Per-output-token latency samples recorded.
+    pub tpot_count: u64,
+    pub tpot_p50: f64,
+    pub tpot_p99: f64,
 }
 
 impl Metrics {
@@ -80,10 +94,34 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// Record the serving loop's token-level timings for one retired
+    /// request: the time to its first output token and the per-token
+    /// latencies of every following output token (both in seconds).
+    pub fn record_token_latency(&self, ttft: f64, tpot: &[f64]) {
+        let mut g = self.inner.lock().unwrap();
+        g.ttft.push(ttft);
+        g.tpot.extend_from_slice(tpot);
+        Self::trim(&mut g.ttft);
+        Self::trim(&mut g.tpot);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
-        let mut lat = g.latencies.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let sorted = |v: &[f64]| {
+            let mut s = v.to_vec();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            s
+        };
+        let pct = |s: &[f64], p: f64| {
+            if s.is_empty() {
+                0.0
+            } else {
+                crate::util::stats::percentile_sorted(s, p)
+            }
+        };
+        let lat = sorted(&g.latencies);
+        let ttft = sorted(&g.ttft);
+        let tpot = sorted(&g.tpot);
         let total_compute: f64 = g.compute.iter().sum();
         let total_sparsity: f64 = g.sparsity.iter().sum();
         Snapshot {
@@ -91,11 +129,17 @@ impl Metrics {
             tokens_out: g.tokens_out,
             errors: g.errors,
             sparse_requests: g.sparse_requests,
-            latency_p50: if lat.is_empty() { 0.0 } else { crate::util::stats::percentile_sorted(&lat, 0.5) },
-            latency_p99: if lat.is_empty() { 0.0 } else { crate::util::stats::percentile_sorted(&lat, 0.99) },
+            latency_p50: pct(&lat, 0.5),
+            latency_p99: pct(&lat, 0.99),
             mean_compute: if g.compute.is_empty() { 0.0 } else { total_compute / g.compute.len() as f64 },
             tokens_per_sec: if total_compute > 0.0 { g.tokens_out as f64 / total_compute } else { 0.0 },
             mean_sparsity: if g.sparsity.is_empty() { 0.0 } else { total_sparsity / g.sparsity.len() as f64 },
+            ttft_count: g.ttft.len() as u64,
+            ttft_p50: pct(&ttft, 0.5),
+            ttft_p99: pct(&ttft, 0.99),
+            tpot_count: g.tpot.len() as u64,
+            tpot_p50: pct(&tpot, 0.5),
+            tpot_p99: pct(&tpot, 0.99),
         }
     }
 }
@@ -155,6 +199,30 @@ mod tests {
         assert!((s.mean_sparsity - 0.5).abs() < 1e-9);
         assert!((s.latency_p50 - 0.5).abs() < 1e-9);
         assert!((s.mean_compute - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn token_latency_reservoirs() {
+        let m = Metrics::new();
+        m.record_token_latency(0.5, &[0.1, 0.1, 0.3]);
+        m.record_token_latency(1.5, &[0.2]);
+        let s = m.snapshot();
+        assert_eq!(s.ttft_count, 2);
+        assert_eq!(s.tpot_count, 4);
+        assert!((s.ttft_p50 - 1.0).abs() < 1e-9);
+        assert!(s.tpot_p50 >= 0.1 && s.tpot_p50 <= 0.3);
+        assert!(s.ttft_p99 <= 1.5 + 1e-9 && s.ttft_p99 >= 1.0);
+        // token timings never touch the request/latency reservoirs
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.latency_p50, 0.0);
+    }
+
+    #[test]
+    fn empty_token_latency_is_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.ttft_count, 0);
+        assert_eq!(s.ttft_p50, 0.0);
+        assert_eq!(s.tpot_p99, 0.0);
     }
 
     #[test]

@@ -1,9 +1,42 @@
-//! L3 serving coordinator: request types, dynamic batcher, scheduler,
-//! engine actor (owns the non-`Send` PJRT runtime), TCP JSON-lines server,
-//! and metrics. Python never runs on this path — the engine executes
-//! AOT-compiled HLO artifacts only. Kernel-level `attn` probe requests run
-//! the unified tiled pipeline directly (no engine) and feed per-request
-//! sparsity into the serving metrics.
+//! L3 serving coordinator: a **continuous-batching** serving loop over
+//! two engines — the PJRT model engine actor (AOT-compiled HLO, owns the
+//! non-`Send` runtime) for byte-LM generation, and one shared
+//! [`crate::attention::AttnEngine`]/worker pool for attention-session
+//! streams. Python never runs on this path.
+//!
+//! Scheduling is **iteration-level** (vLLM-style), not request-level: the
+//! scheduler thread ticks, and each tick admits, advances, and retires —
+//! a long prompt never monopolizes the engines because prompts prefill in
+//! bounded chunks and every active sequence decodes one token per tick.
+//!
+//! ```text
+//!             submit / submit_stream (any thread)
+//!                          │
+//!                     [ Batcher ]   bounded FIFO, in-place mode drain,
+//!                          │        max_age aging bound
+//!        ┌─ admit (≤ max_batch active) ──────────────┐
+//!        │                                           │ per tick
+//!  Payload::Generate                      Payload::AttnStream
+//!   one lm_logits step/tick                [ SessionManager ]
+//!   (PJRT engine actor)                 admit → chunked prefill
+//!        │                              (≤ chunk rows, b_q-aligned)
+//!        │                                → decode ticks → retire
+//!        └────────── retire: respond + Metrics ──────┘
+//!          (latency/compute + TTFT/TPOT + sparsity)
+//! ```
+//!
+//! Request lifecycle: **admit** (popped from the batcher when a slot is
+//! free) → **chunked prefill** (attention streams; one bounded
+//! `prefill_chunk` per tick, so time-to-first-token of everything queued
+//! stays capped) → **decode ticks** (one token per tick, interleaved
+//! across all active sequences) → **retire** (respond, record
+//! latency/TTFT/TPOT and per-session sparsity).
+//!
+//! Kernel-level `attn` probe ops still run the tiled pipeline directly on
+//! connection threads (no queueing); the `attn`/`serve` op pushes real
+//! streams through the serving loop instead. The TCP JSON-lines
+//! [`server`] is the external interface; [`metrics`] aggregates serving
+//! counters plus TTFT/TPOT reservoirs.
 
 pub mod batcher;
 pub mod engine;
@@ -11,9 +44,11 @@ pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod session_manager;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::EngineHandle;
 pub use metrics::Metrics;
-pub use request::{AttnMode, GenerateRequest, GenerateResponse};
-pub use scheduler::{AttnProbeResult, Coordinator, DecodeProbeResult};
+pub use request::{AttnMode, AttnStreamSpec, GenerateRequest, GenerateResponse, Payload};
+pub use scheduler::{AttnProbeResult, Coordinator, DecodeProbeResult, ServeOptions};
+pub use session_manager::{run_sequential, SeqResult, SeqStream, SessionManager};

@@ -1,7 +1,18 @@
-//! Scheduler: the worker loop that drains the batcher and drives the
-//! engine, plus the top-level [`Coordinator`] facade tying queue, engine,
-//! and metrics together.
+//! Scheduler: the continuous-batching worker loop and the top-level
+//! [`Coordinator`] facade tying queue, engines, and metrics together.
+//!
+//! The worker schedules at **token level**, not request level: each loop
+//! iteration (tick) admits new requests from the batcher up to
+//! `BatchPolicy::max_batch` concurrently active sequences, advances every
+//! active sequence by one unit of work, and retires the finished ones.
+//! Attention-stream requests live in a [`SessionManager`] (N sessions,
+//! one shared [`AttnEngine`]/worker pool; one *bounded* prefill chunk or
+//! one decode row per tick), LM requests take one greedy token step
+//! through the PJRT engine actor per tick. A long prompt therefore never
+//! monopolizes the engine — queued requests start within one chunk-sized
+//! tick, which is what caps time-to-first-token under mixed traffic.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -10,10 +21,14 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::attention::{AttnConfig, AttnEngine, Execution};
+use crate::sparge::SpargeParams;
+
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::EngineHandle;
 use super::metrics::Metrics;
-use super::request::{AttnMode, GenerateRequest, GenerateResponse, QueuedRequest};
+use super::request::{AttnMode, AttnStreamSpec, GenerateRequest, GenerateResponse, Payload, QueuedRequest};
+use super::session_manager::{SeqResult, SeqStream, SessionManager};
 
 /// Result of a kernel-level attention probe request.
 #[derive(Clone, Copy, Debug)]
@@ -47,19 +62,82 @@ pub struct DecodeProbeResult {
     pub threads: usize,
 }
 
-/// The serving coordinator: submit generation requests from any thread;
-/// a scheduler thread batches them and executes on the engine.
+/// Composition of the serving loop's shared attention engine and its
+/// chunking discipline.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Max prompt rows an attention stream prefills per tick (aligned
+    /// down to the engine's `b_q` by the [`SessionManager`]).
+    pub chunk: usize,
+    /// SpargeAttn composition of the shared engine (τ/θ stage 1, λ stage
+    /// 2, INT8 toggle).
+    pub params: SpargeParams,
+    /// Attention geometry; causal, `row_offset` 0 (sessions manage it).
+    pub cfg: AttnConfig,
+    /// Worker-pool size of the shared engine.
+    pub threads: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            chunk: 256,
+            params: SpargeParams::default(),
+            cfg: AttnConfig::causal(),
+            threads: crate::util::threadpool::default_threads(),
+        }
+    }
+}
+
+impl ServeOptions {
+    fn build_engine(&self) -> AttnEngine {
+        AttnEngine::builder()
+            .config(self.cfg)
+            .sparge(&self.params)
+            .execution(Execution::Pool(self.threads))
+            .build()
+    }
+}
+
+/// The serving coordinator: submit generation or attention-stream
+/// requests from any thread; the scheduler thread runs them through the
+/// continuous-batching loop.
 pub struct Coordinator {
     batcher: Arc<Batcher>,
     pub metrics: Arc<Metrics>,
-    engine: EngineHandle,
+    engine: Option<EngineHandle>,
     next_id: AtomicU64,
     worker: Option<thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the scheduler over an engine.
+    /// Start the scheduler over a PJRT model engine with default serving
+    /// options.
     pub fn start(engine: EngineHandle, policy: BatchPolicy) -> Coordinator {
+        Coordinator::start_with(Some(engine), policy, ServeOptions::default())
+    }
+
+    /// Kernel-only coordinator: no PJRT engine. Attention streams are
+    /// served through the shared [`AttnEngine`]; LM generation requests
+    /// fail fast with an error response.
+    pub fn start_kernel(policy: BatchPolicy, opts: ServeOptions) -> Coordinator {
+        Coordinator::start_with(None, policy, opts)
+    }
+
+    /// Start the continuous-batching scheduler.
+    ///
+    /// Panics (on the caller's thread, before anything is spawned) when
+    /// `opts` is unservable — the alternative is a delayed assert inside
+    /// the scheduler thread that would wedge every future request.
+    pub fn start_with(
+        engine: Option<EngineHandle>,
+        policy: BatchPolicy,
+        opts: ServeOptions,
+    ) -> Coordinator {
+        assert!(opts.cfg.causal, "serving needs a causal attention engine (chunked prefill)");
+        assert_eq!(opts.cfg.row_offset, 0, "ServeOptions.cfg.row_offset must be 0 (sessions manage it)");
+        assert!(opts.chunk > 0, "ServeOptions.chunk must be positive");
+        assert!(policy.max_batch > 0, "BatchPolicy.max_batch must be positive");
         let batcher = Arc::new(Batcher::new(policy));
         let metrics = Arc::new(Metrics::new());
         let worker = {
@@ -68,16 +146,26 @@ impl Coordinator {
             let engine = engine.clone();
             thread::Builder::new()
                 .name("sparge-scheduler".into())
-                .spawn(move || {
-                    while let Some(batch) = batcher.next_batch() {
-                        for item in batch {
-                            run_one(&engine, &metrics, item);
-                        }
-                    }
-                })
+                .spawn(move || serve_loop(&batcher, engine.as_ref(), &metrics, policy, &opts))
                 .expect("spawn scheduler")
         };
         Coordinator { batcher, metrics, engine, next_id: AtomicU64::new(1), worker: Some(worker) }
+    }
+
+    fn enqueue(
+        &self,
+        mode: AttnMode,
+        payload: Payload,
+    ) -> Result<mpsc::Receiver<GenerateResponse>> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let item = QueuedRequest {
+            req: GenerateRequest { id, mode, payload },
+            arrived: Instant::now(),
+            respond: tx,
+        };
+        self.batcher.submit(item).map_err(|_| anyhow!("queue full or closed (backpressure)"))?;
+        Ok(rx)
     }
 
     /// Fire-and-forget submit; the response arrives on the returned channel.
@@ -87,15 +175,17 @@ impl Coordinator {
         max_new_tokens: usize,
         mode: AttnMode,
     ) -> Result<mpsc::Receiver<GenerateResponse>> {
-        let (tx, rx) = mpsc::channel();
-        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let item = QueuedRequest {
-            req: GenerateRequest { id, prompt, max_new_tokens, mode },
-            arrived: Instant::now(),
-            respond: tx,
-        };
-        self.batcher.submit(item).map_err(|_| anyhow!("queue full or closed (backpressure)"))?;
-        Ok(rx)
+        self.enqueue(mode, Payload::Generate { prompt, max_new_tokens })
+    }
+
+    /// Submit an attention-session stream (serving-path traffic through
+    /// the shared engine, chunked prefill + per-tick decode).
+    pub fn submit_stream(
+        &self,
+        spec: AttnStreamSpec,
+        mode: AttnMode,
+    ) -> Result<mpsc::Receiver<GenerateResponse>> {
+        self.enqueue(mode, Payload::AttnStream(spec))
     }
 
     /// Blocking convenience: submit and wait.
@@ -104,9 +194,16 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("request dropped"))
     }
 
-    /// Direct engine access (training, scoring, denoise).
-    pub fn engine(&self) -> &EngineHandle {
-        &self.engine
+    /// Blocking convenience: run one attention stream through the loop.
+    pub fn serve_stream(&self, spec: AttnStreamSpec) -> Result<GenerateResponse> {
+        let rx = self.submit_stream(spec, AttnMode::Sparge)?;
+        rx.recv().map_err(|_| anyhow!("request dropped"))
+    }
+
+    /// Direct model-engine access (training, scoring, denoise); `None` on
+    /// a kernel-only coordinator.
+    pub fn engine(&self) -> Option<&EngineHandle> {
+        self.engine.as_ref()
     }
 
     /// Kernel-level attention probe: run single-head SpargeAttn on a
@@ -202,46 +299,293 @@ impl Coordinator {
         self.batcher.depth()
     }
 
-    /// Graceful shutdown: drain the queue, stop the worker.
-    pub fn shutdown(mut self) {
+    /// Graceful shutdown: drain the queue, stop the worker, stop the
+    /// model-engine thread. `Drop` performs the same sequence, so a
+    /// dropped coordinator leaves no thread behind.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+
+    fn close_internal(&mut self) {
         self.batcher.close();
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
-        self.engine.shutdown();
+        if let Some(engine) = &self.engine {
+            engine.shutdown();
+        }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.batcher.close();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.close_internal();
+    }
+}
+
+/// One active LM sequence in the continuous-batching loop: greedy
+/// byte-level generation, one `lm_logits` step per tick (the same trim +
+/// argmax discipline as `EngineHandle::generate`, so `max_batch = 1`
+/// reproduces the sequential outputs exactly).
+struct LmActive {
+    id: u64,
+    mode: AttnMode,
+    tokens: Vec<i32>,
+    max_new: usize,
+    out: Vec<u8>,
+    arrived: Instant,
+    respond: mpsc::Sender<GenerateResponse>,
+    compute: f64,
+    ttft: Option<f64>,
+    tpot: Vec<f64>,
+    failed: bool,
+}
+
+impl LmActive {
+    fn new(
+        id: u64,
+        mode: AttnMode,
+        prompt: Vec<u8>,
+        max_new: usize,
+        arrived: Instant,
+        respond: mpsc::Sender<GenerateResponse>,
+    ) -> LmActive {
+        LmActive {
+            id,
+            mode,
+            tokens: prompt.iter().map(|&b| b as i32).collect(),
+            max_new,
+            out: Vec::with_capacity(max_new),
+            arrived,
+            respond,
+            compute: 0.0,
+            ttft: None,
+            tpot: Vec::new(),
+            failed: false,
+        }
+    }
+
+    /// One greedy token step (`EngineHandle::lm_next_token`, the same
+    /// code path `generate` loops over); `true` when finished. An error
+    /// — engine failure, or an empty prompt — fails the request without
+    /// touching the scheduler thread.
+    fn step(&mut self, engine: Option<&EngineHandle>) -> bool {
+        if self.out.len() >= self.max_new {
+            return true;
+        }
+        let Some(engine) = engine else {
+            self.failed = true;
+            crate::log_error!("request {}: no model engine (kernel-only coordinator)", self.id);
+            return true;
+        };
+        let t0 = Instant::now();
+        match engine.lm_next_token(&mut self.tokens, self.mode) {
+            Ok(byte) => {
+                let dt = t0.elapsed().as_secs_f64();
+                self.compute += dt;
+                if self.ttft.is_none() {
+                    self.ttft = Some(self.arrived.elapsed().as_secs_f64());
+                } else {
+                    self.tpot.push(dt);
+                }
+                self.out.push(byte);
+                self.out.len() >= self.max_new
+            }
+            Err(e) => {
+                crate::log_error!("request {} failed: {e:#}", self.id);
+                self.failed = true;
+                true
+            }
+        }
+    }
+
+    fn finish(self, metrics: &Metrics) {
+        let latency = self.arrived.elapsed().as_secs_f64();
+        if self.failed {
+            metrics.record_error();
+        } else {
+            // LM artifacts don't report kernel sparsity; attention
+            // streams and probes do.
+            metrics.record(self.out.len(), latency, self.compute, None);
+            if let Some(t) = self.ttft {
+                metrics.record_token_latency(t, &self.tpot);
+            }
+        }
+        let tpot_mean = if self.tpot.is_empty() {
+            None
+        } else {
+            Some(self.tpot.iter().sum::<f64>() / self.tpot.len() as f64)
+        };
+        let _ = self.respond.send(GenerateResponse {
+            id: self.id,
+            latency,
+            compute: self.compute,
+            mode: self.mode,
+            tokens: self.out.len(),
+            ttft: self.ttft,
+            tpot: tpot_mean,
+            sparsity: None,
+            output: self.out,
+        });
+    }
+}
+
+/// Attention-stream bookkeeping the manager does not carry.
+struct PendingStream {
+    mode: AttnMode,
+    respond: mpsc::Sender<GenerateResponse>,
+}
+
+fn respond_stream(metrics: &Metrics, pending: PendingStream, res: SeqResult) {
+    let sparsity = res.stats.sparsity();
+    metrics.record(res.tokens, res.latency, res.compute, Some(sparsity));
+    metrics.record_token_latency(res.ttft, &res.tpot);
+    let _ = pending.respond.send(GenerateResponse {
+        id: res.id,
+        output: Vec::new(),
+        latency: res.latency,
+        compute: res.compute,
+        mode: pending.mode,
+        tokens: res.tokens,
+        ttft: Some(res.ttft),
+        tpot: if res.tpot.is_empty() { None } else { Some(res.tpot_mean()) },
+        sparsity: Some(sparsity),
+    });
+}
+
+/// The continuous-batching worker loop (see module docs). Runs until the
+/// batcher closes and every admitted sequence has retired.
+fn serve_loop(
+    batcher: &Batcher,
+    engine: Option<&EngineHandle>,
+    metrics: &Metrics,
+    policy: BatchPolicy,
+    opts: &ServeOptions,
+) {
+    let attn_engine = opts.build_engine();
+    let mut mgr = SessionManager::new(&attn_engine, opts.chunk);
+    let mut lm: Vec<LmActive> = Vec::new();
+    let mut pending: HashMap<u64, PendingStream> = HashMap::new();
+    loop {
+        // admit: block when idle (nothing to advance), poll otherwise
+        let incoming = if lm.is_empty() && mgr.active() == 0 {
+            match batcher.next_batch() {
+                Some(batch) => batch,
+                None => break, // closed and drained
+            }
+        } else {
+            batcher.poll(policy.max_batch.saturating_sub(lm.len() + mgr.active()))
+        };
+        for item in incoming {
+            let QueuedRequest { req, arrived, respond } = item;
+            match req.payload {
+                Payload::Generate { prompt, max_new_tokens } => {
+                    lm.push(LmActive::new(req.id, req.mode, prompt, max_new_tokens, arrived, respond));
+                }
+                Payload::AttnStream(spec) => {
+                    // a degenerate spec must fail the request, not panic
+                    // the scheduler thread
+                    if spec.prefill + spec.decode == 0 || spec.d == 0 {
+                        metrics.record_error();
+                        crate::log_error!("request {}: empty attention stream spec", req.id);
+                        let _ = respond.send(GenerateResponse {
+                            id: req.id,
+                            output: Vec::new(),
+                            latency: arrived.elapsed().as_secs_f64(),
+                            compute: 0.0,
+                            mode: req.mode,
+                            tokens: 0,
+                            ttft: None,
+                            tpot: None,
+                            sparsity: None,
+                        });
+                        continue;
+                    }
+                    pending.insert(req.id, PendingStream { mode: req.mode, respond });
+                    mgr.admit(req.id, SeqStream::synth(&spec), arrived);
+                }
+            }
+        }
+        // advance every attention stream one chunk/token
+        for res in mgr.tick() {
+            if let Some(p) = pending.remove(&res.id) {
+                respond_stream(metrics, p, res);
+            }
+        }
+        // advance every LM sequence one token
+        let mut i = 0;
+        while i < lm.len() {
+            if lm[i].step(engine) {
+                lm.remove(i).finish(metrics);
+            } else {
+                i += 1;
+            }
         }
     }
 }
 
-fn run_one(engine: &EngineHandle, metrics: &Metrics, item: QueuedRequest) {
-    let QueuedRequest { req, arrived, respond } = item;
-    let t0 = Instant::now();
-    match engine.generate(&req.prompt, req.max_new_tokens, req.mode) {
-        Ok(output) => {
-            let compute = t0.elapsed().as_secs_f64();
-            let latency = arrived.elapsed().as_secs_f64();
-            // LM artifacts don't report kernel sparsity; attention probes do.
-            metrics.record(output.len(), latency, compute, None);
-            let _ = respond.send(GenerateResponse { id: req.id, output, latency, compute, mode: req.mode });
-        }
-        Err(e) => {
-            metrics.record_error();
-            crate::log_error!("request {} failed: {e:#}", req.id);
-            let _ = respond.send(GenerateResponse {
-                id: req.id,
-                output: Vec::new(),
-                latency: arrived.elapsed().as_secs_f64(),
-                compute: t0.elapsed().as_secs_f64(),
-                mode: req.mode,
-            });
-        }
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn dropped_coordinator_stops_the_engine_thread() {
+        // The Drop-leak regression: dropping (not shutdown()-ing) the
+        // coordinator must still deliver the engine shutdown message, so
+        // the `sparge-engine` thread exits instead of leaking.
+        let (engine, shutdown_rx) = super::super::engine::stub_engine();
+        let c = Coordinator::start(engine, BatchPolicy::default());
+        drop(c);
+        let got = shutdown_rx.recv_timeout(Duration::from_secs(10));
+        assert_eq!(got.ok(), Some(true), "engine thread did not receive shutdown on drop");
+    }
+
+    #[test]
+    fn shutdown_also_stops_the_engine_thread() {
+        let (engine, shutdown_rx) = super::super::engine::stub_engine();
+        let c = Coordinator::start(engine, BatchPolicy::default());
+        c.shutdown();
+        let got = shutdown_rx.recv_timeout(Duration::from_secs(10));
+        assert_eq!(got.ok(), Some(true));
+    }
+
+    #[test]
+    fn generate_against_stub_engine_fails_cleanly() {
+        // The loop's error path: a stub engine errors every lm_logits
+        // call; the request must retire with an error response, not wedge
+        // the scheduler.
+        let (engine, _shutdown_rx) = super::super::engine::stub_engine();
+        let c = Coordinator::start(engine, BatchPolicy::default());
+        let resp = c.generate(b"hello".to_vec(), 4, AttnMode::Dense).unwrap();
+        assert!(resp.output.is_empty());
+        assert_eq!(resp.tokens, 0);
+        assert_eq!(c.metrics.snapshot().errors, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn empty_prompt_fails_cleanly_instead_of_panicking() {
+        // lm_next_token rejects an empty context before indexing logits,
+        // so the request errors instead of underflowing `tokens.len() - 1`
+        // on the scheduler thread (which would wedge the whole loop).
+        let (engine, _shutdown_rx) = super::super::engine::stub_engine();
+        let c = Coordinator::start(engine, BatchPolicy::default());
+        let resp = c.generate(Vec::new(), 3, AttnMode::Sparge).unwrap();
+        assert!(resp.output.is_empty());
+        assert_eq!(c.metrics.snapshot().errors, 1);
+        // the loop survives: a later request still gets served
+        let resp2 = c.generate(b"ok".to_vec(), 1, AttnMode::Sparge).unwrap();
+        assert_eq!(resp2.tokens, 0, "stub engine errors, but the loop answered");
+        c.shutdown();
+    }
+
+    #[test]
+    fn kernel_only_coordinator_rejects_lm_requests() {
+        let c = Coordinator::start_kernel(BatchPolicy::default(), ServeOptions::default());
+        assert!(c.engine().is_none());
+        let resp = c.generate(b"hi".to_vec(), 2, AttnMode::Sparge).unwrap();
+        assert!(resp.output.is_empty());
+        assert_eq!(c.metrics.snapshot().errors, 1);
     }
 }

@@ -12,7 +12,14 @@
 //!         "per_step_sparsity":[...],"mean_step_sparsity":0.45,...}
 //!        (serving-path probe: AttnSession prefill + N single-row decode
 //!        steps, per-step sparsity observable end-to-end)
-//!   {"op":"stats"} -> {"requests":...,"mean_sparsity":...,...}
+//!   {"op":"attn","mode":"serve","sessions":4,"n":1024,"steps":32,"d":64}
+//!     -> {"mode":"serve","sessions":[{"id":..,"ttft_ms":..,"tpot_ms":..,
+//!         "sparsity":..},...],"wall_ms":...,"tokens_per_sec":...}
+//!        (continuous-batching traffic: N seeded attention streams
+//!        submitted through the scheduler's serving loop — chunked
+//!        prefill + per-tick decode over the shared AttnEngine)
+//!   {"op":"stats"} -> {"requests":...,"mean_sparsity":...,
+//!                      "ttft_p50_ms":...,"tpot_p50_ms":...,...}
 //!   {"op":"ping"}  -> {"ok":true}
 
 use std::io::{BufRead, BufReader, Write};
@@ -92,6 +99,14 @@ fn dispatch_inner(coordinator: &Coordinator, line: &str) -> Result<Json> {
                 ("queue_depth", Json::num(coordinator.queue_depth() as f64)),
                 ("sparse_requests", Json::num(s.sparse_requests as f64)),
                 ("mean_sparsity", Json::num(s.mean_sparsity)),
+                // token-level serving latencies from the continuous-
+                // batching loop (0 until it has retired a request)
+                ("ttft_count", Json::num(s.ttft_count as f64)),
+                ("ttft_p50_ms", Json::num(s.ttft_p50 * 1e3)),
+                ("ttft_p99_ms", Json::num(s.ttft_p99 * 1e3)),
+                ("tpot_count", Json::num(s.tpot_count as f64)),
+                ("tpot_p50_ms", Json::num(s.tpot_p50 * 1e3)),
+                ("tpot_p99_ms", Json::num(s.tpot_p99 * 1e3)),
             ]))
         }
         "attn" => {
@@ -141,7 +156,61 @@ fn dispatch_inner(coordinator: &Coordinator, line: &str) -> Result<Json> {
                         ("threads", Json::num(r.threads as f64)),
                     ]))
                 }
-                other => anyhow::bail!("unknown attn mode '{other}' (want 'prefill' or 'decode')"),
+                "serve" => {
+                    // real serving traffic: N streams through the
+                    // continuous-batching loop (TTFT capped by chunked
+                    // prefill), not a caller-thread probe. The engine
+                    // composition is fixed at coordinator startup, so
+                    // probe-only knobs must be rejected, not silently
+                    // ignored.
+                    for key in ["tau", "theta", "lambda", "quant", "threads"] {
+                        anyhow::ensure!(
+                            req.get(key).is_none(),
+                            "'{key}' is fixed by the serving engine at startup; \
+                             the serve mode does not accept it"
+                        );
+                    }
+                    let sessions = req.get("sessions").and_then(|v| v.as_usize()).unwrap_or(4);
+                    let steps = req.get("steps").and_then(|v| v.as_usize()).unwrap_or(16);
+                    anyhow::ensure!((1..=64).contains(&sessions), "sessions out of range (1..=64)");
+                    anyhow::ensure!(steps <= 1024, "steps out of range (0..=1024)");
+                    let t0 = std::time::Instant::now();
+                    let rxs: Vec<_> = (0..sessions)
+                        .map(|i| {
+                            let spec = crate::coordinator::request::AttnStreamSpec {
+                                prefill: n,
+                                decode: steps,
+                                d,
+                                seed: seed.wrapping_add(i as u64),
+                            };
+                            coordinator.submit_stream(spec, AttnMode::Sparge)
+                        })
+                        .collect::<Result<_>>()?;
+                    let mut rows = Vec::with_capacity(sessions);
+                    let mut tokens = 0usize;
+                    for rx in rxs {
+                        let r = rx.recv().map_err(|_| anyhow::anyhow!("stream dropped"))?;
+                        tokens += r.tokens;
+                        rows.push(Json::obj(vec![
+                            ("id", Json::num(r.id as f64)),
+                            ("ttft_ms", Json::num(r.ttft.unwrap_or(0.0) * 1e3)),
+                            ("tpot_ms", Json::num(r.tpot.unwrap_or(0.0) * 1e3)),
+                            ("sparsity", Json::num(r.sparsity.unwrap_or(0.0))),
+                            ("tokens", Json::num(r.tokens as f64)),
+                        ]));
+                    }
+                    let wall = t0.elapsed().as_secs_f64();
+                    Ok(Json::obj(vec![
+                        ("mode", Json::str("serve")),
+                        ("sessions", Json::arr(rows.into_iter())),
+                        ("wall_ms", Json::num(wall * 1e3)),
+                        (
+                            "tokens_per_sec",
+                            Json::num(if wall > 0.0 { tokens as f64 / wall } else { 0.0 }),
+                        ),
+                    ]))
+                }
+                other => anyhow::bail!("unknown attn mode '{other}' (want 'prefill', 'decode', or 'serve')"),
             }
         }
         "generate" => {

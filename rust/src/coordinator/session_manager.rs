@@ -1,0 +1,401 @@
+//! [`SessionManager`]: N live attention sessions over **one** shared
+//! [`AttnEngine`]/worker pool — the token-level execution core of the
+//! continuous-batching serving loop.
+//!
+//! Each admitted request is a [`SeqStream`] (prompt rows + decode rows,
+//! deterministic from an [`AttnStreamSpec`] seed). The scheduler drives
+//! the manager in ticks; per tick every active session advances by one
+//! unit of work:
+//!
+//! - **prefilling** sessions run one *bounded* prompt chunk
+//!   ([`crate::attention::AttnSession::prefill_chunk`], at most
+//!   `chunk` rows, interior edges aligned down to `b_q` so chunked
+//!   execution is bitwise-faithful to one-shot prefill — see the parity
+//!   notes in [`crate::attention::engine`]). Bounding the chunk caps how
+//!   long any tick can run, which caps time-to-first-token for every
+//!   other queued and active session;
+//! - **decoding** sessions run one single-row decode step;
+//! - finished sessions retire with a [`SeqResult`]: output rows, merged
+//!   [`SkipStats`], TTFT, per-output-token latencies, compute seconds.
+//!
+//! [`run_sequential`] is the request-level baseline (one-shot prefill,
+//! then all decode steps, one request at a time): with `max_batch = 1`
+//! the continuous loop reproduces its per-request outputs exactly, and
+//! `benches/table8_serving.rs` measures what interleaving buys over it.
+
+use std::time::Instant;
+
+use crate::attention::{AttnEngine, AttnSession, SkipStats};
+use crate::tensor::Tensor;
+use crate::workloads::{synthetic, SyntheticSpec};
+
+use super::request::AttnStreamSpec;
+
+/// The token stream a session consumes: `prefill` prompt rows of q/k/v,
+/// then one decode row per step until the rows run out.
+#[derive(Clone, Debug)]
+pub struct SeqStream {
+    pub q: Tensor,
+    pub k: Tensor,
+    pub v: Tensor,
+    pub prefill: usize,
+}
+
+impl SeqStream {
+    /// Deterministic synthetic stream for a spec (seeded LM-like QKV of
+    /// `prefill + decode` rows).
+    pub fn synth(spec: &AttnStreamSpec) -> SeqStream {
+        let n = spec.prefill + spec.decode;
+        assert!(n > 0, "empty attention stream");
+        let mut rng = crate::util::rng::Pcg::seeded(spec.seed);
+        let s = synthetic::generate(&SyntheticSpec::lm_like(n, spec.d), &mut rng);
+        SeqStream { q: s.q, k: s.k, v: s.v, prefill: spec.prefill }
+    }
+
+    /// Total rows (prefill + decode).
+    pub fn len(&self) -> usize {
+        self.q.dim(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.dim(0) == 0
+    }
+
+    /// Decode steps this stream will take.
+    pub fn decode_steps(&self) -> usize {
+        self.len() - self.prefill
+    }
+}
+
+/// A retired sequence: everything the serving loop reports and records.
+#[derive(Clone, Debug)]
+pub struct SeqResult {
+    pub id: u64,
+    /// All output rows, prefill then decode ((prefill+decode) × dv).
+    pub out: Tensor,
+    /// Merged skip counters over every prefill chunk and decode step.
+    pub stats: SkipStats,
+    /// Decode rows produced (the stream's output tokens).
+    pub tokens: usize,
+    /// Seconds from arrival to the first output token (the first decode
+    /// row, or prefill completion for decode-less streams).
+    pub ttft: f64,
+    /// Per-output-token latencies (seconds) for tokens after the first.
+    pub tpot: Vec<f64>,
+    /// Seconds from arrival to retirement.
+    pub latency: f64,
+    /// Summed kernel seconds across the session's chunks and steps.
+    pub compute: f64,
+}
+
+impl SeqResult {
+    /// Mean per-output-token latency; 0 when fewer than two tokens.
+    pub fn tpot_mean(&self) -> f64 {
+        if self.tpot.is_empty() {
+            0.0
+        } else {
+            self.tpot.iter().sum::<f64>() / self.tpot.len() as f64
+        }
+    }
+}
+
+struct ActiveSeq<'e> {
+    id: u64,
+    stream: SeqStream,
+    session: AttnSession<'e>,
+    prefilled: usize,
+    decoded: usize,
+    out: Vec<f32>,
+    stats: SkipStats,
+    arrived: Instant,
+    compute: f64,
+    ttft: Option<f64>,
+    tpot: Vec<f64>,
+}
+
+impl ActiveSeq<'_> {
+    fn finished(&self) -> bool {
+        self.prefilled == self.stream.prefill && self.decoded == self.stream.decode_steps()
+    }
+
+    fn into_result(self) -> SeqResult {
+        let dv = self.stream.v.dim(1);
+        let rows = self.out.len() / dv;
+        SeqResult {
+            id: self.id,
+            out: Tensor::from_vec(&[rows, dv], self.out),
+            stats: self.stats,
+            tokens: self.decoded,
+            ttft: self.ttft.unwrap_or(0.0),
+            tpot: self.tpot,
+            latency: self.arrived.elapsed().as_secs_f64(),
+            compute: self.compute,
+        }
+    }
+}
+
+/// N live [`AttnSession`]s over one shared engine; see the module docs.
+pub struct SessionManager<'e> {
+    engine: &'e AttnEngine,
+    /// Max prompt rows per prefill tick, before `b_q` alignment.
+    chunk: usize,
+    active: Vec<ActiveSeq<'e>>,
+}
+
+impl<'e> SessionManager<'e> {
+    /// `chunk` bounds the prompt rows a session prefills per tick; interior
+    /// chunk edges are aligned down to the engine's `b_q` (at least one
+    /// query block per tick) so chunked prefill stays bitwise-faithful to
+    /// one-shot prefill.
+    pub fn new(engine: &'e AttnEngine, chunk: usize) -> SessionManager<'e> {
+        assert!(chunk > 0, "prefill chunk must be positive");
+        SessionManager { engine, chunk, active: Vec::new() }
+    }
+
+    /// Live session count.
+    pub fn active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Rows per prefill tick: `chunk` aligned down to a `b_q` multiple.
+    fn chunk_rows(&self) -> usize {
+        let bq = self.engine.config().bq;
+        (self.chunk / bq * bq).max(bq)
+    }
+
+    /// Open a session for a stream. The caller enforces its own admission
+    /// cap (the scheduler admits up to `BatchPolicy::max_batch`).
+    pub fn admit(&mut self, id: u64, stream: SeqStream, arrived: Instant) {
+        assert!(!stream.is_empty(), "empty attention stream");
+        self.active.push(ActiveSeq {
+            id,
+            session: self.engine.session(),
+            stream,
+            prefilled: 0,
+            decoded: 0,
+            out: Vec::new(),
+            stats: SkipStats::default(),
+            arrived,
+            compute: 0.0,
+            ttft: None,
+            tpot: Vec::new(),
+        });
+    }
+
+    /// One scheduling tick: every active session advances one unit —
+    /// prefilling sessions by one bounded chunk, decoding sessions by one
+    /// token — and finished sessions retire (returned in admission order).
+    pub fn tick(&mut self) -> Vec<SeqResult> {
+        let chunk = self.chunk_rows();
+        for seq in &mut self.active {
+            let t0 = Instant::now();
+            if seq.prefilled < seq.stream.prefill {
+                let end = (seq.prefilled + chunk).min(seq.stream.prefill);
+                let r = seq.session.prefill_chunk(
+                    &seq.stream.q.rows(seq.prefilled, end),
+                    &seq.stream.k.rows(seq.prefilled, end),
+                    &seq.stream.v.rows(seq.prefilled, end),
+                );
+                seq.out.extend_from_slice(r.out.data());
+                seq.stats.merge(&r.stats);
+                seq.prefilled = end;
+                seq.compute += t0.elapsed().as_secs_f64();
+                if seq.finished() {
+                    // decode-less stream: the prompt's last row is its
+                    // first (and only) "token"
+                    seq.ttft = Some(seq.arrived.elapsed().as_secs_f64());
+                }
+            } else if seq.decoded < seq.stream.decode_steps() {
+                let t = seq.stream.prefill + seq.decoded;
+                let r = seq.session.decode(
+                    &seq.stream.q.rows(t, t + 1),
+                    &seq.stream.k.rows(t, t + 1),
+                    &seq.stream.v.rows(t, t + 1),
+                );
+                seq.out.extend_from_slice(r.out.data());
+                seq.stats.merge(&r.stats);
+                seq.decoded += 1;
+                let dt = t0.elapsed().as_secs_f64();
+                seq.compute += dt;
+                if seq.ttft.is_none() {
+                    seq.ttft = Some(seq.arrived.elapsed().as_secs_f64());
+                } else {
+                    seq.tpot.push(dt);
+                }
+            }
+        }
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].finished() {
+                done.push(self.active.remove(i).into_result());
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+}
+
+/// Request-level baseline: one-shot prefill then every decode step, on the
+/// caller's thread. Same engine, same [`SeqResult`] accounting — the
+/// sequential scheduler the continuous-batching loop replaces (and, with
+/// `max_batch = 1`, reproduces bitwise for f32 engines).
+pub fn run_sequential(engine: &AttnEngine, id: u64, stream: &SeqStream) -> SeqResult {
+    let arrived = Instant::now();
+    let mut session = engine.session();
+    let mut out = Vec::new();
+    let mut stats = SkipStats::default();
+    let mut compute = 0.0;
+    let mut ttft = None;
+    let mut tpot = Vec::new();
+    if stream.prefill > 0 {
+        let t0 = Instant::now();
+        let r = session.prefill(
+            &stream.q.rows(0, stream.prefill),
+            &stream.k.rows(0, stream.prefill),
+            &stream.v.rows(0, stream.prefill),
+        );
+        out.extend_from_slice(r.out.data());
+        stats.merge(&r.stats);
+        compute += t0.elapsed().as_secs_f64();
+        if stream.decode_steps() == 0 {
+            ttft = Some(arrived.elapsed().as_secs_f64());
+        }
+    }
+    for t in stream.prefill..stream.len() {
+        let t0 = Instant::now();
+        let r = session.decode(&stream.q.rows(t, t + 1), &stream.k.rows(t, t + 1), &stream.v.rows(t, t + 1));
+        out.extend_from_slice(r.out.data());
+        stats.merge(&r.stats);
+        let dt = t0.elapsed().as_secs_f64();
+        compute += dt;
+        if ttft.is_none() {
+            ttft = Some(arrived.elapsed().as_secs_f64());
+        } else {
+            tpot.push(dt);
+        }
+    }
+    let dv = stream.v.dim(1);
+    let rows = out.len() / dv;
+    SeqResult {
+        id,
+        out: Tensor::from_vec(&[rows, dv], out),
+        stats,
+        tokens: stream.decode_steps(),
+        ttft: ttft.unwrap_or(0.0),
+        tpot,
+        latency: arrived.elapsed().as_secs_f64(),
+        compute,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{AttnConfig, Execution};
+    use crate::sparge::SpargeParams;
+
+    fn spec(prefill: usize, decode: usize, seed: u64) -> AttnStreamSpec {
+        AttnStreamSpec { prefill, decode, d: 16, seed }
+    }
+
+    fn serving_engine(bq: usize, bk: usize, pool: usize) -> AttnEngine {
+        let cfg = AttnConfig { bq, bk, causal: true, scale: None, cw: 2, row_offset: 0 };
+        let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false };
+        AttnEngine::builder().config(cfg).sparge(&params).execution(Execution::Pool(pool)).build()
+    }
+
+    /// Drive the manager like the scheduler does, with an admission cap.
+    fn run_managed(
+        engine: &AttnEngine,
+        chunk: usize,
+        max_active: usize,
+        specs: &[AttnStreamSpec],
+    ) -> Vec<SeqResult> {
+        let mut mgr = SessionManager::new(engine, chunk);
+        let mut queue: std::collections::VecDeque<(u64, SeqStream)> =
+            specs.iter().enumerate().map(|(i, s)| (i as u64, SeqStream::synth(s))).collect();
+        let mut done = Vec::new();
+        while !queue.is_empty() || mgr.active() > 0 {
+            while mgr.active() < max_active {
+                match queue.pop_front() {
+                    Some((id, stream)) => mgr.admit(id, stream, Instant::now()),
+                    None => break,
+                }
+            }
+            done.extend(mgr.tick());
+        }
+        done.sort_by_key(|r| r.id);
+        done
+    }
+
+    #[test]
+    fn managed_loop_matches_sequential_bitwise_any_batch_size() {
+        // b_q-aligned chunks (bk | bq here) keep chunked prefill bitwise
+        // == one-shot, so the whole continuous schedule must reproduce the
+        // sequential baseline's outputs AND stats, at max_active 1 and 4.
+        let engine = serving_engine(16, 8, 2);
+        let specs =
+            [spec(40, 8, 1), spec(16, 0, 2), spec(0, 6, 3), spec(33, 5, 4), spec(64, 12, 5)];
+        let sequential: Vec<SeqResult> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| run_sequential(&engine, i as u64, &SeqStream::synth(s)))
+            .collect();
+        for max_active in [1, 4] {
+            let managed = run_managed(&engine, 16, max_active, &specs);
+            assert_eq!(managed.len(), sequential.len());
+            for (m, s) in managed.iter().zip(&sequential) {
+                assert_eq!(m.id, s.id);
+                assert_eq!(m.out, s.out, "outputs diverged (max_active {max_active}, id {})", m.id);
+                assert_eq!(m.stats, s.stats, "stats diverged (max_active {max_active}, id {})", m.id);
+                assert_eq!(m.tokens, s.tokens);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_bound_caps_prefill_ticks() {
+        // A 70-row prompt with chunk 16 takes ceil(70/16)=5 prefill ticks
+        // (interior edges at 16/32/48/64), then decode ticks.
+        let engine = serving_engine(16, 16, 1);
+        let mut mgr = SessionManager::new(&engine, 20); // aligns down to 16
+        mgr.admit(7, SeqStream::synth(&spec(70, 2, 9)), Instant::now());
+        let mut prefill_ticks = 0;
+        let mut result = None;
+        for _ in 0..16 {
+            let done = mgr.tick();
+            if mgr.active() > 0 || !done.is_empty() {
+                if done.is_empty() {
+                    prefill_ticks += 1;
+                } else {
+                    result = done.into_iter().next();
+                    break;
+                }
+            }
+        }
+        let r = result.expect("stream retired");
+        assert_eq!(r.out.dim(0), 72);
+        assert_eq!(r.tokens, 2);
+        // 5 prefill ticks + first decode tick happen before retirement
+        assert_eq!(prefill_ticks, 6);
+        assert_eq!(r.tpot.len(), 1, "second decode token records one tpot sample");
+    }
+
+    #[test]
+    fn ttft_and_tpot_accounting() {
+        let engine = serving_engine(8, 8, 1);
+        let r = run_sequential(&engine, 0, &SeqStream::synth(&spec(24, 4, 11)));
+        assert!(r.ttft > 0.0);
+        assert_eq!(r.tokens, 4);
+        assert_eq!(r.tpot.len(), 3, "tokens after the first record tpot");
+        assert!(r.tpot_mean() > 0.0);
+        assert!(r.latency >= r.ttft);
+        // decode-less stream still gets a TTFT (prompt completion)
+        let r0 = run_sequential(&engine, 1, &SeqStream::synth(&spec(16, 0, 12)));
+        assert!(r0.ttft > 0.0);
+        assert_eq!(r0.tokens, 0);
+        assert!(r0.tpot.is_empty());
+    }
+}

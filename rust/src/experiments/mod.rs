@@ -161,7 +161,7 @@ mod tests {
     #[test]
     fn all_methods_run_and_report() {
         let s = sample();
-        let cfg = AttnConfig { bq: 64, bk: 32, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 64, bk: 32, causal: false, scale: None, cw: 2, row_offset: 0 };
         let methods = [
             Method::Full,
             Method::Sparge(SpargeParams::default()),
@@ -185,7 +185,7 @@ mod tests {
     #[test]
     fn threaded_methods_match_serial() {
         let s = sample();
-        let cfg = AttnConfig { bq: 64, bk: 32, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 64, bk: 32, causal: false, scale: None, cw: 2, row_offset: 0 };
         for m in [Method::Full, Method::Sparge(SpargeParams::default()), Method::Minference { budget: 0.5 }] {
             let serial = run_method(&s, &cfg, &m);
             let par = run_method_threads(&s, &cfg, &m, 4);
@@ -204,7 +204,7 @@ mod tests {
     #[test]
     fn without_judge_masks_are_sparser_or_equal() {
         let s = sample();
-        let cfg = AttnConfig { bq: 64, bk: 32, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 64, bk: 32, causal: false, scale: None, cw: 2, row_offset: 0 };
         let with = predict(&s.q, &s.k, &cfg, &PredictParams { tau: 0.9, theta: 0.5 }).mask;
         let without = predict_without_judge(&s.q, &s.k, &cfg, 0.9);
         assert!(without.sparsity() >= with.sparsity() - 1e-12);

@@ -21,11 +21,17 @@
 //! reusable `Send + Sync` engine. `engine.attention(q, k, v)` is the
 //! one-shot (prefill) call; `engine.session()` opens stateful
 //! per-sequence serving: a growing KV cache, incremental stage-1
-//! predictor pooling, cached K quantization, and
-//! [`attention::AttnSession::decode`] steps that are bitwise-identical to
-//! a full-sequence prefill (f32, λ off). The old free functions
-//! (`attention_flash*`, `sparse_flash*`, `sparge_attention*`) remain as
-//! deprecated shims — see the migration table in [`attention`].
+//! predictor pooling, cached K quantization,
+//! [`attention::AttnSession::prefill_chunk`] offset-aware chunked prefill,
+//! and [`attention::AttnSession::decode`] steps — both bitwise-identical
+//! to a one-shot full-sequence prefill (f32, λ off). The coordinator
+//! serves many sessions at once: its continuous-batching scheduler
+//! ([`coordinator::SessionManager`] + the token-level worker loop)
+//! interleaves bounded prefill chunks and per-tick decode steps over one
+//! shared engine/pool, reporting TTFT/TPOT and per-session sparsity. The
+//! old free functions (`attention_flash*`, `sparse_flash*`,
+//! `sparge_attention*`) remain as deprecated shims — see the migration
+//! table in [`attention`].
 //!
 //! Underneath, every composition runs through **one** tiled
 //! q-block × k-block driver, [`attention::pipeline::run_tiled`], parallel

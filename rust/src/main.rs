@@ -88,6 +88,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_batch: args.get_usize("max-batch", 8),
             max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms", 20) as u64),
             capacity: args.get_usize("capacity", 1024),
+            ..Default::default()
         },
     ));
     sparge::coordinator::server::serve(coordinator, addr)
@@ -259,7 +260,7 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
     let q = Tensor::randn(&[n, 64], &mut rng);
     let k = Tensor::randn(&[n, 64], &mut rng);
     let v = Tensor::randn(&[n, 64], &mut rng);
-    let cfg = AttnConfig { bq: 64, bk: 64, causal: false, scale: None, cw: 4 };
+    let cfg = AttnConfig { bq: 64, bk: 64, causal: false, scale: None, cw: 4, row_offset: 0 };
     let params = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false };
     let res = AttnEngine::sparge(cfg, &params).attention(&q, &k, &v);
     let dense = AttnEngine::dense(cfg).attention(&q, &k, &v).out;

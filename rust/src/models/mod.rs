@@ -45,6 +45,7 @@ impl ModelCard {
             causal: matches!(self.task, Task::Text),
             scale: None,
             cw: 4,
+            row_offset: 0,
         }
     }
 

@@ -77,13 +77,15 @@ pub struct QuantScoreKernel {
     causal: bool,
     bq: usize,
     bk: usize,
+    row_offset: usize,
 }
 
 impl QuantScoreKernel {
     /// Pre-quantize Q and (smoothed) K. Under causal masking only the key
     /// blocks inside the causal domain — those whose first row is ≤ the
-    /// last query row — are ever scored, so quantization stops at that
-    /// bound instead of wastefully covering the unreachable upper triangle.
+    /// last query row's absolute position (`cfg.row_offset` + local row) —
+    /// are ever scored, so quantization stops at that bound instead of
+    /// wastefully covering the unreachable upper triangle.
     pub fn new(q: &Tensor, k: &Tensor, cfg: &AttnConfig) -> QuantScoreKernel {
         assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
         let n = q.dim(0);
@@ -97,9 +99,10 @@ impl QuantScoreKernel {
         let kmean = quant::channel_mean(k);
         let ksm = quant::smooth(k, &kmean);
 
-        // Causal domain: the deepest q-tile ends at row n, reaching key
-        // blocks bj with bj·bk < n.
-        let k_reach = if cfg.causal { nk.min(n.div_ceil(cfg.bk) * cfg.bk) } else { nk };
+        // Causal domain: the deepest q-tile ends at absolute position
+        // row_offset + n, reaching key blocks bj with bj·bk < row_offset + n.
+        let k_reach =
+            if cfg.causal { nk.min((cfg.row_offset + n).div_ceil(cfg.bk) * cfg.bk) } else { nk };
         let qb = quant::quantize_blocks(q, cfg.bq);
         let kb = if k_reach == nk {
             quant::quantize_blocks(&ksm, cfg.bk)
@@ -107,7 +110,15 @@ impl QuantScoreKernel {
             quant::quantize_blocks(&ksm.rows(0, k_reach), cfg.bk)
         };
         let scale = cfg.scale_for(q.dim(1));
-        QuantScoreKernel { qb, kb, scale, causal: cfg.causal, bq: cfg.bq, bk: cfg.bk }
+        QuantScoreKernel {
+            qb,
+            kb,
+            scale,
+            causal: cfg.causal,
+            bq: cfg.bq,
+            bk: cfg.bk,
+            row_offset: cfg.row_offset,
+        }
     }
 }
 
@@ -117,13 +128,15 @@ impl ScoreKernel for QuantScoreKernel {
         let kblk = &self.kb[k0 / self.bk];
         debug_assert_eq!(qblk.rows, q1 - q0);
         debug_assert_eq!(kblk.rows, k1 - k0);
-        quant_score_block(qblk, kblk, q0, k0, self.scale, self.causal, out);
+        quant_score_block(qblk, kblk, self.row_offset + q0, k0, self.scale, self.causal, out);
     }
 }
 
 /// Dequantized, optionally causal-masked score block for one (Q, K) block
-/// pair — shared by [`QuantScoreKernel`] and the session's decode-step
-/// kernel (which borrows cached K blocks instead of owning them).
+/// pair — shared by [`QuantScoreKernel`] and the session's cache kernel
+/// (which borrows cached K blocks instead of owning them). `q0` is the
+/// **absolute position** of the block's first query row (callers add
+/// their `row_offset`); `k0` is the absolute first key row.
 pub(crate) fn quant_score_block(
     qblk: &QuantBlock,
     kblk: &QuantBlock,
@@ -254,7 +267,7 @@ mod tests {
     use crate::util::rng::Pcg;
 
     fn cfg(bq: usize, bk: usize, causal: bool, cw: usize) -> AttnConfig {
-        AttnConfig { bq, bk, causal, scale: None, cw }
+        AttnConfig { bq, bk, causal, scale: None, cw, row_offset: 0 }
     }
 
     fn dense_params() -> SpargeParams {

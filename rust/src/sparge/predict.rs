@@ -168,9 +168,10 @@ pub fn predict_pooled(
     }
     if cfg.causal {
         // Block (i,j) is outside the causal domain when its *first* key row
-        // is past the q-block's last query row.
+        // is past the q-block's last query row's absolute position
+        // (`cfg.row_offset` shifts chunked-prefill query rows).
         for i in 0..tm {
-            let q_last = ((i + 1) * cfg.bq).min(q.dim(0)) - 1;
+            let q_last = cfg.row_offset + ((i + 1) * cfg.bq).min(q.dim(0)) - 1;
             for j in 0..tn {
                 if j * cfg.bk > q_last {
                     *s_hat.at2_mut(i, j) = f32::NEG_INFINITY;
@@ -204,7 +205,7 @@ pub fn predict_pooled(
     // row/col fills may have re-set them); the kernel never visits them.
     if cfg.causal {
         for i in 0..tm {
-            let q_last = ((i + 1) * cfg.bq).min(q.dim(0)) - 1;
+            let q_last = cfg.row_offset + ((i + 1) * cfg.bq).min(q.dim(0)) - 1;
             for j in 0..tn {
                 if j * cfg.bk > q_last {
                     mask.set(i, j, false);
@@ -295,10 +296,14 @@ pub struct KPool {
     rows: Vec<usize>,
     /// Per-block self-similarity.
     sims: Vec<f32>,
-    /// Full scans over the whole input (the prefill bulk [`KPool::build`]).
+    /// Full scans over the whole input (the prefill bulk [`KPool::build`],
+    /// or an [`KPool::extend`] that started from an empty pool).
     pub full_recomputes: usize,
     /// Single-row incremental updates (decode appends).
     pub incremental_updates: usize,
+    /// Blockwise multi-row extensions (chunked-prefill appends) that only
+    /// scanned the new rows plus the partially-filled boundary block.
+    pub chunk_extends: usize,
 }
 
 impl KPool {
@@ -312,6 +317,7 @@ impl KPool {
             sims: Vec::new(),
             full_recomputes: 0,
             incremental_updates: 0,
+            chunk_extends: 0,
         }
     }
 
@@ -340,6 +346,69 @@ impl KPool {
             r0 = r1;
         }
         self.full_recomputes += 1;
+    }
+
+    /// Blockwise multi-row extension for chunked prefill: bring the pool
+    /// from `rows_before` rows up to `cache.len()/d` rows, where `cache`
+    /// is the **full** K cache (old rows followed by the new chunk). Only
+    /// the partially-filled boundary block and the new rows are scanned;
+    /// earlier full blocks are untouched.
+    ///
+    /// Bitwise contract: sums accumulate rows in arrival order exactly
+    /// like [`KPool::build`] (one block at a time, rows ascending), and
+    /// every touched block's self-similarity is recomputed with
+    /// [`cos_sim`] over the block's current rows — so after any sequence
+    /// of `build`/`extend`/`append_row` calls, [`KPool::means`] and
+    /// [`KPool::sims`] equal a from-scratch [`compress_blocks`] of the
+    /// same rows exactly. Counter discipline: an extend from an empty
+    /// pool is the bulk build (`full_recomputes`); otherwise it counts
+    /// one `chunk_extends`.
+    pub fn extend(&mut self, rows_before: usize, cache: &[f32]) {
+        assert_eq!(cache.len() % self.d, 0, "KPool::extend cache dim");
+        let total = cache.len() / self.d;
+        debug_assert_eq!(self.rows.iter().sum::<usize>(), rows_before, "pool out of sync with cache");
+        assert!(total > rows_before, "KPool::extend needs new rows");
+        let from_empty = self.rows.is_empty();
+        let mut r = rows_before;
+        // top up the partially-filled boundary block first
+        if let Some(&last) = self.rows.last() {
+            if last < self.bk {
+                let b = self.rows.len() - 1;
+                let r1 = (b * self.bk + self.bk).min(total);
+                for row in r..r1 {
+                    for (o, &v) in self.sums[b * self.d..(b + 1) * self.d]
+                        .iter_mut()
+                        .zip(&cache[row * self.d..(row + 1) * self.d])
+                    {
+                        *o += v;
+                    }
+                }
+                self.rows[b] = r1 - b * self.bk;
+                self.sims[b] = cos_sim(&cache[b * self.bk * self.d..r1 * self.d], self.rows[b], self.d);
+                r = r1;
+            }
+        }
+        // then whole fresh blocks (the last may be partial)
+        while r < total {
+            let r1 = (r + self.bk).min(total);
+            let base = self.sums.len();
+            self.sums.resize(base + self.d, 0.0);
+            for row in r..r1 {
+                for (o, &v) in
+                    self.sums[base..].iter_mut().zip(&cache[row * self.d..(row + 1) * self.d])
+                {
+                    *o += v;
+                }
+            }
+            self.rows.push(r1 - r);
+            self.sims.push(cos_sim(&cache[r * self.d..r1 * self.d], r1 - r, self.d));
+            r = r1;
+        }
+        if from_empty {
+            self.full_recomputes += 1;
+        } else {
+            self.chunk_extends += 1;
+        }
     }
 
     /// Incrementally append one row. `tail` must be the raw rows of the
@@ -394,7 +463,7 @@ mod tests {
     use crate::util::rng::Pcg;
 
     fn cfg(bq: usize, bk: usize, causal: bool) -> AttnConfig {
-        AttnConfig { bq, bk, causal, scale: None, cw: 2 }
+        AttnConfig { bq, bk, causal, scale: None, cw: 2, row_offset: 0 }
     }
 
     #[test]
@@ -618,6 +687,42 @@ mod tests {
         let tail_start = (n / bk) * bk;
         pool.append_row(extra.row(0), &all[tail_start * d..(n + 1) * d]);
         assert_eq!(pool.full_recomputes, 1);
+        assert_eq!(pool.incremental_updates, 1);
+        let full = Tensor::from_vec(&[n + 1, d], all);
+        let (tokens, sims) = compress_blocks(&full, bk);
+        assert_eq!(pool.means(), tokens);
+        assert_eq!(pool.sims(), &sims[..]);
+    }
+
+    #[test]
+    fn kpool_extend_matches_compress_blocks_bitwise() {
+        // Chunked growth: uneven chunk edges, off the bk grid on purpose.
+        // After every extend the pool must be bit-identical to a
+        // from-scratch compress_blocks of the rows so far, and the counter
+        // discipline must hold (first extend = the bulk build, the rest
+        // are chunk extends; appends stay incremental afterwards).
+        let mut rng = Pcg::seeded(614);
+        let (n, d, bk) = (61, 8, 8);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let mut pool = KPool::new(bk, d);
+        let edges = [0usize, 13, 14, 40, 61];
+        for w in edges.windows(2) {
+            let (r0, r1) = (w[0], w[1]);
+            pool.extend(r0, &k.data()[..r1 * d]);
+            let prefix = k.rows(0, r1);
+            let (tokens, sims) = compress_blocks(&prefix, bk);
+            assert_eq!(pool.means(), tokens, "means diverge at rows {r1}");
+            assert_eq!(pool.sims(), &sims[..], "sims diverge at rows {r1}");
+        }
+        assert_eq!(pool.full_recomputes, 1);
+        assert_eq!(pool.chunk_extends, edges.len() - 2);
+        assert_eq!(pool.incremental_updates, 0);
+        // a decode append after chunked growth stays incremental
+        let extra = Tensor::randn(&[1, d], &mut rng);
+        let mut all = k.data().to_vec();
+        all.extend_from_slice(extra.data());
+        let tail_start = (n / bk) * bk;
+        pool.append_row(extra.row(0), &all[tail_start * d..(n + 1) * d]);
         assert_eq!(pool.incremental_updates, 1);
         let full = Tensor::from_vec(&[n + 1, d], all);
         let (tokens, sims) = compress_blocks(&full, bk);

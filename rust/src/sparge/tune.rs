@@ -169,7 +169,7 @@ mod tests {
     #[test]
     fn tuned_params_respect_error_bounds() {
         let mut rng = Pcg::seeded(41);
-        let cfg = AttnConfig { bq: 32, bk: 16, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 32, bk: 16, causal: false, scale: None, cw: 2, row_offset: 0 };
         let samples: Vec<CalibSample> = (0..3).map(|_| local_sample(&mut rng, 256, 16, 8)).collect();
         let opts = TuneOptions { l1: 0.05, l2: 0.06, ..Default::default() };
         let res = tune_layer(&samples, &cfg, &opts);
@@ -181,7 +181,7 @@ mod tests {
     #[test]
     fn tighter_bound_gives_denser_params() {
         let mut rng = Pcg::seeded(42);
-        let cfg = AttnConfig { bq: 32, bk: 16, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 32, bk: 16, causal: false, scale: None, cw: 2, row_offset: 0 };
         let samples: Vec<CalibSample> = (0..2).map(|_| local_sample(&mut rng, 192, 16, 6)).collect();
         let loose = tune_layer(&samples, &cfg, &TuneOptions { l1: 0.10, l2: 0.12, ..Default::default() });
         let tight = tune_layer(&samples, &cfg, &TuneOptions { l1: 0.005, l2: 0.006, ..Default::default() });
@@ -194,7 +194,7 @@ mod tests {
     fn fallback_is_dense_when_nothing_fits() {
         // Impossible bound -> dense fallback with ~zero error.
         let mut rng = Pcg::seeded(43);
-        let cfg = AttnConfig { bq: 16, bk: 16, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: false, scale: None, cw: 2, row_offset: 0 };
         let samples = vec![local_sample(&mut rng, 64, 8, 4)];
         let opts = TuneOptions {
             l1: 1e-12,

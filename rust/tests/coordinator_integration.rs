@@ -57,7 +57,7 @@ fn concurrent_burst_is_fully_served() {
 #[test]
 fn engine_scoring_and_params_roundtrip() {
     let Some(c) = coordinator() else { return };
-    let engine = c.engine();
+    let engine = c.engine().expect("model engine");
     let nll = engine.score_nll(b"the attention is sparse and the model is fast. ", AttnMode::Dense).unwrap();
     assert!(nll.is_finite() && nll > 0.0);
     // params roundtrip
@@ -165,7 +165,12 @@ fn backpressure_rejects_when_full() {
     let engine = EngineHandle::spawn(&dir).expect("engine");
     let c = Coordinator::start(
         engine,
-        BatchPolicy { max_batch: 1, max_wait: std::time::Duration::from_millis(1), capacity: 2 },
+        BatchPolicy {
+            max_batch: 1,
+            max_wait: std::time::Duration::from_millis(1),
+            capacity: 2,
+            ..Default::default()
+        },
     );
     // flood faster than the engine can drain; some submissions must fail
     let mut rejected = 0;

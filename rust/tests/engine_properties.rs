@@ -40,7 +40,7 @@ fn tau_monotonicity_on_structured_workloads() {
     Cases::new(9001, 8).check(|rng| {
         let n = 512 + rng.range(0, 4) * 128;
         let s = synthetic::generate(&SyntheticSpec::lm_like(n, 32), rng);
-        let cfg = AttnConfig { bq: 64, bk: 32, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 64, bk: 32, causal: false, scale: None, cw: 2, row_offset: 0 };
         let dense = dense_flash(&s.q, &s.k, &s.v, &cfg);
         let mut last_sparsity = -1.0f64;
         for tau in [0.99f32, 0.9, 0.7, 0.5] {
@@ -62,7 +62,7 @@ fn tau_monotonicity_on_structured_workloads() {
 fn outputs_bounded_by_value_range() {
     Cases::new(9002, 6).check(|rng| {
         let s = synthetic::generate(&SyntheticSpec::lm_like(256, 16), rng);
-        let cfg = AttnConfig { bq: 32, bk: 32, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 32, bk: 32, causal: false, scale: None, cw: 2, row_offset: 0 };
         let vmax = s.v.abs_max();
         let masks = [
             baselines::minference_mask(&s.q, &s.k, &cfg, 0.5),
@@ -89,7 +89,7 @@ fn attention_commutes_with_permutation() {
     let spec = VideoSpec { t: 2, h: 8, w: 8, d: 16, smooth: 0.9, signal: 6.0 };
     let mut rng = Pcg::seeded(9003);
     let s = video::generate_grid(&spec, &mut rng);
-    let cfg = AttnConfig { bq: 16, bk: 16, causal: false, scale: None, cw: 2 };
+    let cfg = AttnConfig { bq: 16, bk: 16, causal: false, scale: None, cw: 2, row_offset: 0 };
 
     use sparge::sparge::hilbert::{invert_order, permute_rows, token_order, Permutation};
     let dense = dense_flash(&s.q, &s.k, &s.v, &cfg);
@@ -107,7 +107,7 @@ fn attention_commutes_with_permutation() {
 fn lambda_only_adds_sparsity() {
     Cases::new(9004, 6).check(|rng| {
         let s = synthetic::generate(&SyntheticSpec::lm_like(384, 16), rng);
-        let cfg = AttnConfig { bq: 32, bk: 32, causal: rng.chance(0.5), scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 32, bk: 32, causal: rng.chance(0.5), scale: None, cw: 2, row_offset: 0 };
         let pred = predict(&s.q, &s.k, &cfg, &PredictParams { tau: 0.9, theta: 0.3 });
         let p1 = SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false };
         let p2 = SpargeParams { lambda: Some(-5.0), ..p1 };
@@ -126,7 +126,7 @@ fn lambda_only_adds_sparsity() {
 fn quant_and_f32_kernels_agree() {
     Cases::new(9005, 5).check(|rng| {
         let s = synthetic::generate(&SyntheticSpec::lm_like(256, 32), rng);
-        let cfg = AttnConfig { bq: 32, bk: 32, causal: false, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 32, bk: 32, causal: false, scale: None, cw: 2, row_offset: 0 };
         let mask = BlockMask::new_all(cfg.n_qblocks(256), cfg.n_kblocks(256), true);
         let base = SpargeParams { tau: 1.0, theta: -1.0, lambda: None, quant: false };
         let (f32_out, _) = masked(&s.q, &s.k, &s.v, &mask, &cfg, &base);

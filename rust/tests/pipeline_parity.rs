@@ -69,7 +69,7 @@ fn reference_flash_stats(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -
             }
             stats.qk_total += 1;
             stats.pv_total += 1;
-            score_block(q, k, q0, q1, k0, k1, scale, cfg.causal, &mut sbuf);
+            score_block(q, k, q0, q1, k0, k1, 0, scale, cfg.causal, &mut sbuf);
             tile.ingest(
                 &sbuf[..(q1 - q0) * (k1 - k0)],
                 k1 - k0,
@@ -120,7 +120,7 @@ fn reference_sparse_f32(
                 stats.pv_skipped += 1;
                 continue;
             }
-            score_block(q, k, q0, q1, k0, k1, scale, cfg.causal, &mut sbuf);
+            score_block(q, k, q0, q1, k0, k1, 0, scale, cfg.causal, &mut sbuf);
             let vb = &v.data()[k0 * dv..k1 * dv];
             tile.ingest(&sbuf[..(q1 - q0) * (k1 - k0)], k1 - k0, vb, lambda, cfg.cw, &mut stats);
         }
@@ -229,6 +229,7 @@ fn random_cfg(rng: &mut Pcg) -> AttnConfig {
         causal: rng.chance(0.5),
         scale: None,
         cw: rng.range(1, 5),
+        row_offset: 0,
     }
 }
 
@@ -297,7 +298,7 @@ fn baseline_mask_parity() {
     Cases::standard(9104).check(|rng| {
         let n = rng.range(32, 128);
         let d = 8;
-        let cfg = AttnConfig { bq: 16, bk: 16, causal: rng.chance(0.5), scale: None, cw: 2 };
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: rng.chance(0.5), scale: None, cw: 2, row_offset: 0 };
         let q = Tensor::randn(&[n, d], rng);
         let k = Tensor::randn(&[n, d], rng);
         let v = Tensor::randn(&[n, d], rng);

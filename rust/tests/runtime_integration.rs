@@ -78,7 +78,7 @@ fn sparge_artifact_matches_rust_sparge_semantics() {
     let density = out[1].scalar().unwrap();
     assert!((0.0..=1.0).contains(&density), "density {density}");
 
-    let cfg = AttnConfig { bq, bk, causal: false, scale: None, cw };
+    let cfg = AttnConfig { bq, bk, causal: false, scale: None, cw, row_offset: 0 };
     let params = SpargeParams { tau, theta, lambda: Some(lambda), quant: false };
     let rust = AttnEngine::sparge(cfg, &params).attention(&q, &k, &v);
     let dense = AttnEngine::dense(cfg).attention(&q, &k, &v).out;

@@ -1,13 +1,16 @@
-//! Golden suite for the stateful serving path: `AttnSession` decode must
-//! reproduce full-sequence prefill **bitwise** (f32, λ off — see the
-//! parity contract in `attention::engine`), the stage-1 predictor must
-//! stay incremental across decode steps (update counters, never a full
-//! `compress_blocks` recompute), sessions must be deterministic and
-//! reusable, and results must be invariant to the engine's worker-pool
-//! size.
+//! Golden suite for the stateful serving path: `AttnSession` decode and
+//! **chunked prefill** must reproduce one-shot full-sequence prefill
+//! **bitwise** (f32, λ off — see the parity contract in
+//! `attention::engine`; chunk edges on `b_q` boundaries additionally
+//! reproduce the one-shot `SkipStats` and extend parity to λ-on, the
+//! predicted policy, and INT8), the stage-1 predictor must stay
+//! incremental across decode steps and blockwise across prefill chunks
+//! (update counters, never a full `compress_blocks` recompute), sessions
+//! must be deterministic and reusable, and results must be invariant to
+//! the engine's worker-pool size.
 
 use sparge::attention::types::{AttnConfig, BlockMask};
-use sparge::attention::{AttnEngine, Execution, SparsityPolicy};
+use sparge::attention::{AttnEngine, Execution, Precision, SparsityPolicy};
 use sparge::sparge::kernel::SpargeParams;
 use sparge::tensor::Tensor;
 use sparge::util::rng::Pcg;
@@ -37,13 +40,226 @@ fn run_split(engine: &AttnEngine, q: &Tensor, k: &Tensor, v: &Tensor, n0: usize)
     Tensor::from_vec(&[n, v.dim(1)], data)
 }
 
+/// Prefill through chunks ending at `edges` (strictly increasing; the
+/// last edge is the prompt length), then decode row by row to `n`.
+/// Returns the assembled output rows and the summed `SkipStats` over
+/// every chunk and decode step.
+fn run_chunked(
+    engine: &AttnEngine,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    edges: &[usize],
+) -> (Tensor, sparge::attention::SkipStats) {
+    let n = q.dim(0);
+    let mut session = engine.session();
+    let mut data = Vec::with_capacity(n * v.dim(1));
+    let mut stats = sparge::attention::SkipStats::default();
+    let mut start = 0;
+    for &end in edges {
+        let r = session.prefill_chunk(&q.rows(start, end), &k.rows(start, end), &v.rows(start, end));
+        assert_eq!(r.out.shape(), &[end - start, v.dim(1)]);
+        data.extend_from_slice(r.out.data());
+        stats.merge(&r.stats);
+        start = end;
+    }
+    for t in start..n {
+        let r = session.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1));
+        data.extend_from_slice(r.out.data());
+        stats.merge(&r.stats);
+    }
+    assert_eq!(session.len(), n);
+    (Tensor::from_vec(&[n, v.dim(1)], data), stats)
+}
+
+/// One-shot prefill of the first `edges.last()` rows + decode of the
+/// rest, with summed stats — the chunked runs' reference.
+fn run_one_shot(
+    engine: &AttnEngine,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    n0: usize,
+) -> (Tensor, sparge::attention::SkipStats) {
+    run_chunked(engine, q, k, v, &[n0])
+}
+
+#[test]
+fn chunked_prefill_matches_one_shot_bitwise_dense() {
+    // Output parity holds for ANY chunk edges (per-row independence +
+    // exact float no-ops on masked tails); stats parity additionally
+    // holds when interior edges sit on b_q boundaries — including edges
+    // that are OFF the b_k grid (bq=8, bk=16: edge 24 splits a K block).
+    let n = 57;
+    let (q, k, v) = qkv(n, 16, 2024);
+    for (bq, bk, edges, stats_must_match) in [
+        (16, 8, vec![16, 48, 57], true),  // b_q-aligned interior edges
+        (8, 16, vec![24, 40, 57], true),  // b_q-aligned, off the b_k grid
+        (16, 8, vec![13, 30, 57], false), // ragged edges: outputs only
+        (16, 16, vec![57], true),         // single chunk == prefill()
+        (8, 8, vec![8, 16, 24, 32, 40, 48, 56, 57], true), // many tiny chunks
+    ] {
+        let cfg = AttnConfig { bq, bk, causal: true, scale: None, cw: 2, row_offset: 0 };
+        let engine = AttnEngine::dense(cfg);
+        let (full, full_stats) = run_one_shot(&engine, &q, &k, &v, n);
+        let (chunked, chunked_stats) = run_chunked(&engine, &q, &k, &v, &edges);
+        assert_eq!(chunked, full, "chunked prefill diverged (bq={bq} bk={bk} edges={edges:?})");
+        if stats_must_match {
+            assert_eq!(chunked_stats, full_stats, "stats diverged (bq={bq} bk={bk} edges={edges:?})");
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_then_decode_matches_one_shot_exactly() {
+    // The acceptance criterion end to end: N-chunk prefill followed by
+    // decode steps must produce identical output rows AND identical
+    // summed SkipStats to one-shot prefill + the same decode steps, for
+    // dense and external-mask policies (f32, λ off).
+    let (n, n0, d) = (96, 72, 16);
+    let (q, k, v) = qkv(n, d, 2025);
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let edges = [16, 64, 72]; // uneven chunks, b_q-aligned
+    {
+        let engine = AttnEngine::dense(cfg);
+        let (full, fs) = run_one_shot(&engine, &q, &k, &v, n0);
+        let (chunked, cs) = run_chunked(&engine, &q, &k, &v, &edges);
+        assert_eq!(chunked, full, "dense chunked+decode diverged");
+        assert_eq!(cs, fs, "dense chunked+decode stats diverged");
+    }
+    {
+        let (tm, tn) = (cfg.n_qblocks(n), cfg.n_kblocks(n));
+        let mut rng = Pcg::seeded(77);
+        let mut mask = BlockMask::new_all(tm, tn, false);
+        for i in 0..tm {
+            mask.set(i, 0, true);
+            for j in 0..tn {
+                if rng.chance(0.5) {
+                    mask.set(i, j, true);
+                }
+            }
+        }
+        let engine = AttnEngine::builder()
+            .config(cfg)
+            .policy(SparsityPolicy::External { mask, lambda: None })
+            .build();
+        let (full, fs) = run_one_shot(&engine, &q, &k, &v, n0);
+        let (chunked, cs) = run_chunked(&engine, &q, &k, &v, &edges);
+        assert!(fs.sparsity() > 0.0, "mask produced no skips; test is vacuous");
+        assert_eq!(chunked, full, "external chunked+decode diverged");
+        assert_eq!(cs, fs, "external chunked+decode stats diverged");
+    }
+}
+
+#[test]
+fn chunked_prefill_lambda_on_is_bitwise_with_aligned_edges() {
+    // Stage-2 λ decisions are per-tile; b_q-aligned chunk edges reproduce
+    // the one-shot tiling, so even λ-on runs stay bitwise-equal.
+    let (n, d) = (128, 16);
+    let (mut q, mut k, v) = qkv(n, d, 2026);
+    for r in 0..8 {
+        for x in k.row_mut(r) {
+            *x *= 10.0;
+        }
+    }
+    for r in 0..n {
+        for x in q.row_mut(r) {
+            *x *= 2.0;
+        }
+    }
+    let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 4, row_offset: 0 };
+    let mask = BlockMask::new_all(8, 8, true);
+    let engine = AttnEngine::builder()
+        .config(cfg)
+        .policy(SparsityPolicy::External { mask, lambda: Some(-4.0) })
+        .build();
+    let (full, fs) = run_one_shot(&engine, &q, &k, &v, 96);
+    assert!(fs.pv_skipped_frac > 0.0, "λ never fired; test is vacuous");
+    let (chunked, cs) = run_chunked(&engine, &q, &k, &v, &[32, 80, 96]);
+    assert_eq!(chunked, full, "λ-on aligned chunked prefill diverged");
+    assert_eq!(cs, fs, "λ-on aligned chunked stats diverged");
+}
+
+#[test]
+fn chunked_prefill_predicted_policy_is_bitwise_and_blockwise_incremental() {
+    // Predicted-policy parity (edges on both the b_q and b_k grids:
+    // bk | bq makes every b_q edge suffice), plus the KPool counter
+    // discipline: chunk 1 is the bulk build, later chunks are blockwise
+    // extends, decode appends stay incremental.
+    let (n, n0, d) = (88, 64, 16);
+    let (q, k, v) = qkv(n, d, 2027);
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false };
+    let engine = AttnEngine::sparge(cfg, &params);
+    let (full, _) = run_one_shot(&engine, &q, &k, &v, n0);
+
+    let mut session = engine.session();
+    let edges = [16, 48, 64];
+    let mut data = Vec::new();
+    let mut start = 0;
+    for (ci, &end) in edges.iter().enumerate() {
+        let r = session.prefill_chunk(&q.rows(start, end), &k.rows(start, end), &v.rows(start, end));
+        data.extend_from_slice(r.out.data());
+        let c = session.predictor_counters();
+        assert_eq!(c.full_recomputes, 1, "chunk {ci} re-ran a bulk scan");
+        assert_eq!(c.chunk_extends, ci, "chunk {ci} missed a blockwise extend");
+        assert_eq!(c.incremental_updates, 0);
+        start = end;
+    }
+    for t in n0..n {
+        let r = session.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1));
+        data.extend_from_slice(r.out.data());
+        let c = session.predictor_counters();
+        assert_eq!((c.full_recomputes, c.chunk_extends), (1, edges.len() - 1));
+        assert_eq!(c.incremental_updates, t + 1 - n0, "decode step {t} missed an incremental update");
+    }
+    let chunked = Tensor::from_vec(&[n, d], data);
+    assert_eq!(chunked, full, "predicted-policy chunked prefill diverged");
+}
+
+#[test]
+fn chunked_prefill_int8_is_bitwise_with_aligned_edges_and_shared_mean() {
+    // INT8 parity needs (a) chunk edges on both block grids so Q/K quant
+    // blocks coincide with the one-shot blocks, and (b) a smoothing mean
+    // the first chunk reproduces exactly — ± paired K rows make every
+    // chunk's channel mean exactly +0.0, so the frozen mean equals the
+    // one-shot global mean bit-for-bit.
+    let (n, d) = (96, 16);
+    let (q, mut k, v) = qkv(n, d, 2028);
+    for r in (0..n).step_by(2) {
+        let neg: Vec<f32> = k.row(r).iter().map(|&x| -x).collect();
+        k.row_mut(r + 1).copy_from_slice(&neg);
+    }
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let engine = AttnEngine::builder().config(cfg).precision(Precision::Int8).build();
+    let (full, fs) = run_one_shot(&engine, &q, &k, &v, 80);
+    let (chunked, cs) = run_chunked(&engine, &q, &k, &v, &[32, 48, 80]);
+    assert_eq!(chunked, full, "int8 aligned chunked prefill diverged");
+    assert_eq!(cs, fs, "int8 aligned chunked stats diverged");
+}
+
+#[test]
+fn chunked_prefill_int8_ragged_edges_track_the_f32_oracle() {
+    // General INT8 chunking (frozen first-chunk mean, ragged edges) is
+    // approximate by design; it must stay within the INT8 budget of the
+    // f32 dense oracle.
+    let (n, d) = (72, 16);
+    let (q, k, v) = qkv(n, d, 2029);
+    let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let engine = AttnEngine::builder().config(cfg).precision(Precision::Int8).build();
+    let (chunked, _) = run_chunked(&engine, &q, &k, &v, &[11, 40, 60]);
+    let oracle = sparge::attention::attention_naive(&q, &k, &v, &cfg);
+    let err = sparge::util::prop::rel_l1(chunked.data(), oracle.data());
+    assert!(err < 0.05, "int8 ragged chunked prefill rel-L1 {err}");
+}
+
 #[test]
 fn decode_matches_prefill_bitwise_dense() {
     // ragged everywhere on purpose: n not a multiple of bq or bk, and the
     // prefill/decode split lands mid-block
     for (n, n0, bq, bk) in [(57, 25, 16, 8), (64, 32, 16, 16), (41, 0, 8, 4), (33, 32, 32, 32)] {
         let (q, k, v) = qkv(n, 16, 1000 + n as u64);
-        let cfg = AttnConfig { bq, bk, causal: true, scale: None, cw: 2 };
+        let cfg = AttnConfig { bq, bk, causal: true, scale: None, cw: 2, row_offset: 0 };
         let engine = AttnEngine::dense(cfg);
         let full = engine.attention(&q, &k, &v);
         let split = run_split(&engine, &q, &k, &v, n0);
@@ -56,7 +272,7 @@ fn decode_matches_prefill_bitwise_external_mask() {
     // real stage-1 skipping during decode, still bitwise-equal to prefill
     let (n, n0, d) = (96, 40, 16);
     let (q, k, v) = qkv(n, d, 42);
-    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2 };
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
     let mut rng = Pcg::seeded(43);
     let (tm, tn) = (cfg.n_qblocks(n), cfg.n_kblocks(n));
     let mut mask = BlockMask::new_all(tm, tn, false);
@@ -85,7 +301,7 @@ fn decode_predictor_is_incremental_with_counters() {
     // bulk build is the only full scan in the session's lifetime).
     let (n, n0, d) = (80, 48, 16);
     let (q, k, v) = qkv(n, d, 7);
-    let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2 };
+    let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2, row_offset: 0 };
     let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false };
     let engine = AttnEngine::sparge(cfg, &params);
     let mut session = engine.session();
@@ -114,7 +330,7 @@ fn decode_parity_holds_while_predictor_stays_incremental() {
     // tie-breaks) while the stage-1 predictor still pools every row.
     let (n, n0, d) = (72, 40, 16);
     let (q, k, v) = qkv(n, d, 91);
-    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2 };
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
     let params = SpargeParams { tau: 0.9, theta: 1.5, lambda: None, quant: false };
     let engine = AttnEngine::sparge(cfg, &params);
     let full = engine.attention(&q, &k, &v);
@@ -143,7 +359,7 @@ fn session_reuse_is_deterministic() {
     // outputs; plus two sessions concurrently from two threads
     let (n, n0, d) = (48, 24, 8);
     let (q, k, v) = qkv(n, d, 11);
-    let cfg = AttnConfig { bq: 8, bk: 8, causal: true, scale: None, cw: 2 };
+    let cfg = AttnConfig { bq: 8, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
     let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: Some(-6.0), quant: false };
     let engine = AttnEngine::sparge(cfg, &params);
     let a = run_split(&engine, &q, &k, &v, n0);
@@ -163,7 +379,7 @@ fn session_reuse_is_deterministic() {
 fn pool_size_invariance_across_1_2_8_workers() {
     let (n, n0, d) = (96, 64, 16);
     let (q, k, v) = qkv(n, d, 12);
-    let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2 };
+    let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2, row_offset: 0 };
     let reference = {
         let engine = AttnEngine::dense(cfg);
         run_split(&engine, &q, &k, &v, n0)
@@ -195,7 +411,7 @@ fn decode_lambda_skips_count_whole_blocks() {
         }
     }
     let mask = BlockMask::new_all(8, 8, true);
-    let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 4 };
+    let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 4, row_offset: 0 };
     let engine = AttnEngine::builder()
         .config(cfg)
         .policy(SparsityPolicy::External { mask, lambda: Some(-4.0) })
