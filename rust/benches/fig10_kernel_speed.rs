@@ -18,7 +18,10 @@
 //!
 //! Run: `cargo bench --bench fig10_kernel_speed`
 
+use std::time::Instant;
+
 use sparge::attention::types::AttnConfig;
+use sparge::attention::{AttnEngine, Execution, KvSplit};
 use sparge::experiments::{bench_reps, bench_threads, full_scale, run_method_threads, Method};
 use sparge::sparge::kernel::SpargeParams;
 use sparge::util::rng::Pcg;
@@ -120,4 +123,39 @@ fn main() {
         ]);
     }
     scaling.print();
+
+    // -- split-KV decode scaling: one session, 1-row steps ---------------
+    // run_tiled has a single query-tile row to hand out at decode, so its
+    // wall-clock cannot scale with threads; the split-KV driver fans
+    // contiguous KV spans of the cached keys across the pool instead
+    // (S = ceil(n_kblocks / span) from the cache length, so outputs are
+    // bitwise-identical at every pool size).
+    let steps = 32;
+    let n0 = n - steps;
+    println!("\nsplit-KV decode scaling — one session, cache {n0} keys, {steps} steps, d 128");
+    let mut dec = Table::new(
+        "decode tokens/s by driver (dense f32 engine; prefill untimed)",
+        &["pool", "split-KV off", "split-KV on", "on/off"],
+    );
+    let decode_rate = |pool: usize, split: KvSplit| -> f64 {
+        let engine = AttnEngine::builder()
+            .config(cfg)
+            .execution(Execution::Pool(pool))
+            .kv_split(split)
+            .build();
+        let mut session = engine.session();
+        session.prefill(&ss.q.rows(0, n0), &ss.k.rows(0, n0), &ss.v.rows(0, n0));
+        let t0 = Instant::now();
+        for t in n0..n {
+            session.decode(&ss.q.rows(t, t + 1), &ss.k.rows(t, t + 1), &ss.v.rows(t, t + 1));
+        }
+        steps as f64 / t0.elapsed().as_secs_f64()
+    };
+    for pool in [1usize, 2, threads.max(4)] {
+        let off = decode_rate(pool, KvSplit::Off);
+        let on = decode_rate(pool, KvSplit::Auto);
+        dec.row(&[format!("{pool}"), fnum(off, 1), fnum(on, 1), format!("{:.2}x", on / off)]);
+    }
+    dec.print();
+    println!("expected: the off column is flat in pool size; the on column climbs with it");
 }

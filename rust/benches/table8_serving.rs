@@ -23,9 +23,10 @@
 
 use std::time::{Duration, Instant};
 
-use sparge::attention::{AttnConfig, AttnEngine, Execution};
+use sparge::attention::{AttnConfig, AttnEngine, Execution, KvSplit};
 use sparge::coordinator::{
     run_sequential, AttnMode, AttnStreamSpec, BatchPolicy, Coordinator, SeqStream, ServeOptions,
+    SessionManager,
 };
 use sparge::experiments::{bench_threads, full_scale};
 use sparge::sparge::SpargeParams;
@@ -105,6 +106,44 @@ fn continuous_run(opts: &ServeOptions, max_batch: usize, specs: &[AttnStreamSpec
     Run { tokens_per_sec: tokens as f64 / wall, ttft, tpot: tpot_mean, wall }
 }
 
+/// Drive one batch of streams through a [`SessionManager`], prefill
+/// untimed, and measure decode-phase tokens/s. Returns the rate plus the
+/// per-session sparsity vector so callers can assert the metrics are
+/// schedule-invariant.
+fn decode_phase_run(
+    opts: &ServeOptions,
+    pool: usize,
+    split: KvSplit,
+    specs: &[AttnStreamSpec],
+) -> (f64, Vec<(u64, f64)>) {
+    let engine = AttnEngine::builder()
+        .config(opts.cfg)
+        .sparge(&opts.params)
+        .execution(Execution::Pool(pool))
+        .kv_split(split)
+        .build();
+    let mut mgr = SessionManager::new(&engine, opts.chunk);
+    for (i, s) in specs.iter().enumerate() {
+        mgr.admit(i as u64, SeqStream::synth(s), Instant::now());
+    }
+    let mut done = Vec::new();
+    while mgr.prefilling() > 0 {
+        done.extend(mgr.tick());
+    }
+    let t0 = Instant::now();
+    let mut tokens = 0usize;
+    while mgr.active() > 0 {
+        for r in mgr.tick() {
+            tokens += r.tokens;
+            done.push(r);
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    done.sort_by_key(|r| r.id);
+    let sparsity = done.iter().map(|r| (r.id, r.stats.sparsity())).collect();
+    (tokens as f64 / secs, sparsity)
+}
+
 fn main() {
     let threads = bench_threads();
     let scale = if full_scale() { 4 } else { 1 };
@@ -113,6 +152,7 @@ fn main() {
         params: SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false },
         cfg: AttnConfig::causal(),
         threads,
+        kv_split: KvSplit::Auto,
     };
     // mixed traffic: short, medium, and long prompts, all decode-heavy
     // enough that interleaving matters
@@ -141,5 +181,67 @@ fn main() {
     println!(
         "\nTTFT: arrival -> first token (queueing included). Sequential TTFT grows with queue \
          position; the continuous loop starts every stream within one chunk-sized tick."
+    );
+
+    // -- decode-phase scaling: batched cross-session ticks ---------------
+    // 6 concurrent streams past their prompts; every tick advances all of
+    // them in one map over the pool, so tokens/s should climb with pool
+    // size. Prefill is untimed; per-session sparsity must not move with
+    // the schedule.
+    let batch_specs: Vec<AttnStreamSpec> = (0..6u64)
+        .map(|i| AttnStreamSpec { prefill: 256 * scale, decode: 48, d: 64, seed: 950 + i })
+        .collect();
+    println!(
+        "\ndecode-phase throughput — {} concurrent streams, prefill {} (untimed), 48 tokens each",
+        batch_specs.len(),
+        256 * scale
+    );
+    let mut batch_table = Table::new(
+        "batched cross-session decode (one Exec::map per tick over the shared pool)",
+        &["pool", "tok/s", "vs pool 1"],
+    );
+    let mut baseline_rate = 0.0;
+    let mut baseline_sparsity: Option<Vec<(u64, f64)>> = None;
+    for pool in [1usize, 2, 4, 8] {
+        let (rate, sparsity) = decode_phase_run(&opts, pool, KvSplit::Auto, &batch_specs);
+        match &baseline_sparsity {
+            None => {
+                baseline_rate = rate;
+                baseline_sparsity = Some(sparsity);
+            }
+            Some(b) => assert_eq!(&sparsity, b, "per-session sparsity moved with pool size {pool}"),
+        }
+        batch_table.row(&[format!("{pool}"), fnum(rate, 1), format!("{:.2}x", rate / baseline_rate)]);
+    }
+    batch_table.print();
+
+    // -- decode-phase scaling: split-KV inside one session ---------------
+    // A lone decoding stream has no cross-session parallelism to offer;
+    // split-KV is what lets its 1-row steps use the pool, by fanning
+    // contiguous KV spans across workers.
+    let solo_spec = [AttnStreamSpec { prefill: 1024 * scale, decode: 32, d: 64, seed: 977 }];
+    println!(
+        "\nsingle-session decode — cache {} keys, 32 steps: split-KV on vs off per pool size",
+        1024 * scale
+    );
+    let mut solo_table = Table::new(
+        "split-KV decode (span = 4 k-blocks, S from cache length — identical bits at every pool size)",
+        &["pool", "split-KV off tok/s", "split-KV on tok/s", "on/off"],
+    );
+    let mut solo_sparsity: Option<Vec<(u64, f64)>> = None;
+    for pool in [1usize, 2, 4, 8] {
+        let (off, sp_off) = decode_phase_run(&opts, pool, KvSplit::Off, &solo_spec);
+        let (on, sp_on) = decode_phase_run(&opts, pool, KvSplit::Auto, &solo_spec);
+        assert_eq!(sp_off, sp_on, "split-KV changed sparsity at pool {pool}");
+        match &solo_sparsity {
+            None => solo_sparsity = Some(sp_off),
+            Some(b) => assert_eq!(&sp_off, b, "sparsity moved with pool size {pool}"),
+        }
+        solo_table.row(&[format!("{pool}"), fnum(off, 1), fnum(on, 1), format!("{:.2}x", on / off)]);
+    }
+    solo_table.print();
+    println!(
+        "\ndecode scaling: batched ticks scale with streams x pool; split-KV covers the lone-stream \
+         tail. Sparsity metrics are asserted identical across schedules, pool sizes, and drivers."
     );
 }

@@ -36,12 +36,20 @@
 //! bounded slices between decode ticks of other sessions.
 //! [`AttnSession::prefill`] is the one-shot convenience (a single chunk
 //! from empty); [`AttnSession::decode`] runs a decode-shaped (one query
-//! row) step. All of them run through the *same* [`run_tiled`] driver.
+//! row) step. All of them run through the same pipeline seams; the
+//! *driver* is picked per call from the engine's [`KvSplit`] policy and
+//! the call shape — tall calls take the row-parallel [`run_tiled`],
+//! single-tile calls under `kv_split` take `run_tiled_splitkv`, which
+//! fans contiguous KV spans of the cache across the worker pool
+//! (Flash-Decoding). Span count derives from the cache length, never the
+//! worker count, so either driver is bitwise-deterministic across
+//! execution modes and pool sizes.
 //!
 //! ## Chunked-prefill / decode / prefill parity
 //!
 //! For f32 precision with `lambda: None` (dense or external-mask policy;
-//! golden-tested in `tests/session_decode.rs`):
+//! golden-tested in `tests/session_decode.rs`), under the default
+//! [`KvSplit::Off`]:
 //!
 //! - N tokens fed through [`AttnSession::decode`] produce bit-identical
 //!   rows to one causal [`AttnSession::prefill`] of the full sequence;
@@ -63,6 +71,17 @@
 //! within the INT8 error budget). As on GPU, those compositions trade
 //! exact parity for sparsity/precision — decode kernels run their own
 //! tiling there too.
+//!
+//! Turning split-KV on ([`KvSplit::Auto`]/`Blocks`) makes the same trade
+//! along the execution axis: single-tile calls — decode steps *and*
+//! sub-`b_q` prefill chunks — change their reduction *tree* (partial
+//! online-softmax states merged per span), so their output is allclose
+//! to — no longer bitwise with — the one-shot rows, while remaining
+//! bitwise-identical across exec modes and pool sizes and keeping λ-off
+//! [`SkipStats`] exactly equal (golden-tested in
+//! `tests/splitkv_decode.rs`). Serving opts in; the default stays `Off`.
+
+use std::sync::Arc;
 
 use crate::sparge::kernel::{quant_score_block, QuantScoreKernel, SpargeParams};
 use crate::sparge::predict::{compress_blocks, predict_decode_row, predict_pooled, KPool, PredictParams};
@@ -70,8 +89,10 @@ use crate::tensor::quant::{self, QuantBlock};
 use crate::tensor::Tensor;
 use crate::util::threadpool::WorkerPool;
 
-use super::pipeline::{run_tiled, BlockFilter, DenseFilter, Exec, F32Kernel, MaskFilter, ScoreKernel};
-use super::types::{AttnConfig, BlockMask, SkipStats};
+use super::pipeline::{
+    run_tiled, run_tiled_splitkv, BlockFilter, DenseFilter, Exec, F32Kernel, MaskFilter, ScoreKernel,
+};
+use super::types::{AttnConfig, BlockMask, KvSplit, SkipStats};
 
 /// Score-path precision of an engine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -108,12 +129,14 @@ pub enum Execution {
 }
 
 /// Builder for [`AttnEngine`]. Defaults: dense f32, inline execution,
-/// [`AttnConfig::default`].
+/// [`AttnConfig::default`], split-KV off.
 pub struct AttnEngineBuilder {
     cfg: AttnConfig,
     precision: Precision,
     policy: SparsityPolicy,
     execution: Execution,
+    kv_split: KvSplit,
+    shared_pool: Option<Arc<WorkerPool>>,
 }
 
 impl AttnEngineBuilder {
@@ -137,6 +160,26 @@ impl AttnEngineBuilder {
         self
     }
 
+    /// Split-KV (Flash-Decoding) policy for decode-shaped calls. The
+    /// default, [`KvSplit::Off`], keeps decode bitwise-identical to
+    /// prefill rows; serving paths opt into [`KvSplit::Auto`] so 1-row
+    /// steps parallelize along the KV axis (see the contract on
+    /// [`KvSplit`]).
+    pub fn kv_split(mut self, s: KvSplit) -> Self {
+        self.kv_split = s;
+        self
+    }
+
+    /// Run this engine over an existing shared [`WorkerPool`] instead of
+    /// spawning its own — so multiple engine compositions (e.g. a dense
+    /// and a sparge engine serving mixed-mode traffic) time-share one set
+    /// of workers. Overrides [`AttnEngineBuilder::execution`]; the built
+    /// engine reports `Execution::Pool(pool.size())`.
+    pub fn shared_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.shared_pool = Some(pool);
+        self
+    }
+
     /// Map a [`SpargeParams`] bundle onto precision + predicted policy:
     /// `quant` selects INT8, (τ, θ) feed stage 1, λ feeds stage 2.
     pub fn sparge(mut self, params: &SpargeParams) -> Self {
@@ -146,18 +189,23 @@ impl AttnEngineBuilder {
     }
 
     /// Build the engine; `Execution::Pool(n)` spawns its workers here,
-    /// once.
+    /// once — unless a [`AttnEngineBuilder::shared_pool`] was supplied,
+    /// in which case the engine joins that pool instead of owning one.
     pub fn build(self) -> AttnEngine {
-        let pool = match self.execution {
-            Execution::Pool(n) => Some(WorkerPool::new(n)),
-            _ => None,
+        let (execution, pool) = match self.shared_pool {
+            Some(p) => (Execution::Pool(p.size()), Some(p)),
+            None => match self.execution {
+                Execution::Pool(n) => (self.execution, Some(WorkerPool::shared(n))),
+                e => (e, None),
+            },
         };
         AttnEngine {
             cfg: self.cfg,
             precision: self.precision,
             policy: self.policy,
             pool,
-            execution: self.execution,
+            execution,
+            kv_split: self.kv_split,
         }
     }
 }
@@ -169,7 +217,10 @@ pub struct AttnEngine {
     precision: Precision,
     policy: SparsityPolicy,
     execution: Execution,
-    pool: Option<WorkerPool>,
+    /// `Arc` so several engine compositions can time-share one pool
+    /// (built privately, or joined via `shared_pool`).
+    pool: Option<Arc<WorkerPool>>,
+    kv_split: KvSplit,
 }
 
 /// Result of an engine call (one-shot, prefill, or one decode step).
@@ -189,6 +240,8 @@ impl AttnEngine {
             precision: Precision::F32,
             policy: SparsityPolicy::Dense,
             execution: Execution::Inline,
+            kv_split: KvSplit::Off,
+            shared_pool: None,
         }
     }
 
@@ -218,19 +271,69 @@ impl AttnEngine {
         self.execution
     }
 
-    fn exec(&self) -> Exec<'_> {
+    pub fn kv_split(&self) -> KvSplit {
+        self.kv_split
+    }
+
+    /// The engine's worker pool, when it runs one — shareable: pass a
+    /// clone to [`AttnEngineBuilder::shared_pool`] so another engine
+    /// composition reuses the same workers.
+    pub fn pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.pool.as_ref()
+    }
+
+    /// The [`Exec`] seam this engine drives the tiled pipeline with.
+    /// Public so batch schedulers (the serving tick) can fan *sessions*
+    /// across the same workers the pipeline would use.
+    pub fn exec(&self) -> Exec<'_> {
         match (&self.execution, &self.pool) {
             (Execution::Inline, _) => Exec::Inline,
             (Execution::Threads(t), _) => Exec::Threads(*t),
-            (Execution::Pool(_), Some(p)) => Exec::Pool(p),
+            (Execution::Pool(_), Some(p)) => Exec::Pool(p.as_ref()),
             // unreachable by construction (build() always spawns the pool)
             (Execution::Pool(_), None) => Exec::Inline,
         }
     }
 
+    /// Split-KV span size (k-blocks) for a call of `tm` query tiles over
+    /// `tn` cached k-blocks, or `None` to run the row-parallel driver.
+    /// Pure in the call *shape*: taller calls (`tm > 1`) already
+    /// parallelize over rows, and a domain of at most one span gains
+    /// nothing — worker count never enters the decision, so routing (and
+    /// therefore output bits) is identical for every execution mode.
+    fn kv_span(&self, tm: usize, tn: usize) -> Option<usize> {
+        let span = self.kv_split.span_blocks()?;
+        if tm == 1 && tn > span {
+            Some(span)
+        } else {
+            None
+        }
+    }
+
+    /// Run one call through the driver the engine's `kv_split` policy and
+    /// the call shape select.
+    fn dispatch(
+        &self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        cfg: &AttnConfig,
+        kernel: &impl ScoreKernel,
+        filter: &impl BlockFilter,
+        exec: Exec<'_>,
+    ) -> (Tensor, SkipStats) {
+        match self.kv_span(cfg.n_qblocks(q.dim(0)), cfg.n_kblocks(k.dim(0))) {
+            Some(span) => run_tiled_splitkv(q, k, v, cfg, kernel, filter, exec, span),
+            None => run_tiled(q, k, v, cfg, kernel, filter, exec),
+        }
+    }
+
     /// One-shot attention of `q` against `k`/`v` under the engine's
-    /// composition (the prefill shape). Bitwise-identical to the
-    /// deprecated free functions this API replaces.
+    /// composition (the prefill shape). Under the default
+    /// [`KvSplit::Off`], bitwise-identical to the deprecated free
+    /// functions this API replaces (with split-KV on, a single-tile call
+    /// — `q` no taller than `b_q` — takes the split driver and is
+    /// allclose instead).
     pub fn attention(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> AttnOutput {
         match &self.policy {
             SparsityPolicy::Dense => {
@@ -272,6 +375,8 @@ impl AttnEngine {
             kmean: None,
             kq: Vec::new(),
             steps: 0,
+            cache_cap_rows: 0,
+            cache_reallocs: 0,
         }
     }
 
@@ -286,11 +391,11 @@ impl AttnEngine {
         match self.precision {
             Precision::F32 => {
                 let kernel = F32Kernel::new(q, k, cfg);
-                run_tiled(q, k, v, cfg, &kernel, filter, self.exec())
+                self.dispatch(q, k, v, cfg, &kernel, filter, self.exec())
             }
             Precision::Int8 => {
                 let kernel = QuantScoreKernel::new(q, k, cfg);
-                run_tiled(q, k, v, cfg, &kernel, filter, self.exec())
+                self.dispatch(q, k, v, cfg, &kernel, filter, self.exec())
             }
         }
     }
@@ -343,6 +448,11 @@ pub struct AttnSession<'e> {
     /// block is requantized per decoded token.
     kq: Vec<QuantBlock>,
     steps: usize,
+    /// Rows the K/V cache (and the predictor pool) currently has capacity
+    /// for — always a `b_k` multiple; see [`AttnSession::reserve_rows`].
+    cache_cap_rows: usize,
+    /// Capacity-growth events (both buffers grow together, counted once).
+    cache_reallocs: usize,
 }
 
 impl AttnSession<'_> {
@@ -358,6 +468,15 @@ impl AttnSession<'_> {
     /// Decode steps taken so far.
     pub fn steps(&self) -> usize {
         self.steps
+    }
+
+    /// Capacity-growth events on the KV cache so far. Growth is amortized
+    /// ([`AttnSession::reserve_rows`]): capacity at least doubles per
+    /// event and is always a `b_k`-block multiple, so a decode loop of
+    /// `T` tokens reallocates O(log T) times instead of leaving growth
+    /// policy to the allocator on every appended token.
+    pub fn cache_reallocs(&self) -> usize {
+        self.cache_reallocs
     }
 
     /// Predictor maintenance counters; all-zero for non-`Predicted`
@@ -425,6 +544,7 @@ impl AttnSession<'_> {
         assert_eq!(k.dim(1), self.d, "k head dim");
         assert_eq!(v.dim(1), self.dv, "v dim");
 
+        self.reserve_rows(self.rows + k.dim(0));
         self.k_data.extend_from_slice(k.data());
         self.v_data.extend_from_slice(v.data());
         self.rows += k.dim(0);
@@ -440,7 +560,7 @@ impl AttnSession<'_> {
         let vt = Tensor::from_vec(&[self.rows, self.dv], std::mem::take(&mut self.v_data));
         let (out, stats, mask) = match &self.engine.policy {
             SparsityPolicy::Dense => {
-                let (o, s) = self.run_cache(q, &kt, &vt, &cfg, &DenseFilter);
+                let (o, s) = self.run_cache(q, &kt, &vt, &cfg, &DenseFilter, self.engine.exec());
                 (o, s, None)
             }
             SparsityPolicy::Predicted { params, lambda } => {
@@ -450,7 +570,7 @@ impl AttnSession<'_> {
                 let pred = predict_pooled(q, &pool.means(), pool.sims(), &cfg, params);
                 let (o, s) = {
                     let filter = MaskFilter::new(&pred.mask, *lambda);
-                    self.run_cache(q, &kt, &vt, &cfg, &filter)
+                    self.run_cache(q, &kt, &vt, &cfg, &filter, self.engine.exec())
                 };
                 (o, s, Some(pred.mask))
             }
@@ -478,7 +598,7 @@ impl AttnSession<'_> {
                     cfg.n_kblocks(self.rows)
                 );
                 let filter = OffsetMaskFilter { mask, row0: row0_blocks, lambda: *lambda };
-                let (o, s) = self.run_cache(q, &kt, &vt, &cfg, &filter);
+                let (o, s) = self.run_cache(q, &kt, &vt, &cfg, &filter, self.engine.exec());
                 (o, s, None)
             }
         };
@@ -493,7 +613,9 @@ impl AttnSession<'_> {
     /// steps; the INT8 side reuses the session's cached K quantization
     /// instead of re-smoothing and re-quantizing (the per-block payloads
     /// are identical: blocks are quantized independently and the
-    /// smoothing mean is shared either way).
+    /// smoothing mean is shared either way). The driver — row-parallel
+    /// or split-KV — is chosen by the engine's `kv_split` policy and the
+    /// call *shape* alone, so the result does not depend on `exec`.
     fn run_cache(
         &self,
         q: &Tensor,
@@ -501,11 +623,12 @@ impl AttnSession<'_> {
         vt: &Tensor,
         cfg: &AttnConfig,
         filter: &impl BlockFilter,
+        exec: Exec<'_>,
     ) -> (Tensor, SkipStats) {
         match self.engine.precision {
             Precision::F32 => {
                 let kernel = F32Kernel::new(q, kt, cfg);
-                run_tiled(q, kt, vt, cfg, &kernel, filter, self.engine.exec())
+                self.engine.dispatch(q, kt, vt, cfg, &kernel, filter, exec)
             }
             Precision::Int8 => {
                 let kernel = QuantCacheKernel {
@@ -517,18 +640,34 @@ impl AttnSession<'_> {
                     bq: cfg.bq,
                     bk: cfg.bk,
                 };
-                run_tiled(q, kt, vt, cfg, &kernel, filter, self.engine.exec())
+                self.engine.dispatch(q, kt, vt, cfg, &kernel, filter, exec)
             }
         }
     }
 
     /// Decode one token: append the (1 × d) key/value rows to the cache,
     /// update the predictor pooling incrementally (and requantize only the
-    /// tail K block under INT8), then run the 1-row step through the same
-    /// tiled driver. Returns the (1 × dv) output row with per-step
-    /// [`SkipStats`] (exact fractional accounting — see
-    /// `SkipStats::pv_skipped_frac`).
+    /// tail K block under INT8), then run the 1-row step through the
+    /// driver the engine's `kv_split` policy selects (split-KV when on:
+    /// the single-tile step fans its KV spans across the pool). Returns
+    /// the (1 × dv) output row with per-step [`SkipStats`] (exact
+    /// fractional accounting — see `SkipStats::pv_skipped_frac`).
     pub fn decode(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> AttnOutput {
+        self.decode_with_exec(q, k, v, self.engine.exec())
+    }
+
+    /// [`AttnSession::decode`] with an explicit [`Exec`]: the serving
+    /// tick advances many sessions in one pool map and runs each step
+    /// `Exec::Inline` *inside* a pool worker (nesting the pool would
+    /// deadlock). Both drivers are bitwise-deterministic across exec
+    /// modes, so the step's output does not depend on this choice.
+    pub(crate) fn decode_with_exec(
+        &mut self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        exec: Exec<'_>,
+    ) -> AttnOutput {
         assert_eq!(q.dim(0), 1, "decode takes a single query row");
         assert_eq!(k.dim(0), 1, "decode takes a single key row");
         assert_eq!(v.dim(0), 1, "decode takes a single value row");
@@ -546,7 +685,9 @@ impl AttnSession<'_> {
         assert_eq!(k.dim(1), self.d, "k head dim");
         assert_eq!(v.dim(1), self.dv, "v dim");
 
-        // append + incremental predictor update (tail block only)
+        // append (block-amortized capacity) + incremental predictor
+        // update (tail block only)
+        self.reserve_rows(self.rows + 1);
         self.k_data.extend_from_slice(k.data());
         self.v_data.extend_from_slice(v.data());
         self.rows += 1;
@@ -568,7 +709,7 @@ impl AttnSession<'_> {
         let vt = Tensor::from_vec(&[self.rows, self.dv], std::mem::take(&mut self.v_data));
         let (out, stats, mask) = match &self.engine.policy {
             SparsityPolicy::Dense => {
-                let (o, s) = self.run_cache(q, &kt, &vt, &step_cfg, &DenseFilter);
+                let (o, s) = self.run_cache(q, &kt, &vt, &step_cfg, &DenseFilter, exec);
                 (o, s, None)
             }
             SparsityPolicy::Predicted { params, lambda } => {
@@ -576,7 +717,7 @@ impl AttnSession<'_> {
                 let mrow = predict_decode_row(q.row(0), &pool.means(), pool.sims(), scale, params);
                 let (o, s) = {
                     let filter = MaskFilter::new(&mrow, *lambda);
-                    self.run_cache(q, &kt, &vt, &step_cfg, &filter)
+                    self.run_cache(q, &kt, &vt, &step_cfg, &filter, exec)
                 };
                 (o, s, Some(mrow))
             }
@@ -590,7 +731,7 @@ impl AttnSession<'_> {
                     step_cfg.n_kblocks(self.rows)
                 );
                 let filter = RowMaskFilter { mask, row: bi, lambda: *lambda };
-                let (o, s) = self.run_cache(q, &kt, &vt, &step_cfg, &filter);
+                let (o, s) = self.run_cache(q, &kt, &vt, &step_cfg, &filter, exec);
                 (o, s, None)
             }
         };
@@ -598,6 +739,27 @@ impl AttnSession<'_> {
         self.v_data = vt.into_vec();
         self.steps += 1;
         AttnOutput { out, stats, mask }
+    }
+
+    /// Grow the KV cache's reserved capacity to hold `new_rows` rows.
+    /// Amortized: capacity targets `max(new_rows, 2 × current)` rounded
+    /// up to a whole `b_k` block, so appends — per-token decode pushes
+    /// included — trigger O(log n) reallocations, counted in
+    /// [`AttnSession::cache_reallocs`]. The predictor pool reserves its
+    /// per-block state for the same horizon.
+    fn reserve_rows(&mut self, new_rows: usize) {
+        if new_rows <= self.cache_cap_rows {
+            return;
+        }
+        let bk = self.engine.cfg.bk;
+        let target = new_rows.max(self.cache_cap_rows * 2).next_multiple_of(bk);
+        self.k_data.reserve_exact(target * self.d - self.k_data.len());
+        self.v_data.reserve_exact(target * self.dv - self.v_data.len());
+        if let Some(pool) = self.kpool.as_mut() {
+            pool.reserve_rows(target);
+        }
+        self.cache_cap_rows = target;
+        self.cache_reallocs += 1;
     }
 
     /// (Re)quantize the K cache from the block containing row
@@ -757,6 +919,74 @@ mod tests {
             .build();
         let r = engine.attention(&q, &k, &v);
         assert_eq!(r.stats.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn shared_pool_serves_multiple_engine_compositions() {
+        // The ROADMAP follow-up: dense + sparge engines time-sharing one
+        // worker pool, with outputs identical to privately-pooled engines.
+        let (q, k, v) = qkv(64, 8, 76);
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: false, scale: None, cw: 2, row_offset: 0 };
+        let pool = WorkerPool::shared(3);
+        let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: Some(-6.0), quant: false };
+        let dense = AttnEngine::builder().config(cfg).shared_pool(Arc::clone(&pool)).build();
+        let sparge =
+            AttnEngine::builder().config(cfg).sparge(&params).shared_pool(Arc::clone(&pool)).build();
+        assert_eq!(dense.execution(), Execution::Pool(3));
+        assert_eq!(Arc::strong_count(&pool), 3, "two engines joined the shared pool");
+        let d_ref = AttnEngine::builder().config(cfg).execution(Execution::Pool(2)).build();
+        let s_ref =
+            AttnEngine::builder().config(cfg).sparge(&params).execution(Execution::Pool(2)).build();
+        assert_eq!(dense.attention(&q, &k, &v).out, d_ref.attention(&q, &k, &v).out);
+        let (a, b) = (sparge.attention(&q, &k, &v), s_ref.attention(&q, &k, &v));
+        assert_eq!(a.out, b.out);
+        assert_eq!(a.stats, b.stats);
+    }
+
+    #[test]
+    fn cache_growth_is_block_amortized_and_counted() {
+        // b_k = 16: prefilling 32 rows reserves once (to 32); decoding to
+        // 128 rows doubles twice (33→64, 65→128). Per-token pushes must
+        // never trigger a growth event of their own.
+        let (q, k, v) = qkv(128, 8, 77);
+        let cfg = AttnConfig { bq: 16, bk: 16, causal: true, scale: None, cw: 2, row_offset: 0 };
+        let engine = AttnEngine::dense(cfg);
+        let mut session = engine.session();
+        session.prefill(&q.rows(0, 32), &k.rows(0, 32), &v.rows(0, 32));
+        assert_eq!(session.cache_reallocs(), 1);
+        for t in 32..64 {
+            session.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1));
+        }
+        assert_eq!(session.cache_reallocs(), 2, "one doubling covers rows 33..=64");
+        for t in 64..128 {
+            session.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1));
+        }
+        assert_eq!(session.cache_reallocs(), 3, "one more doubling covers rows 65..=128");
+    }
+
+    #[test]
+    fn kv_split_decode_is_allclose_to_serial_and_stats_exact() {
+        let (q, k, v) = qkv(96, 8, 78);
+        let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+        let serial = AttnEngine::dense(cfg);
+        let split = AttnEngine::builder().config(cfg).kv_split(KvSplit::Blocks(2)).build();
+        let mut s0 = serial.session();
+        let mut s1 = split.session();
+        s0.prefill(&q.rows(0, 64), &k.rows(0, 64), &v.rows(0, 64));
+        s1.prefill(&q.rows(0, 64), &k.rows(0, 64), &v.rows(0, 64));
+        for t in 64..96 {
+            let r0 = s0.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1));
+            let r1 = s1.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1));
+            crate::util::prop::assert_allclose(
+                r1.out.data(),
+                r0.out.data(),
+                1e-4,
+                1e-3,
+                &format!("splitkv decode row {t}"),
+            )
+            .unwrap();
+            assert_eq!(r1.stats, r0.stats, "λ-off stats must merge exactly (row {t})");
+        }
     }
 
     #[test]

@@ -24,12 +24,21 @@
 //! — so a long prompt never monopolizes the engine, which is what caps
 //! time-to-first-token under mixed traffic.
 //!
-//! [`pipeline`] owns the single q-block × k-block driver ([`run_tiled`])
-//! and the seams every engine composes from: [`ScoreKernel`] (how a score
-//! block is produced — f32 matmul vs. INT8 dequant), [`BlockFilter`]
-//! (which blocks run — dense, stage-1 mask, stage-2 λ, causal bound), and
-//! [`Exec`] (inline / scoped threads / persistent pool). [`flash`] keeps
-//! the deprecated dense free-function shims, [`dense`] the naive softmax
+//! [`pipeline`] owns the single q-block × k-block loop and its **two
+//! drivers**: [`run_tiled`] (parallel over query-block rows — the
+//! prefill shape) and [`run_tiled_splitkv`] (additionally parallel along
+//! the KV axis, Flash-Decoding style — the decode shape, where one query
+//! row would otherwise leave the whole pool idle). Both compose the same
+//! seams: [`ScoreKernel`] (how a score block is produced — f32 matmul
+//! vs. INT8 dequant), [`BlockFilter`] (which blocks run — dense, stage-1
+//! mask, stage-2 λ, causal bound), and [`Exec`] (inline / scoped threads
+//! / persistent pool, shareable across engines via
+//! `AttnEngineBuilder::shared_pool`). The engine picks the driver from
+//! its [`KvSplit`] policy and the call *shape* alone — span count from
+//! the cache length, **never** the worker count — so every composition
+//! stays bitwise-deterministic across execution modes and pool sizes;
+//! see the split-KV contract in [`pipeline`]. [`flash`] keeps the
+//! deprecated dense free-function shims, [`dense`] the naive softmax
 //! oracle used by tests, and `crate::sparge::kernel` the sparse +
 //! quantized compositions. Adding an engine means adding a kernel or
 //! filter impl — never another loop.
@@ -48,6 +57,8 @@
 //! | per-call scoped threads | `.execution(Execution::Pool(n))` — pool spawned once at `build()` |
 //! | KV-cache decode (new) | `engine.session()` → `session.prefill(..)` / `session.decode(..)` |
 //! | chunked prefill (new) | `session.prefill_chunk(..)` per prompt slice — offset-aware causal |
+//! | split-KV decode (new) | `.kv_split(KvSplit::Auto)` — decode steps fan KV spans across the pool |
+//! | pool sharing (new) | `.shared_pool(pool)` — several engines over one `Arc<WorkerPool>` |
 
 pub mod dense;
 pub mod engine;
@@ -63,6 +74,7 @@ pub use engine::{
 #[allow(deprecated)]
 pub use flash::{attention_flash, attention_flash_stats, attention_flash_stats_threads};
 pub use pipeline::{
-    run_tiled, score_block, BlockFilter, DenseFilter, Exec, F32Kernel, FlashTile, MaskFilter, ScoreKernel,
+    run_tiled, run_tiled_splitkv, score_block, BlockFilter, DenseFilter, Exec, F32Kernel, FlashTile,
+    MaskFilter, ScoreKernel,
 };
-pub use types::{AttnConfig, BlockMask, SkipStats};
+pub use types::{AttnConfig, BlockMask, KvSplit, SkipStats, KV_SPLIT_AUTO_BLOCKS};

@@ -1,9 +1,9 @@
 //! The unified tiled-attention pipeline: **the one q-block × k-block loop
-//! in the crate**.
+//! in the crate**, with two drivers over it.
 //!
 //! Every attention engine — dense FlashAttention, SpargeAttn f32, the
 //! SageAttention INT8 variant, and every baseline mask policy — is a thin
-//! composition over [`run_tiled`] with two pluggable seams:
+//! composition over one of the drivers with two pluggable seams:
 //!
 //! - [`ScoreKernel`]: how a visited score block `S_ij = Q_i K_jᵀ · scale`
 //!   is produced (plain f32 matmul vs. INT8 dequant scoring). The kernel
@@ -14,13 +14,42 @@
 //!   (§3.4), and the causal-domain bound that keeps upper-triangle blocks
 //!   out of both the loop and the [`SkipStats`] totals.
 //!
-//! The driver partitions query-block rows across workers chosen by the
-//! [`Exec`] seam — inline, scoped threads per call, or a persistent
-//! [`WorkerPool`] owned by an `AttnEngine`. Each row's [`FlashTile`] is
-//! independent and writes a disjoint slice of the output, so the result is
-//! **bitwise identical** for every execution mode and worker count
-//! (accumulation order within a tile never changes) and per-row
-//! [`SkipStats`] are merged in row order.
+//! ## The two drivers
+//!
+//! [`run_tiled`] parallelizes over **query-block rows**: each row's
+//! [`FlashTile`] is independent and writes a disjoint slice of the
+//! output, so the result is **bitwise identical** for every execution
+//! mode and worker count (accumulation order within a tile never
+//! changes) and per-row [`SkipStats`] are merged in row order. This is
+//! the prefill driver: tall calls have plenty of rows to hand out.
+//!
+//! [`run_tiled_splitkv`] additionally parallelizes along the **KV axis**
+//! (Flash-Decoding style): each row's k-block domain is partitioned into
+//! contiguous spans of `span_blocks` k-blocks, every (row, span) pair is
+//! reduced independently into a partial online-softmax state `(m, l, o)`,
+//! and the spans of a row are combined in fixed span order with
+//! [`FlashTile::merge`]. This is the decode driver: a 1-row step
+//! (`tm = 1`) that would run serially under `run_tiled` becomes `S`
+//! parallel reductions over the KV cache.
+//!
+//! ### The split-KV determinism contract
+//!
+//! The span count `S = ceil(kblock_end / span_blocks)` is derived from
+//! the **cache length** (through [`BlockFilter::kblock_end`]) and the
+//! caller's `span_blocks` — **never** from the worker count. Work items
+//! are laid out row-major in span order, each is reduced independently,
+//! and partial states are merged left-to-right per row, so outputs *and*
+//! merged [`SkipStats`] are bitwise-identical across
+//! [`Exec::Inline`]/[`Exec::Threads`]/[`Exec::Pool`] and any pool size.
+//! Relative to `run_tiled` the reduction *tree* changes, so outputs are
+//! allclose rather than bitwise — except when one span covers the whole
+//! row (`span_blocks ≥ kblock_end`), which reproduces `run_tiled`
+//! exactly. Stage-1 `keep` lookups are per-block and stage-2 λ decisions
+//! are **span-local** (each span thresholds against its own running
+//! maximum, which only makes skipping more conservative), so skip
+//! accounting still merges exactly: with λ off the summed counters equal
+//! the serial driver's; with λ on they are deterministic per span
+//! geometry.
 //!
 //! ## The `row_offset` causal contract
 //!
@@ -186,6 +215,41 @@ impl FlashTile {
                 );
             }
             g0 = g1;
+        }
+    }
+
+    /// Merge another tile's partial online-softmax state into this one —
+    /// the Flash-Decoding combine. `other` must cover a *disjoint* span
+    /// of the same query rows' KV domain:
+    ///
+    /// ```text
+    /// m ← max(m_a, m_b);  l ← l_a·e^{m_a−m} + l_b·e^{m_b−m};
+    /// O ← O_a·e^{m_a−m} + O_b·e^{m_b−m}
+    /// ```
+    ///
+    /// The combine is evaluated in a fixed operand order (self = left,
+    /// `other` = right), so a left-to-right fold over spans in span order
+    /// is bitwise-deterministic regardless of which worker reduced which
+    /// span. Rows that saw only masked entries keep `m = −∞, l = 0` and
+    /// merge as exact no-ops.
+    pub fn merge(&mut self, other: &FlashTile) {
+        assert_eq!(self.rows, other.rows, "merging tiles of different row counts");
+        assert_eq!(self.d, other.d, "merging tiles of different head dims");
+        let d = self.d;
+        for i in 0..self.rows {
+            let (ma, mb) = (self.m[i], other.m[i]);
+            let m_new = ma.max(mb);
+            if m_new == f32::NEG_INFINITY {
+                continue; // both spans fully masked: stay the exact zero state
+            }
+            let fa = if ma == f32::NEG_INFINITY { 0.0 } else { (ma - m_new).exp() };
+            let fb = if mb == f32::NEG_INFINITY { 0.0 } else { (mb - m_new).exp() };
+            self.m[i] = m_new;
+            self.l[i] = fa * self.l[i] + fb * other.l[i];
+            let (oa, ob) = (&mut self.o[i * d..(i + 1) * d], &other.o[i * d..(i + 1) * d]);
+            for (a, &b) in oa.iter_mut().zip(ob) {
+                *a = fa * *a + fb * b;
+            }
         }
     }
 
@@ -371,25 +435,9 @@ pub fn run_tiled(
         let row_chunks: Vec<std::sync::Mutex<&mut [f32]>> =
             out.data_mut().chunks_mut(cfg.bq * dv).map(std::sync::Mutex::new).collect();
         exec.map(tm, |bi| {
-            let q0 = bi * cfg.bq;
-            let q1 = (q0 + cfg.bq).min(n);
-            let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
-            let mut tile = FlashTile::new(q1 - q0, dv, cfg.bk);
-            let mut sbuf = vec![0f32; (q1 - q0) * cfg.bk];
-            for bj in 0..filter.kblock_end(q1, cfg, tn) {
-                let k0 = bj * cfg.bk;
-                let k1 = (k0 + cfg.bk).min(nk);
-                stats.qk_total += 1;
-                stats.pv_total += 1;
-                if !filter.keep(bi, bj) {
-                    stats.qk_skipped += 1;
-                    stats.pv_skipped += 1;
-                    continue;
-                }
-                let sb = &mut sbuf[..(q1 - q0) * (k1 - k0)];
-                kernel.score_block(q0, q1, k0, k1, sb);
-                tile.ingest(sb, k1 - k0, &v.data()[k0 * dv..k1 * dv], filter.lambda(), cfg.cw, &mut stats);
-            }
+            let q1 = (bi * cfg.bq + cfg.bq).min(n);
+            let kend = filter.kblock_end(q1, cfg, tn);
+            let (tile, stats) = reduce_span(q, k, v, cfg, kernel, filter, bi, 0, kend);
             row_chunks[bi].lock().unwrap().copy_from_slice(&tile.finalize());
             stats
         })
@@ -397,6 +445,127 @@ pub fn run_tiled(
     let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
     for s in &row_stats {
         stats.merge(s);
+    }
+    (out, stats)
+}
+
+/// Reduce k-blocks `[kb0, kb1)` of query-tile row `bi` into a fresh
+/// [`FlashTile`] — the shared inner loop of both drivers. The span's
+/// [`SkipStats`] count exactly its own blocks, so summing span stats in
+/// any fixed order reproduces the serial row totals (λ decisions are
+/// span-local; see the module docs).
+#[allow(clippy::too_many_arguments)]
+fn reduce_span(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    kernel: &impl ScoreKernel,
+    filter: &impl BlockFilter,
+    bi: usize,
+    kb0: usize,
+    kb1: usize,
+) -> (FlashTile, SkipStats) {
+    let n = q.dim(0);
+    let nk = k.dim(0);
+    let dv = v.dim(1);
+    let q0 = bi * cfg.bq;
+    let q1 = (q0 + cfg.bq).min(n);
+    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
+    let mut tile = FlashTile::new(q1 - q0, dv, cfg.bk);
+    let mut sbuf = vec![0f32; (q1 - q0) * cfg.bk];
+    for bj in kb0..kb1 {
+        let k0 = bj * cfg.bk;
+        let k1 = (k0 + cfg.bk).min(nk);
+        stats.qk_total += 1;
+        stats.pv_total += 1;
+        if !filter.keep(bi, bj) {
+            stats.qk_skipped += 1;
+            stats.pv_skipped += 1;
+            continue;
+        }
+        let sb = &mut sbuf[..(q1 - q0) * (k1 - k0)];
+        kernel.score_block(q0, q1, k0, k1, sb);
+        tile.ingest(sb, k1 - k0, &v.data()[k0 * dv..k1 * dv], filter.lambda(), cfg.cw, &mut stats);
+    }
+    (tile, stats)
+}
+
+/// The split-KV (Flash-Decoding) driver: parallel over (query-tile row,
+/// KV span) pairs instead of rows alone, so a decode-shaped call (one
+/// query row, `tm = 1`) still spreads across the pool.
+///
+/// Each row's k-block domain `[0, kblock_end)` is cut into contiguous
+/// spans of `span_blocks` k-blocks; every span is reduced independently
+/// by [`reduce_span`] and the partial `(m, l, o)` states of a row are
+/// combined left-to-right in span order with [`FlashTile::merge`]. The
+/// span geometry depends only on the inputs (cache length, config,
+/// `span_blocks`) — **never** on the worker count — so outputs and
+/// merged [`SkipStats`] are bitwise-identical for every [`Exec`] mode
+/// and pool size (the determinism contract in the module docs). With
+/// `span_blocks ≥` the row's k-block count the single span reproduces
+/// [`run_tiled`] bitwise.
+///
+/// Each span pays for its own tile scratch (`(m, l, o)` plus score
+/// buffers — unavoidable: spans reduce concurrently) and one merge, so
+/// `span_blocks` trades parallelism against per-span overhead; the
+/// `KvSplit::Auto` default of 4 k-blocks keeps a span at ≥ a couple
+/// hundred keys of matmul work, far above its fixed cost.
+pub fn run_tiled_splitkv(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    kernel: &impl ScoreKernel,
+    filter: &impl BlockFilter,
+    exec: Exec<'_>,
+    span_blocks: usize,
+) -> (Tensor, SkipStats) {
+    assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
+    assert_eq!(k.dim(0), v.dim(0), "k/v rows");
+    assert!(span_blocks > 0, "span_blocks must be positive");
+    let n = q.dim(0);
+    let nk = k.dim(0);
+    let dv = v.dim(1);
+    let tm = cfg.n_qblocks(n);
+    let tn = cfg.n_kblocks(nk);
+
+    // Work list: row-major, spans in ascending k order. Purely a function
+    // of the call's shape — the merge below walks it in this exact order.
+    let mut items: Vec<(usize, usize, usize)> = Vec::new();
+    for bi in 0..tm {
+        let q1 = (bi * cfg.bq + cfg.bq).min(n);
+        let kend = filter.kblock_end(q1, cfg, tn);
+        let mut kb0 = 0;
+        while kb0 < kend {
+            let kb1 = (kb0 + span_blocks).min(kend);
+            items.push((bi, kb0, kb1));
+            kb0 = kb1;
+        }
+    }
+    let partials = exec.map(items.len(), |w| {
+        let (bi, kb0, kb1) = items[w];
+        reduce_span(q, k, v, cfg, kernel, filter, bi, kb0, kb1)
+    });
+
+    let mut out = Tensor::zeros(&[n, dv]);
+    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
+    let mut acc: Vec<Option<FlashTile>> = (0..tm).map(|_| None).collect();
+    for (&(bi, _, _), (tile, st)) in items.iter().zip(partials) {
+        stats.merge(&st);
+        match &mut acc[bi] {
+            Some(a) => a.merge(&tile),
+            None => acc[bi] = Some(tile),
+        }
+    }
+    for (bi, a) in acc.into_iter().enumerate() {
+        let q0 = bi * cfg.bq;
+        let q1 = (q0 + cfg.bq).min(n);
+        if let Some(tile) = a {
+            out.data_mut()[q0 * dv..q1 * dv].copy_from_slice(&tile.finalize());
+        }
+        // rows with an empty k domain (kend = 0) stay exactly zero, like
+        // run_tiled's fully-masked tiles
     }
     (out, stats)
 }
@@ -537,6 +706,105 @@ mod tests {
         let kernel = F32Kernel::new(&q, &k, &cfg);
         let (_, stats) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline);
         assert_eq!(stats.qk_total, 26usize.div_ceil(8));
+    }
+
+    #[test]
+    fn merge_combines_disjoint_spans_like_one_pass() {
+        // Two tiles ingesting disjoint halves, merged, must agree with one
+        // tile ingesting both halves (allclose: the reduction tree differs).
+        let mut rng = Pcg::seeded(17);
+        let (rows, d, bk) = (8, 4, 8);
+        let q = Tensor::randn(&[rows, d], &mut rng);
+        let k = Tensor::randn(&[2 * bk, d], &mut rng);
+        let v = Tensor::randn(&[2 * bk, d], &mut rng);
+        let mut s = vec![0f32; rows * bk];
+        let mut stats = SkipStats::default();
+
+        let mut serial = FlashTile::new(rows, d, bk);
+        let mut left = FlashTile::new(rows, d, bk);
+        let mut right = FlashTile::new(rows, d, bk);
+        score_block(&q, &k, 0, rows, 0, bk, 0, 0.5, false, &mut s);
+        serial.ingest(&s, bk, &v.data()[..bk * d], None, 1, &mut stats);
+        left.ingest(&s, bk, &v.data()[..bk * d], None, 1, &mut stats);
+        score_block(&q, &k, 0, rows, bk, 2 * bk, 0, 0.5, false, &mut s);
+        serial.ingest(&s, bk, &v.data()[bk * d..], None, 1, &mut stats);
+        right.ingest(&s, bk, &v.data()[bk * d..], None, 1, &mut stats);
+
+        left.merge(&right);
+        assert_allclose(&left.finalize(), &serial.finalize(), 1e-5, 1e-5, "merge-vs-one-pass").unwrap();
+    }
+
+    #[test]
+    fn merge_keeps_fully_masked_rows_zero() {
+        let (rows, d) = (2, 4);
+        let mut a = FlashTile::new(rows, d, 4);
+        let mut b = FlashTile::new(rows, d, 4);
+        // row 0 of b sees one real entry; row 1 stays fully masked in both
+        let s = [1.0f32, f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY];
+        let mut stats = SkipStats::default();
+        b.ingest(&s[..2], 1, &[3.0, 0.0, 0.0, 0.0], None, 1, &mut stats);
+        a.merge(&b);
+        assert_eq!(a.m[1], f32::NEG_INFINITY);
+        let out = a.finalize();
+        assert_eq!(&out[d..], &[0.0; 4], "masked row must finalize to zero");
+        assert_eq!(&out[..d], &[3.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn splitkv_single_span_reproduces_run_tiled_bitwise() {
+        let mut rng = Pcg::seeded(18);
+        let (n, d) = (40, 8);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+        let kernel = F32Kernel::new(&q, &k, &cfg);
+        let (serial, s1) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline);
+        let (split, s2) =
+            run_tiled_splitkv(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline, cfg.n_kblocks(n));
+        assert_eq!(serial, split, "one span per row must be the serial reduction");
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn splitkv_matches_run_tiled_and_is_exec_invariant() {
+        let pool2 = crate::util::threadpool::WorkerPool::new(2);
+        let pool8 = crate::util::threadpool::WorkerPool::new(8);
+        Cases::standard(803).check(|rng| {
+            let n = rng.range(1, 70);
+            let d = 8;
+            let cfg = AttnConfig {
+                bq: rng.range(1, 20),
+                bk: rng.range(1, 20),
+                causal: rng.chance(0.5),
+                scale: None,
+                cw: rng.range(1, 4),
+                row_offset: if rng.chance(0.5) { rng.range(0, 40) } else { 0 },
+            };
+            let span = rng.range(1, 5);
+            let q = Tensor::randn(&[n, d], rng);
+            let k = Tensor::randn(&[n + cfg.row_offset, d], rng);
+            let v = Tensor::randn(&[n + cfg.row_offset, d], rng);
+            let kernel = F32Kernel::new(&q, &k, &cfg);
+            let (serial, st_serial) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline);
+            let (split, st_split) =
+                run_tiled_splitkv(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline, span);
+            // λ off: span stats sum exactly to the serial row totals
+            if st_serial != st_split {
+                return Err(format!("splitkv stats diverged: {st_serial:?} vs {st_split:?}"));
+            }
+            for (exec, name) in [
+                (Exec::Threads(4), "threads"),
+                (Exec::Pool(&pool2), "pool2"),
+                (Exec::Pool(&pool8), "pool8"),
+            ] {
+                let (o, s) = run_tiled_splitkv(&q, &k, &v, &cfg, &kernel, &DenseFilter, exec, span);
+                if o != split || s != st_split {
+                    return Err(format!("splitkv not bitwise under {name}"));
+                }
+            }
+            assert_allclose(split.data(), serial.data(), 1e-4, 1e-3, "splitkv-vs-serial")
+        });
     }
 
     #[test]

@@ -53,6 +53,51 @@ impl AttnConfig {
     }
 }
 
+/// Span size (in k-blocks) used by [`KvSplit::Auto`]: with the paper's
+/// default `b_k = 64` a span covers 256 cached keys, enough work to
+/// amortize one partial-state merge while still exposing one span per
+/// worker on KV caches past ~1K tokens.
+pub const KV_SPLIT_AUTO_BLOCKS: usize = 4;
+
+/// How an engine splits the KV domain of decode-shaped (single query
+/// tile) calls across workers — the Flash-Decoding lever for the serving
+/// hot path, where `run_tiled`'s row parallelism has only one row to
+/// hand out.
+///
+/// The span count is always derived from the *cache length* (`S =
+/// ceil(n_kblocks / span)`), **never** from the worker count, so outputs
+/// and merged [`SkipStats`] are bitwise-identical across
+/// `Exec::Inline`/`Threads`/`Pool` and any pool size (see the split-KV
+/// contract in `attention::pipeline`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvSplit {
+    /// Never split. Decode steps reduce their KV domain serially within
+    /// one tile, which keeps decode **bitwise-identical** to the same
+    /// rows of a one-shot prefill (the PR-2 parity contract). This is
+    /// the builder default.
+    Off,
+    /// Split single-tile calls — decode steps and sub-`b_q` prefill
+    /// chunks — into spans of [`KV_SPLIT_AUTO_BLOCKS`] k-blocks. Their
+    /// output becomes allclose (not bitwise) to the serial path — the
+    /// reduction tree changes — but stays bitwise deterministic across
+    /// execution modes and pool sizes, with λ-off skip counters exactly
+    /// equal.
+    Auto,
+    /// Split single-tile calls into spans of `n` k-blocks each.
+    Blocks(usize),
+}
+
+impl KvSplit {
+    /// Span size in k-blocks, if splitting is enabled.
+    pub fn span_blocks(&self) -> Option<usize> {
+        match self {
+            KvSplit::Off => None,
+            KvSplit::Auto => Some(KV_SPLIT_AUTO_BLOCKS),
+            KvSplit::Blocks(n) => Some((*n).max(1)),
+        }
+    }
+}
+
 /// A binary block mask of shape (n_qblocks, n_kblocks) — `M_g` in the paper.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BlockMask {

@@ -21,8 +21,9 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::attention::{AttnConfig, AttnEngine, Execution};
+use crate::attention::{AttnConfig, AttnEngine, Execution, KvSplit};
 use crate::sparge::SpargeParams;
+use crate::util::threadpool::WorkerPool;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::EngineHandle;
@@ -76,6 +77,12 @@ pub struct ServeOptions {
     pub cfg: AttnConfig,
     /// Worker-pool size of the shared engine.
     pub threads: usize,
+    /// Split-KV policy of the shared engine. Defaults to
+    /// [`KvSplit::Auto`]: the serving loop is exactly the decode-shaped
+    /// workload Flash-Decoding exists for, and the serving contract is
+    /// determinism across pool sizes (which split-KV preserves), not
+    /// bitwise decode≡prefill parity (which it trades away).
+    pub kv_split: KvSplit,
 }
 
 impl Default for ServeOptions {
@@ -85,16 +92,20 @@ impl Default for ServeOptions {
             params: SpargeParams::default(),
             cfg: AttnConfig::causal(),
             threads: crate::util::threadpool::default_threads(),
+            kv_split: KvSplit::Auto,
         }
     }
 }
 
 impl ServeOptions {
-    fn build_engine(&self) -> AttnEngine {
+    /// Build the serving engine over `pool` — the coordinator's one
+    /// shared worker pool, which the probe engines join too.
+    fn build_engine(&self, pool: Arc<WorkerPool>) -> AttnEngine {
         AttnEngine::builder()
             .config(self.cfg)
             .sparge(&self.params)
-            .execution(Execution::Pool(self.threads))
+            .kv_split(self.kv_split)
+            .shared_pool(pool)
             .build()
     }
 }
@@ -106,6 +117,11 @@ pub struct Coordinator {
     batcher: Arc<Batcher>,
     pub metrics: Arc<Metrics>,
     engine: Option<EngineHandle>,
+    /// The one worker pool every attention composition shares: the
+    /// serving loop's engine and both probe engines run over it, so
+    /// mixed-mode traffic never oversubscribes the machine with per-use
+    /// pools.
+    attn_pool: Arc<WorkerPool>,
     next_id: AtomicU64,
     worker: Option<thread::JoinHandle<()>>,
 }
@@ -140,16 +156,25 @@ impl Coordinator {
         assert!(policy.max_batch > 0, "BatchPolicy.max_batch must be positive");
         let batcher = Arc::new(Batcher::new(policy));
         let metrics = Arc::new(Metrics::new());
+        let attn_pool = WorkerPool::shared(opts.threads);
+        let attn_engine = opts.build_engine(Arc::clone(&attn_pool));
         let worker = {
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
             let engine = engine.clone();
             thread::Builder::new()
                 .name("sparge-scheduler".into())
-                .spawn(move || serve_loop(&batcher, engine.as_ref(), &metrics, policy, &opts))
+                .spawn(move || serve_loop(&batcher, engine.as_ref(), &metrics, policy, &opts, &attn_engine))
                 .expect("spawn scheduler")
         };
-        Coordinator { batcher, metrics, engine, next_id: AtomicU64::new(1), worker: Some(worker) }
+        Coordinator {
+            batcher,
+            metrics,
+            engine,
+            attn_pool,
+            next_id: AtomicU64::new(1),
+            worker: Some(worker),
+        }
     }
 
     fn enqueue(
@@ -206,6 +231,26 @@ impl Coordinator {
         self.engine.as_ref()
     }
 
+    /// Build a probe's attention engine: over the coordinator's shared
+    /// worker pool when `threads` matches its size (the default probe
+    /// path — no extra threads are ever spawned), falling back to scoped
+    /// per-call threads for an explicit different worker count.
+    ///
+    /// Sharing is deliberate and has a cost: the pool serializes
+    /// submitters, so a large probe queues ahead of the serving loop's
+    /// next tick (and vice versa) for the duration of one `run`. That is
+    /// what "probing the serving configuration" means — the probe
+    /// measures the pool the streams actually run on. An operator who
+    /// wants an isolated measurement passes a `threads` value different
+    /// from the pool size and gets the old scoped-thread behavior.
+    fn probe_engine(&self, builder: crate::attention::AttnEngineBuilder, threads: usize) -> AttnEngine {
+        if threads == self.attn_pool.size() {
+            builder.shared_pool(Arc::clone(&self.attn_pool)).build()
+        } else {
+            builder.execution(Execution::Threads(threads)).build()
+        }
+    }
+
     /// Kernel-level attention probe: run single-head SpargeAttn on a
     /// seeded synthetic workload through the unified tiled pipeline
     /// (`attention::pipeline::run_tiled`), with query-block rows fanned
@@ -226,11 +271,7 @@ impl Coordinator {
         let s =
             crate::workloads::synthetic::generate(&crate::workloads::SyntheticSpec::lm_like(n, d), &mut rng);
         let cfg = crate::attention::AttnConfig::default();
-        let engine = crate::attention::AttnEngine::builder()
-            .config(cfg)
-            .sparge(params)
-            .execution(crate::attention::Execution::Threads(threads))
-            .build();
+        let engine = self.probe_engine(AttnEngine::builder().config(cfg).sparge(params), threads);
         let t0 = Instant::now();
         let res = engine.attention(&s.q, &s.k, &s.v);
         let seconds = t0.elapsed().as_secs_f64();
@@ -263,11 +304,7 @@ impl Coordinator {
             &mut rng,
         );
         let cfg = crate::attention::AttnConfig { causal: true, ..Default::default() };
-        let engine = crate::attention::AttnEngine::builder()
-            .config(cfg)
-            .sparge(params)
-            .execution(crate::attention::Execution::Threads(threads))
-            .build();
+        let engine = self.probe_engine(AttnEngine::builder().config(cfg).sparge(params), threads);
         let mut session = engine.session();
         let t0 = Instant::now();
         let prefill = session.prefill(&s.q.rows(0, n), &s.k.rows(0, n), &s.v.rows(0, n));
@@ -461,9 +498,9 @@ fn serve_loop(
     metrics: &Metrics,
     policy: BatchPolicy,
     opts: &ServeOptions,
+    attn_engine: &AttnEngine,
 ) {
-    let attn_engine = opts.build_engine();
-    let mut mgr = SessionManager::new(&attn_engine, opts.chunk);
+    let mut mgr = SessionManager::new(attn_engine, opts.chunk);
     let mut lm: Vec<LmActive> = Vec::new();
     let mut pending: HashMap<u64, PendingStream> = HashMap::new();
     loop {

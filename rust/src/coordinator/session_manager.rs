@@ -5,27 +5,43 @@
 //! Each admitted request is a [`SeqStream`] (prompt rows + decode rows,
 //! deterministic from an [`AttnStreamSpec`] seed). The scheduler drives
 //! the manager in ticks; per tick every active session advances by one
-//! unit of work:
+//! unit of work (phases snapshotted at tick start, so a session never
+//! advances twice in one tick):
 //!
 //! - **prefilling** sessions run one *bounded* prompt chunk
 //!   ([`crate::attention::AttnSession::prefill_chunk`], at most
 //!   `chunk` rows, interior edges aligned down to `b_q` so chunked
 //!   execution is bitwise-faithful to one-shot prefill — see the parity
-//!   notes in [`crate::attention::engine`]). Bounding the chunk caps how
-//!   long any tick can run, which caps time-to-first-token for every
-//!   other queued and active session;
-//! - **decoding** sessions run one single-row decode step;
+//!   notes in [`crate::attention::engine`]). Chunks run one session at a
+//!   time: a chunk is many query-tile rows, which the engine already
+//!   fans across its pool. Bounding the chunk caps how long any tick can
+//!   run, which caps time-to-first-token for every other queued and
+//!   active session;
+//! - **decoding** sessions advance one single-row step each, **batched**:
+//!   every decode-ready session is advanced inside one `Exec::map` over
+//!   the engine's pool, so token-phase throughput scales with cores
+//!   across sessions. Each step runs `Exec::Inline` inside its worker
+//!   (the pipeline is bitwise-identical across exec modes, so outputs do
+//!   not depend on batch composition). A *lone* decoding session instead
+//!   keeps the engine's own executor, which lets the engine's split-KV
+//!   policy fan the single step's KV spans across the same pool — the
+//!   two levels of decode parallelism time-share one set of workers;
 //! - finished sessions retire with a [`SeqResult`]: output rows, merged
 //!   [`SkipStats`], TTFT, per-output-token latencies, compute seconds.
 //!
 //! [`run_sequential`] is the request-level baseline (one-shot prefill,
 //! then all decode steps, one request at a time): with `max_batch = 1`
-//! the continuous loop reproduces its per-request outputs exactly, and
-//! `benches/table8_serving.rs` measures what interleaving buys over it.
+//! the continuous loop reproduces its per-request outputs exactly under
+//! `KvSplit::Off` (with split-KV on, a sub-`b_q` tail chunk of a
+//! chunked prefill re-trees its reduction, so those prompt rows are
+//! allclose instead — decode rows and all `SkipStats` stay exact), and
+//! `benches/table8_serving.rs` measures what interleaving buys over it
+//! (including decode tokens/s vs pool size, split-KV on and off).
 
+use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::attention::{AttnEngine, AttnSession, SkipStats};
+use crate::attention::{AttnEngine, AttnSession, Exec, SkipStats};
 use crate::tensor::Tensor;
 use crate::workloads::{synthetic, SyntheticSpec};
 
@@ -118,6 +134,52 @@ impl ActiveSeq<'_> {
         self.prefilled == self.stream.prefill && self.decoded == self.stream.decode_steps()
     }
 
+    /// Run one bounded prefill chunk (`chunk` rows, pre-aligned by the
+    /// manager) and do the session's bookkeeping.
+    fn advance_prefill(&mut self, chunk: usize) {
+        let t0 = Instant::now();
+        let end = (self.prefilled + chunk).min(self.stream.prefill);
+        let r = self.session.prefill_chunk(
+            &self.stream.q.rows(self.prefilled, end),
+            &self.stream.k.rows(self.prefilled, end),
+            &self.stream.v.rows(self.prefilled, end),
+        );
+        self.out.extend_from_slice(r.out.data());
+        self.stats.merge(&r.stats);
+        self.prefilled = end;
+        self.compute += t0.elapsed().as_secs_f64();
+        if self.finished() {
+            // decode-less stream: the prompt's last row is its first (and
+            // only) "token"
+            self.ttft = Some(self.arrived.elapsed().as_secs_f64());
+        }
+    }
+
+    /// Run one single-row decode step under `exec` (the engine's own
+    /// executor when this session is advanced alone, `Exec::Inline` when
+    /// it is advanced inside the batched cross-session map — outputs are
+    /// bitwise-identical either way) and do the session's bookkeeping.
+    fn advance_decode(&mut self, exec: Exec<'_>) {
+        let t0 = Instant::now();
+        let t = self.stream.prefill + self.decoded;
+        let r = self.session.decode_with_exec(
+            &self.stream.q.rows(t, t + 1),
+            &self.stream.k.rows(t, t + 1),
+            &self.stream.v.rows(t, t + 1),
+            exec,
+        );
+        self.out.extend_from_slice(r.out.data());
+        self.stats.merge(&r.stats);
+        self.decoded += 1;
+        let dt = t0.elapsed().as_secs_f64();
+        self.compute += dt;
+        if self.ttft.is_none() {
+            self.ttft = Some(self.arrived.elapsed().as_secs_f64());
+        } else {
+            self.tpot.push(dt);
+        }
+    }
+
     fn into_result(self) -> SeqResult {
         let dv = self.stream.v.dim(1);
         let rows = self.out.len() / dv;
@@ -157,6 +219,16 @@ impl<'e> SessionManager<'e> {
         self.active.len()
     }
 
+    /// Sessions still consuming their prompt.
+    pub fn prefilling(&self) -> usize {
+        self.active.iter().filter(|s| s.prefilled < s.stream.prefill).count()
+    }
+
+    /// Sessions past their prompt, producing decode tokens.
+    pub fn decoding(&self) -> usize {
+        self.active.len() - self.prefilling()
+    }
+
     /// Rows per prefill tick: `chunk` aligned down to a `b_q` multiple.
     fn chunk_rows(&self) -> usize {
         let bq = self.engine.config().bq;
@@ -183,45 +255,43 @@ impl<'e> SessionManager<'e> {
     }
 
     /// One scheduling tick: every active session advances one unit —
-    /// prefilling sessions by one bounded chunk, decoding sessions by one
-    /// token — and finished sessions retire (returned in admission order).
+    /// prefilling sessions by one bounded chunk (serially: each chunk
+    /// already fans its query-tile rows across the pool), decode-ready
+    /// sessions by one token **in one batched map over the engine's
+    /// workers** — and finished sessions retire (in admission order).
+    /// Phases are snapshotted at tick start, so a session that finishes
+    /// its prompt this tick starts decoding next tick, exactly like the
+    /// old serial loop.
     pub fn tick(&mut self) -> Vec<SeqResult> {
         let chunk = self.chunk_rows();
-        for seq in &mut self.active {
-            let t0 = Instant::now();
-            if seq.prefilled < seq.stream.prefill {
-                let end = (seq.prefilled + chunk).min(seq.stream.prefill);
-                let r = seq.session.prefill_chunk(
-                    &seq.stream.q.rows(seq.prefilled, end),
-                    &seq.stream.k.rows(seq.prefilled, end),
-                    &seq.stream.v.rows(seq.prefilled, end),
-                );
-                seq.out.extend_from_slice(r.out.data());
-                seq.stats.merge(&r.stats);
-                seq.prefilled = end;
-                seq.compute += t0.elapsed().as_secs_f64();
-                if seq.finished() {
-                    // decode-less stream: the prompt's last row is its
-                    // first (and only) "token"
-                    seq.ttft = Some(seq.arrived.elapsed().as_secs_f64());
-                }
-            } else if seq.decoded < seq.stream.decode_steps() {
-                let t = seq.stream.prefill + seq.decoded;
-                let r = seq.session.decode(
-                    &seq.stream.q.rows(t, t + 1),
-                    &seq.stream.k.rows(t, t + 1),
-                    &seq.stream.v.rows(t, t + 1),
-                );
-                seq.out.extend_from_slice(r.out.data());
-                seq.stats.merge(&r.stats);
-                seq.decoded += 1;
-                let dt = t0.elapsed().as_secs_f64();
-                seq.compute += dt;
-                if seq.ttft.is_none() {
-                    seq.ttft = Some(seq.arrived.elapsed().as_secs_f64());
-                } else {
-                    seq.tpot.push(dt);
-                }
+        // phase snapshot: one unit of work per session per tick
+        let decode_phase: Vec<bool> =
+            self.active.iter().map(|s| s.prefilled == s.stream.prefill).collect();
+        for (seq, &decoding) in self.active.iter_mut().zip(&decode_phase) {
+            if !decoding {
+                seq.advance_prefill(chunk);
+            }
+        }
+        let ready: Vec<&mut ActiveSeq<'e>> = self
+            .active
+            .iter_mut()
+            .zip(&decode_phase)
+            .filter(|(s, d)| **d && s.decoded < s.stream.decode_steps())
+            .map(|(s, _)| s)
+            .collect();
+        match ready.len() {
+            0 => {}
+            // a lone decoder keeps the engine's executor: the engine's
+            // split-KV policy fans the step's KV spans across the pool
+            1 => ready.into_iter().next().unwrap().advance_decode(self.engine.exec()),
+            // cross-session batch: one map over (session, step) pairs;
+            // each worker locks only its own (uncontended) slot and runs
+            // its step inline
+            _ => {
+                let slots: Vec<Mutex<&mut ActiveSeq<'e>>> = ready.into_iter().map(Mutex::new).collect();
+                self.engine.exec().map(slots.len(), |i| {
+                    slots[i].lock().unwrap().advance_decode(Exec::Inline);
+                });
             }
         }
         let mut done = Vec::new();
@@ -240,7 +310,9 @@ impl<'e> SessionManager<'e> {
 /// Request-level baseline: one-shot prefill then every decode step, on the
 /// caller's thread. Same engine, same [`SeqResult`] accounting — the
 /// sequential scheduler the continuous-batching loop replaces (and, with
-/// `max_batch = 1`, reproduces bitwise for f32 engines).
+/// `max_batch = 1`, reproduces bitwise for f32 engines under
+/// `KvSplit::Off`; split-KV keeps decode rows and stats exact but makes
+/// sub-`b_q` prefill tail chunks allclose — see the module docs).
 pub fn run_sequential(engine: &AttnEngine, id: u64, stream: &SeqStream) -> SeqResult {
     let arrived = Instant::now();
     let mut session = engine.session();
@@ -293,7 +365,7 @@ pub fn run_sequential(engine: &AttnEngine, id: u64, stream: &SeqStream) -> SeqRe
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::{AttnConfig, Execution};
+    use crate::attention::{AttnConfig, AttnEngine, Execution, KvSplit};
     use crate::sparge::SpargeParams;
 
     fn spec(prefill: usize, decode: usize, seed: u64) -> AttnStreamSpec {
@@ -351,6 +423,49 @@ mod tests {
                 assert_eq!(m.out, s.out, "outputs diverged (max_active {max_active}, id {})", m.id);
                 assert_eq!(m.stats, s.stats, "stats diverged (max_active {max_active}, id {})", m.id);
                 assert_eq!(m.tokens, s.tokens);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_tick_with_split_kv_matches_sequential_bitwise() {
+        // The serving composition (pool + split-KV): the batched decode
+        // phase runs steps Exec::Inline inside pool workers while the
+        // sequential baseline runs them over the engine's pool (with
+        // split-KV fanning the spans) — identical bits, because driver
+        // routing is shape-based and both drivers are exec-invariant.
+        // chunk (64) covers every prompt, so prefill is the *same* single
+        // call on both sides: with split-KV on, a sub-b_q tail chunk of a
+        // multi-chunk prefill routes through the split driver and would
+        // only be allclose to the one-shot rows (tested at the session
+        // layer in tests/splitkv_decode.rs); stats stay exact either way.
+        let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+        let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false };
+        let engine = AttnEngine::builder()
+            .config(cfg)
+            .sparge(&params)
+            .execution(Execution::Pool(4))
+            .kv_split(KvSplit::Blocks(2))
+            .build();
+        let specs = [spec(40, 8, 21), spec(16, 6, 22), spec(0, 6, 23), spec(33, 5, 24)];
+        let sequential: Vec<SeqResult> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| run_sequential(&engine, i as u64, &SeqStream::synth(s)))
+            .collect();
+        for max_active in [1, 4] {
+            let managed = run_managed(&engine, 64, max_active, &specs);
+            for (m, s) in managed.iter().zip(&sequential) {
+                assert_eq!(m.out, s.out, "split-KV outputs diverged (batch {max_active}, id {})", m.id);
+                assert_eq!(m.stats, s.stats, "split-KV stats diverged (batch {max_active}, id {})", m.id);
+            }
+        }
+        // chunked prefill under split-KV: outputs re-tree (allclose at the
+        // session layer) but the merged per-request stats remain exact
+        for max_active in [1, 4] {
+            let managed = run_managed(&engine, 16, max_active, &specs);
+            for (m, s) in managed.iter().zip(&sequential) {
+                assert_eq!(m.stats, s.stats, "chunked split-KV stats (batch {max_active}, id {})", m.id);
             }
         }
     }

@@ -34,15 +34,20 @@
 //! table in [`attention`].
 //!
 //! Underneath, every composition runs through **one** tiled
-//! q-block × k-block driver, [`attention::pipeline::run_tiled`], parallel
-//! over query-block rows, with pluggable seams:
+//! q-block × k-block loop with two drivers:
+//! [`attention::pipeline::run_tiled`] (parallel over query-block rows —
+//! the prefill shape) and [`attention::pipeline::run_tiled_splitkv`]
+//! (Flash-Decoding: a decode step's KV domain is cut into contiguous
+//! spans reduced in parallel and merged deterministically — the serving
+//! hot path, opt-in via [`attention::KvSplit`]). Both share the seams:
 //! [`attention::pipeline::ScoreKernel`] (how a score block is produced),
 //! [`attention::pipeline::BlockFilter`] (stage-1 mask lookup, stage-2 λ,
 //! causal-domain bound), and [`attention::pipeline::Exec`] (who runs the
-//! rows). Around it: the mask-prediction pipeline, baselines (each just a
-//! mask constructor), workloads, tuner, cost model, and the PJRT runtime
-//! that loads and executes the artifacts. Python never runs on the
-//! request path.
+//! work — inline, scoped threads, or a persistent pool shareable across
+//! engines). Around it: the mask-prediction pipeline, baselines (each
+//! just a mask constructor), workloads, tuner, cost model, and the PJRT
+//! runtime that loads and executes the artifacts. Python never runs on
+//! the request path.
 
 pub mod attention;
 pub mod baselines;

@@ -70,6 +70,12 @@ pub struct SpargeOutput {
 /// δ_Q·δ_K (Alg. 1 lines 3 & 12). P̃ and V stay f32 (SageAttention keeps
 /// PV in higher precision). Causal masking of the dequantized block is
 /// applied here, inside the kernel, like every other `ScoreKernel`.
+///
+/// Like the f32 kernel, scoring is pure per (q-block, k-block) pair —
+/// blocks are quantized independently and the smoothing shift is global
+/// — so the kernel serves both pipeline drivers unchanged: `run_tiled`'s
+/// row order and `run_tiled_splitkv`'s span partition read the same
+/// per-block payloads.
 pub struct QuantScoreKernel {
     qb: Vec<QuantBlock>,
     kb: Vec<QuantBlock>,

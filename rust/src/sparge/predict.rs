@@ -325,6 +325,17 @@ impl KPool {
         self.rows.len()
     }
 
+    /// Reserve per-block state for a cache of `rows` rows, so a session
+    /// growing its KV cache in amortized block-multiple steps grows the
+    /// pool's sums/rows/sims in the same strides instead of leaving each
+    /// `Vec` to reallocate on its own schedule.
+    pub fn reserve_rows(&mut self, rows: usize) {
+        let blocks = rows.div_ceil(self.bk);
+        self.sums.reserve_exact((blocks * self.d).saturating_sub(self.sums.len()));
+        self.rows.reserve_exact(blocks.saturating_sub(self.rows.len()));
+        self.sims.reserve_exact(blocks.saturating_sub(self.sims.len()));
+    }
+
     /// Bulk-build from all rows of `k` (pool must be empty): one full
     /// scan, equivalent to `compress_blocks(k, bk)`.
     pub fn build(&mut self, k: &Tensor) {

@@ -123,14 +123,76 @@ pub fn matmul_nt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k
         }
         i += 2;
     }
-    // odd tail row
+    // odd tail row (and the whole matrix when m == 1): the GEMV kernel
     while i < m {
-        let ar = &a[i * k..(i + 1) * k];
-        let cr = &mut c[i * n..(i + 1) * n];
-        for j in 0..n {
-            cr[j] = dot(ar, &b[j * k..(j + 1) * k]);
-        }
+        gemv_nt(&a[i * k..(i + 1) * k], b, &mut c[i * n..(i + 1) * n], n, k);
         i += 1;
+    }
+}
+
+/// GEMV against row-major B: `c[j] = a · b[j]` for j in 0..n — the m=1
+/// decode shape of the NT kernel (one query row scored against a key
+/// block), which the 2×4 register tile above cannot cover.
+///
+/// Same 4-wide j-unroll × `LANES`-wide lane accumulators as the tiled
+/// kernel, so the single a-row is loaded once per 4 b-rows instead of
+/// per `dot` call. Each output is accumulated lane-wise over the aligned
+/// prefix, lane-summed, then finished with the sequential remainder —
+/// the exact float evaluation order of [`dot`], so a row computed here
+/// is **bitwise-identical** to the per-`dot` loop it replaces (the
+/// decode≡prefill parity contract in `attention::engine` depends on
+/// every kernel path agreeing per row).
+#[inline]
+pub fn gemv_nt(a: &[f32], b: &[f32], c: &mut [f32], n: usize, k: usize) {
+    debug_assert_eq!(a.len(), k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), n);
+    let n4 = n & !3;
+    let kl = k & !(LANES - 1);
+    let mut j = 0;
+    while j < n4 {
+        let b0 = &b[j * k..(j + 1) * k];
+        let b1 = &b[(j + 1) * k..(j + 2) * k];
+        let b2 = &b[(j + 2) * k..(j + 3) * k];
+        let b3 = &b[(j + 3) * k..(j + 4) * k];
+        let mut a0 = [0f32; LANES];
+        let mut a1 = [0f32; LANES];
+        let mut a2 = [0f32; LANES];
+        let mut a3 = [0f32; LANES];
+        let mut p = 0;
+        while p < kl {
+            for l in 0..LANES {
+                let av = a[p + l];
+                a0[l] += av * b0[p + l];
+                a1[l] += av * b1[p + l];
+                a2[l] += av * b2[p + l];
+                a3[l] += av * b3[p + l];
+            }
+            p += LANES;
+        }
+        let mut s = [
+            a0.iter().sum::<f32>(),
+            a1.iter().sum::<f32>(),
+            a2.iter().sum::<f32>(),
+            a3.iter().sum::<f32>(),
+        ];
+        while p < k {
+            let av = a[p];
+            s[0] += av * b0[p];
+            s[1] += av * b1[p];
+            s[2] += av * b2[p];
+            s[3] += av * b3[p];
+            p += 1;
+        }
+        c[j] = s[0];
+        c[j + 1] = s[1];
+        c[j + 2] = s[2];
+        c[j + 3] = s[3];
+        j += 4;
+    }
+    while j < n {
+        c[j] = dot(a, &b[j * k..(j + 1) * k]);
+        j += 1;
     }
 }
 
@@ -330,6 +392,32 @@ mod tests {
                 assert_eq!(c[i * n + j], want);
             }
         }
+    }
+
+    #[test]
+    fn gemv_is_bitwise_identical_to_per_dot_loop() {
+        // The decode-shape fast path must not change a single bit vs the
+        // per-key `dot` loop it replaces — decode≡prefill parity rides on
+        // every kernel path agreeing per row.
+        Cases::standard(103).check(|rng| {
+            let n = rng.range(1, 40);
+            let k = rng.range(1, 70);
+            let a = Tensor::randn(&[1, k], rng);
+            let b = Tensor::randn(&[n, k], rng);
+            let mut fast = vec![0f32; n];
+            gemv_nt(a.data(), b.data(), &mut fast, n, k);
+            let slow: Vec<f32> = (0..n).map(|j| dot(a.data(), &b.data()[j * k..(j + 1) * k])).collect();
+            if fast != slow {
+                return Err(format!("gemv diverged from dot at n={n} k={k}"));
+            }
+            // and matmul_nt_into with m = 1 routes through it
+            let mut via_mm = vec![0f32; n];
+            matmul_nt_into(a.data(), b.data(), &mut via_mm, 1, n, k);
+            if via_mm != fast {
+                return Err("m=1 matmul_nt_into diverged from gemv".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

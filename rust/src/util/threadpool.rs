@@ -122,10 +122,20 @@ struct PoolState {
     next: usize,
     /// Indices finished for the current job.
     finished: usize,
-    /// An index of the current job panicked; reported to the submitter so
-    /// a worker panic propagates like `std::thread::scope`'s join would,
-    /// instead of deadlocking the pool.
+    /// An index of the *current* job panicked; latched into
+    /// `panicked_epochs` when the job completes.
     panicked: bool,
+    /// Epochs of completed jobs that had a panicking index, each awaiting
+    /// pickup by its own submitter. A *set* keyed by epoch — not a plain
+    /// flag — so that with concurrent submitters neither a queued
+    /// submitter installing the next job nor a second panicking job
+    /// completing first can erase a panic before the panicked job's own
+    /// submitter observes (and removes) its entry. Bounded by the number
+    /// of in-flight submitters: every installed epoch is awaited by
+    /// exactly one `run`, which consumes its entry. This propagates
+    /// worker panics like `std::thread::scope`'s join would, instead of
+    /// deadlocking the pool.
+    panicked_epochs: Vec<u64>,
     shutdown: bool,
 }
 
@@ -142,6 +152,16 @@ struct JobPtr {
 unsafe impl Send for JobPtr {}
 
 impl WorkerPool {
+    /// Spawn a pool of `n` persistent workers behind an `Arc`, for
+    /// sharing across engine compositions: several `AttnEngine`s (dense +
+    /// sparge, serving + probes) can time-share one set of workers via
+    /// `AttnEngineBuilder::shared_pool` instead of each spawning their
+    /// own. Concurrent submitters serialize on the single job slot (see
+    /// [`WorkerPool::run`]), so sharing is safe — just queued.
+    pub fn shared(n: usize) -> Arc<WorkerPool> {
+        Arc::new(WorkerPool::new(n))
+    }
+
     /// Spawn a pool of `n` persistent workers (n >= 1).
     pub fn new(n: usize) -> WorkerPool {
         let n = n.max(1);
@@ -194,8 +214,16 @@ impl WorkerPool {
         while st.completed < epoch {
             st = self.shared.done.wait(st).unwrap();
         }
-        let panicked = st.panicked;
-        st.panicked = false;
+        // per-epoch latch: immune to a queued submitter having already
+        // installed the *next* job — or a later job having also panicked
+        // — by the time this submitter wakes
+        let panicked = match st.panicked_epochs.iter().position(|&e| e == epoch) {
+            Some(pos) => {
+                st.panicked_epochs.swap_remove(pos);
+                true
+            }
+            None => false,
+        };
         drop(st);
         assert!(!panicked, "WorkerPool job panicked on a worker thread");
     }
@@ -259,6 +287,10 @@ fn worker_loop(shared: &PoolShared) {
         }
         st.finished += 1;
         if st.finished == job.n {
+            if st.panicked {
+                st.panicked_epochs.push(st.epoch);
+                st.panicked = false;
+            }
             st.completed = st.epoch;
             st.job = None;
             shared.done.notify_all();
@@ -440,6 +472,52 @@ mod tests {
         assert!(result.is_err(), "worker panic must propagate to the submitter");
         // the job slot was released; the pool keeps working
         assert_eq!(pool.map(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn worker_pool_panic_lands_on_the_panicking_submitter_only() {
+        // The per-epoch panic latch: with submitters interleaving on one
+        // shared pool (the serving + probe composition), a panic in one
+        // submitter's job must surface on *that* submitter every time,
+        // and never on the innocent one. Two panickers make consecutive
+        // panicking epochs likely — a single last-panic slot would lose
+        // the earlier one; the clean submitter catches misattribution.
+        let pool = Arc::new(WorkerPool::new(2));
+        let rounds = 25;
+        thread::scope(|scope| {
+            let panickers: Vec<_> = (0..2)
+                .map(|_| {
+                    let p = Arc::clone(&pool);
+                    scope.spawn(move || {
+                        let mut caught = 0;
+                        for _ in 0..rounds {
+                            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                p.run(3, &|i| {
+                                    if i == 1 {
+                                        panic!("boom");
+                                    }
+                                });
+                            }));
+                            if r.is_err() {
+                                caught += 1;
+                            }
+                        }
+                        caught
+                    })
+                })
+                .collect();
+            let p = Arc::clone(&pool);
+            let clean = scope.spawn(move || {
+                for round in 0..rounds as u64 {
+                    let out = p.map(5, |i| i as u64 + round);
+                    assert_eq!(out, (0..5u64).map(|i| i + round).collect::<Vec<_>>());
+                }
+            });
+            for h in panickers {
+                assert_eq!(h.join().unwrap(), rounds, "every panicking job must report");
+            }
+            clean.join().expect("clean submitter must never see a foreign panic");
+        });
     }
 
     #[test]

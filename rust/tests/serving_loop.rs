@@ -21,6 +21,7 @@ fn opts() -> ServeOptions {
         params: SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false },
         cfg: AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 },
         threads: 2,
+        kv_split: sparge::attention::KvSplit::Auto,
     }
 }
 

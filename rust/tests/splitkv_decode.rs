@@ -1,0 +1,321 @@
+//! Golden + property suite for the split-KV (Flash-Decoding) serving
+//! path: `run_tiled_splitkv` vs the serial driver, the determinism
+//! contract (bitwise across exec modes and pool sizes for a fixed span
+//! size — S comes from the cache length, never the worker count), λ
+//! span-locality, and session-level decode parity for every precision ×
+//! filter composition.
+
+use sparge::attention::{
+    run_tiled, run_tiled_splitkv, AttnConfig, AttnEngine, AttnOutput, BlockMask, Exec, Execution,
+    F32Kernel, KvSplit, MaskFilter, Precision, SparsityPolicy,
+};
+use sparge::sparge::SpargeParams;
+use sparge::tensor::Tensor;
+use sparge::util::prop::{assert_allclose, rel_l1, Cases};
+use sparge::util::rng::Pcg;
+use sparge::util::threadpool::WorkerPool;
+
+fn qkv(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+    let mut rng = Pcg::seeded(seed);
+    (Tensor::randn(&[n, d], &mut rng), Tensor::randn(&[n, d], &mut rng), Tensor::randn(&[n, d], &mut rng))
+}
+
+/// Random mask with at least one kept block per row.
+fn random_mask(rng: &mut Pcg, rows: usize, cols: usize) -> BlockMask {
+    let mut mask = BlockMask::new_all(rows, cols, false);
+    for i in 0..rows {
+        mask.set(i, rng.range(0, cols), true);
+        for j in 0..cols {
+            if rng.chance(0.6) {
+                mask.set(i, j, true);
+            }
+        }
+    }
+    mask
+}
+
+#[test]
+fn splitkv_matches_serial_driver_with_masks_and_offsets() {
+    // The core property: for any n/bq/bk/cw/row_offset/causal geometry,
+    // any span size, and a random stage-1 mask, the split driver is
+    // allclose to the serial one and (λ off) its span-summed SkipStats
+    // are *exactly* the serial counters.
+    Cases::standard(811).check(|rng| {
+        let n = rng.range(1, 60);
+        let d = 8;
+        let cfg = AttnConfig {
+            bq: rng.range(1, 18),
+            bk: rng.range(1, 18),
+            causal: rng.chance(0.5),
+            scale: None,
+            cw: rng.range(1, 4),
+            row_offset: if rng.chance(0.5) { rng.range(0, 30) } else { 0 },
+        };
+        let span = rng.range(1, 6);
+        let nk = n + cfg.row_offset;
+        let q = Tensor::randn(&[n, d], rng);
+        let k = Tensor::randn(&[nk, d], rng);
+        let v = Tensor::randn(&[nk, d], rng);
+        let mask = random_mask(rng, cfg.n_qblocks(n), cfg.n_kblocks(nk));
+        let kernel = F32Kernel::new(&q, &k, &cfg);
+        let filter = MaskFilter::new(&mask, None);
+        let (serial, st_serial) = run_tiled(&q, &k, &v, &cfg, &kernel, &filter, Exec::Inline);
+        let (split, st_split) = run_tiled_splitkv(&q, &k, &v, &cfg, &kernel, &filter, Exec::Inline, span);
+        if st_serial != st_split {
+            return Err(format!("stats not exact: {st_serial:?} vs {st_split:?}"));
+        }
+        assert_allclose(split.data(), serial.data(), 1e-4, 1e-3, "splitkv-vs-serial")
+    });
+}
+
+#[test]
+fn splitkv_bitwise_across_exec_modes_and_pool_sizes() {
+    // The determinism contract: S is derived from the cache length, so a
+    // fixed span size must give identical bits under Inline, scoped
+    // threads, and pools of size 1/2/8 — λ on, to cover the stage-2
+    // accounting too.
+    let (_, k, v) = qkv(96, 16, 812);
+    let q = Tensor::randn(&[1, 16], &mut Pcg::seeded(813));
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: false, scale: None, cw: 2, row_offset: 0 };
+    let kernel = F32Kernel::new(&q, &k, &cfg);
+    let mask = BlockMask::new_all(1, cfg.n_kblocks(96), true);
+    let filter = MaskFilter::new(&mask, Some(-4.0));
+    for span in [1usize, 2, 3, 5] {
+        let (base, st_base) = run_tiled_splitkv(&q, &k, &v, &cfg, &kernel, &filter, Exec::Inline, span);
+        for pool_size in [1usize, 2, 8] {
+            let pool = WorkerPool::new(pool_size);
+            let (o, s) = run_tiled_splitkv(&q, &k, &v, &cfg, &kernel, &filter, Exec::Pool(&pool), span);
+            assert_eq!(o, base, "span {span} pool {pool_size} output bits");
+            assert_eq!(s, st_base, "span {span} pool {pool_size} stats bits");
+        }
+        let (o, s) = run_tiled_splitkv(&q, &k, &v, &cfg, &kernel, &filter, Exec::Threads(4), span);
+        assert_eq!(o, base, "span {span} threads output bits");
+        assert_eq!(s, st_base, "span {span} threads stats bits");
+    }
+}
+
+#[test]
+fn lambda_span_locality_is_conservative_and_deterministic() {
+    // Stage-2 λ thresholds against the span-local running maximum, which
+    // is ≤ the serial running maximum — so every group a span skips, the
+    // serial pass also skips: pv_skipped_frac(split) ≤ pv_skipped_frac
+    // (serial), and the split value is identical across exec modes.
+    let pool = WorkerPool::new(4);
+    Cases::standard(814).check(|rng| {
+        let n = rng.range(8, 80);
+        let d = 8;
+        let cfg = AttnConfig {
+            bq: rng.range(2, 18),
+            bk: rng.range(2, 18),
+            causal: rng.chance(0.5),
+            scale: None,
+            cw: rng.range(1, 4),
+            row_offset: 0,
+        };
+        let span = rng.range(1, 4);
+        let mut q = Tensor::randn(&[n, d], rng);
+        let k = Tensor::randn(&[n, d], rng);
+        let v = Tensor::randn(&[n, d], rng);
+        // spike some queries so λ has contrast to fire on
+        for r in (0..n).step_by(5) {
+            for x in q.row_mut(r) {
+                *x *= 6.0;
+            }
+        }
+        let mask = BlockMask::new_all(cfg.n_qblocks(n), cfg.n_kblocks(n), true);
+        let filter = MaskFilter::new(&mask, Some(-5.0));
+        let kernel = F32Kernel::new(&q, &k, &cfg);
+        let (serial, st_serial) = run_tiled(&q, &k, &v, &cfg, &kernel, &filter, Exec::Inline);
+        let (split, st_split) = run_tiled_splitkv(&q, &k, &v, &cfg, &kernel, &filter, Exec::Inline, span);
+        if st_split.pv_skipped_frac > st_serial.pv_skipped_frac + 1e-12 {
+            return Err(format!(
+                "span-local λ skipped more than serial: {} vs {}",
+                st_split.pv_skipped_frac, st_serial.pv_skipped_frac
+            ));
+        }
+        let (o_pool, st_pool) =
+            run_tiled_splitkv(&q, &k, &v, &cfg, &kernel, &filter, Exec::Pool(&pool), span);
+        if o_pool != split || st_pool != st_split {
+            return Err("λ-on splitkv not deterministic across exec modes".into());
+        }
+        // λ only drops near-zero probability mass; both paths stay close
+        assert_allclose(split.data(), serial.data(), 1e-2, 1e-2, "lambda-splitkv-vs-serial")
+    });
+}
+
+/// Decode a suffix of the stream through a session, returning per-step
+/// outputs and stats.
+fn decode_tail(engine: &AttnEngine, q: &Tensor, k: &Tensor, v: &Tensor, n0: usize) -> Vec<AttnOutput> {
+    let n = q.dim(0);
+    let mut session = engine.session();
+    if n0 > 0 {
+        session.prefill(&q.rows(0, n0), &k.rows(0, n0), &v.rows(0, n0));
+    }
+    (n0..n)
+        .map(|t| session.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1)))
+        .collect()
+}
+
+#[test]
+fn session_decode_splitkv_parity_all_compositions() {
+    // Engine-level acceptance: split-KV decode is allclose to the serial
+    // path for f32 and INT8, under dense / external / predicted filters,
+    // λ on and off; with λ off the per-step SkipStats are exactly equal.
+    let (q, k, v) = qkv(88, 16, 815);
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let n0 = 48;
+    let ext_mask = {
+        let mut rng = Pcg::seeded(816);
+        let mut m = random_mask(&mut rng, cfg.n_qblocks(88), cfg.n_kblocks(88));
+        // decode rows must keep at least the tail block they append
+        for i in 0..m.rows {
+            for j in 0..m.cols {
+                if rng.chance(0.3) {
+                    m.set(i, j, true);
+                }
+            }
+        }
+        m
+    };
+    type Compose = (&'static str, Precision, SparsityPolicy, bool);
+    let compositions: Vec<Compose> = vec![
+        ("dense-f32", Precision::F32, SparsityPolicy::Dense, true),
+        (
+            "external-f32",
+            Precision::F32,
+            SparsityPolicy::External { mask: ext_mask.clone(), lambda: None },
+            true,
+        ),
+        (
+            "external-f32-lambda",
+            Precision::F32,
+            SparsityPolicy::External { mask: ext_mask.clone(), lambda: Some(-12.0) },
+            false,
+        ),
+        (
+            "predicted-f32",
+            Precision::F32,
+            SparsityPolicy::Predicted {
+                params: SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false }
+                    .predict_params(),
+                lambda: None,
+            },
+            true,
+        ),
+        ("dense-int8", Precision::Int8, SparsityPolicy::Dense, true),
+        (
+            "predicted-int8-lambda",
+            Precision::Int8,
+            SparsityPolicy::Predicted {
+                params: SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: true }
+                    .predict_params(),
+                lambda: Some(-12.0),
+            },
+            false,
+        ),
+    ];
+    for (label, precision, policy, stats_exact) in compositions {
+        let serial = AttnEngine::builder().config(cfg).precision(precision).policy(policy.clone()).build();
+        let split = AttnEngine::builder()
+            .config(cfg)
+            .precision(precision)
+            .policy(policy)
+            .kv_split(KvSplit::Blocks(2))
+            .build();
+        let base = decode_tail(&serial, &q, &k, &v, n0);
+        let fast = decode_tail(&split, &q, &k, &v, n0);
+        for (t, (a, b)) in base.iter().zip(&fast).enumerate() {
+            assert_allclose(b.out.data(), a.out.data(), 1e-4, 1e-3, &format!("{label} step {t}"))
+                .unwrap();
+            assert_eq!(a.mask, b.mask, "{label} step {t}: stage-1 masks must be identical");
+            if stats_exact {
+                assert_eq!(a.stats, b.stats, "{label} step {t}: λ-off stats must merge exactly");
+            }
+        }
+    }
+}
+
+#[test]
+fn session_decode_splitkv_bitwise_across_pool_sizes() {
+    // The serving determinism guarantee end to end: one fixed span size,
+    // four executors — identical bits from every session.
+    let (q, k, v) = qkv(72, 16, 817);
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: Some(-6.0), quant: false };
+    let mk = |exec: Execution| {
+        AttnEngine::builder().config(cfg).sparge(&params).kv_split(KvSplit::Blocks(2)).execution(exec).build()
+    };
+    let base_engine = mk(Execution::Inline);
+    let base = decode_tail(&base_engine, &q, &k, &v, 32);
+    for exec in [Execution::Threads(4), Execution::Pool(1), Execution::Pool(2), Execution::Pool(8)] {
+        let engine = mk(exec);
+        let runs = decode_tail(&engine, &q, &k, &v, 32);
+        for (t, (a, b)) in base.iter().zip(&runs).enumerate() {
+            assert_eq!(a.out, b.out, "{exec:?} step {t} output bits");
+            assert_eq!(a.stats, b.stats, "{exec:?} step {t} stats bits");
+        }
+    }
+}
+
+#[test]
+fn sub_bq_prefill_chunks_route_through_splitkv_and_stay_faithful() {
+    // A chunked prefill whose chunks are shorter than b_q is a
+    // single-tile call against a long cache — exactly the split-KV shape.
+    // f32/λ-off: rows must stay allclose to the one-shot prefill and
+    // (split vs serial engine, same chunking) stats exactly equal.
+    let (q, k, v) = qkv(72, 8, 818);
+    let cfg = AttnConfig { bq: 16, bk: 4, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let serial = AttnEngine::dense(cfg);
+    let split = AttnEngine::builder().config(cfg).kv_split(KvSplit::Blocks(2)).build();
+    let oneshot = {
+        let mut s = serial.session();
+        s.prefill(&q, &k, &v).out
+    };
+    let edges = [0usize, 8, 16, 24, 40, 48, 60, 72]; // several sub-b_q chunks
+    let mut split_rows: Vec<f32> = Vec::new();
+    let mut serial_session = serial.session();
+    let mut split_session = split.session();
+    for w in edges.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        let rs = serial_session.prefill_chunk(&q.rows(a, b), &k.rows(a, b), &v.rows(a, b));
+        let rp = split_session.prefill_chunk(&q.rows(a, b), &k.rows(a, b), &v.rows(a, b));
+        assert_eq!(rs.stats, rp.stats, "chunk {a}..{b}: λ-off chunk stats must be exact");
+        assert_allclose(
+            rp.out.data(),
+            rs.out.data(),
+            1e-4,
+            1e-3,
+            &format!("chunk {a}..{b} vs serial engine"),
+        )
+        .unwrap();
+        split_rows.extend_from_slice(rp.out.data());
+    }
+    assert_allclose(&split_rows, oneshot.data(), 1e-4, 1e-3, "splitkv chunks vs one-shot").unwrap();
+    // INT8 sanity on the same chunking: stays within the quant budget
+    let split_q = AttnEngine::builder()
+        .config(cfg)
+        .precision(Precision::Int8)
+        .kv_split(KvSplit::Blocks(2))
+        .build();
+    let mut sq = split_q.session();
+    let mut rows_q: Vec<f32> = Vec::new();
+    for w in edges.windows(2) {
+        let r = sq.prefill_chunk(&q.rows(w[0], w[1]), &k.rows(w[0], w[1]), &v.rows(w[0], w[1]));
+        rows_q.extend_from_slice(r.out.data());
+    }
+    let err = rel_l1(&rows_q, oneshot.data());
+    assert!(err < 0.05, "int8 splitkv chunked prefill rel-L1 {err}");
+}
+
+#[test]
+fn auto_split_engages_only_on_decode_shapes() {
+    // Routing is shape-based: a tall (prefill) call must produce the same
+    // bits with split-KV on and off — it runs the row-parallel driver
+    // either way; only single-tile calls change reduction trees.
+    let (q, k, v) = qkv(96, 16, 819);
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let off = AttnEngine::dense(cfg).attention(&q, &k, &v);
+    let auto = AttnEngine::builder().config(cfg).kv_split(KvSplit::Auto).build().attention(&q, &k, &v);
+    assert_eq!(off.out, auto.out, "tall calls must not re-route");
+    assert_eq!(off.stats, auto.stats);
+}
