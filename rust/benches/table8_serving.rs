@@ -17,6 +17,13 @@
 //! interleaved ticks start every stream within one chunk-sized tick (at
 //! the cost of a higher TPOT, since active sessions share the engine).
 //!
+//! The decode-phase tables also report **allocations per token** (this
+//! binary installs the counting allocator; a warmed-up steady-state tick
+//! should sit near zero — the per-tick residue is scheduler bookkeeping,
+//! never per-step attention scratch) and **p50/p99 tick latency** (the
+//! straggler metric chunked self-scheduling + submitter participation
+//! are aimed at).
+//!
 //! Run: `cargo bench --bench table8_serving`
 //! Env: `SPARGE_BENCH_THREADS` (engine pool size), `SPARGE_BENCH_FULL`
 //! (paper-scale prompts).
@@ -30,8 +37,12 @@ use sparge::coordinator::{
 };
 use sparge::experiments::{bench_threads, full_scale};
 use sparge::sparge::SpargeParams;
+use sparge::util::alloc::{global_allocations, CountingAlloc};
 use sparge::util::stats::percentile_sorted;
 use sparge::util::table::{fnum, Table};
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 struct Run {
     tokens_per_sec: f64,
@@ -106,16 +117,27 @@ fn continuous_run(opts: &ServeOptions, max_batch: usize, specs: &[AttnStreamSpec
     Run { tokens_per_sec: tokens as f64 / wall, ttft, tpot: tpot_mean, wall }
 }
 
+/// Decode-phase measurements for one schedule: throughput, per-session
+/// sparsity (asserted schedule-invariant by callers), steady-state
+/// allocations per decoded token, and tick-latency percentiles.
+struct DecodePhase {
+    rate: f64,
+    sparsity: Vec<(u64, f64)>,
+    allocs_per_token: f64,
+    tick_p50: f64,
+    tick_p99: f64,
+}
+
 /// Drive one batch of streams through a [`SessionManager`], prefill
-/// untimed, and measure decode-phase tokens/s. Returns the rate plus the
-/// per-session sparsity vector so callers can assert the metrics are
-/// schedule-invariant.
+/// untimed (it also warms caches, workspaces, and span plans), then
+/// measure the decode phase: tokens/s, allocations/token, and per-tick
+/// latency percentiles.
 fn decode_phase_run(
     opts: &ServeOptions,
     pool: usize,
     split: KvSplit,
     specs: &[AttnStreamSpec],
-) -> (f64, Vec<(u64, f64)>) {
+) -> DecodePhase {
     let engine = AttnEngine::builder()
         .config(opts.cfg)
         .sparge(&opts.params)
@@ -131,17 +153,34 @@ fn decode_phase_run(
         done.extend(mgr.tick());
     }
     let t0 = Instant::now();
+    let allocs0 = global_allocations();
     let mut tokens = 0usize;
+    let mut ticks = Vec::new();
     while mgr.active() > 0 {
-        for r in mgr.tick() {
-            tokens += r.tokens;
-            done.push(r);
-        }
+        // every active session is past its prompt here (prefill drained
+        // above, no further admissions) and advances exactly one decode
+        // row this tick — a session retires in the tick of its last
+        // step. Counting sessions-per-tick credits the timed window with
+        // exactly the decode work it performed; retirement totals
+        // (`SeqResult::tokens`) would also include steps already taken
+        // during the untimed drain and overstate tok/s.
+        tokens += mgr.active();
+        let tick0 = Instant::now();
+        done.extend(mgr.tick());
+        ticks.push(tick0.elapsed().as_secs_f64());
     }
     let secs = t0.elapsed().as_secs_f64();
+    let allocs = global_allocations() - allocs0;
+    ticks.sort_by(|a, b| a.partial_cmp(b).unwrap());
     done.sort_by_key(|r| r.id);
     let sparsity = done.iter().map(|r| (r.id, r.stats.sparsity())).collect();
-    (tokens as f64 / secs, sparsity)
+    DecodePhase {
+        rate: tokens as f64 / secs,
+        sparsity,
+        allocs_per_token: allocs as f64 / tokens.max(1) as f64,
+        tick_p50: percentile_sorted(&ticks, 0.50),
+        tick_p99: percentile_sorted(&ticks, 0.99),
+    }
 }
 
 fn main() {
@@ -197,23 +236,35 @@ fn main() {
         256 * scale
     );
     let mut batch_table = Table::new(
-        "batched cross-session decode (one Exec::map per tick over the shared pool)",
-        &["pool", "tok/s", "vs pool 1"],
+        "batched cross-session decode (one chunk-self-scheduled fan-out per tick over the shared pool)",
+        &["pool", "tok/s", "vs pool 1", "allocs/token", "tick p50", "tick p99"],
     );
     let mut baseline_rate = 0.0;
     let mut baseline_sparsity: Option<Vec<(u64, f64)>> = None;
     for pool in [1usize, 2, 4, 8] {
-        let (rate, sparsity) = decode_phase_run(&opts, pool, KvSplit::Auto, &batch_specs);
+        let r = decode_phase_run(&opts, pool, KvSplit::Auto, &batch_specs);
         match &baseline_sparsity {
             None => {
-                baseline_rate = rate;
-                baseline_sparsity = Some(sparsity);
+                baseline_rate = r.rate;
+                baseline_sparsity = Some(r.sparsity);
             }
-            Some(b) => assert_eq!(&sparsity, b, "per-session sparsity moved with pool size {pool}"),
+            Some(b) => assert_eq!(&r.sparsity, b, "per-session sparsity moved with pool size {pool}"),
         }
-        batch_table.row(&[format!("{pool}"), fnum(rate, 1), format!("{:.2}x", rate / baseline_rate)]);
+        batch_table.row(&[
+            format!("{pool}"),
+            fnum(r.rate, 1),
+            format!("{:.2}x", r.rate / baseline_rate),
+            fnum(r.allocs_per_token, 2),
+            format!("{} us", fnum(r.tick_p50 * 1e6, 0)),
+            format!("{} us", fnum(r.tick_p99 * 1e6, 0)),
+        ]);
     }
     batch_table.print();
+    println!(
+        "allocs/token: counting-allocator delta over the decode phase / tokens — per-step attention \
+         scratch is workspace-recycled (asserted zero in tests/alloc_regression.rs); the residue is \
+         per-tick scheduler bookkeeping."
+    );
 
     // -- decode-phase scaling: split-KV inside one session ---------------
     // A lone decoding stream has no cross-session parallelism to offer;
@@ -226,18 +277,24 @@ fn main() {
     );
     let mut solo_table = Table::new(
         "split-KV decode (span = 4 k-blocks, S from cache length — identical bits at every pool size)",
-        &["pool", "split-KV off tok/s", "split-KV on tok/s", "on/off"],
+        &["pool", "split-KV off tok/s", "split-KV on tok/s", "on/off", "allocs/token (on)"],
     );
     let mut solo_sparsity: Option<Vec<(u64, f64)>> = None;
     for pool in [1usize, 2, 4, 8] {
-        let (off, sp_off) = decode_phase_run(&opts, pool, KvSplit::Off, &solo_spec);
-        let (on, sp_on) = decode_phase_run(&opts, pool, KvSplit::Auto, &solo_spec);
-        assert_eq!(sp_off, sp_on, "split-KV changed sparsity at pool {pool}");
+        let off = decode_phase_run(&opts, pool, KvSplit::Off, &solo_spec);
+        let on = decode_phase_run(&opts, pool, KvSplit::Auto, &solo_spec);
+        assert_eq!(off.sparsity, on.sparsity, "split-KV changed sparsity at pool {pool}");
         match &solo_sparsity {
-            None => solo_sparsity = Some(sp_off),
-            Some(b) => assert_eq!(&sp_off, b, "sparsity moved with pool size {pool}"),
+            None => solo_sparsity = Some(off.sparsity),
+            Some(b) => assert_eq!(&off.sparsity, b, "sparsity moved with pool size {pool}"),
         }
-        solo_table.row(&[format!("{pool}"), fnum(off, 1), fnum(on, 1), format!("{:.2}x", on / off)]);
+        solo_table.row(&[
+            format!("{pool}"),
+            fnum(off.rate, 1),
+            fnum(on.rate, 1),
+            format!("{:.2}x", on.rate / off.rate),
+            fnum(on.allocs_per_token, 2),
+        ]);
     }
     solo_table.print();
     println!(

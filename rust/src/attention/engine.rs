@@ -29,6 +29,30 @@
 //!                                                                └───────┘
 //! ```
 //!
+//! ## Workspace ownership: the allocation-free decode step
+//!
+//! A session owns every piece of mutable scratch its hot loop needs, all
+//! sized to their high-water mark and reused:
+//!
+//! - a [`Workspace`] arena (tile state, score blocks, quant staging) for
+//!   work that runs on the calling thread — pool workers bring their own
+//!   arenas for fanned-out work;
+//! - a [`SpanPlan`] caching the split-KV work-list and partial-state
+//!   arenas, revalidated in O(1) per step and rebuilt only when the
+//!   cache grows into a new `b_k` block;
+//! - the KV cache itself (amortized `b_k`-block doubling via
+//!   [`AttnSession::reserve_rows`]) and, under INT8, the cached K block
+//!   quantization plus a reusable per-call Q staging buffer.
+//!
+//! The result: a warmed-up [`AttnSession::decode_into`] step under the
+//! dense or external-mask policy (f32, λ on or off) performs **zero**
+//! heap allocations — regression-tested with a counting allocator in
+//! `tests/alloc_regression.rs`. [`AttnSession::decode`] adds exactly the
+//! output tensor it returns; the `Predicted` policy adds its per-step
+//! mask. Workspace reuse is bitwise-neutral (same float evaluation
+//! order; truncated, re-initialized views), so none of this changes any
+//! output or stat.
+//!
 //! [`AttnSession::prefill_chunk`] appends one prompt chunk to the cache
 //! and runs its query rows against the *whole* cache with
 //! `row_offset = rows already cached` (the offset-aware causal contract
@@ -38,12 +62,13 @@
 //! from empty); [`AttnSession::decode`] runs a decode-shaped (one query
 //! row) step. All of them run through the same pipeline seams; the
 //! *driver* is picked per call from the engine's [`KvSplit`] policy and
-//! the call shape — tall calls take the row-parallel [`run_tiled`],
+//! the call shape — tall calls take the row-parallel `run_tiled`,
 //! single-tile calls under `kv_split` take `run_tiled_splitkv`, which
 //! fans contiguous KV spans of the cache across the worker pool
 //! (Flash-Decoding). Span count derives from the cache length, never the
 //! worker count, so either driver is bitwise-deterministic across
-//! execution modes and pool sizes.
+//! execution modes and pool sizes (scheduling order may vary, merge
+//! order may not).
 //!
 //! ## Chunked-prefill / decode / prefill parity
 //!
@@ -87,10 +112,11 @@ use crate::sparge::kernel::{quant_score_block, QuantScoreKernel, SpargeParams};
 use crate::sparge::predict::{compress_blocks, predict_decode_row, predict_pooled, KPool, PredictParams};
 use crate::tensor::quant::{self, QuantBlock};
 use crate::tensor::Tensor;
-use crate::util::threadpool::WorkerPool;
+use crate::util::threadpool::{WorkerPool, Workspace};
 
 use super::pipeline::{
-    run_tiled, run_tiled_splitkv, BlockFilter, DenseFilter, Exec, F32Kernel, MaskFilter, ScoreKernel,
+    run_tiled_into, run_tiled_splitkv_into, BlockFilter, DenseFilter, Exec, F32Kernel, MaskFilter,
+    ScoreKernel, ScoreScratch, SpanPlan,
 };
 use super::types::{AttnConfig, BlockMask, KvSplit, SkipStats};
 
@@ -311,8 +337,12 @@ impl AttnEngine {
     }
 
     /// Run one call through the driver the engine's `kv_split` policy and
-    /// the call shape select.
-    fn dispatch(
+    /// the call shape select, writing into `out` (n × dv, fully
+    /// overwritten). All scratch comes from `plan`/`ws` (plus each pool
+    /// worker's own arena), so a warmed-up single-tile call allocates
+    /// nothing.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_into(
         &self,
         q: &Tensor,
         k: &Tensor,
@@ -321,10 +351,15 @@ impl AttnEngine {
         kernel: &impl ScoreKernel,
         filter: &impl BlockFilter,
         exec: Exec<'_>,
-    ) -> (Tensor, SkipStats) {
+        plan: &mut SpanPlan,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> SkipStats {
         match self.kv_span(cfg.n_qblocks(q.dim(0)), cfg.n_kblocks(k.dim(0))) {
-            Some(span) => run_tiled_splitkv(q, k, v, cfg, kernel, filter, exec, span),
-            None => run_tiled(q, k, v, cfg, kernel, filter, exec),
+            Some(span) => {
+                run_tiled_splitkv_into(q, k, v, cfg, kernel, filter, exec, span, plan, ws, out)
+            }
+            None => run_tiled_into(q, k, v, cfg, kernel, filter, exec, ws, out),
         }
     }
 
@@ -360,7 +395,9 @@ impl AttnEngine {
     }
 
     /// Open a stateful per-sequence session (KV cache, incremental
-    /// predictor pooling, cached K quantization) over this engine.
+    /// predictor pooling, cached K quantization, and the session-owned
+    /// workspace + span plan that make warmed-up decode steps
+    /// allocation-free) over this engine.
     pub fn session(&self) -> AttnSession<'_> {
         // chunked prefill sets the offset per call from the cache length
         assert_eq!(self.cfg.row_offset, 0, "sessions manage row_offset; build the engine with offset 0");
@@ -369,11 +406,14 @@ impl AttnEngine {
             d: 0,
             dv: 0,
             rows: 0,
-            k_data: Vec::new(),
-            v_data: Vec::new(),
+            k_cache: Tensor::zeros(&[0, 0]),
+            v_cache: Tensor::zeros(&[0, 0]),
             kpool: None,
             kmean: None,
             kq: Vec::new(),
+            qstage: Vec::new(),
+            ws: Workspace::default(),
+            plan: SpanPlan::new(),
             steps: 0,
             cache_cap_rows: 0,
             cache_reallocs: 0,
@@ -388,16 +428,21 @@ impl AttnEngine {
         cfg: &AttnConfig,
         filter: &impl BlockFilter,
     ) -> (Tensor, SkipStats) {
-        match self.precision {
+        let mut out = Tensor::zeros(&[q.dim(0), v.dim(1)]);
+        let mut plan = SpanPlan::new();
+        let mut ws = Workspace::default();
+        let exec = self.exec();
+        let stats = match self.precision {
             Precision::F32 => {
                 let kernel = F32Kernel::new(q, k, cfg);
-                self.dispatch(q, k, v, cfg, &kernel, filter, self.exec())
+                self.dispatch_into(q, k, v, cfg, &kernel, filter, exec, &mut plan, &mut ws, out.data_mut())
             }
             Precision::Int8 => {
                 let kernel = QuantScoreKernel::new(q, k, cfg);
-                self.dispatch(q, k, v, cfg, &kernel, filter, self.exec())
+                self.dispatch_into(q, k, v, cfg, &kernel, filter, exec, &mut plan, &mut ws, out.data_mut())
             }
-        }
+        };
+        (out, stats)
     }
 }
 
@@ -425,16 +470,22 @@ pub struct PredictorCounters {
 }
 
 /// Mutable per-sequence state over a shared [`AttnEngine`]: a growing KV
-/// cache, incrementally updated stage-1 pooling, and (for INT8 engines)
-/// cached per-block K quantization. See the module docs for the
+/// cache, incrementally updated stage-1 pooling, (for INT8 engines)
+/// cached per-block K quantization with reusable Q staging, and the
+/// session-owned [`Workspace`] + [`SpanPlan`] scratch that make a
+/// warmed-up decode step allocation-free. See the module docs for the
 /// decode/prefill parity contract.
 pub struct AttnSession<'e> {
     engine: &'e AttnEngine,
     d: usize,
     dv: usize,
     rows: usize,
-    k_data: Vec<f32>,
-    v_data: Vec<f32>,
+    /// Cached keys as a live (rows × d) tensor: rows are appended in
+    /// place ([`Tensor::append_rows`]) under the amortized capacity
+    /// policy of [`AttnSession::reserve_rows`] — the hot loop never
+    /// re-wraps or copies the cache.
+    k_cache: Tensor,
+    v_cache: Tensor,
     /// Stage-1 pooling state — maintained only under the `Predicted`
     /// policy (the single consumer); dense/external sessions skip the
     /// per-token pooling cost entirely.
@@ -445,8 +496,17 @@ pub struct AttnSession<'e> {
     /// that decodes from empty freezes it at zero (no smoothing).
     kmean: Option<Vec<f32>>,
     /// Cached INT8 quantization of the smoothed K cache; only the tail
-    /// block is requantized per decoded token.
+    /// block is requantized — in place, reusing its payload — per
+    /// decoded token.
     kq: Vec<QuantBlock>,
+    /// Reusable Q-side quantization staging (INT8): the per-call Q blocks
+    /// are requantized into these, reusing their payload allocations.
+    qstage: Vec<QuantBlock>,
+    /// The session's scratch arena for inline pipeline work (pool workers
+    /// bring their own).
+    ws: Workspace,
+    /// Cached split-KV plan + partial-state arenas (see [`SpanPlan`]).
+    plan: SpanPlan,
     steps: usize,
     /// Rows the K/V cache (and the predictor pool) currently has capacity
     /// for — always a `b_k` multiple; see [`AttnSession::reserve_rows`].
@@ -527,11 +587,7 @@ impl AttnSession<'_> {
             "multi-chunk prefill needs a causal engine (later rows are not cached yet)"
         );
         if row0 == 0 {
-            self.d = k.dim(1);
-            self.dv = v.dim(1);
-            if matches!(self.engine.policy, SparsityPolicy::Predicted { .. }) {
-                self.kpool = Some(KPool::new(self.engine.cfg.bk, self.d));
-            }
+            self.init_dims(k, v);
             if self.engine.precision == Precision::Int8 {
                 // freeze the smoothing mean on the first chunk: every
                 // cached block must share one shift for softmax's
@@ -545,34 +601,37 @@ impl AttnSession<'_> {
         assert_eq!(v.dim(1), self.dv, "v dim");
 
         self.reserve_rows(self.rows + k.dim(0));
-        self.k_data.extend_from_slice(k.data());
-        self.v_data.extend_from_slice(v.data());
+        self.k_cache.append_rows(k.data());
+        self.v_cache.append_rows(v.data());
         self.rows += k.dim(0);
         if let Some(pool) = self.kpool.as_mut() {
-            pool.extend(row0, &self.k_data);
+            pool.extend(row0, self.k_cache.data());
         }
         if self.engine.precision == Precision::Int8 {
             self.requantize_from(row0);
+            self.stage_q(q);
         }
 
         let cfg = self.engine.cfg.at_offset(row0);
-        let kt = Tensor::from_vec(&[self.rows, self.d], std::mem::take(&mut self.k_data));
-        let vt = Tensor::from_vec(&[self.rows, self.dv], std::mem::take(&mut self.v_data));
-        let (out, stats, mask) = match &self.engine.policy {
+        let mut out = Tensor::zeros(&[q.dim(0), self.dv]);
+        let mut ws = std::mem::take(&mut self.ws);
+        let mut plan = std::mem::take(&mut self.plan);
+        let exec = self.engine.exec();
+        let (stats, mask) = match &self.engine.policy {
             SparsityPolicy::Dense => {
-                let (o, s) = self.run_cache(q, &kt, &vt, &cfg, &DenseFilter, self.engine.exec());
-                (o, s, None)
+                let st = self.run_cache(q, &cfg, &DenseFilter, exec, &mut plan, &mut ws, out.data_mut());
+                (st, None)
             }
             SparsityPolicy::Predicted { params, lambda } => {
                 // reuse the incrementally-pooled K side; for a one-shot
                 // prefill this is bitwise-identical to predict()
                 let pool = self.kpool.as_ref().unwrap();
                 let pred = predict_pooled(q, &pool.means(), pool.sims(), &cfg, params);
-                let (o, s) = {
+                let st = {
                     let filter = MaskFilter::new(&pred.mask, *lambda);
-                    self.run_cache(q, &kt, &vt, &cfg, &filter, self.engine.exec())
+                    self.run_cache(q, &cfg, &filter, exec, &mut plan, &mut ws, out.data_mut())
                 };
-                (o, s, Some(pred.mask))
+                (st, Some(pred.mask))
             }
             SparsityPolicy::External { mask, lambda } => {
                 // the external mask is indexed by *global* block rows, so
@@ -598,41 +657,56 @@ impl AttnSession<'_> {
                     cfg.n_kblocks(self.rows)
                 );
                 let filter = OffsetMaskFilter { mask, row0: row0_blocks, lambda: *lambda };
-                let (o, s) = self.run_cache(q, &kt, &vt, &cfg, &filter, self.engine.exec());
-                (o, s, None)
+                let st = self.run_cache(q, &cfg, &filter, exec, &mut plan, &mut ws, out.data_mut());
+                (st, None)
             }
         };
-        self.k_data = kt.into_vec();
-        self.v_data = vt.into_vec();
+        self.ws = ws;
+        self.plan = plan;
         AttnOutput { out, stats, mask }
     }
 
+    /// First-append initialization: record dims and shape the caches.
+    fn init_dims(&mut self, k: &Tensor, v: &Tensor) {
+        self.d = k.dim(1);
+        self.dv = v.dim(1);
+        self.k_cache = Tensor::from_vec(&[0, self.d], Vec::new());
+        self.v_cache = Tensor::from_vec(&[0, self.dv], Vec::new());
+        if matches!(self.engine.policy, SparsityPolicy::Predicted { .. }) {
+            self.kpool = Some(KPool::new(self.engine.cfg.bk, self.d));
+        }
+    }
+
     /// Run `q` against the cached K/V under `cfg` (which carries the
-    /// chunk's `row_offset` and, for decode steps, `causal: false`). One
-    /// code path serves one-shot prefill, prefill chunks, and decode
-    /// steps; the INT8 side reuses the session's cached K quantization
+    /// chunk's `row_offset` and, for decode steps, `causal: false`),
+    /// writing the output rows into `out`. One code path serves one-shot
+    /// prefill, prefill chunks, and decode steps; the INT8 side reuses
+    /// the session's cached K quantization and pre-staged Q blocks
     /// instead of re-smoothing and re-quantizing (the per-block payloads
     /// are identical: blocks are quantized independently and the
     /// smoothing mean is shared either way). The driver — row-parallel
     /// or split-KV — is chosen by the engine's `kv_split` policy and the
     /// call *shape* alone, so the result does not depend on `exec`.
+    #[allow(clippy::too_many_arguments)]
     fn run_cache(
         &self,
         q: &Tensor,
-        kt: &Tensor,
-        vt: &Tensor,
         cfg: &AttnConfig,
         filter: &impl BlockFilter,
         exec: Exec<'_>,
-    ) -> (Tensor, SkipStats) {
+        plan: &mut SpanPlan,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> SkipStats {
+        let (kc, vc) = (&self.k_cache, &self.v_cache);
         match self.engine.precision {
             Precision::F32 => {
-                let kernel = F32Kernel::new(q, kt, cfg);
-                self.engine.dispatch(q, kt, vt, cfg, &kernel, filter, exec)
+                let kernel = F32Kernel::new(q, kc, cfg);
+                self.engine.dispatch_into(q, kc, vc, cfg, &kernel, filter, exec, plan, ws, out)
             }
             Precision::Int8 => {
                 let kernel = QuantCacheKernel {
-                    qb: quant::quantize_blocks(q, cfg.bq),
+                    qb: &self.qstage,
                     kb: &self.kq,
                     scale: cfg.scale_for(q.dim(1)),
                     causal: cfg.causal,
@@ -640,7 +714,7 @@ impl AttnSession<'_> {
                     bq: cfg.bq,
                     bk: cfg.bk,
                 };
-                self.engine.dispatch(q, kt, vt, cfg, &kernel, filter, exec)
+                self.engine.dispatch_into(q, kc, vc, cfg, &kernel, filter, exec, plan, ws, out)
             }
         }
     }
@@ -652,8 +726,27 @@ impl AttnSession<'_> {
     /// the single-tile step fans its KV spans across the pool). Returns
     /// the (1 × dv) output row with per-step [`SkipStats`] (exact
     /// fractional accounting — see `SkipStats::pv_skipped_frac`).
+    ///
+    /// Allocation note: this convenience allocates the returned tensor;
+    /// the serving loop uses [`AttnSession::decode_into`], which writes
+    /// into a caller buffer and is zero-allocation once warm.
     pub fn decode(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) -> AttnOutput {
         self.decode_with_exec(q, k, v, self.engine.exec())
+    }
+
+    /// [`AttnSession::decode`] writing the output row directly into
+    /// `out` (length dv) — no allocation on a warmed-up session under
+    /// the dense/external policies (the `Predicted` policy still builds
+    /// its per-step mask, returned here). Stats and bits are identical
+    /// to [`AttnSession::decode`].
+    pub fn decode_into(
+        &mut self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        out: &mut [f32],
+    ) -> (SkipStats, Option<BlockMask>) {
+        self.decode_into_with_exec(q, k, v, out, self.engine.exec())
     }
 
     /// [`AttnSession::decode`] with an explicit [`Exec`]: the serving
@@ -668,15 +761,38 @@ impl AttnSession<'_> {
         v: &Tensor,
         exec: Exec<'_>,
     ) -> AttnOutput {
+        self.append_token(q, k, v);
+        let mut out = Tensor::zeros(&[1, self.dv]);
+        let (stats, mask) = self.decode_step(q, exec, out.data_mut());
+        AttnOutput { out, stats, mask }
+    }
+
+    /// [`AttnSession::decode_into`] with an explicit [`Exec`] (see
+    /// [`AttnSession::decode_with_exec`]).
+    pub(crate) fn decode_into_with_exec(
+        &mut self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        out: &mut [f32],
+        exec: Exec<'_>,
+    ) -> (SkipStats, Option<BlockMask>) {
+        // validate before touching session state: a bad buffer must not
+        // leave a half-applied token in the cache
+        assert_eq!(out.len(), v.dim(1), "decode_into output buffer must hold one dv row");
+        self.append_token(q, k, v);
+        self.decode_step(q, exec, out)
+    }
+
+    /// The append half of a decode step: init-on-empty, amortized
+    /// capacity, KV append, incremental predictor pooling, INT8 tail
+    /// requantize + Q staging. Allocation-free once warm.
+    fn append_token(&mut self, q: &Tensor, k: &Tensor, v: &Tensor) {
         assert_eq!(q.dim(0), 1, "decode takes a single query row");
         assert_eq!(k.dim(0), 1, "decode takes a single key row");
         assert_eq!(v.dim(0), 1, "decode takes a single value row");
         if self.rows == 0 {
-            self.d = k.dim(1);
-            self.dv = v.dim(1);
-            if matches!(self.engine.policy, SparsityPolicy::Predicted { .. }) {
-                self.kpool = Some(KPool::new(self.engine.cfg.bk, self.d));
-            }
+            self.init_dims(k, v);
             if self.engine.precision == Precision::Int8 {
                 self.kmean = Some(vec![0.0; self.d]);
             }
@@ -688,38 +804,48 @@ impl AttnSession<'_> {
         // append (block-amortized capacity) + incremental predictor
         // update (tail block only)
         self.reserve_rows(self.rows + 1);
-        self.k_data.extend_from_slice(k.data());
-        self.v_data.extend_from_slice(v.data());
+        self.k_cache.append_rows(k.data());
+        self.v_cache.append_rows(v.data());
         self.rows += 1;
         let bk = self.engine.cfg.bk;
         let tail_start = ((self.rows - 1) / bk) * bk;
         if let Some(pool) = self.kpool.as_mut() {
-            let tail = &self.k_data[tail_start * self.d..self.rows * self.d];
+            let tail = &self.k_cache.data()[tail_start * self.d..self.rows * self.d];
             pool.append_row(k.row(0), tail);
         }
         if self.engine.precision == Precision::Int8 {
             self.requantize_from(self.rows - 1);
+            self.stage_q(q);
         }
+    }
 
+    /// The compute half of a decode step: run the 1-row call over the
+    /// cache and write the output row into `out`.
+    fn decode_step(
+        &mut self,
+        q: &Tensor,
+        exec: Exec<'_>,
+        out: &mut [f32],
+    ) -> (SkipStats, Option<BlockMask>) {
         // the decode step sees exactly the visible prefix, so it runs
         // non-causal over the cache; scale/bk/cw carry over from the engine
         let step_cfg = AttnConfig { causal: false, ..self.engine.cfg };
         let scale = step_cfg.scale_for(self.d);
-        let kt = Tensor::from_vec(&[self.rows, self.d], std::mem::take(&mut self.k_data));
-        let vt = Tensor::from_vec(&[self.rows, self.dv], std::mem::take(&mut self.v_data));
-        let (out, stats, mask) = match &self.engine.policy {
+        let mut ws = std::mem::take(&mut self.ws);
+        let mut plan = std::mem::take(&mut self.plan);
+        let res = match &self.engine.policy {
             SparsityPolicy::Dense => {
-                let (o, s) = self.run_cache(q, &kt, &vt, &step_cfg, &DenseFilter, exec);
-                (o, s, None)
+                let st = self.run_cache(q, &step_cfg, &DenseFilter, exec, &mut plan, &mut ws, out);
+                (st, None)
             }
             SparsityPolicy::Predicted { params, lambda } => {
                 let pool = self.kpool.as_ref().unwrap();
                 let mrow = predict_decode_row(q.row(0), &pool.means(), pool.sims(), scale, params);
-                let (o, s) = {
+                let st = {
                     let filter = MaskFilter::new(&mrow, *lambda);
-                    self.run_cache(q, &kt, &vt, &step_cfg, &filter, exec)
+                    self.run_cache(q, &step_cfg, &filter, exec, &mut plan, &mut ws, out)
                 };
-                (o, s, Some(mrow))
+                (st, Some(mrow))
             }
             SparsityPolicy::External { mask, lambda } => {
                 let bi = (self.rows - 1) / self.engine.cfg.bq;
@@ -731,14 +857,14 @@ impl AttnSession<'_> {
                     step_cfg.n_kblocks(self.rows)
                 );
                 let filter = RowMaskFilter { mask, row: bi, lambda: *lambda };
-                let (o, s) = self.run_cache(q, &kt, &vt, &step_cfg, &filter, exec);
-                (o, s, None)
+                let st = self.run_cache(q, &step_cfg, &filter, exec, &mut plan, &mut ws, out);
+                (st, None)
             }
         };
-        self.k_data = kt.into_vec();
-        self.v_data = vt.into_vec();
+        self.ws = ws;
+        self.plan = plan;
         self.steps += 1;
-        AttnOutput { out, stats, mask }
+        res
     }
 
     /// Grow the KV cache's reserved capacity to hold `new_rows` rows.
@@ -753,8 +879,8 @@ impl AttnSession<'_> {
         }
         let bk = self.engine.cfg.bk;
         let target = new_rows.max(self.cache_cap_rows * 2).next_multiple_of(bk);
-        self.k_data.reserve_exact(target * self.d - self.k_data.len());
-        self.v_data.reserve_exact(target * self.dv - self.v_data.len());
+        self.k_cache.reserve_rows(target);
+        self.v_cache.reserve_rows(target);
         if let Some(pool) = self.kpool.as_mut() {
             pool.reserve_rows(target);
         }
@@ -766,36 +892,60 @@ impl AttnSession<'_> {
     /// `rows_before` through the cache end, with the frozen smoothing
     /// mean: a decode step touches only the tail block, a prefill chunk
     /// additionally quantizes the fresh blocks it appended; every earlier
-    /// cached block is reused as-is. Blocks are quantized independently,
-    /// so the surviving prefix is bit-identical to a from-scratch
-    /// `quantize_blocks` of the smoothed cache.
+    /// cached block is reused as-is, and touched blocks requantize **in
+    /// place** into their existing payloads (smoothing staged through the
+    /// workspace) — allocation-free once warm. Blocks are quantized
+    /// independently, so the surviving prefix is bit-identical to a
+    /// from-scratch `quantize_blocks` of the smoothed cache.
     fn requantize_from(&mut self, rows_before: usize) {
         let mean = self.kmean.as_ref().expect("kmean frozen at first append");
         let bk = self.engine.cfg.bk;
+        let d = self.d;
         let first = rows_before / bk;
-        self.kq.truncate(first);
+        let kd = self.k_cache.data();
+        let stage = &mut self.ws.quant_f32;
+        let mut b = first;
         let mut r0 = first * bk;
         while r0 < self.rows {
             let r1 = (r0 + bk).min(self.rows);
-            let mut block = self.k_data[r0 * self.d..r1 * self.d].to_vec();
-            for row in block.chunks_mut(self.d) {
+            stage.clear();
+            stage.extend_from_slice(&kd[r0 * d..r1 * d]);
+            for row in stage.chunks_mut(d) {
                 for (x, &m) in row.iter_mut().zip(mean) {
                     *x -= m;
                 }
             }
-            self.kq.push(QuantBlock::quantize(&block, r1 - r0, self.d));
+            if b < self.kq.len() {
+                self.kq[b].requantize(stage, r1 - r0, d);
+            } else {
+                self.kq.push(QuantBlock::quantize(stage, r1 - r0, d));
+            }
+            // a partial tail block refills row by row across decode
+            // steps; holding full-block payload capacity from the start
+            // keeps those in-place requantizes allocation-free
+            let blk = &mut self.kq[b];
+            blk.data.reserve_exact(bk * d - blk.data.len());
+            b += 1;
             r0 = r1;
         }
+        self.kq.truncate(b);
+    }
+
+    /// Quantize the call's Q rows into the session's reusable staging
+    /// blocks (INT8 engines; payload values identical to a fresh
+    /// `quantize_blocks`).
+    fn stage_q(&mut self, q: &Tensor) {
+        quant::quantize_blocks_into(q, self.engine.cfg.bq, &mut self.qstage);
     }
 }
 
-/// INT8 kernel over the session's cached K blocks: Q is quantized per call
-/// (all blocks of a prefill chunk, one row per decode step); K blocks are
-/// borrowed from the cache so they are quantized exactly once each.
-/// `row_offset` places the chunk's query rows at absolute positions for
-/// causal masking.
+/// INT8 kernel over the session's cached K blocks: Q is staged per call
+/// (all blocks of a prefill chunk, one row per decode step — requantized
+/// into reusable session buffers); K blocks are borrowed from the cache
+/// so they are quantized exactly once each. `row_offset` places the
+/// chunk's query rows at absolute positions for causal masking.
 struct QuantCacheKernel<'a> {
-    qb: Vec<QuantBlock>,
+    qb: &'a [QuantBlock],
     kb: &'a [QuantBlock],
     scale: f32,
     causal: bool,
@@ -805,10 +955,19 @@ struct QuantCacheKernel<'a> {
 }
 
 impl ScoreKernel for QuantCacheKernel<'_> {
-    fn score_block(&self, q0: usize, _q1: usize, k0: usize, _k1: usize, out: &mut [f32]) {
+    fn score_block(
+        &self,
+        q0: usize,
+        _q1: usize,
+        k0: usize,
+        _k1: usize,
+        out: &mut [f32],
+        scratch: &mut ScoreScratch<'_>,
+    ) {
         let qblk = &self.qb[q0 / self.bq];
         let kblk = &self.kb[k0 / self.bk];
-        quant_score_block(qblk, kblk, self.row_offset + q0, k0, self.scale, self.causal, out);
+        let q0_abs = self.row_offset + q0;
+        quant_score_block(qblk, kblk, q0_abs, k0, self.scale, self.causal, out, scratch.acc_i32);
     }
 }
 
@@ -962,6 +1121,39 @@ mod tests {
             session.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1));
         }
         assert_eq!(session.cache_reallocs(), 3, "one more doubling covers rows 65..=128");
+    }
+
+    #[test]
+    fn decode_into_matches_decode_bitwise() {
+        // The zero-allocation entry point must be a pure repackaging of
+        // decode(): same bits, same stats, for dense and predicted, both
+        // drivers.
+        let (q, k, v) = qkv(96, 8, 79);
+        for split in [KvSplit::Off, KvSplit::Blocks(2)] {
+            let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+            let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: Some(-6.0), quant: false };
+            let mk = |sparge: bool| {
+                let b = AttnEngine::builder().config(cfg).kv_split(split);
+                if sparge { b.sparge(&params).build() } else { b.build() }
+            };
+            for sparge in [false, true] {
+                let engine_a = mk(sparge);
+                let engine_b = mk(sparge);
+                let mut sa = engine_a.session();
+                let mut sb = engine_b.session();
+                sa.prefill(&q.rows(0, 64), &k.rows(0, 64), &v.rows(0, 64));
+                sb.prefill(&q.rows(0, 64), &k.rows(0, 64), &v.rows(0, 64));
+                let mut row = vec![0f32; 8];
+                for t in 64..96 {
+                    let r = sa.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1));
+                    let (st, mask) =
+                        sb.decode_into(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1), &mut row);
+                    assert_eq!(row.as_slice(), r.out.data(), "sparge={sparge} split={split:?} row {t}");
+                    assert_eq!(st, r.stats);
+                    assert_eq!(mask, r.mask);
+                }
+            }
+        }
     }
 
     #[test]

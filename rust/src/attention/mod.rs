@@ -43,6 +43,22 @@
 //! quantized compositions. Adding an engine means adding a kernel or
 //! filter impl — never another loop.
 //!
+//! ## Workspace ownership and the determinism contract
+//!
+//! The steady-state serving hot path is **allocation-free**: all scratch
+//! lives in [`Workspace`] arenas — one per pool worker (persistent, in
+//! `util::threadpool`), one per [`AttnSession`] for inline work — and
+//! the session additionally caches its split-KV [`SpanPlan`]
+//! (work-list + partial-state arenas, revalidated in O(1) per decode
+//! step). A warmed-up λ-off f32 [`AttnSession::decode_into`] step
+//! performs zero heap allocations (`tests/alloc_regression.rs`).
+//! Workspace reuse is bitwise-neutral and the pool hands out work by
+//! chunked self-scheduling with the submitter participating, so:
+//! **scheduling order may vary, merge order may not** — outputs and
+//! [`SkipStats`] are identical for every execution mode, pool size, and
+//! timing, because results are collected per index and merged in
+//! index/span order, which is a pure function of the call's shape.
+//!
 //! ## Migration (old free functions → builder API)
 //!
 //! | Deprecated call | Replacement |
@@ -59,6 +75,7 @@
 //! | chunked prefill (new) | `session.prefill_chunk(..)` per prompt slice — offset-aware causal |
 //! | split-KV decode (new) | `.kv_split(KvSplit::Auto)` — decode steps fan KV spans across the pool |
 //! | pool sharing (new) | `.shared_pool(pool)` — several engines over one `Arc<WorkerPool>` |
+//! | zero-alloc decode (new) | `session.decode_into(q, k, v, &mut row)` — writes into a caller buffer |
 
 pub mod dense;
 pub mod engine;
@@ -74,7 +91,10 @@ pub use engine::{
 #[allow(deprecated)]
 pub use flash::{attention_flash, attention_flash_stats, attention_flash_stats_threads};
 pub use pipeline::{
-    run_tiled, run_tiled_splitkv, score_block, BlockFilter, DenseFilter, Exec, F32Kernel, FlashTile,
-    MaskFilter, ScoreKernel,
+    run_tiled, run_tiled_into, run_tiled_splitkv, run_tiled_splitkv_into, score_block, BlockFilter,
+    DenseFilter, Exec, F32Kernel, FlashTile, MaskFilter, ScoreKernel, ScoreScratch, SpanPlan,
 };
 pub use types::{AttnConfig, BlockMask, KvSplit, SkipStats, KV_SPLIT_AUTO_BLOCKS};
+// Re-exported so engine users can hold scratch arenas without reaching
+// into `util`.
+pub use crate::util::threadpool::Workspace;

@@ -32,6 +32,21 @@
 //! (`tm = 1`) that would run serially under `run_tiled` becomes `S`
 //! parallel reductions over the KV cache.
 //!
+//! ## Workspaces: the allocation-free hot path
+//!
+//! Neither driver allocates scratch per call once warm. All per-call
+//! buffers — the tile `(m, l, o, p, m_local)` state, the score block,
+//! and INT8 staging — live in a [`Workspace`] arena owned by the thread
+//! running the reduction: each pool worker owns one for its lifetime
+//! (`util::threadpool`), inline callers (a session) own their own, and
+//! the `*_into` driver entry points thread it through. Reuse is
+//! **bitwise-neutral**: buffers are truncated views re-initialized to
+//! exactly the values a fresh allocation would hold, so the float
+//! evaluation order never changes. Split-KV callers additionally keep a
+//! [`SpanPlan`] across calls: the span work-list plus the partial-state
+//! and per-span stats arenas, revalidated in O(1) per decode step and
+//! rebuilt only when the KV cache grows into a new `b_k` block.
+//!
 //! ### The split-KV determinism contract
 //!
 //! The span count `S = ceil(kblock_end / span_blocks)` is derived from
@@ -41,15 +56,19 @@
 //! and partial states are merged left-to-right per row, so outputs *and*
 //! merged [`SkipStats`] are bitwise-identical across
 //! [`Exec::Inline`]/[`Exec::Threads`]/[`Exec::Pool`] and any pool size.
-//! Relative to `run_tiled` the reduction *tree* changes, so outputs are
-//! allclose rather than bitwise — except when one span covers the whole
-//! row (`span_blocks ≥ kblock_end`), which reproduces `run_tiled`
-//! exactly. Stage-1 `keep` lookups are per-block and stage-2 λ decisions
-//! are **span-local** (each span thresholds against its own running
-//! maximum, which only makes skipping more conservative), so skip
-//! accounting still merges exactly: with λ off the summed counters equal
-//! the serial driver's; with λ on they are deterministic per span
-//! geometry.
+//! **Scheduling order may vary, merge order may not**: the pool hands
+//! out indices by chunked self-scheduling (and the submitting thread
+//! claims chunks too), so which worker reduces which span — and when —
+//! is timing-dependent, but results are collected per index and folded
+//! in plan order, which is a pure function of the call's shape. Relative
+//! to `run_tiled` the reduction *tree* changes, so outputs are allclose
+//! rather than bitwise — except when one span covers the whole row
+//! (`span_blocks ≥ kblock_end`), which reproduces `run_tiled` exactly.
+//! Stage-1 `keep` lookups are per-block and stage-2 λ decisions are
+//! **span-local** (each span thresholds against its own running maximum,
+//! which only makes skipping more conservative), so skip accounting
+//! still merges exactly: with λ off the summed counters equal the serial
+//! driver's; with λ on they are deterministic per span geometry.
 //!
 //! ## The `row_offset` causal contract
 //!
@@ -76,13 +95,14 @@
 //! this loop again.
 
 use crate::tensor::{matmul, Tensor};
-use crate::util::threadpool::{self, WorkerPool};
+use crate::util::threadpool::{self, WorkerPool, Workspace};
 
 use super::types::{AttnConfig, BlockMask, SkipStats};
 
-/// How [`run_tiled`] distributes query-block rows across workers. All
-/// variants produce bitwise-identical outputs and stats: rows are
-/// independent and results are merged in row order.
+/// How the drivers distribute work items across workers. All variants
+/// produce bitwise-identical outputs and stats: items are independent,
+/// results are collected per index, and merges run in index order —
+/// scheduling order may vary, merge order may not.
 #[derive(Clone, Copy)]
 pub enum Exec<'p> {
     /// Serial on the calling thread.
@@ -91,23 +111,60 @@ pub enum Exec<'p> {
     /// deprecated `*_threads` free functions).
     Threads(usize),
     /// A persistent [`WorkerPool`] — created once (by `AttnEngine::build`)
-    /// and reused, so hot prefill/decode calls pay no spawn cost.
+    /// and reused, so hot prefill/decode calls pay no spawn cost; each
+    /// worker carries a persistent [`Workspace`], so they pay no
+    /// allocation cost either.
     Pool(&'p WorkerPool),
 }
 
 impl Exec<'_> {
     /// Deterministic map: `f(i)` for i in 0..n, results in index order.
     pub fn map<T: Send>(&self, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+        let mut ws = Workspace::default();
+        self.map_ws(n, &mut ws, |i, _ws| f(i))
+    }
+
+    /// [`Exec::map`] with workspace plumbing: pool workers pass their own
+    /// persistent arenas, inline execution (and the participating pool
+    /// submitter) passes the caller's `ws`, scoped threads create one per
+    /// spawned thread.
+    pub fn map_ws<T: Send>(
+        &self,
+        n: usize,
+        ws: &mut Workspace,
+        f: impl Fn(usize, &mut Workspace) -> T + Sync,
+    ) -> Vec<T> {
         match self {
-            Exec::Inline => (0..n).map(f).collect(),
-            Exec::Threads(t) => threadpool::parallel_map(n, *t, f),
-            Exec::Pool(p) => p.map(n, f),
+            Exec::Inline => (0..n).map(|i| f(i, ws)).collect(),
+            Exec::Threads(t) => threadpool::parallel_map_ws(n, *t, f),
+            Exec::Pool(p) => p.map_ws(n, ws, f),
+        }
+    }
+
+    /// Workspace-threaded parallel-for without result collection — the
+    /// zero-allocation fan-out (callers write results into preallocated
+    /// disjoint slots, e.g. a [`SpanPlan`]'s partial-state arena).
+    pub fn for_each_ws(&self, n: usize, ws: &mut Workspace, f: impl Fn(usize, &mut Workspace) + Sync) {
+        match self {
+            Exec::Inline => {
+                for i in 0..n {
+                    f(i, ws);
+                }
+            }
+            Exec::Threads(t) => threadpool::parallel_for_ws(n, *t, f),
+            Exec::Pool(p) => p.run_ws(n, ws, &f),
         }
     }
 }
 
 /// Per-query-tile online-softmax state: running row maxima `m`, partition
 /// sums `l`, and unnormalized output `O` (Eq. 1 of the paper).
+///
+/// On the hot path tiles are built over recycled [`Workspace`] buffers
+/// ([`FlashTile::new_in`] / [`FlashTile::recycle`]) so no reduction
+/// allocates after warmup; [`FlashTile::new`] allocates fresh buffers for
+/// one-off callers. Both initialize identically, so reuse is
+/// bitwise-neutral.
 pub struct FlashTile {
     pub rows: usize,
     pub d: usize,
@@ -118,6 +175,15 @@ pub struct FlashTile {
     p: Vec<f32>,
     /// Scratch for per-row local maxima, reused across ingested blocks.
     m_local: Vec<f32>,
+}
+
+/// Truncate-and-refill a recycled buffer to exactly the state a fresh
+/// `vec![fill; n]` would hold (the bitwise-neutral reuse contract).
+fn grab(buf: &mut Vec<f32>, n: usize, fill: f32) -> Vec<f32> {
+    let mut v = std::mem::take(buf);
+    v.clear();
+    v.resize(n, fill);
+    v
 }
 
 impl FlashTile {
@@ -133,12 +199,44 @@ impl FlashTile {
         }
     }
 
+    /// Build a tile over the workspace's recycled buffers — identical
+    /// initial state to [`FlashTile::new`], no allocation once the arena
+    /// has reached its high-water size. Return the buffers with
+    /// [`FlashTile::recycle`] when done.
+    pub fn new_in(ws: &mut Workspace, rows: usize, d: usize, max_bk: usize) -> FlashTile {
+        FlashTile {
+            rows,
+            d,
+            m: grab(&mut ws.tile_m, rows, f32::NEG_INFINITY),
+            l: grab(&mut ws.tile_l, rows, 0.0),
+            o: grab(&mut ws.tile_o, rows * d, 0.0),
+            p: grab(&mut ws.tile_p, rows * max_bk, 0.0),
+            m_local: grab(&mut ws.tile_m_local, rows, f32::NEG_INFINITY),
+        }
+    }
+
+    /// Hand the tile's buffers back to the workspace for reuse.
+    pub fn recycle(self, ws: &mut Workspace) {
+        ws.tile_m = self.m;
+        ws.tile_l = self.l;
+        ws.tile_o = self.o;
+        ws.tile_p = self.p;
+        ws.tile_m_local = self.m_local;
+    }
+
     /// Ingest one score block `s` (rows × bk, already scaled and causal-
     /// masked). `v` is the (bk × d) value block. When `lambda` is set, the
     /// tile is split into `cw` row groups and a group's P̃V product is
     /// skipped when `max(m_local − m_new) < λ` over the group (§3.4);
     /// each skipped group adds its exact share of the block,
     /// `(group rows)/(tile rows)`, to `stats.pv_skipped_frac`.
+    ///
+    /// `sparse_p` tells the P̃V matmul whether this block's P̃ can hold
+    /// exact zeros (causal −∞ entries): masked blocks keep the
+    /// per-element zero-skip (a whole AXPY saved per masked key), dense
+    /// blocks drop the branch from the inner loop. The settings are
+    /// `==`-identical (see `matmul_nn_acc`).
+    #[allow(clippy::too_many_arguments)]
     pub fn ingest(
         &mut self,
         s: &[f32],
@@ -147,6 +245,7 @@ impl FlashTile {
         lambda: Option<f32>,
         cw: usize,
         stats: &mut SkipStats,
+        sparse_p: bool,
     ) {
         debug_assert_eq!(s.len(), self.rows * bk);
         debug_assert_eq!(v.len(), bk * self.d);
@@ -212,6 +311,7 @@ impl FlashTile {
                     d,
                     bk,
                     true,
+                    sparse_p,
                 );
             }
             g0 = g1;
@@ -235,34 +335,60 @@ impl FlashTile {
     pub fn merge(&mut self, other: &FlashTile) {
         assert_eq!(self.rows, other.rows, "merging tiles of different row counts");
         assert_eq!(self.d, other.d, "merging tiles of different head dims");
-        let d = self.d;
+        merge_rows(&mut self.m, &mut self.l, &mut self.o, &other.m, &other.l, &other.o, self.rows, self.d);
+    }
+
+    /// Normalize into the caller's output rows (first rows × d of `out`),
+    /// without allocating or copying — same float ops (`o · 1/l` per
+    /// element, in element order) as [`FlashTile::finalize`].
+    pub fn finalize_into(&self, out: &mut [f32]) {
+        debug_assert!(out.len() >= self.rows * self.d);
         for i in 0..self.rows {
-            let (ma, mb) = (self.m[i], other.m[i]);
-            let m_new = ma.max(mb);
-            if m_new == f32::NEG_INFINITY {
-                continue; // both spans fully masked: stay the exact zero state
-            }
-            let fa = if ma == f32::NEG_INFINITY { 0.0 } else { (ma - m_new).exp() };
-            let fb = if mb == f32::NEG_INFINITY { 0.0 } else { (mb - m_new).exp() };
-            self.m[i] = m_new;
-            self.l[i] = fa * self.l[i] + fb * other.l[i];
-            let (oa, ob) = (&mut self.o[i * d..(i + 1) * d], &other.o[i * d..(i + 1) * d]);
-            for (a, &b) in oa.iter_mut().zip(ob) {
-                *a = fa * *a + fb * b;
+            let l = self.l[i];
+            let inv = if l > 0.0 { 1.0 / l } else { 0.0 };
+            for j in 0..self.d {
+                out[i * self.d + j] = self.o[i * self.d + j] * inv;
             }
         }
     }
 
-    /// Normalize and return the output rows (rows × d).
-    pub fn finalize(mut self) -> Vec<f32> {
-        for i in 0..self.rows {
-            let l = self.l[i];
-            let inv = if l > 0.0 { 1.0 / l } else { 0.0 };
-            for ov in &mut self.o[i * self.d..(i + 1) * self.d] {
-                *ov *= inv;
-            }
+    /// Normalize and return the output rows (rows × d). One-off/test
+    /// convenience; the drivers use [`FlashTile::finalize_into`].
+    pub fn finalize(self) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows * self.d];
+        self.finalize_into(&mut out);
+        out
+    }
+}
+
+/// The raw Flash-Decoding combine over `(m, l, o)` row states — exactly
+/// [`FlashTile::merge`]'s float ops, shared with the [`SpanPlan`] arena
+/// merge so both paths are bitwise-identical.
+#[allow(clippy::too_many_arguments)]
+fn merge_rows(
+    m_a: &mut [f32],
+    l_a: &mut [f32],
+    o_a: &mut [f32],
+    m_b: &[f32],
+    l_b: &[f32],
+    o_b: &[f32],
+    rows: usize,
+    d: usize,
+) {
+    for i in 0..rows {
+        let (ma, mb) = (m_a[i], m_b[i]);
+        let m_new = ma.max(mb);
+        if m_new == f32::NEG_INFINITY {
+            continue; // both spans fully masked: stay the exact zero state
         }
-        self.o
+        let fa = if ma == f32::NEG_INFINITY { 0.0 } else { (ma - m_new).exp() };
+        let fb = if mb == f32::NEG_INFINITY { 0.0 } else { (mb - m_new).exp() };
+        m_a[i] = m_new;
+        l_a[i] = fa * l_a[i] + fb * l_b[i];
+        let (oa, ob) = (&mut o_a[i * d..(i + 1) * d], &o_b[i * d..(i + 1) * d]);
+        for (a, &b) in oa.iter_mut().zip(ob) {
+            *a = fa * *a + fb * b;
+        }
     }
 }
 
@@ -313,13 +439,30 @@ pub fn score_block(
     }
 }
 
+/// Scratch a [`ScoreKernel`] may use while producing a block — borrowed
+/// views into the running thread's [`Workspace`], so kernels that stage
+/// intermediates (the INT8 i32 accumulator) allocate nothing per block.
+pub struct ScoreScratch<'w> {
+    /// i32 QKᵀ accumulator for the INT8 dequant path.
+    pub acc_i32: &'w mut Vec<i32>,
+}
+
 /// How a visited score block is produced. Implementations hold whatever
 /// precomputed state they need (Q/K views, quantized blocks, scales) and
-/// are shared read-only across row workers (`Sync`).
+/// are shared read-only across row workers (`Sync`); per-block mutable
+/// scratch comes from the running thread's [`ScoreScratch`].
 pub trait ScoreKernel: Sync {
     /// Write the scaled, causal-masked score block for global query rows
     /// `[q0, q1)` × key rows `[k0, k1)` into `out[..(q1-q0)*(k1-k0)]`.
-    fn score_block(&self, q0: usize, q1: usize, k0: usize, k1: usize, out: &mut [f32]);
+    fn score_block(
+        &self,
+        q0: usize,
+        q1: usize,
+        k0: usize,
+        k1: usize,
+        out: &mut [f32],
+        scratch: &mut ScoreScratch<'_>,
+    );
 }
 
 /// Which blocks the driver visits, and with what stage-2 threshold.
@@ -364,7 +507,15 @@ impl<'a> F32Kernel<'a> {
 }
 
 impl ScoreKernel for F32Kernel<'_> {
-    fn score_block(&self, q0: usize, q1: usize, k0: usize, k1: usize, out: &mut [f32]) {
+    fn score_block(
+        &self,
+        q0: usize,
+        q1: usize,
+        k0: usize,
+        k1: usize,
+        out: &mut [f32],
+        _scratch: &mut ScoreScratch<'_>,
+    ) {
         score_block(self.q, self.k, q0, q1, k0, k1, self.row_offset, self.scale, self.causal, out);
     }
 }
@@ -403,14 +554,9 @@ impl BlockFilter for MaskFilter<'_> {
 }
 
 /// The unified tiled-attention driver, parallel over query-block rows.
-///
-/// Runs blockwise online-softmax attention of `q` against `k`/`v` under
-/// `cfg`, producing scores through `kernel` and block decisions through
-/// `filter`. Query-block rows are partitioned across the workers named by
-/// `exec` (inline / scoped threads / persistent pool); each row writes a
-/// disjoint output slice and accumulates its own [`SkipStats`], merged in
-/// row order afterwards — so outputs *and* stats are identical for every
-/// execution mode and worker count.
+/// Allocating convenience over [`run_tiled_into`] (fresh output tensor
+/// and throwaway workspace — fine for prefill-shaped calls, wrong for
+/// the decode hot loop).
 pub fn run_tiled(
     q: &Tensor,
     k: &Tensor,
@@ -420,6 +566,37 @@ pub fn run_tiled(
     filter: &impl BlockFilter,
     exec: Exec<'_>,
 ) -> (Tensor, SkipStats) {
+    let mut out = Tensor::zeros(&[q.dim(0), v.dim(1)]);
+    let mut ws = Workspace::default();
+    let stats = run_tiled_into(q, k, v, cfg, kernel, filter, exec, &mut ws, out.data_mut());
+    (out, stats)
+}
+
+/// The unified tiled-attention driver, parallel over query-block rows,
+/// writing into the caller's output buffer (`n × dv`, fully overwritten).
+///
+/// Runs blockwise online-softmax attention of `q` against `k`/`v` under
+/// `cfg`, producing scores through `kernel` and block decisions through
+/// `filter`. Query-block rows are self-scheduled in chunks across the
+/// workers named by `exec` (inline / scoped threads / persistent pool);
+/// each row writes a disjoint output slice and accumulates its own
+/// [`SkipStats`], merged in row order afterwards — so outputs *and* stats
+/// are identical for every execution mode and worker count. Scratch
+/// comes from `ws` (inline) or each worker's own arena (pool), so a
+/// single-tile call — the decode shape, which short-circuits the
+/// fan-out bookkeeping entirely — allocates nothing once warm.
+#[allow(clippy::too_many_arguments)]
+pub fn run_tiled_into(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    kernel: &impl ScoreKernel,
+    filter: &impl BlockFilter,
+    exec: Exec<'_>,
+    ws: &mut Workspace,
+    out: &mut [f32],
+) -> SkipStats {
     assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
     assert_eq!(k.dim(0), v.dim(0), "k/v rows");
     let n = q.dim(0);
@@ -427,33 +604,45 @@ pub fn run_tiled(
     let dv = v.dim(1);
     let tm = cfg.n_qblocks(n);
     let tn = cfg.n_kblocks(nk);
+    debug_assert_eq!(out.len(), n * dv);
 
-    let mut out = Tensor::zeros(&[n, dv]);
+    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
+    if tm == 1 {
+        // Decode-shaped fast path: one tile ran inline under every exec
+        // mode anyway (a 1-item map never crosses a thread); skipping the
+        // fan-out bookkeeping makes the step allocation-free.
+        let kend = filter.kblock_end(n, cfg, tn);
+        let (tile, st) = reduce_span(q, k, v, cfg, kernel, filter, 0, 0, kend, ws);
+        tile.finalize_into(out);
+        tile.recycle(ws);
+        stats.merge(&st);
+        return stats;
+    }
     let row_stats = {
         // Disjoint per-row output slices; each worker locks only its own
         // (uncontended) mutex, so no copies and no write races.
         let row_chunks: Vec<std::sync::Mutex<&mut [f32]>> =
-            out.data_mut().chunks_mut(cfg.bq * dv).map(std::sync::Mutex::new).collect();
-        exec.map(tm, |bi| {
+            out.chunks_mut(cfg.bq * dv).map(std::sync::Mutex::new).collect();
+        exec.map_ws(tm, ws, |bi, wws| {
             let q1 = (bi * cfg.bq + cfg.bq).min(n);
             let kend = filter.kblock_end(q1, cfg, tn);
-            let (tile, stats) = reduce_span(q, k, v, cfg, kernel, filter, bi, 0, kend);
-            row_chunks[bi].lock().unwrap().copy_from_slice(&tile.finalize());
-            stats
+            let (tile, st) = reduce_span(q, k, v, cfg, kernel, filter, bi, 0, kend, wws);
+            tile.finalize_into(&mut row_chunks[bi].lock().unwrap());
+            tile.recycle(wws);
+            st
         })
     };
-    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
     for s in &row_stats {
         stats.merge(s);
     }
-    (out, stats)
+    stats
 }
 
-/// Reduce k-blocks `[kb0, kb1)` of query-tile row `bi` into a fresh
-/// [`FlashTile`] — the shared inner loop of both drivers. The span's
-/// [`SkipStats`] count exactly its own blocks, so summing span stats in
-/// any fixed order reproduces the serial row totals (λ decisions are
-/// span-local; see the module docs).
+/// Reduce k-blocks `[kb0, kb1)` of query-tile row `bi` into a
+/// [`FlashTile`] borrowed from `ws` (recycle it when done) — the shared
+/// inner loop of both drivers. The span's [`SkipStats`] count exactly its
+/// own blocks, so summing span stats in any fixed order reproduces the
+/// serial row totals (λ decisions are span-local; see the module docs).
 #[allow(clippy::too_many_arguments)]
 fn reduce_span(
     q: &Tensor,
@@ -465,6 +654,7 @@ fn reduce_span(
     bi: usize,
     kb0: usize,
     kb1: usize,
+    ws: &mut Workspace,
 ) -> (FlashTile, SkipStats) {
     let n = q.dim(0);
     let nk = k.dim(0);
@@ -472,45 +662,111 @@ fn reduce_span(
     let q0 = bi * cfg.bq;
     let q1 = (q0 + cfg.bq).min(n);
     let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
-    let mut tile = FlashTile::new(q1 - q0, dv, cfg.bk);
-    let mut sbuf = vec![0f32; (q1 - q0) * cfg.bk];
-    for bj in kb0..kb1 {
-        let k0 = bj * cfg.bk;
-        let k1 = (k0 + cfg.bk).min(nk);
-        stats.qk_total += 1;
-        stats.pv_total += 1;
-        if !filter.keep(bi, bj) {
-            stats.qk_skipped += 1;
-            stats.pv_skipped += 1;
-            continue;
+    let mut tile = FlashTile::new_in(ws, q1 - q0, dv, cfg.bk);
+    let mut sbuf = grab(&mut ws.scores, (q1 - q0) * cfg.bk, 0.0);
+    {
+        let mut scratch = ScoreScratch { acc_i32: &mut ws.quant_i32 };
+        for bj in kb0..kb1 {
+            let k0 = bj * cfg.bk;
+            let k1 = (k0 + cfg.bk).min(nk);
+            stats.qk_total += 1;
+            stats.pv_total += 1;
+            if !filter.keep(bi, bj) {
+                stats.qk_skipped += 1;
+                stats.pv_skipped += 1;
+                continue;
+            }
+            let sb = &mut sbuf[..(q1 - q0) * (k1 - k0)];
+            kernel.score_block(q0, q1, k0, k1, sb, &mut scratch);
+            // P̃ holds exact zeros only where this block crosses the
+            // causal diagonal for these rows (−∞ entries exist iff the
+            // block's last key position exceeds the first row's absolute
+            // position); everywhere else the P̃V matmul runs branch-free.
+            let sparse_p = cfg.causal && k1 > cfg.row_offset + q0 + 1;
+            let vb = &v.data()[k0 * dv..k1 * dv];
+            tile.ingest(sb, k1 - k0, vb, filter.lambda(), cfg.cw, &mut stats, sparse_p);
         }
-        let sb = &mut sbuf[..(q1 - q0) * (k1 - k0)];
-        kernel.score_block(q0, q1, k0, k1, sb);
-        tile.ingest(sb, k1 - k0, &v.data()[k0 * dv..k1 * dv], filter.lambda(), cfg.cw, &mut stats);
     }
+    ws.scores = sbuf;
     (tile, stats)
 }
 
-/// The split-KV (Flash-Decoding) driver: parallel over (query-tile row,
-/// KV span) pairs instead of rows alone, so a decode-shaped call (one
-/// query row, `tm = 1`) still spreads across the pool.
+/// A cached split-KV execution plan: the (row, span) work-list plus the
+/// partial-state and per-span stats arenas, owned by the caller (an
+/// `AttnSession` keeps one per sequence) and reused across calls.
 ///
-/// Each row's k-block domain `[0, kblock_end)` is cut into contiguous
-/// spans of `span_blocks` k-blocks; every span is reduced independently
-/// by [`reduce_span`] and the partial `(m, l, o)` states of a row are
-/// combined left-to-right in span order with [`FlashTile::merge`]. The
-/// span geometry depends only on the inputs (cache length, config,
-/// `span_blocks`) — **never** on the worker count — so outputs and
-/// merged [`SkipStats`] are bitwise-identical for every [`Exec`] mode
-/// and pool size (the determinism contract in the module docs). With
-/// `span_blocks ≥` the row's k-block count the single span reproduces
-/// [`run_tiled`] bitwise.
-///
-/// Each span pays for its own tile scratch (`(m, l, o)` plus score
-/// buffers — unavoidable: spans reduce concurrently) and one merge, so
-/// `span_blocks` trades parallelism against per-span overhead; the
-/// `KvSplit::Auto` default of 4 k-blocks keeps a span at ≥ a couple
-/// hundred keys of matmul work, far above its fixed cost.
+/// [`SpanPlan::ensure`] revalidates the plan against the call's geometry
+/// — for a decode step that is one `kblock_end` comparison, so a step
+/// whose cache grew within the same `b_k` block does **no planning work
+/// and no allocation**; the item list is rebuilt (reusing capacity) only
+/// when the k-domain or span size actually changes. The plan never
+/// affects results: it caches a pure function of the call's shape.
+#[derive(Default)]
+pub struct SpanPlan {
+    span_blocks: usize,
+    /// Cached per-tile k-block bounds (the plan key, validated per call).
+    kends: Vec<usize>,
+    /// Work items: (tile row, first k-block, one-past-last k-block),
+    /// row-major in ascending span order — the merge walks this exact
+    /// order.
+    items: Vec<(usize, usize, usize)>,
+    /// Per-item partial `(m, l, o)` states: `stride` f32 per item, laid
+    /// out `[m; rows][l; rows][o; rows·dv]`.
+    partials: Vec<f32>,
+    /// Per-item skip counters, folded in item order.
+    stats: Vec<SkipStats>,
+}
+
+impl SpanPlan {
+    pub fn new() -> SpanPlan {
+        SpanPlan::default()
+    }
+
+    /// Number of work items the current plan holds (tests/benches).
+    pub fn items(&self) -> usize {
+        self.items.len()
+    }
+
+    fn ensure(&mut self, tm: usize, span_blocks: usize, kend_of: impl Fn(usize) -> usize) {
+        let mut dirty = self.span_blocks != span_blocks || self.kends.len() != tm;
+        if !dirty {
+            for (bi, &kend) in self.kends.iter().enumerate() {
+                if kend != kend_of(bi) {
+                    dirty = true;
+                    break;
+                }
+            }
+        }
+        if !dirty {
+            return;
+        }
+        self.span_blocks = span_blocks;
+        self.kends.clear();
+        self.items.clear();
+        for bi in 0..tm {
+            let kend = kend_of(bi);
+            self.kends.push(kend);
+            let mut kb0 = 0;
+            while kb0 < kend {
+                let kb1 = (kb0 + span_blocks).min(kend);
+                self.items.push((bi, kb0, kb1));
+                kb0 = kb1;
+            }
+        }
+    }
+}
+
+/// A `*mut T` the span workers can share: each item writes only its own
+/// disjoint slot, and the executor synchronizes completion before any
+/// read, so no two accesses alias.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// The split-KV (Flash-Decoding) driver. Allocating convenience over
+/// [`run_tiled_splitkv_into`] (throwaway plan/workspace/output — fine
+/// for one-off calls and tests, wrong for the decode hot loop).
+#[allow(clippy::too_many_arguments)]
 pub fn run_tiled_splitkv(
     q: &Tensor,
     k: &Tensor,
@@ -521,6 +777,61 @@ pub fn run_tiled_splitkv(
     exec: Exec<'_>,
     span_blocks: usize,
 ) -> (Tensor, SkipStats) {
+    let mut out = Tensor::zeros(&[q.dim(0), v.dim(1)]);
+    let mut plan = SpanPlan::new();
+    let mut ws = Workspace::default();
+    let stats = run_tiled_splitkv_into(
+        q,
+        k,
+        v,
+        cfg,
+        kernel,
+        filter,
+        exec,
+        span_blocks,
+        &mut plan,
+        &mut ws,
+        out.data_mut(),
+    );
+    (out, stats)
+}
+
+/// The split-KV (Flash-Decoding) driver: parallel over (query-tile row,
+/// KV span) pairs instead of rows alone, so a decode-shaped call (one
+/// query row, `tm = 1`) still spreads across the pool.
+///
+/// Each row's k-block domain `[0, kblock_end)` is cut into contiguous
+/// spans of `span_blocks` k-blocks; every span is reduced independently
+/// by the shared inner loop into a partial `(m, l, o)` state written to
+/// the plan's arena, and the spans of a row are combined left-to-right in
+/// span order (the [`FlashTile::merge`] combine). The span geometry
+/// depends only on the inputs (cache length, config, `span_blocks`) —
+/// **never** on the worker count — so outputs and merged [`SkipStats`]
+/// are bitwise-identical for every [`Exec`] mode and pool size (the
+/// determinism contract in the module docs). With `span_blocks ≥` the
+/// row's k-block count the single span reproduces [`run_tiled`] bitwise.
+///
+/// Steady-state cost: with a warm `plan` and `ws` a decode step does no
+/// heap allocation and no planning work — span reduction writes into the
+/// plan's preallocated arenas, and the plan revalidates in O(1) while the
+/// cache stays within the same `b_k` block. `span_blocks` trades
+/// parallelism against per-span overhead; the `KvSplit::Auto` default of
+/// 4 k-blocks keeps a span at ≥ a couple hundred keys of matmul work,
+/// far above its fixed cost.
+#[allow(clippy::too_many_arguments)]
+pub fn run_tiled_splitkv_into(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    cfg: &AttnConfig,
+    kernel: &impl ScoreKernel,
+    filter: &impl BlockFilter,
+    exec: Exec<'_>,
+    span_blocks: usize,
+    plan: &mut SpanPlan,
+    ws: &mut Workspace,
+    out: &mut [f32],
+) -> SkipStats {
     assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
     assert_eq!(k.dim(0), v.dim(0), "k/v rows");
     assert!(span_blocks > 0, "span_blocks must be positive");
@@ -529,45 +840,89 @@ pub fn run_tiled_splitkv(
     let dv = v.dim(1);
     let tm = cfg.n_qblocks(n);
     let tn = cfg.n_kblocks(nk);
+    debug_assert_eq!(out.len(), n * dv);
 
-    // Work list: row-major, spans in ascending k order. Purely a function
-    // of the call's shape — the merge below walks it in this exact order.
-    let mut items: Vec<(usize, usize, usize)> = Vec::new();
-    for bi in 0..tm {
+    plan.ensure(tm, span_blocks, |bi| {
         let q1 = (bi * cfg.bq + cfg.bq).min(n);
-        let kend = filter.kblock_end(q1, cfg, tn);
-        let mut kb0 = 0;
-        while kb0 < kend {
-            let kb1 = (kb0 + span_blocks).min(kend);
-            items.push((bi, kb0, kb1));
-            kb0 = kb1;
-        }
-    }
-    let partials = exec.map(items.len(), |w| {
-        let (bi, kb0, kb1) = items[w];
-        reduce_span(q, k, v, cfg, kernel, filter, bi, kb0, kb1)
+        filter.kblock_end(q1, cfg, tn)
     });
-
-    let mut out = Tensor::zeros(&[n, dv]);
-    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
-    let mut acc: Vec<Option<FlashTile>> = (0..tm).map(|_| None).collect();
-    for (&(bi, _, _), (tile, st)) in items.iter().zip(partials) {
-        stats.merge(&st);
-        match &mut acc[bi] {
-            Some(a) => a.merge(&tile),
-            None => acc[bi] = Some(tile),
-        }
+    let nitems = plan.items.len();
+    let rows_max = cfg.bq.min(n.max(1));
+    let stride = rows_max * (2 + dv);
+    if plan.partials.len() < nitems * stride {
+        plan.partials.resize(nitems * stride, 0.0);
     }
-    for (bi, a) in acc.into_iter().enumerate() {
+    plan.stats.clear();
+    plan.stats.resize(nitems, SkipStats::default());
+
+    {
+        let items = &plan.items;
+        let pptr = SendPtr(plan.partials.as_mut_ptr());
+        let sptr = SendPtr(plan.stats.as_mut_ptr());
+        exec.for_each_ws(nitems, ws, |w, wws| {
+            let (bi, kb0, kb1) = items[w];
+            let (tile, st) = reduce_span(q, k, v, cfg, kernel, filter, bi, kb0, kb1, wws);
+            let rows = tile.rows;
+            // SAFETY: item `w` owns slot `w` exclusively (disjoint ranges
+            // of the arena), and `for_each_ws` does not return until
+            // every item completed — the reads below happen strictly
+            // after all writes.
+            unsafe {
+                let slot = std::slice::from_raw_parts_mut(pptr.0.add(w * stride), rows * (2 + dv));
+                slot[..rows].copy_from_slice(&tile.m);
+                slot[rows..2 * rows].copy_from_slice(&tile.l);
+                slot[2 * rows..].copy_from_slice(&tile.o);
+                *sptr.0.add(w) = st;
+            }
+            tile.recycle(wws);
+        });
+    }
+
+    // Deterministic merge: items are row-major in span order; fold each
+    // row's spans left-to-right into its first slot, then normalize into
+    // the caller's rows. Stats fold in the same fixed item order.
+    let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
+    for st in &plan.stats {
+        stats.merge(st);
+    }
+    let mut w = 0;
+    for bi in 0..tm {
         let q0 = bi * cfg.bq;
         let q1 = (q0 + cfg.bq).min(n);
-        if let Some(tile) = a {
-            out.data_mut()[q0 * dv..q1 * dv].copy_from_slice(&tile.finalize());
+        let rows = q1 - q0;
+        let state = rows * (2 + dv);
+        let orow = &mut out[q0 * dv..q1 * dv];
+        let w0 = w;
+        while w < nitems && plan.items[w].0 == bi {
+            w += 1;
         }
-        // rows with an empty k domain (kend = 0) stay exactly zero, like
-        // run_tiled's fully-masked tiles
+        if w == w0 {
+            // empty k domain (kend = 0): exactly zero, like run_tiled's
+            // fully-masked tiles
+            orow.fill(0.0);
+            continue;
+        }
+        for wb in (w0 + 1)..w {
+            let (head, tail) = plan.partials.split_at_mut(wb * stride);
+            let a = &mut head[w0 * stride..w0 * stride + state];
+            let b = &tail[..state];
+            let (am, ar) = a.split_at_mut(rows);
+            let (al, ao) = ar.split_at_mut(rows);
+            let (bm, br) = b.split_at(rows);
+            let (bl, bo) = br.split_at(rows);
+            merge_rows(am, al, ao, bm, bl, bo, rows, dv);
+        }
+        let slot = &plan.partials[w0 * stride..w0 * stride + state];
+        let (_, lr) = slot.split_at(rows);
+        let (l, o) = lr.split_at(rows);
+        for i in 0..rows {
+            let inv = if l[i] > 0.0 { 1.0 / l[i] } else { 0.0 };
+            for j in 0..dv {
+                orow[i * dv + j] = o[i * dv + j] * inv;
+            }
+        }
     }
-    (out, stats)
+    stats
 }
 
 #[cfg(test)]
@@ -576,6 +931,18 @@ mod tests {
     use crate::attention::dense::attention_naive;
     use crate::util::prop::{assert_allclose, Cases};
     use crate::util::rng::Pcg;
+
+    fn scratchless_ingest(
+        tile: &mut FlashTile,
+        s: &[f32],
+        bk: usize,
+        v: &[f32],
+        lambda: Option<f32>,
+        cw: usize,
+        stats: &mut SkipStats,
+    ) {
+        tile.ingest(s, bk, v, lambda, cw, stats, true);
+    }
 
     #[test]
     fn lambda_zero_threshold_never_fires_on_first_block() {
@@ -590,7 +957,7 @@ mod tests {
         let mut s = vec![0f32; n * n];
         score_block(&q, &k, 0, n, 0, n, 0, 0.5, false, &mut s);
         let mut stats = SkipStats::default();
-        tile.ingest(&s, n, v.data(), Some(-0.1), 2, &mut stats);
+        scratchless_ingest(&mut tile, &s, n, v.data(), Some(-0.1), 2, &mut stats);
         assert_eq!(stats.pv_skipped_frac, 0.0);
     }
 
@@ -608,6 +975,57 @@ mod tests {
         let (out, _) = run_tiled(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline);
         let oracle = attention_naive(&q, &k, &v, &cfg);
         assert_allclose(out.data(), oracle.data(), 1e-4, 1e-3, "scratch-reuse").unwrap();
+    }
+
+    #[test]
+    fn workspace_tile_matches_fresh_tile_bitwise() {
+        // The bitwise-neutral reuse contract: a tile built over a dirty,
+        // oversized workspace must behave exactly like a fresh one.
+        let mut rng = Pcg::seeded(19);
+        let (n, d) = (8, 4);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let mut s = vec![0f32; n * n];
+        score_block(&q, &k, 0, n, 0, n, 0, 0.5, false, &mut s);
+
+        let mut ws = Workspace::default();
+        // dirty the arena with a bigger, different-shaped reduction
+        let big = FlashTile::new_in(&mut ws, 4 * n, 2 * d, n);
+        big.recycle(&mut ws);
+        for b in [&mut ws.tile_m, &mut ws.tile_l, &mut ws.tile_o, &mut ws.tile_p, &mut ws.tile_m_local] {
+            for x in b.iter_mut() {
+                *x = 1234.5;
+            }
+        }
+
+        let mut fresh = FlashTile::new(n, d, n);
+        let mut reused = FlashTile::new_in(&mut ws, n, d, n);
+        let (mut st_a, mut st_b) = (SkipStats::default(), SkipStats::default());
+        scratchless_ingest(&mut fresh, &s, n, v.data(), Some(-2.0), 2, &mut st_a);
+        scratchless_ingest(&mut reused, &s, n, v.data(), Some(-2.0), 2, &mut st_b);
+        assert_eq!(st_a, st_b);
+        assert_eq!(fresh.m, reused.m);
+        assert_eq!(fresh.l, reused.l);
+        assert_eq!(fresh.o, reused.o);
+        assert_eq!(fresh.finalize(), reused.finalize());
+    }
+
+    #[test]
+    fn finalize_into_matches_finalize() {
+        let mut rng = Pcg::seeded(20);
+        let (n, d) = (6, 8);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let mut s = vec![0f32; n * n];
+        score_block(&q, &k, 0, n, 0, n, 0, 0.5, false, &mut s);
+        let mut tile = FlashTile::new(n, d, n);
+        let mut stats = SkipStats::default();
+        scratchless_ingest(&mut tile, &s, n, v.data(), None, 2, &mut stats);
+        let mut into = vec![7.0f32; n * d];
+        tile.finalize_into(&mut into);
+        assert_eq!(into, tile.finalize(), "finalize_into must be the same bits as finalize");
     }
 
     #[test]
@@ -724,11 +1142,11 @@ mod tests {
         let mut left = FlashTile::new(rows, d, bk);
         let mut right = FlashTile::new(rows, d, bk);
         score_block(&q, &k, 0, rows, 0, bk, 0, 0.5, false, &mut s);
-        serial.ingest(&s, bk, &v.data()[..bk * d], None, 1, &mut stats);
-        left.ingest(&s, bk, &v.data()[..bk * d], None, 1, &mut stats);
+        scratchless_ingest(&mut serial, &s, bk, &v.data()[..bk * d], None, 1, &mut stats);
+        scratchless_ingest(&mut left, &s, bk, &v.data()[..bk * d], None, 1, &mut stats);
         score_block(&q, &k, 0, rows, bk, 2 * bk, 0, 0.5, false, &mut s);
-        serial.ingest(&s, bk, &v.data()[bk * d..], None, 1, &mut stats);
-        right.ingest(&s, bk, &v.data()[bk * d..], None, 1, &mut stats);
+        scratchless_ingest(&mut serial, &s, bk, &v.data()[bk * d..], None, 1, &mut stats);
+        scratchless_ingest(&mut right, &s, bk, &v.data()[bk * d..], None, 1, &mut stats);
 
         left.merge(&right);
         assert_allclose(&left.finalize(), &serial.finalize(), 1e-5, 1e-5, "merge-vs-one-pass").unwrap();
@@ -742,7 +1160,7 @@ mod tests {
         // row 0 of b sees one real entry; row 1 stays fully masked in both
         let s = [1.0f32, f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY];
         let mut stats = SkipStats::default();
-        b.ingest(&s[..2], 1, &[3.0, 0.0, 0.0, 0.0], None, 1, &mut stats);
+        scratchless_ingest(&mut b, &s[..2], 1, &[3.0, 0.0, 0.0, 0.0], None, 1, &mut stats);
         a.merge(&b);
         assert_eq!(a.m[1], f32::NEG_INFINITY);
         let out = a.finalize();
@@ -805,6 +1223,46 @@ mod tests {
             }
             assert_allclose(split.data(), serial.data(), 1e-4, 1e-3, "splitkv-vs-serial")
         });
+    }
+
+    #[test]
+    fn splitkv_plan_and_workspace_reuse_is_bitwise_neutral() {
+        // Decode-style growth: one SpanPlan + Workspace carried across a
+        // growing KV domain must give the same bits as fresh state per
+        // call — and revalidate without rebuilding while the k-domain
+        // stays put.
+        let mut rng = Pcg::seeded(21);
+        let (nk_max, d) = (70, 8);
+        let kf = Tensor::randn(&[nk_max, d], &mut rng);
+        let vf = Tensor::randn(&[nk_max, d], &mut rng);
+        let q = Tensor::randn(&[1, d], &mut rng);
+        let cfg = AttnConfig { bq: 16, bk: 8, causal: false, scale: None, cw: 2, row_offset: 0 };
+        let mut plan = SpanPlan::new();
+        let mut ws = Workspace::default();
+        for nk in 30..nk_max {
+            let k = kf.rows(0, nk);
+            let v = vf.rows(0, nk);
+            let kernel = F32Kernel::new(&q, &k, &cfg);
+            let mut out = vec![0f32; d];
+            let st = run_tiled_splitkv_into(
+                &q,
+                &k,
+                &v,
+                &cfg,
+                &kernel,
+                &DenseFilter,
+                Exec::Inline,
+                2,
+                &mut plan,
+                &mut ws,
+                &mut out,
+            );
+            let (fresh, st_fresh) =
+                run_tiled_splitkv(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline, 2);
+            assert_eq!(out.as_slice(), fresh.data(), "nk={nk}: reused plan diverged");
+            assert_eq!(st, st_fresh, "nk={nk}: stats diverged");
+            assert_eq!(plan.items(), cfg.n_kblocks(nk).div_ceil(2), "nk={nk}: plan geometry");
+        }
     }
 
     #[test]

@@ -68,7 +68,12 @@ pub const KV_SPLIT_AUTO_BLOCKS: usize = 4;
 /// ceil(n_kblocks / span)`), **never** from the worker count, so outputs
 /// and merged [`SkipStats`] are bitwise-identical across
 /// `Exec::Inline`/`Threads`/`Pool` and any pool size (see the split-KV
-/// contract in `attention::pipeline`).
+/// contract in `attention::pipeline`). Because the geometry is a pure
+/// function of `(cache_len, kend, span_blocks)`, sessions cache it: an
+/// `AttnSession` keeps a `SpanPlan` (work-list + partial-state arenas)
+/// that revalidates in O(1) per decode step and rebuilds only when the
+/// cache grows into a new `b_k` block — plan reuse can never change a
+/// bit, only skip redundant planning work and allocation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KvSplit {
     /// Never split. Decode steps reduce their KV domain serially within

@@ -18,14 +18,22 @@
 //!   run, which caps time-to-first-token for every other queued and
 //!   active session;
 //! - **decoding** sessions advance one single-row step each, **batched**:
-//!   every decode-ready session is advanced inside one `Exec::map` over
-//!   the engine's pool, so token-phase throughput scales with cores
-//!   across sessions. Each step runs `Exec::Inline` inside its worker
-//!   (the pipeline is bitwise-identical across exec modes, so outputs do
-//!   not depend on batch composition). A *lone* decoding session instead
-//!   keeps the engine's own executor, which lets the engine's split-KV
-//!   policy fan the single step's KV spans across the same pool — the
-//!   two levels of decode parallelism time-share one set of workers;
+//!   every decode-ready session is advanced inside one pool fan-out, so
+//!   token-phase throughput scales with cores across sessions. Each step
+//!   runs `Exec::Inline` inside its worker (the pipeline is
+//!   bitwise-identical across exec modes, so outputs do not depend on
+//!   batch composition), writes its output row **directly into the
+//!   session's preallocated result buffer**
+//!   ([`crate::attention::AttnSession::decode_into`]) and draws scratch
+//!   from session/worker-owned workspaces — a warmed-up decode tick
+//!   performs no heap allocation in any session's step. The pool hands
+//!   sessions out by chunked self-scheduling with the scheduler thread
+//!   participating, so one slow session (a ragged long-cache tail) no
+//!   longer serializes the tick behind idle workers. A *lone* decoding
+//!   session instead keeps the engine's own executor, which lets the
+//!   engine's split-KV policy fan the single step's KV spans across the
+//!   same pool — the two levels of decode parallelism time-share one set
+//!   of workers;
 //! - finished sessions retire with a [`SeqResult`]: output rows, merged
 //!   [`SkipStats`], TTFT, per-output-token latencies, compute seconds.
 //!
@@ -41,7 +49,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::attention::{AttnEngine, AttnSession, Exec, SkipStats};
+use crate::attention::{AttnEngine, AttnSession, Exec, SkipStats, Workspace};
 use crate::tensor::Tensor;
 use crate::workloads::{synthetic, SyntheticSpec};
 
@@ -121,7 +129,14 @@ struct ActiveSeq<'e> {
     session: AttnSession<'e>,
     prefilled: usize,
     decoded: usize,
+    /// All output rows, preallocated at admission for the stream's full
+    /// length — decode steps write their row into the tail in place.
     out: Vec<f32>,
+    /// Reusable 1-row staging tensors for decode steps (the stream rows
+    /// are copied in, never re-wrapped — no per-token allocation).
+    qrow: Tensor,
+    krow: Tensor,
+    vrow: Tensor,
     stats: SkipStats,
     arrived: Instant,
     compute: f64,
@@ -157,19 +172,28 @@ impl ActiveSeq<'_> {
 
     /// Run one single-row decode step under `exec` (the engine's own
     /// executor when this session is advanced alone, `Exec::Inline` when
-    /// it is advanced inside the batched cross-session map — outputs are
-    /// bitwise-identical either way) and do the session's bookkeeping.
+    /// it is advanced inside the batched cross-session fan-out — outputs
+    /// are bitwise-identical either way) and do the session's
+    /// bookkeeping. Allocation-free once the session is warm: the stream
+    /// row is copied into reusable staging tensors and the output row is
+    /// written straight into the preallocated result buffer.
     fn advance_decode(&mut self, exec: Exec<'_>) {
         let t0 = Instant::now();
         let t = self.stream.prefill + self.decoded;
-        let r = self.session.decode_with_exec(
-            &self.stream.q.rows(t, t + 1),
-            &self.stream.k.rows(t, t + 1),
-            &self.stream.v.rows(t, t + 1),
+        self.qrow.data_mut().copy_from_slice(self.stream.q.row(t));
+        self.krow.data_mut().copy_from_slice(self.stream.k.row(t));
+        self.vrow.data_mut().copy_from_slice(self.stream.v.row(t));
+        let dv = self.stream.v.dim(1);
+        let base = self.out.len();
+        self.out.resize(base + dv, 0.0);
+        let (stats, _mask) = self.session.decode_into_with_exec(
+            &self.qrow,
+            &self.krow,
+            &self.vrow,
+            &mut self.out[base..],
             exec,
         );
-        self.out.extend_from_slice(r.out.data());
-        self.stats.merge(&r.stats);
+        self.stats.merge(&stats);
         self.decoded += 1;
         let dt = t0.elapsed().as_secs_f64();
         self.compute += dt;
@@ -239,13 +263,21 @@ impl<'e> SessionManager<'e> {
     /// cap (the scheduler admits up to `BatchPolicy::max_batch`).
     pub fn admit(&mut self, id: u64, stream: SeqStream, arrived: Instant) {
         assert!(!stream.is_empty(), "empty attention stream");
+        let d = stream.q.dim(1);
+        let dv = stream.v.dim(1);
+        let total = stream.len() * dv;
         self.active.push(ActiveSeq {
             id,
             session: self.engine.session(),
+            qrow: Tensor::zeros(&[1, d]),
+            krow: Tensor::zeros(&[1, d]),
+            vrow: Tensor::zeros(&[1, dv]),
             stream,
             prefilled: 0,
             decoded: 0,
-            out: Vec::new(),
+            // the stream's full output, reserved up front: decode steps
+            // extend into capacity, never reallocating mid-flight
+            out: Vec::with_capacity(total),
             stats: SkipStats::default(),
             arrived,
             compute: 0.0,
@@ -284,12 +316,17 @@ impl<'e> SessionManager<'e> {
             // a lone decoder keeps the engine's executor: the engine's
             // split-KV policy fans the step's KV spans across the pool
             1 => ready.into_iter().next().unwrap().advance_decode(self.engine.exec()),
-            // cross-session batch: one map over (session, step) pairs;
-            // each worker locks only its own (uncontended) slot and runs
-            // its step inline
+            // cross-session batch: one chunk-self-scheduled fan-out over
+            // (session, step) pairs — the scheduler thread participates
+            // with its own workspace; each participant locks only its own
+            // (uncontended) slot and runs its step inline
             _ => {
                 let slots: Vec<Mutex<&mut ActiveSeq<'e>>> = ready.into_iter().map(Mutex::new).collect();
-                self.engine.exec().map(slots.len(), |i| {
+                // each step draws on its session's own arena; the
+                // scheduler thread participates in the fan-out, and an
+                // empty Workspace satisfies the seam without allocating
+                let mut ws = Workspace::default();
+                self.engine.exec().for_each_ws(slots.len(), &mut ws, |i, _ws| {
                     slots[i].lock().unwrap().advance_decode(Exec::Inline);
                 });
             }

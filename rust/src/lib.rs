@@ -44,10 +44,15 @@
 //! [`attention::pipeline::BlockFilter`] (stage-1 mask lookup, stage-2 λ,
 //! causal-domain bound), and [`attention::pipeline::Exec`] (who runs the
 //! work — inline, scoped threads, or a persistent pool shareable across
-//! engines). Around it: the mask-prediction pipeline, baselines (each
-//! just a mask constructor), workloads, tuner, cost model, and the PJRT
-//! runtime that loads and executes the artifacts. Python never runs on
-//! the request path.
+//! engines, handing out items by chunked self-scheduling with the
+//! submitter participating). The steady-state decode step is
+//! **allocation-free**: scratch lives in per-worker/per-session
+//! [`attention::Workspace`] arenas and the session's cached
+//! [`attention::SpanPlan`], all bitwise-neutral (counting-allocator
+//! regression suite in `tests/alloc_regression.rs`). Around it: the
+//! mask-prediction pipeline, baselines (each just a mask constructor),
+//! workloads, tuner, cost model, and the PJRT runtime that loads and
+//! executes the artifacts. Python never runs on the request path.
 
 pub mod attention;
 pub mod baselines;

@@ -15,7 +15,7 @@
 //! builder; see the migration table in [`crate::attention`].
 
 use crate::attention::engine::{AttnEngine, Execution, Precision, SparsityPolicy};
-use crate::attention::pipeline::ScoreKernel;
+use crate::attention::pipeline::{ScoreKernel, ScoreScratch};
 use crate::attention::types::{AttnConfig, BlockMask, SkipStats};
 use crate::tensor::quant::{self, QuantBlock};
 use crate::tensor::Tensor;
@@ -129,12 +129,21 @@ impl QuantScoreKernel {
 }
 
 impl ScoreKernel for QuantScoreKernel {
-    fn score_block(&self, q0: usize, q1: usize, k0: usize, k1: usize, out: &mut [f32]) {
+    fn score_block(
+        &self,
+        q0: usize,
+        q1: usize,
+        k0: usize,
+        k1: usize,
+        out: &mut [f32],
+        scratch: &mut ScoreScratch<'_>,
+    ) {
         let qblk = &self.qb[q0 / self.bq];
         let kblk = &self.kb[k0 / self.bk];
         debug_assert_eq!(qblk.rows, q1 - q0);
         debug_assert_eq!(kblk.rows, k1 - k0);
-        quant_score_block(qblk, kblk, self.row_offset + q0, k0, self.scale, self.causal, out);
+        let q0_abs = self.row_offset + q0;
+        quant_score_block(qblk, kblk, q0_abs, k0, self.scale, self.causal, out, scratch.acc_i32);
     }
 }
 
@@ -142,7 +151,11 @@ impl ScoreKernel for QuantScoreKernel {
 /// pair — shared by [`QuantScoreKernel`] and the session's cache kernel
 /// (which borrows cached K blocks instead of owning them). `q0` is the
 /// **absolute position** of the block's first query row (callers add
-/// their `row_offset`); `k0` is the absolute first key row.
+/// their `row_offset`); `k0` is the absolute first key row. `acc` is the
+/// running thread's i32 staging buffer (see
+/// [`crate::attention::pipeline::ScoreScratch`]) — nothing here
+/// allocates.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn quant_score_block(
     qblk: &QuantBlock,
     kblk: &QuantBlock,
@@ -151,8 +164,9 @@ pub(crate) fn quant_score_block(
     scale: f32,
     causal: bool,
     out: &mut [f32],
+    acc: &mut Vec<i32>,
 ) {
-    quant::qk_dequant(qblk, kblk, scale, out);
+    quant::qk_dequant_scratch(qblk, kblk, scale, out, acc);
     if causal {
         for i in 0..qblk.rows {
             let gi = q0 + i;

@@ -202,15 +202,36 @@ pub fn matmul_nn(a: &Tensor, b: &Tensor) -> Tensor {
     let (kb, n) = (b.dim(0), b.dim(1));
     assert_eq!(k, kb, "matmul_nn inner dims: {k} vs {kb}");
     let mut c = Tensor::zeros(&[m, n]);
-    matmul_nn_acc(a.data(), b.data(), c.data_mut(), m, n, k, false);
+    matmul_nn_acc(a.data(), b.data(), c.data_mut(), m, n, k, false, true);
     c
 }
 
 /// NN kernel, optionally accumulating into `c` (C += A·B when `acc`).
 /// i-k-j loop order: the inner loop is a contiguous AXPY over B's row `p`
 /// and C's row `i`, which auto-vectorizes.
+///
+/// `skip_zeros` gates the per-element `a == 0` early-out. Masked/sparse
+/// callers (P̃ rows holding exact zeros from causal −∞ entries) keep it —
+/// skipping a whole AXPY per masked key is the win the branch exists
+/// for. Dense callers (no skipped blocks ⇒ few or no zeros) turn it off
+/// so the inner loop carries no data-dependent branch per multiply.
+/// Numerically the flag only changes whether exact-zero `a` terms
+/// contribute `+= 0.0·b` no-ops, which can at most flip a `-0.0`
+/// accumulator to `+0.0` (equal under IEEE `==` and every comparison in
+/// this crate); with finite inputs both settings produce `==`-identical
+/// results.
 #[inline]
-pub fn matmul_nn_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize, acc: bool) {
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nn_acc(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    acc: bool,
+    skip_zeros: bool,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
@@ -221,7 +242,7 @@ pub fn matmul_nn_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k:
         let cr = &mut c[i * n..(i + 1) * n];
         for p in 0..k {
             let av = a[i * k + p];
-            if av == 0.0 {
+            if skip_zeros && av == 0.0 {
                 continue;
             }
             let br = &b[p * n..(p + 1) * n];
@@ -372,10 +393,36 @@ mod tests {
         let a = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
         let b = Tensor::from_vec(&[2, 1], vec![3.0, 4.0]);
         let mut c = vec![10.0];
-        matmul_nn_acc(a.data(), b.data(), &mut c, 1, 1, 2, true);
+        matmul_nn_acc(a.data(), b.data(), &mut c, 1, 1, 2, true, true);
         assert_eq!(c[0], 10.0 + 11.0);
-        matmul_nn_acc(a.data(), b.data(), &mut c, 1, 1, 2, false);
+        matmul_nn_acc(a.data(), b.data(), &mut c, 1, 1, 2, false, true);
         assert_eq!(c[0], 11.0);
+    }
+
+    #[test]
+    fn nn_zero_skip_flag_is_value_identical() {
+        // The dense fast path (skip_zeros = false) must agree with the
+        // sparse branch under `==` even when A holds exact zeros.
+        Cases::standard(104).check(|rng| {
+            let m = rng.range(1, 10);
+            let k = rng.range(1, 10);
+            let n = rng.range(1, 10);
+            let mut a = Tensor::randn(&[m, k], rng);
+            for x in a.data_mut() {
+                if rng.chance(0.3) {
+                    *x = 0.0;
+                }
+            }
+            let b = Tensor::randn(&[k, n], rng);
+            let mut c_skip = vec![0f32; m * n];
+            let mut c_dense = vec![0f32; m * n];
+            matmul_nn_acc(a.data(), b.data(), &mut c_skip, m, n, k, false, true);
+            matmul_nn_acc(a.data(), b.data(), &mut c_dense, m, n, k, false, false);
+            if c_skip != c_dense {
+                return Err("zero-skip flag changed values".into());
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -111,6 +111,26 @@ impl Tensor {
         &mut self.data[i * w..(i + 1) * w]
     }
 
+    /// Append whole rows to a 2-D tensor, growing dim 0 in place (the KV
+    /// cache append path — no reshape, no copy of existing rows, and no
+    /// allocation while the data fits reserved capacity).
+    pub fn append_rows(&mut self, rows: &[f32]) {
+        debug_assert_eq!(self.ndim(), 2);
+        let w = self.shape[1];
+        assert!(w > 0 && rows.len() % w == 0, "append_rows: {} elems onto width {w}", rows.len());
+        self.data.extend_from_slice(rows);
+        self.shape[0] += rows.len() / w;
+    }
+
+    /// Reserve exact capacity for `rows` total rows of a 2-D tensor, so a
+    /// caller-managed growth policy (amortized block doubling) decides
+    /// when reallocation happens — not the allocator on every append.
+    pub fn reserve_rows(&mut self, rows: usize) {
+        debug_assert_eq!(self.ndim(), 2);
+        let need = rows * self.shape[1];
+        self.data.reserve_exact(need.saturating_sub(self.data.len()));
+    }
+
     /// Copy rows [r0, r1) of a 2-D tensor into a new (r1-r0, cols) tensor.
     pub fn rows(&self, r0: usize, r1: usize) -> Tensor {
         debug_assert_eq!(self.ndim(), 2);
@@ -186,6 +206,17 @@ mod tests {
     #[should_panic]
     fn from_vec_shape_mismatch() {
         Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn append_rows_grows_in_place_within_capacity() {
+        let mut t = Tensor::from_vec(&[1, 3], vec![1., 2., 3.]);
+        t.reserve_rows(3);
+        let cap = t.data.capacity();
+        t.append_rows(&[4., 5., 6., 7., 8., 9.]);
+        assert_eq!(t.shape(), &[3, 3]);
+        assert_eq!(t.row(2), &[7., 8., 9.]);
+        assert_eq!(t.data.capacity(), cap, "append within reserve must not reallocate");
     }
 
     #[test]

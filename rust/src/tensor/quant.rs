@@ -37,6 +37,23 @@ impl QuantBlock {
     pub fn dequantize(&self) -> Vec<f32> {
         self.data.iter().map(|&q| q as f32 * self.scale).collect()
     }
+
+    /// Re-quantize this block in place from fresh f32 data, reusing the
+    /// int8 payload's allocation (the KV-cache tail-block requantize and
+    /// per-step Q staging paths — allocation-free once the payload has
+    /// reached its high-water size). Produces byte-identical payload and
+    /// scale to [`QuantBlock::quantize`] of the same data.
+    pub fn requantize(&mut self, block: &[f32], rows: usize, d: usize) {
+        debug_assert_eq!(block.len(), rows * d);
+        let absmax = block.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let scale = if absmax == 0.0 { 1.0 / 127.0 } else { absmax / 127.0 };
+        let inv = 1.0 / scale;
+        self.data.clear();
+        self.data.extend(block.iter().map(|&x| (x * inv).round().clamp(-127.0, 127.0) as i8));
+        self.rows = rows;
+        self.d = d;
+        self.scale = scale;
+    }
 }
 
 /// Per-channel mean of a (n, d) tensor across rows — the K-smoothing vector.
@@ -74,15 +91,52 @@ pub fn quantize_blocks(x: &Tensor, block_rows: usize) -> Vec<QuantBlock> {
     out
 }
 
+/// Re-quantize `x` into `out` blockwise, reusing `out`'s blocks (and
+/// their int8 payload allocations) where they exist — value-identical to
+/// `*out = quantize_blocks(x, block_rows)` without the per-call
+/// allocations once `out` has reached its high-water block count. The
+/// per-call Q staging of the attention decode path.
+pub fn quantize_blocks_into(x: &Tensor, block_rows: usize, out: &mut Vec<QuantBlock>) {
+    assert_eq!(x.ndim(), 2);
+    let (n, d) = (x.dim(0), x.dim(1));
+    let nb = n.div_ceil(block_rows);
+    out.truncate(nb);
+    for (b, blk) in out.iter_mut().enumerate() {
+        let r0 = b * block_rows;
+        let r1 = (r0 + block_rows).min(n);
+        blk.requantize(&x.data()[r0 * d..r1 * d], r1 - r0, d);
+    }
+    for b in out.len()..nb {
+        let r0 = b * block_rows;
+        let r1 = (r0 + block_rows).min(n);
+        out.push(QuantBlock::quantize(&x.data()[r0 * d..r1 * d], r1 - r0, d));
+    }
+}
+
 /// Dequantized QKᵀ for a pair of quantized blocks:
 /// S[i][j] = (Σ_p q[i][p]·k[j][p]) · δ_Q·δ_K · scale_extra.
 pub fn qk_dequant(q: &QuantBlock, k: &QuantBlock, scale_extra: f32, out: &mut [f32]) {
+    let mut acc = Vec::new();
+    qk_dequant_scratch(q, k, scale_extra, out, &mut acc);
+}
+
+/// [`qk_dequant`] with a caller-provided i32 accumulator (a
+/// [`crate::util::threadpool::Workspace`] buffer on the hot path), so the
+/// INT8 score path allocates nothing per visited block.
+pub fn qk_dequant_scratch(
+    q: &QuantBlock,
+    k: &QuantBlock,
+    scale_extra: f32,
+    out: &mut [f32],
+    acc: &mut Vec<i32>,
+) {
     debug_assert_eq!(q.d, k.d);
     debug_assert_eq!(out.len(), q.rows * k.rows);
-    let mut acc = vec![0i32; q.rows * k.rows];
-    super::matmul::matmul_nt_i8(&q.data, &k.data, &mut acc, q.rows, k.rows, q.d);
+    acc.clear();
+    acc.resize(q.rows * k.rows, 0);
+    super::matmul::matmul_nt_i8(&q.data, &k.data, acc, q.rows, k.rows, q.d);
     let s = q.scale * k.scale * scale_extra;
-    for (o, &a) in out.iter_mut().zip(&acc) {
+    for (o, &a) in out.iter_mut().zip(acc.iter()) {
         *o = a as f32 * s;
     }
 }
@@ -132,6 +186,44 @@ mod tests {
         qk_dequant(&qq, &qk, 1.0, &mut approx);
         let err = rel_l1(&approx, exact.data());
         assert!(err < 0.02, "int8 rel-L1 {err}");
+    }
+
+    #[test]
+    fn requantize_reuses_payload_and_matches_fresh_quantize() {
+        Cases::standard(302).check(|rng| {
+            let rows = rng.range(1, 33);
+            let d = rng.range(1, 65);
+            let warm: Vec<f32> = rng.gauss_vec(rows * d);
+            let x: Vec<f32> = rng.gauss_vec(rows * d);
+            let mut qb = QuantBlock::quantize(&warm, rows, d);
+            let cap = qb.data.capacity();
+            qb.requantize(&x, rows, d);
+            let fresh = QuantBlock::quantize(&x, rows, d);
+            if qb.data != fresh.data || qb.scale != fresh.scale || qb.rows != fresh.rows {
+                return Err("in-place requantize diverged from fresh quantize".into());
+            }
+            if qb.data.capacity() != cap {
+                return Err("same-size requantize must reuse the payload allocation".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantize_blocks_into_matches_fresh() {
+        let mut rng = Pcg::seeded(15);
+        let a = Tensor::randn(&[50, 8], &mut rng);
+        let b = Tensor::randn(&[70, 8], &mut rng);
+        let mut staged = Vec::new();
+        quantize_blocks_into(&a, 16, &mut staged); // warm with a different shape
+        quantize_blocks_into(&b, 16, &mut staged);
+        let fresh = quantize_blocks(&b, 16);
+        assert_eq!(staged.len(), fresh.len());
+        for (s, f) in staged.iter().zip(&fresh) {
+            assert_eq!(s.data, f.data);
+            assert_eq!(s.scale, f.scale);
+            assert_eq!((s.rows, s.d), (f.rows, f.d));
+        }
     }
 
     #[test]

@@ -1,0 +1,78 @@
+//! Counting global allocator for allocation-regression tests and
+//! allocations-per-token bench columns.
+//!
+//! [`CountingAlloc`] wraps the system allocator and counts every
+//! `alloc`/`realloc` twice: into a process-global counter and into a
+//! per-thread counter. The hot-path contract this instruments: a
+//! warmed-up λ-off f32 decode step performs **zero** heap allocations
+//! (worker/session [`crate::util::threadpool::Workspace`] arenas and the
+//! session's cached span plan absorb all scratch).
+//!
+//! Usage — a binary (test or bench) opts in at its root:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: sparge::util::alloc::CountingAlloc = sparge::util::alloc::CountingAlloc;
+//! ```
+//!
+//! then brackets a region with [`thread_allocations`] (immune to
+//! allocations from other threads — the right probe for `Exec::Inline`
+//! hot paths) or [`global_allocations`] (covers pool workers too; other
+//! live threads can inject noise, so assert on the minimum over a few
+//! rounds or keep the process quiet).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static GLOBAL_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System allocator with global + per-thread allocation counting.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    #[inline]
+    fn count() {
+        GLOBAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        // try_with: TLS may be unavailable during thread teardown; those
+        // allocations still land in the global counter.
+        let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        CountingAlloc::count();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        CountingAlloc::count();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        CountingAlloc::count();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Allocations (alloc + alloc_zeroed + realloc) since process start,
+/// across all threads. 0 when [`CountingAlloc`] is not installed.
+pub fn global_allocations() -> u64 {
+    GLOBAL_ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Allocations performed by the *calling thread* since it started. 0 when
+/// [`CountingAlloc`] is not installed.
+pub fn thread_allocations() -> u64 {
+    THREAD_ALLOCS.with(|c| c.get())
+}

@@ -3,6 +3,7 @@
 //! pool, statistics, ASCII tables, timing, logging, and a property-test
 //! driver.
 
+pub mod alloc;
 pub mod cli;
 pub mod json;
 pub mod log;

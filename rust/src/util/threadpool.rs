@@ -1,4 +1,6 @@
-//! Fixed-size thread pool + scoped parallel-for (tokio/rayon substitute).
+//! Fixed-size thread pool + scoped parallel-for (tokio/rayon substitute),
+//! plus the per-worker [`Workspace`] scratch arena the attention hot path
+//! runs in.
 //!
 //! Three executors live here:
 //! - [`ThreadPool`]: fire-and-forget `'static` jobs (the coordinator's
@@ -7,13 +9,69 @@
 //!   spawn threads per call (`std::thread::scope`);
 //! - [`WorkerPool`]: a *persistent* pool for scoped data-parallel jobs —
 //!   workers are spawned once (e.g. by an `AttnEngine` at build time) and
-//!   reused across calls, so the hot decode/prefill path pays no per-call
+//!   reused, so the hot decode/prefill path pays no per-call
 //!   thread-spawn cost.
+//!
+//! ## Workspaces
+//!
+//! Every [`WorkerPool`] worker owns one [`Workspace`] for its whole
+//! lifetime and passes it to each job index it runs, so scratch buffers
+//! (attention tile state, score blocks, quantization staging) are
+//! allocated once per worker, grow to their high-water mark, and are then
+//! reused forever — a warmed-up decode step allocates nothing. Callers
+//! that run work inline supply their own workspace (a session owns one);
+//! the `*_ws` entry points thread it through, and the legacy entry points
+//! wrap them with a throwaway workspace.
+//!
+//! ## Scheduling
+//!
+//! [`WorkerPool::run_ws`] distributes indices by **chunked
+//! self-scheduling**: idle workers (and the submitting thread itself,
+//! which joins as an extra worker instead of blocking) repeatedly claim
+//! the next chunk of indices under the pool lock, with the chunk sized to
+//! the remaining work (guided self-scheduling) so the tail of a job is
+//! handed out in single indices and one slow item cannot strand a batch
+//! behind a static partition. Which thread runs which index is
+//! nondeterministic; *results are not* — callers collect per-index
+//! results and merge in index order, so outputs are identical for every
+//! pool size (scheduling order may vary, merge order may not).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+
+/// Per-thread scratch arena for the attention hot path: reusable buffers
+/// that grow to their high-water mark and are never shrunk, so a
+/// warmed-up hot loop performs zero heap allocations.
+///
+/// Ownership discipline: one `Workspace` per thread of execution — each
+/// [`WorkerPool`] worker owns one for its lifetime, each `AttnSession`
+/// owns one for inline work, and scoped-thread helpers create one per
+/// spawned thread. Buffers carry no semantic state between uses: every
+/// consumer truncates/overwrites the region it reads (bitwise-neutral
+/// reuse — the same float evaluation order as freshly-zeroed buffers).
+#[derive(Default)]
+pub struct Workspace {
+    /// FlashTile running row maxima `m` (tile rows).
+    pub tile_m: Vec<f32>,
+    /// FlashTile partition sums `l` (tile rows).
+    pub tile_l: Vec<f32>,
+    /// FlashTile per-block local maxima scratch (tile rows).
+    pub tile_m_local: Vec<f32>,
+    /// FlashTile unnormalized output `O` (tile rows × d).
+    pub tile_o: Vec<f32>,
+    /// FlashTile P̃ scratch (tile rows × b_k).
+    pub tile_p: Vec<f32>,
+    /// Score-block staging (tile rows × b_k).
+    pub scores: Vec<f32>,
+    /// Quantization staging: smoothed f32 rows before requantization
+    /// (the session's tail-block requantize path).
+    pub quant_f32: Vec<f32>,
+    /// Quantization staging: i32 QKᵀ accumulator for the INT8 score path
+    /// (threaded to kernels as `ScoreScratch`).
+    pub quant_i32: Vec<i32>,
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -97,7 +155,9 @@ impl Drop for ThreadPool {
 /// submitting call blocks until every index has been processed, so the
 /// borrow outlives all worker accesses. Unlike [`parallel_map`], workers
 /// are spawned once and reused — an attention engine creates the pool at
-/// build time and every subsequent prefill/decode call is spawn-free.
+/// build time and every subsequent prefill/decode call is spawn-free —
+/// and each worker carries a persistent [`Workspace`], so hot-path calls
+/// are allocation-free too once the buffers reach their high-water mark.
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
     workers: Vec<thread::JoinHandle<()>>,
@@ -105,6 +165,8 @@ pub struct WorkerPool {
 
 struct PoolShared {
     state: Mutex<PoolState>,
+    /// Worker count (for chunk sizing; never affects results).
+    size: usize,
     /// Workers wait here for a new job (or shutdown).
     work: Condvar,
     /// Submitters wait here for job completion (and for the job slot).
@@ -140,16 +202,27 @@ struct PoolState {
 }
 
 /// Lifetime-erased pointer to the submitter's closure. Sound because
-/// [`WorkerPool::run`] does not return until `finished == n`, after which
-/// no worker can dereference the pointer again (index claims fail once
-/// `next >= n`, and a new job can only be installed by a new `run`).
+/// [`WorkerPool::run_ws`] does not return until `finished == n`, after
+/// which no worker can dereference the pointer again (chunk claims fail
+/// once `next >= n`, claims happen under the state lock together with the
+/// job lookup, and a new job can only be installed by a new submitter
+/// after the slot is cleared).
 #[derive(Clone, Copy)]
 struct JobPtr {
-    f: *const (dyn Fn(usize) + Sync),
+    f: *const (dyn Fn(usize, &mut Workspace) + Sync),
     n: usize,
 }
 
 unsafe impl Send for JobPtr {}
+
+/// Chunk size for guided self-scheduling: proportional to the work left
+/// per participant, so early claims are large (few lock round-trips) and
+/// the tail is handed out in single indices (no straggler holds more than
+/// one item's worth of unstarted work). Purely a scheduling choice —
+/// results are collected per index, so outputs never depend on it.
+fn claim_chunk(remaining: usize, participants: usize) -> usize {
+    (remaining / (2 * participants.max(1))).clamp(1, 64)
+}
 
 impl WorkerPool {
     /// Spawn a pool of `n` persistent workers behind an `Arc`, for
@@ -157,7 +230,7 @@ impl WorkerPool {
     /// sparge, serving + probes) can time-share one set of workers via
     /// `AttnEngineBuilder::shared_pool` instead of each spawning their
     /// own. Concurrent submitters serialize on the single job slot (see
-    /// [`WorkerPool::run`]), so sharing is safe — just queued.
+    /// [`WorkerPool::run_ws`]), so sharing is safe — just queued.
     pub fn shared(n: usize) -> Arc<WorkerPool> {
         Arc::new(WorkerPool::new(n))
     }
@@ -167,6 +240,7 @@ impl WorkerPool {
         let n = n.max(1);
         let shared = Arc::new(PoolShared {
             state: Mutex::new(PoolState::default()),
+            size: n,
             work: Condvar::new(),
             done: Condvar::new(),
         });
@@ -187,17 +261,35 @@ impl WorkerPool {
     }
 
     /// Run `f(0..n)` across the pool, blocking until every index has been
-    /// processed. Concurrent `run` calls from other threads serialize:
-    /// later jobs wait for the slot. Which worker runs which index is
-    /// nondeterministic; callers that need determinism collect per-index
-    /// results (see [`WorkerPool::map`]).
+    /// processed. See [`WorkerPool::run_ws`]; the closure gets a
+    /// throwaway workspace reference it can ignore.
     pub fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        let mut ws = Workspace::default();
+        self.run_ws(n, &mut ws, &|i, _ws| f(i));
+    }
+
+    /// Run `f(0..n)` across the pool, blocking until every index has been
+    /// processed. Each pool worker passes its own persistent
+    /// [`Workspace`]; the submitting thread **participates** — it claims
+    /// chunks alongside the workers using `ws` instead of sleeping — so a
+    /// job is never slower than running it inline, and one slow index
+    /// cannot straggle behind an idle submitter. Concurrent `run_ws`
+    /// calls from other threads serialize: later jobs wait for the slot.
+    /// Which thread runs which index is nondeterministic; callers that
+    /// need determinism collect per-index results (see
+    /// [`WorkerPool::map_ws`]). `n <= 1` runs inline on the caller.
+    pub fn run_ws(&self, n: usize, ws: &mut Workspace, f: &(dyn Fn(usize, &mut Workspace) + Sync)) {
         if n == 0 {
             return;
         }
-        // Erase the borrow lifetime; `run` does not return until all
+        if n == 1 {
+            // decode-shaped fast path: no locking, caller workspace
+            f(0, ws);
+            return;
+        }
+        // Erase the borrow lifetime; `run_ws` does not return until all
         // workers are done with the pointer (see [`JobPtr`]).
-        let ptr: *const (dyn Fn(usize) + Sync + '_) = f;
+        let ptr: *const (dyn Fn(usize, &mut Workspace) + Sync + '_) = f;
         #[allow(clippy::missing_transmute_annotations)]
         let job = JobPtr { f: unsafe { std::mem::transmute(ptr) }, n };
         let mut st = self.shared.state.lock().unwrap();
@@ -211,6 +303,37 @@ impl WorkerPool {
         st.finished = 0;
         st.panicked = false;
         self.shared.work.notify_all();
+        // Participate: claim chunks like a worker until the job's indices
+        // are exhausted (or the job completed under our feet).
+        loop {
+            if st.completed >= epoch || st.epoch != epoch || st.job.is_none() || st.next >= n {
+                break;
+            }
+            let i0 = st.next;
+            let i1 = (i0 + claim_chunk(n - i0, self.shared.size + 1)).min(n);
+            st.next = i1;
+            drop(st);
+            let mut bad = false;
+            for i in i0..i1 {
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, ws))).is_err() {
+                    bad = true;
+                }
+            }
+            st = self.shared.state.lock().unwrap();
+            if bad {
+                st.panicked = true;
+            }
+            st.finished += i1 - i0;
+            if st.finished == n {
+                if st.panicked {
+                    st.panicked_epochs.push(epoch);
+                    st.panicked = false;
+                }
+                st.completed = epoch;
+                st.job = None;
+                self.shared.done.notify_all();
+            }
+        }
         while st.completed < epoch {
             st = self.shared.done.wait(st).unwrap();
         }
@@ -230,20 +353,34 @@ impl WorkerPool {
 
     /// Deterministic scoped map over the pool: results are collected per
     /// index, so the output (and any caller-side merge in index order) is
-    /// identical for every pool size. `n <= 1` runs inline on the caller —
-    /// the decode-shaped fast path never crosses a thread.
+    /// identical for every pool size and scheduling order. The closure
+    /// gets a throwaway workspace reference it can ignore.
     pub fn map<T: Send>(&self, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+        let mut ws = Workspace::default();
+        self.map_ws(n, &mut ws, |i, _ws| f(i))
+    }
+
+    /// [`WorkerPool::map`] with workspace plumbing: pool workers pass
+    /// their persistent [`Workspace`], the participating submitter passes
+    /// `ws`. `n <= 1` runs inline on the caller — the decode-shaped fast
+    /// path never crosses a thread.
+    pub fn map_ws<T: Send>(
+        &self,
+        n: usize,
+        ws: &mut Workspace,
+        f: impl Fn(usize, &mut Workspace) -> T + Sync,
+    ) -> Vec<T> {
         if n == 0 {
             return Vec::new();
         }
         if n == 1 {
-            return vec![f(0)];
+            return vec![f(0, ws)];
         }
         let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        let fill = |i: usize| {
-            *slots[i].lock().unwrap() = Some(f(i));
+        let fill = |i: usize, ws: &mut Workspace| {
+            *slots[i].lock().unwrap() = Some(f(i, ws));
         };
-        self.run(n, &fill);
+        self.run_ws(n, ws, &fill);
         slots.into_iter().map(|s| s.into_inner().unwrap().expect("pool filled slot")).collect()
     }
 }
@@ -259,33 +396,44 @@ impl Drop for WorkerPool {
 }
 
 fn worker_loop(shared: &PoolShared) {
+    // The worker's scratch arena, alive for the pool's lifetime: sized by
+    // the largest job it has run, then reused allocation-free.
+    let mut ws = Workspace::default();
+    let mut st = shared.state.lock().unwrap();
     loop {
-        // Claim an index (or sleep until there is work).
-        let (job, i) = {
-            let mut st = shared.state.lock().unwrap();
-            loop {
-                if st.shutdown {
-                    return;
-                }
-                if let Some(job) = st.job {
-                    if st.next < job.n {
-                        let i = st.next;
-                        st.next += 1;
-                        break (job, i);
-                    }
-                }
+        if st.shutdown {
+            return;
+        }
+        // Claim a chunk of indices (or sleep until there is work). The
+        // claim happens under the same lock as the job lookup, so a claim
+        // can never land on a later job's index range.
+        let (job, i0, i1) = match st.job {
+            Some(job) if st.next < job.n => {
+                let i0 = st.next;
+                let i1 = (i0 + claim_chunk(job.n - i0, shared.size + 1)).min(job.n);
+                st.next = i1;
+                (job, i0, i1)
+            }
+            _ => {
                 st = shared.work.wait(st).unwrap();
+                continue;
             }
         };
-        // Run outside the lock; catch panics so a failing job reports to
-        // the submitter instead of wedging `finished` below `n` forever.
+        drop(st);
+        // Run outside the lock; catch panics so a failing index reports
+        // to the submitter instead of wedging `finished` below `n`.
         let func = unsafe { &*job.f };
-        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| func(i))).is_ok();
-        let mut st = shared.state.lock().unwrap();
-        if !ok {
+        let mut bad = false;
+        for i in i0..i1 {
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| func(i, &mut ws))).is_err() {
+                bad = true;
+            }
+        }
+        st = shared.state.lock().unwrap();
+        if bad {
             st.panicked = true;
         }
-        st.finished += 1;
+        st.finished += i1 - i0;
         if st.finished == job.n {
             if st.panicked {
                 st.panicked_epochs.push(st.epoch);
@@ -302,26 +450,41 @@ fn worker_loop(shared: &PoolShared) {
 /// `threads` OS threads and returns results in index order. Uses
 /// `std::thread::scope`, so `f` may borrow from the caller.
 pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, threads: usize, f: F) -> Vec<T> {
+    parallel_map_ws(n, threads, |i, _ws| f(i))
+}
+
+/// [`parallel_map`] with workspace plumbing: each spawned thread creates
+/// its own [`Workspace`] (scoped threads cannot persist scratch across
+/// calls — prefer a [`WorkerPool`] on hot paths).
+pub fn parallel_map_ws<T: Send, F: Fn(usize, &mut Workspace) -> T + Sync>(
+    n: usize,
+    threads: usize,
+    f: F,
+) -> Vec<T> {
     let threads = threads.clamp(1, n.max(1));
     if n == 0 {
         return Vec::new();
     }
     if threads == 1 {
-        return (0..n).map(f).collect();
+        let mut ws = Workspace::default();
+        return (0..n).map(|i| f(i, &mut ws)).collect();
     }
     let next = AtomicUsize::new(0);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let slots = Mutex::new(&mut out);
     thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::SeqCst);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                let mut ws = Workspace::default();
+                loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(i, &mut ws);
+                    let mut guard = slots.lock().unwrap();
+                    guard[i] = Some(v);
                 }
-                let v = f(i);
-                let mut guard = slots.lock().unwrap();
-                guard[i] = Some(v);
             });
         }
     });
@@ -330,25 +493,35 @@ pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, threads: usize,
 
 /// Scoped parallel-for without result collection.
 pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
+    parallel_for_ws(n, threads, |i, _ws| f(i));
+}
+
+/// [`parallel_for`] with workspace plumbing (one fresh [`Workspace`] per
+/// spawned thread).
+pub fn parallel_for_ws<F: Fn(usize, &mut Workspace) + Sync>(n: usize, threads: usize, f: F) {
     let threads = threads.clamp(1, n.max(1));
     if n == 0 {
         return;
     }
     if threads == 1 {
+        let mut ws = Workspace::default();
         for i in 0..n {
-            f(i);
+            f(i, &mut ws);
         }
         return;
     }
     let next = AtomicUsize::new(0);
     thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::SeqCst);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                let mut ws = Workspace::default();
+                loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= n {
+                        break;
+                    }
+                    f(i, &mut ws);
                 }
-                f(i);
             });
         }
     });
@@ -363,6 +536,7 @@ pub fn default_threads() -> usize {
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
 
     #[test]
     fn pool_runs_all_jobs() {
@@ -422,6 +596,20 @@ mod tests {
     }
 
     #[test]
+    fn claim_chunk_covers_range_and_shrinks_to_tail() {
+        assert_eq!(claim_chunk(1, 4), 1);
+        assert_eq!(claim_chunk(7, 4), 1);
+        assert!(claim_chunk(1000, 4) > 1);
+        assert!(claim_chunk(1_000_000, 1) <= 64, "chunks are bounded");
+        // walking a range with guided chunks terminates and covers it
+        let (mut next, n) = (0usize, 997);
+        while next < n {
+            next += claim_chunk(n - next, 5);
+        }
+        assert_eq!(next.min(n), n);
+    }
+
+    #[test]
     fn worker_pool_map_ordered_and_borrowing() {
         let pool = WorkerPool::new(4);
         let data: Vec<u64> = (0..100).collect();
@@ -457,6 +645,70 @@ mod tests {
         assert!(pool.map(0, |i| i).is_empty());
         assert_eq!(pool.map(1, |i| i + 1), vec![1]);
         drop(pool); // must join cleanly
+    }
+
+    #[test]
+    fn worker_pool_workspaces_persist_across_jobs() {
+        // A Workspace handed to a job must be a persistent arena, not a
+        // fresh one per index: warm whatever arenas round 1 touches,
+        // then require round 2 to observe retained capacity. (Which
+        // participant claims which index is timing-dependent, but the
+        // submitting thread always claims the first chunk — it installs
+        // the job and claims under one lock hold — so at least its
+        // caller-owned arena is deterministically warm.)
+        let pool = WorkerPool::new(1);
+        let mut ws = Workspace::default();
+        pool.run_ws(4, &mut ws, &|_i, ws| {
+            if ws.scores.capacity() < 4096 {
+                ws.scores.reserve_exact(4096 - ws.scores.len());
+            }
+        });
+        let warm_hits = AtomicUsize::new(0);
+        pool.run_ws(4, &mut ws, &|_i, ws| {
+            if ws.scores.capacity() >= 4096 {
+                warm_hits.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(warm_hits.load(Ordering::SeqCst) > 0, "no index saw a persistent arena");
+        assert!(ws.scores.capacity() >= 4096, "the caller's arena must persist across jobs");
+    }
+
+    #[test]
+    fn chunked_scheduling_is_deterministic_under_worker_skew() {
+        // The determinism contract: shuffled per-index delays (simulating
+        // slow workers / ragged items) must never change map results —
+        // scheduling order may vary, merge order may not.
+        let pool = WorkerPool::new(4);
+        let want: Vec<u64> = (0..37u64).map(|i| i * 3 + 1).collect();
+        for round in 0..8u64 {
+            let out = pool.map(37, |i| {
+                if (i as u64 * 7 + round) % 5 == 0 {
+                    thread::sleep(Duration::from_micros(200));
+                }
+                i as u64 * 3 + 1
+            });
+            assert_eq!(out, want, "round {round}");
+        }
+    }
+
+    #[test]
+    fn submitter_participates_in_its_own_job() {
+        // With a pool of 1 whose worker is held busy by the first index,
+        // the remaining indices can only finish promptly if the submitter
+        // claims chunks too. All indices must complete either way; at
+        // least one must run on the submitting thread.
+        let pool = WorkerPool::new(1);
+        let submitter = thread::current().id();
+        let on_submitter = AtomicUsize::new(0);
+        pool.run(8, &|i| {
+            if i == 0 {
+                thread::sleep(Duration::from_millis(20));
+            }
+            if thread::current().id() == submitter {
+                on_submitter.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(on_submitter.load(Ordering::SeqCst) > 0, "submitter never claimed a chunk");
     }
 
     #[test]

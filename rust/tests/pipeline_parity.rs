@@ -77,6 +77,7 @@ fn reference_flash_stats(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -
                 None,
                 cfg.cw,
                 &mut stats,
+                true, // pre-refactor loops always took the zero-skip branch
             );
             k0 = k1;
         }
@@ -122,7 +123,7 @@ fn reference_sparse_f32(
             }
             score_block(q, k, q0, q1, k0, k1, 0, scale, cfg.causal, &mut sbuf);
             let vb = &v.data()[k0 * dv..k1 * dv];
-            tile.ingest(&sbuf[..(q1 - q0) * (k1 - k0)], k1 - k0, vb, lambda, cfg.cw, &mut stats);
+            tile.ingest(&sbuf[..(q1 - q0) * (k1 - k0)], k1 - k0, vb, lambda, cfg.cw, &mut stats, true);
         }
         out.data_mut()[q0 * dv..q1 * dv].copy_from_slice(&tile.finalize());
     }
@@ -182,7 +183,7 @@ fn reference_sparse_quant(
                     }
                 }
             }
-            tile.ingest(sb, kblk.rows, &v.data()[k0 * dv..k1 * dv], lambda, cfg.cw, &mut stats);
+            tile.ingest(sb, kblk.rows, &v.data()[k0 * dv..k1 * dv], lambda, cfg.cw, &mut stats, true);
         }
         out.data_mut()[q0 * dv..q1 * dv].copy_from_slice(&tile.finalize());
     }

@@ -1,0 +1,166 @@
+//! Workspace-reuse and scheduling-determinism golden suite.
+//!
+//! Two contracts from the allocation-free hot-path refactor:
+//!
+//! 1. **Bitwise-neutral scratch reuse.** Sessions and pool workers run
+//!    over recycled `Workspace` arenas and cached `SpanPlan`s instead of
+//!    fresh allocations. Reuse must never change a bit: every
+//!    composition (f32/INT8 × dense/predicted × Inline/Threads/Pool ×
+//!    pool sizes 1/2/8 × split-KV off/on) must produce identical decode
+//!    rows and stats to the inline fresh-state baseline — and a *second*
+//!    stream over the same warmed engine (dirty worker arenas, dirty
+//!    session-free pools) must reproduce the first run exactly.
+//!
+//! 2. **Chunked self-scheduling determinism.** The pool hands out
+//!    indices in timing-dependent chunks and the submitter participates;
+//!    with artificially skewed per-block compute (pseudorandom stalls —
+//!    "shuffled worker speeds"), outputs and stats must not move:
+//!    scheduling order may vary, merge order may not.
+
+use std::time::Duration;
+
+use sparge::attention::{
+    run_tiled, run_tiled_splitkv, AttnConfig, AttnEngine, DenseFilter, Exec, Execution, F32Kernel,
+    KvSplit, Precision, ScoreKernel, ScoreScratch, SkipStats, SparsityPolicy,
+};
+use sparge::sparge::SpargeParams;
+use sparge::tensor::Tensor;
+use sparge::util::rng::Pcg;
+use sparge::util::threadpool::WorkerPool;
+
+fn qkv(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+    let mut rng = Pcg::seeded(seed);
+    (Tensor::randn(&[n, d], &mut rng), Tensor::randn(&[n, d], &mut rng), Tensor::randn(&[n, d], &mut rng))
+}
+
+/// Prefill rows [0, n0) in one shot, then decode the rest through
+/// `decode_into`; returns every decode row (concatenated) plus per-step
+/// stats.
+fn run_stream(
+    engine: &AttnEngine,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    n0: usize,
+) -> (Vec<f32>, Vec<SkipStats>) {
+    let n = q.dim(0);
+    let dv = v.dim(1);
+    let mut session = engine.session();
+    session.prefill(&q.rows(0, n0), &k.rows(0, n0), &v.rows(0, n0));
+    let mut rows = vec![0f32; (n - n0) * dv];
+    let mut stats = Vec::new();
+    for t in n0..n {
+        let (st, _mask) = session.decode_into(
+            &q.rows(t, t + 1),
+            &k.rows(t, t + 1),
+            &v.rows(t, t + 1),
+            &mut rows[(t - n0) * dv..(t - n0 + 1) * dv],
+        );
+        stats.push(st);
+    }
+    (rows, stats)
+}
+
+#[test]
+fn workspace_reuse_parity_across_all_compositions() {
+    let (n, d, n0) = (64, 8, 32);
+    let (q, k, v) = qkv(n, d, 9001);
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: Some(-6.0), quant: false };
+
+    for precision in [Precision::F32, Precision::Int8] {
+        for predicted in [false, true] {
+            for split in [KvSplit::Off, KvSplit::Auto] {
+                let build = |exec: Execution| {
+                    let mut b = AttnEngine::builder().config(cfg).execution(exec).kv_split(split);
+                    if predicted {
+                        b = b.sparge(&params).precision(precision);
+                    } else {
+                        b = b.precision(precision).policy(SparsityPolicy::Dense);
+                    }
+                    b.build()
+                };
+                let label = format!("{precision:?}/predicted={predicted}/{split:?}");
+                let baseline = run_stream(&build(Execution::Inline), &q, &k, &v, n0);
+                for exec in [
+                    Execution::Threads(3),
+                    Execution::Pool(1),
+                    Execution::Pool(2),
+                    Execution::Pool(8),
+                ] {
+                    let engine = build(exec);
+                    let first = run_stream(&engine, &q, &k, &v, n0);
+                    assert_eq!(first.0, baseline.0, "{label} {exec:?}: rows diverged from inline");
+                    assert_eq!(first.1, baseline.1, "{label} {exec:?}: stats diverged from inline");
+                    // second stream over the warmed engine: dirty worker
+                    // arenas must be bitwise-invisible
+                    let second = run_stream(&engine, &q, &k, &v, n0);
+                    assert_eq!(second.0, first.0, "{label} {exec:?}: warmed rerun diverged");
+                    assert_eq!(second.1, first.1, "{label} {exec:?}: warmed rerun stats diverged");
+                }
+            }
+        }
+    }
+}
+
+/// An f32 kernel with pseudorandom per-block stalls — simulates workers
+/// of wildly different speeds without touching any value.
+struct SkewedKernel<'a> {
+    inner: F32Kernel<'a>,
+    seed: u64,
+}
+
+impl ScoreKernel for SkewedKernel<'_> {
+    fn score_block(
+        &self,
+        q0: usize,
+        q1: usize,
+        k0: usize,
+        k1: usize,
+        out: &mut [f32],
+        scratch: &mut ScoreScratch<'_>,
+    ) {
+        let h = (q0 as u64 + 1)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((k0 as u64) << 7)
+            .wrapping_add(self.seed);
+        if h % 3 == 0 {
+            std::thread::sleep(Duration::from_micros(h % 300));
+        }
+        self.inner.score_block(q0, q1, k0, k1, out, scratch);
+    }
+}
+
+#[test]
+fn skewed_worker_speeds_never_change_results() {
+    let (n, d) = (96, 8);
+    let (qt, kt, vt) = qkv(n, d, 9002);
+    let q1 = qt.rows(0, 1);
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: false, scale: None, cw: 2, row_offset: 0 };
+    let pool2 = WorkerPool::new(2);
+    let pool8 = WorkerPool::new(8);
+    for round in 0..4u64 {
+        // decode shape through the split driver: (row, span) items of
+        // very different cost
+        let kernel = SkewedKernel { inner: F32Kernel::new(&q1, &kt, &cfg), seed: round };
+        let (base, st_base) =
+            run_tiled_splitkv(&q1, &kt, &vt, &cfg, &kernel, &DenseFilter, Exec::Inline, 1);
+        for (exec, name) in
+            [(Exec::Threads(4), "threads"), (Exec::Pool(&pool2), "pool2"), (Exec::Pool(&pool8), "pool8")]
+        {
+            let (o, s) = run_tiled_splitkv(&q1, &kt, &vt, &cfg, &kernel, &DenseFilter, exec, 1);
+            assert_eq!(o, base, "splitkv round {round} {name}: output moved with scheduling");
+            assert_eq!(s, st_base, "splitkv round {round} {name}: stats moved with scheduling");
+        }
+        // prefill shape through the row driver: ragged row costs
+        let kernel = SkewedKernel { inner: F32Kernel::new(&qt, &kt, &cfg), seed: round };
+        let (base, st_base) = run_tiled(&qt, &kt, &vt, &cfg, &kernel, &DenseFilter, Exec::Inline);
+        for (exec, name) in
+            [(Exec::Threads(4), "threads"), (Exec::Pool(&pool2), "pool2"), (Exec::Pool(&pool8), "pool8")]
+        {
+            let (o, s) = run_tiled(&qt, &kt, &vt, &cfg, &kernel, &DenseFilter, exec);
+            assert_eq!(o, base, "tiled round {round} {name}: output moved with scheduling");
+            assert_eq!(s, st_base, "tiled round {round} {name}: stats moved with scheduling");
+        }
+    }
+}
