@@ -16,7 +16,16 @@
 //! at n ≥ 4096: wall-clock speedup of `threads = cores` over
 //! `threads = 1`, with bitwise-identical outputs and SkipStats.
 //!
+//! The opening section is the **microkernel scoreboard**: direct timings
+//! of the dispatch tier (`tensor::microkernel::Backend`) on the
+//! attention tile shapes — f32 QKᵀ, the m=1 decode GEMV, the dot
+//! product, the INT8 i8×i8→i32 kernel, and the P̃·V accumulate — for
+//! every runtime-available backend, with speedup vs the portable
+//! lane-by-lane kernels.
+//!
 //! Run: `cargo bench --bench fig10_kernel_speed`
+//! Pass `-- --json` to also write a `BENCH_fig10.json` snapshot (the
+//! CI perf-trajectory artifact).
 
 use std::time::Instant;
 
@@ -25,6 +34,9 @@ use sparge::attention::{AttnEngine, Execution, KvSplit};
 use sparge::coordinator::{AttnStreamSpec, SeqStream, SessionManager};
 use sparge::experiments::{bench_reps, bench_threads, full_scale, run_method_threads, Method};
 use sparge::sparge::kernel::SpargeParams;
+use sparge::tensor::microkernel::Backend;
+use sparge::tensor::Tensor;
+use sparge::util::json::Json;
 use sparge::util::rng::Pcg;
 use sparge::util::stats::percentile_sorted;
 use sparge::util::table::{fnum, Table};
@@ -41,6 +53,26 @@ fn best_of(reps: usize, f: impl Fn() -> sparge::experiments::MethodRun) -> sparg
     best.unwrap()
 }
 
+/// Best-of-`reps` per-call seconds for a microkernel body, with the
+/// inner iteration count sized from the kernel's flop count so tiny
+/// kernels (a 128-wide dot) still fill a measurable window.
+fn time_kernel(reps: usize, flops: f64, mut f: impl FnMut()) -> f64 {
+    let target = if full_scale() { 2e8 } else { 2e7 };
+    let iters = ((target / flops) as usize).clamp(1, 4_000_000);
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(3) {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let s = t0.elapsed().as_secs_f64() / iters as f64;
+        if s < best {
+            best = s;
+        }
+    }
+    best
+}
+
 fn main() {
     let (spec, label) = if full_scale() {
         (VideoSpec { t: 28, h: 28, w: 28, d: 128, smooth: 0.96, signal: 11.0 }, "22K")
@@ -49,7 +81,78 @@ fn main() {
     };
     let reps = bench_reps();
     let threads = bench_threads();
+    let json_mode = std::env::args().any(|a| a == "--json");
     println!("Fig. 10 — kernel speed vs sparsity (seq {label}, head dim 128, reps {reps}, threads {threads})\n");
+
+    // -- microkernel scoreboard: the three flop-dominant inner loops -----
+    // Direct timings of the dispatch tier on the paper's tile shapes
+    // (b_q = 128, b_k = 64, d = 128). Every `ScoreKernel` routes its
+    // inner loops through `Backend::select()`, so the selected row of
+    // this table is the per-block cost everything above it pays.
+    println!("microkernel scoreboard — selected backend: {}", Backend::select().name());
+    let mut micro = Table::new(
+        "hot-loop kernels by backend (fixed-order kernels are bitwise across backends)",
+        &["kernel", "shape", "backend", "GOP/s", "vs portable"],
+    );
+    let mut micro_json: Vec<Json> = Vec::new();
+    {
+        let (m, n, k) = (128usize, 64usize, 128usize);
+        let mut rng = Pcg::seeded(1013);
+        let a = Tensor::randn(&[m, k], &mut rng);
+        let b = Tensor::randn(&[n, k], &mut rng);
+        let p = Tensor::randn(&[m, n], &mut rng); // P̃ tile: (m, b_k)
+        let vb = Tensor::randn(&[n, k], &mut rng); // V block: (b_k, d)
+        let ai: Vec<i8> = a.data().iter().map(|x| (x * 20.0).clamp(-127.0, 127.0) as i8).collect();
+        let bi: Vec<i8> = b.data().iter().map(|x| (x * 20.0).clamp(-127.0, 127.0) as i8).collect();
+        let mut c_nt = vec![0f32; m * n];
+        let mut c_gemv = vec![0f32; n];
+        let mut c_i8 = vec![0i32; m * n];
+        let mut c_nn = vec![0f32; m * k];
+        let mut sink = 0f32;
+        let gemm_flops = (2 * m * n * k) as f64;
+        let mut bench_kernel = |name: &str, shape: &str, flops: f64, f: &mut dyn FnMut(Backend)| {
+            let mut portable_t = f64::INFINITY;
+            for &bk in Backend::all() {
+                let t = time_kernel(reps, flops, || f(bk));
+                if bk == Backend::Portable {
+                    portable_t = t;
+                }
+                let gops = flops / t / 1e9;
+                let speedup = portable_t / t;
+                micro.row(&[
+                    name.into(),
+                    shape.into(),
+                    bk.name().into(),
+                    fnum(gops, 2),
+                    format!("{speedup:.2}x"),
+                ]);
+                micro_json.push(Json::obj(vec![
+                    ("kernel", Json::str(name)),
+                    ("backend", Json::str(bk.name())),
+                    ("gops", Json::num(gops)),
+                    ("speedup_vs_portable", Json::num(speedup)),
+                ]));
+            }
+        };
+        bench_kernel("qk_nt_f32", "(128,128)x(64,128)T", gemm_flops, &mut |bk| {
+            bk.matmul_nt_into(a.data(), b.data(), &mut c_nt, m, n, k);
+        });
+        bench_kernel("qk_gemv_f32", "(1,128)x(64,128)T", (2 * n * k) as f64, &mut |bk| {
+            bk.gemv_nt(&a.data()[..k], b.data(), &mut c_gemv, n, k);
+        });
+        bench_kernel("dot_f32", "(128,)x(128,)", (2 * k) as f64, &mut |bk| {
+            sink += bk.dot(&a.data()[..k], &b.data()[..k]);
+        });
+        bench_kernel("qk_nt_i8", "(128,128)x(64,128)T", gemm_flops, &mut |bk| {
+            bk.matmul_nt_i8(&ai, &bi, &mut c_i8, m, n, k);
+        });
+        bench_kernel("pv_nn_acc_f32", "(128,64)x(64,128)", gemm_flops, &mut |bk| {
+            bk.matmul_nn_acc(p.data(), vb.data(), &mut c_nn, m, k, n, true, false);
+        });
+        std::hint::black_box(sink);
+    }
+    micro.print();
+    println!("expected: fixed-order f32 kernels gain from explicit lanes; int8 gains most (madd)\n");
 
     let cfg = AttnConfig { bq: 128, bk: 64, causal: false, scale: None, cw: 4, row_offset: 0 };
     let mut rng = Pcg::seeded(1010);
@@ -63,33 +166,39 @@ fn main() {
         &format!("kernel speed under varying sparsity (dense FA2 line: {} GOPS cpu)", fnum(dense_tops, 1)),
         &["method", "target", "achieved sparsity", "GOPS(cpu)", "TOPS(gpu-translated)", "speedup vs dense"],
     );
+    let mut sweep_json: Vec<Json> = Vec::new();
+    let mut sweep_row = |table: &mut Table, m: &Method, target: String, r: &sparge::experiments::MethodRun| {
+        let gops = r.tops(nq, nk, d, false) * 1e3;
+        let speedup = dense.seconds / r.seconds;
+        table.row(&[
+            m.label(),
+            target.clone(),
+            fnum(r.stats.sparsity(), 3),
+            fnum(gops, 1),
+            fnum(r.gpu_tops(dense.seconds), 1),
+            format!("{speedup:.2}x"),
+        ]);
+        sweep_json.push(Json::obj(vec![
+            ("method", Json::str(&m.label())),
+            ("target", Json::str(&target)),
+            ("sparsity", Json::num(r.stats.sparsity())),
+            ("gops", Json::num(gops)),
+            ("speedup_vs_dense", Json::num(speedup)),
+        ]));
+    };
     // ours: sweep tau; both f32 (FA2) and int8 (Sage) kernels
     for &tau in &[0.99f32, 0.97, 0.95, 0.9, 0.8, 0.7] {
         for quant in [false, true] {
             let m = Method::Sparge(SpargeParams { tau, theta: 0.3, lambda: Some(-8.0), quant });
             let r = best_of(reps, || run_method_threads(&s, &cfg, &m, threads));
-            table.row(&[
-                m.label(),
-                format!("tau={tau}"),
-                fnum(r.stats.sparsity(), 3),
-                fnum(r.tops(nq, nk, d, false) * 1e3, 1),
-                fnum(r.gpu_tops(dense.seconds), 1),
-                format!("{:.2}x", dense.seconds / r.seconds),
-            ]);
+            sweep_row(&mut table, &m, format!("tau={tau}"), &r);
         }
     }
     // MInference sweep
     for &budget in &[0.7f64, 0.5, 0.3] {
         let m = Method::Minference { budget };
         let r = best_of(reps, || run_method_threads(&s, &cfg, &m, threads));
-        table.row(&[
-            m.label(),
-            format!("keep={budget}"),
-            fnum(r.stats.sparsity(), 3),
-            fnum(r.tops(nq, nk, d, false) * 1e3, 1),
-            fnum(r.gpu_tops(dense.seconds), 1),
-            format!("{:.2}x", dense.seconds / r.seconds),
-        ]);
+        sweep_row(&mut table, &m, format!("keep={budget}"), &r);
     }
     table.print();
     println!("\npaper Fig.10 shape: ours > ours+FA2 > baselines at every sparsity; all rise with sparsity");
@@ -153,10 +262,16 @@ fn main() {
         }
         steps as f64 / t0.elapsed().as_secs_f64()
     };
+    let mut dec_json: Vec<Json> = Vec::new();
     for pool in [1usize, 2, threads.max(4)] {
         let off = decode_rate(pool, KvSplit::Off);
         let on = decode_rate(pool, KvSplit::Auto);
         dec.row(&[format!("{pool}"), fnum(off, 1), fnum(on, 1), format!("{:.2}x", on / off)]);
+        dec_json.push(Json::obj(vec![
+            ("pool", Json::num(pool as f64)),
+            ("tok_s_split_off", Json::num(off)),
+            ("tok_s_split_on", Json::num(on)),
+        ]));
     }
     dec.print();
     println!("expected: the off column is flat in pool size; the on column climbs with it");
@@ -224,4 +339,20 @@ fn main() {
     }
     ragged.print();
     println!("expected: p99/p50 stays bounded as the pool grows — the long session no longer strands a tick");
+
+    if json_mode {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("fig10_kernel_speed")),
+            ("seq", Json::str(label)),
+            ("threads", Json::num(threads as f64)),
+            ("reps", Json::num(reps as f64)),
+            ("selected_backend", Json::str(Backend::select().name())),
+            ("dense_gops", Json::num(dense_tops)),
+            ("microkernels", Json::Arr(micro_json)),
+            ("sweep", Json::Arr(sweep_json)),
+            ("decode_splitkv", Json::Arr(dec_json)),
+        ]);
+        std::fs::write("BENCH_fig10.json", doc.dump() + "\n").expect("write BENCH_fig10.json");
+        println!("\nwrote BENCH_fig10.json");
+    }
 }

@@ -25,6 +25,8 @@
 //! are aimed at).
 //!
 //! Run: `cargo bench --bench table8_serving`
+//! Pass `-- --json` to also write a `BENCH_table8.json` snapshot (the
+//! CI perf-trajectory artifact).
 //! Env: `SPARGE_BENCH_THREADS` (engine pool size), `SPARGE_BENCH_FULL`
 //! (paper-scale prompts).
 
@@ -38,6 +40,7 @@ use sparge::coordinator::{
 use sparge::experiments::{bench_threads, full_scale};
 use sparge::sparge::SpargeParams;
 use sparge::util::alloc::{global_allocations, CountingAlloc};
+use sparge::util::json::Json;
 use sparge::util::stats::percentile_sorted;
 use sparge::util::table::{fnum, Table};
 
@@ -51,7 +54,7 @@ struct Run {
     wall: f64,
 }
 
-fn summarize(label: &str, r: &Run, table: &mut Table) {
+fn summarize(label: &str, r: &Run, table: &mut Table, json: &mut Vec<Json>) {
     let sorted = |v: &[f64]| {
         let mut s = v.to_vec();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -59,15 +62,26 @@ fn summarize(label: &str, r: &Run, table: &mut Table) {
     };
     let mean = |v: &[f64]| if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 };
     let (ttft, tpot) = (sorted(&r.ttft), sorted(&r.tpot));
+    let (ttft_mean, ttft_p95) = (mean(&r.ttft), percentile_sorted(&ttft, 0.95));
+    let (tpot_mean, tpot_p95) = (mean(&r.tpot), percentile_sorted(&tpot, 0.95));
     table.row(&[
         label.to_string(),
         fnum(r.tokens_per_sec, 1),
-        format!("{} ms", fnum(mean(&r.ttft) * 1e3, 1)),
-        format!("{} ms", fnum(percentile_sorted(&ttft, 0.95) * 1e3, 1)),
-        format!("{} ms", fnum(mean(&r.tpot) * 1e3, 2)),
-        format!("{} ms", fnum(percentile_sorted(&tpot, 0.95) * 1e3, 2)),
+        format!("{} ms", fnum(ttft_mean * 1e3, 1)),
+        format!("{} ms", fnum(ttft_p95 * 1e3, 1)),
+        format!("{} ms", fnum(tpot_mean * 1e3, 2)),
+        format!("{} ms", fnum(tpot_p95 * 1e3, 2)),
         format!("{} s", fnum(r.wall, 2)),
     ]);
+    json.push(Json::obj(vec![
+        ("schedule", Json::str(label)),
+        ("tok_s", Json::num(r.tokens_per_sec)),
+        ("ttft_mean_s", Json::num(ttft_mean)),
+        ("ttft_p95_s", Json::num(ttft_p95)),
+        ("tpot_mean_s", Json::num(tpot_mean)),
+        ("tpot_p95_s", Json::num(tpot_p95)),
+        ("wall_s", Json::num(r.wall)),
+    ]));
 }
 
 fn sequential_run(opts: &ServeOptions, specs: &[AttnStreamSpec]) -> Run {
@@ -185,6 +199,7 @@ fn decode_phase_run(
 
 fn main() {
     let threads = bench_threads();
+    let json_mode = std::env::args().any(|a| a == "--json");
     let scale = if full_scale() { 4 } else { 1 };
     let opts = ServeOptions {
         chunk: 128 * scale,
@@ -210,11 +225,12 @@ fn main() {
         "mixed prefill/decode traffic through one shared AttnEngine",
         &["schedule", "tok/s", "TTFT mean", "TTFT p95", "TPOT mean", "TPOT p95", "wall"],
     );
+    let mut mixed_json: Vec<Json> = Vec::new();
     let seq = sequential_run(&opts, &specs);
-    summarize("sequential (run_one)", &seq, &mut table);
+    summarize("sequential (run_one)", &seq, &mut table, &mut mixed_json);
     for max_batch in [4, 8] {
         let run = continuous_run(&opts, max_batch, &specs);
-        summarize(&format!("continuous (max_batch {max_batch})"), &run, &mut table);
+        summarize(&format!("continuous (max_batch {max_batch})"), &run, &mut table, &mut mixed_json);
     }
     table.print();
     println!(
@@ -241,6 +257,7 @@ fn main() {
     );
     let mut baseline_rate = 0.0;
     let mut baseline_sparsity: Option<Vec<(u64, f64)>> = None;
+    let mut batch_json: Vec<Json> = Vec::new();
     for pool in [1usize, 2, 4, 8] {
         let r = decode_phase_run(&opts, pool, KvSplit::Auto, &batch_specs);
         match &baseline_sparsity {
@@ -258,6 +275,13 @@ fn main() {
             format!("{} us", fnum(r.tick_p50 * 1e6, 0)),
             format!("{} us", fnum(r.tick_p99 * 1e6, 0)),
         ]);
+        batch_json.push(Json::obj(vec![
+            ("pool", Json::num(pool as f64)),
+            ("tok_s", Json::num(r.rate)),
+            ("allocs_per_token", Json::num(r.allocs_per_token)),
+            ("tick_p50_s", Json::num(r.tick_p50)),
+            ("tick_p99_s", Json::num(r.tick_p99)),
+        ]));
     }
     batch_table.print();
     println!(
@@ -280,6 +304,7 @@ fn main() {
         &["pool", "split-KV off tok/s", "split-KV on tok/s", "on/off", "allocs/token (on)"],
     );
     let mut solo_sparsity: Option<Vec<(u64, f64)>> = None;
+    let mut solo_json: Vec<Json> = Vec::new();
     for pool in [1usize, 2, 4, 8] {
         let off = decode_phase_run(&opts, pool, KvSplit::Off, &solo_spec);
         let on = decode_phase_run(&opts, pool, KvSplit::Auto, &solo_spec);
@@ -295,10 +320,29 @@ fn main() {
             format!("{:.2}x", on.rate / off.rate),
             fnum(on.allocs_per_token, 2),
         ]);
+        solo_json.push(Json::obj(vec![
+            ("pool", Json::num(pool as f64)),
+            ("tok_s_split_off", Json::num(off.rate)),
+            ("tok_s_split_on", Json::num(on.rate)),
+            ("allocs_per_token_on", Json::num(on.allocs_per_token)),
+        ]));
     }
     solo_table.print();
     println!(
         "\ndecode scaling: batched ticks scale with streams x pool; split-KV covers the lone-stream \
          tail. Sparsity metrics are asserted identical across schedules, pool sizes, and drivers."
     );
+
+    if json_mode {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("table8_serving")),
+            ("threads", Json::num(threads as f64)),
+            ("scale", Json::num(scale as f64)),
+            ("mixed_traffic", Json::Arr(mixed_json)),
+            ("decode_phase", Json::Arr(batch_json)),
+            ("solo_splitkv", Json::Arr(solo_json)),
+        ]);
+        std::fs::write("BENCH_table8.json", doc.dump() + "\n").expect("write BENCH_table8.json");
+        println!("\nwrote BENCH_table8.json");
+    }
 }

@@ -109,7 +109,10 @@
 use std::sync::Arc;
 
 use crate::sparge::kernel::{quant_score_block, QuantScoreKernel, SpargeParams};
-use crate::sparge::predict::{compress_blocks, predict_decode_row, predict_pooled, KPool, PredictParams};
+use crate::sparge::predict::{
+    compress_blocks, predict_decode_row_into, predict_pooled, KPool, PredictParams,
+};
+use crate::tensor::microkernel::Backend;
 use crate::tensor::quant::{self, QuantBlock};
 use crate::tensor::Tensor;
 use crate::util::threadpool::{WorkerPool, Workspace};
@@ -163,6 +166,7 @@ pub struct AttnEngineBuilder {
     execution: Execution,
     kv_split: KvSplit,
     shared_pool: Option<Arc<WorkerPool>>,
+    microkernel: Backend,
 }
 
 impl AttnEngineBuilder {
@@ -206,6 +210,17 @@ impl AttnEngineBuilder {
         self
     }
 
+    /// Pin every score/P̃·V kernel under this engine to one explicit
+    /// microkernel backend instead of the process-selected default
+    /// ([`Backend::select`]) — for A/B benchmarking (the fig10
+    /// microkernel scoreboard) and tests. The QKᵀ and INT8 kernels are
+    /// bitwise-identical across backends; P̃·V is allclose (see
+    /// [`crate::tensor::microkernel`]).
+    pub fn microkernel(mut self, mk: Backend) -> Self {
+        self.microkernel = mk;
+        self
+    }
+
     /// Map a [`SpargeParams`] bundle onto precision + predicted policy:
     /// `quant` selects INT8, (τ, θ) feed stage 1, λ feeds stage 2.
     pub fn sparge(mut self, params: &SpargeParams) -> Self {
@@ -232,6 +247,7 @@ impl AttnEngineBuilder {
             pool,
             execution,
             kv_split: self.kv_split,
+            microkernel: self.microkernel,
         }
     }
 }
@@ -247,6 +263,7 @@ pub struct AttnEngine {
     /// (built privately, or joined via `shared_pool`).
     pool: Option<Arc<WorkerPool>>,
     kv_split: KvSplit,
+    microkernel: Backend,
 }
 
 /// Result of an engine call (one-shot, prefill, or one decode step).
@@ -268,6 +285,7 @@ impl AttnEngine {
             execution: Execution::Inline,
             kv_split: KvSplit::Off,
             shared_pool: None,
+            microkernel: Backend::select(),
         }
     }
 
@@ -299,6 +317,11 @@ impl AttnEngine {
 
     pub fn kv_split(&self) -> KvSplit {
         self.kv_split
+    }
+
+    /// The microkernel backend every kernel under this engine runs on.
+    pub fn microkernel(&self) -> Backend {
+        self.microkernel
     }
 
     /// The engine's worker pool, when it runs one — shareable: pass a
@@ -412,6 +435,7 @@ impl AttnEngine {
             kmean: None,
             kq: Vec::new(),
             qstage: Vec::new(),
+            pred_mask: BlockMask::new_all(0, 0, false),
             ws: Workspace::default(),
             plan: SpanPlan::new(),
             steps: 0,
@@ -434,11 +458,11 @@ impl AttnEngine {
         let exec = self.exec();
         let stats = match self.precision {
             Precision::F32 => {
-                let kernel = F32Kernel::new(q, k, cfg);
+                let kernel = F32Kernel::new(q, k, cfg).with_microkernel(self.microkernel);
                 self.dispatch_into(q, k, v, cfg, &kernel, filter, exec, &mut plan, &mut ws, out.data_mut())
             }
             Precision::Int8 => {
-                let kernel = QuantScoreKernel::new(q, k, cfg);
+                let kernel = QuantScoreKernel::new(q, k, cfg).with_microkernel(self.microkernel);
                 self.dispatch_into(q, k, v, cfg, &kernel, filter, exec, &mut plan, &mut ws, out.data_mut())
             }
         };
@@ -502,6 +526,11 @@ pub struct AttnSession<'e> {
     /// Reusable Q-side quantization staging (INT8): the per-call Q blocks
     /// are requantized into these, reusing their payload allocations.
     qstage: Vec<QuantBlock>,
+    /// Session-owned decode mask for the `Predicted` policy: each decode
+    /// step rebuilds it **in place** ([`predict_decode_row_into`]) so the
+    /// predicted hot path allocates nothing once warm. Other policies
+    /// leave it empty.
+    pred_mask: BlockMask,
     /// The session's scratch arena for inline pipeline work (pool workers
     /// bring their own).
     ws: Workspace,
@@ -701,7 +730,7 @@ impl AttnSession<'_> {
         let (kc, vc) = (&self.k_cache, &self.v_cache);
         match self.engine.precision {
             Precision::F32 => {
-                let kernel = F32Kernel::new(q, kc, cfg);
+                let kernel = F32Kernel::new(q, kc, cfg).with_microkernel(self.engine.microkernel);
                 self.engine.dispatch_into(q, kc, vc, cfg, &kernel, filter, exec, plan, ws, out)
             }
             Precision::Int8 => {
@@ -713,6 +742,7 @@ impl AttnSession<'_> {
                     row_offset: cfg.row_offset,
                     bq: cfg.bq,
                     bk: cfg.bk,
+                    mk: self.engine.microkernel,
                 };
                 self.engine.dispatch_into(q, kc, vc, cfg, &kernel, filter, exec, plan, ws, out)
             }
@@ -736,16 +766,16 @@ impl AttnSession<'_> {
 
     /// [`AttnSession::decode`] writing the output row directly into
     /// `out` (length dv) — no allocation on a warmed-up session under
-    /// the dense/external policies (the `Predicted` policy still builds
-    /// its per-step mask, returned here). Stats and bits are identical
-    /// to [`AttnSession::decode`].
+    /// **every** policy: the `Predicted` step rebuilds the session-owned
+    /// mask in place and returns a borrow of it instead of an owned
+    /// clone. Stats and bits are identical to [`AttnSession::decode`].
     pub fn decode_into(
         &mut self,
         q: &Tensor,
         k: &Tensor,
         v: &Tensor,
         out: &mut [f32],
-    ) -> (SkipStats, Option<BlockMask>) {
+    ) -> (SkipStats, Option<&BlockMask>) {
         self.decode_into_with_exec(q, k, v, out, self.engine.exec())
     }
 
@@ -763,7 +793,8 @@ impl AttnSession<'_> {
     ) -> AttnOutput {
         self.append_token(q, k, v);
         let mut out = Tensor::zeros(&[1, self.dv]);
-        let (stats, mask) = self.decode_step(q, exec, out.data_mut());
+        let (stats, predicted) = self.decode_step(q, exec, out.data_mut());
+        let mask = predicted.then(|| self.pred_mask.clone());
         AttnOutput { out, stats, mask }
     }
 
@@ -776,12 +807,13 @@ impl AttnSession<'_> {
         v: &Tensor,
         out: &mut [f32],
         exec: Exec<'_>,
-    ) -> (SkipStats, Option<BlockMask>) {
+    ) -> (SkipStats, Option<&BlockMask>) {
         // validate before touching session state: a bad buffer must not
         // leave a half-applied token in the cache
         assert_eq!(out.len(), v.dim(1), "decode_into output buffer must hold one dv row");
         self.append_token(q, k, v);
-        self.decode_step(q, exec, out)
+        let (stats, predicted) = self.decode_step(q, exec, out);
+        (stats, predicted.then_some(&self.pred_mask))
     }
 
     /// The append half of a decode step: init-on-empty, amortized
@@ -820,13 +852,10 @@ impl AttnSession<'_> {
     }
 
     /// The compute half of a decode step: run the 1-row call over the
-    /// cache and write the output row into `out`.
-    fn decode_step(
-        &mut self,
-        q: &Tensor,
-        exec: Exec<'_>,
-        out: &mut [f32],
-    ) -> (SkipStats, Option<BlockMask>) {
+    /// cache and write the output row into `out`. The bool is true when
+    /// the step refreshed the session's [`AttnSession::pred_mask`]
+    /// (`Predicted` policy only).
+    fn decode_step(&mut self, q: &Tensor, exec: Exec<'_>, out: &mut [f32]) -> (SkipStats, bool) {
         // the decode step sees exactly the visible prefix, so it runs
         // non-causal over the cache; scale/bk/cw carry over from the engine
         let step_cfg = AttnConfig { causal: false, ..self.engine.cfg };
@@ -836,16 +865,33 @@ impl AttnSession<'_> {
         let res = match &self.engine.policy {
             SparsityPolicy::Dense => {
                 let st = self.run_cache(q, &step_cfg, &DenseFilter, exec, &mut plan, &mut ws, out);
-                (st, None)
+                (st, false)
             }
             SparsityPolicy::Predicted { params, lambda } => {
-                let pool = self.kpool.as_ref().unwrap();
-                let mrow = predict_decode_row(q.row(0), &pool.means(), pool.sims(), scale, params);
+                // rebuild the session-owned mask in place from pooled
+                // state staged through the workspace — value-identical to
+                // the allocating predict_decode_row, and allocation-free
+                // once the arenas have reached their high-water sizes
+                {
+                    let pool = self.kpool.as_ref().unwrap();
+                    pool.means_into(&mut ws.pred_means);
+                    predict_decode_row_into(
+                        q.row(0),
+                        &ws.pred_means,
+                        pool.sims(),
+                        scale,
+                        params,
+                        &mut self.pred_mask,
+                        &mut ws.pred_scores,
+                        &mut ws.pred_probs,
+                        &mut ws.pred_idx,
+                    );
+                }
                 let st = {
-                    let filter = MaskFilter::new(&mrow, *lambda);
+                    let filter = MaskFilter::new(&self.pred_mask, *lambda);
                     self.run_cache(q, &step_cfg, &filter, exec, &mut plan, &mut ws, out)
                 };
-                (st, Some(mrow))
+                (st, true)
             }
             SparsityPolicy::External { mask, lambda } => {
                 let bi = (self.rows - 1) / self.engine.cfg.bq;
@@ -858,7 +904,7 @@ impl AttnSession<'_> {
                 );
                 let filter = RowMaskFilter { mask, row: bi, lambda: *lambda };
                 let st = self.run_cache(q, &step_cfg, &filter, exec, &mut plan, &mut ws, out);
-                (st, None)
+                (st, false)
             }
         };
         self.ws = ws;
@@ -952,6 +998,7 @@ struct QuantCacheKernel<'a> {
     row_offset: usize,
     bq: usize,
     bk: usize,
+    mk: Backend,
 }
 
 impl ScoreKernel for QuantCacheKernel<'_> {
@@ -967,7 +1014,11 @@ impl ScoreKernel for QuantCacheKernel<'_> {
         let qblk = &self.qb[q0 / self.bq];
         let kblk = &self.kb[k0 / self.bk];
         let q0_abs = self.row_offset + q0;
-        quant_score_block(qblk, kblk, q0_abs, k0, self.scale, self.causal, out, scratch.acc_i32);
+        quant_score_block(self.mk, qblk, kblk, q0_abs, k0, self.scale, self.causal, out, scratch.acc_i32);
+    }
+
+    fn microkernel(&self) -> Backend {
+        self.mk
     }
 }
 
@@ -1150,7 +1201,7 @@ mod tests {
                         sb.decode_into(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1), &mut row);
                     assert_eq!(row.as_slice(), r.out.data(), "sparge={sparge} split={split:?} row {t}");
                     assert_eq!(st, r.stats);
-                    assert_eq!(mask, r.mask);
+                    assert_eq!(mask.cloned(), r.mask);
                 }
             }
         }

@@ -59,6 +59,22 @@
 //! timing, because results are collected per index and merged in
 //! index/span order, which is a pure function of the call's shape.
 //!
+//! Below the seams sits the **microkernel tier**
+//! (`crate::tensor::microkernel::Backend`): every [`ScoreKernel`]
+//! routes its flop-dominant inner loops — f32 QKᵀ, the m=1 decode GEMV,
+//! the INT8 i8×i8→i32 dot, the P̃·V accumulate — through a
+//! runtime-dispatched backend (portable lane-by-lane, or AVX2+FMA under
+//! `--features simd` on capable x86-64). Backend choice extends the
+//! contract above per kernel: the QKᵀ/GEMV/dot/INT8 kernels are in the
+//! *fixed-order* tier (bitwise-identical on every backend, so every
+//! bitwise guarantee in this module — across exec modes, pool sizes,
+//! chunked vs one-shot prefill — also holds across backends), while
+//! P̃·V is in the *oracle* tier (same summation order, fused rounding;
+//! allclose to portable, bitwise-deterministic *within* a backend).
+//! The per-kernel tier table lives in [`pipeline`]'s module docs next
+//! to the merge-order rule; the engine pins a backend at `build()`
+//! (`AttnEngineBuilder::microkernel`) so one run never mixes tiers.
+//!
 //! ## Migration (old free functions → builder API)
 //!
 //! | Deprecated call | Replacement |

@@ -70,6 +70,25 @@
 //! still merges exactly: with λ off the summed counters equal the serial
 //! driver's; with λ on they are deterministic per span geometry.
 //!
+//! ### The microkernel determinism contract
+//!
+//! Every float op under these drivers bottoms out in a
+//! [`Backend`](crate::tensor::microkernel::Backend) — a dispatch handle
+//! each [`ScoreKernel`] carries ([`ScoreKernel::microkernel`],
+//! defaulting to the process-selected backend) and hands to
+//! [`FlashTile::ingest`] for the P̃·V accumulate. The per-kernel
+//! decision, stated once in [`crate::tensor::microkernel`] and enforced
+//! by its property tests: the QKᵀ family
+//! (`matmul_nt_into`/`gemv_nt`/`dot`) and the INT8 dot are in the
+//! **fixed-order tier** — bitwise-identical on every backend, so all
+//! bitwise contracts above (cross-exec, decode≡prefill, split-KV merge)
+//! hold unchanged whether the `simd` feature is on or off. The P̃·V
+//! accumulate (`matmul_nn_acc`) is in the **oracle (allclose) tier** —
+//! backends agree in summation order but may fuse multiply-add rounding,
+//! so outputs are allclose (not bitwise) *between* backends; within any
+//! one process the backend is fixed per engine, so every in-process
+//! bitwise guarantee is unaffected.
+//!
 //! ## The `row_offset` causal contract
 //!
 //! Causal masking is computed against **absolute positions**, not tensor
@@ -94,7 +113,8 @@
 //! dequant scheme) is a new [`ScoreKernel`] impl. Neither requires touching
 //! this loop again.
 
-use crate::tensor::{matmul, Tensor};
+use crate::tensor::microkernel::Backend;
+use crate::tensor::Tensor;
 use crate::util::threadpool::{self, WorkerPool, Workspace};
 
 use super::types::{AttnConfig, BlockMask, SkipStats};
@@ -236,6 +256,11 @@ impl FlashTile {
     /// per-element zero-skip (a whole AXPY saved per masked key), dense
     /// blocks drop the branch from the inner loop. The settings are
     /// `==`-identical (see `matmul_nn_acc`).
+    ///
+    /// `mk` is the microkernel backend running the P̃V accumulate — the
+    /// oracle-tier kernel, so within one process (one backend) ingestion
+    /// is deterministic, and across backends it is allclose (see
+    /// [`crate::tensor::microkernel`]).
     #[allow(clippy::too_many_arguments)]
     pub fn ingest(
         &mut self,
@@ -246,6 +271,7 @@ impl FlashTile {
         cw: usize,
         stats: &mut SkipStats,
         sparse_p: bool,
+        mk: Backend,
     ) {
         debug_assert_eq!(s.len(), self.rows * bk);
         debug_assert_eq!(v.len(), bk * self.d);
@@ -303,7 +329,7 @@ impl FlashTile {
             if skip {
                 stats.pv_skipped_frac += (g1 - g0) as f64 / rows as f64;
             } else {
-                matmul::matmul_nn_acc(
+                mk.matmul_nn_acc(
                     &self.p[g0 * bk..g1 * bk],
                     v,
                     &mut self.o[g0 * d..g1 * d],
@@ -413,10 +439,30 @@ pub fn score_block(
     causal: bool,
     out: &mut [f32],
 ) {
+    score_block_with(Backend::select(), q, k, q0, q1, k0, k1, row_offset, scale, causal, out);
+}
+
+/// [`score_block`] on an explicit microkernel backend — the QKᵀ matmul
+/// is the fixed-order (bitwise) tier, so every backend produces the same
+/// bits; the handle only selects how fast they are produced.
+#[allow(clippy::too_many_arguments)]
+pub fn score_block_with(
+    mk: Backend,
+    q: &Tensor,
+    k: &Tensor,
+    q0: usize,
+    q1: usize,
+    k0: usize,
+    k1: usize,
+    row_offset: usize,
+    scale: f32,
+    causal: bool,
+    out: &mut [f32],
+) {
     let d = q.dim(1);
     let (bq, bk) = (q1 - q0, k1 - k0);
     debug_assert!(out.len() >= bq * bk);
-    matmul::matmul_nt_into(
+    mk.matmul_nt_into(
         &q.data()[q0 * d..q1 * d],
         &k.data()[k0 * d..k1 * d],
         &mut out[..bq * bk],
@@ -463,6 +509,14 @@ pub trait ScoreKernel: Sync {
         out: &mut [f32],
         scratch: &mut ScoreScratch<'_>,
     );
+
+    /// The microkernel backend this kernel's math runs on. The drivers
+    /// also use it for the P̃·V accumulate, so one kernel pins the whole
+    /// reduction to one backend. Defaults to the process-selected
+    /// backend; engines built with an explicit handle override it.
+    fn microkernel(&self) -> Backend {
+        Backend::select()
+    }
 }
 
 /// Which blocks the driver visits, and with what stage-2 threshold.
@@ -497,12 +551,27 @@ pub struct F32Kernel<'a> {
     scale: f32,
     causal: bool,
     row_offset: usize,
+    mk: Backend,
 }
 
 impl<'a> F32Kernel<'a> {
     pub fn new(q: &'a Tensor, k: &'a Tensor, cfg: &AttnConfig) -> F32Kernel<'a> {
         assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
-        F32Kernel { q, k, scale: cfg.scale_for(q.dim(1)), causal: cfg.causal, row_offset: cfg.row_offset }
+        F32Kernel {
+            q,
+            k,
+            scale: cfg.scale_for(q.dim(1)),
+            causal: cfg.causal,
+            row_offset: cfg.row_offset,
+            mk: Backend::select(),
+        }
+    }
+
+    /// Pin the kernel to an explicit microkernel backend (the engine
+    /// builder's `.microkernel(...)` plumbs through here).
+    pub fn with_microkernel(mut self, mk: Backend) -> F32Kernel<'a> {
+        self.mk = mk;
+        self
     }
 }
 
@@ -516,7 +585,23 @@ impl ScoreKernel for F32Kernel<'_> {
         out: &mut [f32],
         _scratch: &mut ScoreScratch<'_>,
     ) {
-        score_block(self.q, self.k, q0, q1, k0, k1, self.row_offset, self.scale, self.causal, out);
+        score_block_with(
+            self.mk,
+            self.q,
+            self.k,
+            q0,
+            q1,
+            k0,
+            k1,
+            self.row_offset,
+            self.scale,
+            self.causal,
+            out,
+        );
+    }
+
+    fn microkernel(&self) -> Backend {
+        self.mk
     }
 }
 
@@ -662,6 +747,7 @@ fn reduce_span(
     let q0 = bi * cfg.bq;
     let q1 = (q0 + cfg.bq).min(n);
     let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
+    let mk = kernel.microkernel();
     let mut tile = FlashTile::new_in(ws, q1 - q0, dv, cfg.bk);
     let mut sbuf = grab(&mut ws.scores, (q1 - q0) * cfg.bk, 0.0);
     {
@@ -684,7 +770,7 @@ fn reduce_span(
             // position); everywhere else the P̃V matmul runs branch-free.
             let sparse_p = cfg.causal && k1 > cfg.row_offset + q0 + 1;
             let vb = &v.data()[k0 * dv..k1 * dv];
-            tile.ingest(sb, k1 - k0, vb, filter.lambda(), cfg.cw, &mut stats, sparse_p);
+            tile.ingest(sb, k1 - k0, vb, filter.lambda(), cfg.cw, &mut stats, sparse_p, mk);
         }
     }
     ws.scores = sbuf;
@@ -759,7 +845,7 @@ impl SpanPlan {
 /// A `*mut T` the span workers can share: each item writes only its own
 /// disjoint slot, and the executor synchronizes completion before any
 /// read, so no two accesses alias.
-struct SendPtr<T>(*mut T);
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
@@ -941,7 +1027,7 @@ mod tests {
         cw: usize,
         stats: &mut SkipStats,
     ) {
-        tile.ingest(s, bk, v, lambda, cw, stats, true);
+        tile.ingest(s, bk, v, lambda, cw, stats, true, Backend::select());
     }
 
     #[test]

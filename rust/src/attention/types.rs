@@ -116,6 +116,17 @@ impl BlockMask {
         BlockMask { rows, cols, bits: vec![value; rows * cols] }
     }
 
+    /// Reshape and refill in place — equal (`==`) to
+    /// `new_all(rows, cols, value)` but reusing the bit storage, so a
+    /// per-step mask rebuild allocates nothing once the buffer has
+    /// reached its high-water size (the predicted decode hot path).
+    pub fn reset(&mut self, rows: usize, cols: usize, value: bool) {
+        self.rows = rows;
+        self.cols = cols;
+        self.bits.clear();
+        self.bits.resize(rows * cols, value);
+    }
+
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> bool {
         self.bits[i * self.cols + j]

@@ -25,8 +25,11 @@
 //!   batch composition), writes its output row **directly into the
 //!   session's preallocated result buffer**
 //!   ([`crate::attention::AttnSession::decode_into`]) and draws scratch
-//!   from session/worker-owned workspaces — a warmed-up decode tick
-//!   performs no heap allocation in any session's step. The pool hands
+//!   from session/worker-owned workspaces. The manager's phase snapshot
+//!   and fan-out index list live in tick-persistent arenas, so a
+//!   warmed-up decode tick performs no heap allocation at all — not in
+//!   any session's step and not in the scheduling bookkeeping around
+//!   them (`tests/alloc_regression.rs` pins this). The pool hands
 //!   sessions out by chunked self-scheduling with the scheduler thread
 //!   participating, so one slow session (a ragged long-cache tail) no
 //!   longer serializes the tick behind idle workers. A *lone* decoding
@@ -46,9 +49,9 @@
 //! `benches/table8_serving.rs` measures what interleaving buys over it
 //! (including decode tokens/s vs pool size, split-KV on and off).
 
-use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::attention::pipeline::SendPtr;
 use crate::attention::{AttnEngine, AttnSession, Exec, SkipStats, Workspace};
 use crate::tensor::Tensor;
 use crate::workloads::{synthetic, SyntheticSpec};
@@ -226,6 +229,16 @@ pub struct SessionManager<'e> {
     /// Max prompt rows per prefill tick, before `b_q` alignment.
     chunk: usize,
     active: Vec<ActiveSeq<'e>>,
+    /// Tick-persistent phase snapshot (parallel to `active`), rebuilt in
+    /// place each tick so whole warmed decode ticks allocate nothing.
+    decode_phase: Vec<bool>,
+    /// Tick-persistent indices (into `active`) of the decode-ready
+    /// sessions, fanned out by the batched decode phase.
+    ready_idx: Vec<usize>,
+    /// The scheduler thread's own workspace for participating in the
+    /// batched decode fan-out (each session's step draws on the session's
+    /// arena; this one just satisfies the seam).
+    tick_ws: Workspace,
 }
 
 impl<'e> SessionManager<'e> {
@@ -235,7 +248,14 @@ impl<'e> SessionManager<'e> {
     /// one-shot prefill.
     pub fn new(engine: &'e AttnEngine, chunk: usize) -> SessionManager<'e> {
         assert!(chunk > 0, "prefill chunk must be positive");
-        SessionManager { engine, chunk, active: Vec::new() }
+        SessionManager {
+            engine,
+            chunk,
+            active: Vec::new(),
+            decode_phase: Vec::new(),
+            ready_idx: Vec::new(),
+            tick_ws: Workspace::default(),
+        }
     }
 
     /// Live session count.
@@ -296,38 +316,42 @@ impl<'e> SessionManager<'e> {
     /// old serial loop.
     pub fn tick(&mut self) -> Vec<SeqResult> {
         let chunk = self.chunk_rows();
-        // phase snapshot: one unit of work per session per tick
-        let decode_phase: Vec<bool> =
-            self.active.iter().map(|s| s.prefilled == s.stream.prefill).collect();
-        for (seq, &decoding) in self.active.iter_mut().zip(&decode_phase) {
+        // phase snapshot: one unit of work per session per tick (rebuilt
+        // in the tick-persistent arenas — no per-tick slot vector)
+        self.decode_phase.clear();
+        self.decode_phase.extend(self.active.iter().map(|s| s.prefilled == s.stream.prefill));
+        for (seq, &decoding) in self.active.iter_mut().zip(&self.decode_phase) {
             if !decoding {
                 seq.advance_prefill(chunk);
             }
         }
-        let ready: Vec<&mut ActiveSeq<'e>> = self
-            .active
-            .iter_mut()
-            .zip(&decode_phase)
-            .filter(|(s, d)| **d && s.decoded < s.stream.decode_steps())
-            .map(|(s, _)| s)
-            .collect();
-        match ready.len() {
+        self.ready_idx.clear();
+        for (i, (s, &d)) in self.active.iter().zip(&self.decode_phase).enumerate() {
+            if d && s.decoded < s.stream.decode_steps() {
+                self.ready_idx.push(i);
+            }
+        }
+        match self.ready_idx.len() {
             0 => {}
             // a lone decoder keeps the engine's executor: the engine's
             // split-KV policy fans the step's KV spans across the pool
-            1 => ready.into_iter().next().unwrap().advance_decode(self.engine.exec()),
+            1 => self.active[self.ready_idx[0]].advance_decode(self.engine.exec()),
             // cross-session batch: one chunk-self-scheduled fan-out over
             // (session, step) pairs — the scheduler thread participates
-            // with its own workspace; each participant locks only its own
-            // (uncontended) slot and runs its step inline
+            // with the manager's persistent workspace; each participant
+            // runs exactly one session's step inline
             _ => {
-                let slots: Vec<Mutex<&mut ActiveSeq<'e>>> = ready.into_iter().map(Mutex::new).collect();
-                // each step draws on its session's own arena; the
-                // scheduler thread participates in the fan-out, and an
-                // empty Workspace satisfies the seam without allocating
-                let mut ws = Workspace::default();
-                self.engine.exec().for_each_ws(slots.len(), &mut ws, |i, _ws| {
-                    slots[i].lock().unwrap().advance_decode(Exec::Inline);
+                let base = SendPtr(self.active.as_mut_ptr());
+                let idx = &self.ready_idx;
+                self.engine.exec().for_each_ws(idx.len(), &mut self.tick_ws, |t, _ws| {
+                    // SAFETY: `ready_idx` holds distinct in-bounds indices
+                    // into `active`, and `for_each_ws` hands each `t` to
+                    // exactly one participant — so every `ActiveSeq` is
+                    // mutably borrowed at most once, and never while
+                    // `active` itself is touched (the fan-out returns
+                    // before the retirement scan below).
+                    let seq = unsafe { &mut *base.0.add(idx[t]) };
+                    seq.advance_decode(Exec::Inline);
                 });
             }
         }

@@ -45,14 +45,25 @@
 //! causal-domain bound), and [`attention::pipeline::Exec`] (who runs the
 //! work — inline, scoped threads, or a persistent pool shareable across
 //! engines, handing out items by chunked self-scheduling with the
-//! submitter participating). The steady-state decode step is
+//! submitter participating). The flop-dominant inner loops of every
+//! score kernel — f32 QKᵀ, the m=1 decode GEMV, the INT8 dot, the P̃·V
+//! accumulate — bottom out in the **microkernel tier**
+//! ([`tensor::microkernel::Backend`]): runtime CPU dispatch between
+//! portable lane-by-lane kernels and AVX2+FMA ones (`--features simd`),
+//! with a per-kernel determinism tier — fixed-order kernels are
+//! bitwise-identical across backends, the P̃·V accumulate is
+//! allclose-vs-oracle — documented next to the merge-order contract in
+//! [`attention::pipeline`]. The steady-state decode step is
 //! **allocation-free**: scratch lives in per-worker/per-session
 //! [`attention::Workspace`] arenas and the session's cached
-//! [`attention::SpanPlan`], all bitwise-neutral (counting-allocator
-//! regression suite in `tests/alloc_regression.rs`). Around it: the
-//! mask-prediction pipeline, baselines (each just a mask constructor),
-//! workloads, tuner, cost model, and the PJRT runtime that loads and
-//! executes the artifacts. Python never runs on the request path.
+//! [`attention::SpanPlan`] and predicted-mask buffers, all
+//! bitwise-neutral (counting-allocator regression suite in
+//! `tests/alloc_regression.rs`, covering dense, external-mask, INT8,
+//! and predicted decode plus whole `SessionManager` ticks). Around it:
+//! the mask-prediction pipeline, baselines (each just a mask
+//! constructor), workloads, tuner, cost model, and the PJRT runtime
+//! that loads and executes the artifacts. Python never runs on the
+//! request path.
 
 pub mod attention;
 pub mod baselines;

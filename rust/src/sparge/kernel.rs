@@ -17,6 +17,7 @@
 use crate::attention::engine::{AttnEngine, Execution, Precision, SparsityPolicy};
 use crate::attention::pipeline::{ScoreKernel, ScoreScratch};
 use crate::attention::types::{AttnConfig, BlockMask, SkipStats};
+use crate::tensor::microkernel::Backend;
 use crate::tensor::quant::{self, QuantBlock};
 use crate::tensor::Tensor;
 
@@ -84,6 +85,7 @@ pub struct QuantScoreKernel {
     bq: usize,
     bk: usize,
     row_offset: usize,
+    mk: Backend,
 }
 
 impl QuantScoreKernel {
@@ -124,7 +126,16 @@ impl QuantScoreKernel {
             bq: cfg.bq,
             bk: cfg.bk,
             row_offset: cfg.row_offset,
+            mk: Backend::select(),
         }
+    }
+
+    /// Pin the kernel to an explicit microkernel backend (the engine
+    /// builder's `.microkernel(...)` plumbs through here). The INT8 dot
+    /// is exact on every backend, so this never changes results.
+    pub fn with_microkernel(mut self, mk: Backend) -> QuantScoreKernel {
+        self.mk = mk;
+        self
     }
 }
 
@@ -143,7 +154,21 @@ impl ScoreKernel for QuantScoreKernel {
         debug_assert_eq!(qblk.rows, q1 - q0);
         debug_assert_eq!(kblk.rows, k1 - k0);
         let q0_abs = self.row_offset + q0;
-        quant_score_block(qblk, kblk, q0_abs, k0, self.scale, self.causal, out, scratch.acc_i32);
+        quant_score_block(
+            self.mk,
+            qblk,
+            kblk,
+            q0_abs,
+            k0,
+            self.scale,
+            self.causal,
+            out,
+            scratch.acc_i32,
+        );
+    }
+
+    fn microkernel(&self) -> Backend {
+        self.mk
     }
 }
 
@@ -157,6 +182,7 @@ impl ScoreKernel for QuantScoreKernel {
 /// allocates.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn quant_score_block(
+    mk: Backend,
     qblk: &QuantBlock,
     kblk: &QuantBlock,
     q0: usize,
@@ -166,7 +192,7 @@ pub(crate) fn quant_score_block(
     out: &mut [f32],
     acc: &mut Vec<i32>,
 ) {
-    quant::qk_dequant_scratch(qblk, kblk, scale, out, acc);
+    quant::qk_dequant_scratch_with(mk, qblk, kblk, scale, out, acc);
     if causal {
         for i in 0..qblk.rows {
             let gi = q0 + i;

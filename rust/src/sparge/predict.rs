@@ -46,12 +46,22 @@ impl Default for PredictParams {
 /// L2-normalized first so XXᵀ entries are true cosines in [−1, 1]
 /// (`|max|` normalization then is a no-op but guards degenerate blocks).
 pub fn cos_sim(block: &[f32], rows: usize, d: usize) -> f32 {
+    let mut normed = Vec::new();
+    cos_sim_with(block, rows, d, &mut normed)
+}
+
+/// [`cos_sim`] with a caller-provided normalization buffer, so the
+/// per-token pooling update ([`KPool::append_row`] on the decode hot
+/// path) allocates nothing once the buffer holds one block's rows.
+/// Bitwise-identical to [`cos_sim`].
+pub fn cos_sim_with(block: &[f32], rows: usize, d: usize, normed: &mut Vec<f32>) -> f32 {
     debug_assert_eq!(block.len(), rows * d);
     if rows <= 1 {
         return 1.0;
     }
     // normalize rows
-    let mut normed = vec![0f32; rows * d];
+    normed.clear();
+    normed.resize(rows * d, 0.0);
     for i in 0..rows {
         let row = &block[i * d..(i + 1) * d];
         let n = ops::norm(row);
@@ -109,21 +119,54 @@ pub fn compress_blocks(x: &Tensor, block_rows: usize) -> (Tensor, Vec<f32>) {
 /// — e.g. two blocks at 0.50/0.48 with τ=0.95 would keep only one — so we
 /// implement the inclusive reading the prose describes.)
 pub fn top_cdf(p_row: &[f32], tau: f32) -> Vec<bool> {
-    let n = p_row.len();
-    let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| p_row[b].partial_cmp(&p_row[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut idx = Vec::new();
+    let n_sel = top_cdf_indices(p_row, tau, &mut idx);
+    let mut out = vec![false; p_row.len()];
+    for &i in &idx[..n_sel] {
+        out[i] = true;
+    }
+    out
+}
+
+/// [`top_cdf`] into a caller-provided index buffer: `idx` ends up holding
+/// all indices sorted by descending probability and the returned count is
+/// the length of the selected prefix (`idx[..n_sel]` are the kept
+/// blocks). Selects exactly the same set as [`top_cdf`] — the hand-rolled
+/// insertion sort is *stable* with the same descending comparator
+/// (NaN-tie semantics included), so the visiting order and the running
+/// cumsum are bit-identical to the `sort_by` path — while allocating
+/// nothing once `idx` has reached the row length (the decode hot path;
+/// `Vec::sort_by` buys runs of scratch per call).
+pub fn top_cdf_indices(p_row: &[f32], tau: f32, idx: &mut Vec<usize>) -> usize {
+    idx.clear();
+    idx.extend(0..p_row.len());
+    // stable insertion sort, descending: element `cur` moves left past
+    // `prev` only when prev's probability is *strictly* smaller (ties —
+    // NaN included — keep their original order, matching
+    // `partial_cmp(..).unwrap_or(Equal)` under a stable sort). Row
+    // lengths here are block counts (tens), where insertion sort is also
+    // simply fast.
+    for i in 1..idx.len() {
+        let cur = idx[i];
+        let mut j = i;
+        while j > 0 && p_row[idx[j - 1]] < p_row[cur] {
+            idx[j] = idx[j - 1];
+            j -= 1;
+        }
+        idx[j] = cur;
+    }
     let total: f32 = p_row.iter().sum();
     let budget = tau * total;
-    let mut out = vec![false; n];
     let mut cum = 0f32;
-    for &i in &idx {
-        out[i] = true;
+    let mut n_sel = 0;
+    for &i in idx.iter() {
+        n_sel += 1;
         cum += p_row[i];
         if cum >= budget {
             break;
         }
     }
-    out
+    n_sel
 }
 
 /// Run the full stage-1 prediction for one attention head.
@@ -227,11 +270,38 @@ pub fn predict_decode_row(
     scale: f32,
     params: &PredictParams,
 ) -> BlockMask {
-    let tn = kt.dim(0);
-    debug_assert_eq!(sim_k.len(), tn);
-    let mut s_hat = vec![0f32; tn];
+    let mut mask = BlockMask::new_all(0, 0, false);
+    let (mut s_hat, mut p, mut idx) = (Vec::new(), Vec::new(), Vec::new());
+    predict_decode_row_into(q_row, kt.data(), sim_k, scale, params, &mut mask, &mut s_hat, &mut p, &mut idx);
+    mask
+}
+
+/// [`predict_decode_row`] in place: the mask is reset and rebuilt rather
+/// than returned, `kt` is the flat (n_kblocks × d) block-mean buffer
+/// ([`KPool::means_into`]), and `s_hat`/`p`/`idx` are reusable scratch
+/// (session [`crate::util::threadpool::Workspace`] arenas on the serving
+/// path). Bit-identical mask to the allocating wrapper — every float op
+/// runs in the same order — and allocation-free once all four buffers
+/// have reached the cache's block count.
+#[allow(clippy::too_many_arguments)]
+pub fn predict_decode_row_into(
+    q_row: &[f32],
+    kt: &[f32],
+    sim_k: &[f32],
+    scale: f32,
+    params: &PredictParams,
+    mask: &mut BlockMask,
+    s_hat: &mut Vec<f32>,
+    p: &mut Vec<f32>,
+    idx: &mut Vec<usize>,
+) {
+    let tn = sim_k.len();
+    let d = q_row.len();
+    debug_assert_eq!(kt.len(), tn * d);
+    s_hat.clear();
+    s_hat.resize(tn, 0.0);
     for (j, sv) in s_hat.iter_mut().enumerate() {
-        *sv = matmul::dot(q_row, kt.row(j)) * scale;
+        *sv = matmul::dot(q_row, &kt[j * d..(j + 1) * d]) * scale;
     }
     for (sv, &sim) in s_hat.iter_mut().zip(sim_k) {
         if sim < params.theta {
@@ -241,27 +311,26 @@ pub fn predict_decode_row(
     // stable row softmax (all blocks are in the causal domain of the last
     // row, so no further masking applies)
     let m = s_hat.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-    let mut p = vec![0f32; tn];
+    p.clear();
+    p.resize(tn, 0.0);
     if m > f32::NEG_INFINITY {
         let mut sum = 0f32;
-        for (pv, &sv) in p.iter_mut().zip(&s_hat) {
+        for (pv, &sv) in p.iter_mut().zip(s_hat.iter()) {
             let e = if sv == f32::NEG_INFINITY { 0.0 } else { (sv - m).exp() };
             *pv = e;
             sum += e;
         }
         if sum > 0.0 {
             let inv = 1.0 / sum;
-            for pv in &mut p {
+            for pv in p.iter_mut() {
                 *pv *= inv;
             }
         }
     }
-    let sel = top_cdf(&p, params.tau);
-    let mut mask = BlockMask::new_all(1, tn, false);
-    for (j, &on) in sel.iter().enumerate() {
-        if on {
-            mask.set(0, j, true);
-        }
+    let n_sel = top_cdf_indices(p, params.tau, idx);
+    mask.reset(1, tn, false);
+    for &j in &idx[..n_sel] {
+        mask.set(0, j, true);
     }
     // Fix blocks are never skipped (Eq. 5); the one-row q block fires the
     // fix-Q rule only for θ > 1.
@@ -273,7 +342,6 @@ pub fn predict_decode_row(
     if 1.0 < params.theta {
         mask.set_row(0, true);
     }
-    mask
 }
 
 /// Incrementally-maintained K-side pooling state for stage-1 prediction:
@@ -296,6 +364,10 @@ pub struct KPool {
     rows: Vec<usize>,
     /// Per-block self-similarity.
     sims: Vec<f32>,
+    /// Reusable row-normalization scratch for [`cos_sim_with`], so the
+    /// per-token tail-block similarity refresh allocates nothing once it
+    /// holds one full block (high-water `bk × d`).
+    scratch: Vec<f32>,
     /// Full scans over the whole input (the prefill bulk [`KPool::build`],
     /// or an [`KPool::extend`] that started from an empty pool).
     pub full_recomputes: usize,
@@ -315,6 +387,7 @@ impl KPool {
             sums: Vec::new(),
             rows: Vec::new(),
             sims: Vec::new(),
+            scratch: Vec::new(),
             full_recomputes: 0,
             incremental_updates: 0,
             chunk_extends: 0,
@@ -353,7 +426,8 @@ impl KPool {
                 }
             }
             self.rows.push(r1 - r0);
-            self.sims.push(cos_sim(&k.data()[r0 * self.d..r1 * self.d], r1 - r0, self.d));
+            let s = cos_sim_with(&k.data()[r0 * self.d..r1 * self.d], r1 - r0, self.d, &mut self.scratch);
+            self.sims.push(s);
             r0 = r1;
         }
         self.full_recomputes += 1;
@@ -395,7 +469,9 @@ impl KPool {
                     }
                 }
                 self.rows[b] = r1 - b * self.bk;
-                self.sims[b] = cos_sim(&cache[b * self.bk * self.d..r1 * self.d], self.rows[b], self.d);
+                let s =
+                    cos_sim_with(&cache[b * self.bk * self.d..r1 * self.d], self.rows[b], self.d, &mut self.scratch);
+                self.sims[b] = s;
                 r = r1;
             }
         }
@@ -412,7 +488,8 @@ impl KPool {
                 }
             }
             self.rows.push(r1 - r);
-            self.sims.push(cos_sim(&cache[r * self.d..r1 * self.d], r1 - r, self.d));
+            let s = cos_sim_with(&cache[r * self.d..r1 * self.d], r1 - r, self.d, &mut self.scratch);
+            self.sims.push(s);
             r = r1;
         }
         if from_empty {
@@ -441,7 +518,8 @@ impl KPool {
                 *o += v;
             }
             debug_assert_eq!(tail.len(), rows * self.d, "tail slice must cover the block incl. the new row");
-            self.sims[b] = cos_sim(tail, rows, self.d);
+            let s = cos_sim_with(tail, rows, self.d, &mut self.scratch);
+            self.sims[b] = s;
         }
         self.incremental_updates += 1;
     }
@@ -449,15 +527,26 @@ impl KPool {
     /// Block mean tokens as an (n_blocks × d) tensor — bitwise equal to
     /// `compress_blocks(..).0` over the same rows.
     pub fn means(&self) -> Tensor {
+        let mut flat = Vec::new();
+        self.means_into(&mut flat);
+        Tensor::from_vec(&[self.n_blocks(), self.d], flat)
+    }
+
+    /// [`KPool::means`] into a caller-provided flat (n_blocks × d) buffer
+    /// — same bits, no allocation once the buffer has reached its
+    /// high-water size. The decode hot path stages the pooled K means
+    /// through a [`crate::util::threadpool::Workspace`] arena with this.
+    pub fn means_into(&self, out: &mut Vec<f32>) {
         let nb = self.n_blocks();
-        let mut t = Tensor::zeros(&[nb, self.d]);
+        out.clear();
+        out.resize(nb * self.d, 0.0);
         for b in 0..nb {
             let inv = 1.0 / self.rows[b] as f32;
-            for (o, &s) in t.row_mut(b).iter_mut().zip(&self.sums[b * self.d..(b + 1) * self.d]) {
+            for (o, &s) in out[b * self.d..(b + 1) * self.d].iter_mut().zip(&self.sums[b * self.d..(b + 1) * self.d])
+            {
                 *o = s * inv;
             }
         }
-        t
     }
 
     /// Per-block self-similarities — bitwise equal to
@@ -776,6 +865,64 @@ mod tests {
         // tau=1 keeps every block
         let mask = predict_decode_row(&q, &kt, &sim, 1.0, &PredictParams { tau: 1.0, theta: 0.0 });
         assert_eq!(mask.count_active(), 3);
+    }
+
+    #[test]
+    fn predict_decode_row_into_matches_allocating_bitwise() {
+        // The pooled in-place variant must reproduce the allocating one
+        // bit for bit from arbitrarily stale reusable buffers — the
+        // serving loop's per-step masks ride on this.
+        Cases::standard(615).check(|rng| {
+            let tn = rng.range(1, 24);
+            let d = rng.range(1, 33);
+            let kt = Tensor::randn(&[tn, d], rng);
+            let q: Vec<f32> = rng.gauss_vec(d);
+            let sim: Vec<f32> = (0..tn).map(|_| rng.f32() * 2.0 - 1.0).collect();
+            let params = PredictParams { tau: rng.f32(), theta: rng.f32() * 2.0 - 1.0 };
+            let scale = rng.f32() + 0.1;
+            let base = predict_decode_row(&q, &kt, &sim, scale, &params);
+            let mut mask = BlockMask::new_all(3, 5, true); // stale shape + bits
+            let mut s_hat = vec![9.0f32; 7];
+            let mut p = vec![9.0f32; 3];
+            let mut idx = vec![42usize; 9];
+            predict_decode_row_into(&q, kt.data(), &sim, scale, &params, &mut mask, &mut s_hat, &mut p, &mut idx);
+            if mask != base {
+                return Err(format!("in-place decode predict diverged at tn={tn} d={d}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn top_cdf_indices_matches_top_cdf() {
+        Cases::standard(616).check(|rng| {
+            let n = rng.range(1, 50);
+            let p: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let tau = rng.f32();
+            let sel = top_cdf(&p, tau);
+            let mut idx = vec![7usize; 3]; // stale
+            let n_sel = top_cdf_indices(&p, tau, &mut idx);
+            let mut via_idx = vec![false; n];
+            for &i in &idx[..n_sel] {
+                via_idx[i] = true;
+            }
+            if via_idx != sel {
+                return Err("index variant selected a different block set".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kpool_means_into_matches_means() {
+        let mut rng = Pcg::seeded(617);
+        let (n, d, bk) = (43, 8, 8);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let mut pool = KPool::new(bk, d);
+        pool.build(&k);
+        let mut flat = vec![1.0f32; 5]; // stale
+        pool.means_into(&mut flat);
+        assert_eq!(flat.as_slice(), pool.means().data());
     }
 
     #[test]

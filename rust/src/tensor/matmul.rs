@@ -1,13 +1,22 @@
-//! Blocked matmul microkernels — the compute hot path of the L3 attention
-//! engine. Hand-tuned for the attention shapes: tall-skinny A·Bᵀ
-//! (`matmul_nt`, used for Q·Kᵀ where both operands are row-major over
-//! tokens) and A·B (`matmul_nn`, used for P̃·V).
+//! Matmul entry points for the attention hot path — thin wrappers that
+//! route to the process-selected [`microkernel::Backend`]. Hand-tuned
+//! for the attention shapes: tall-skinny A·Bᵀ (`matmul_nt`, used for
+//! Q·Kᵀ where both operands are row-major over tokens) and A·B
+//! (`matmul_nn`, used for P̃·V).
 //!
-//! Layout note: keeping K row-major and using the NT kernel means the inner
-//! loop over `d` walks both operands contiguously — this is the single
-//! biggest lever for the sparse engine's wall-clock (see EXPERIMENTS.md
-//! §Perf).
+//! Layout note: keeping K row-major and using the NT kernel means the
+//! inner loop over `d` walks both operands contiguously — this is the
+//! single biggest lever for the sparse engine's wall-clock (see
+//! EXPERIMENTS.md §Perf).
+//!
+//! The kernel bodies live in [`microkernel`] (portable fixed-width-chunk
+//! tier plus the `simd`-gated AVX2 tier); these free functions exist for
+//! callers without an explicit dispatch handle and always use
+//! [`Backend::select`]. The per-kernel determinism contract — which
+//! kernels are bitwise across backends and which are allclose-vs-oracle
+//! — is documented on [`microkernel`].
 
+use super::microkernel::{self, Backend};
 use super::Tensor;
 
 /// C = A · Bᵀ where A is (m,k) and B is (n,k); C is (m,n).
@@ -21,179 +30,21 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     c
 }
 
-/// SIMD lane width for the explicit-lane kernels: 8 f32 = one AVX2
-/// register; narrower targets still vectorize the lane arrays.
-const LANES: usize = 8;
-
-/// NT kernel into a caller-provided buffer (len m*n).
+/// NT kernel into a caller-provided buffer (len m*n). Fixed-order
+/// (bitwise) tier — see [`microkernel`].
 #[inline]
 pub fn matmul_nt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(c.len(), m * n);
-    // 4-wide j-unroll × 8-wide explicit k-lanes: each a-row is dotted
-    // against 4 b-rows at once, with [f32; 8] lane accumulators so the
-    // inner loop compiles to packed FMAs instead of a scalar reduction
-    // chain (the dot-product dependency is the bottleneck otherwise —
-    // EXPERIMENTS.md §Perf).
-    let n4 = n & !3;
-    let kl = k & !(LANES - 1);
-    let m2 = m & !1;
-    let mut i = 0;
-    // 2×4 register tile: each loaded B vector feeds two A rows, halving
-    // B-side bandwidth (the NT kernel is bandwidth-bound once B spills L1).
-    while i < m2 {
-        let ar0 = &a[i * k..(i + 1) * k];
-        let ar1 = &a[(i + 1) * k..(i + 2) * k];
-        let (chead, ctail) = c[i * n..].split_at_mut(n);
-        let cr0 = chead;
-        let cr1 = &mut ctail[..n];
-        let mut j = 0;
-        while j < n4 {
-            let b0 = &b[j * k..(j + 1) * k];
-            let b1 = &b[(j + 1) * k..(j + 2) * k];
-            let b2 = &b[(j + 2) * k..(j + 3) * k];
-            let b3 = &b[(j + 3) * k..(j + 4) * k];
-            let mut a00 = [0f32; LANES];
-            let mut a01 = [0f32; LANES];
-            let mut a02 = [0f32; LANES];
-            let mut a03 = [0f32; LANES];
-            let mut a10 = [0f32; LANES];
-            let mut a11 = [0f32; LANES];
-            let mut a12 = [0f32; LANES];
-            let mut a13 = [0f32; LANES];
-            let mut p = 0;
-            while p < kl {
-                for l in 0..LANES {
-                    let av0 = ar0[p + l];
-                    let av1 = ar1[p + l];
-                    let bv0 = b0[p + l];
-                    let bv1 = b1[p + l];
-                    let bv2 = b2[p + l];
-                    let bv3 = b3[p + l];
-                    a00[l] += av0 * bv0;
-                    a01[l] += av0 * bv1;
-                    a02[l] += av0 * bv2;
-                    a03[l] += av0 * bv3;
-                    a10[l] += av1 * bv0;
-                    a11[l] += av1 * bv1;
-                    a12[l] += av1 * bv2;
-                    a13[l] += av1 * bv3;
-                }
-                p += LANES;
-            }
-            let mut s = [
-                a00.iter().sum::<f32>(),
-                a01.iter().sum::<f32>(),
-                a02.iter().sum::<f32>(),
-                a03.iter().sum::<f32>(),
-                a10.iter().sum::<f32>(),
-                a11.iter().sum::<f32>(),
-                a12.iter().sum::<f32>(),
-                a13.iter().sum::<f32>(),
-            ];
-            while p < k {
-                let av0 = ar0[p];
-                let av1 = ar1[p];
-                s[0] += av0 * b0[p];
-                s[1] += av0 * b1[p];
-                s[2] += av0 * b2[p];
-                s[3] += av0 * b3[p];
-                s[4] += av1 * b0[p];
-                s[5] += av1 * b1[p];
-                s[6] += av1 * b2[p];
-                s[7] += av1 * b3[p];
-                p += 1;
-            }
-            cr0[j] = s[0];
-            cr0[j + 1] = s[1];
-            cr0[j + 2] = s[2];
-            cr0[j + 3] = s[3];
-            cr1[j] = s[4];
-            cr1[j + 1] = s[5];
-            cr1[j + 2] = s[6];
-            cr1[j + 3] = s[7];
-            j += 4;
-        }
-        while j < n {
-            let br = &b[j * k..(j + 1) * k];
-            cr0[j] = dot(ar0, br);
-            cr1[j] = dot(ar1, br);
-            j += 1;
-        }
-        i += 2;
-    }
-    // odd tail row (and the whole matrix when m == 1): the GEMV kernel
-    while i < m {
-        gemv_nt(&a[i * k..(i + 1) * k], b, &mut c[i * n..(i + 1) * n], n, k);
-        i += 1;
-    }
+    Backend::select().matmul_nt_into(a, b, c, m, n, k);
 }
 
 /// GEMV against row-major B: `c[j] = a · b[j]` for j in 0..n — the m=1
 /// decode shape of the NT kernel (one query row scored against a key
-/// block), which the 2×4 register tile above cannot cover.
-///
-/// Same 4-wide j-unroll × `LANES`-wide lane accumulators as the tiled
-/// kernel, so the single a-row is loaded once per 4 b-rows instead of
-/// per `dot` call. Each output is accumulated lane-wise over the aligned
-/// prefix, lane-summed, then finished with the sequential remainder —
-/// the exact float evaluation order of [`dot`], so a row computed here
-/// is **bitwise-identical** to the per-`dot` loop it replaces (the
-/// decode≡prefill parity contract in `attention::engine` depends on
-/// every kernel path agreeing per row).
+/// block). Bitwise-identical to the per-[`dot`] loop it replaces on
+/// every backend (the decode≡prefill parity contract in
+/// `attention::engine` depends on every kernel path agreeing per row).
 #[inline]
 pub fn gemv_nt(a: &[f32], b: &[f32], c: &mut [f32], n: usize, k: usize) {
-    debug_assert_eq!(a.len(), k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(c.len(), n);
-    let n4 = n & !3;
-    let kl = k & !(LANES - 1);
-    let mut j = 0;
-    while j < n4 {
-        let b0 = &b[j * k..(j + 1) * k];
-        let b1 = &b[(j + 1) * k..(j + 2) * k];
-        let b2 = &b[(j + 2) * k..(j + 3) * k];
-        let b3 = &b[(j + 3) * k..(j + 4) * k];
-        let mut a0 = [0f32; LANES];
-        let mut a1 = [0f32; LANES];
-        let mut a2 = [0f32; LANES];
-        let mut a3 = [0f32; LANES];
-        let mut p = 0;
-        while p < kl {
-            for l in 0..LANES {
-                let av = a[p + l];
-                a0[l] += av * b0[p + l];
-                a1[l] += av * b1[p + l];
-                a2[l] += av * b2[p + l];
-                a3[l] += av * b3[p + l];
-            }
-            p += LANES;
-        }
-        let mut s = [
-            a0.iter().sum::<f32>(),
-            a1.iter().sum::<f32>(),
-            a2.iter().sum::<f32>(),
-            a3.iter().sum::<f32>(),
-        ];
-        while p < k {
-            let av = a[p];
-            s[0] += av * b0[p];
-            s[1] += av * b1[p];
-            s[2] += av * b2[p];
-            s[3] += av * b3[p];
-            p += 1;
-        }
-        c[j] = s[0];
-        c[j + 1] = s[1];
-        c[j + 2] = s[2];
-        c[j + 3] = s[3];
-        j += 4;
-    }
-    while j < n {
-        c[j] = dot(a, &b[j * k..(j + 1) * k]);
-        j += 1;
-    }
+    Backend::select().gemv_nt(a, b, c, n, k);
 }
 
 /// C = A · B where A is (m,k), B is (k,n); C is (m,n).
@@ -207,8 +58,8 @@ pub fn matmul_nn(a: &Tensor, b: &Tensor) -> Tensor {
 }
 
 /// NN kernel, optionally accumulating into `c` (C += A·B when `acc`).
-/// i-k-j loop order: the inner loop is a contiguous AXPY over B's row `p`
-/// and C's row `i`, which auto-vectorizes.
+/// Oracle (allclose) tier — backends agree in summation order but may
+/// fuse multiply-add rounding; see [`microkernel`].
 ///
 /// `skip_zeros` gates the per-element `a == 0` early-out. Masked/sparse
 /// callers (P̃ rows holding exact zeros from causal −∞ entries) keep it —
@@ -232,112 +83,26 @@ pub fn matmul_nn_acc(
     acc: bool,
     skip_zeros: bool,
 ) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    if !acc {
-        c.fill(0.0);
-    }
-    for i in 0..m {
-        let cr = &mut c[i * n..(i + 1) * n];
-        for p in 0..k {
-            let av = a[i * k + p];
-            if skip_zeros && av == 0.0 {
-                continue;
-            }
-            let br = &b[p * n..(p + 1) * n];
-            for (cv, &bv) in cr.iter_mut().zip(br) {
-                *cv += av * bv;
-            }
-        }
-    }
+    Backend::select().matmul_nn_acc(a, b, c, m, n, k, acc, skip_zeros);
 }
 
-/// Dot product of two equal-length slices (lane-parallel).
+/// Dot product of two equal-length slices (lane-parallel, fixed-order
+/// tier).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let k = a.len();
-    let kl = k & !(LANES - 1);
-    let mut acc = [0f32; LANES];
-    let mut p = 0;
-    while p < kl {
-        for l in 0..LANES {
-            acc[l] += a[p + l] * b[p + l];
-        }
-        p += LANES;
-    }
-    let mut s: f32 = acc.iter().sum();
-    while p < k {
-        s += a[p] * b[p];
-        p += 1;
-    }
-    s
+    Backend::select().dot(a, b)
 }
 
 /// int8 NT kernel with i32 accumulation: C[i][j] = Σ_p a[i][p]·b[j][p].
 /// Used by the SageAttention-quantized path (dequantized by the caller).
+/// Exact integer arithmetic on every backend.
+#[inline]
 pub fn matmul_nt_i8(a: &[i8], b: &[i8], c: &mut [i32], m: usize, n: usize, k: usize) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(c.len(), m * n);
-    let n4 = n & !3;
-    let kl = k & !(LANES - 1);
-    for i in 0..m {
-        let ar = &a[i * k..(i + 1) * k];
-        let cr = &mut c[i * n..(i + 1) * n];
-        let mut j = 0;
-        while j < n4 {
-            let b0 = &b[j * k..(j + 1) * k];
-            let b1 = &b[(j + 1) * k..(j + 2) * k];
-            let b2 = &b[(j + 2) * k..(j + 3) * k];
-            let b3 = &b[(j + 3) * k..(j + 4) * k];
-            let mut acc0 = [0i32; LANES];
-            let mut acc1 = [0i32; LANES];
-            let mut acc2 = [0i32; LANES];
-            let mut acc3 = [0i32; LANES];
-            let mut p = 0;
-            while p < kl {
-                for l in 0..LANES {
-                    let av = ar[p + l] as i32;
-                    acc0[l] += av * b0[p + l] as i32;
-                    acc1[l] += av * b1[p + l] as i32;
-                    acc2[l] += av * b2[p + l] as i32;
-                    acc3[l] += av * b3[p + l] as i32;
-                }
-                p += LANES;
-            }
-            let (mut s0, mut s1, mut s2, mut s3) = (
-                acc0.iter().sum::<i32>(),
-                acc1.iter().sum::<i32>(),
-                acc2.iter().sum::<i32>(),
-                acc3.iter().sum::<i32>(),
-            );
-            while p < k {
-                let av = ar[p] as i32;
-                s0 += av * b0[p] as i32;
-                s1 += av * b1[p] as i32;
-                s2 += av * b2[p] as i32;
-                s3 += av * b3[p] as i32;
-                p += 1;
-            }
-            cr[j] = s0;
-            cr[j + 1] = s1;
-            cr[j + 2] = s2;
-            cr[j + 3] = s3;
-            j += 4;
-        }
-        while j < n {
-            let br = &b[j * k..(j + 1) * k];
-            let mut s = 0i32;
-            for p in 0..k {
-                s += ar[p] as i32 * br[p] as i32;
-            }
-            cr[j] = s;
-            j += 1;
-        }
-    }
+    Backend::select().matmul_nt_i8(a, b, c, m, n, k);
 }
+
+/// Re-exported so existing callers keep one name for the lane width.
+pub use microkernel::LANES;
 
 #[cfg(test)]
 mod tests {

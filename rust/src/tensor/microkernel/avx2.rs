@@ -1,0 +1,315 @@
+//! Hand-written x86_64 AVX2(+FMA) microkernels (`core::arch` tier).
+//!
+//! Safety: every function here is `unsafe` with
+//! `#[target_feature(enable = ...)]` — callers must have verified the
+//! CPU supports AVX2 and FMA ([`super::Backend::select`] does, once per
+//! process). Under edition 2021 the bodies are implicit unsafe blocks.
+//!
+//! Determinism: the f32 NT family (`matmul_nt_into`, `gemv_nt`, `dot`)
+//! is in the **fixed-order bitwise tier** — it reproduces the portable
+//! lane order exactly. One `__m256` accumulator per output takes the
+//! terms at positions `p ≡ l (mod 8)` in increasing `p` using *unfused*
+//! `_mm256_mul_ps` + `_mm256_add_ps` (never FMA: its single rounding
+//! would change bits vs the portable two-rounding multiply-add), the 8
+//! lanes are stored and summed sequentially `0..8`, and the `k % 8`
+//! remainder is added scalarly in increasing `p` — Rust/LLVM never
+//! contracts a scalar `a * b + c`, so the remainder matches portable
+//! bit-for-bit too. `matmul_nt_i8` is exact integer arithmetic.
+//! `matmul_nn_acc` is the **oracle tier**: same summation order as
+//! portable, but fused (`_mm256_fmadd_ps` / `f32::mul_add`) rounding.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Sum the 8 lanes of `v` sequentially `0..8` — the same fold as
+/// `[f32; 8]::iter().sum()` in the portable tier (bitwise contract).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_seq(v: __m256) -> f32 {
+    let mut buf = [0f32; 8];
+    _mm256_storeu_ps(buf.as_mut_ptr(), v);
+    buf.iter().sum()
+}
+
+/// Dot product; bitwise-identical to `portable::dot`.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let k = a.len();
+    let kl = k & !7;
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let mut vacc = _mm256_setzero_ps();
+    let mut p = 0;
+    while p < kl {
+        let va = _mm256_loadu_ps(ap.add(p));
+        let vb = _mm256_loadu_ps(bp.add(p));
+        vacc = _mm256_add_ps(vacc, _mm256_mul_ps(va, vb));
+        p += 8;
+    }
+    let mut s = hsum_seq(vacc);
+    while p < k {
+        s += a[p] * b[p];
+        p += 1;
+    }
+    s
+}
+
+/// GEMV against row-major B; bitwise-identical to `portable::gemv_nt`
+/// (and hence to the per-`dot` loop — the decode≡prefill seam).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn gemv_nt(a: &[f32], b: &[f32], c: &mut [f32], n: usize, k: usize) {
+    let n4 = n & !3;
+    let kl = k & !7;
+    let ap = a.as_ptr();
+    let mut j = 0;
+    while j < n4 {
+        let b0 = b.as_ptr().add(j * k);
+        let b1 = b.as_ptr().add((j + 1) * k);
+        let b2 = b.as_ptr().add((j + 2) * k);
+        let b3 = b.as_ptr().add((j + 3) * k);
+        let mut v0 = _mm256_setzero_ps();
+        let mut v1 = _mm256_setzero_ps();
+        let mut v2 = _mm256_setzero_ps();
+        let mut v3 = _mm256_setzero_ps();
+        let mut p = 0;
+        while p < kl {
+            let va = _mm256_loadu_ps(ap.add(p));
+            v0 = _mm256_add_ps(v0, _mm256_mul_ps(va, _mm256_loadu_ps(b0.add(p))));
+            v1 = _mm256_add_ps(v1, _mm256_mul_ps(va, _mm256_loadu_ps(b1.add(p))));
+            v2 = _mm256_add_ps(v2, _mm256_mul_ps(va, _mm256_loadu_ps(b2.add(p))));
+            v3 = _mm256_add_ps(v3, _mm256_mul_ps(va, _mm256_loadu_ps(b3.add(p))));
+            p += 8;
+        }
+        let mut s = [hsum_seq(v0), hsum_seq(v1), hsum_seq(v2), hsum_seq(v3)];
+        while p < k {
+            let av = a[p];
+            s[0] += av * *b0.add(p);
+            s[1] += av * *b1.add(p);
+            s[2] += av * *b2.add(p);
+            s[3] += av * *b3.add(p);
+            p += 1;
+        }
+        c[j] = s[0];
+        c[j + 1] = s[1];
+        c[j + 2] = s[2];
+        c[j + 3] = s[3];
+        j += 4;
+    }
+    while j < n {
+        c[j] = dot(a, &b[j * k..(j + 1) * k]);
+        j += 1;
+    }
+}
+
+/// NT kernel, 2×4 register tile; bitwise-identical to
+/// `portable::matmul_nt_into`. 2 A vectors + 4 B vectors + 8
+/// accumulators = 14 of the 16 ymm registers.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn matmul_nt_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    let n4 = n & !3;
+    let kl = k & !7;
+    let m2 = m & !1;
+    let mut i = 0;
+    while i < m2 {
+        let ar0 = a.as_ptr().add(i * k);
+        let ar1 = a.as_ptr().add((i + 1) * k);
+        let mut j = 0;
+        while j < n4 {
+            let b0 = b.as_ptr().add(j * k);
+            let b1 = b.as_ptr().add((j + 1) * k);
+            let b2 = b.as_ptr().add((j + 2) * k);
+            let b3 = b.as_ptr().add((j + 3) * k);
+            let mut a00 = _mm256_setzero_ps();
+            let mut a01 = _mm256_setzero_ps();
+            let mut a02 = _mm256_setzero_ps();
+            let mut a03 = _mm256_setzero_ps();
+            let mut a10 = _mm256_setzero_ps();
+            let mut a11 = _mm256_setzero_ps();
+            let mut a12 = _mm256_setzero_ps();
+            let mut a13 = _mm256_setzero_ps();
+            let mut p = 0;
+            while p < kl {
+                let va0 = _mm256_loadu_ps(ar0.add(p));
+                let va1 = _mm256_loadu_ps(ar1.add(p));
+                let vb0 = _mm256_loadu_ps(b0.add(p));
+                let vb1 = _mm256_loadu_ps(b1.add(p));
+                let vb2 = _mm256_loadu_ps(b2.add(p));
+                let vb3 = _mm256_loadu_ps(b3.add(p));
+                a00 = _mm256_add_ps(a00, _mm256_mul_ps(va0, vb0));
+                a01 = _mm256_add_ps(a01, _mm256_mul_ps(va0, vb1));
+                a02 = _mm256_add_ps(a02, _mm256_mul_ps(va0, vb2));
+                a03 = _mm256_add_ps(a03, _mm256_mul_ps(va0, vb3));
+                a10 = _mm256_add_ps(a10, _mm256_mul_ps(va1, vb0));
+                a11 = _mm256_add_ps(a11, _mm256_mul_ps(va1, vb1));
+                a12 = _mm256_add_ps(a12, _mm256_mul_ps(va1, vb2));
+                a13 = _mm256_add_ps(a13, _mm256_mul_ps(va1, vb3));
+                p += 8;
+            }
+            let mut s = [
+                hsum_seq(a00),
+                hsum_seq(a01),
+                hsum_seq(a02),
+                hsum_seq(a03),
+                hsum_seq(a10),
+                hsum_seq(a11),
+                hsum_seq(a12),
+                hsum_seq(a13),
+            ];
+            while p < k {
+                let av0 = *ar0.add(p);
+                let av1 = *ar1.add(p);
+                s[0] += av0 * *b0.add(p);
+                s[1] += av0 * *b1.add(p);
+                s[2] += av0 * *b2.add(p);
+                s[3] += av0 * *b3.add(p);
+                s[4] += av1 * *b0.add(p);
+                s[5] += av1 * *b1.add(p);
+                s[6] += av1 * *b2.add(p);
+                s[7] += av1 * *b3.add(p);
+                p += 1;
+            }
+            c[i * n + j] = s[0];
+            c[i * n + j + 1] = s[1];
+            c[i * n + j + 2] = s[2];
+            c[i * n + j + 3] = s[3];
+            c[(i + 1) * n + j] = s[4];
+            c[(i + 1) * n + j + 1] = s[5];
+            c[(i + 1) * n + j + 2] = s[6];
+            c[(i + 1) * n + j + 3] = s[7];
+            j += 4;
+        }
+        while j < n {
+            let br = &b[j * k..(j + 1) * k];
+            c[i * n + j] = dot(&a[i * k..(i + 1) * k], br);
+            c[(i + 1) * n + j] = dot(&a[(i + 1) * k..(i + 2) * k], br);
+            j += 1;
+        }
+        i += 2;
+    }
+    while i < m {
+        gemv_nt(&a[i * k..(i + 1) * k], b, &mut c[i * n..(i + 1) * n], n, k);
+        i += 1;
+    }
+}
+
+/// int8 NT kernel: sign-extend 16 i8 lanes to i16, `_mm256_madd_epi16`
+/// pairs into 8 i32 lanes (|product| ≤ 127² = 16129, so the pairwise i32
+/// add can never overflow), accumulate with `_mm256_add_epi32`. Exact
+/// integer arithmetic — bitwise by construction, any order.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn matmul_nt_i8(a: &[i8], b: &[i8], c: &mut [i32], m: usize, n: usize, k: usize) {
+    let n4 = n & !3;
+    let k16 = k & !15;
+    for i in 0..m {
+        let ar = a.as_ptr().add(i * k);
+        let mut j = 0;
+        while j < n4 {
+            let b0 = b.as_ptr().add(j * k);
+            let b1 = b.as_ptr().add((j + 1) * k);
+            let b2 = b.as_ptr().add((j + 2) * k);
+            let b3 = b.as_ptr().add((j + 3) * k);
+            let mut v0 = _mm256_setzero_si256();
+            let mut v1 = _mm256_setzero_si256();
+            let mut v2 = _mm256_setzero_si256();
+            let mut v3 = _mm256_setzero_si256();
+            let mut p = 0;
+            while p < k16 {
+                // one 16-lane A chunk feeds all four B rows
+                let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(ar.add(p) as *const __m128i));
+                let w0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b0.add(p) as *const __m128i));
+                let w1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b1.add(p) as *const __m128i));
+                let w2 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b2.add(p) as *const __m128i));
+                let w3 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b3.add(p) as *const __m128i));
+                v0 = _mm256_add_epi32(v0, _mm256_madd_epi16(va, w0));
+                v1 = _mm256_add_epi32(v1, _mm256_madd_epi16(va, w1));
+                v2 = _mm256_add_epi32(v2, _mm256_madd_epi16(va, w2));
+                v3 = _mm256_add_epi32(v3, _mm256_madd_epi16(va, w3));
+                p += 16;
+            }
+            let mut buf = [0i32; 8];
+            _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v0);
+            let mut s0: i32 = buf.iter().sum();
+            _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v1);
+            let mut s1: i32 = buf.iter().sum();
+            _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v2);
+            let mut s2: i32 = buf.iter().sum();
+            _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v3);
+            let mut s3: i32 = buf.iter().sum();
+            while p < k {
+                let av = *ar.add(p) as i32;
+                s0 += av * *b0.add(p) as i32;
+                s1 += av * *b1.add(p) as i32;
+                s2 += av * *b2.add(p) as i32;
+                s3 += av * *b3.add(p) as i32;
+                p += 1;
+            }
+            c[i * n + j] = s0;
+            c[i * n + j + 1] = s1;
+            c[i * n + j + 2] = s2;
+            c[i * n + j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            let br = b.as_ptr().add(j * k);
+            let mut s = 0i32;
+            for p in 0..k {
+                s += *ar.add(p) as i32 * *br.add(p) as i32;
+            }
+            c[i * n + j] = s;
+            j += 1;
+        }
+    }
+}
+
+/// NN-accumulate (P̃·V): broadcast `a[i][p]`, fused AXPY over B row `p`.
+/// **Oracle tier** — same i-p-j summation order as portable, but
+/// `_mm256_fmadd_ps` / `f32::mul_add` fuse the rounding, so results are
+/// allclose (not bitwise) vs the portable/scalar reference. The
+/// `skip_zeros` early-out stays value-identical: `fma(0, b, c) == c + 0·b`
+/// under IEEE `==`.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn matmul_nn_acc(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    acc: bool,
+    skip_zeros: bool,
+) {
+    if !acc {
+        c.fill(0.0);
+    }
+    let nl = n & !7;
+    for i in 0..m {
+        let cr = c.as_mut_ptr().add(i * n);
+        for p in 0..k {
+            let av = a[i * k + p];
+            if skip_zeros && av == 0.0 {
+                continue;
+            }
+            let br = b.as_ptr().add(p * n);
+            let va = _mm256_set1_ps(av);
+            let mut j = 0;
+            while j < nl {
+                let vc = _mm256_loadu_ps(cr.add(j));
+                let vb = _mm256_loadu_ps(br.add(j));
+                _mm256_storeu_ps(cr.add(j), _mm256_fmadd_ps(va, vb, vc));
+                j += 8;
+            }
+            while j < n {
+                *cr.add(j) = av.mul_add(*br.add(j), *cr.add(j));
+                j += 1;
+            }
+        }
+    }
+}

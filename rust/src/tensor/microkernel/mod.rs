@@ -1,0 +1,456 @@
+//! Runtime-dispatched microkernels for the three flop-dominant inner
+//! loops of the attention engine: f32 QKᵀ (`matmul_nt_into` / `gemv_nt` /
+//! `dot`), the INT8 i8×i8→i32 dot (`matmul_nt_i8`), and the P̃·V
+//! accumulate (`matmul_nn_acc`).
+//!
+//! ## The three-tier kernel story
+//!
+//! 1. **Scalar reference** — the naive triple loops in tests (and the
+//!    per-`dot` loops the fast paths replaced). They define *values*;
+//!    nothing ships them on a hot path.
+//! 2. **Portable fixed-width chunks** ([`portable`]) — explicit
+//!    `[f32; LANES]` lane accumulators over the aligned prefix, the lanes
+//!    summed sequentially `0..LANES`, then a scalar remainder. Compiles
+//!    to packed SIMD on any target with no `core::arch` code, and
+//!    *defines the bitwise reference order* for the fixed-order tier
+//!    below. Always built; the fallback when `simd` is off, the target
+//!    is not x86_64, or the CPU lacks AVX2+FMA.
+//! 3. **`core::arch` kernels** ([`avx2`], behind the `simd` cargo
+//!    feature on x86_64) — hand-written AVX2(+FMA) with runtime
+//!    CPU-feature dispatch via [`Backend::select`].
+//!
+//! ## Per-kernel determinism tiers
+//!
+//! Every kernel is placed in exactly one of two documented tiers (the
+//! decision ROADMAP item 2 demanded), enforced by the property tests in
+//! this module:
+//!
+//! - **Fixed-order (bitwise) tier** — `matmul_nt_into`, `gemv_nt`,
+//!   `dot`, `matmul_nt_i8`. Each output element is produced in one
+//!   platform-independent float evaluation order: lane `l` of a
+//!   `LANES`-wide accumulator takes the terms at positions `p ≡ l (mod
+//!   LANES)` of the aligned prefix in increasing `p` with *unfused*
+//!   multiply-then-add, the lanes are summed sequentially `0..LANES`,
+//!   and the `k % LANES` remainder is added scalarly in increasing `p`.
+//!   The AVX2 kernels keep that exact order (`_mm256_mul_ps` +
+//!   `_mm256_add_ps` — never FMA, whose single rounding would change
+//!   bits — and an extract-then-sequential-sum lane reduction), so
+//!   **every backend returns bitwise-identical results**. The INT8
+//!   kernel is exact integer arithmetic, order-free, hence trivially
+//!   bitwise. The engine's decode≡prefill and cross-exec bitwise
+//!   contracts ride on this tier.
+//! - **Oracle (allclose) tier** — `matmul_nn_acc`. The P̃·V accumulate is
+//!   a bandwidth-bound AXPY sweep where fused multiply-add is the whole
+//!   point of the hardware; pinning it to unfused portable bits would
+//!   forfeit the win. Backends keep the same *summation order* (per
+//!   output, terms in increasing `p`) but may fuse the multiply-add
+//!   rounding, so results are **allclose — not bitwise — across
+//!   backends**, within `|Δ| ≤ k·ε·Σ|a·b|` (tested at rel/abs 1e-5
+//!   against the scalar oracle). Within one process the backend is fixed
+//!   (one [`Backend::select`] per process, or one explicit handle per
+//!   engine), so all *in-process* bitwise contracts — across exec modes,
+//!   pool sizes, drivers, decode-vs-prefill — still hold exactly: the
+//!   tier only relaxes parity *between* backends.
+//!
+//! The pipeline-level statement of these contracts lives next to the
+//! split-KV merge rule in [`crate::attention::pipeline`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+mod portable;
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2;
+
+/// SIMD lane width shared by every tier: 8 f32 = one AVX2 register.
+/// Narrower targets still vectorize the portable lane arrays.
+pub const LANES: usize = 8;
+
+/// One microkernel backend: a concrete implementation of the five hot
+/// loops. `Copy` so kernels and tiles carry it by value as a dispatch
+/// handle.
+///
+/// Invariant: [`Backend::Avx2`] is only constructed after runtime
+/// detection says the CPU has AVX2+FMA ([`Backend::select`] /
+/// [`Backend::all`] uphold this); calling its kernels on an unsupported
+/// CPU is undefined behavior.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// The portable fixed-width-chunk tier (always available).
+    Portable,
+    /// Hand-written `core::arch` AVX2(+FMA) kernels.
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    Avx2,
+}
+
+const TAG_UNSET: u8 = 0;
+const TAG_PORTABLE: u8 = 1;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+const TAG_AVX2: u8 = 2;
+
+/// Process-wide cached detection result (no allocation, hot-path safe).
+static SELECTED: AtomicU8 = AtomicU8::new(TAG_UNSET);
+
+impl Backend {
+    /// The best backend the running CPU supports, detected once per
+    /// process and cached in an atomic. With the `simd` feature off (or
+    /// off x86_64) this is always [`Backend::Portable`].
+    #[inline]
+    pub fn select() -> Backend {
+        match SELECTED.load(Ordering::Relaxed) {
+            TAG_PORTABLE => Backend::Portable,
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            TAG_AVX2 => Backend::Avx2,
+            _ => {
+                let b = Backend::detect();
+                SELECTED.store(b.tag(), Ordering::Relaxed);
+                b
+            }
+        }
+    }
+
+    fn detect() -> Backend {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Backend::Avx2;
+        }
+        Backend::Portable
+    }
+
+    fn tag(self) -> u8 {
+        match self {
+            Backend::Portable => TAG_PORTABLE,
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            Backend::Avx2 => TAG_AVX2,
+        }
+    }
+
+    /// Every backend runnable on this CPU (for parity tests and the
+    /// fig10 microkernel scoreboard).
+    pub fn all() -> &'static [Backend] {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        if Backend::select() == Backend::Avx2 {
+            return &[Backend::Portable, Backend::Avx2];
+        }
+        &[Backend::Portable]
+    }
+
+    /// Short display name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Portable => "portable",
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            Backend::Avx2 => "avx2",
+        }
+    }
+
+    /// C = A·Bᵀ into `c` (len m·n); A is (m,k), B is (n,k) row-major.
+    /// Fixed-order tier: bitwise-identical across backends.
+    #[inline]
+    pub fn matmul_nt_into(self, a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(c.len(), m * n);
+        match self {
+            Backend::Portable => portable::matmul_nt_into(a, b, c, m, n, k),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            // SAFETY: Avx2 is only constructed after runtime detection.
+            Backend::Avx2 => unsafe { avx2::matmul_nt_into(a, b, c, m, n, k) },
+        }
+    }
+
+    /// `c[j] = a · b[j]` for row-major B (n,k) — the m=1 decode shape of
+    /// the NT kernel. Fixed-order tier: bitwise-identical across
+    /// backends *and* to the per-[`Backend::dot`] loop it replaces.
+    #[inline]
+    pub fn gemv_nt(self, a: &[f32], b: &[f32], c: &mut [f32], n: usize, k: usize) {
+        debug_assert_eq!(a.len(), k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(c.len(), n);
+        match self {
+            Backend::Portable => portable::gemv_nt(a, b, c, n, k),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            // SAFETY: Avx2 is only constructed after runtime detection.
+            Backend::Avx2 => unsafe { avx2::gemv_nt(a, b, c, n, k) },
+        }
+    }
+
+    /// Dot product of two equal-length slices. Fixed-order tier.
+    #[inline]
+    pub fn dot(self, a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        match self {
+            Backend::Portable => portable::dot(a, b),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            // SAFETY: Avx2 is only constructed after runtime detection.
+            Backend::Avx2 => unsafe { avx2::dot(a, b) },
+        }
+    }
+
+    /// INT8 NT kernel with i32 accumulation:
+    /// `c[i][j] = Σ_p a[i][p]·b[j][p]`. Exact integer arithmetic —
+    /// trivially fixed-order tier.
+    #[inline]
+    pub fn matmul_nt_i8(self, a: &[i8], b: &[i8], c: &mut [i32], m: usize, n: usize, k: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(c.len(), m * n);
+        match self {
+            Backend::Portable => portable::matmul_nt_i8(a, b, c, m, n, k),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            // SAFETY: Avx2 is only constructed after runtime detection.
+            Backend::Avx2 => unsafe { avx2::matmul_nt_i8(a, b, c, m, n, k) },
+        }
+    }
+
+    /// NN kernel (`C (+)= A·B`; A is (m,k), B is (k,n)), optionally
+    /// accumulating, with the `skip_zeros` AXPY early-out of the sparse
+    /// P̃·V path. **Oracle tier**: backends share the summation order but
+    /// may fuse multiply-add, so results are allclose — not bitwise —
+    /// across backends (bitwise within any one backend).
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_nn_acc(
+        self,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        acc: bool,
+        skip_zeros: bool,
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        match self {
+            Backend::Portable => portable::matmul_nn_acc(a, b, c, m, n, k, acc, skip_zeros),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            // SAFETY: Avx2 is only constructed after runtime detection.
+            Backend::Avx2 => unsafe { avx2::matmul_nn_acc(a, b, c, m, n, k, acc, skip_zeros) },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, Cases};
+
+    /// Scalar oracle for NT: per-output sequential sum (values only —
+    /// the bitwise reference is the *portable* backend).
+    fn naive_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0f32;
+                for p in 0..k {
+                    s += a[i * k + p] * b[j * k + p];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        c
+    }
+
+    /// Scalar oracle for NN-accumulate. Per output element this sums
+    /// `a[i][p]·b[p][j]` in increasing `p` with unfused mul+add — the
+    /// same order as the portable i-p-j sweep, so the portable backend
+    /// must match it *bitwise*.
+    #[allow(clippy::too_many_arguments)]
+    fn naive_nn_acc(
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        acc: bool,
+        skip_zeros: bool,
+    ) {
+        if !acc {
+            c.fill(0.0);
+        }
+        for i in 0..m {
+            for j in 0..n {
+                for p in 0..k {
+                    let av = a[i * k + p];
+                    if skip_zeros && av == 0.0 {
+                        continue;
+                    }
+                    c[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+    }
+
+    /// Ragged-edge shape sweep: lane-misaligned k, unroll-misaligned n,
+    /// odd m, plus the degenerate m=1 / n=1 / empty cases.
+    fn shapes(rng: &mut crate::util::rng::Pcg) -> (usize, usize, usize) {
+        match rng.range(0, 6) {
+            0 => (1, rng.range(1, 20), rng.range(1, 40)),       // decode row
+            1 => (rng.range(1, 20), 1, rng.range(1, 40)),       // single key
+            2 => (rng.range(1, 8), rng.range(1, 8), 0),         // empty k
+            3 => (0, rng.range(0, 8), rng.range(0, 16)),        // empty m
+            _ => (rng.range(1, 20), rng.range(1, 20), rng.range(1, 70)),
+        }
+    }
+
+    #[test]
+    fn select_is_stable_and_listed() {
+        let b = Backend::select();
+        assert_eq!(b, Backend::select(), "detection must be cached");
+        assert!(Backend::all().contains(&b));
+        assert_eq!(Backend::all()[0], Backend::Portable);
+    }
+
+    #[test]
+    fn nt_fixed_order_tier_is_bitwise_across_backends() {
+        // Every backend must reproduce the portable bits exactly, on
+        // ragged tails (k, n off the lane/unroll grid), m=1, n=1, and
+        // empty blocks.
+        Cases::standard(141).check(|rng| {
+            let (m, n, k) = shapes(rng);
+            let a: Vec<f32> = rng.gauss_vec(m * k);
+            let b: Vec<f32> = rng.gauss_vec(n * k);
+            let mut reference = vec![0f32; m * n];
+            Backend::Portable.matmul_nt_into(&a, &b, &mut reference, m, n, k);
+            // portable is allclose to the scalar oracle…
+            assert_allclose(&reference, &naive_nt(&a, &b, m, n, k), 1e-4, 1e-4, "nt-oracle")?;
+            // …and every other backend is *bitwise* equal to portable
+            for &mk in Backend::all() {
+                let mut c = vec![0f32; m * n];
+                mk.matmul_nt_into(&a, &b, &mut c, m, n, k);
+                if c != reference {
+                    return Err(format!("{} nt diverged bitwise at m={m} n={n} k={k}", mk.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gemv_and_dot_are_bitwise_across_backends() {
+        Cases::standard(142).check(|rng| {
+            let n = rng.range(1, 40);
+            let k = rng.range(0, 70);
+            let a: Vec<f32> = rng.gauss_vec(k);
+            let b: Vec<f32> = rng.gauss_vec(n * k);
+            let mut reference = vec![0f32; n];
+            Backend::Portable.gemv_nt(&a, &b, &mut reference, n, k);
+            for &mk in Backend::all() {
+                let mut c = vec![0f32; n];
+                mk.gemv_nt(&a, &b, &mut c, n, k);
+                if c != reference {
+                    return Err(format!("{} gemv diverged bitwise at n={n} k={k}", mk.name()));
+                }
+                // gemv ≡ per-dot, per backend (the decode≡prefill seam)
+                let via_dot: Vec<f32> = (0..n).map(|j| mk.dot(&a, &b[j * k..(j + 1) * k])).collect();
+                if via_dot != c {
+                    return Err(format!("{} gemv != its own dot loop", mk.name()));
+                }
+                // and m=1 NT routes through the same bits
+                let mut via_mm = vec![0f32; n];
+                mk.matmul_nt_into(&a, &b, &mut via_mm, 1, n, k);
+                if via_mm != c {
+                    return Err(format!("{} m=1 nt != gemv", mk.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn i8_kernel_is_exact_on_all_backends() {
+        Cases::standard(143).check(|rng| {
+            let (m, n, k) = shapes(rng);
+            let a: Vec<i8> = (0..m * k).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> = (0..n * k).map(|_| (rng.range(0, 255) as i32 - 127) as i8).collect();
+            let mut want = vec![0i32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    want[i * n + j] =
+                        (0..k).map(|p| a[i * k + p] as i32 * b[j * k + p] as i32).sum();
+                }
+            }
+            for &mk in Backend::all() {
+                let mut c = vec![0i32; m * n];
+                mk.matmul_nt_i8(&a, &b, &mut c, m, n, k);
+                if c != want {
+                    return Err(format!("{} i8 kernel inexact at m={m} n={n} k={k}", mk.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nn_acc_oracle_tier_contract() {
+        // Portable keeps the scalar oracle's bits (same order, unfused);
+        // every backend stays allclose to the oracle within the stated
+        // tolerance (rel/abs 1e-5) on ragged shapes, with and without
+        // accumulation and zero-skipping.
+        Cases::standard(144).check(|rng| {
+            let (m, k, n) = shapes(rng);
+            let mut a: Vec<f32> = rng.gauss_vec(m * k);
+            for x in &mut a {
+                if rng.chance(0.3) {
+                    *x = 0.0; // exercise the skip_zeros identity
+                }
+            }
+            let b: Vec<f32> = rng.gauss_vec(k * n);
+            let init: Vec<f32> = rng.gauss_vec(m * n);
+            for acc in [false, true] {
+                for skip in [false, true] {
+                    let mut want = init.clone();
+                    naive_nn_acc(&a, &b, &mut want, m, n, k, acc, skip);
+                    let mut portable = init.clone();
+                    Backend::Portable.matmul_nn_acc(&a, &b, &mut portable, m, n, k, acc, skip);
+                    if portable != want {
+                        return Err(format!("portable nn_acc lost oracle bits (acc={acc} skip={skip})"));
+                    }
+                    for &mk in Backend::all() {
+                        let mut c = init.clone();
+                        mk.matmul_nn_acc(&a, &b, &mut c, m, n, k, acc, skip);
+                        assert_allclose(
+                            &c,
+                            &want,
+                            1e-5,
+                            1e-5,
+                            &format!("{} nn_acc acc={acc} skip={skip} m={m} n={n} k={k}", mk.name()),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn nn_acc_skip_zeros_is_value_identical_per_backend() {
+        // The zero-skip branch must be `==`-identical to the dense sweep
+        // on every backend (fma(0,b,c) == c + 0·b under IEEE ==).
+        Cases::standard(145).check(|rng| {
+            let (m, k, n) = (rng.range(1, 10), rng.range(1, 10), rng.range(1, 10));
+            let mut a: Vec<f32> = rng.gauss_vec(m * k);
+            for x in &mut a {
+                if rng.chance(0.4) {
+                    *x = 0.0;
+                }
+            }
+            let b: Vec<f32> = rng.gauss_vec(k * n);
+            for &mk in Backend::all() {
+                let mut skip = vec![0f32; m * n];
+                let mut dense = vec![0f32; m * n];
+                mk.matmul_nn_acc(&a, &b, &mut skip, m, n, k, false, true);
+                mk.matmul_nn_acc(&a, &b, &mut dense, m, n, k, false, false);
+                if skip != dense {
+                    return Err(format!("{} zero-skip changed values", mk.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

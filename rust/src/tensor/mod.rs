@@ -1,8 +1,23 @@
-//! Dense f32 tensor substrate: contiguous storage, blocked matmul
-//! microkernel, row-wise softmax ops, and SageAttention-style per-block
-//! INT8 quantization.
+//! Dense f32 tensor substrate: contiguous storage, runtime-dispatched
+//! matmul microkernels, row-wise softmax ops, and SageAttention-style
+//! per-block INT8 quantization.
+//!
+//! The compute kernels live in three tiers (see [`microkernel`] for the
+//! full story and the per-kernel determinism contract):
+//!
+//! 1. **scalar reference** — naive loops in tests; defines values.
+//! 2. **portable fixed-width chunks** — explicit lane accumulators that
+//!    vectorize on any target; defines the bitwise order.
+//! 3. **`core::arch` AVX2(+FMA)** — behind the `simd` cargo feature with
+//!    runtime CPU dispatch ([`microkernel::Backend::select`]).
+//!
+//! The free functions in [`matmul`] are thin wrappers over
+//! [`microkernel::Backend::select`]; hot paths that carry an explicit
+//! dispatch handle (the attention pipeline's `ScoreKernel` seam) call
+//! the [`microkernel::Backend`] methods directly.
 
 pub mod matmul;
+pub mod microkernel;
 pub mod ops;
 pub mod quant;
 

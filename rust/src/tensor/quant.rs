@@ -130,11 +130,25 @@ pub fn qk_dequant_scratch(
     out: &mut [f32],
     acc: &mut Vec<i32>,
 ) {
+    qk_dequant_scratch_with(super::microkernel::Backend::select(), q, k, scale_extra, out, acc);
+}
+
+/// [`qk_dequant_scratch`] on an explicit microkernel backend. The i8
+/// kernel is exact integer arithmetic and the dequant multiply is
+/// elementwise, so every backend produces identical bits.
+pub fn qk_dequant_scratch_with(
+    mk: super::microkernel::Backend,
+    q: &QuantBlock,
+    k: &QuantBlock,
+    scale_extra: f32,
+    out: &mut [f32],
+    acc: &mut Vec<i32>,
+) {
     debug_assert_eq!(q.d, k.d);
     debug_assert_eq!(out.len(), q.rows * k.rows);
     acc.clear();
     acc.resize(q.rows * k.rows, 0);
-    super::matmul::matmul_nt_i8(&q.data, &k.data, acc, q.rows, k.rows, q.d);
+    mk.matmul_nt_i8(&q.data, &k.data, acc, q.rows, k.rows, q.d);
     let s = q.scale * k.scale * scale_extra;
     for (o, &a) in out.iter_mut().zip(acc.iter()) {
         *o = a as f32 * s;

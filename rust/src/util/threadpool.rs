@@ -71,6 +71,14 @@ pub struct Workspace {
     /// Quantization staging: i32 QKᵀ accumulator for the INT8 score path
     /// (threaded to kernels as `ScoreScratch`).
     pub quant_i32: Vec<i32>,
+    /// Predicted-decode staging: pooled K block means (n_kblocks × d).
+    pub pred_means: Vec<f32>,
+    /// Predicted-decode staging: compressed scores Ŝ (n_kblocks).
+    pub pred_scores: Vec<f32>,
+    /// Predicted-decode staging: compressed probabilities P̂ (n_kblocks).
+    pub pred_probs: Vec<f32>,
+    /// Predicted-decode staging: TopCdf sort-order indices (n_kblocks).
+    pub pred_idx: Vec<usize>,
 }
 
 type Job = Box<dyn FnOnce() + Send + 'static>;

@@ -1,8 +1,10 @@
 //! Allocation-regression suite for the serving hot path: a **warmed-up
-//! λ-off f32 decode step performs zero heap allocations** — the
-//! worker/session `Workspace` arenas, the session's cached `SpanPlan`,
-//! and the amortized KV-cache capacity absorb every piece of per-step
-//! scratch.
+//! f32 decode step performs zero heap allocations** — under the dense,
+//! external-mask, INT8, and `Predicted` policies, and for whole
+//! `SessionManager` ticks — because the worker/session `Workspace`
+//! arenas, the session's cached `SpanPlan` and predicted mask, the
+//! manager's tick arenas, and the amortized KV-cache capacity absorb
+//! every piece of per-step scratch.
 //!
 //! The binary installs a counting global allocator. All assertions live
 //! in **one** `#[test]` so the libtest harness runs a single thread and
@@ -127,6 +129,55 @@ fn warmed_up_decode_steps_allocate_nothing() {
             session.decode_into(q, k, v, &mut out);
         }
         assert_eq!(thread_allocations() - before, 0, "INT8 dense decode step allocated");
+    }
+
+    // -- Predicted policy: the per-step stage-1 mask is pooled too ------
+    // Each step rebuilds the session-owned mask in place from workspace
+    // arenas (pooled K means, Ŝ/P̂ staging, TopCdf index sort) — zero
+    // allocations even though every step runs the full predictor.
+    {
+        use sparge::sparge::SpargeParams;
+        let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: Some(-6.0), quant: false };
+        let engine =
+            AttnEngine::builder().config(cfg()).sparge(&params).kv_split(KvSplit::Auto).build();
+        let (mut session, mut out) = warm(&engine, &toks, 209);
+        let before = thread_allocations();
+        for (q, k, v) in &toks[209..223] {
+            session.decode_into(q, k, v, &mut out);
+        }
+        let delta = thread_allocations() - before;
+        assert_eq!(delta, 0, "predicted-policy decode step allocated ({delta} / 14 steps)");
+    }
+
+    // -- SessionManager ticks: scheduling bookkeeping is arena-backed ---
+    // Three sessions decoding in lockstep exercise the batched fan-out
+    // (tick-persistent phase snapshot + ready indices); a warmed decode
+    // tick — steps AND the scheduling around them — allocates nothing.
+    // The measured window (decode tokens 40..47 per session) sits clear
+    // of KV-capacity doublings, k-block crossings, and the per-token
+    // latency vector's amortized growth.
+    {
+        use sparge::coordinator::{SeqStream, SessionManager};
+        use std::time::Instant;
+        let engine = AttnEngine::builder().config(cfg()).kv_split(KvSplit::Off).build();
+        let mut mgr = SessionManager::new(&engine, 32);
+        for (i, seed) in [(0u64, 91u64), (1, 92), (2, 93)] {
+            let mut rng = Pcg::seeded(seed);
+            let q = Tensor::randn(&[96, D], &mut rng);
+            let k = Tensor::randn(&[96, D], &mut rng);
+            let v = Tensor::randn(&[96, D], &mut rng);
+            mgr.admit(i, SeqStream { q, k, v, prefill: 32 }, Instant::now());
+        }
+        for _ in 0..40 {
+            mgr.tick(); // 1 prefill tick + 39 warmup decode ticks
+        }
+        let before = thread_allocations();
+        for _ in 0..7 {
+            let done = mgr.tick();
+            assert!(done.is_empty(), "measured ticks must not retire sessions");
+        }
+        let delta = thread_allocations() - before;
+        assert_eq!(delta, 0, "warmed serving tick allocated ({delta} / 7 ticks of 3 sessions)");
     }
 
     // -- Pool execution: workers' own arenas absorb the span scratch ----

@@ -13,6 +13,7 @@ use sparge::attention::types::{AttnConfig, BlockMask, SkipStats};
 use sparge::attention::{score_block, AttnEngine, Execution, FlashTile, Precision, SparsityPolicy};
 use sparge::baselines;
 use sparge::sparge::kernel::SpargeParams;
+use sparge::tensor::microkernel::Backend;
 use sparge::tensor::quant::{self, QuantBlock};
 use sparge::tensor::Tensor;
 use sparge::util::prop::{assert_allclose, Cases};
@@ -78,6 +79,7 @@ fn reference_flash_stats(q: &Tensor, k: &Tensor, v: &Tensor, cfg: &AttnConfig) -
                 cfg.cw,
                 &mut stats,
                 true, // pre-refactor loops always took the zero-skip branch
+                Backend::select(),
             );
             k0 = k1;
         }
@@ -123,7 +125,16 @@ fn reference_sparse_f32(
             }
             score_block(q, k, q0, q1, k0, k1, 0, scale, cfg.causal, &mut sbuf);
             let vb = &v.data()[k0 * dv..k1 * dv];
-            tile.ingest(&sbuf[..(q1 - q0) * (k1 - k0)], k1 - k0, vb, lambda, cfg.cw, &mut stats, true);
+            tile.ingest(
+                &sbuf[..(q1 - q0) * (k1 - k0)],
+                k1 - k0,
+                vb,
+                lambda,
+                cfg.cw,
+                &mut stats,
+                true,
+                Backend::select(),
+            );
         }
         out.data_mut()[q0 * dv..q1 * dv].copy_from_slice(&tile.finalize());
     }
@@ -183,7 +194,16 @@ fn reference_sparse_quant(
                     }
                 }
             }
-            tile.ingest(sb, kblk.rows, &v.data()[k0 * dv..k1 * dv], lambda, cfg.cw, &mut stats, true);
+            tile.ingest(
+                sb,
+                kblk.rows,
+                &v.data()[k0 * dv..k1 * dv],
+                lambda,
+                cfg.cw,
+                &mut stats,
+                true,
+                Backend::select(),
+            );
         }
         out.data_mut()[q0 * dv..q1 * dv].copy_from_slice(&tile.finalize());
     }
