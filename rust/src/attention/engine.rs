@@ -826,6 +826,8 @@ impl AttnSession<'_> {
         if self.rows == 0 {
             self.init_dims(k, v);
             if self.engine.precision == Precision::Int8 {
+                // Init-on-empty: runs once on the first appended token,
+                // before the session is warm. sparge-lint: allow(hot-path-no-alloc)
                 self.kmean = Some(vec![0.0; self.d]);
             }
         }

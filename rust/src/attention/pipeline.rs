@@ -113,6 +113,8 @@
 //! dequant scheme) is a new [`ScoreKernel`] impl. Neither requires touching
 //! this loop again.
 
+use std::sync::Mutex;
+
 use crate::tensor::microkernel::Backend;
 use crate::tensor::Tensor;
 use crate::util::threadpool::{self, WorkerPool, Workspace};
@@ -705,14 +707,16 @@ pub fn run_tiled_into(
     }
     let row_stats = {
         // Disjoint per-row output slices; each worker locks only its own
-        // (uncontended) mutex, so no copies and no write races.
-        let row_chunks: Vec<std::sync::Mutex<&mut [f32]>> =
-            out.chunks_mut(cfg.bq * dv).map(std::sync::Mutex::new).collect();
+        // (uncontended) mutex, so no copies and no write races. This
+        // collect runs only on the prefill shape — the decode shape
+        // (tm == 1) returned above, and alloc_regression pins it.
+        // sparge-lint: allow(hot-path-no-alloc)
+        let row_out: Vec<Mutex<&mut [f32]>> = out.chunks_mut(cfg.bq * dv).map(Mutex::new).collect();
         exec.map_ws(tm, ws, |bi, wws| {
             let q1 = (bi * cfg.bq + cfg.bq).min(n);
             let kend = filter.kblock_end(q1, cfg, tn);
             let (tile, st) = reduce_span(q, k, v, cfg, kernel, filter, bi, 0, kend, wws);
-            tile.finalize_into(&mut row_chunks[bi].lock().unwrap());
+            tile.finalize_into(&mut row_out[bi].lock().unwrap());
             tile.recycle(wws);
             st
         })
@@ -844,10 +848,40 @@ impl SpanPlan {
 
 /// A `*mut T` the span workers can share: each item writes only its own
 /// disjoint slot, and the executor synchronizes completion before any
-/// read, so no two accesses alias.
+/// read, so no two accesses alias. Fan-out sites assert the disjointness
+/// precondition with [`debug_assert_disjoint_slots`] in debug builds.
 pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+// SAFETY: the pointer crosses threads, but every fan-out item
+// dereferences only its own disjoint slot (see the type docs), so no two
+// threads ever touch the same address concurrently.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: same argument — a shared `&SendPtr` only ever yields writes to
+// per-item disjoint slots, synchronized by executor completion.
 unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Debug-assert that the slot ranges a [`SendPtr`] fan-out will write are
+/// pairwise disjoint: `slot(w)` returns item `w`'s `(start, len)` in
+/// arena elements. Zero-length slots never overlap anything. The check is
+/// allocation-free (O(n²) pairwise scan) and compiles to nothing in
+/// release builds, so hot paths may call it unconditionally.
+#[inline]
+pub(crate) fn debug_assert_disjoint_slots(n: usize, slot: impl Fn(usize) -> (usize, usize)) {
+    if !cfg!(debug_assertions) {
+        return;
+    }
+    for a in 0..n {
+        let (s0, l0) = slot(a);
+        for b in (a + 1)..n {
+            let (s1, l1) = slot(b);
+            assert!(
+                l0 == 0 || l1 == 0 || s0 + l0 <= s1 || s1 + l1 <= s0,
+                "overlapping fan-out slots: item {a} = [{s0}, {}) vs item {b} = [{s1}, {})",
+                s0 + l0,
+                s1 + l1
+            );
+        }
+    }
+}
 
 /// The split-KV (Flash-Decoding) driver. Allocating convenience over
 /// [`run_tiled_splitkv_into`] (throwaway plan/workspace/output — fine
@@ -943,6 +977,13 @@ pub fn run_tiled_splitkv_into(
 
     {
         let items = &plan.items;
+        // Every item's write range must be disjoint before handing the
+        // raw arena pointer to the workers below.
+        debug_assert_disjoint_slots(nitems, |w| {
+            let bi = items[w].0;
+            let rows = (bi * cfg.bq + cfg.bq).min(n) - bi * cfg.bq;
+            (w * stride, rows * (2 + dv))
+        });
         let pptr = SendPtr(plan.partials.as_mut_ptr());
         let sptr = SendPtr(plan.stats.as_mut_ptr());
         exec.for_each_ws(nitems, ws, |w, wws| {
@@ -1349,6 +1390,42 @@ mod tests {
             assert_eq!(st, st_fresh, "nk={nk}: stats diverged");
             assert_eq!(plan.items(), cfg.n_kblocks(nk).div_ceil(2), "nk={nk}: plan geometry");
         }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "overlapping fan-out slots")]
+    fn overlapping_fanout_plan_trips_debug_checker() {
+        // Slot stride 4 but slot length 6: items 0 and 1 overlap.
+        debug_assert_disjoint_slots(2, |w| (w * 4, 6));
+    }
+
+    #[test]
+    fn disjoint_and_empty_fanout_slots_pass_debug_checker() {
+        debug_assert_disjoint_slots(3, |w| (w * 4, 4));
+        debug_assert_disjoint_slots(3, |w| (w * 4, 0));
+        debug_assert_disjoint_slots(0, |_| (0, 0));
+    }
+
+    #[test]
+    fn miri_splitkv_sendptr_fanout_tiny() {
+        // Tiny shape driven through real pool threads: the SendPtr
+        // disjoint-slot arena writes — the path the Miri CI leg checks
+        // for UB (the big numeric suites above are too slow under Miri).
+        let pool = crate::util::threadpool::WorkerPool::new(2);
+        let mut rng = Pcg::seeded(33);
+        let (n, d) = (9, 4);
+        let q = Tensor::randn(&[n, d], &mut rng);
+        let k = Tensor::randn(&[n, d], &mut rng);
+        let v = Tensor::randn(&[n, d], &mut rng);
+        let cfg = AttnConfig { bq: 4, bk: 4, causal: true, scale: None, cw: 2, row_offset: 0 };
+        let kernel = F32Kernel::new(&q, &k, &cfg);
+        let (inline, si) =
+            run_tiled_splitkv(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Inline, 1);
+        let (pooled, sp) =
+            run_tiled_splitkv(&q, &k, &v, &cfg, &kernel, &DenseFilter, Exec::Pool(&pool), 1);
+        assert_eq!(inline, pooled, "pool fan-out must be bitwise vs inline");
+        assert_eq!(si, sp);
     }
 
     #[test]

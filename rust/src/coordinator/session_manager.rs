@@ -51,7 +51,7 @@
 
 use std::time::Instant;
 
-use crate::attention::pipeline::SendPtr;
+use crate::attention::pipeline::{debug_assert_disjoint_slots, SendPtr};
 use crate::attention::{AttnEngine, AttnSession, Exec, SkipStats, Workspace};
 use crate::tensor::Tensor;
 use crate::workloads::{synthetic, SyntheticSpec};
@@ -341,6 +341,10 @@ impl<'e> SessionManager<'e> {
             // with the manager's persistent workspace; each participant
             // runs exactly one session's step inline
             _ => {
+                // Each fan-out item owns exactly one `ActiveSeq` slot;
+                // a duplicate index in `ready_idx` would alias a mutable
+                // borrow — assert disjointness before sharing the pointer.
+                debug_assert_disjoint_slots(self.ready_idx.len(), |t| (self.ready_idx[t], 1));
                 let base = SendPtr(self.active.as_mut_ptr());
                 let idx = &self.ready_idx;
                 self.engine.exec().for_each_ws(idx.len(), &mut self.tick_ws, |t, _ws| {
@@ -355,6 +359,9 @@ impl<'e> SessionManager<'e> {
                 });
             }
         }
+        // Retirement is rare (once per sequence) and returns ownership to
+        // the caller; steady-state ticks take the empty-Vec no-alloc path.
+        // sparge-lint: allow(hot-path-no-alloc)
         let mut done = Vec::new();
         let mut i = 0;
         while i < self.active.len() {
@@ -528,6 +535,28 @@ mod tests {
             for (m, s) in managed.iter().zip(&sequential) {
                 assert_eq!(m.stats, s.stats, "chunked split-KV stats (batch {max_active}, id {})", m.id);
             }
+        }
+    }
+
+    #[test]
+    fn miri_batched_tick_sendptr_fanout_tiny() {
+        // Miri-sized model of the batched decode arm: three decode-only
+        // streams are ready on the very first tick, so every tick runs
+        // the SendPtr fan-out over `active` (the raw-pointer path Miri
+        // checks for aliasing violations). Results must still match the
+        // sequential baseline bitwise.
+        let engine = serving_engine(8, 8, 2);
+        let specs = [spec(0, 3, 41), spec(0, 3, 42), spec(0, 2, 43)];
+        let sequential: Vec<SeqResult> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| run_sequential(&engine, i as u64, &SeqStream::synth(s)))
+            .collect();
+        let managed = run_managed(&engine, 8, 3, &specs);
+        assert_eq!(managed.len(), sequential.len());
+        for (m, s) in managed.iter().zip(&sequential) {
+            assert_eq!(m.out, s.out, "batched fan-out diverged (id {})", m.id);
+            assert_eq!(m.stats, s.stats);
         }
     }
 

@@ -64,6 +64,25 @@
 //! constructor), workloads, tuner, cost model, and the PJRT runtime
 //! that loads and executes the artifacts. Python never runs on the
 //! request path.
+//!
+//! These contracts are machine-checked: `cargo run -p xtask -- lint`
+//! runs the repo-contract static-analysis pass (unsafe hygiene,
+//! fixed-order/no-FMA, hot-path/no-alloc, thread-spawn and serving-panic
+//! confinement), and CI backs it with Miri, ThreadSanitizer, and loom
+//! model checks over the unsafe concurrency core. See CONTRIBUTING.md
+//! ("Correctness contracts and how they're enforced") for the full
+//! contract → static rule → runtime suite map and local run commands.
+
+// Every unsafe operation must sit in an explicit `unsafe {}` block with
+// its own `// SAFETY:` comment, even inside `unsafe fn` — enforced
+// together with the sparge-lint `unsafe-needs-safety` rule.
+#![deny(unsafe_op_in_unsafe_fn)]
+// Style lints we deliberately keep off (clippy runs with -D warnings in
+// CI): index-based loops mirror the kernel math they implement, and the
+// wide seam signatures (q/k/v/dims/scale...) are the documented API.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::uninlined_format_args)]
+#![allow(clippy::too_many_arguments)]
 
 pub mod attention;
 pub mod baselines;

@@ -3,7 +3,9 @@
 //! Safety: every function here is `unsafe` with
 //! `#[target_feature(enable = ...)]` — callers must have verified the
 //! CPU supports AVX2 and FMA ([`super::Backend::select`] does, once per
-//! process). Under edition 2021 the bodies are implicit unsafe blocks.
+//! process). The crate denies `unsafe_op_in_unsafe_fn`, so each body
+//! wraps its intrinsic/pointer work in an explicit `unsafe {}` block
+//! whose SAFETY comment states the in-bounds argument.
 //!
 //! Determinism: the f32 NT family (`matmul_nt_into`, `gemv_nt`, `dot`)
 //! is in the **fixed-order bitwise tier** — it reproduces the portable
@@ -17,93 +19,122 @@
 //! bit-for-bit too. `matmul_nt_i8` is exact integer arithmetic.
 //! `matmul_nn_acc` is the **oracle tier**: same summation order as
 //! portable, but fused (`_mm256_fmadd_ps` / `f32::mul_add`) rounding.
+//! The fixed-order/fused split is machine-checked by the sparge-lint
+//! `fixed-order-no-fma` rule (xtask/lint.toml).
 
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::*;
 
 /// Sum the 8 lanes of `v` sequentially `0..8` — the same fold as
 /// `[f32; 8]::iter().sum()` in the portable tier (bitwise contract).
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2.
 #[inline]
 #[target_feature(enable = "avx2")]
 unsafe fn hsum_seq(v: __m256) -> f32 {
     let mut buf = [0f32; 8];
-    _mm256_storeu_ps(buf.as_mut_ptr(), v);
+    // SAFETY: `buf` is a stack array of exactly 8 f32s, matching the
+    // 256-bit unaligned store.
+    unsafe {
+        _mm256_storeu_ps(buf.as_mut_ptr(), v);
+    }
     buf.iter().sum()
 }
 
 /// Dot product; bitwise-identical to `portable::dot`.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 and `b.len() >= a.len()`.
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
     let k = a.len();
     let kl = k & !7;
     let ap = a.as_ptr();
     let bp = b.as_ptr();
-    let mut vacc = _mm256_setzero_ps();
-    let mut p = 0;
-    while p < kl {
-        let va = _mm256_loadu_ps(ap.add(p));
-        let vb = _mm256_loadu_ps(bp.add(p));
-        vacc = _mm256_add_ps(vacc, _mm256_mul_ps(va, vb));
-        p += 8;
+    // SAFETY: `p` steps in 8s below `kl <= k`, so every 8-lane load from
+    // `ap`/`bp` stays inside the `k`-element slices.
+    unsafe {
+        let mut vacc = _mm256_setzero_ps();
+        let mut p = 0;
+        while p < kl {
+            let va = _mm256_loadu_ps(ap.add(p));
+            let vb = _mm256_loadu_ps(bp.add(p));
+            vacc = _mm256_add_ps(vacc, _mm256_mul_ps(va, vb));
+            p += 8;
+        }
+        let mut s = hsum_seq(vacc);
+        while p < k {
+            s += a[p] * b[p];
+            p += 1;
+        }
+        s
     }
-    let mut s = hsum_seq(vacc);
-    while p < k {
-        s += a[p] * b[p];
-        p += 1;
-    }
-    s
 }
 
 /// GEMV against row-major B; bitwise-identical to `portable::gemv_nt`
 /// (and hence to the per-`dot` loop — the decode≡prefill seam).
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2, `a.len() >= k`,
+/// `b.len() >= n * k`, and `c.len() >= n`.
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn gemv_nt(a: &[f32], b: &[f32], c: &mut [f32], n: usize, k: usize) {
     let n4 = n & !3;
     let kl = k & !7;
     let ap = a.as_ptr();
-    let mut j = 0;
-    while j < n4 {
-        let b0 = b.as_ptr().add(j * k);
-        let b1 = b.as_ptr().add((j + 1) * k);
-        let b2 = b.as_ptr().add((j + 2) * k);
-        let b3 = b.as_ptr().add((j + 3) * k);
-        let mut v0 = _mm256_setzero_ps();
-        let mut v1 = _mm256_setzero_ps();
-        let mut v2 = _mm256_setzero_ps();
-        let mut v3 = _mm256_setzero_ps();
-        let mut p = 0;
-        while p < kl {
-            let va = _mm256_loadu_ps(ap.add(p));
-            v0 = _mm256_add_ps(v0, _mm256_mul_ps(va, _mm256_loadu_ps(b0.add(p))));
-            v1 = _mm256_add_ps(v1, _mm256_mul_ps(va, _mm256_loadu_ps(b1.add(p))));
-            v2 = _mm256_add_ps(v2, _mm256_mul_ps(va, _mm256_loadu_ps(b2.add(p))));
-            v3 = _mm256_add_ps(v3, _mm256_mul_ps(va, _mm256_loadu_ps(b3.add(p))));
-            p += 8;
+    // SAFETY: `j + 3 < n4 <= n` bounds the four row pointers inside
+    // `b[.. n * k]`, and `p` steps in 8s below `kl <= k`, so every load
+    // stays inside its row; the scalar remainder indexes `p < k`.
+    unsafe {
+        let mut j = 0;
+        while j < n4 {
+            let b0 = b.as_ptr().add(j * k);
+            let b1 = b.as_ptr().add((j + 1) * k);
+            let b2 = b.as_ptr().add((j + 2) * k);
+            let b3 = b.as_ptr().add((j + 3) * k);
+            let mut v0 = _mm256_setzero_ps();
+            let mut v1 = _mm256_setzero_ps();
+            let mut v2 = _mm256_setzero_ps();
+            let mut v3 = _mm256_setzero_ps();
+            let mut p = 0;
+            while p < kl {
+                let va = _mm256_loadu_ps(ap.add(p));
+                v0 = _mm256_add_ps(v0, _mm256_mul_ps(va, _mm256_loadu_ps(b0.add(p))));
+                v1 = _mm256_add_ps(v1, _mm256_mul_ps(va, _mm256_loadu_ps(b1.add(p))));
+                v2 = _mm256_add_ps(v2, _mm256_mul_ps(va, _mm256_loadu_ps(b2.add(p))));
+                v3 = _mm256_add_ps(v3, _mm256_mul_ps(va, _mm256_loadu_ps(b3.add(p))));
+                p += 8;
+            }
+            let mut s = [hsum_seq(v0), hsum_seq(v1), hsum_seq(v2), hsum_seq(v3)];
+            while p < k {
+                let av = a[p];
+                s[0] += av * *b0.add(p);
+                s[1] += av * *b1.add(p);
+                s[2] += av * *b2.add(p);
+                s[3] += av * *b3.add(p);
+                p += 1;
+            }
+            c[j] = s[0];
+            c[j + 1] = s[1];
+            c[j + 2] = s[2];
+            c[j + 3] = s[3];
+            j += 4;
         }
-        let mut s = [hsum_seq(v0), hsum_seq(v1), hsum_seq(v2), hsum_seq(v3)];
-        while p < k {
-            let av = a[p];
-            s[0] += av * *b0.add(p);
-            s[1] += av * *b1.add(p);
-            s[2] += av * *b2.add(p);
-            s[3] += av * *b3.add(p);
-            p += 1;
+        while j < n {
+            c[j] = dot(a, &b[j * k..(j + 1) * k]);
+            j += 1;
         }
-        c[j] = s[0];
-        c[j + 1] = s[1];
-        c[j + 2] = s[2];
-        c[j + 3] = s[3];
-        j += 4;
-    }
-    while j < n {
-        c[j] = dot(a, &b[j * k..(j + 1) * k]);
-        j += 1;
     }
 }
 
 /// NT kernel, 2×4 register tile; bitwise-identical to
 /// `portable::matmul_nt_into`. 2 A vectors + 4 B vectors + 8
 /// accumulators = 14 of the 16 ymm registers.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2, `a.len() >= m * k`,
+/// `b.len() >= n * k`, and `c.len() >= m * n`.
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn matmul_nt_into(
     a: &[f32],
@@ -116,86 +147,92 @@ pub(super) unsafe fn matmul_nt_into(
     let n4 = n & !3;
     let kl = k & !7;
     let m2 = m & !1;
-    let mut i = 0;
-    while i < m2 {
-        let ar0 = a.as_ptr().add(i * k);
-        let ar1 = a.as_ptr().add((i + 1) * k);
-        let mut j = 0;
-        while j < n4 {
-            let b0 = b.as_ptr().add(j * k);
-            let b1 = b.as_ptr().add((j + 1) * k);
-            let b2 = b.as_ptr().add((j + 2) * k);
-            let b3 = b.as_ptr().add((j + 3) * k);
-            let mut a00 = _mm256_setzero_ps();
-            let mut a01 = _mm256_setzero_ps();
-            let mut a02 = _mm256_setzero_ps();
-            let mut a03 = _mm256_setzero_ps();
-            let mut a10 = _mm256_setzero_ps();
-            let mut a11 = _mm256_setzero_ps();
-            let mut a12 = _mm256_setzero_ps();
-            let mut a13 = _mm256_setzero_ps();
-            let mut p = 0;
-            while p < kl {
-                let va0 = _mm256_loadu_ps(ar0.add(p));
-                let va1 = _mm256_loadu_ps(ar1.add(p));
-                let vb0 = _mm256_loadu_ps(b0.add(p));
-                let vb1 = _mm256_loadu_ps(b1.add(p));
-                let vb2 = _mm256_loadu_ps(b2.add(p));
-                let vb3 = _mm256_loadu_ps(b3.add(p));
-                a00 = _mm256_add_ps(a00, _mm256_mul_ps(va0, vb0));
-                a01 = _mm256_add_ps(a01, _mm256_mul_ps(va0, vb1));
-                a02 = _mm256_add_ps(a02, _mm256_mul_ps(va0, vb2));
-                a03 = _mm256_add_ps(a03, _mm256_mul_ps(va0, vb3));
-                a10 = _mm256_add_ps(a10, _mm256_mul_ps(va1, vb0));
-                a11 = _mm256_add_ps(a11, _mm256_mul_ps(va1, vb1));
-                a12 = _mm256_add_ps(a12, _mm256_mul_ps(va1, vb2));
-                a13 = _mm256_add_ps(a13, _mm256_mul_ps(va1, vb3));
-                p += 8;
+    // SAFETY: row pointers are bounded by `i + 1 < m2 <= m` and
+    // `j + 3 < n4 <= n`; vector loads step `p` in 8s below `kl <= k` and
+    // the scalar remainder indexes `p < k`, so every access stays inside
+    // the `m*k` / `n*k` / `m*n` slices the caller guarantees.
+    unsafe {
+        let mut i = 0;
+        while i < m2 {
+            let ar0 = a.as_ptr().add(i * k);
+            let ar1 = a.as_ptr().add((i + 1) * k);
+            let mut j = 0;
+            while j < n4 {
+                let b0 = b.as_ptr().add(j * k);
+                let b1 = b.as_ptr().add((j + 1) * k);
+                let b2 = b.as_ptr().add((j + 2) * k);
+                let b3 = b.as_ptr().add((j + 3) * k);
+                let mut a00 = _mm256_setzero_ps();
+                let mut a01 = _mm256_setzero_ps();
+                let mut a02 = _mm256_setzero_ps();
+                let mut a03 = _mm256_setzero_ps();
+                let mut a10 = _mm256_setzero_ps();
+                let mut a11 = _mm256_setzero_ps();
+                let mut a12 = _mm256_setzero_ps();
+                let mut a13 = _mm256_setzero_ps();
+                let mut p = 0;
+                while p < kl {
+                    let va0 = _mm256_loadu_ps(ar0.add(p));
+                    let va1 = _mm256_loadu_ps(ar1.add(p));
+                    let vb0 = _mm256_loadu_ps(b0.add(p));
+                    let vb1 = _mm256_loadu_ps(b1.add(p));
+                    let vb2 = _mm256_loadu_ps(b2.add(p));
+                    let vb3 = _mm256_loadu_ps(b3.add(p));
+                    a00 = _mm256_add_ps(a00, _mm256_mul_ps(va0, vb0));
+                    a01 = _mm256_add_ps(a01, _mm256_mul_ps(va0, vb1));
+                    a02 = _mm256_add_ps(a02, _mm256_mul_ps(va0, vb2));
+                    a03 = _mm256_add_ps(a03, _mm256_mul_ps(va0, vb3));
+                    a10 = _mm256_add_ps(a10, _mm256_mul_ps(va1, vb0));
+                    a11 = _mm256_add_ps(a11, _mm256_mul_ps(va1, vb1));
+                    a12 = _mm256_add_ps(a12, _mm256_mul_ps(va1, vb2));
+                    a13 = _mm256_add_ps(a13, _mm256_mul_ps(va1, vb3));
+                    p += 8;
+                }
+                let mut s = [
+                    hsum_seq(a00),
+                    hsum_seq(a01),
+                    hsum_seq(a02),
+                    hsum_seq(a03),
+                    hsum_seq(a10),
+                    hsum_seq(a11),
+                    hsum_seq(a12),
+                    hsum_seq(a13),
+                ];
+                while p < k {
+                    let av0 = *ar0.add(p);
+                    let av1 = *ar1.add(p);
+                    s[0] += av0 * *b0.add(p);
+                    s[1] += av0 * *b1.add(p);
+                    s[2] += av0 * *b2.add(p);
+                    s[3] += av0 * *b3.add(p);
+                    s[4] += av1 * *b0.add(p);
+                    s[5] += av1 * *b1.add(p);
+                    s[6] += av1 * *b2.add(p);
+                    s[7] += av1 * *b3.add(p);
+                    p += 1;
+                }
+                c[i * n + j] = s[0];
+                c[i * n + j + 1] = s[1];
+                c[i * n + j + 2] = s[2];
+                c[i * n + j + 3] = s[3];
+                c[(i + 1) * n + j] = s[4];
+                c[(i + 1) * n + j + 1] = s[5];
+                c[(i + 1) * n + j + 2] = s[6];
+                c[(i + 1) * n + j + 3] = s[7];
+                j += 4;
             }
-            let mut s = [
-                hsum_seq(a00),
-                hsum_seq(a01),
-                hsum_seq(a02),
-                hsum_seq(a03),
-                hsum_seq(a10),
-                hsum_seq(a11),
-                hsum_seq(a12),
-                hsum_seq(a13),
-            ];
-            while p < k {
-                let av0 = *ar0.add(p);
-                let av1 = *ar1.add(p);
-                s[0] += av0 * *b0.add(p);
-                s[1] += av0 * *b1.add(p);
-                s[2] += av0 * *b2.add(p);
-                s[3] += av0 * *b3.add(p);
-                s[4] += av1 * *b0.add(p);
-                s[5] += av1 * *b1.add(p);
-                s[6] += av1 * *b2.add(p);
-                s[7] += av1 * *b3.add(p);
-                p += 1;
+            while j < n {
+                let br = &b[j * k..(j + 1) * k];
+                c[i * n + j] = dot(&a[i * k..(i + 1) * k], br);
+                c[(i + 1) * n + j] = dot(&a[(i + 1) * k..(i + 2) * k], br);
+                j += 1;
             }
-            c[i * n + j] = s[0];
-            c[i * n + j + 1] = s[1];
-            c[i * n + j + 2] = s[2];
-            c[i * n + j + 3] = s[3];
-            c[(i + 1) * n + j] = s[4];
-            c[(i + 1) * n + j + 1] = s[5];
-            c[(i + 1) * n + j + 2] = s[6];
-            c[(i + 1) * n + j + 3] = s[7];
-            j += 4;
+            i += 2;
         }
-        while j < n {
-            let br = &b[j * k..(j + 1) * k];
-            c[i * n + j] = dot(&a[i * k..(i + 1) * k], br);
-            c[(i + 1) * n + j] = dot(&a[(i + 1) * k..(i + 2) * k], br);
-            j += 1;
+        while i < m {
+            gemv_nt(&a[i * k..(i + 1) * k], b, &mut c[i * n..(i + 1) * n], n, k);
+            i += 1;
         }
-        i += 2;
-    }
-    while i < m {
-        gemv_nt(&a[i * k..(i + 1) * k], b, &mut c[i * n..(i + 1) * n], n, k);
-        i += 1;
     }
 }
 
@@ -203,67 +240,77 @@ pub(super) unsafe fn matmul_nt_into(
 /// pairs into 8 i32 lanes (|product| ≤ 127² = 16129, so the pairwise i32
 /// add can never overflow), accumulate with `_mm256_add_epi32`. Exact
 /// integer arithmetic — bitwise by construction, any order.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2, `a.len() >= m * k`,
+/// `b.len() >= n * k`, and `c.len() >= m * n`.
 #[target_feature(enable = "avx2")]
 pub(super) unsafe fn matmul_nt_i8(a: &[i8], b: &[i8], c: &mut [i32], m: usize, n: usize, k: usize) {
     let n4 = n & !3;
     let k16 = k & !15;
-    for i in 0..m {
-        let ar = a.as_ptr().add(i * k);
-        let mut j = 0;
-        while j < n4 {
-            let b0 = b.as_ptr().add(j * k);
-            let b1 = b.as_ptr().add((j + 1) * k);
-            let b2 = b.as_ptr().add((j + 2) * k);
-            let b3 = b.as_ptr().add((j + 3) * k);
-            let mut v0 = _mm256_setzero_si256();
-            let mut v1 = _mm256_setzero_si256();
-            let mut v2 = _mm256_setzero_si256();
-            let mut v3 = _mm256_setzero_si256();
-            let mut p = 0;
-            while p < k16 {
-                // one 16-lane A chunk feeds all four B rows
-                let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(ar.add(p) as *const __m128i));
-                let w0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b0.add(p) as *const __m128i));
-                let w1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b1.add(p) as *const __m128i));
-                let w2 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b2.add(p) as *const __m128i));
-                let w3 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b3.add(p) as *const __m128i));
-                v0 = _mm256_add_epi32(v0, _mm256_madd_epi16(va, w0));
-                v1 = _mm256_add_epi32(v1, _mm256_madd_epi16(va, w1));
-                v2 = _mm256_add_epi32(v2, _mm256_madd_epi16(va, w2));
-                v3 = _mm256_add_epi32(v3, _mm256_madd_epi16(va, w3));
-                p += 16;
+    // SAFETY: row pointers are bounded by `i < m` and `j + 3 < n4 <= n`;
+    // the 128-bit loads step `p` in 16s below `k16 <= k` and the scalar
+    // remainder indexes `p < k`, so every access stays inside the
+    // `m*k` / `n*k` slices the caller guarantees.
+    unsafe {
+        for i in 0..m {
+            let ar = a.as_ptr().add(i * k);
+            let mut j = 0;
+            while j < n4 {
+                let b0 = b.as_ptr().add(j * k);
+                let b1 = b.as_ptr().add((j + 1) * k);
+                let b2 = b.as_ptr().add((j + 2) * k);
+                let b3 = b.as_ptr().add((j + 3) * k);
+                let mut v0 = _mm256_setzero_si256();
+                let mut v1 = _mm256_setzero_si256();
+                let mut v2 = _mm256_setzero_si256();
+                let mut v3 = _mm256_setzero_si256();
+                let mut p = 0;
+                while p < k16 {
+                    // one 16-lane A chunk feeds all four B rows
+                    let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(ar.add(p) as *const __m128i));
+                    let w0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b0.add(p) as *const __m128i));
+                    let w1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b1.add(p) as *const __m128i));
+                    let w2 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b2.add(p) as *const __m128i));
+                    let w3 = _mm256_cvtepi8_epi16(_mm_loadu_si128(b3.add(p) as *const __m128i));
+                    v0 = _mm256_add_epi32(v0, _mm256_madd_epi16(va, w0));
+                    v1 = _mm256_add_epi32(v1, _mm256_madd_epi16(va, w1));
+                    v2 = _mm256_add_epi32(v2, _mm256_madd_epi16(va, w2));
+                    v3 = _mm256_add_epi32(v3, _mm256_madd_epi16(va, w3));
+                    p += 16;
+                }
+                let mut buf = [0i32; 8];
+                _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v0);
+                let mut s0: i32 = buf.iter().sum();
+                _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v1);
+                let mut s1: i32 = buf.iter().sum();
+                _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v2);
+                let mut s2: i32 = buf.iter().sum();
+                _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v3);
+                let mut s3: i32 = buf.iter().sum();
+                while p < k {
+                    let av = *ar.add(p) as i32;
+                    s0 += av * *b0.add(p) as i32;
+                    s1 += av * *b1.add(p) as i32;
+                    s2 += av * *b2.add(p) as i32;
+                    s3 += av * *b3.add(p) as i32;
+                    p += 1;
+                }
+                c[i * n + j] = s0;
+                c[i * n + j + 1] = s1;
+                c[i * n + j + 2] = s2;
+                c[i * n + j + 3] = s3;
+                j += 4;
             }
-            let mut buf = [0i32; 8];
-            _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v0);
-            let mut s0: i32 = buf.iter().sum();
-            _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v1);
-            let mut s1: i32 = buf.iter().sum();
-            _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v2);
-            let mut s2: i32 = buf.iter().sum();
-            _mm256_storeu_si256(buf.as_mut_ptr() as *mut __m256i, v3);
-            let mut s3: i32 = buf.iter().sum();
-            while p < k {
-                let av = *ar.add(p) as i32;
-                s0 += av * *b0.add(p) as i32;
-                s1 += av * *b1.add(p) as i32;
-                s2 += av * *b2.add(p) as i32;
-                s3 += av * *b3.add(p) as i32;
-                p += 1;
+            while j < n {
+                let br = b.as_ptr().add(j * k);
+                let mut s = 0i32;
+                for p in 0..k {
+                    s += *ar.add(p) as i32 * *br.add(p) as i32;
+                }
+                c[i * n + j] = s;
+                j += 1;
             }
-            c[i * n + j] = s0;
-            c[i * n + j + 1] = s1;
-            c[i * n + j + 2] = s2;
-            c[i * n + j + 3] = s3;
-            j += 4;
-        }
-        while j < n {
-            let br = b.as_ptr().add(j * k);
-            let mut s = 0i32;
-            for p in 0..k {
-                s += *ar.add(p) as i32 * *br.add(p) as i32;
-            }
-            c[i * n + j] = s;
-            j += 1;
         }
     }
 }
@@ -274,7 +321,10 @@ pub(super) unsafe fn matmul_nt_i8(a: &[i8], b: &[i8], c: &mut [i32], m: usize, n
 /// allclose (not bitwise) vs the portable/scalar reference. The
 /// `skip_zeros` early-out stays value-identical: `fma(0, b, c) == c + 0·b`
 /// under IEEE `==`.
-#[allow(clippy::too_many_arguments)]
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2 and FMA, `a.len() >= m * k`,
+/// `b.len() >= k * n`, and `c.len() >= m * n`.
 #[target_feature(enable = "avx2,fma")]
 pub(super) unsafe fn matmul_nn_acc(
     a: &[f32],
@@ -290,25 +340,31 @@ pub(super) unsafe fn matmul_nn_acc(
         c.fill(0.0);
     }
     let nl = n & !7;
-    for i in 0..m {
-        let cr = c.as_mut_ptr().add(i * n);
-        for p in 0..k {
-            let av = a[i * k + p];
-            if skip_zeros && av == 0.0 {
-                continue;
-            }
-            let br = b.as_ptr().add(p * n);
-            let va = _mm256_set1_ps(av);
-            let mut j = 0;
-            while j < nl {
-                let vc = _mm256_loadu_ps(cr.add(j));
-                let vb = _mm256_loadu_ps(br.add(j));
-                _mm256_storeu_ps(cr.add(j), _mm256_fmadd_ps(va, vb, vc));
-                j += 8;
-            }
-            while j < n {
-                *cr.add(j) = av.mul_add(*br.add(j), *cr.add(j));
-                j += 1;
+    // SAFETY: `cr`/`br` are bounded by `i < m` and `p < k`; vector
+    // loads/stores step `j` in 8s below `nl <= n` and the scalar
+    // remainder indexes `j < n`, so every access stays inside the
+    // `m*k` / `k*n` / `m*n` slices the caller guarantees.
+    unsafe {
+        for i in 0..m {
+            let cr = c.as_mut_ptr().add(i * n);
+            for p in 0..k {
+                let av = a[i * k + p];
+                if skip_zeros && av == 0.0 {
+                    continue;
+                }
+                let br = b.as_ptr().add(p * n);
+                let va = _mm256_set1_ps(av);
+                let mut j = 0;
+                while j < nl {
+                    let vc = _mm256_loadu_ps(cr.add(j));
+                    let vb = _mm256_loadu_ps(br.add(j));
+                    _mm256_storeu_ps(cr.add(j), _mm256_fmadd_ps(va, vb, vc));
+                    j += 8;
+                }
+                while j < n {
+                    *cr.add(j) = av.mul_add(*br.add(j), *cr.add(j));
+                    j += 1;
+                }
             }
         }
     }

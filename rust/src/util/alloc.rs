@@ -44,24 +44,38 @@ impl CountingAlloc {
     }
 }
 
+// SAFETY: every method delegates verbatim to `System` after bumping the
+// counters; layout/pointer obligations pass through unchanged, and the
+// counter bumps (Relaxed atomic + TLS cell) never allocate or unwind.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: the caller upholds `GlobalAlloc::alloc`'s contract for `layout`.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         CountingAlloc::count();
-        System.alloc(layout)
+        // SAFETY: same `layout` the caller passed us.
+        unsafe { System.alloc(layout) }
     }
 
+    // SAFETY: the caller upholds `GlobalAlloc::alloc_zeroed`'s contract.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         CountingAlloc::count();
-        System.alloc_zeroed(layout)
+        // SAFETY: same `layout` the caller passed us.
+        unsafe { System.alloc_zeroed(layout) }
     }
 
+    // SAFETY: the caller upholds `GlobalAlloc::realloc`'s contract for
+    // `ptr`/`layout`/`new_size`.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         CountingAlloc::count();
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: same arguments the caller passed us; `ptr` came from
+        // this allocator, which is `System` underneath.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 
+    // SAFETY: the caller upholds `GlobalAlloc::dealloc`'s contract.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: `ptr` was allocated by `System` (every alloc path above
+        // delegates there) with this `layout`.
+        unsafe { System.dealloc(ptr, layout) }
     }
 }
 

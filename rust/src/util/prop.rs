@@ -21,7 +21,11 @@ impl Cases {
     /// Standard size for module-level property tests.
     pub fn standard(seed: u64) -> Cases {
         // Allow override so CI can crank coverage: SPARGE_PROP_CASES=500.
-        let n = std::env::var("SPARGE_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(40);
+        // Under Miri every case costs ~100x native, so default far lower
+        // there; the env override still wins if set.
+        let fallback = if cfg!(miri) { 6 } else { 40 };
+        let n =
+            std::env::var("SPARGE_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(fallback);
         Cases::new(seed, n)
     }
 

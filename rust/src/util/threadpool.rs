@@ -38,8 +38,27 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::thread;
+
+/// Sync primitives behind the loom seam: under `--cfg loom` the
+/// [`WorkerPool`]'s lock, condvars, and worker threads come from loom so
+/// the chunked-claim and panic-latch protocols can be model-checked
+/// (`RUSTFLAGS="--cfg loom" cargo test --release --test loom_pool`);
+/// normal builds re-export std. `Arc` stays `std::sync::Arc` in both
+/// builds — refcounting is not part of the protocols under test, and
+/// engine handles hold `std::sync::Arc<WorkerPool>`. [`ThreadPool`] and
+/// the scoped helpers keep plain std primitives: they are not modeled.
+#[cfg(loom)]
+pub(crate) mod sync {
+    pub(crate) use loom::sync::{Condvar, Mutex};
+    pub(crate) use loom::thread;
+}
+#[cfg(not(loom))]
+pub(crate) mod sync {
+    pub(crate) use std::sync::{Condvar, Mutex};
+    pub(crate) use std::thread;
+}
 
 /// Per-thread scratch arena for the attention hot path: reusable buffers
 /// that grow to their high-water mark and are never shrunk, so a
@@ -168,17 +187,17 @@ impl Drop for ThreadPool {
 /// are allocation-free too once the buffers reach their high-water mark.
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
-    workers: Vec<thread::JoinHandle<()>>,
+    workers: Vec<sync::thread::JoinHandle<()>>,
 }
 
 struct PoolShared {
-    state: Mutex<PoolState>,
+    state: sync::Mutex<PoolState>,
     /// Worker count (for chunk sizing; never affects results).
     size: usize,
     /// Workers wait here for a new job (or shutdown).
-    work: Condvar,
+    work: sync::Condvar,
     /// Submitters wait here for job completion (and for the job slot).
-    done: Condvar,
+    done: sync::Condvar,
 }
 
 #[derive(Default)]
@@ -221,6 +240,10 @@ struct JobPtr {
     n: usize,
 }
 
+// SAFETY: the raw closure pointer crosses to pool workers, but every
+// dereference happens between job installation and `finished == n` —
+// a window during which the submitting `run_ws` frame (which owns the
+// borrow behind the pointer) is still blocked. See [`JobPtr`].
 unsafe impl Send for JobPtr {}
 
 /// Chunk size for guided self-scheduling: proportional to the work left
@@ -247,20 +270,12 @@ impl WorkerPool {
     pub fn new(n: usize) -> WorkerPool {
         let n = n.max(1);
         let shared = Arc::new(PoolShared {
-            state: Mutex::new(PoolState::default()),
+            state: sync::Mutex::new(PoolState::default()),
             size: n,
-            work: Condvar::new(),
-            done: Condvar::new(),
+            work: sync::Condvar::new(),
+            done: sync::Condvar::new(),
         });
-        let workers = (0..n)
-            .map(|i| {
-                let shared = Arc::clone(&shared);
-                thread::Builder::new()
-                    .name(format!("sparge-pool-{i}"))
-                    .spawn(move || worker_loop(&shared))
-                    .expect("spawn pool worker")
-            })
-            .collect();
+        let workers = (0..n).map(|i| spawn_worker(i, Arc::clone(&shared))).collect();
         WorkerPool { shared, workers }
     }
 
@@ -298,6 +313,10 @@ impl WorkerPool {
         // Erase the borrow lifetime; `run_ws` does not return until all
         // workers are done with the pointer (see [`JobPtr`]).
         let ptr: *const (dyn Fn(usize, &mut Workspace) + Sync + '_) = f;
+        // SAFETY: the transmute only erases the borrow lifetime. Workers
+        // can dereference the pointer only while the job is installed,
+        // and this frame does not return before `finished == n`, so the
+        // borrow outlives every dereference (see [`JobPtr`]).
         #[allow(clippy::missing_transmute_annotations)]
         let job = JobPtr { f: unsafe { std::mem::transmute(ptr) }, n };
         let mut st = self.shared.state.lock().unwrap();
@@ -403,6 +422,21 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Spawn one pool worker. Normal builds use a named `std::thread`;
+/// under `--cfg loom` workers are plain loom threads (no Builder there).
+#[cfg(not(loom))]
+fn spawn_worker(i: usize, shared: Arc<PoolShared>) -> sync::thread::JoinHandle<()> {
+    sync::thread::Builder::new()
+        .name(format!("sparge-pool-{i}"))
+        .spawn(move || worker_loop(&shared))
+        .expect("spawn pool worker")
+}
+
+#[cfg(loom)]
+fn spawn_worker(_i: usize, shared: Arc<PoolShared>) -> sync::thread::JoinHandle<()> {
+    sync::thread::spawn(move || worker_loop(&shared))
+}
+
 fn worker_loop(shared: &PoolShared) {
     // The worker's scratch arena, alive for the pool's lifetime: sized by
     // the largest job it has run, then reused allocation-free.
@@ -430,6 +464,10 @@ fn worker_loop(shared: &PoolShared) {
         drop(st);
         // Run outside the lock; catch panics so a failing index reports
         // to the submitter instead of wedging `finished` below `n`.
+        // SAFETY: the chunk claim above happened under the state lock
+        // against the installed job, whose submitter is still blocked in
+        // `run_ws` (it cannot return before `finished == n`), so the
+        // closure behind `job.f` is alive for this whole chunk.
         let func = unsafe { &*job.f };
         let mut bad = false;
         for i in i0..i1 {
@@ -628,7 +666,8 @@ mod tests {
     #[test]
     fn worker_pool_reusable_across_jobs() {
         let pool = WorkerPool::new(3);
-        for round in 0..20u64 {
+        let rounds = if cfg!(miri) { 5 } else { 20 };
+        for round in 0..rounds as u64 {
             let out = pool.map(17, |i| i as u64 + round);
             assert_eq!(out, (0..17u64).map(|i| i + round).collect::<Vec<_>>());
         }
@@ -688,7 +727,8 @@ mod tests {
         // scheduling order may vary, merge order may not.
         let pool = WorkerPool::new(4);
         let want: Vec<u64> = (0..37u64).map(|i| i * 3 + 1).collect();
-        for round in 0..8u64 {
+        let rounds = if cfg!(miri) { 2 } else { 8 };
+        for round in 0..rounds as u64 {
             let out = pool.map(37, |i| {
                 if (i as u64 * 7 + round) % 5 == 0 {
                     thread::sleep(Duration::from_micros(200));
@@ -743,7 +783,7 @@ mod tests {
         // panicking epochs likely — a single last-panic slot would lose
         // the earlier one; the clean submitter catches misattribution.
         let pool = Arc::new(WorkerPool::new(2));
-        let rounds = 25;
+        let rounds = if cfg!(miri) { 4 } else { 25 };
         thread::scope(|scope| {
             let panickers: Vec<_> = (0..2)
                 .map(|_| {
@@ -784,12 +824,13 @@ mod tests {
     fn worker_pool_concurrent_submitters_serialize() {
         let pool = Arc::new(WorkerPool::new(4));
         let hits = Arc::new(AtomicU64::new(0));
+        let rounds: u64 = if cfg!(miri) { 2 } else { 8 };
         thread::scope(|scope| {
             for _ in 0..4 {
                 let pool = Arc::clone(&pool);
                 let hits = Arc::clone(&hits);
                 scope.spawn(move || {
-                    for _ in 0..8 {
+                    for _ in 0..rounds {
                         pool.run(10, &|_i| {
                             hits.fetch_add(1, Ordering::SeqCst);
                         });
@@ -797,6 +838,6 @@ mod tests {
                 });
             }
         });
-        assert_eq!(hits.load(Ordering::SeqCst), 4 * 8 * 10);
+        assert_eq!(hits.load(Ordering::SeqCst), 4 * rounds * 10);
     }
 }

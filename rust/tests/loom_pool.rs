@@ -1,0 +1,164 @@
+//! Loom models of the [`WorkerPool`] concurrency protocols.
+//!
+//! These tests only exist under `--cfg loom`, which swaps the pool's
+//! mutex/condvar/threads for loom's model-checked versions (see the
+//! `sync` shim in `src/util/threadpool.rs`). Run them with:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 \
+//!     cargo test --release --test loom_pool
+//! ```
+//!
+//! Loom executes each model body under every schedule (bounded by
+//! `LOOM_MAX_PREEMPTIONS`), so the assertions below are checked against
+//! all worker/submitter interleavings, not just the ones a timing-based
+//! test happens to hit. Two protocols are under test:
+//!
+//! - **Chunked self-scheduling claims**: every index of a job runs
+//!   exactly once, the submitting thread participates (and
+//!   deterministically claims the first chunk — it installs the job and
+//!   claims under a single lock hold), and `run_ws` does not return
+//!   before all indices finish.
+//! - **Per-epoch panic latch**: a panicking index surfaces on *its own*
+//!   submitter, the pool stays usable afterwards, and a concurrent
+//!   clean submitter never observes a foreign panic.
+//!
+//! Models stay tiny (pool of 1–2 workers, 2–3 indices) because loom's
+//! state space is exponential in threads × synchronization operations;
+//! loom's limit is 4 threads per model and these use at most 3.
+
+#![cfg(loom)]
+
+use sparge::util::threadpool::{WorkerPool, Workspace};
+
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// The expected-panic models below throw (and catch) panics on every
+/// explored schedule; silence just those payloads so a real failure's
+/// message is still printed by the default hook.
+fn quiet_expected_panics() {
+    static HOOK: std::sync::Once = std::sync::Once::new();
+    HOOK.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| info.payload().downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            if msg.contains("boom") || msg.contains("WorkerPool job panicked") {
+                return;
+            }
+            default(info);
+        }));
+    });
+}
+
+#[test]
+fn chunked_claims_cover_every_index_exactly_once() {
+    // Pool of 2 workers + participating submitter, 3 indices: with
+    // claim_chunk(3, 3) == 1, every claim is a single index, so all
+    // claim/claim and claim/finish races are explored. The claim must
+    // hand out each index to exactly one participant, and run_ws must
+    // not return until all of them have executed.
+    loom::model(|| {
+        let pool = WorkerPool::new(2);
+        let hits: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        let mut ws = Workspace::default();
+        pool.run_ws(3, &mut ws, &|i, _ws| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i} must run exactly once");
+        }
+        drop(pool);
+    });
+}
+
+#[test]
+fn submitter_participates_and_claims_the_first_chunk() {
+    // The submitter installs the job and claims its first chunk under
+    // one continuous lock hold, so index 0 lands on the submitting
+    // thread on every schedule — observable as a push into the
+    // *caller's* workspace (the worker pushes into its own, invisible
+    // here). This is the determinism hook the workspace-persistence
+    // contract leans on: the caller's arena is always warmed.
+    loom::model(|| {
+        let pool = WorkerPool::new(1);
+        let mut ws = Workspace::default();
+        pool.run_ws(2, &mut ws, &|i, ws| ws.pred_idx.push(i));
+        assert_eq!(
+            ws.pred_idx.first(),
+            Some(&0),
+            "submitter must claim the first chunk of its own job"
+        );
+        drop(pool);
+    });
+}
+
+#[test]
+fn panic_latch_reports_to_the_submitter_and_pool_survives() {
+    // A panicking index (which may run on the worker or on the
+    // participating submitter, depending on the schedule) must turn
+    // into a panic out of `run_ws` on the submitting thread, and the
+    // job slot must be released so the next job runs to completion.
+    quiet_expected_panics();
+    loom::model(|| {
+        let pool = WorkerPool::new(1);
+        let mut ws = Workspace::default();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_ws(2, &mut ws, &|i, _ws| {
+                if i == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "a panicking index must propagate to the submitter");
+        let hits = AtomicUsize::new(0);
+        pool.run_ws(2, &mut ws, &|_i, _ws| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2, "pool must stay usable after a panic");
+        drop(pool);
+    });
+}
+
+#[test]
+fn panic_latch_never_misattributes_across_submitters() {
+    // Two submitters share one pool (the serving + probe composition):
+    // a panicking job must report to the submitter that installed it —
+    // keyed by epoch in `panicked_epochs` — and the clean submitter
+    // must complete normally on every interleaving of the two jobs.
+    // If the latch were a single flag, schedules where the panicking
+    // epoch completes around the clean submitter's wait would
+    // misattribute; the model proves the epoch-keyed set does not.
+    quiet_expected_panics();
+    loom::model(|| {
+        let pool = Arc::new(WorkerPool::new(1));
+        let p = Arc::clone(&pool);
+        let panicker = loom::thread::spawn(move || {
+            let mut ws = Workspace::default();
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                p.run_ws(2, &mut ws, &|i, _ws| {
+                    if i == 1 {
+                        panic!("boom");
+                    }
+                });
+            }));
+            assert!(r.is_err(), "the panicking job must report to its own submitter");
+        });
+        let mut ws = Workspace::default();
+        let hits = AtomicUsize::new(0);
+        pool.run_ws(2, &mut ws, &|_i, _ws| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2, "clean job must complete all indices");
+        // A join failure here means the panic was misattributed: the
+        // panicking submitter saw a clean completion (its entry was
+        // consumed by someone else).
+        panicker.join().expect("panicking submitter must observe its own panic");
+        drop(pool);
+    });
+}

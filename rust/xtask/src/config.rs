@@ -1,0 +1,154 @@
+//! lint.toml loading — a hand-rolled parser for the TOML subset the
+//! config actually uses (`[section]` headers, `key = [ "...", ... ]`
+//! string arrays, `#` comments), so the lint crate's dependency set
+//! stays at exactly what the AST walk needs (syn).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed rule configuration (see xtask/lint.toml for semantics).
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    /// unsafe-needs-safety: files allowed to contain `unsafe` at all.
+    pub unsafe_allow_files: Vec<String>,
+    /// fixed-order-no-fma: `file.rs::fn` entries allowed to fuse.
+    pub fma_allow_fns: Vec<String>,
+    /// hot-path-no-alloc: declared hot functions (`name` or `Type::name`).
+    pub hot_fns: Vec<String>,
+    /// hot-path-no-alloc: files where every non-test fn is hot.
+    pub hot_files: Vec<String>,
+    /// no-raw-thread-spawn: files allowed to spawn/scope threads.
+    pub spawn_allow_files: Vec<String>,
+    /// serving-no-panic: files in scope.
+    pub panic_files: Vec<String>,
+    /// serving-no-panic: `fn` / `Type::fn` names exempted (fail-fast startup).
+    pub panic_allow_fns: Vec<String>,
+}
+
+pub fn load(path: &Path) -> Result<Config> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    parse(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn parse(text: &str) -> Result<Config> {
+    let raw = parse_sections(text)?;
+    let mut cfg = Config::default();
+    for (section, keys) in &raw {
+        for (key, values) in keys {
+            let slot = match (section.as_str(), key.as_str()) {
+                ("rules.unsafe-needs-safety", "allow_files") => &mut cfg.unsafe_allow_files,
+                ("rules.fixed-order-no-fma", "allow_fns") => &mut cfg.fma_allow_fns,
+                ("rules.hot-path-no-alloc", "hot_fns") => &mut cfg.hot_fns,
+                ("rules.hot-path-no-alloc", "hot_files") => &mut cfg.hot_files,
+                ("rules.no-raw-thread-spawn", "allow_files") => &mut cfg.spawn_allow_files,
+                ("rules.serving-no-panic", "files") => &mut cfg.panic_files,
+                ("rules.serving-no-panic", "allow_fns") => &mut cfg.panic_allow_fns,
+                _ => bail!("unknown config key [{section}] {key}"),
+            };
+            slot.clone_from(values);
+        }
+    }
+    Ok(cfg)
+}
+
+/// section -> key -> string values. Arrays may span lines; values must
+/// be double-quoted strings (no escapes — these are repo paths/idents).
+fn parse_sections(text: &str) -> Result<BTreeMap<String, BTreeMap<String, Vec<String>>>> {
+    let mut out: BTreeMap<String, BTreeMap<String, Vec<String>>> = BTreeMap::new();
+    let mut section = String::new();
+    let mut lines = text.lines().enumerate();
+    while let Some((ln, line)) = lines.next() {
+        let line = strip_comment(line).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            bail!("line {}: expected `key = ...`, got `{line}`", ln + 1);
+        };
+        let key = key.trim().to_string();
+        let mut value = value.trim().to_string();
+        if value.starts_with('[') {
+            // accumulate a possibly multi-line array until the closing ]
+            while !value.contains(']') {
+                let Some((_, next)) = lines.next() else {
+                    bail!("line {}: unterminated array for `{key}`", ln + 1);
+                };
+                value.push(' ');
+                value.push_str(strip_comment(next).trim());
+            }
+        }
+        let values = quoted_strings(&value);
+        if section.is_empty() {
+            bail!("line {}: `{key}` outside any [section]", ln + 1);
+        }
+        out.entry(section.clone()).or_default().insert(key, values);
+    }
+    Ok(out)
+}
+
+/// Strip a `#` comment, ignoring `#` inside double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Every "..."-delimited string in `s`, in order.
+fn quoted_strings(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = s;
+    while let Some(start) = rest.find('"') {
+        let tail = &rest[start + 1..];
+        let Some(end) = tail.find('"') else { break };
+        out.push(tail[..end].to_string());
+        rest = &tail[end + 1..];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_arrays_and_comments() {
+        let cfg = parse(
+            "# header\n[rules.unsafe-needs-safety]\nallow_files = [\n    \"src/a.rs\", # why\n    \
+             \"src/b.rs\",\n]\n\n[rules.serving-no-panic]\nfiles = [\"src/c.rs\"]\nallow_fns = []\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.unsafe_allow_files, vec!["src/a.rs", "src/b.rs"]);
+        assert_eq!(cfg.panic_files, vec!["src/c.rs"]);
+        assert!(cfg.panic_allow_fns.is_empty());
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(parse("[rules.unsafe-needs-safety]\nbogus = [\"x\"]\n").is_err());
+    }
+
+    #[test]
+    fn checked_in_config_parses() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("lint.toml");
+        let cfg = load(&path).unwrap();
+        assert!(!cfg.unsafe_allow_files.is_empty());
+        assert!(!cfg.fma_allow_fns.is_empty());
+        assert!(!cfg.hot_fns.is_empty());
+        assert!(!cfg.hot_files.is_empty());
+        assert!(!cfg.spawn_allow_files.is_empty());
+        assert!(!cfg.panic_files.is_empty());
+        assert!(!cfg.panic_allow_fns.is_empty());
+    }
+}

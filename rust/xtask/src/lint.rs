@@ -1,0 +1,599 @@
+//! sparge-lint — a syn AST walk over `rust/src` + `rust/tests` that
+//! enforces the repo's written correctness contracts as machine-checked
+//! rules. Rules and their allowlists live in `xtask/lint.toml`; the
+//! contract → rule → runtime-suite map lives in CONTRIBUTING.md.
+//!
+//! Comments are invisible to syn, so `// SAFETY:` and
+//! `// sparge-lint: allow(<rule>)` markers are resolved against the raw
+//! source: a marker counts if it appears on the finding's line (as a
+//! trailing comment) or anywhere in the contiguous comment/attribute
+//! block directly above it.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+use proc_macro2::Span;
+use syn::visit::Visit;
+
+use crate::config::{self, Config};
+
+pub const RULE_UNSAFE: &str = "unsafe-needs-safety";
+pub const RULE_FMA: &str = "fixed-order-no-fma";
+pub const RULE_ALLOC: &str = "hot-path-no-alloc";
+pub const RULE_SPAWN: &str = "no-raw-thread-spawn";
+pub const RULE_PANIC: &str = "serving-no-panic";
+
+/// One diagnostic. Ord is (file, line, col, ...) so a sorted report
+/// reads top-to-bottom per file.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub col: usize,
+    pub rule: String,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}:{}: [{}] {}", self.file, self.line, self.col, self.rule, self.msg)
+    }
+}
+
+/// Raw source lines (1-indexed) for comment-marker resolution.
+struct SourceMap {
+    lines: Vec<String>,
+}
+
+impl SourceMap {
+    fn new(source: &str) -> Self {
+        Self { lines: source.lines().map(str::to_string).collect() }
+    }
+
+    fn line(&self, n: usize) -> &str {
+        // 1-indexed (proc-macro2 line numbers); out of range reads as "".
+        self.lines.get(n.wrapping_sub(1)).map_or("", String::as_str)
+    }
+
+    /// True if `pred` matches the finding's own line or any line of the
+    /// contiguous comment/attribute block directly above it.
+    fn marker_above(&self, line: usize, pred: impl Fn(&str) -> bool) -> bool {
+        if pred(self.line(line)) {
+            return true;
+        }
+        let mut l = line;
+        while l > 1 {
+            l -= 1;
+            let t = self.line(l).trim_start();
+            if t.starts_with("//") || t.starts_with("#[") || t.starts_with("#!") {
+                if pred(t) {
+                    return true;
+                }
+            } else {
+                return false;
+            }
+        }
+        false
+    }
+
+    fn safety_above(&self, line: usize) -> bool {
+        self.marker_above(line, |l| l.contains("SAFETY") || l.contains("# Safety"))
+    }
+}
+
+struct FnCtx {
+    /// Bare fn name, e.g. `decode_into`.
+    plain: String,
+    /// `Type::name` inside an impl block, else same as `plain`.
+    qualified: String,
+}
+
+struct Linter<'c> {
+    cfg: &'c Config,
+    /// Path relative to rust/, forward slashes (matches lint.toml).
+    file: String,
+    in_tests_dir: bool,
+    src: SourceMap,
+    /// > 0 inside `#[cfg(test)]` mods / `#[test]` fns.
+    test_depth: usize,
+    fn_stack: Vec<FnCtx>,
+    impl_stack: Vec<String>,
+    findings: Vec<Finding>,
+}
+
+impl Linter<'_> {
+    fn in_test(&self) -> bool {
+        self.in_tests_dir || self.test_depth > 0
+    }
+
+    /// Any enclosing fn matching `list` by plain or qualified name.
+    fn fn_matches(&self, list: &[String]) -> bool {
+        self.fn_stack
+            .iter()
+            .any(|f| list.iter().any(|e| e == &f.plain || e == &f.qualified))
+    }
+
+    fn is_hot(&self) -> bool {
+        self.cfg.hot_files.iter().any(|f| f == &self.file) || self.fn_matches(&self.cfg.hot_fns)
+    }
+
+    /// fixed-order-no-fma allow entries are `file.rs::fn`.
+    fn fma_allowed(&self) -> bool {
+        self.fn_stack.iter().any(|f| {
+            let key = format!("{}::{}", self.file, f.plain);
+            self.cfg.fma_allow_fns.iter().any(|e| e == &key)
+        })
+    }
+
+    fn suppressed(&self, rule: &str, line: usize) -> bool {
+        let marker = format!("sparge-lint: allow({rule})");
+        self.src.marker_above(line, |l| l.contains(marker.as_str()))
+    }
+
+    fn emit(&mut self, rule: &str, span: Span, msg: String) {
+        let start = span.start();
+        if self.suppressed(rule, start.line) {
+            return;
+        }
+        self.findings.push(Finding {
+            file: self.file.clone(),
+            line: start.line,
+            col: start.column + 1,
+            rule: rule.to_string(),
+            msg,
+        });
+    }
+
+    fn check_unsafe(&mut self, span: Span, what: &str) {
+        let line = span.start().line;
+        if !self.cfg.unsafe_allow_files.iter().any(|f| f == &self.file) {
+            self.emit(
+                RULE_UNSAFE,
+                span,
+                format!("`unsafe` {what} in a file outside the unsafe allowlist (xtask/lint.toml)"),
+            );
+        } else if !self.src.safety_above(line) {
+            self.emit(
+                RULE_UNSAFE,
+                span,
+                format!("`unsafe` {what} without a `// SAFETY:` comment in the block above"),
+            );
+        }
+    }
+
+    fn check_fma(&mut self, span: Span, what: &str) {
+        if self.in_test() || self.fma_allowed() {
+            return;
+        }
+        self.emit(
+            RULE_FMA,
+            span,
+            format!(
+                "fused `{what}` outside the oracle-tier matmul_nn_acc breaks the fixed-order \
+                 bitwise contract"
+            ),
+        );
+    }
+
+    fn check_alloc(&mut self, span: Span, what: &str) {
+        if self.in_test() || !self.is_hot() {
+            return;
+        }
+        self.emit(
+            RULE_ALLOC,
+            span,
+            format!("allocating construct `{what}` in a declared hot path (see tests/alloc_regression.rs)"),
+        );
+    }
+
+    fn check_spawn(&mut self, span: Span, what: &str) {
+        if self.in_test() || self.cfg.spawn_allow_files.iter().any(|f| f == &self.file) {
+            return;
+        }
+        self.emit(
+            RULE_SPAWN,
+            span,
+            format!("raw `{what}` outside util/threadpool.rs — route parallel work through the Exec seam"),
+        );
+    }
+
+    fn check_panic(&mut self, span: Span, what: &str) {
+        if self.in_test()
+            || !self.cfg.panic_files.iter().any(|f| f == &self.file)
+            || self.fn_matches(&self.cfg.panic_allow_fns)
+        {
+            return;
+        }
+        self.emit(
+            RULE_PANIC,
+            span,
+            format!("`{what}` in the serving loop — degrade and report instead of dying"),
+        );
+    }
+
+    fn push_fn(&mut self, name: String) {
+        let qualified = match self.impl_stack.last() {
+            Some(ty) => format!("{ty}::{name}"),
+            None => name.clone(),
+        };
+        self.fn_stack.push(FnCtx { plain: name, qualified });
+    }
+}
+
+fn is_cfg_test(attrs: &[syn::Attribute]) -> bool {
+    attrs.iter().any(|a| match &a.meta {
+        syn::Meta::List(ml) if ml.path.is_ident("cfg") => ml.tokens.to_string().contains("test"),
+        _ => false,
+    })
+}
+
+fn is_test_fn(attrs: &[syn::Attribute]) -> bool {
+    is_cfg_test(attrs)
+        || attrs.iter().any(|a| {
+            a.path().segments.last().is_some_and(|s| s.ident == "test")
+        })
+}
+
+fn self_type_name(ty: &syn::Type) -> String {
+    match ty {
+        syn::Type::Path(p) => p
+            .path
+            .segments
+            .last()
+            .map(|s| s.ident.to_string())
+            .unwrap_or_default(),
+        syn::Type::Reference(r) => self_type_name(&r.elem),
+        _ => String::new(),
+    }
+}
+
+impl<'ast> Visit<'ast> for Linter<'_> {
+    fn visit_item_mod(&mut self, m: &'ast syn::ItemMod) {
+        let test = is_cfg_test(&m.attrs);
+        if test {
+            self.test_depth += 1;
+        }
+        syn::visit::visit_item_mod(self, m);
+        if test {
+            self.test_depth -= 1;
+        }
+    }
+
+    fn visit_item_fn(&mut self, f: &'ast syn::ItemFn) {
+        let test = is_test_fn(&f.attrs);
+        if test {
+            self.test_depth += 1;
+        }
+        if let Some(u) = f.sig.unsafety {
+            self.check_unsafe(u.span, "fn");
+        }
+        self.push_fn(f.sig.ident.to_string());
+        syn::visit::visit_item_fn(self, f);
+        self.fn_stack.pop();
+        if test {
+            self.test_depth -= 1;
+        }
+    }
+
+    fn visit_impl_item_fn(&mut self, f: &'ast syn::ImplItemFn) {
+        let test = is_test_fn(&f.attrs);
+        if test {
+            self.test_depth += 1;
+        }
+        if let Some(u) = f.sig.unsafety {
+            self.check_unsafe(u.span, "fn");
+        }
+        self.push_fn(f.sig.ident.to_string());
+        syn::visit::visit_impl_item_fn(self, f);
+        self.fn_stack.pop();
+        if test {
+            self.test_depth -= 1;
+        }
+    }
+
+    fn visit_item_impl(&mut self, i: &'ast syn::ItemImpl) {
+        let test = is_cfg_test(&i.attrs);
+        if test {
+            self.test_depth += 1;
+        }
+        if let Some(u) = i.unsafety {
+            self.check_unsafe(u.span, "impl");
+        }
+        self.impl_stack.push(self_type_name(&i.self_ty));
+        syn::visit::visit_item_impl(self, i);
+        self.impl_stack.pop();
+        if test {
+            self.test_depth -= 1;
+        }
+    }
+
+    fn visit_expr_unsafe(&mut self, e: &'ast syn::ExprUnsafe) {
+        self.check_unsafe(e.unsafe_token.span, "block");
+        syn::visit::visit_expr_unsafe(self, e);
+    }
+
+    fn visit_expr_method_call(&mut self, m: &'ast syn::ExprMethodCall) {
+        let name = m.method.to_string();
+        let span = m.method.span();
+        match name.as_str() {
+            "mul_add" => self.check_fma(span, "mul_add"),
+            "unwrap" | "expect" => self.check_panic(span, &format!(".{name}()")),
+            "to_vec" | "to_owned" | "to_string" | "collect" | "clone" => {
+                self.check_alloc(span, &format!(".{name}()"));
+            }
+            _ => {}
+        }
+        syn::visit::visit_expr_method_call(self, m);
+    }
+
+    fn visit_path(&mut self, p: &'ast syn::Path) {
+        let segs: Vec<(String, Span)> =
+            p.segments.iter().map(|s| (s.ident.to_string(), s.ident.span())).collect();
+        for (name, span) in &segs {
+            if name.contains("fmadd") {
+                self.check_fma(*span, name);
+            }
+        }
+        for w in segs.windows(2) {
+            let span = w[1].1;
+            match (w[0].0.as_str(), w[1].0.as_str()) {
+                ("Vec", "new")
+                | ("Vec", "with_capacity")
+                | ("Box", "new")
+                | ("String", "new")
+                | ("String", "from")
+                | ("String", "with_capacity")
+                | ("HashMap", "new")
+                | ("BTreeMap", "new") => {
+                    self.check_alloc(span, &format!("{}::{}", w[0].0, w[1].0));
+                }
+                ("thread", "spawn") | ("thread", "scope") | ("thread", "Builder") => {
+                    self.check_spawn(span, &format!("thread::{}", w[1].0));
+                }
+                _ => {}
+            }
+        }
+        syn::visit::visit_path(self, p);
+    }
+
+    fn visit_macro(&mut self, mac: &'ast syn::Macro) {
+        if let Some(seg) = mac.path.segments.last() {
+            let name = seg.ident.to_string();
+            let span = seg.ident.span();
+            match name.as_str() {
+                "vec" | "format" => self.check_alloc(span, &format!("{name}!")),
+                "panic" | "unreachable" | "todo" | "unimplemented" => {
+                    self.check_panic(span, &format!("{name}!"));
+                }
+                _ => {}
+            }
+        }
+        syn::visit::visit_macro(self, mac);
+    }
+}
+
+/// Lint one file's source. `rel_path` is relative to rust/ with forward
+/// slashes — it is what lint.toml allowlists match against.
+pub fn lint_source(cfg: &Config, rel_path: &str, source: &str) -> Result<Vec<Finding>> {
+    let ast = syn::parse_file(source).with_context(|| format!("parsing {rel_path}"))?;
+    let mut linter = Linter {
+        cfg,
+        file: rel_path.to_string(),
+        in_tests_dir: rel_path.starts_with("tests/"),
+        src: SourceMap::new(source),
+        test_depth: 0,
+        fn_stack: Vec::new(),
+        impl_stack: Vec::new(),
+        findings: Vec::new(),
+    };
+    linter.visit_file(&ast);
+    let mut findings = linter.findings;
+    findings.sort();
+    Ok(findings)
+}
+
+/// Lint every .rs file under `root`/src and `root`/tests.
+pub fn lint_tree(cfg: &Config, root: &Path) -> Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for top in ["src", "tests"] {
+        collect_rs(&root.join(top), &mut files)?;
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let source =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        findings.extend(lint_source(cfg, &rel, &source)?);
+    }
+    findings.sort();
+    Ok(findings)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// CLI entry: lint the checked-out tree against xtask/lint.toml, print
+/// `file:line:col: [rule] msg` diagnostics, return the finding count.
+pub fn run_cli() -> Result<usize> {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let cfg = config::load(&manifest.join("lint.toml"))?;
+    let root = manifest.parent().context("xtask has no parent dir")?;
+    let findings = lint_tree(&cfg, root)?;
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    Ok(findings.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_cfg() -> Config {
+        config::load(&Path::new(env!("CARGO_MANIFEST_DIR")).join("lint.toml")).unwrap()
+    }
+
+    fn lint_str(rel: &str, src: &str) -> Vec<Finding> {
+        lint_source(&repo_cfg(), rel, src).unwrap()
+    }
+
+    fn rules(findings: &[Finding]) -> Vec<&str> {
+        findings.iter().map(|f| f.rule.as_str()).collect()
+    }
+
+    #[test]
+    fn unsafe_outside_allowlist_fires() {
+        let f = lint_str(
+            "src/attention/block_mask.rs",
+            "pub fn read(p: *const f32) -> f32 {\n    // SAFETY: p is valid.\n    unsafe { *p }\n}\n",
+        );
+        assert_eq!(rules(&f), vec![RULE_UNSAFE]);
+        assert!(f[0].msg.contains("allowlist"), "{}", f[0]);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn unsafe_without_safety_fires_and_comment_quiets() {
+        let bare = "pub fn read(p: *const f32) -> f32 {\n    unsafe { *p }\n}\n";
+        let f = lint_str("src/util/alloc.rs", bare);
+        assert_eq!(rules(&f), vec![RULE_UNSAFE]);
+        assert!(f[0].msg.contains("SAFETY"), "{}", f[0]);
+
+        let documented =
+            "pub fn read(p: *const f32) -> f32 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n";
+        assert!(lint_str("src/util/alloc.rs", documented).is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_and_impl_need_safety() {
+        let f = lint_str(
+            "src/util/threadpool.rs",
+            "pub struct P(*mut u8);\nunsafe impl Send for P {}\npub unsafe fn touch(p: P) {}\n",
+        );
+        assert_eq!(rules(&f), vec![RULE_UNSAFE, RULE_UNSAFE]);
+
+        let documented = "pub struct P(*mut u8);\n// SAFETY: P is only dereferenced by its owner.\nunsafe impl Send for P {}\n/// # Safety\n/// Caller must own `p`.\npub unsafe fn touch(p: P) {}\n";
+        assert!(lint_str("src/util/threadpool.rs", documented).is_empty());
+    }
+
+    #[test]
+    fn mul_add_fires_outside_oracle_tier_only() {
+        let body = "pub fn dot_tail(a: f32, b: f32, c: f32) -> f32 {\n    a.mul_add(b, c)\n}\n";
+        let f = lint_str("src/tensor/microkernel/portable.rs", body);
+        assert_eq!(rules(&f), vec![RULE_FMA]);
+
+        let oracle = "pub fn matmul_nn_acc(a: f32, b: f32, c: f32) -> f32 {\n    a.mul_add(b, c)\n}\n";
+        assert!(lint_str("src/tensor/microkernel/portable.rs", oracle).is_empty());
+        // The allow entry is file-qualified: the same fn name elsewhere still fires.
+        assert_eq!(rules(&lint_str("src/attention/predictor.rs", oracle)), vec![RULE_FMA]);
+    }
+
+    #[test]
+    fn fmadd_intrinsic_path_fires() {
+        let f = lint_str(
+            "src/tensor/microkernel/avx2.rs",
+            "pub fn qk(a: f32) -> f32 {\n    crate::intrin::_mm256_fmadd_ps(a, a, a)\n}\n",
+        );
+        assert_eq!(rules(&f), vec![RULE_FMA]);
+    }
+
+    #[test]
+    fn hot_fn_alloc_fires_and_suppression_quiets() {
+        let body = "pub fn reduce_span(n: usize) -> usize {\n    let v: Vec<f32> = Vec::new();\n    v.len() + n\n}\n";
+        let f = lint_str("src/attention/pipeline.rs", body);
+        assert_eq!(rules(&f), vec![RULE_ALLOC]);
+        assert_eq!(f[0].line, 2);
+
+        let suppressed = "pub fn reduce_span(n: usize) -> usize {\n    // sparge-lint: allow(hot-path-no-alloc) — fixture\n    let v: Vec<f32> = Vec::new();\n    v.len() + n\n}\n";
+        assert!(lint_str("src/attention/pipeline.rs", suppressed).is_empty());
+
+        // A fn that is not declared hot, in a non-hot file: quiet.
+        let cold = "pub fn setup(n: usize) -> Vec<f32> {\n    let mut v = Vec::new();\n    v.resize(n, 0.0);\n    v\n}\n";
+        assert!(lint_str("src/attention/pipeline.rs", cold).is_empty());
+    }
+
+    #[test]
+    fn hot_file_macros_and_methods_fire() {
+        let f = lint_str(
+            "src/tensor/microkernel/portable.rs",
+            "pub fn pad(xs: &[f32]) -> usize {\n    let v = vec![0.0f32; 8];\n    let w = xs.to_vec();\n    v.len() + w.len()\n}\n",
+        );
+        assert_eq!(rules(&f), vec![RULE_ALLOC, RULE_ALLOC]);
+    }
+
+    #[test]
+    fn qualified_hot_fn_matches_impl_method() {
+        let f = lint_str(
+            "src/coordinator/session_manager.rs",
+            "pub struct SessionManager;\nimpl SessionManager {\n    pub fn tick(&mut self) {\n        let done: Vec<usize> = Vec::new();\n        drop(done);\n    }\n}\n",
+        );
+        assert_eq!(rules(&f), vec![RULE_ALLOC]);
+    }
+
+    #[test]
+    fn raw_spawn_fires_outside_threadpool() {
+        let body = "pub fn fan_out() {\n    std::thread::spawn(|| {});\n}\n";
+        assert_eq!(rules(&lint_str("src/attention/pipeline.rs", body)), vec![RULE_SPAWN]);
+        assert!(lint_str("src/util/threadpool.rs", body).is_empty());
+        assert!(lint_str("src/coordinator/engine.rs", body).is_empty());
+
+        let scoped = "pub fn fan_out() {\n    std::thread::scope(|s| { let _ = s; });\n}\n";
+        assert_eq!(rules(&lint_str("src/attention/engine.rs", scoped)), vec![RULE_SPAWN]);
+    }
+
+    #[test]
+    fn serving_panic_fires_and_allow_fn_quiets() {
+        let body = "pub fn route(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        assert_eq!(rules(&lint_str("src/coordinator/server.rs", body)), vec![RULE_PANIC]);
+        // Same construct outside the serving files: quiet.
+        assert!(lint_str("src/attention/pipeline.rs", body).is_empty());
+
+        let macros = "pub fn route(x: u32) -> u32 {\n    if x > 3 { panic!(\"boom\") } else { x }\n}\n";
+        assert_eq!(rules(&lint_str("src/coordinator/scheduler.rs", macros)), vec![RULE_PANIC]);
+
+        let startup = "pub struct Coordinator;\nimpl Coordinator {\n    pub fn start_with(x: Option<u32>) -> u32 {\n        x.expect(\"fail-fast startup\")\n    }\n}\n";
+        assert!(lint_str("src/coordinator/scheduler.rs", startup).is_empty());
+    }
+
+    #[test]
+    fn test_code_is_exempt_from_alloc_spawn_panic() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let v = vec![1];\n        std::thread::spawn(move || v.len()).join().unwrap();\n    }\n}\n";
+        // A hot file: rule 3 and 4 would both fire were this not test code.
+        assert!(lint_str("src/tensor/microkernel/portable.rs", src).is_empty());
+        // A serving file: rule 5 would fire on the unwrap.
+        assert!(lint_str("src/coordinator/server.rs", src).is_empty());
+        // tests/ directory files are exempt wholesale for rules 3/4/5.
+        let plain = "pub fn helper(x: Option<u32>) -> u32 {\n    let v: Vec<u32> = Vec::new();\n    std::thread::spawn(|| {});\n    x.unwrap() + v.len() as u32\n}\n";
+        assert!(lint_str("tests/workspace_parity.rs", plain).is_empty());
+    }
+
+    #[test]
+    fn checked_in_tree_is_clean() {
+        let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let cfg = config::load(&manifest.join("lint.toml")).unwrap();
+        let findings = lint_tree(&cfg, manifest.parent().unwrap()).unwrap();
+        assert!(
+            findings.is_empty(),
+            "lint findings on the checked-in tree:\n{}",
+            findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

@@ -1,0 +1,31 @@
+//! Repo task runner. The only task so far is the repo-contract static
+//! analysis: `cargo run -p xtask -- lint` (see src/lint.rs and
+//! lint.toml; CONTRIBUTING.md has the full contract map).
+
+use std::process::ExitCode;
+
+mod config;
+mod lint;
+
+fn main() -> ExitCode {
+    match std::env::args().nth(1).as_deref() {
+        Some("lint") => match lint::run_cli() {
+            Ok(0) => {
+                eprintln!("sparge-lint: tree is clean");
+                ExitCode::SUCCESS
+            }
+            Ok(n) => {
+                eprintln!("sparge-lint: {n} finding(s)");
+                ExitCode::FAILURE
+            }
+            Err(e) => {
+                eprintln!("sparge-lint: error: {e:#}");
+                ExitCode::FAILURE
+            }
+        },
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint");
+            ExitCode::FAILURE
+        }
+    }
+}
