@@ -24,6 +24,13 @@
 //! straggler metric chunked self-scheduling + submitter participation
 //! are aimed at).
 //!
+//! The **paged KV** section drives resident-session scale points
+//! through a paged `SessionManager` over one fixed frame pool and
+//! reports the memory plane: peak frames/bytes, prefix-reuse hit rate
+//! (pairwise-duplicated prompts share their prompt frames CoW and skip
+//! the duplicate prefill), evictions, and load-shed (deferred)
+//! admissions once the traffic exceeds the pool.
+//!
 //! Run: `cargo bench --bench table8_serving`
 //! Pass `-- --json` to also write a `BENCH_table8.json` snapshot (the
 //! CI perf-trajectory artifact).
@@ -32,7 +39,7 @@
 
 use std::time::{Duration, Instant};
 
-use sparge::attention::{AttnConfig, AttnEngine, Execution, KvSplit};
+use sparge::attention::{AttnConfig, AttnEngine, Execution, KvSplit, PageAllocator};
 use sparge::coordinator::{
     run_sequential, AttnMode, AttnStreamSpec, BatchPolicy, Coordinator, SeqStream, ServeOptions,
     SessionManager,
@@ -333,6 +340,89 @@ fn main() {
          tail. Sparsity metrics are asserted identical across schedules, pool sizes, and drivers."
     );
 
+    // -- paged KV serving: the memory plane under frame pressure ----------
+    // Resident-session scale points through a paged SessionManager over
+    // one fixed frame pool. Prompts are duplicated pairwise and sized to
+    // one whole-prompt prefill chunk, so every odd admission is a
+    // prefix-registry hit (its prefill is skipped and its prompt frames
+    // are shared); the pool covers exactly 4 solo sessions, so the
+    // 8-session point must defer admissions (reservation-based
+    // load-shedding) until earlier sessions retire and their prefixes
+    // are reclaimed.
+    let paged_prefill = opts.chunk; // one chunk == whole prompt => registry-eligible
+    let frames_per = (paged_prefill + 24).div_ceil(opts.cfg.bk);
+    let pool_frames = 4 * frames_per;
+    println!(
+        "\npaged KV serving — fixed pool of {pool_frames} frames ({} rows/frame), prompts \
+         duplicated pairwise, prefill {paged_prefill}, 24 tokens each",
+        opts.cfg.bk
+    );
+    let mut paged_table = Table::new(
+        "paged serving memory plane (frames/bytes are pool-wide; deferred = load-shed admissions)",
+        &["sessions", "tok/s (e2e)", "peak frames", "peak MB", "prefix hits", "evictions", "deferred"],
+    );
+    let mut paged_json: Vec<Json> = Vec::new();
+    for sessions in [2usize, 4, 8] {
+        let engine = AttnEngine::builder()
+            .config(opts.cfg)
+            .sparge(&opts.params)
+            .execution(Execution::Pool(threads))
+            .kv_split(KvSplit::Auto)
+            .build();
+        let mut mgr = SessionManager::new_paged(
+            &engine,
+            opts.chunk,
+            PageAllocator::new(pool_frames, opts.cfg.bk, 64, 64),
+        );
+        let t0 = Instant::now();
+        for i in 0..sessions as u64 {
+            // seeds 0,0,1,1,…: each odd admission replays the previous
+            // prompt and should hit the prefix registry
+            let spec =
+                AttnStreamSpec { prefill: paged_prefill, decode: 24, d: 64, seed: 980 + i / 2 };
+            mgr.admit(i, SeqStream::synth(&spec), Instant::now());
+        }
+        let mut done = Vec::new();
+        let mut guard = 0usize;
+        while mgr.active() > 0 || mgr.pending() > 0 {
+            done.extend(mgr.tick());
+            guard += 1;
+            assert!(guard < 1_000_000, "paged serving failed to drain");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens: usize = done.iter().map(|r| r.tokens).sum();
+        let stats = mgr.page_stats().expect("paged manager");
+        let peak_bytes = stats.peak_frames * stats.frame_bytes;
+        let hit_rate = stats.prefix_hits as f64 / sessions as f64;
+        paged_table.row(&[
+            format!("{sessions}"),
+            fnum(tokens as f64 / wall, 1),
+            format!("{}/{}", stats.peak_frames, stats.frames),
+            fnum(peak_bytes as f64 / 1e6, 2),
+            format!("{} ({:.0}%)", stats.prefix_hits, hit_rate * 100.0),
+            format!("{}", stats.evictions),
+            format!("{}", stats.load_sheds),
+        ]);
+        paged_json.push(Json::obj(vec![
+            ("sessions", Json::num(sessions as f64)),
+            ("tok_s", Json::num(tokens as f64 / wall)),
+            ("frames", Json::num(stats.frames as f64)),
+            ("peak_frames", Json::num(stats.peak_frames as f64)),
+            ("frame_bytes", Json::num(stats.frame_bytes as f64)),
+            ("peak_bytes", Json::num(peak_bytes as f64)),
+            ("prefix_hits", Json::num(stats.prefix_hits as f64)),
+            ("cow_splits", Json::num(stats.cow_splits as f64)),
+            ("evictions", Json::num(stats.evictions as f64)),
+            ("load_sheds", Json::num(stats.load_sheds as f64)),
+        ]));
+    }
+    paged_table.print();
+    println!(
+        "peak MB = peak frames x frame bytes (K + V + pooled stage-1 state per frame). Prefix hits \
+         skip the duplicate prompt's prefill and share its frames; deferred admissions queue until \
+         retiring sessions return frames instead of growing the pool."
+    );
+
     if json_mode {
         let doc = Json::obj(vec![
             ("bench", Json::str("table8_serving")),
@@ -341,6 +431,7 @@ fn main() {
             ("mixed_traffic", Json::Arr(mixed_json)),
             ("decode_phase", Json::Arr(batch_json)),
             ("solo_splitkv", Json::Arr(solo_json)),
+            ("paged_serving", Json::Arr(paged_json)),
         ]);
         std::fs::write("BENCH_table8.json", doc.dump() + "\n").expect("write BENCH_table8.json");
         println!("\nwrote BENCH_table8.json");

@@ -350,7 +350,7 @@ impl AttnEngine {
     /// parallelize over rows, and a domain of at most one span gains
     /// nothing — worker count never enters the decision, so routing (and
     /// therefore output bits) is identical for every execution mode.
-    fn kv_span(&self, tm: usize, tn: usize) -> Option<usize> {
+    pub(crate) fn kv_span(&self, tm: usize, tn: usize) -> Option<usize> {
         let span = self.kv_split.span_blocks()?;
         if tm == 1 && tn > span {
             Some(span)
@@ -415,6 +415,15 @@ impl AttnEngine {
                 AttnOutput { out, stats, mask: None }
             }
         }
+    }
+
+    /// Open a paged per-sequence session whose KV cache lives in
+    /// [`super::paged::PageAllocator`] frames instead of session-owned
+    /// tensors — same engine semantics (bitwise for f32/λ-off), shared
+    /// memory pool. See [`super::paged`] for the frame/CoW/eviction
+    /// contracts.
+    pub fn paged_session(&self) -> super::paged::PagedAttnSession<'_> {
+        super::paged::PagedAttnSession::new(self)
     }
 
     /// Open a stateful per-sequence session (KV cache, incremental
@@ -702,7 +711,7 @@ impl AttnSession<'_> {
         self.k_cache = Tensor::from_vec(&[0, self.d], Vec::new());
         self.v_cache = Tensor::from_vec(&[0, self.dv], Vec::new());
         if matches!(self.engine.policy, SparsityPolicy::Predicted { .. }) {
-            self.kpool = Some(KPool::new(self.engine.cfg.bk, self.d));
+            self.kpool = Some(KPool::new(self.engine.cfg.bk, self.d).with_microkernel(self.engine.microkernel));
         }
     }
 
@@ -1027,10 +1036,10 @@ impl ScoreKernel for QuantCacheKernel<'_> {
 /// Filter for one prefill chunk under an external full-sequence mask:
 /// block-row lookups are shifted by the chunk's starting block row, so
 /// local tile `bi` reads global mask row `row0 + bi`.
-struct OffsetMaskFilter<'a> {
-    mask: &'a BlockMask,
-    row0: usize,
-    lambda: Option<f32>,
+pub(crate) struct OffsetMaskFilter<'a> {
+    pub(crate) mask: &'a BlockMask,
+    pub(crate) row0: usize,
+    pub(crate) lambda: Option<f32>,
 }
 
 impl BlockFilter for OffsetMaskFilter<'_> {
@@ -1045,10 +1054,10 @@ impl BlockFilter for OffsetMaskFilter<'_> {
 
 /// Filter for one decode step under an external full-sequence mask: block
 /// decisions come from the mask row the decoded position belongs to.
-struct RowMaskFilter<'a> {
-    mask: &'a BlockMask,
-    row: usize,
-    lambda: Option<f32>,
+pub(crate) struct RowMaskFilter<'a> {
+    pub(crate) mask: &'a BlockMask,
+    pub(crate) row: usize,
+    pub(crate) lambda: Option<f32>,
 }
 
 impl BlockFilter for RowMaskFilter<'_> {

@@ -43,6 +43,25 @@
 //! quantized compositions. Adding an engine means adding a kernel or
 //! filter impl — never another loop.
 //!
+//! ## KV ownership: monolithic sessions and paged frames
+//!
+//! A session's KV cache has two ownership models. The monolithic
+//! [`AttnSession`] owns contiguous K/V tensors (amortized growth,
+//! simplest possible lifetime). The paged [`PagedAttnSession`] holds
+//! only a *page table* into a shared [`PageAllocator`] — a pool of
+//! fixed `b_k`-row **frames** recycled through a free list, where K, V,
+//! the stage-1 pooled state, and the INT8 payload of each block page
+//! together. Frames are refcounted: identical prompts share their
+//! prefix frames copy-on-write ([`PagedAttnSession::prefill_shared`]),
+//! idle sessions spill and release ([`PagedAttnSession::evict`]) and
+//! transparently re-page-in on their next decode, and the serving loop
+//! admits work against the free-frame count instead of OOMing. The
+//! drivers are indifferent: both consume any [`KvSource`], and each
+//! `b_k`-aligned block request resolves to exactly one frame, so the
+//! paged path is bitwise-identical to the monolithic one for f32/λ-off
+//! under every execution mode (`tests/paged_kv.rs`). See [`paged`] for
+//! the full frame/CoW/eviction contracts.
+//!
 //! ## Workspace ownership and the determinism contract
 //!
 //! The steady-state serving hot path is **allocation-free**: all scratch
@@ -92,10 +111,12 @@
 //! | split-KV decode (new) | `.kv_split(KvSplit::Auto)` — decode steps fan KV spans across the pool |
 //! | pool sharing (new) | `.shared_pool(pool)` — several engines over one `Arc<WorkerPool>` |
 //! | zero-alloc decode (new) | `session.decode_into(q, k, v, &mut row)` — writes into a caller buffer |
+//! | paged KV cache (new) | `engine.paged_session()` over a shared [`PageAllocator`] — frames, CoW prefix sharing, eviction |
 
 pub mod dense;
 pub mod engine;
 pub mod flash;
+pub mod paged;
 pub mod pipeline;
 pub mod types;
 
@@ -106,9 +127,11 @@ pub use engine::{
 };
 #[allow(deprecated)]
 pub use flash::{attention_flash, attention_flash_stats, attention_flash_stats_threads};
+pub use paged::{prefix_hash, PageAllocator, PageStats, PagedAttnSession, PagedKv, PrefixRegistry};
 pub use pipeline::{
-    run_tiled, run_tiled_into, run_tiled_splitkv, run_tiled_splitkv_into, score_block, BlockFilter,
-    DenseFilter, Exec, F32Kernel, FlashTile, MaskFilter, ScoreKernel, ScoreScratch, SpanPlan,
+    run_tiled, run_tiled_into, run_tiled_into_kv, run_tiled_splitkv, run_tiled_splitkv_into,
+    run_tiled_splitkv_into_kv, score_block, score_block_slices, BlockFilter, DenseFilter, Exec,
+    F32Kernel, FlashTile, KvSource, MaskFilter, ScoreKernel, ScoreScratch, SpanPlan, TensorKv,
 };
 pub use types::{AttnConfig, BlockMask, KvSplit, SkipStats, KV_SPLIT_AUTO_BLOCKS};
 // Re-exported so engine users can hold scratch arenas without reaching

@@ -1,0 +1,1245 @@
+//! Paged KV cache: fixed-size frames, copy-on-write prefix sharing, and
+//! spill/restore eviction — the memory system under thousands of
+//! resident sessions.
+//!
+//! The monolithic [`super::engine::AttnSession`] owns its KV cache as two
+//! contiguous tensors, so N sessions cost N private growth curves and an
+//! idle session pins its whole cache forever. This module replaces that
+//! ownership with **frames**: a [`PageAllocator`] carves one up-front
+//! reservation into fixed slots of exactly `b_k` rows each, recycled
+//! through a free list, and a [`PagedAttnSession`] holds only a *page
+//! table* (`Vec` of frame ids, one per `b_k` block of its sequence). The
+//! tiled drivers never see the difference — [`PagedKv`] implements the
+//! [`KvSource`] seam, resolving each `b_k`-aligned block request to
+//! exactly one frame — and every per-block quantity the engines cache
+//! pages along with K/V:
+//!
+//! - the V rows (the `P̃·V` side of [`KvSource::v_block`]),
+//! - the K rows (resolved by the paged [`ScoreKernel`]s),
+//! - the stage-1 pooled state (per-frame column sums + self-similarity,
+//!   maintained with the same fixed-order microkernel chains as
+//!   [`KPool`] — so predicted masks match the monolithic session bit for
+//!   bit),
+//! - and, under INT8, the per-frame [`QuantBlock`] payload of the
+//!   smoothed K block (pre-reserved to `b_k × d` at construction so
+//!   tail-block requantizes stay in place).
+//!
+//! So all three policies (dense / predicted / external) × both
+//! precisions page identically — one page table serves every
+//! composition.
+//!
+//! ## Contracts
+//!
+//! **Bitwise parity.** For f32 engines with λ off, a paged session's
+//! prefill chunks and decode steps are *bitwise-identical* (outputs and
+//! [`SkipStats`]) to the monolithic session under every `Exec` mode,
+//! every pool size, and both split-KV settings: driver routing is the
+//! same shape-pure [`AttnEngine::kv_span`] decision, the paged f32
+//! kernel shares [`score_block_slices`] with [`F32Kernel`] (same score
+//! bits from the same K bits), and frame-resident pooled state
+//! reproduces [`KPool`]'s accumulation chains exactly. INT8 payloads are
+//! byte-identical per block (blocks quantize independently), so the
+//! quant path matches the monolithic cache kernel too.
+//! `tests/paged_kv.rs` pins the full matrix.
+//!
+//! **Zero-alloc warmed decode.** A warmed [`PagedAttnSession::decode_into`]
+//! step performs no heap allocation: frame claims pop a preallocated
+//! free list, pooled updates write preallocated per-frame arrays, and
+//! all per-step scratch comes from the session's [`Workspace`]/
+//! [`SpanPlan`] arenas (`tests/alloc_regression.rs`).
+//!
+//! **Exhaustion is a value.** [`PageAllocator::claim`] returns `None`
+//! when the pool is dry; session append paths *check first and decline*
+//! (`false`/`None`) without touching any state, so admission control can
+//! defer work instead of the allocator OOMing or panicking mid-append.
+//!
+//! ## Copy-on-write prefix sharing
+//!
+//! Two sessions opened from the same prompt hash map the *same* frames:
+//! [`PagedAttnSession::prefill_shared`] hashes the prompt's K/V bits,
+//! and on a [`PrefixRegistry`] hit retains the lender's frames
+//! (refcounts), adopts the cached prefill output rows (bitwise — they
+//! were computed from the very same frame bits), and skips the prefill
+//! compute entirely. Frames stay shared until a writer must touch a
+//! *partially filled* tail frame: the first divergent append CoW-splits
+//! just that frame ([`PageAllocator::cow`]); full shared frames are
+//! never written again and stay shared for the sessions' lifetimes.
+//!
+//! ## Eviction and re-page-in
+//!
+//! An idle session can be evicted ([`PagedAttnSession::evict`]): its
+//! frame contents spill verbatim into a session-owned buffer, every
+//! refcount is released, and the frames recycle to other sessions. The
+//! next decode transparently re-pages-in ([`PagedAttnSession::ensure_resident`]):
+//! fresh frames are claimed, K/V/pooled state restored bit-for-bit, and
+//! INT8 payloads requantized from the restored rows (byte-identical —
+//! quantization is deterministic per block). Decode after re-page-in is
+//! therefore bitwise-equal to never having been evicted.
+
+use crate::sparge::kernel::quant_score_block;
+use crate::sparge::predict::{cos_sim_with_backend, predict_decode_row_into, predict_pooled};
+use crate::tensor::microkernel::Backend;
+use crate::tensor::quant::{self, QuantBlock};
+use crate::tensor::Tensor;
+use crate::util::threadpool::Workspace;
+
+use super::engine::{AttnEngine, AttnOutput, OffsetMaskFilter, Precision, RowMaskFilter, SparsityPolicy};
+use super::pipeline::{
+    run_tiled_into_kv, run_tiled_splitkv_into_kv, score_block_slices, BlockFilter, DenseFilter,
+    Exec, KvSource, MaskFilter, ScoreKernel, ScoreScratch, SpanPlan,
+};
+use super::types::{AttnConfig, BlockMask, SkipStats};
+
+#[cfg(doc)]
+use super::pipeline::F32Kernel;
+#[cfg(doc)]
+use crate::sparge::predict::KPool;
+
+/// Counter snapshot of a [`PageAllocator`] — the serving loop's memory
+/// telemetry (`benches/table8_serving.rs` reports these per scale point).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PageStats {
+    /// Total frames the pool was built with.
+    pub frames: usize,
+    /// Frames currently claimed by at least one holder.
+    pub frames_in_use: usize,
+    /// High-water mark of `frames_in_use`.
+    pub peak_frames: usize,
+    /// Successful frame claims over the pool's lifetime.
+    pub claims: u64,
+    /// Copy-on-write splits of shared frames.
+    pub cow_splits: u64,
+    /// Prompt-prefix registry hits (prefills skipped entirely).
+    pub prefix_hits: u64,
+    /// Session evictions (spill-to-buffer events).
+    pub evictions: u64,
+    /// Admissions deferred because the free list could not cover them.
+    pub load_sheds: u64,
+    /// Bytes of payload one frame carries (K + V + pooled state + INT8)
+    /// — `peak_frames * frame_bytes` is the pool's high-water resident
+    /// footprint.
+    pub frame_bytes: usize,
+}
+
+/// A pool of fixed `b_k`-row KV frames recycled through a free list.
+///
+/// All storage — K rows, V rows, per-frame pooled sums/similarity, and
+/// (for INT8 engines) per-frame quantized payloads — is allocated once
+/// at construction as parallel per-frame arrays; nothing on the claim /
+/// release / append path allocates. Frames are refcounted so prompt
+/// prefixes can be shared; see the module docs for the CoW discipline.
+pub struct PageAllocator {
+    bk: usize,
+    d: usize,
+    dv: usize,
+    quant: bool,
+    /// K rows, `frames × bk × d`.
+    k: Vec<f32>,
+    /// V rows, `frames × bk × dv`.
+    v: Vec<f32>,
+    /// Per-frame pooled column sums (`frames × d`) — the paged
+    /// equivalent of `KPool`'s per-block sums, same accumulation chains.
+    psum: Vec<f32>,
+    /// Rows currently held per frame (0..=bk).
+    prow: Vec<usize>,
+    /// Per-frame self-similarity (stage-1 `sim_k`).
+    sim: Vec<f32>,
+    /// Per-frame INT8 payload of the smoothed K block; empty unless the
+    /// pool was built `with_quant` (payloads pre-reserved to `bk × d`).
+    qk: Vec<QuantBlock>,
+    /// Per-frame refcount; 0 = on the free list.
+    rc: Vec<u32>,
+    /// Free frame ids; preallocated to full capacity so `release` never
+    /// allocates.
+    free: Vec<usize>,
+    frames_in_use: usize,
+    peak_frames: usize,
+    claims: u64,
+    cow_splits: u64,
+    prefix_hits: u64,
+    evictions: u64,
+    load_sheds: u64,
+}
+
+impl PageAllocator {
+    /// Build a pool of `frames` frames of `bk` rows each (K width `d`,
+    /// V width `dv`). Everything is allocated here, once.
+    pub fn new(frames: usize, bk: usize, d: usize, dv: usize) -> PageAllocator {
+        assert!(frames > 0 && bk > 0 && d > 0 && dv > 0, "PageAllocator needs positive geometry");
+        PageAllocator {
+            bk,
+            d,
+            dv,
+            quant: false,
+            k: vec![0.0; frames * bk * d],
+            v: vec![0.0; frames * bk * dv],
+            psum: vec![0.0; frames * d],
+            prow: vec![0; frames],
+            sim: vec![1.0; frames],
+            qk: Vec::new(),
+            rc: vec![0; frames],
+            // claim pops from the back: seed in reverse so frames hand
+            // out in ascending id order (deterministic, debuggable)
+            free: (0..frames).rev().collect(),
+            frames_in_use: 0,
+            peak_frames: 0,
+            claims: 0,
+            cow_splits: 0,
+            prefix_hits: 0,
+            evictions: 0,
+            load_sheds: 0,
+        }
+    }
+
+    /// Add per-frame INT8 payload storage (required before serving an
+    /// `Precision::Int8` engine). Payloads are pre-reserved to the full
+    /// `bk × d` so in-place tail requantizes never grow them.
+    pub fn with_quant(mut self) -> PageAllocator {
+        let frames = self.prow.len();
+        self.qk = (0..frames)
+            .map(|_| QuantBlock {
+                data: Vec::with_capacity(self.bk * self.d),
+                rows: 0,
+                d: self.d,
+                scale: 1.0,
+            })
+            .collect();
+        self.quant = true;
+        self
+    }
+
+    /// Frame geometry: rows per frame (`b_k`).
+    pub fn block_rows(&self) -> usize {
+        self.bk
+    }
+
+    /// Total frames in the pool.
+    pub fn capacity(&self) -> usize {
+        self.prow.len()
+    }
+
+    /// Frames currently on the free list.
+    pub fn free_frames(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Bytes of payload one frame carries (K + V + pooled state + INT8).
+    pub fn frame_bytes(&self) -> usize {
+        let f32s = self.bk * self.d + self.bk * self.dv + self.d + 1;
+        let i8s = if self.quant { self.bk * self.d } else { 0 };
+        f32s * std::mem::size_of::<f32>() + i8s
+    }
+
+    /// High-water resident bytes (peak frames × frame bytes).
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_frames * self.frame_bytes()
+    }
+
+    /// Counter snapshot (see [`PageStats`]).
+    pub fn stats(&self) -> PageStats {
+        PageStats {
+            frames: self.capacity(),
+            frames_in_use: self.frames_in_use,
+            peak_frames: self.peak_frames,
+            claims: self.claims,
+            cow_splits: self.cow_splits,
+            prefix_hits: self.prefix_hits,
+            evictions: self.evictions,
+            load_sheds: self.load_sheds,
+            frame_bytes: self.frame_bytes(),
+        }
+    }
+
+    /// Record one load-shed (deferred admission) event. Kept on the
+    /// allocator so memory pressure telemetry lives in one place.
+    pub fn note_load_shed(&mut self) {
+        self.load_sheds += 1;
+    }
+
+    /// Claim one free frame (refcount 1, zeroed pooled state), or `None`
+    /// when the pool is dry — exhaustion is a value, never a panic. Pops
+    /// the preallocated free list: no allocation.
+    pub fn claim(&mut self) -> Option<usize> {
+        let f = self.free.pop()?;
+        self.rc[f] = 1;
+        self.prow[f] = 0;
+        self.psum[f * self.d..(f + 1) * self.d].fill(0.0);
+        self.sim[f] = 1.0;
+        self.claims += 1;
+        self.frames_in_use += 1;
+        self.peak_frames = self.peak_frames.max(self.frames_in_use);
+        Some(f)
+    }
+
+    /// Add one reference to a claimed frame (prefix sharing).
+    pub fn retain(&mut self, f: usize) {
+        debug_assert!(self.rc[f] > 0, "retain of a free frame");
+        self.rc[f] += 1;
+    }
+
+    /// Drop one reference; the frame recycles to the free list when the
+    /// last holder releases (push into preallocated capacity — no
+    /// allocation).
+    pub fn release(&mut self, f: usize) {
+        debug_assert!(self.rc[f] > 0, "release of a free frame");
+        self.rc[f] -= 1;
+        if self.rc[f] == 0 {
+            self.free.push(f);
+            self.frames_in_use -= 1;
+        }
+    }
+
+    /// Whether `f` has more than one holder (writes require CoW).
+    pub fn shared(&self, f: usize) -> bool {
+        self.rc[f] > 1
+    }
+
+    /// Copy-on-write: return a frame the caller may write. Exclusive
+    /// frames come back unchanged; shared frames are split — a fresh
+    /// frame is claimed, the full contents (K, V, pooled state, INT8
+    /// payload) copied over, and the caller's reference moved to the
+    /// copy. `None` if a split was needed and the pool is dry (caller
+    /// state untouched).
+    pub fn cow(&mut self, f: usize) -> Option<usize> {
+        if self.rc[f] == 1 {
+            return Some(f);
+        }
+        let g = self.claim()?;
+        let (bk, d, dv) = (self.bk, self.d, self.dv);
+        self.k.copy_within(f * bk * d..(f + 1) * bk * d, g * bk * d);
+        self.v.copy_within(f * bk * dv..(f + 1) * bk * dv, g * bk * dv);
+        self.psum.copy_within(f * d..(f + 1) * d, g * d);
+        self.prow[g] = self.prow[f];
+        self.sim[g] = self.sim[f];
+        if self.quant {
+            // two disjoint references into qk: split at the larger index
+            let (lo, hi) = if f < g { (f, g) } else { (g, f) };
+            let (a, b) = self.qk.split_at_mut(hi);
+            let (src, dst): (&QuantBlock, &mut QuantBlock) =
+                if f < g { (&a[lo], &mut b[0]) } else { (&b[0], &mut a[lo]) };
+            dst.data.clear();
+            dst.data.extend_from_slice(&src.data);
+            dst.rows = src.rows;
+            dst.d = src.d;
+            dst.scale = src.scale;
+        }
+        // move our reference: the shared original keeps its other holders
+        self.rc[f] -= 1;
+        self.cow_splits += 1;
+        Some(g)
+    }
+
+    /// Append `rows` K/V rows into frame `f` (which must have room),
+    /// maintaining the pooled column sums with the same fixed-order
+    /// [`Backend::sum_rows_acc`] chain as [`KPool`] — bitwise parity by
+    /// construction.
+    fn push_rows(&mut self, f: usize, krows: &[f32], vrows: &[f32], rows: usize, mk: Backend) {
+        let (bk, d, dv) = (self.bk, self.d, self.dv);
+        let r = self.prow[f];
+        debug_assert!(r + rows <= bk, "frame overflow");
+        debug_assert_eq!(krows.len(), rows * d);
+        debug_assert_eq!(vrows.len(), rows * dv);
+        self.k[f * bk * d + r * d..f * bk * d + (r + rows) * d].copy_from_slice(krows);
+        self.v[f * bk * dv + r * dv..f * bk * dv + (r + rows) * dv].copy_from_slice(vrows);
+        mk.sum_rows_acc(krows, &mut self.psum[f * d..(f + 1) * d], rows, d);
+        self.prow[f] = r + rows;
+    }
+
+    /// Recompute frame `f`'s self-similarity from its own K rows —
+    /// exactly [`KPool::append_row`]'s tail recompute (same function,
+    /// same slice bits). `scratch` is the session's normalization buffer.
+    fn refresh_sim(&mut self, f: usize, mk: Backend, scratch: &mut Vec<f32>) {
+        let (bk, d) = (self.bk, self.d);
+        let rows = self.prow[f];
+        let s = cos_sim_with_backend(mk, &self.k[f * bk * d..f * bk * d + rows * d], rows, d, scratch);
+        self.sim[f] = s;
+    }
+
+    /// (Re)quantize frame `f`'s K rows with the session's frozen
+    /// smoothing mean, in place into the pre-reserved payload — the
+    /// paged equivalent of the monolithic tail-block requantize, with
+    /// byte-identical payloads (blocks quantize independently).
+    fn requantize_frame(&mut self, f: usize, kmean: &[f32], stage: &mut Vec<f32>) {
+        debug_assert!(self.quant, "requantize on a pool built without with_quant()");
+        let (bk, d) = (self.bk, self.d);
+        let rows = self.prow[f];
+        stage.clear();
+        stage.extend_from_slice(&self.k[f * bk * d..f * bk * d + rows * d]);
+        for row in stage.chunks_mut(d) {
+            for (x, &m) in row.iter_mut().zip(kmean) {
+                *x -= m;
+            }
+        }
+        self.qk[f].requantize(stage, rows, d);
+    }
+}
+
+/// A paged [`KvSource`]: the tiled drivers' view of one session's page
+/// table. Each `b_k`-aligned block request resolves to exactly one
+/// frame (the page-table lookup is one index per visited block).
+pub struct PagedKv<'a> {
+    alloc: &'a PageAllocator,
+    frames: &'a [usize],
+    rows: usize,
+}
+
+impl KvSource for PagedKv<'_> {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn dv(&self) -> usize {
+        self.alloc.dv
+    }
+
+    fn v_block(&self, k0: usize, k1: usize) -> &[f32] {
+        let (bk, dv) = (self.alloc.bk, self.alloc.dv);
+        debug_assert_eq!(k0 % bk, 0, "KvSource callers request b_k-aligned blocks");
+        debug_assert!(k1 - k0 <= bk);
+        let f = self.frames[k0 / bk];
+        let base = f * bk * dv;
+        &self.alloc.v[base..base + (k1 - k0) * dv]
+    }
+}
+
+/// f32 score kernel over paged K frames: shares [`score_block_slices`]
+/// with [`F32Kernel`], so paged scores are bitwise-identical to the
+/// monolithic cache (the K bits are the same rows, frame-resident).
+struct PagedF32Kernel<'a> {
+    q: &'a Tensor,
+    alloc: &'a PageAllocator,
+    frames: &'a [usize],
+    scale: f32,
+    causal: bool,
+    row_offset: usize,
+    mk: Backend,
+}
+
+impl ScoreKernel for PagedF32Kernel<'_> {
+    fn score_block(
+        &self,
+        q0: usize,
+        q1: usize,
+        k0: usize,
+        k1: usize,
+        out: &mut [f32],
+        _scratch: &mut ScoreScratch<'_>,
+    ) {
+        let (bk, d) = (self.alloc.bk, self.alloc.d);
+        let f = self.frames[k0 / bk];
+        let ks = &self.alloc.k[f * bk * d..f * bk * d + (k1 - k0) * d];
+        score_block_slices(
+            self.mk,
+            &self.q.data()[q0 * d..q1 * d],
+            ks,
+            q1 - q0,
+            k1 - k0,
+            d,
+            self.row_offset + q0,
+            k0,
+            self.scale,
+            self.causal,
+            out,
+        );
+    }
+
+    fn microkernel(&self) -> Backend {
+        self.mk
+    }
+}
+
+/// INT8 score kernel over paged K frames: Q comes from the session's
+/// staged blocks, K from each frame's cached payload — the paged twin of
+/// the monolithic session's cache kernel, sharing `quant_score_block`.
+struct PagedQuantKernel<'a> {
+    qb: &'a [QuantBlock],
+    alloc: &'a PageAllocator,
+    frames: &'a [usize],
+    scale: f32,
+    causal: bool,
+    row_offset: usize,
+    bq: usize,
+    mk: Backend,
+}
+
+impl ScoreKernel for PagedQuantKernel<'_> {
+    fn score_block(
+        &self,
+        q0: usize,
+        _q1: usize,
+        k0: usize,
+        _k1: usize,
+        out: &mut [f32],
+        scratch: &mut ScoreScratch<'_>,
+    ) {
+        let qblk = &self.qb[q0 / self.bq];
+        let kblk = &self.alloc.qk[self.frames[k0 / self.alloc.bk]];
+        quant_score_block(
+            self.mk,
+            qblk,
+            kblk,
+            self.row_offset + q0,
+            k0,
+            self.scale,
+            self.causal,
+            out,
+            scratch.acc_i32,
+        );
+    }
+
+    fn microkernel(&self) -> Backend {
+        self.mk
+    }
+}
+
+/// FNV-1a 64 over a prompt's K/V bits (dims folded in) — the
+/// [`PrefixRegistry`] key. Exact bit equality, no float tolerance: two
+/// prompts share frames only when their caches would be identical.
+pub fn prefix_hash(k: &Tensor, v: &Tensor) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |w: u64| {
+        h ^= w;
+        h = h.wrapping_mul(PRIME);
+    };
+    mix(k.dim(0) as u64);
+    mix(k.dim(1) as u64);
+    mix(v.dim(1) as u64);
+    for &x in k.data() {
+        mix(x.to_bits() as u64);
+    }
+    for &x in v.data() {
+        mix(x.to_bits() as u64);
+    }
+    h
+}
+
+/// One registered shared prompt prefix: the frames (the registry holds
+/// one refcount on each), the cached prefill result, and the session
+/// state a borrower must adopt to stay bitwise-consistent.
+struct PrefixEntry {
+    hash: u64,
+    rows: usize,
+    frames: Vec<usize>,
+    /// Frozen K-smoothing mean the lender quantized the shared frames
+    /// with (INT8 engines); borrowers adopt it so the shared payloads
+    /// stay consistent with their own later appends.
+    kmean: Option<Vec<f32>>,
+    out: Tensor,
+    stats: SkipStats,
+    mask: Option<BlockMask>,
+    hits: u64,
+}
+
+/// Registry of shared prompt prefixes, keyed on [`prefix_hash`]. The
+/// registry retains its own reference on every registered frame, so a
+/// prefix outlives the session that created it until
+/// [`PrefixRegistry::clear`] releases it.
+#[derive(Default)]
+pub struct PrefixRegistry {
+    entries: Vec<PrefixEntry>,
+}
+
+impl PrefixRegistry {
+    pub fn new() -> PrefixRegistry {
+        PrefixRegistry { entries: Vec::new() }
+    }
+
+    /// Registered prefixes.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total lookup hits across all entries.
+    pub fn hits(&self) -> u64 {
+        self.entries.iter().map(|e| e.hits).sum()
+    }
+
+    fn find(&self, hash: u64, rows: usize) -> Option<usize> {
+        self.entries.iter().position(|e| e.hash == hash && e.rows == rows)
+    }
+
+    /// Reclaim one registered prefix under memory pressure: drop the
+    /// least-hit entry whose frames no live session references anymore
+    /// (every refcount is the registry's own), releasing its frames to
+    /// the free list. `false` when every entry is still shared with a
+    /// session — those frames are not the registry's to give back.
+    pub fn shed(&mut self, alloc: &mut PageAllocator) -> bool {
+        let mut best: Option<usize> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.frames.iter().any(|&f| alloc.shared(f)) {
+                continue;
+            }
+            if best.map_or(true, |b| e.hits < self.entries[b].hits) {
+                best = Some(i);
+            }
+        }
+        let Some(i) = best else { return false };
+        let e = self.entries.remove(i);
+        for &f in &e.frames {
+            alloc.release(f);
+        }
+        true
+    }
+
+    /// Release every registry-held frame reference and forget all
+    /// entries (frames shared with live sessions stay resident through
+    /// the sessions' own references).
+    pub fn clear(&mut self, alloc: &mut PageAllocator) {
+        for e in &self.entries {
+            for &f in &e.frames {
+                alloc.release(f);
+            }
+        }
+        self.entries.clear();
+    }
+}
+
+/// Spilled contents of an evicted session: the exact frame payloads,
+/// verbatim, so re-page-in restores bit-for-bit. Buffers persist across
+/// evict/restore cycles (high-water sized).
+#[derive(Default)]
+struct Spill {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    psum: Vec<f32>,
+    prow: Vec<usize>,
+    sim: Vec<f32>,
+}
+
+/// Per-sequence state over a shared [`AttnEngine`] whose KV cache lives
+/// in [`PageAllocator`] frames instead of session-owned tensors. Append
+/// paths take `&mut PageAllocator` (they claim/write frames); compute
+/// paths take `&PageAllocator` — so a serving tick appends serially and
+/// then fans the compute of many sessions over one shared `&alloc`.
+/// See the module docs for the parity / zero-alloc / exhaustion
+/// contracts.
+pub struct PagedAttnSession<'e> {
+    engine: &'e AttnEngine,
+    d: usize,
+    dv: usize,
+    rows: usize,
+    /// The page table: frame id of each `b_k` block, in sequence order.
+    frames: Vec<usize>,
+    /// Frozen K-smoothing channel mean (INT8 only; see the monolithic
+    /// session — adopted from the registry on a prefix hit).
+    kmean: Option<Vec<f32>>,
+    /// Reusable Q-side quantization staging (INT8).
+    qstage: Vec<QuantBlock>,
+    /// Session-owned decode mask (`Predicted` policy), rebuilt in place.
+    pred_mask: BlockMask,
+    /// Staged per-frame sims for the predictor (means stage through the
+    /// workspace arena) — refilled per step within capacity.
+    pred_sims: Vec<f32>,
+    /// Normalization scratch for the per-frame sim recompute (the paged
+    /// twin of `KPool::scratch`).
+    pool_scratch: Vec<f32>,
+    ws: Workspace,
+    plan: SpanPlan,
+    steps: usize,
+    evicted: bool,
+    spill: Spill,
+}
+
+impl<'e> PagedAttnSession<'e> {
+    /// Open a paged session over `engine`. Frame geometry is checked
+    /// against the allocator at first append.
+    pub fn new(engine: &'e AttnEngine) -> PagedAttnSession<'e> {
+        assert_eq!(
+            engine.config().row_offset,
+            0,
+            "sessions manage row_offset; build the engine with offset 0"
+        );
+        PagedAttnSession {
+            engine,
+            d: 0,
+            dv: 0,
+            rows: 0,
+            frames: Vec::new(),
+            kmean: None,
+            qstage: Vec::new(),
+            pred_mask: BlockMask::new_all(0, 0, false),
+            pred_sims: Vec::new(),
+            pool_scratch: Vec::new(),
+            ws: Workspace::default(),
+            plan: SpanPlan::new(),
+            steps: 0,
+            evicted: false,
+            spill: Spill::default(),
+        }
+    }
+
+    /// Cached sequence length (rows of K/V seen so far).
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Decode steps taken so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Frames this session currently references (0 while evicted).
+    pub fn frames_held(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Whether the session's frames are spilled (re-page-in needed
+    /// before the next append/compute).
+    pub fn is_evicted(&self) -> bool {
+        self.evicted
+    }
+
+    /// Frames a sequence of `rows` rows occupies under this allocator
+    /// geometry (the admission-control unit).
+    pub fn frames_for_rows(rows: usize, bk: usize) -> usize {
+        rows.div_ceil(bk)
+    }
+
+    fn pooled(&self) -> bool {
+        matches!(self.engine.policy(), SparsityPolicy::Predicted { .. })
+    }
+
+    fn init_dims(&mut self, alloc: &PageAllocator, k: &Tensor, v: &Tensor) {
+        self.d = k.dim(1);
+        self.dv = v.dim(1);
+        assert_eq!(alloc.bk, self.engine.config().bk, "allocator frame rows must equal the engine's b_k");
+        assert_eq!(alloc.d, self.d, "allocator K width");
+        assert_eq!(alloc.dv, self.dv, "allocator V width");
+        if self.engine.precision() == Precision::Int8 {
+            assert!(alloc.quant, "INT8 engines need a PageAllocator built with_quant()");
+        }
+    }
+
+    /// Frames an append of `new_rows` rows needs *now*: fresh frames for
+    /// new blocks, plus one transient frame when the partially-filled
+    /// shared tail must CoW-split first.
+    fn frames_needed(&self, alloc: &PageAllocator, new_rows: usize) -> usize {
+        let bk = alloc.bk;
+        let blocks_after = (self.rows + new_rows).div_ceil(bk);
+        let mut needed = blocks_after - self.frames.len();
+        if self.rows % bk != 0 && alloc.shared(self.frames[self.frames.len() - 1]) {
+            needed += 1;
+        }
+        needed
+    }
+
+    /// Prefill an empty session in one shot (a single chunk from empty).
+    pub fn prefill(&mut self, alloc: &mut PageAllocator, q: &Tensor, k: &Tensor, v: &Tensor) -> Option<AttnOutput> {
+        assert_eq!(self.rows, 0, "prefill on a non-empty session; use prefill_chunk()/decode()");
+        self.prefill_chunk(alloc, q, k, v)
+    }
+
+    /// Append one prompt chunk and run its query rows against the whole
+    /// paged cache, offset-aware — the paged twin of the monolithic
+    /// `prefill_chunk`, bitwise-identical to it policy for policy (see
+    /// module docs). Returns `None` — with **no state touched** — when
+    /// the free list cannot cover the chunk's frames; the caller defers
+    /// and retries after frames free up.
+    pub fn prefill_chunk(
+        &mut self,
+        alloc: &mut PageAllocator,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+    ) -> Option<AttnOutput> {
+        assert_eq!(q.dim(0), k.dim(0), "prefill chunk q/k rows");
+        assert_eq!(k.dim(0), v.dim(0), "k/v rows");
+        assert!(k.dim(0) > 0, "empty prefill chunk");
+        if !self.ensure_resident(alloc) {
+            return None;
+        }
+        let row0 = self.rows;
+        assert!(
+            row0 == 0 || self.engine.config().causal,
+            "multi-chunk prefill needs a causal engine (later rows are not cached yet)"
+        );
+        if row0 == 0 {
+            self.init_dims(alloc, k, v);
+            if self.engine.precision() == Precision::Int8 {
+                self.kmean = Some(quant::channel_mean(k));
+            }
+        }
+        assert_eq!(q.dim(1), self.d, "q head dim");
+        assert_eq!(k.dim(1), self.d, "k head dim");
+        assert_eq!(v.dim(1), self.dv, "v dim");
+
+        if alloc.free_frames() < self.frames_needed(alloc, k.dim(0)) {
+            return None;
+        }
+        self.append_rows(alloc, k, v, row0);
+        if self.engine.precision() == Precision::Int8 {
+            self.requantize_from(alloc, row0);
+            quant::quantize_blocks_into(q, self.engine.config().bq, &mut self.qstage);
+        }
+
+        let cfg = self.engine.config().at_offset(row0);
+        let mut out = Tensor::zeros(&[q.dim(0), self.dv]);
+        let mut ws = std::mem::take(&mut self.ws);
+        let mut plan = std::mem::take(&mut self.plan);
+        let exec = self.engine.exec();
+        let (stats, mask) = match self.engine.policy() {
+            SparsityPolicy::Dense => {
+                let st = self.run_paged(alloc, q, &cfg, &DenseFilter, exec, &mut plan, &mut ws, out.data_mut());
+                (st, None)
+            }
+            SparsityPolicy::Predicted { params, lambda } => {
+                // pooled K side straight off the frames — bitwise equal
+                // to the monolithic KPool means/sims (same chains)
+                let kt = self.frame_means(alloc);
+                self.stage_sims(alloc);
+                let pred = predict_pooled(q, &kt, &self.pred_sims, &cfg, params);
+                let st = {
+                    let filter = MaskFilter::new(&pred.mask, *lambda);
+                    self.run_paged(alloc, q, &cfg, &filter, exec, &mut plan, &mut ws, out.data_mut())
+                };
+                (st, Some(pred.mask))
+            }
+            SparsityPolicy::External { mask, lambda } => {
+                let cfg_bq = cfg.bq;
+                assert_eq!(
+                    row0 % cfg_bq,
+                    0,
+                    "chunked prefill under an external mask must start at a b_q boundary"
+                );
+                let row0_blocks = row0 / cfg_bq;
+                assert!(
+                    mask.rows >= row0_blocks + cfg.n_qblocks(q.dim(0)),
+                    "external mask has {} block rows; chunk needs {}",
+                    mask.rows,
+                    row0_blocks + cfg.n_qblocks(q.dim(0))
+                );
+                assert!(
+                    mask.cols >= cfg.n_kblocks(self.rows),
+                    "external mask has {} block cols; cache needs {}",
+                    mask.cols,
+                    cfg.n_kblocks(self.rows)
+                );
+                let filter = OffsetMaskFilter { mask, row0: row0_blocks, lambda: *lambda };
+                let st = self.run_paged(alloc, q, &cfg, &filter, exec, &mut plan, &mut ws, out.data_mut());
+                (st, None)
+            }
+        };
+        self.ws = ws;
+        self.plan = plan;
+        Some(AttnOutput { out, stats, mask })
+    }
+
+    /// Prefill through the shared-prefix registry: on a hash hit the
+    /// session maps the lender's frames (refcounted, zero new frames for
+    /// the prefix), adopts the cached prefill rows bitwise, and skips
+    /// the compute; on a miss it prefills normally and registers the
+    /// result. `None` on frame exhaustion (miss path only), session
+    /// untouched.
+    pub fn prefill_shared(
+        &mut self,
+        alloc: &mut PageAllocator,
+        registry: &mut PrefixRegistry,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+    ) -> Option<AttnOutput> {
+        assert_eq!(self.rows, 0, "prefill_shared opens a session");
+        let h = prefix_hash(k, v);
+        if let Some(i) = registry.find(h, k.dim(0)) {
+            let entry = &mut registry.entries[i];
+            entry.hits += 1;
+            alloc.prefix_hits += 1;
+            for &f in &entry.frames {
+                alloc.retain(f);
+            }
+            self.init_dims(alloc, k, v);
+            self.rows = entry.rows;
+            self.frames.extend_from_slice(&entry.frames);
+            self.kmean = entry.kmean.clone();
+            return Some(AttnOutput {
+                out: entry.out.clone(),
+                stats: entry.stats,
+                mask: entry.mask.clone(),
+            });
+        }
+        let r = self.prefill_chunk(alloc, q, k, v)?;
+        for &f in &self.frames {
+            alloc.retain(f);
+        }
+        registry.entries.push(PrefixEntry {
+            hash: h,
+            rows: self.rows,
+            frames: self.frames.clone(),
+            kmean: self.kmean.clone(),
+            out: r.out.clone(),
+            stats: r.stats,
+            mask: r.mask.clone(),
+            hits: 0,
+        });
+        Some(r)
+    }
+
+    /// The append half of a decode step: claim/CoW the tail frame, write
+    /// the K/V row, maintain pooled state, requantize the tail payload
+    /// (INT8). Returns `false` — session untouched — when the free list
+    /// cannot cover the claim; the serving tick skips the session and
+    /// retries next tick. Allocation-free once warm.
+    pub fn append_token(&mut self, alloc: &mut PageAllocator, q: &Tensor, k: &Tensor, v: &Tensor) -> bool {
+        assert_eq!(q.dim(0), 1, "decode takes a single query row");
+        assert_eq!(k.dim(0), 1, "decode takes a single key row");
+        assert_eq!(v.dim(0), 1, "decode takes a single value row");
+        debug_assert!(!self.evicted, "ensure_resident before appending");
+        if self.rows == 0 {
+            self.init_dims(alloc, k, v);
+            if self.engine.precision() == Precision::Int8 {
+                // Init-on-empty: runs once on the first appended token,
+                // before the session is warm. sparge-lint: allow(hot-path-no-alloc)
+                self.kmean = Some(vec![0.0; self.d]);
+            }
+        }
+        assert_eq!(q.dim(1), self.d, "q head dim");
+        assert_eq!(k.dim(1), self.d, "k head dim");
+        assert_eq!(v.dim(1), self.dv, "v dim");
+        if alloc.free_frames() < self.frames_needed(alloc, 1) {
+            return false;
+        }
+        let bk = alloc.bk;
+        let mk = self.engine.microkernel();
+        let f = if self.rows % bk == 0 {
+            let g = alloc.claim().expect("free-frame check covers the claim");
+            self.frames.push(g);
+            g
+        } else {
+            let tail = self.frames[self.frames.len() - 1];
+            let g = alloc.cow(tail).expect("free-frame check covers the CoW claim");
+            let last = self.frames.len() - 1;
+            self.frames[last] = g;
+            g
+        };
+        alloc.push_rows(f, k.row(0), v.row(0), 1, mk);
+        if self.pooled() {
+            alloc.refresh_sim(f, mk, &mut self.pool_scratch);
+        }
+        self.rows += 1;
+        if self.engine.precision() == Precision::Int8 {
+            let mean = self.kmean.as_deref().expect("kmean frozen at first append");
+            alloc.requantize_frame(f, mean, &mut self.ws.quant_f32);
+            quant::quantize_blocks_into(q, self.engine.config().bq, &mut self.qstage);
+        }
+        true
+    }
+
+    /// The compute half of a decode step: run the 1-row call over the
+    /// paged cache under `exec`, writing the output row into `out`.
+    /// Takes the allocator by shared reference so a serving tick can fan
+    /// many sessions' steps over one `&alloc`. The bool is true when the
+    /// step refreshed [`PagedAttnSession::pred_mask`] (`Predicted`
+    /// policy).
+    pub fn decode_step(
+        &mut self,
+        alloc: &PageAllocator,
+        q: &Tensor,
+        exec: Exec<'_>,
+        out: &mut [f32],
+    ) -> (SkipStats, bool) {
+        debug_assert!(!self.evicted, "ensure_resident before computing");
+        let step_cfg = AttnConfig { causal: false, ..*self.engine.config() };
+        let scale = step_cfg.scale_for(self.d);
+        let mut ws = std::mem::take(&mut self.ws);
+        let mut plan = std::mem::take(&mut self.plan);
+        let res = match self.engine.policy() {
+            SparsityPolicy::Dense => {
+                let st = self.run_paged(alloc, q, &step_cfg, &DenseFilter, exec, &mut plan, &mut ws, out);
+                (st, false)
+            }
+            SparsityPolicy::Predicted { params, lambda } => {
+                self.stage_means(alloc, &mut ws.pred_means);
+                self.stage_sims(alloc);
+                predict_decode_row_into(
+                    q.row(0),
+                    &ws.pred_means,
+                    &self.pred_sims,
+                    scale,
+                    params,
+                    &mut self.pred_mask,
+                    &mut ws.pred_scores,
+                    &mut ws.pred_probs,
+                    &mut ws.pred_idx,
+                );
+                let st = {
+                    let filter = MaskFilter::new(&self.pred_mask, *lambda);
+                    self.run_paged(alloc, q, &step_cfg, &filter, exec, &mut plan, &mut ws, out)
+                };
+                (st, true)
+            }
+            SparsityPolicy::External { mask, lambda } => {
+                let bi = (self.rows - 1) / step_cfg.bq;
+                assert!(bi < mask.rows, "external mask has {} block rows; decode is at row {bi}", mask.rows);
+                assert!(
+                    step_cfg.n_kblocks(self.rows) <= mask.cols,
+                    "external mask has {} block cols; cache needs {}",
+                    mask.cols,
+                    step_cfg.n_kblocks(self.rows)
+                );
+                let filter = RowMaskFilter { mask, row: bi, lambda: *lambda };
+                let st = self.run_paged(alloc, q, &step_cfg, &filter, exec, &mut plan, &mut ws, out);
+                (st, false)
+            }
+        };
+        self.ws = ws;
+        self.plan = plan;
+        self.steps += 1;
+        res
+    }
+
+    /// Decode one token into `out` (length dv): transparent re-page-in
+    /// if evicted, then append + compute under the engine's executor.
+    /// `None` — session untouched — when frames cannot cover the
+    /// re-page-in or the append. Bitwise-identical to the monolithic
+    /// `decode_into` for f32/λ-off engines.
+    pub fn decode_into(
+        &mut self,
+        alloc: &mut PageAllocator,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        out: &mut [f32],
+    ) -> Option<(SkipStats, Option<&BlockMask>)> {
+        assert_eq!(out.len(), v.dim(1), "decode_into output buffer must hold one dv row");
+        if !self.ensure_resident(alloc) {
+            return None;
+        }
+        if !self.append_token(alloc, q, k, v) {
+            return None;
+        }
+        let (stats, predicted) = self.decode_step(alloc, q, self.engine.exec(), out);
+        Some((stats, predicted.then_some(&self.pred_mask)))
+    }
+
+    /// [`PagedAttnSession::decode_into`] allocating its output row.
+    pub fn decode(
+        &mut self,
+        alloc: &mut PageAllocator,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+    ) -> Option<AttnOutput> {
+        if !self.ensure_resident(alloc) || !self.append_token(alloc, q, k, v) {
+            return None;
+        }
+        let mut out = Tensor::zeros(&[1, self.dv]);
+        let (stats, predicted) = self.decode_step(alloc, q, self.engine.exec(), out.data_mut());
+        let mask = predicted.then(|| self.pred_mask.clone());
+        Some(AttnOutput { out, stats, mask })
+    }
+
+    /// Spill this session's frame contents verbatim into its own buffer
+    /// and release every frame reference — idle sessions hand their
+    /// memory back without losing any state. No-op if already evicted.
+    pub fn evict(&mut self, alloc: &mut PageAllocator) {
+        if self.evicted || self.frames.is_empty() {
+            return;
+        }
+        let (bk, d, dv) = (alloc.bk, alloc.d, alloc.dv);
+        self.spill.k.clear();
+        self.spill.v.clear();
+        self.spill.psum.clear();
+        self.spill.prow.clear();
+        self.spill.sim.clear();
+        for &f in &self.frames {
+            let rows = alloc.prow[f];
+            self.spill.k.extend_from_slice(&alloc.k[f * bk * d..f * bk * d + rows * d]);
+            self.spill.v.extend_from_slice(&alloc.v[f * bk * dv..f * bk * dv + rows * dv]);
+            self.spill.psum.extend_from_slice(&alloc.psum[f * d..(f + 1) * d]);
+            self.spill.prow.push(rows);
+            self.spill.sim.push(alloc.sim[f]);
+        }
+        for &f in &self.frames {
+            alloc.release(f);
+        }
+        self.frames.clear();
+        self.evicted = true;
+        alloc.evictions += 1;
+    }
+
+    /// Re-page-in after an eviction: claim fresh frames and restore the
+    /// spilled contents bit-for-bit (INT8 payloads requantize from the
+    /// restored rows — byte-identical, quantization is deterministic).
+    /// `false` — nothing claimed — when the free list cannot cover it.
+    /// Resident sessions return `true` immediately.
+    pub fn ensure_resident(&mut self, alloc: &mut PageAllocator) -> bool {
+        if !self.evicted {
+            return true;
+        }
+        let nframes = self.spill.prow.len();
+        if alloc.free_frames() < nframes {
+            return false;
+        }
+        let (bk, d, dv) = (alloc.bk, alloc.d, alloc.dv);
+        let (mut ok, mut ov) = (0, 0);
+        for b in 0..nframes {
+            let f = alloc.claim().expect("free-frame check covers re-page-in claims");
+            let rows = self.spill.prow[b];
+            alloc.k[f * bk * d..f * bk * d + rows * d].copy_from_slice(&self.spill.k[ok..ok + rows * d]);
+            alloc.v[f * bk * dv..f * bk * dv + rows * dv].copy_from_slice(&self.spill.v[ov..ov + rows * dv]);
+            alloc.psum[f * d..(f + 1) * d].copy_from_slice(&self.spill.psum[b * d..(b + 1) * d]);
+            alloc.prow[f] = rows;
+            alloc.sim[f] = self.spill.sim[b];
+            if alloc.quant {
+                let mean = self.kmean.as_deref().expect("kmean frozen at first append");
+                alloc.requantize_frame(f, mean, &mut self.ws.quant_f32);
+            }
+            self.frames.push(f);
+            ok += rows * d;
+            ov += rows * dv;
+        }
+        self.evicted = false;
+        true
+    }
+
+    /// Release every frame reference (session retirement). The spill
+    /// buffer is dropped with the session.
+    pub fn release(&mut self, alloc: &mut PageAllocator) {
+        for &f in &self.frames {
+            alloc.release(f);
+        }
+        self.frames.clear();
+        self.evicted = false;
+    }
+
+    /// Append a multi-row chunk frame by frame: top up the partial tail
+    /// (CoW-splitting it first if shared), then claim fresh frames —
+    /// pooled sums/sims maintained per touched frame with the exact
+    /// `KPool::extend` chains. Caller has already verified the free-list
+    /// budget.
+    fn append_rows(&mut self, alloc: &mut PageAllocator, k: &Tensor, v: &Tensor, row0: usize) {
+        let bk = alloc.bk;
+        let (d, dv) = (self.d, self.dv);
+        let mk = self.engine.microkernel();
+        if row0 % bk != 0 {
+            let last = self.frames.len() - 1;
+            let g = alloc.cow(self.frames[last]).expect("free-frame check covers the CoW claim");
+            self.frames[last] = g;
+        }
+        let new = k.dim(0);
+        let mut r = 0;
+        while r < new {
+            let abs = row0 + r;
+            let f = if abs % bk == 0 {
+                let g = alloc.claim().expect("free-frame check covers fresh-frame claims");
+                self.frames.push(g);
+                g
+            } else {
+                self.frames[self.frames.len() - 1]
+            };
+            let take = (bk - abs % bk).min(new - r);
+            alloc.push_rows(f, &k.data()[r * d..(r + take) * d], &v.data()[r * dv..(r + take) * dv], take, mk);
+            if self.pooled() {
+                alloc.refresh_sim(f, mk, &mut self.pool_scratch);
+            }
+            r += take;
+        }
+        self.rows += new;
+    }
+
+    /// Requantize every frame from the block containing `rows_before`
+    /// through the tail (the monolithic `requantize_from`, per frame).
+    fn requantize_from(&mut self, alloc: &mut PageAllocator, rows_before: usize) {
+        let mean = self.kmean.as_deref().expect("kmean frozen at first append");
+        let first = rows_before / alloc.bk;
+        for b in first..self.frames.len() {
+            alloc.requantize_frame(self.frames[b], mean, &mut self.ws.quant_f32);
+        }
+    }
+
+    /// Per-frame pooled means as an (n_blocks × d) tensor (prefill-shape
+    /// prediction; allocates — the decode path uses
+    /// [`PagedAttnSession::stage_means`]).
+    fn frame_means(&self, alloc: &PageAllocator) -> Tensor {
+        let mut flat = Vec::new();
+        self.stage_means(alloc, &mut flat);
+        Tensor::from_vec(&[self.frames.len(), self.d], flat)
+    }
+
+    /// Stage per-frame pooled means into `out` — same `sum × (1/rows)`
+    /// bits as `KPool::means_into`.
+    fn stage_means(&self, alloc: &PageAllocator, out: &mut Vec<f32>) {
+        let d = self.d;
+        out.clear();
+        out.resize(self.frames.len() * d, 0.0);
+        for (b, &f) in self.frames.iter().enumerate() {
+            let inv = 1.0 / alloc.prow[f] as f32;
+            for (o, &s) in out[b * d..(b + 1) * d].iter_mut().zip(&alloc.psum[f * d..(f + 1) * d]) {
+                *o = s * inv;
+            }
+        }
+    }
+
+    /// Stage per-frame sims into the session buffer (contiguous slice
+    /// for the predictor), within capacity once warm.
+    fn stage_sims(&mut self, alloc: &PageAllocator) {
+        self.pred_sims.clear();
+        self.pred_sims.extend(self.frames.iter().map(|&f| alloc.sim[f]));
+    }
+
+    /// Run one call through the driver the engine's `kv_split` policy
+    /// selects — the same shape-pure routing as the monolithic
+    /// `dispatch_into`, over the paged [`KvSource`].
+    #[allow(clippy::too_many_arguments)]
+    fn run_paged(
+        &self,
+        alloc: &PageAllocator,
+        q: &Tensor,
+        cfg: &AttnConfig,
+        filter: &impl BlockFilter,
+        exec: Exec<'_>,
+        plan: &mut SpanPlan,
+        ws: &mut Workspace,
+        out: &mut [f32],
+    ) -> SkipStats {
+        let kv = PagedKv { alloc, frames: &self.frames, rows: self.rows };
+        let span = self.engine.kv_span(cfg.n_qblocks(q.dim(0)), cfg.n_kblocks(self.rows));
+        match self.engine.precision() {
+            Precision::F32 => {
+                let kernel = PagedF32Kernel {
+                    q,
+                    alloc,
+                    frames: &self.frames,
+                    scale: cfg.scale_for(self.d),
+                    causal: cfg.causal,
+                    row_offset: cfg.row_offset,
+                    mk: self.engine.microkernel(),
+                };
+                match span {
+                    Some(s) => {
+                        run_tiled_splitkv_into_kv(q, &kv, cfg, &kernel, filter, exec, s, plan, ws, out)
+                    }
+                    None => run_tiled_into_kv(q, &kv, cfg, &kernel, filter, exec, ws, out),
+                }
+            }
+            Precision::Int8 => {
+                let kernel = PagedQuantKernel {
+                    qb: &self.qstage,
+                    alloc,
+                    frames: &self.frames,
+                    scale: cfg.scale_for(self.d),
+                    causal: cfg.causal,
+                    row_offset: cfg.row_offset,
+                    bq: cfg.bq,
+                    mk: self.engine.microkernel(),
+                };
+                match span {
+                    Some(s) => {
+                        run_tiled_splitkv_into_kv(q, &kv, cfg, &kernel, filter, exec, s, plan, ws, out)
+                    }
+                    None => run_tiled_into_kv(q, &kv, cfg, &kernel, filter, exec, ws, out),
+                }
+            }
+        }
+    }
+}

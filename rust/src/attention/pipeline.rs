@@ -13,6 +13,13 @@
 //!   `M_g` lookup (§3.2–3.3), the stage-2 online-softmax λ threshold
 //!   (§3.4), and the causal-domain bound that keeps upper-triangle blocks
 //!   out of both the loop and the [`SkipStats`] totals.
+//! - [`KvSource`]: where the drivers read V blocks (and how long the KV
+//!   domain is) — a contiguous tensor pair ([`TensorKv`], the monolithic
+//!   session cache) or a paged frame table (`attention::paged`, frames
+//!   of exactly `b_k` rows recycled through a free list). The drivers
+//!   only ever ask for one `b_k`-aligned block at a time, which is
+//!   exactly one frame in the paged layout, so both sources hand back
+//!   one contiguous slice and the float path is identical either way.
 //!
 //! ## The two drivers
 //!
@@ -462,28 +469,104 @@ pub fn score_block_with(
     out: &mut [f32],
 ) {
     let d = q.dim(1);
-    let (bq, bk) = (q1 - q0, k1 - k0);
-    debug_assert!(out.len() >= bq * bk);
-    mk.matmul_nt_into(
+    score_block_slices(
+        mk,
         &q.data()[q0 * d..q1 * d],
         &k.data()[k0 * d..k1 * d],
-        &mut out[..bq * bk],
-        bq,
-        bk,
+        q1 - q0,
+        k1 - k0,
         d,
+        row_offset + q0,
+        k0,
+        scale,
+        causal,
+        out,
     );
+}
+
+/// The slice-level core of [`score_block_with`]: score `bq` query rows
+/// (`qs`, row-major, head dim `d`) against `bk` key rows (`ks`), masking
+/// entry `(i, j)` when key position `k_abs0 + j` exceeds query position
+/// `q_abs0 + i`. The contiguous path passes tensor sub-slices with
+/// `q_abs0 = row_offset + q0, k_abs0 = k0`; paged kernels pass one
+/// frame's K rows with the frame's absolute first row — the float ops
+/// and their order are byte-for-byte the same, so paged scoring is
+/// bitwise-identical to monolithic scoring by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn score_block_slices(
+    mk: Backend,
+    qs: &[f32],
+    ks: &[f32],
+    bq: usize,
+    bk: usize,
+    d: usize,
+    q_abs0: usize,
+    k_abs0: usize,
+    scale: f32,
+    causal: bool,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(qs.len(), bq * d);
+    debug_assert_eq!(ks.len(), bk * d);
+    debug_assert!(out.len() >= bq * bk);
+    mk.matmul_nt_into(qs, ks, &mut out[..bq * bk], bq, bk, d);
     for s in &mut out[..bq * bk] {
         *s *= scale;
     }
     if causal {
         for i in 0..bq {
-            let gi = row_offset + q0 + i;
+            let gi = q_abs0 + i;
             for j in 0..bk {
-                if k0 + j > gi {
+                if k_abs0 + j > gi {
                     out[i * bk + j] = f32::NEG_INFINITY;
                 }
             }
         }
+    }
+}
+
+/// Where the drivers read V blocks from, and how long the KV domain is.
+///
+/// The drivers never touch K directly (the [`ScoreKernel`] owns its K
+/// state) and only ever request V one `b_k`-aligned block at a time, so
+/// a source needs to hand back exactly one contiguous `(k1-k0) × dv`
+/// slice per visited block. The monolithic session cache implements this
+/// over a contiguous tensor pair ([`TensorKv`]); the paged cache
+/// (`attention::paged`) resolves the block through a page table to one
+/// frame of exactly `b_k` rows. Both return the same bytes for the same
+/// rows, so the reduction's float path — and therefore its bits — is
+/// independent of the storage layout.
+pub trait KvSource: Sync {
+    /// Number of cached K/V rows.
+    fn rows(&self) -> usize;
+
+    /// Value head dim (the output width).
+    fn dv(&self) -> usize;
+
+    /// The V rows `[k0, k1)` as one contiguous slice of `(k1-k0) * dv`
+    /// f32s. Callers only request ranges that lie inside a single
+    /// `b_k`-aligned block (the tiled loop's visiting pattern).
+    fn v_block(&self, k0: usize, k1: usize) -> &[f32];
+}
+
+/// The monolithic [`KvSource`]: a borrowed contiguous K/V tensor pair
+/// (the grown-in-place session cache, or caller-provided tensors).
+pub struct TensorKv<'a> {
+    pub k: &'a Tensor,
+    pub v: &'a Tensor,
+}
+
+impl KvSource for TensorKv<'_> {
+    fn rows(&self) -> usize {
+        self.k.dim(0)
+    }
+
+    fn dv(&self) -> usize {
+        self.v.dim(1)
+    }
+
+    fn v_block(&self, k0: usize, k1: usize) -> &[f32] {
+        &self.v.data()[k0 * self.v.dim(1)..k1 * self.v.dim(1)]
     }
 }
 
@@ -686,9 +769,26 @@ pub fn run_tiled_into(
 ) -> SkipStats {
     assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
     assert_eq!(k.dim(0), v.dim(0), "k/v rows");
+    run_tiled_into_kv(q, &TensorKv { k, v }, cfg, kernel, filter, exec, ws, out)
+}
+
+/// [`run_tiled_into`] over an abstract [`KvSource`] — the layer the
+/// paged cache plugs into. The tensor-pair entry point above is a thin
+/// wrapper, so both storage layouts run the identical reduction.
+#[allow(clippy::too_many_arguments)]
+pub fn run_tiled_into_kv(
+    q: &Tensor,
+    kv: &impl KvSource,
+    cfg: &AttnConfig,
+    kernel: &impl ScoreKernel,
+    filter: &impl BlockFilter,
+    exec: Exec<'_>,
+    ws: &mut Workspace,
+    out: &mut [f32],
+) -> SkipStats {
     let n = q.dim(0);
-    let nk = k.dim(0);
-    let dv = v.dim(1);
+    let nk = kv.rows();
+    let dv = kv.dv();
     let tm = cfg.n_qblocks(n);
     let tn = cfg.n_kblocks(nk);
     debug_assert_eq!(out.len(), n * dv);
@@ -699,7 +799,7 @@ pub fn run_tiled_into(
         // mode anyway (a 1-item map never crosses a thread); skipping the
         // fan-out bookkeeping makes the step allocation-free.
         let kend = filter.kblock_end(n, cfg, tn);
-        let (tile, st) = reduce_span(q, k, v, cfg, kernel, filter, 0, 0, kend, ws);
+        let (tile, st) = reduce_span(q, kv, cfg, kernel, filter, 0, 0, kend, ws);
         tile.finalize_into(out);
         tile.recycle(ws);
         stats.merge(&st);
@@ -715,7 +815,7 @@ pub fn run_tiled_into(
         exec.map_ws(tm, ws, |bi, wws| {
             let q1 = (bi * cfg.bq + cfg.bq).min(n);
             let kend = filter.kblock_end(q1, cfg, tn);
-            let (tile, st) = reduce_span(q, k, v, cfg, kernel, filter, bi, 0, kend, wws);
+            let (tile, st) = reduce_span(q, kv, cfg, kernel, filter, bi, 0, kend, wws);
             tile.finalize_into(&mut row_out[bi].lock().unwrap());
             tile.recycle(wws);
             st
@@ -735,8 +835,7 @@ pub fn run_tiled_into(
 #[allow(clippy::too_many_arguments)]
 fn reduce_span(
     q: &Tensor,
-    k: &Tensor,
-    v: &Tensor,
+    kv: &impl KvSource,
     cfg: &AttnConfig,
     kernel: &impl ScoreKernel,
     filter: &impl BlockFilter,
@@ -746,8 +845,8 @@ fn reduce_span(
     ws: &mut Workspace,
 ) -> (FlashTile, SkipStats) {
     let n = q.dim(0);
-    let nk = k.dim(0);
-    let dv = v.dim(1);
+    let nk = kv.rows();
+    let dv = kv.dv();
     let q0 = bi * cfg.bq;
     let q1 = (q0 + cfg.bq).min(n);
     let mut stats = SkipStats { cw: cfg.cw, ..Default::default() };
@@ -773,7 +872,7 @@ fn reduce_span(
             // block's last key position exceeds the first row's absolute
             // position); everywhere else the P̃V matmul runs branch-free.
             let sparse_p = cfg.causal && k1 > cfg.row_offset + q0 + 1;
-            let vb = &v.data()[k0 * dv..k1 * dv];
+            let vb = kv.v_block(k0, k1);
             tile.ingest(sb, k1 - k0, vb, filter.lambda(), cfg.cw, &mut stats, sparse_p, mk);
         }
     }
@@ -954,10 +1053,40 @@ pub fn run_tiled_splitkv_into(
 ) -> SkipStats {
     assert_eq!(q.dim(1), k.dim(1), "q/k head dim");
     assert_eq!(k.dim(0), v.dim(0), "k/v rows");
+    run_tiled_splitkv_into_kv(
+        q,
+        &TensorKv { k, v },
+        cfg,
+        kernel,
+        filter,
+        exec,
+        span_blocks,
+        plan,
+        ws,
+        out,
+    )
+}
+
+/// [`run_tiled_splitkv_into`] over an abstract [`KvSource`] — the layer
+/// the paged cache plugs into. Same span geometry, same fan-out, same
+/// left-to-right merge; only where a V block's bytes come from differs.
+#[allow(clippy::too_many_arguments)]
+pub fn run_tiled_splitkv_into_kv(
+    q: &Tensor,
+    kv: &impl KvSource,
+    cfg: &AttnConfig,
+    kernel: &impl ScoreKernel,
+    filter: &impl BlockFilter,
+    exec: Exec<'_>,
+    span_blocks: usize,
+    plan: &mut SpanPlan,
+    ws: &mut Workspace,
+    out: &mut [f32],
+) -> SkipStats {
     assert!(span_blocks > 0, "span_blocks must be positive");
     let n = q.dim(0);
-    let nk = k.dim(0);
-    let dv = v.dim(1);
+    let nk = kv.rows();
+    let dv = kv.dv();
     let tm = cfg.n_qblocks(n);
     let tn = cfg.n_kblocks(nk);
     debug_assert_eq!(out.len(), n * dv);
@@ -988,7 +1117,7 @@ pub fn run_tiled_splitkv_into(
         let sptr = SendPtr(plan.stats.as_mut_ptr());
         exec.for_each_ws(nitems, ws, |w, wws| {
             let (bi, kb0, kb1) = items[w];
-            let (tile, st) = reduce_span(q, k, v, cfg, kernel, filter, bi, kb0, kb1, wws);
+            let (tile, st) = reduce_span(q, kv, cfg, kernel, filter, bi, kb0, kb1, wws);
             let rows = tile.rows;
             // SAFETY: item `w` owns slot `w` exclusively (disjoint ranges
             // of the arena), and `for_each_ws` does not return until

@@ -40,6 +40,21 @@
 //! - finished sessions retire with a [`SeqResult`]: output rows, merged
 //!   [`SkipStats`], TTFT, per-output-token latencies, compute seconds.
 //!
+//! A manager built with [`SessionManager::new_paged`] runs the same tick
+//! structure over **paged** sessions: every KV cache lives in a shared
+//! [`crate::attention::paged::PageAllocator`] frame pool. Admission
+//! reserves each active session's worst-case remaining frame need, so a
+//! stream is admitted only when the pool can cover its whole lifetime —
+//! otherwise unreferenced shared-prefix frames are reclaimed and, when
+//! even that is not enough, the stream defers with a load-shed counter.
+//! Identical whole-prompt prefills share their prefix frames
+//! copy-on-write, each decode step splits into a serial frame-claim
+//! half and a batched compute half over the read-only allocator, and a
+//! decode claim that outruns the free list (a CoW split or re-page-in)
+//! spills the least-recently-advanced resident session to make room. For
+//! f32/λ-off engines the paged manager's outputs and stats are
+//! bitwise-identical to the monolithic one's (`tests/paged_kv.rs`).
+//!
 //! [`run_sequential`] is the request-level baseline (one-shot prefill,
 //! then all decode steps, one request at a time): with `max_batch = 1`
 //! the continuous loop reproduces its per-request outputs exactly under
@@ -49,8 +64,10 @@
 //! `benches/table8_serving.rs` measures what interleaving buys over it
 //! (including decode tokens/s vs pool size, split-KV on and off).
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
+use crate::attention::paged::{PageAllocator, PageStats, PagedAttnSession, PrefixRegistry};
 use crate::attention::pipeline::{debug_assert_disjoint_slots, SendPtr};
 use crate::attention::{AttnEngine, AttnSession, Exec, SkipStats, Workspace};
 use crate::tensor::Tensor;
@@ -126,10 +143,19 @@ impl SeqResult {
     }
 }
 
+/// The two KV-ownership models a managed sequence can run under: a
+/// monolithic session (private cache tensors) or a paged session over
+/// the manager's shared frame pool. A manager is homogeneous — every
+/// admitted sequence uses the model the constructor picked.
+enum SeqSession<'e> {
+    Mono(AttnSession<'e>),
+    Paged(PagedAttnSession<'e>),
+}
+
 struct ActiveSeq<'e> {
     id: u64,
     stream: SeqStream,
-    session: AttnSession<'e>,
+    session: SeqSession<'e>,
     prefilled: usize,
     decoded: usize,
     /// All output rows, preallocated at admission for the stream's full
@@ -145,6 +171,13 @@ struct ActiveSeq<'e> {
     compute: f64,
     ttft: Option<f64>,
     tpot: Vec<f64>,
+    /// Tick stamp of the last unit of work (the paged manager's LRU
+    /// eviction key — least-recently-advanced spills first).
+    last_advanced: u64,
+    /// Seconds spent in this tick's serial append half of a paged decode
+    /// step, folded into the step's latency sample when the parallel
+    /// compute half lands.
+    pending_dt: f64,
 }
 
 impl ActiveSeq<'_> {
@@ -157,7 +190,10 @@ impl ActiveSeq<'_> {
     fn advance_prefill(&mut self, chunk: usize) {
         let t0 = Instant::now();
         let end = (self.prefilled + chunk).min(self.stream.prefill);
-        let r = self.session.prefill_chunk(
+        let SeqSession::Mono(session) = &mut self.session else {
+            return; // paged sessions advance via advance_prefill_paged
+        };
+        let r = session.prefill_chunk(
             &self.stream.q.rows(self.prefilled, end),
             &self.stream.k.rows(self.prefilled, end),
             &self.stream.v.rows(self.prefilled, end),
@@ -169,6 +205,44 @@ impl ActiveSeq<'_> {
         if self.finished() {
             // decode-less stream: the prompt's last row is its first (and
             // only) "token"
+            self.ttft = Some(self.arrived.elapsed().as_secs_f64());
+        }
+    }
+
+    /// Paged twin of [`ActiveSeq::advance_prefill`]: a whole-prompt first
+    /// chunk routes through the shared-prefix registry (identical prompts
+    /// map the same frames and skip the compute); later chunks prefill
+    /// normally. When the free list cannot cover the chunk the session is
+    /// left untouched and simply retries next tick — deferral, not
+    /// failure.
+    fn advance_prefill_paged(
+        &mut self,
+        chunk: usize,
+        alloc: &mut PageAllocator,
+        registry: &mut PrefixRegistry,
+        tick: u64,
+    ) {
+        let t0 = Instant::now();
+        let end = (self.prefilled + chunk).min(self.stream.prefill);
+        let q = self.stream.q.rows(self.prefilled, end);
+        let k = self.stream.k.rows(self.prefilled, end);
+        let v = self.stream.v.rows(self.prefilled, end);
+        let SeqSession::Paged(session) = &mut self.session else {
+            return; // mono sessions advance via advance_prefill
+        };
+        let whole_prompt = self.prefilled == 0 && end == self.stream.prefill;
+        let r = if whole_prompt {
+            session.prefill_shared(alloc, registry, &q, &k, &v)
+        } else {
+            session.prefill_chunk(alloc, &q, &k, &v)
+        };
+        let Some(r) = r else { return };
+        self.out.extend_from_slice(r.out.data());
+        self.stats.merge(&r.stats);
+        self.prefilled = end;
+        self.last_advanced = tick;
+        self.compute += t0.elapsed().as_secs_f64();
+        if self.finished() {
             self.ttft = Some(self.arrived.elapsed().as_secs_f64());
         }
     }
@@ -189,7 +263,10 @@ impl ActiveSeq<'_> {
         let dv = self.stream.v.dim(1);
         let base = self.out.len();
         self.out.resize(base + dv, 0.0);
-        let (stats, _mask) = self.session.decode_into_with_exec(
+        let SeqSession::Mono(session) = &mut self.session else {
+            return; // paged sessions advance via begin/finish_decode_paged
+        };
+        let (stats, _mask) = session.decode_into_with_exec(
             &self.qrow,
             &self.krow,
             &self.vrow,
@@ -199,6 +276,56 @@ impl ActiveSeq<'_> {
         self.stats.merge(&stats);
         self.decoded += 1;
         let dt = t0.elapsed().as_secs_f64();
+        self.compute += dt;
+        if self.ttft.is_none() {
+            self.ttft = Some(self.arrived.elapsed().as_secs_f64());
+        } else {
+            self.tpot.push(dt);
+        }
+    }
+
+    /// Serial half of a paged decode step: stage the token's rows,
+    /// re-page-in if the session was evicted, and claim/CoW the tail
+    /// frame (all the `&mut PageAllocator` work). `false` — session
+    /// untouched — when frames are short; the session skips this tick and
+    /// retries. Allocation-free once warm.
+    fn begin_decode_paged(&mut self, alloc: &mut PageAllocator, tick: u64) -> bool {
+        let t0 = Instant::now();
+        let t = self.stream.prefill + self.decoded;
+        self.qrow.data_mut().copy_from_slice(self.stream.q.row(t));
+        self.krow.data_mut().copy_from_slice(self.stream.k.row(t));
+        self.vrow.data_mut().copy_from_slice(self.stream.v.row(t));
+        let SeqSession::Paged(session) = &mut self.session else {
+            return false;
+        };
+        if !session.ensure_resident(alloc) {
+            return false;
+        }
+        if !session.append_token(alloc, &self.qrow, &self.krow, &self.vrow) {
+            return false;
+        }
+        self.last_advanced = tick;
+        self.pending_dt = t0.elapsed().as_secs_f64();
+        true
+    }
+
+    /// Parallel half of a paged decode step: run the compute over the
+    /// shared `&PageAllocator` (read-only during compute, so the batched
+    /// tick fans many sessions over one borrow) and fold this tick's
+    /// append seconds into the step's latency sample.
+    fn finish_decode_paged(&mut self, alloc: &PageAllocator, exec: Exec<'_>) {
+        let t0 = Instant::now();
+        let dv = self.stream.v.dim(1);
+        let base = self.out.len();
+        self.out.resize(base + dv, 0.0);
+        let SeqSession::Paged(session) = &mut self.session else {
+            return;
+        };
+        let (stats, _predicted) = session.decode_step(alloc, &self.qrow, exec, &mut self.out[base..]);
+        self.stats.merge(&stats);
+        self.decoded += 1;
+        let dt = self.pending_dt + t0.elapsed().as_secs_f64();
+        self.pending_dt = 0.0;
         self.compute += dt;
         if self.ttft.is_none() {
             self.ttft = Some(self.arrived.elapsed().as_secs_f64());
@@ -223,6 +350,20 @@ impl ActiveSeq<'_> {
     }
 }
 
+/// The paged manager's memory plane: the shared frame pool, the
+/// shared-prefix registry, and the frame-aware admission queue.
+struct PagedServing {
+    alloc: PageAllocator,
+    registry: PrefixRegistry,
+    /// Streams admitted by the caller but not yet holding frames —
+    /// admission into `active` happens inside `tick`, keyed on the free
+    /// list.
+    pending: VecDeque<(u64, SeqStream, Instant)>,
+    /// Ticks on which admission stalled with the queue non-empty even
+    /// after LRU eviction (the load-shed signal).
+    deferred: u64,
+}
+
 /// N live [`AttnSession`]s over one shared engine; see the module docs.
 pub struct SessionManager<'e> {
     engine: &'e AttnEngine,
@@ -239,6 +380,11 @@ pub struct SessionManager<'e> {
     /// batched decode fan-out (each session's step draws on the session's
     /// arena; this one just satisfies the seam).
     tick_ws: Workspace,
+    /// `Some` for paged managers (see [`SessionManager::new_paged`]);
+    /// `None` managers run monolithic sessions exactly as before.
+    paging: Option<PagedServing>,
+    /// Tick counter — the LRU stamp source for paged eviction.
+    ticks: u64,
 }
 
 impl<'e> SessionManager<'e> {
@@ -255,7 +401,31 @@ impl<'e> SessionManager<'e> {
             decode_phase: Vec::new(),
             ready_idx: Vec::new(),
             tick_ws: Workspace::default(),
+            paging: None,
+            ticks: 0,
         }
+    }
+
+    /// A manager whose sessions page their KV caches out of `alloc`
+    /// instead of owning private tensors. Admission becomes frame-aware:
+    /// [`SessionManager::admit`] only enqueues, and each tick admits
+    /// pending streams while the free list covers their worst-case frame
+    /// need plus every active session's outstanding reservation
+    /// (reclaiming unreferenced shared-prefix frames under pressure, and
+    /// counting a load-shed instead of failing when even that is not
+    /// enough). Whole-prompt prefills route through a shared-prefix
+    /// registry, so identical prompts map the same frames and skip their
+    /// prefill compute; decode claims that still outrun the pool evict
+    /// the least-recently-advanced resident session.
+    pub fn new_paged(engine: &'e AttnEngine, chunk: usize, alloc: PageAllocator) -> SessionManager<'e> {
+        let mut m = SessionManager::new(engine, chunk);
+        m.paging = Some(PagedServing {
+            alloc,
+            registry: PrefixRegistry::new(),
+            pending: VecDeque::new(),
+            deferred: 0,
+        });
+        m
     }
 
     /// Live session count.
@@ -280,15 +450,50 @@ impl<'e> SessionManager<'e> {
     }
 
     /// Open a session for a stream. The caller enforces its own admission
-    /// cap (the scheduler admits up to `BatchPolicy::max_batch`).
+    /// cap (the scheduler admits up to `BatchPolicy::max_batch`). Paged
+    /// managers only *enqueue* here — the frame-aware admission into the
+    /// active set happens inside [`SessionManager::tick`].
     pub fn admit(&mut self, id: u64, stream: SeqStream, arrived: Instant) {
         assert!(!stream.is_empty(), "empty attention stream");
+        if let Some(p) = self.paging.as_mut() {
+            p.pending.push_back((id, stream, arrived));
+            return;
+        }
+        let session = SeqSession::Mono(self.engine.session());
+        self.push_active(id, stream, arrived, session);
+    }
+
+    /// Streams enqueued on a paged manager but not yet holding frames.
+    pub fn pending(&self) -> usize {
+        self.paging.as_ref().map_or(0, |p| p.pending.len())
+    }
+
+    /// Memory-plane counter snapshot of a paged manager (`None` for
+    /// monolithic managers).
+    pub fn page_stats(&self) -> Option<PageStats> {
+        self.paging.as_ref().map(|p| p.alloc.stats())
+    }
+
+    /// Registered shared prompt prefixes (paged managers).
+    pub fn prefix_entries(&self) -> usize {
+        self.paging.as_ref().map_or(0, |p| p.registry.len())
+    }
+
+    /// Drop the shared-prefix registry's frame references (frames still
+    /// mapped by live sessions stay resident through those sessions).
+    pub fn release_prefixes(&mut self) {
+        if let Some(p) = self.paging.as_mut() {
+            p.registry.clear(&mut p.alloc);
+        }
+    }
+
+    fn push_active(&mut self, id: u64, stream: SeqStream, arrived: Instant, session: SeqSession<'e>) {
         let d = stream.q.dim(1);
         let dv = stream.v.dim(1);
         let total = stream.len() * dv;
         self.active.push(ActiveSeq {
             id,
-            session: self.engine.session(),
+            session,
             qrow: Tensor::zeros(&[1, d]),
             krow: Tensor::zeros(&[1, d]),
             vrow: Tensor::zeros(&[1, dv]),
@@ -303,7 +508,44 @@ impl<'e> SessionManager<'e> {
             compute: 0.0,
             ttft: None,
             tpot: Vec::new(),
+            last_advanced: self.ticks,
+            pending_dt: 0.0,
         });
+    }
+
+    /// Spill the least-recently-advanced resident decode-phase session
+    /// other than `exclude` (its frames recycle; it transparently
+    /// re-pages-in on its next decode). `false` when no session is
+    /// evictable.
+    fn evict_lru(
+        active: &mut [ActiveSeq<'_>],
+        alloc: &mut PageAllocator,
+        exclude: Option<usize>,
+    ) -> bool {
+        let mut best: Option<usize> = None;
+        for (i, s) in active.iter().enumerate() {
+            if Some(i) == exclude {
+                continue; // never spill the session we are advancing
+            }
+            if s.prefilled < s.stream.prefill {
+                continue; // mid-prompt sessions keep their frames
+            }
+            let resident = match &s.session {
+                SeqSession::Paged(p) => !p.is_evicted() && p.frames_held() > 0,
+                SeqSession::Mono(_) => false,
+            };
+            if !resident {
+                continue;
+            }
+            if best.map_or(true, |b| s.last_advanced < active[b].last_advanced) {
+                best = Some(i);
+            }
+        }
+        let Some(i) = best else { return false };
+        if let SeqSession::Paged(p) = &mut active[i].session {
+            p.evict(alloc);
+        }
+        true
     }
 
     /// One scheduling tick: every active session advances one unit —
@@ -315,6 +557,10 @@ impl<'e> SessionManager<'e> {
     /// its prompt this tick starts decoding next tick, exactly like the
     /// old serial loop.
     pub fn tick(&mut self) -> Vec<SeqResult> {
+        self.ticks += 1;
+        if self.paging.is_some() {
+            return self.tick_paged();
+        }
         let chunk = self.chunk_rows();
         // phase snapshot: one unit of work per session per tick (rebuilt
         // in the tick-persistent arenas — no per-tick slot vector)
@@ -367,6 +613,159 @@ impl<'e> SessionManager<'e> {
         while i < self.active.len() {
             if self.active[i].finished() {
                 done.push(self.active.remove(i).into_result());
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    /// The paged tick: reservation-based frame-aware admission (shedding
+    /// unreferenced prefix frames under pressure, load-shedding when even
+    /// that is not enough), then the same phase structure as the
+    /// monolithic tick with each decode step split into a serial append
+    /// half (`&mut` allocator, LRU-evicting another resident session if
+    /// a CoW split outruns the free list) and a batched compute half
+    /// fanned over the shared `&` allocator.
+    /// Sessions the free list cannot serve this tick are skipped, not
+    /// failed — they retry next tick. A steady-state decode tick stays
+    /// allocation-free (`tests/alloc_regression.rs`).
+    fn tick_paged(&mut self) -> Vec<SeqResult> {
+        let chunk = self.chunk_rows();
+        let bk = self.engine.config().bk;
+        let tick = self.ticks;
+        // 1) frame-aware admission, oldest first. Every active paged
+        // session carries a standing *reservation* for its worst-case
+        // remaining frame need (full stream length in frames, minus the
+        // frames it already maps — evicted sessions reserve their full
+        // re-page-in), so a newcomer is admitted only when the free list
+        // covers its whole stream ON TOP of every resident session
+        // finishing. Without the reservation, several same-tick
+        // admissions would each pass a naive free-list check before any
+        // of them claims a frame — and the pool could wedge with every
+        // session starved and nothing left to retire. Unreferenced
+        // shared-prefix frames are reclaimed (least-hit first) before
+        // shedding load.
+        loop {
+            let Some(p) = self.paging.as_mut() else { break };
+            let need = match p.pending.front() {
+                Some((_, stream, _)) => stream.len().div_ceil(bk),
+                None => break,
+            };
+            let outstanding: usize = self
+                .active
+                .iter()
+                .map(|s| match &s.session {
+                    SeqSession::Paged(ps) => {
+                        s.stream.len().div_ceil(bk).saturating_sub(ps.frames_held())
+                    }
+                    SeqSession::Mono(_) => 0,
+                })
+                .sum();
+            while p.alloc.free_frames() < need + outstanding {
+                if !p.registry.shed(&mut p.alloc) {
+                    break;
+                }
+            }
+            if p.alloc.free_frames() < need + outstanding {
+                p.alloc.note_load_shed();
+                p.deferred += 1;
+                break;
+            }
+            let Some((id, stream, arrived)) = p.pending.pop_front() else { break };
+            let session = SeqSession::Paged(self.engine.paged_session());
+            self.push_active(id, stream, arrived, session);
+        }
+        // 2) phase snapshot + serial prefill (same structure as the
+        // monolithic tick; a frame-starved chunk defers to next tick)
+        self.decode_phase.clear();
+        self.decode_phase.extend(self.active.iter().map(|s| s.prefilled == s.stream.prefill));
+        for i in 0..self.active.len() {
+            if !self.decode_phase[i] {
+                let Some(p) = self.paging.as_mut() else { break };
+                self.active[i].advance_prefill_paged(chunk, &mut p.alloc, &mut p.registry, tick);
+            }
+        }
+        // 3) decode — serial append halves first (frame claims need the
+        // allocator mutably); sessions whose claim cannot be covered drop
+        // out of this tick's batch untouched
+        self.ready_idx.clear();
+        for (i, (s, &d)) in self.active.iter().zip(&self.decode_phase).enumerate() {
+            if d && s.decoded < s.stream.decode_steps() {
+                self.ready_idx.push(i);
+            }
+        }
+        let mut kept = 0;
+        for r in 0..self.ready_idx.len() {
+            let i = self.ready_idx[r];
+            let Some(p) = self.paging.as_mut() else { break };
+            // A CoW split (and the +1 it claims beyond the session's
+            // admission reservation) or a re-page-in can outrun the free
+            // list: reclaim unreferenced prefix frames first, then spill
+            // the least-recently-advanced OTHER resident session, and
+            // only shed (skip this tick, retry next) when neither frees
+            // anything. Each retry either shrinks the registry or the
+            // resident set, so the loop terminates.
+            let mut ok = self.active[i].begin_decode_paged(&mut p.alloc, tick);
+            while !ok {
+                if !(p.registry.shed(&mut p.alloc)
+                    || Self::evict_lru(&mut self.active, &mut p.alloc, Some(i)))
+                {
+                    p.alloc.note_load_shed();
+                    break;
+                }
+                ok = self.active[i].begin_decode_paged(&mut p.alloc, tick);
+            }
+            if ok {
+                self.ready_idx[kept] = i;
+                kept += 1;
+            }
+        }
+        self.ready_idx.truncate(kept);
+        // ... then the compute halves over the shared read-only allocator:
+        // a lone decoder keeps the engine's executor (split-KV fans its
+        // spans), a batch fans sessions across the pool exactly like the
+        // monolithic tick
+        match self.ready_idx.len() {
+            0 => {}
+            1 => {
+                if let Some(p) = self.paging.as_ref() {
+                    self.active[self.ready_idx[0]].finish_decode_paged(&p.alloc, self.engine.exec());
+                }
+            }
+            _ => {
+                debug_assert_disjoint_slots(self.ready_idx.len(), |t| (self.ready_idx[t], 1));
+                let base = SendPtr(self.active.as_mut_ptr());
+                let idx = &self.ready_idx;
+                if let Some(p) = self.paging.as_ref() {
+                    let alloc = &p.alloc;
+                    self.engine.exec().for_each_ws(idx.len(), &mut self.tick_ws, |t, _ws| {
+                        // SAFETY: `ready_idx` holds distinct in-bounds
+                        // indices into `active`, and `for_each_ws` hands
+                        // each `t` to exactly one participant — so every
+                        // `ActiveSeq` is mutably borrowed at most once,
+                        // and never while `active` itself is touched. The
+                        // allocator is only *read* during the compute
+                        // halves (all `&mut` work happened in the serial
+                        // append phase above).
+                        let seq = unsafe { &mut *base.0.add(idx[t]) };
+                        seq.finish_decode_paged(alloc, Exec::Inline);
+                    });
+                }
+            }
+        }
+        // 4) retirement releases the session's frame references back to
+        // the pool before handing the result to the caller
+        // sparge-lint: allow(hot-path-no-alloc)
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].finished() {
+                let mut seq = self.active.remove(i);
+                if let (SeqSession::Paged(ps), Some(p)) = (&mut seq.session, self.paging.as_mut()) {
+                    ps.release(&mut p.alloc);
+                }
+                done.push(seq.into_result());
             } else {
                 i += 1;
             }

@@ -24,11 +24,22 @@
 //! predictor pooling, cached K quantization,
 //! [`attention::AttnSession::prefill_chunk`] offset-aware chunked prefill,
 //! and [`attention::AttnSession::decode`] steps — both bitwise-identical
-//! to a one-shot full-sequence prefill (f32, λ off). The coordinator
+//! to a one-shot full-sequence prefill (f32, λ off).
+//! `engine.paged_session()` is the serving-scale variant: the KV cache
+//! (plus the pooled stage-1 means and INT8 payloads, so Predicted and
+//! Int8 page too) lives in fixed `b_k`-row frames rented from a shared
+//! [`attention::PageAllocator`] — copy-on-write prompt-prefix sharing
+//! across sessions ([`attention::PrefixRegistry`]), LRU eviction with
+//! spill/re-page-in, and frame exhaustion surfaced as values, never
+//! panics — while decoding bitwise-identically to the monolithic
+//! session (`tests/paged_kv.rs`). The coordinator
 //! serves many sessions at once: its continuous-batching scheduler
 //! ([`coordinator::SessionManager`] + the token-level worker loop)
 //! interleaves bounded prefill chunks and per-tick decode steps over one
-//! shared engine/pool, reporting TTFT/TPOT and per-session sparsity. The
+//! shared engine/pool, reporting TTFT/TPOT and per-session sparsity —
+//! and, with `SessionManager::new_paged`, admits streams by free-frame
+//! reservation against the page pool, shedding load instead of
+//! oversubscribing it. The
 //! old free functions (`attention_flash*`, `sparse_flash*`,
 //! `sparge_attention*`) remain as deprecated shims — see the migration
 //! table in [`attention`].
@@ -59,7 +70,8 @@
 //! [`attention::SpanPlan`] and predicted-mask buffers, all
 //! bitwise-neutral (counting-allocator regression suite in
 //! `tests/alloc_regression.rs`, covering dense, external-mask, INT8,
-//! and predicted decode plus whole `SessionManager` ticks). Around it:
+//! and predicted decode plus whole `SessionManager` ticks — paged
+//! decode steps and paged serving ticks included). Around it:
 //! the mask-prediction pipeline, baselines (each just a mask
 //! constructor), workloads, tuner, cost model, and the PJRT runtime
 //! that loads and executes the artifacts. Python never runs on the

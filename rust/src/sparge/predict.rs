@@ -10,6 +10,7 @@
 //! 5. rows of fix Q blocks and columns of fix K blocks are forced to 1.
 
 use crate::attention::types::{AttnConfig, BlockMask};
+use crate::tensor::microkernel::Backend;
 use crate::tensor::{matmul, ops, Tensor};
 
 /// Output of the prediction pass.
@@ -55,6 +56,23 @@ pub fn cos_sim(block: &[f32], rows: usize, d: usize) -> f32 {
 /// path) allocates nothing once the buffer holds one block's rows.
 /// Bitwise-identical to [`cos_sim`].
 pub fn cos_sim_with(block: &[f32], rows: usize, d: usize, normed: &mut Vec<f32>) -> f32 {
+    cos_sim_with_backend(Backend::select(), block, rows, d, normed)
+}
+
+/// [`cos_sim_with`] on an explicit microkernel backend: the Gram entries
+/// run through [`Backend::dot`] (fixed-order tier — bitwise-identical on
+/// every backend), while the row norms stay the scalar sequential
+/// [`ops::norm`] sum (a *different* evaluation order than `dot`; routing
+/// them through the lane-chunked kernel would change bits). An engine
+/// pins one backend per [`KPool`], but because every kernel used here is
+/// fixed-order, the result is the same bits regardless of the handle.
+pub fn cos_sim_with_backend(
+    mk: Backend,
+    block: &[f32],
+    rows: usize,
+    d: usize,
+    normed: &mut Vec<f32>,
+) -> f32 {
     debug_assert_eq!(block.len(), rows * d);
     if rows <= 1 {
         return 1.0;
@@ -76,7 +94,7 @@ pub fn cos_sim_with(block: &[f32], rows: usize, d: usize, normed: &mut Vec<f32>)
     let mut maxabs = 0f32;
     for i in 0..rows {
         for j in 0..rows {
-            let g = matmul::dot(&normed[i * d..(i + 1) * d], &normed[j * d..(j + 1) * d]);
+            let g = mk.dot(&normed[i * d..(i + 1) * d], &normed[j * d..(j + 1) * d]);
             sum += g as f64;
             maxabs = maxabs.max(g.abs());
         }
@@ -354,10 +372,19 @@ pub fn predict_decode_row_into(
 /// block's `cos_sim` is recomputed with the same function over the same
 /// slice. The counters let callers assert the update discipline: sessions
 /// require `full_recomputes` to stay flat across decode steps.
+///
+/// The pooling loops dispatch through a pinned [`Backend`] handle
+/// ([`KPool::with_microkernel`]): block-sum accumulation runs
+/// [`Backend::sum_rows_acc`] and the self-similarity Gram entries run
+/// [`Backend::dot`] — both in the fixed-order kernel tier, so every
+/// backend produces the same bits (property-tested below).
 #[derive(Clone, Debug)]
 pub struct KPool {
     bk: usize,
     d: usize,
+    /// Microkernel backend for the pooling loops (fixed-order tier only,
+    /// so the choice never changes bits).
+    mk: Backend,
     /// Per-block running column sums, flat (n_blocks × d).
     sums: Vec<f32>,
     /// Rows accumulated per block.
@@ -384,6 +411,7 @@ impl KPool {
         KPool {
             bk,
             d,
+            mk: Backend::select(),
             sums: Vec::new(),
             rows: Vec::new(),
             sims: Vec::new(),
@@ -392,6 +420,15 @@ impl KPool {
             incremental_updates: 0,
             chunk_extends: 0,
         }
+    }
+
+    /// Pin the microkernel backend the pooling loops dispatch through
+    /// (engines pass their own resolved handle so pooling and scoring
+    /// agree). Bitwise-neutral: every kernel the pool uses is in the
+    /// fixed-order tier.
+    pub fn with_microkernel(mut self, mk: Backend) -> KPool {
+        self.mk = mk;
+        self
     }
 
     pub fn n_blocks(&self) -> usize {
@@ -420,13 +457,20 @@ impl KPool {
             let r1 = (r0 + self.bk).min(n);
             let base = self.sums.len();
             self.sums.resize(base + self.d, 0.0);
-            for r in r0..r1 {
-                for (o, &v) in self.sums[base..].iter_mut().zip(k.row(r)) {
-                    *o += v;
-                }
-            }
+            self.mk.sum_rows_acc(
+                &k.data()[r0 * self.d..r1 * self.d],
+                &mut self.sums[base..],
+                r1 - r0,
+                self.d,
+            );
             self.rows.push(r1 - r0);
-            let s = cos_sim_with(&k.data()[r0 * self.d..r1 * self.d], r1 - r0, self.d, &mut self.scratch);
+            let s = cos_sim_with_backend(
+                self.mk,
+                &k.data()[r0 * self.d..r1 * self.d],
+                r1 - r0,
+                self.d,
+                &mut self.scratch,
+            );
             self.sims.push(s);
             r0 = r1;
         }
@@ -460,17 +504,20 @@ impl KPool {
             if last < self.bk {
                 let b = self.rows.len() - 1;
                 let r1 = (b * self.bk + self.bk).min(total);
-                for row in r..r1 {
-                    for (o, &v) in self.sums[b * self.d..(b + 1) * self.d]
-                        .iter_mut()
-                        .zip(&cache[row * self.d..(row + 1) * self.d])
-                    {
-                        *o += v;
-                    }
-                }
+                self.mk.sum_rows_acc(
+                    &cache[r * self.d..r1 * self.d],
+                    &mut self.sums[b * self.d..(b + 1) * self.d],
+                    r1 - r,
+                    self.d,
+                );
                 self.rows[b] = r1 - b * self.bk;
-                let s =
-                    cos_sim_with(&cache[b * self.bk * self.d..r1 * self.d], self.rows[b], self.d, &mut self.scratch);
+                let s = cos_sim_with_backend(
+                    self.mk,
+                    &cache[b * self.bk * self.d..r1 * self.d],
+                    self.rows[b],
+                    self.d,
+                    &mut self.scratch,
+                );
                 self.sims[b] = s;
                 r = r1;
             }
@@ -480,15 +527,20 @@ impl KPool {
             let r1 = (r + self.bk).min(total);
             let base = self.sums.len();
             self.sums.resize(base + self.d, 0.0);
-            for row in r..r1 {
-                for (o, &v) in
-                    self.sums[base..].iter_mut().zip(&cache[row * self.d..(row + 1) * self.d])
-                {
-                    *o += v;
-                }
-            }
+            self.mk.sum_rows_acc(
+                &cache[r * self.d..r1 * self.d],
+                &mut self.sums[base..],
+                r1 - r,
+                self.d,
+            );
             self.rows.push(r1 - r);
-            let s = cos_sim_with(&cache[r * self.d..r1 * self.d], r1 - r, self.d, &mut self.scratch);
+            let s = cos_sim_with_backend(
+                self.mk,
+                &cache[r * self.d..r1 * self.d],
+                r1 - r,
+                self.d,
+                &mut self.scratch,
+            );
             self.sims.push(s);
             r = r1;
         }
@@ -514,11 +566,9 @@ impl KPool {
             let b = self.rows.len() - 1;
             *self.rows.last_mut().unwrap() += 1;
             let rows = self.rows[b];
-            for (o, &v) in self.sums[b * self.d..(b + 1) * self.d].iter_mut().zip(row) {
-                *o += v;
-            }
+            self.mk.sum_rows_acc(row, &mut self.sums[b * self.d..(b + 1) * self.d], 1, self.d);
             debug_assert_eq!(tail.len(), rows * self.d, "tail slice must cover the block incl. the new row");
-            let s = cos_sim_with(tail, rows, self.d, &mut self.scratch);
+            let s = cos_sim_with_backend(self.mk, tail, rows, self.d, &mut self.scratch);
             self.sims[b] = s;
         }
         self.incremental_updates += 1;
@@ -766,6 +816,48 @@ mod tests {
         }
         assert_eq!(pool.full_recomputes, 0);
         assert_eq!(pool.incremental_updates, n);
+    }
+
+    #[test]
+    fn kpool_is_bitwise_across_backends() {
+        // The pooling loops dispatch through Backend::sum_rows_acc and
+        // Backend::dot — both fixed-order tier — so a pool grown through
+        // any backend must produce the same bits as the portable one,
+        // through every growth path (build, extend, append_row).
+        Cases::standard(613).check(|rng| {
+            let d = rng.range(1, 24);
+            let bk = rng.range(1, 9);
+            let n0 = rng.range(1, 40);
+            let n1 = n0 + rng.range(1, 20);
+            let mut flat = Vec::with_capacity(n1 * d);
+            for _ in 0..n1 * d {
+                flat.push(rng.gauss());
+            }
+            let k0 = Tensor::from_vec(&[n0, d], flat[..n0 * d].to_vec());
+            let mut per_backend: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+            for &mk in Backend::all() {
+                let mut pool = KPool::new(bk, d).with_microkernel(mk);
+                pool.build(&k0);
+                let mid = n0 + (n1 - n0) / 2;
+                if mid > n0 {
+                    pool.extend(n0, &flat[..mid * d]);
+                }
+                for r in mid.max(n0)..n1 {
+                    let tail_start = (r / bk) * bk;
+                    pool.append_row(&flat[r * d..(r + 1) * d], &flat[tail_start * d..(r + 1) * d]);
+                }
+                per_backend.push((pool.means().data().to_vec(), pool.sims().to_vec()));
+            }
+            for (means, sims) in &per_backend[1..] {
+                if means != &per_backend[0].0 {
+                    return Err(format!("means diverge across backends (d={d} bk={bk} n={n1})"));
+                }
+                if sims != &per_backend[0].1 {
+                    return Err(format!("sims diverge across backends (d={d} bk={bk} n={n1})"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -236,6 +236,41 @@ pub(super) unsafe fn matmul_nt_into(
     }
 }
 
+/// Column-wise row accumulate (`sums[j] += x[r][j]` in increasing `r`);
+/// bitwise-identical to `portable::sum_rows_acc`: each column is an
+/// independent pure-addition chain in row order, and `_mm256_add_ps`
+/// evaluates the eight column chains of a lane group element-wise with
+/// no cross-lane reduction, so lane width cannot change any bit.
+///
+/// # Safety
+/// Caller must ensure the CPU supports AVX2, `x.len() >= rows * d`, and
+/// `sums.len() >= d`.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn sum_rows_acc(x: &[f32], sums: &mut [f32], rows: usize, d: usize) {
+    let dl = d & !7;
+    // SAFETY: `r < rows` bounds each row pointer inside `x[.. rows * d]`;
+    // vector loads/stores step `j` in 8s below `dl <= d` and the scalar
+    // remainder indexes `j < d`, so every access stays inside the slices
+    // the caller guarantees.
+    unsafe {
+        let sp = sums.as_mut_ptr();
+        for r in 0..rows {
+            let rp = x.as_ptr().add(r * d);
+            let mut j = 0;
+            while j < dl {
+                let vs = _mm256_loadu_ps(sp.add(j));
+                let vx = _mm256_loadu_ps(rp.add(j));
+                _mm256_storeu_ps(sp.add(j), _mm256_add_ps(vs, vx));
+                j += 8;
+            }
+            while j < d {
+                *sp.add(j) += *rp.add(j);
+                j += 1;
+            }
+        }
+    }
+}
+
 /// int8 NT kernel: sign-extend 16 i8 lanes to i16, `_mm256_madd_epi16`
 /// pairs into 8 i32 lanes (|product| ≤ 127² = 16129, so the pairwise i32
 /// add can never overflow), accumulate with `_mm256_add_epi32`. Exact

@@ -26,7 +26,7 @@
 //! this module:
 //!
 //! - **Fixed-order (bitwise) tier** — `matmul_nt_into`, `gemv_nt`,
-//!   `dot`, `matmul_nt_i8`. Each output element is produced in one
+//!   `dot`, `matmul_nt_i8`, `sum_rows_acc`. Each output element is produced in one
 //!   platform-independent float evaluation order: lane `l` of a
 //!   `LANES`-wide accumulator takes the terms at positions `p ≡ l (mod
 //!   LANES)` of the aligned prefix in increasing `p` with *unfused*
@@ -204,6 +204,25 @@ impl Backend {
         }
     }
 
+    /// Column-wise row accumulate: `sums[j] += x[r][j]` for r in
+    /// 0..rows — the stage-1 `KPool` block-mean reduction. Fixed-order
+    /// tier, and trivially so: each column is an independent pure-
+    /// addition chain evaluated in increasing `r`, with no cross-lane
+    /// reduction anywhere, so lane width cannot change any bit and
+    /// every backend matches the scalar `iter_mut().zip(row)` sweep it
+    /// replaces bitwise.
+    #[inline]
+    pub fn sum_rows_acc(self, x: &[f32], sums: &mut [f32], rows: usize, d: usize) {
+        debug_assert!(x.len() >= rows * d);
+        debug_assert!(sums.len() >= d);
+        match self {
+            Backend::Portable => portable::sum_rows_acc(x, sums, rows, d),
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            // SAFETY: Avx2 is only constructed after runtime detection.
+            Backend::Avx2 => unsafe { avx2::sum_rows_acc(x, sums, rows, d) },
+        }
+    }
+
     /// NN kernel (`C (+)= A·B`; A is (m,k), B is (k,n)), optionally
     /// accumulating, with the `skip_zeros` AXPY early-out of the sparse
     /// P̃·V path. **Oracle tier**: backends share the summation order but
@@ -356,6 +375,34 @@ mod tests {
                 mk.matmul_nt_into(&a, &b, &mut via_mm, 1, n, k);
                 if via_mm != c {
                     return Err(format!("{} m=1 nt != gemv", mk.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sum_rows_acc_is_bitwise_across_backends() {
+        // The KPool block-mean reduction: every backend must reproduce
+        // the scalar per-row `zip` sweep bitwise (each column is one
+        // pure-addition chain in row order), including accumulation
+        // into a non-zero `sums` and ragged d off the lane grid.
+        Cases::standard(146).check(|rng| {
+            let rows = rng.range(0, 20);
+            let d = rng.range(1, 40);
+            let x: Vec<f32> = rng.gauss_vec(rows * d);
+            let init: Vec<f32> = rng.gauss_vec(d);
+            let mut want = init.clone();
+            for r in 0..rows {
+                for (s, &v) in want.iter_mut().zip(&x[r * d..(r + 1) * d]) {
+                    *s += v;
+                }
+            }
+            for &mk in Backend::all() {
+                let mut sums = init.clone();
+                mk.sum_rows_acc(&x, &mut sums, rows, d);
+                if sums != want {
+                    return Err(format!("{} sum_rows_acc diverged at rows={rows} d={d}", mk.name()));
                 }
             }
             Ok(())

@@ -239,6 +239,20 @@ pub(super) fn matmul_nn_acc(
     }
 }
 
+/// Column-wise row accumulate: `sums[j] += x[r][j]` for r in 0..rows —
+/// the KPool block-mean reduction. Every output element receives its
+/// additions in increasing-`r` order regardless of how the inner `j`
+/// sweep is vectorized (each column is an independent chain), so any
+/// backend with the same per-column row order is bitwise-identical.
+pub(super) fn sum_rows_acc(x: &[f32], sums: &mut [f32], rows: usize, d: usize) {
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        for (s, &v) in sums.iter_mut().zip(row) {
+            *s += v;
+        }
+    }
+}
+
 /// int8 NT kernel with i32 accumulation: C[i][j] = Σ_p a[i][p]·b[j][p].
 /// Used by the SageAttention-quantized path (dequantized by the caller).
 /// Exact integer arithmetic — order-free, trivially bitwise.

@@ -72,6 +72,35 @@ fn warm<'e>(
     (session, out)
 }
 
+/// Paged twin of [`warm`]: prefill 32 rows into pool frames and decode
+/// through `warm_to`, leaving session, allocator free list, page table,
+/// workspace, and span plan all at high water.
+fn warm_paged<'e>(
+    engine: &'e AttnEngine,
+    alloc: &mut sparge::attention::PageAllocator,
+    toks: &[(Tensor, Tensor, Tensor)],
+    warm_to: usize,
+) -> (sparge::attention::PagedAttnSession<'e>, Vec<f32>) {
+    let mut session = engine.paged_session();
+    let pre = 32;
+    let qs: Vec<f32> = toks[..pre].iter().flat_map(|(q, _, _)| q.data().to_vec()).collect();
+    let ks: Vec<f32> = toks[..pre].iter().flat_map(|(_, k, _)| k.data().to_vec()).collect();
+    let vs: Vec<f32> = toks[..pre].iter().flat_map(|(_, _, v)| v.data().to_vec()).collect();
+    let r = session.prefill(
+        alloc,
+        &Tensor::from_vec(&[pre, D], qs),
+        &Tensor::from_vec(&[pre, D], ks),
+        &Tensor::from_vec(&[pre, D], vs),
+    );
+    assert!(r.is_some(), "warm pool must cover the prefill");
+    let mut out = vec![0f32; D];
+    for (q, k, v) in &toks[pre..warm_to] {
+        let r = session.decode_into(alloc, q, k, v, &mut out);
+        assert!(r.is_some(), "warm pool must cover every decode frame");
+    }
+    (session, out)
+}
+
 #[test]
 fn warmed_up_decode_steps_allocate_nothing() {
     let toks = rows(4242);
@@ -149,6 +178,34 @@ fn warmed_up_decode_steps_allocate_nothing() {
         assert_eq!(delta, 0, "predicted-policy decode step allocated ({delta} / 14 steps)");
     }
 
+    // -- Paged KV cache: frame-resident decode is zero-alloc too --------
+    // The page table, free list, per-frame pooled state, and span plan
+    // are all at high water after warmup; the measured window stays
+    // inside k-block 14, so no frame claim (claims fire when
+    // `rows % b_k == 0` — row 208 during warmup, row 224 after the
+    // window) and no CoW (every frame is singly referenced).
+    {
+        use sparge::attention::PageAllocator;
+        for split in [KvSplit::Off, KvSplit::Auto, KvSplit::Blocks(2)] {
+            let engine = AttnEngine::builder().config(cfg()).kv_split(split).build();
+            let mut alloc = PageAllocator::new(32, 16, D, D);
+            let (mut session, mut out) = warm_paged(&engine, &mut alloc, &toks, 209);
+            let before = thread_allocations();
+            for (q, k, v) in &toks[209..223] {
+                let r = session.decode_into(&mut alloc, q, k, v, &mut out);
+                assert!(r.is_some(), "pool must not exhaust inside the window");
+            }
+            let delta = thread_allocations() - before;
+            assert_eq!(
+                delta, 0,
+                "paged dense f32 decode step allocated under Exec::Inline, {split:?} ({delta} allocations / 14 steps)"
+            );
+            assert_eq!(session.len(), 223);
+            session.release(&mut alloc);
+            assert_eq!(alloc.stats().frames_in_use, 0);
+        }
+    }
+
     // -- SessionManager ticks: scheduling bookkeeping is arena-backed ---
     // Three sessions decoding in lockstep exercise the batched fan-out
     // (tick-persistent phase snapshot + ready indices); a warmed decode
@@ -178,6 +235,37 @@ fn warmed_up_decode_steps_allocate_nothing() {
         }
         let delta = thread_allocations() - before;
         assert_eq!(delta, 0, "warmed serving tick allocated ({delta} / 7 ticks of 3 sessions)");
+    }
+
+    // -- Paged SessionManager ticks: admission + frames, still zero -----
+    // Same traffic over a paged pool: with the pending queue drained the
+    // reservation-based admission check breaks immediately, and the
+    // measured decode appends (cache rows 71..78 per session) cross no
+    // frame boundary (claims fire at rows 64 and 80), so a warmed paged
+    // serving tick — frame bookkeeping included — allocates nothing.
+    {
+        use sparge::attention::PageAllocator;
+        use sparge::coordinator::{SeqStream, SessionManager};
+        use std::time::Instant;
+        let engine = AttnEngine::builder().config(cfg()).kv_split(KvSplit::Off).build();
+        let mut mgr = SessionManager::new_paged(&engine, 32, PageAllocator::new(32, 16, D, D));
+        for (i, seed) in [(0u64, 91u64), (1, 92), (2, 93)] {
+            let mut rng = Pcg::seeded(seed);
+            let q = Tensor::randn(&[96, D], &mut rng);
+            let k = Tensor::randn(&[96, D], &mut rng);
+            let v = Tensor::randn(&[96, D], &mut rng);
+            mgr.admit(i, SeqStream { q, k, v, prefill: 32 }, Instant::now());
+        }
+        for _ in 0..40 {
+            mgr.tick(); // admission + prefill tick, then warmup decode ticks
+        }
+        let before = thread_allocations();
+        for _ in 0..7 {
+            let done = mgr.tick();
+            assert!(done.is_empty(), "measured ticks must not retire sessions");
+        }
+        let delta = thread_allocations() - before;
+        assert_eq!(delta, 0, "warmed paged serving tick allocated ({delta} / 7 ticks of 3 sessions)");
     }
 
     // -- Pool execution: workers' own arenas absorb the span scratch ----

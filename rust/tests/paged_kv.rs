@@ -1,0 +1,474 @@
+//! Golden parity + property suite for the paged KV cache
+//! (`sparge::attention::paged`): bitwise equivalence between paged and
+//! monolithic sessions across the full policy × split × executor matrix,
+//! copy-on-write prefix sharing (frame savings with identical outputs),
+//! evict → re-page-in parity, free-list exhaustion (deferral, never
+//! corruption), and the paged serving manager against the monolithic one.
+
+use std::time::Instant;
+
+use sparge::attention::{
+    AttnConfig, AttnEngine, AttnOutput, BlockMask, Execution, KvSplit, PageAllocator, Precision,
+    PrefixRegistry, SparsityPolicy,
+};
+use sparge::coordinator::{run_sequential, AttnStreamSpec, SeqStream, SessionManager};
+use sparge::sparge::SpargeParams;
+use sparge::tensor::Tensor;
+use sparge::util::prop::{assert_allclose, Cases};
+use sparge::util::rng::Pcg;
+
+fn qkv(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+    let mut rng = Pcg::seeded(seed);
+    (Tensor::randn(&[n, d], &mut rng), Tensor::randn(&[n, d], &mut rng), Tensor::randn(&[n, d], &mut rng))
+}
+
+/// Random full-sequence mask with every block kept at least once per row
+/// (decode rows must keep the tail block they append into).
+fn decode_safe_mask(seed: u64, rows: usize, cols: usize) -> BlockMask {
+    let mut rng = Pcg::seeded(seed);
+    let mut mask = BlockMask::new_all(rows, cols, false);
+    for i in 0..rows {
+        mask.set(i, rng.range(0, cols), true);
+        for j in 0..cols {
+            if rng.chance(0.5) {
+                mask.set(i, j, true);
+            }
+        }
+    }
+    mask
+}
+
+/// One-shot prefill then per-token decode through a monolithic session.
+fn run_mono(engine: &AttnEngine, q: &Tensor, k: &Tensor, v: &Tensor, n0: usize) -> Vec<AttnOutput> {
+    let mut session = engine.session();
+    let mut outs = Vec::new();
+    if n0 > 0 {
+        outs.push(session.prefill(&q.rows(0, n0), &k.rows(0, n0), &v.rows(0, n0)));
+    }
+    for t in n0..q.dim(0) {
+        outs.push(session.decode(&q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1)));
+    }
+    outs
+}
+
+/// The same schedule through a paged session over `alloc`; releases the
+/// session's frames before returning.
+fn run_paged(
+    engine: &AttnEngine,
+    alloc: &mut PageAllocator,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    n0: usize,
+) -> Vec<AttnOutput> {
+    let mut session = engine.paged_session();
+    let mut outs = Vec::new();
+    if n0 > 0 {
+        outs.push(
+            session.prefill(alloc, &q.rows(0, n0), &k.rows(0, n0), &v.rows(0, n0)).expect("frames"),
+        );
+    }
+    for t in n0..q.dim(0) {
+        outs.push(
+            session
+                .decode(alloc, &q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1))
+                .expect("frames"),
+        );
+    }
+    session.release(alloc);
+    outs
+}
+
+#[test]
+fn paged_matches_monolithic_bitwise_f32_all_compositions() {
+    // The tentpole contract: for f32/λ-off engines the paged session is
+    // bitwise-identical to the monolithic one — outputs, SkipStats, and
+    // stage-1 masks — for dense / external / predicted policies, split-KV
+    // off and auto, and every executor (inline, scoped threads, pools of
+    // 1/2/8). 40-row prefill + 32 decode steps per composition.
+    let (q, k, v) = qkv(72, 16, 901);
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let n0 = 40;
+    let ext_mask = decode_safe_mask(902, cfg.n_qblocks(72), cfg.n_kblocks(72));
+    let policies: Vec<(&str, SparsityPolicy)> = vec![
+        ("dense", SparsityPolicy::Dense),
+        ("external", SparsityPolicy::External { mask: ext_mask, lambda: None }),
+        (
+            "predicted",
+            SparsityPolicy::Predicted {
+                params: SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false }
+                    .predict_params(),
+                lambda: None,
+            },
+        ),
+    ];
+    for (label, policy) in &policies {
+        for split in [KvSplit::Off, KvSplit::Auto] {
+            for exec in
+                [Execution::Inline, Execution::Threads(4), Execution::Pool(1), Execution::Pool(2), Execution::Pool(8)]
+            {
+                let engine = AttnEngine::builder()
+                    .config(cfg)
+                    .policy(policy.clone())
+                    .execution(exec)
+                    .kv_split(split)
+                    .build();
+                let mono = run_mono(&engine, &q, &k, &v, n0);
+                let mut alloc = PageAllocator::new(16, 8, 16, 16);
+                let paged = run_paged(&engine, &mut alloc, &q, &k, &v, n0);
+                assert_eq!(mono.len(), paged.len());
+                for (t, (a, b)) in mono.iter().zip(&paged).enumerate() {
+                    let tag = format!("{label} {split:?} {exec:?} step {t}");
+                    assert_eq!(a.out, b.out, "{tag}: output bits");
+                    assert_eq!(a.stats, b.stats, "{tag}: stats bits");
+                    assert_eq!(a.mask, b.mask, "{tag}: stage-1 mask");
+                }
+                assert_eq!(alloc.stats().frames_in_use, 0, "release returned every frame");
+            }
+        }
+    }
+}
+
+#[test]
+fn paged_int8_allclose_with_exact_stats() {
+    // INT8: the paged per-frame payloads are byte-identical to the
+    // monolithic per-block ones (blocks quantize independently from the
+    // same rows and the same frozen smoothing mean), so stats and masks
+    // are exact; outputs are compared allclose per the INT8 contract.
+    let (q, k, v) = qkv(72, 16, 903);
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let n0 = 40;
+    let policies: Vec<(&str, SparsityPolicy)> = vec![
+        ("dense-int8", SparsityPolicy::Dense),
+        (
+            "predicted-int8",
+            SparsityPolicy::Predicted {
+                params: SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: true }
+                    .predict_params(),
+                lambda: None,
+            },
+        ),
+    ];
+    for (label, policy) in &policies {
+        for split in [KvSplit::Off, KvSplit::Auto] {
+            let engine = AttnEngine::builder()
+                .config(cfg)
+                .precision(Precision::Int8)
+                .policy(policy.clone())
+                .kv_split(split)
+                .build();
+            let mono = run_mono(&engine, &q, &k, &v, n0);
+            let mut alloc = PageAllocator::new(16, 8, 16, 16).with_quant();
+            let paged = run_paged(&engine, &mut alloc, &q, &k, &v, n0);
+            for (t, (a, b)) in mono.iter().zip(&paged).enumerate() {
+                let tag = format!("{label} {split:?} step {t}");
+                assert_allclose(b.out.data(), a.out.data(), 1e-4, 1e-3, &tag).unwrap();
+                assert_eq!(a.stats, b.stats, "{tag}: stats must be exact");
+                assert_eq!(a.mask, b.mask, "{tag}: stage-1 mask must be exact");
+            }
+        }
+    }
+}
+
+#[test]
+fn prefix_sharing_saves_frames_and_keeps_outputs_bitwise() {
+    // Two sessions opened from the same 36-row prompt (partial tail
+    // frame: 36 = 4×8 + 4) must map the SAME frames — the second prefill
+    // claims zero new frames and skips its compute — while both sessions'
+    // prefill and divergent decode outputs stay bitwise-identical to
+    // private monolithic sessions. The first divergent append CoW-splits
+    // only the partial tail frame.
+    let d = 16;
+    let prompt = 36;
+    let steps = 6;
+    let (qa, ka, va) = qkv(prompt + steps, d, 911);
+    let (qb_full, kb_full, vb_full) = qkv(prompt + steps, d, 912);
+    // stream B shares A's prompt rows, then diverges
+    let splice = |shared: &Tensor, own: &Tensor| {
+        let mut flat = shared.rows(0, prompt).data().to_vec();
+        flat.extend_from_slice(own.rows(prompt, prompt + steps).data());
+        Tensor::from_vec(&[prompt + steps, d], flat)
+    };
+    let (qb, kb, vb) = (splice(&qa, &qb_full), splice(&ka, &kb_full), splice(&va, &vb_full));
+
+    let cfg = AttnConfig { bq: 8, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let engine = AttnEngine::builder()
+        .config(cfg)
+        .policy(SparsityPolicy::Predicted {
+            params: SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false }.predict_params(),
+            lambda: None,
+        })
+        .build();
+    let mono_a = run_mono(&engine, &qa, &ka, &va, prompt);
+    let mono_b = run_mono(&engine, &qb, &kb, &vb, prompt);
+
+    let mut alloc = PageAllocator::new(24, 8, d, d);
+    let mut reg = PrefixRegistry::new();
+    let mut s1 = engine.paged_session();
+    let mut s2 = engine.paged_session();
+    let pq = qa.rows(0, prompt);
+    let pk = ka.rows(0, prompt);
+    let pv = va.rows(0, prompt);
+    let r1 = s1.prefill_shared(&mut alloc, &mut reg, &pq, &pk, &pv).expect("frames");
+    let solo_frames = alloc.stats().frames_in_use;
+    assert_eq!(solo_frames, 5, "36 rows under b_k=8 occupy 5 frames");
+    let r2 = s2.prefill_shared(&mut alloc, &mut reg, &pq, &pk, &pv).expect("frames");
+    // measurably fewer than 2× solo: the second prompt claims NO frames
+    assert_eq!(alloc.stats().frames_in_use, solo_frames, "prefix hit maps the same frames");
+    assert_eq!(alloc.stats().prefix_hits, 1);
+    assert_eq!(r1.out, mono_a[0].out, "lender prefill bits");
+    assert_eq!(r2.out, mono_a[0].out, "borrower adopts the cached prefill bitwise");
+    assert_eq!(r1.stats, mono_a[0].stats);
+    assert_eq!(r2.stats, mono_a[0].stats);
+
+    // divergent decode: each session's first append CoW-splits the shared
+    // partial tail frame; outputs track each stream's private baseline
+    for (t, step) in (prompt..prompt + steps).enumerate() {
+        let oa = s1
+            .decode(&mut alloc, &qa.rows(step, step + 1), &ka.rows(step, step + 1), &va.rows(step, step + 1))
+            .expect("frames");
+        let ob = s2
+            .decode(&mut alloc, &qb.rows(step, step + 1), &kb.rows(step, step + 1), &vb.rows(step, step + 1))
+            .expect("frames");
+        assert_eq!(oa.out, mono_a[1 + t].out, "lender decode step {t} bits");
+        assert_eq!(ob.out, mono_b[1 + t].out, "borrower decode step {t} bits");
+        assert_eq!(oa.stats, mono_a[1 + t].stats);
+        assert_eq!(ob.stats, mono_b[1 + t].stats);
+    }
+    assert_eq!(alloc.stats().cow_splits, 2, "one CoW split per diverging writer");
+
+    s1.release(&mut alloc);
+    s2.release(&mut alloc);
+    reg.clear(&mut alloc);
+    assert_eq!(alloc.stats().frames_in_use, 0, "all frames recycled");
+}
+
+#[test]
+fn evict_and_repage_in_decode_is_bitwise() {
+    // A session evicted mid-decode (frames spilled and released) must,
+    // after transparent re-page-in, keep producing the exact bits of a
+    // never-evicted paged session and of the monolithic baseline —
+    // including the predictor's pooled state, which pages with the
+    // frames. INT8 re-page-in requantizes from the restored rows, which
+    // is byte-identical, so the INT8 run is compared exactly against its
+    // own never-evicted twin.
+    let (q, k, v) = qkv(64, 16, 921);
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let n0 = 32;
+    let predicted = SparsityPolicy::Predicted {
+        params: SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false }.predict_params(),
+        lambda: None,
+    };
+    let engine = AttnEngine::builder().config(cfg).policy(predicted).build();
+    let mono = run_mono(&engine, &q, &k, &v, n0);
+
+    let mut alloc = PageAllocator::new(16, 8, 16, 16);
+    let mut session = engine.paged_session();
+    let mut outs = Vec::new();
+    outs.push(session.prefill(&mut alloc, &q.rows(0, n0), &k.rows(0, n0), &v.rows(0, n0)).expect("frames"));
+    for t in n0..q.dim(0) {
+        if t == n0 + 16 {
+            session.evict(&mut alloc);
+            assert!(session.is_evicted());
+            assert_eq!(alloc.stats().frames_in_use, 0, "eviction returns every frame");
+        }
+        outs.push(
+            session
+                .decode(&mut alloc, &q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1))
+                .expect("frames"),
+        );
+    }
+    assert_eq!(alloc.stats().evictions, 1);
+    for (t, (a, b)) in mono.iter().zip(&outs).enumerate() {
+        assert_eq!(a.out, b.out, "evicted run step {t} output bits");
+        assert_eq!(a.stats, b.stats, "evicted run step {t} stats bits");
+        assert_eq!(a.mask, b.mask, "evicted run step {t} mask");
+    }
+    session.release(&mut alloc);
+
+    // INT8: evicted vs never-evicted paged twins must agree exactly
+    let engine8 = AttnEngine::builder().config(cfg).precision(Precision::Int8).build();
+    let mut alloc_a = PageAllocator::new(16, 8, 16, 16).with_quant();
+    let plain = run_paged(&engine8, &mut alloc_a, &q, &k, &v, n0);
+    let mut alloc_b = PageAllocator::new(16, 8, 16, 16).with_quant();
+    let mut s8 = engine8.paged_session();
+    let mut evicted = Vec::new();
+    evicted.push(s8.prefill(&mut alloc_b, &q.rows(0, n0), &k.rows(0, n0), &v.rows(0, n0)).expect("frames"));
+    for t in n0..q.dim(0) {
+        if t == n0 + 7 {
+            s8.evict(&mut alloc_b);
+        }
+        evicted.push(
+            s8.decode(&mut alloc_b, &q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1))
+                .expect("frames"),
+        );
+    }
+    for (t, (a, b)) in plain.iter().zip(&evicted).enumerate() {
+        assert_eq!(a.out, b.out, "int8 evict/repage step {t}: requantized payloads must match");
+        assert_eq!(a.stats, b.stats);
+    }
+}
+
+#[test]
+fn free_list_exhaustion_defers_and_never_corrupts() {
+    // Property: with a pool far smaller than the offered load, appends
+    // return `false`/`None` (state untouched) instead of panicking or
+    // corrupting, retrying the SAME token after frames free up yields the
+    // bits the monolithic baseline produces, and refcount accounting
+    // returns the pool to empty.
+    Cases::standard(931).check(|rng| {
+        let d = rng.range(2, 10);
+        let bk = rng.range(1, 5);
+        let frames = rng.range(2, 6);
+        let cfg = AttnConfig { bq: 4, bk, causal: true, scale: None, cw: 2, row_offset: 0 };
+        let engine = AttnEngine::builder().config(cfg).build();
+        // session A alone needs the whole pool, so decoding alongside B
+        // (which claims at least one frame) MUST starve A at some point
+        let tokens = frames * bk;
+        let mk_stream = |seed: u64| {
+            let mut r = Pcg::seeded(seed);
+            (
+                Tensor::randn(&[tokens, d], &mut r),
+                Tensor::randn(&[tokens, d], &mut r),
+                Tensor::randn(&[tokens, d], &mut r),
+            )
+        };
+        let (qa, ka, va) = mk_stream(rng.range(1, 1 << 20) as u64);
+        let (qb, kb, vb) = mk_stream(rng.range(1, 1 << 20) as u64);
+        let mono = run_mono(&engine, &qa, &ka, &va, 0);
+
+        let mut alloc = PageAllocator::new(frames, bk, d, d);
+        let mut sa = engine.paged_session();
+        let mut sb = engine.paged_session();
+        let (mut ta, mut tb) = (0usize, 0usize);
+        let mut starved = false;
+        // round-robin decode; when A starves, release B and retry the SAME
+        // token — the retry must produce exactly the monolithic bits
+        for _ in 0..4 * tokens + 8 {
+            if ta == tokens {
+                break;
+            }
+            let rows_before = sa.len();
+            match sa.decode(&mut alloc, &qa.rows(ta, ta + 1), &ka.rows(ta, ta + 1), &va.rows(ta, ta + 1))
+            {
+                Some(out) => {
+                    if out.out != mono[ta].out || out.stats != mono[ta].stats {
+                        return Err(format!("session A diverged at token {ta}"));
+                    }
+                    ta += 1;
+                }
+                None => {
+                    if sa.len() != rows_before {
+                        return Err("failed append mutated the session".into());
+                    }
+                    starved = true;
+                    sb.release(&mut alloc);
+                    tb = tokens; // B stops decoding (its cache is gone)
+                }
+            }
+            if tb < tokens
+                && sb
+                    .decode(&mut alloc, &qb.rows(tb, tb + 1), &kb.rows(tb, tb + 1), &vb.rows(tb, tb + 1))
+                    .is_some()
+            {
+                tb += 1;
+            }
+        }
+        if !starved {
+            return Err("pool never exhausted — the property tested nothing".into());
+        }
+        if ta != tokens {
+            return Err(format!("session A starved permanently at {ta}/{tokens}"));
+        }
+        sa.release(&mut alloc);
+        sb.release(&mut alloc);
+        if alloc.stats().frames_in_use != 0 {
+            return Err("frames leaked".into());
+        }
+        if alloc.free_frames() != frames {
+            return Err("free list incomplete".into());
+        }
+        Ok(())
+    });
+}
+
+/// Drive a manager until idle, admitting everything up front.
+fn drain(mgr: &mut SessionManager<'_>, specs: &[AttnStreamSpec]) -> Vec<sparge::coordinator::SeqResult> {
+    for (i, s) in specs.iter().enumerate() {
+        mgr.admit(i as u64, SeqStream::synth(s), Instant::now());
+    }
+    let mut done = Vec::new();
+    for _ in 0..10_000 {
+        done.extend(mgr.tick());
+        if mgr.active() == 0 && mgr.pending() == 0 {
+            break;
+        }
+    }
+    assert!(mgr.active() == 0 && mgr.pending() == 0, "manager failed to drain");
+    done.sort_by_key(|r| r.id);
+    done
+}
+
+#[test]
+fn paged_manager_matches_monolithic_manager_bitwise() {
+    // Serving-level acceptance: the paged manager (frame pool + prefix
+    // registry + frame-aware admission) reproduces the monolithic
+    // manager's outputs and stats bitwise for an f32/λ-off predicted
+    // engine — including two identical prompts, where the second rides
+    // the prefix registry instead of recomputing its prefill.
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false };
+    let engine =
+        AttnEngine::builder().config(cfg).sparge(&params).execution(Execution::Pool(2)).build();
+    let spec = |prefill, decode, seed| AttnStreamSpec { prefill, decode, d: 16, seed };
+    let specs = [
+        spec(40, 8, 51),
+        spec(16, 6, 52),
+        spec(0, 6, 53),
+        spec(16, 6, 52), // identical to #1: exercises the prefix registry
+        spec(33, 5, 54),
+    ];
+    let mut mono_mgr = SessionManager::new(&engine, 16);
+    let mono = drain(&mut mono_mgr, &specs);
+    let mut paged_mgr = SessionManager::new_paged(&engine, 16, PageAllocator::new(64, 8, 16, 16));
+    let paged = drain(&mut paged_mgr, &specs);
+    assert_eq!(mono.len(), paged.len());
+    for (a, b) in mono.iter().zip(&paged) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.out, b.out, "paged manager diverged (id {})", a.id);
+        assert_eq!(a.stats, b.stats, "paged manager stats diverged (id {})", a.id);
+        assert_eq!(a.tokens, b.tokens);
+    }
+    let ps = paged_mgr.page_stats().expect("paged manager has page stats");
+    assert_eq!(ps.prefix_hits, 1, "the duplicate prompt hits the registry");
+    paged_mgr.release_prefixes();
+    assert_eq!(paged_mgr.page_stats().expect("stats").frames_in_use, 0, "drained manager frees the pool");
+}
+
+#[test]
+fn paged_manager_defers_admission_under_frame_pressure() {
+    // A pool that holds barely more than one stream: admission must
+    // defer (load-shed counter, not a panic or an OOM), evict idle
+    // sessions to make room, and still retire every stream with the
+    // sequential baseline's bits.
+    let cfg = AttnConfig { bq: 8, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let engine = AttnEngine::builder().config(cfg).build();
+    let spec = |seed| AttnStreamSpec { prefill: 16, decode: 8, d: 16, seed };
+    let specs = [spec(61), spec(62), spec(63)];
+    let sequential: Vec<_> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| run_sequential(&engine, i as u64, &SeqStream::synth(s)))
+        .collect();
+    // each stream needs ceil(24/8) = 3 frames; 4 frames ≈ 1.3 streams
+    let mut mgr = SessionManager::new_paged(&engine, 64, PageAllocator::new(4, 8, 16, 16));
+    let done = drain(&mut mgr, &specs);
+    assert_eq!(done.len(), specs.len());
+    for (m, s) in done.iter().zip(&sequential) {
+        assert_eq!(m.out, s.out, "deferred admission changed output bits (id {})", m.id);
+        assert_eq!(m.stats, s.stats);
+    }
+    let ps = mgr.page_stats().expect("page stats");
+    assert!(ps.load_sheds > 0, "a 4-frame pool must shed under 3×3-frame load");
+    assert!(ps.peak_frames <= 4, "admission never oversubscribed the pool");
+}

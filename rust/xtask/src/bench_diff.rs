@@ -1,0 +1,329 @@
+//! bench-diff — compare two benchmark JSON snapshots (the `--json`
+//! artifacts the bench binaries write, e.g. `BENCH_fig10.json` /
+//! `BENCH_table8.json`) and render a markdown delta table.
+//!
+//! `cargo run -p xtask -- bench-diff <old.json> <new.json>` prints one
+//! row per numeric metric with the % change, classifies each metric's
+//! good direction from its key (throughput-like keys are
+//! higher-is-better; seconds/latency/allocation/bytes keys are
+//! lower-is-better; workload/config keys are context and only checked
+//! for equality), and exits non-zero when any metric moved more than
+//! 20% in the bad direction — CI downloads the previous run's artifact
+//! and posts the table to the step summary.
+//!
+//! Snapshots are nested objects of arrays of objects; metrics are
+//! addressed by a flattened dotted path. Array elements are labeled by
+//! their own identifying string members (`kernel`, `method`,
+//! `schedule`, …) plus id-like numeric members (`pool`, `sessions`),
+//! falling back to the element index — every bench emits its arrays in
+//! a deterministic order, so paths are stable across runs.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use sparge::util::json::Json;
+
+/// Relative change (in the bad direction) that counts as a regression.
+const GATE: f64 = 0.20;
+
+/// Numeric members that identify an array element or describe the
+/// workload/machine rather than measure it: never gated, folded into
+/// labels where possible, flagged only when they change.
+const CONTEXT_KEYS: &[&str] = &[
+    "pool", "threads", "scale", "sessions", "frames", "frame_bytes", "d", "seed", "prefill",
+    "decode", "n", "heads", "repeats",
+];
+
+/// Key fragments marking a lower-is-better metric (latency, memory,
+/// allocation, straggler percentiles). Checked before the
+/// higher-is-better list: `tok_s`/`*_rate` style names never match
+/// these fragments.
+const LOWER_BETTER: &[&str] = &[
+    "ttft", "tpot", "wall", "tick", "alloc", "bytes", "evictions", "load_sheds", "p50", "p95",
+    "p99", "latency", "_ms", "_us", "_ns", "overhead", "cow_splits",
+];
+
+/// Key fragments marking a higher-is-better metric (throughput, flop
+/// rate, reuse).
+const HIGHER_BETTER: &[&str] = &["tok_s", "gflops", "gops", "flops", "rate", "speedup", "hits"];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Direction {
+    Lower,
+    Higher,
+    Context,
+}
+
+fn classify(path: &str) -> Direction {
+    let leaf = path.rsplit('.').next().unwrap_or(path);
+    if CONTEXT_KEYS.contains(&leaf) {
+        return Direction::Context;
+    }
+    if LOWER_BETTER.iter().any(|f| leaf.contains(f)) {
+        return Direction::Lower;
+    }
+    if HIGHER_BETTER.iter().any(|f| leaf.contains(f)) {
+        return Direction::Higher;
+    }
+    // `*_s` with no other marker: a seconds measurement.
+    if leaf.ends_with("_s") {
+        return Direction::Lower;
+    }
+    Direction::Context
+}
+
+/// One compared metric.
+#[derive(Clone, Debug)]
+pub struct Delta {
+    pub path: String,
+    pub old: Option<f64>,
+    pub new: Option<f64>,
+    /// Signed relative change `new/old - 1`; `None` when either side is
+    /// missing or `old == 0`.
+    pub pct: Option<f64>,
+    pub regression: bool,
+}
+
+/// Label for an array element: identifying string members plus id-like
+/// numeric members, else the element index.
+fn element_label(v: &Json, index: usize) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    if let Json::Obj(pairs) = v {
+        for (k, val) in pairs {
+            match val {
+                Json::Str(s) => parts.push(s.clone()),
+                Json::Num(x) if CONTEXT_KEYS.contains(&k.as_str()) => {
+                    parts.push(format!("{k}={x}"));
+                }
+                _ => {}
+            }
+        }
+    }
+    if parts.is_empty() {
+        format!("{index}")
+    } else {
+        parts.join("/").replace('.', "_")
+    }
+}
+
+/// Flatten every numeric leaf into `(dotted.path, value)`.
+fn flatten(prefix: &str, v: &Json, out: &mut Vec<(String, f64)>) {
+    match v {
+        Json::Num(x) => out.push((prefix.to_string(), *x)),
+        Json::Obj(pairs) => {
+            for (k, val) in pairs {
+                let p = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                flatten(&p, val, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, it) in items.iter().enumerate() {
+                let p = format!("{prefix}.{}", element_label(it, i));
+                flatten(&p, it, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Compare two parsed snapshots: every metric present on either side,
+/// old-side order first, then new-only metrics.
+pub fn diff(old: &Json, new: &Json) -> Vec<Delta> {
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    flatten("", old, &mut a);
+    flatten("", new, &mut b);
+    let mut out = Vec::new();
+    for (path, ov) in &a {
+        let nv = b.iter().find(|(p, _)| p == path).map(|(_, v)| *v);
+        out.push(compare(path, Some(*ov), nv));
+    }
+    for (path, nv) in &b {
+        if !a.iter().any(|(p, _)| p == path) {
+            out.push(compare(path, None, Some(*nv)));
+        }
+    }
+    out
+}
+
+fn compare(path: &str, old: Option<f64>, new: Option<f64>) -> Delta {
+    let pct = match (old, new) {
+        (Some(o), Some(n)) if o != 0.0 => Some(n / o - 1.0),
+        _ => None,
+    };
+    let regression = match (classify(path), pct) {
+        (Direction::Lower, Some(p)) => p > GATE,
+        (Direction::Higher, Some(p)) => p < -GATE,
+        _ => false,
+    };
+    Delta { path: path.to_string(), old, new, pct, regression }
+}
+
+fn fmt_val(v: Option<f64>) -> String {
+    match v {
+        None => "—".to_string(),
+        Some(x) if x == 0.0 => "0".to_string(),
+        Some(x) if x.abs() >= 1000.0 => format!("{x:.0}"),
+        Some(x) if x.abs() >= 1.0 => format!("{x:.2}"),
+        Some(x) => format!("{x:.4}"),
+    }
+}
+
+/// Render the markdown delta table (CI posts this to the step summary).
+pub fn render(title: &str, deltas: &[Delta]) -> String {
+    let mut s = format!("### bench-diff: {title}\n\n");
+    s.push_str("| metric | old | new | Δ | status |\n|---|---:|---:|---:|---|\n");
+    for d in deltas {
+        let pct = match d.pct {
+            Some(p) => format!("{:+.1}%", p * 100.0),
+            None => "—".to_string(),
+        };
+        let status = if d.regression {
+            "**regression**"
+        } else if d.old.is_none() {
+            "new"
+        } else if d.new.is_none() {
+            "removed"
+        } else {
+            match classify(&d.path) {
+                Direction::Context => {
+                    if d.old == d.new {
+                        "context"
+                    } else {
+                        "context changed"
+                    }
+                }
+                _ => "ok",
+            }
+        };
+        s.push_str(&format!(
+            "| `{}` | {} | {} | {} | {} |\n",
+            d.path,
+            fmt_val(d.old),
+            fmt_val(d.new),
+            pct,
+            status
+        ));
+    }
+    let n = deltas.iter().filter(|d| d.regression).count();
+    if n > 0 {
+        s.push_str(&format!("\n**{n} metric(s) regressed more than {:.0}%.**\n", GATE * 100.0));
+    } else {
+        s.push_str(&format!("\nNo metric regressed more than {:.0}%.\n", GATE * 100.0));
+    }
+    s
+}
+
+/// CLI entry: load both snapshots, print the table, return the
+/// regression count (the caller turns >0 into a failing exit code).
+pub fn run_cli(old_path: &str, new_path: &str) -> Result<usize> {
+    let load = |p: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {p}: {e}"))
+    };
+    let old = load(old_path)?;
+    let new = load(new_path)?;
+    let title = Path::new(new_path)
+        .file_name()
+        .map(|f| f.to_string_lossy().into_owned())
+        .unwrap_or_else(|| new_path.to_string());
+    let deltas = diff(&old, &new);
+    print!("{}", render(&title, &deltas));
+    Ok(deltas.iter().filter(|d| d.regression).count())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn j(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn flattens_with_element_labels() {
+        let doc = j(r#"{"bench":"t8","threads":4,"decode_phase":[
+            {"pool":1,"tok_s":100.0},{"pool":2,"tok_s":190.0}]}"#);
+        let mut out = Vec::new();
+        flatten("", &doc, &mut out);
+        let paths: Vec<&str> = out.iter().map(|(p, _)| p.as_str()).collect();
+        assert!(paths.contains(&"threads"));
+        assert!(paths.contains(&"decode_phase.pool=1.tok_s"), "{paths:?}");
+        assert!(paths.contains(&"decode_phase.pool=2.pool"));
+    }
+
+    #[test]
+    fn string_members_label_elements() {
+        let doc = j(r#"{"sweep":[{"method":"sparge","target":"cos 0.95","gflops":9.0}]}"#);
+        let mut out = Vec::new();
+        flatten("", &doc, &mut out);
+        assert_eq!(out[0].0, "sweep.sparge/cos 0_95.gflops");
+    }
+
+    #[test]
+    fn direction_classification() {
+        assert_eq!(classify("decode_phase.pool=2.tok_s"), Direction::Higher);
+        assert_eq!(classify("mixed.sequential.ttft_p95_s"), Direction::Lower);
+        assert_eq!(classify("mixed.sequential.wall_s"), Direction::Lower);
+        assert_eq!(classify("paged.sessions=8.peak_bytes"), Direction::Lower);
+        assert_eq!(classify("paged.sessions=8.prefix_hits"), Direction::Higher);
+        assert_eq!(classify("threads"), Direction::Context);
+        assert_eq!(classify("paged.sessions=8.frame_bytes"), Direction::Context);
+    }
+
+    #[test]
+    fn gates_regressions_in_the_bad_direction_only() {
+        let old = j(r#"{"a":{"tok_s":100.0,"ttft_mean_s":0.10},"threads":4}"#);
+        // throughput -30% (regression), latency -50% (improvement),
+        // context change (not gated)
+        let new = j(r#"{"a":{"tok_s":70.0,"ttft_mean_s":0.05},"threads":8}"#);
+        let d = diff(&old, &new);
+        let find = |p: &str| d.iter().find(|x| x.path == p).unwrap();
+        assert!(find("a.tok_s").regression);
+        assert!(!find("a.ttft_mean_s").regression);
+        assert!(!find("threads").regression);
+        assert_eq!(d.iter().filter(|x| x.regression).count(), 1);
+    }
+
+    #[test]
+    fn improvement_and_small_moves_pass() {
+        let old = j(r#"{"a":{"tok_s":100.0,"wall_s":2.0}}"#);
+        let new = j(r#"{"a":{"tok_s":85.0,"wall_s":2.3}}"#);
+        // -15% throughput and +15% wall: both inside the 20% gate
+        assert_eq!(diff(&old, &new).iter().filter(|x| x.regression).count(), 0);
+        let faster = j(r#"{"a":{"tok_s":300.0,"wall_s":0.5}}"#);
+        assert_eq!(diff(&old, &faster).iter().filter(|x| x.regression).count(), 0);
+    }
+
+    #[test]
+    fn missing_and_new_metrics_do_not_gate() {
+        let old = j(r#"{"a":{"tok_s":100.0}}"#);
+        let new = j(r#"{"b":{"tok_s":10.0}}"#);
+        let d = diff(&old, &new);
+        assert_eq!(d.len(), 2);
+        assert!(d.iter().all(|x| !x.regression));
+        let md = render("t", &d);
+        assert!(md.contains("removed"));
+        assert!(md.contains("new"));
+    }
+
+    #[test]
+    fn render_flags_regressions() {
+        let old = j(r#"{"a":{"tok_s":100.0}}"#);
+        let new = j(r#"{"a":{"tok_s":10.0}}"#);
+        let md = render("BENCH_table8.json", &diff(&old, &new));
+        assert!(md.contains("**regression**"), "{md}");
+        assert!(md.contains("1 metric(s) regressed"), "{md}");
+        assert!(md.contains("-90.0%"), "{md}");
+    }
+
+    #[test]
+    fn zero_baseline_is_not_gated() {
+        let old = j(r#"{"a":{"allocs_per_token":0.0}}"#);
+        let new = j(r#"{"a":{"allocs_per_token":3.0}}"#);
+        let d = diff(&old, &new);
+        assert_eq!(d[0].pct, None);
+        assert!(!d[0].regression);
+    }
+}

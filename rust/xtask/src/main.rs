@@ -1,14 +1,18 @@
-//! Repo task runner. The only task so far is the repo-contract static
-//! analysis: `cargo run -p xtask -- lint` (see src/lint.rs and
-//! lint.toml; CONTRIBUTING.md has the full contract map).
+//! Repo task runner: `cargo run -p xtask -- lint` (repo-contract static
+//! analysis; see src/lint.rs and lint.toml) and `cargo run -p xtask --
+//! bench-diff <old.json> <new.json>` (benchmark snapshot comparison
+//! with a >20% regression gate; see src/bench_diff.rs). CONTRIBUTING.md
+//! has the full contract map.
 
 use std::process::ExitCode;
 
+mod bench_diff;
 mod config;
 mod lint;
 
 fn main() -> ExitCode {
-    match std::env::args().nth(1).as_deref() {
+    let args: Vec<String> = std::env::args().collect();
+    match args.get(1).map(String::as_str) {
         Some("lint") => match lint::run_cli() {
             Ok(0) => {
                 eprintln!("sparge-lint: tree is clean");
@@ -23,8 +27,27 @@ fn main() -> ExitCode {
                 ExitCode::FAILURE
             }
         },
+        Some("bench-diff") => match (args.get(2), args.get(3)) {
+            (Some(old), Some(new)) => match bench_diff::run_cli(old, new) {
+                Ok(0) => ExitCode::SUCCESS,
+                Ok(n) => {
+                    eprintln!("bench-diff: {n} regression(s) beyond the gate");
+                    ExitCode::FAILURE
+                }
+                Err(e) => {
+                    eprintln!("bench-diff: error: {e:#}");
+                    ExitCode::FAILURE
+                }
+            },
+            _ => {
+                eprintln!("usage: cargo run -p xtask -- bench-diff <old.json> <new.json>");
+                ExitCode::FAILURE
+            }
+        },
         _ => {
-            eprintln!("usage: cargo run -p xtask -- lint");
+            eprintln!(
+                "usage: cargo run -p xtask -- lint\n       cargo run -p xtask -- bench-diff <old.json> <new.json>"
+            );
             ExitCode::FAILURE
         }
     }
