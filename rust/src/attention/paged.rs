@@ -44,8 +44,11 @@
 //!
 //! **Zero-alloc warmed decode.** A warmed [`PagedAttnSession::decode_into`]
 //! step performs no heap allocation: frame claims pop a preallocated
-//! free list, pooled updates write preallocated per-frame arrays, and
-//! all per-step scratch comes from the session's [`Workspace`]/
+//! free list, pooled updates write preallocated per-frame arrays, the
+//! page table and staged sims are pre-sized to the stream's worst-case
+//! block count ([`PagedAttnSession::reserve_rows`] — so even a decode
+//! step that opens a new `b_k` block stays allocation-free), and all
+//! per-step scratch comes from the session's [`Workspace`]/
 //! [`SpanPlan`] arenas (`tests/alloc_regression.rs`).
 //!
 //! **Exhaustion is a value.** [`PageAllocator::claim`] returns `None`
@@ -55,11 +58,16 @@
 //!
 //! ## Copy-on-write prefix sharing
 //!
-//! Two sessions opened from the same prompt hash map the *same* frames:
-//! [`PagedAttnSession::prefill_shared`] hashes the prompt's K/V bits,
-//! and on a [`PrefixRegistry`] hit retains the lender's frames
+//! Two sessions opened from the same prompt map the *same* frames:
+//! [`PagedAttnSession::prefill_shared`] hashes the prompt's Q/K/V bits
+//! (Q included — the prefill output a borrower adopts is a function of
+//! its query rows, not just the cache), and on a [`PrefixRegistry`] hit
+//! — a hash match *confirmed by byte comparison* of the stored query
+//! rows and the frame-resident K/V rows against the incoming prompt, so
+//! a 64-bit hash collision degrades to a registry miss instead of
+//! silent cross-request adoption — retains the lender's frames
 //! (refcounts), adopts the cached prefill output rows (bitwise — they
-//! were computed from the very same frame bits), and skips the prefill
+//! were computed from the very same prompt bits), and skips the prefill
 //! compute entirely. Frames stay shared until a writer must touch a
 //! *partially filled* tail frame: the first divergent append CoW-splits
 //! just that frame ([`PageAllocator::cow`]); full shared frames are
@@ -492,10 +500,13 @@ impl ScoreKernel for PagedQuantKernel<'_> {
     }
 }
 
-/// FNV-1a 64 over a prompt's K/V bits (dims folded in) — the
-/// [`PrefixRegistry`] key. Exact bit equality, no float tolerance: two
-/// prompts share frames only when their caches would be identical.
-pub fn prefix_hash(k: &Tensor, v: &Tensor) -> u64 {
+/// FNV-1a 64 over a prompt's Q/K/V bits (dims folded in) — the
+/// [`PrefixRegistry`] key. Q participates because a registry hit adopts
+/// the cached prefill *output*, which is a function of the query rows,
+/// not just of the K/V cache. Exact bit equality, no float tolerance —
+/// and the hash is only a fast filter: a hit is confirmed by byte
+/// comparison before any sharing (see [`PrefixRegistry`]).
+pub fn prefix_hash(q: &Tensor, k: &Tensor, v: &Tensor) -> u64 {
     const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
     const PRIME: u64 = 0x0000_0100_0000_01b3;
     let mut h = OFFSET;
@@ -504,8 +515,12 @@ pub fn prefix_hash(k: &Tensor, v: &Tensor) -> u64 {
         h = h.wrapping_mul(PRIME);
     };
     mix(k.dim(0) as u64);
+    mix(q.dim(1) as u64);
     mix(k.dim(1) as u64);
     mix(v.dim(1) as u64);
+    for &x in q.data() {
+        mix(x.to_bits() as u64);
+    }
     for &x in k.data() {
         mix(x.to_bits() as u64);
     }
@@ -515,6 +530,12 @@ pub fn prefix_hash(k: &Tensor, v: &Tensor) -> u64 {
     h
 }
 
+/// Exact bit equality of two f32 slices (NaN-safe: compared as bits, so
+/// a NaN payload mismatch is a mismatch, never a spurious match).
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
 /// One registered shared prompt prefix: the frames (the registry holds
 /// one refcount on each), the cached prefill result, and the session
 /// state a borrower must adopt to stay bitwise-consistent.
@@ -522,6 +543,10 @@ struct PrefixEntry {
     hash: u64,
     rows: usize,
     frames: Vec<usize>,
+    /// The lender's query rows, verbatim: the cached `out` below is a
+    /// function of Q, so a borrower must present bit-identical query
+    /// rows — the K/V side is verified against the frames themselves.
+    q: Tensor,
     /// Frozen K-smoothing mean the lender quantized the shared frames
     /// with (INT8 engines); borrowers adopt it so the shared payloads
     /// stay consistent with their own later appends.
@@ -532,10 +557,13 @@ struct PrefixEntry {
     hits: u64,
 }
 
-/// Registry of shared prompt prefixes, keyed on [`prefix_hash`]. The
-/// registry retains its own reference on every registered frame, so a
-/// prefix outlives the session that created it until
-/// [`PrefixRegistry::clear`] releases it.
+/// Registry of shared prompt prefixes, keyed on [`prefix_hash`]. A hash
+/// hit is never trusted on its own: the candidate's stored query rows
+/// and frame-resident K/V rows are byte-compared against the incoming
+/// prompt before sharing, so a 64-bit collision maps nothing — it just
+/// misses and recomputes. The registry retains its own reference on
+/// every registered frame, so a prefix outlives the session that
+/// created it until [`PrefixRegistry::clear`] releases it.
 #[derive(Default)]
 pub struct PrefixRegistry {
     entries: Vec<PrefixEntry>,
@@ -560,8 +588,34 @@ impl PrefixRegistry {
         self.entries.iter().map(|e| e.hits).sum()
     }
 
-    fn find(&self, hash: u64, rows: usize) -> Option<usize> {
-        self.entries.iter().position(|e| e.hash == hash && e.rows == rows)
+    fn find(&self, alloc: &PageAllocator, hash: u64, q: &Tensor, k: &Tensor, v: &Tensor) -> Option<usize> {
+        self.entries.iter().position(|e| {
+            e.hash == hash
+                && e.rows == k.dim(0)
+                && bits_eq(e.q.data(), q.data())
+                && Self::frames_match(alloc, &e.frames, k, v)
+        })
+    }
+
+    /// Byte-verify a candidate entry: every frame's resident K/V rows
+    /// must equal the incoming prompt's bit for bit. Shared frames are
+    /// never written in place (full frames are read-only by the CoW
+    /// discipline, and the registry's own reference forces a CoW split
+    /// on any tail write), so the frames still hold the exact bits the
+    /// entry was registered with.
+    fn frames_match(alloc: &PageAllocator, frames: &[usize], k: &Tensor, v: &Tensor) -> bool {
+        let (bk, d, dv) = (alloc.bk, alloc.d, alloc.dv);
+        let rows = k.dim(0);
+        if k.dim(1) != d || v.dim(1) != dv || frames.len() != rows.div_ceil(bk) {
+            return false;
+        }
+        frames.iter().enumerate().all(|(b, &f)| {
+            let r0 = b * bk;
+            let r = alloc.prow[f];
+            r == (rows - r0).min(bk)
+                && bits_eq(&alloc.k[f * bk * d..f * bk * d + r * d], &k.data()[r0 * d..(r0 + r) * d])
+                && bits_eq(&alloc.v[f * bk * dv..f * bk * dv + r * dv], &v.data()[r0 * dv..(r0 + r) * dv])
+        })
     }
 
     /// Reclaim one registered prefix under memory pressure: drop the
@@ -705,6 +759,19 @@ impl<'e> PagedAttnSession<'e> {
         rows.div_ceil(bk)
     }
 
+    /// Pre-size the page table and the predictor's staged sims for a
+    /// stream of `rows` total K/V rows, so no later frame claim grows
+    /// them — this is what makes a warmed decode step that opens a new
+    /// `b_k` block allocation-free, the paged twin of the monolithic
+    /// session's `reserve_rows` amortization. The serving manager calls
+    /// this at admission with the stream's full length; standalone
+    /// sessions that skip it fall back to `Vec`'s amortized doubling.
+    pub fn reserve_rows(&mut self, alloc: &PageAllocator, rows: usize) {
+        let blocks = Self::frames_for_rows(rows, alloc.bk);
+        self.frames.reserve(blocks.saturating_sub(self.frames.len()));
+        self.pred_sims.reserve(blocks.saturating_sub(self.pred_sims.len()));
+    }
+
     fn pooled(&self) -> bool {
         matches!(self.engine.policy(), SparsityPolicy::Predicted { .. })
     }
@@ -834,12 +901,14 @@ impl<'e> PagedAttnSession<'e> {
         Some(AttnOutput { out, stats, mask })
     }
 
-    /// Prefill through the shared-prefix registry: on a hash hit the
-    /// session maps the lender's frames (refcounted, zero new frames for
-    /// the prefix), adopts the cached prefill rows bitwise, and skips
-    /// the compute; on a miss it prefills normally and registers the
-    /// result. `None` on frame exhaustion (miss path only), session
-    /// untouched.
+    /// Prefill through the shared-prefix registry: on a hit (hash match
+    /// byte-verified against the stored query rows and frame contents)
+    /// the session maps the lender's frames (refcounted, zero new frames
+    /// for the prefix), adopts the cached prefill rows bitwise, and
+    /// skips the compute; on a miss — including a prompt whose K/V match
+    /// a registered entry but whose Q differs, since the cached output
+    /// depends on Q — it prefills normally and registers the result.
+    /// `None` on frame exhaustion (miss path only), session untouched.
     pub fn prefill_shared(
         &mut self,
         alloc: &mut PageAllocator,
@@ -849,8 +918,9 @@ impl<'e> PagedAttnSession<'e> {
         v: &Tensor,
     ) -> Option<AttnOutput> {
         assert_eq!(self.rows, 0, "prefill_shared opens a session");
-        let h = prefix_hash(k, v);
-        if let Some(i) = registry.find(h, k.dim(0)) {
+        assert_eq!(q.dim(0), k.dim(0), "prefill chunk q/k rows");
+        let h = prefix_hash(q, k, v);
+        if let Some(i) = registry.find(alloc, h, q, k, v) {
             let entry = &mut registry.entries[i];
             entry.hits += 1;
             alloc.prefix_hits += 1;
@@ -875,6 +945,7 @@ impl<'e> PagedAttnSession<'e> {
             hash: h,
             rows: self.rows,
             frames: self.frames.clone(),
+            q: q.clone(),
             kmean: self.kmean.clone(),
             out: r.out.clone(),
             stats: r.stats,
@@ -1241,5 +1312,67 @@ impl<'e> PagedAttnSession<'e> {
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn prompt(n: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Pcg::seeded(seed);
+        (
+            Tensor::randn(&[n, d], &mut rng),
+            Tensor::randn(&[n, d], &mut rng),
+            Tensor::randn(&[n, d], &mut rng),
+        )
+    }
+
+    #[test]
+    fn registry_hit_is_byte_verified_never_hash_trusted() {
+        // A 64-bit hash match alone must not map another prompt's frames
+        // or output into a session: `find` byte-compares the stored query
+        // rows and the frame-resident K/V rows, so a forged (colliding)
+        // hash degrades to a miss — a recompute, never silent
+        // cross-request KV/output adoption.
+        let d = 8;
+        let cfg = AttnConfig { bq: 8, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+        let engine = AttnEngine::builder().config(cfg).build();
+        let mut alloc = PageAllocator::new(8, 8, d, d);
+        let mut reg = PrefixRegistry::new();
+        let (qa, ka, va) = prompt(12, d, 7001);
+        let mut lender = engine.paged_session();
+        lender.prefill_shared(&mut alloc, &mut reg, &qa, &ka, &va).expect("frames");
+        assert_eq!(reg.len(), 1);
+
+        // a different prompt whose hash is forged onto the entry: the
+        // stored frames still hold prompt A's bytes, so lookup must miss
+        let (qb, kb, vb) = prompt(12, d, 7002);
+        let forged = prefix_hash(&qb, &kb, &vb);
+        reg.entries[0].hash = forged;
+        assert!(
+            reg.find(&alloc, forged, &qb, &kb, &vb).is_none(),
+            "colliding hash with mismatched K/V bytes must miss"
+        );
+
+        // same K/V, different Q, hash forged to collide: the K/V frames
+        // match byte for byte, but the stored query rows differ — still
+        // a miss, because the cached output is a function of Q
+        let forged_q = prefix_hash(&qb, &ka, &va);
+        reg.entries[0].hash = forged_q;
+        assert!(
+            reg.find(&alloc, forged_q, &qb, &ka, &va).is_none(),
+            "colliding hash with mismatched Q bytes must miss"
+        );
+
+        // the genuine prompt (hash restored) still hits
+        let real = prefix_hash(&qa, &ka, &va);
+        reg.entries[0].hash = real;
+        assert_eq!(reg.find(&alloc, real, &qa, &ka, &va), Some(0));
+
+        lender.release(&mut alloc);
+        reg.clear(&mut alloc);
+        assert_eq!(alloc.stats().frames_in_use, 0);
     }
 }

@@ -51,7 +51,9 @@
 //! copy-on-write, each decode step splits into a serial frame-claim
 //! half and a batched compute half over the read-only allocator, and a
 //! decode claim that outruns the free list (a CoW split or re-page-in)
-//! spills the least-recently-advanced resident session to make room. For
+//! spills the least-recently-advanced resident session to make room —
+//! never one that already ran its append half this tick, whose pending
+//! compute half still needs its page table. For
 //! f32/λ-off engines the paged manager's outputs and stats are
 //! bitwise-identical to the monolithic one's (`tests/paged_kv.rs`).
 //!
@@ -491,6 +493,7 @@ impl<'e> SessionManager<'e> {
         let d = stream.q.dim(1);
         let dv = stream.v.dim(1);
         let total = stream.len() * dv;
+        let steps = stream.decode_steps();
         self.active.push(ActiveSeq {
             id,
             session,
@@ -507,7 +510,9 @@ impl<'e> SessionManager<'e> {
             arrived,
             compute: 0.0,
             ttft: None,
-            tpot: Vec::new(),
+            // one sample per output token after the first: reserved up
+            // front so warmed ticks never grow it mid-flight
+            tpot: Vec::with_capacity(steps.saturating_sub(1)),
             last_advanced: self.ticks,
             pending_dt: 0.0,
         });
@@ -515,17 +520,25 @@ impl<'e> SessionManager<'e> {
 
     /// Spill the least-recently-advanced resident decode-phase session
     /// other than `exclude` (its frames recycle; it transparently
-    /// re-pages-in on its next decode). `false` when no session is
+    /// re-pages-in on its next decode). Sessions stamped `tick` are never
+    /// candidates: a stamp equal to the current tick means the session
+    /// already ran its serial append half this tick and its batched
+    /// compute half is still pending — spilling it in between would hand
+    /// `decode_step` an empty page table. `false` when no session is
     /// evictable.
     fn evict_lru(
         active: &mut [ActiveSeq<'_>],
         alloc: &mut PageAllocator,
+        tick: u64,
         exclude: Option<usize>,
     ) -> bool {
         let mut best: Option<usize> = None;
         for (i, s) in active.iter().enumerate() {
             if Some(i) == exclude {
                 continue; // never spill the session we are advancing
+            }
+            if s.last_advanced == tick {
+                continue; // mid-step this tick: append done, compute pending
             }
             if s.prefilled < s.stream.prefill {
                 continue; // mid-prompt sessions keep their frames
@@ -673,7 +686,11 @@ impl<'e> SessionManager<'e> {
                 break;
             }
             let Some((id, stream, arrived)) = p.pending.pop_front() else { break };
-            let session = SeqSession::Paged(self.engine.paged_session());
+            let mut paged = self.engine.paged_session();
+            // page table + staged sims sized to the stream's worst case
+            // now, so boundary-crossing decode claims stay zero-alloc
+            paged.reserve_rows(&p.alloc, stream.len());
+            let session = SeqSession::Paged(paged);
             self.push_active(id, stream, arrived, session);
         }
         // 2) phase snapshot + serial prefill (same structure as the
@@ -702,14 +719,17 @@ impl<'e> SessionManager<'e> {
             // A CoW split (and the +1 it claims beyond the session's
             // admission reservation) or a re-page-in can outrun the free
             // list: reclaim unreferenced prefix frames first, then spill
-            // the least-recently-advanced OTHER resident session, and
-            // only shed (skip this tick, retry next) when neither frees
-            // anything. Each retry either shrinks the registry or the
-            // resident set, so the loop terminates.
+            // the least-recently-advanced resident session that is NOT
+            // mid-step this tick (neither the one we are advancing nor
+            // one that already claimed its tail frame and is awaiting
+            // its batched compute half), and only shed (skip this tick,
+            // retry next) when neither frees anything. Each retry either
+            // shrinks the registry or the resident set, so the loop
+            // terminates.
             let mut ok = self.active[i].begin_decode_paged(&mut p.alloc, tick);
             while !ok {
                 if !(p.registry.shed(&mut p.alloc)
-                    || Self::evict_lru(&mut self.active, &mut p.alloc, Some(i)))
+                    || Self::evict_lru(&mut self.active, &mut p.alloc, tick, Some(i)))
                 {
                     p.alloc.note_load_shed();
                     break;

@@ -239,10 +239,13 @@ fn warmed_up_decode_steps_allocate_nothing() {
 
     // -- Paged SessionManager ticks: admission + frames, still zero -----
     // Same traffic over a paged pool: with the pending queue drained the
-    // reservation-based admission check breaks immediately, and the
-    // measured decode appends (cache rows 71..78 per session) cross no
-    // frame boundary (claims fire at rows 64 and 80), so a warmed paged
-    // serving tick — frame bookkeeping included — allocates nothing.
+    // reservation-based admission check breaks immediately. Unlike the
+    // monolithic window above, the measured decode appends (cache rows
+    // 64..70 per session) deliberately CROSS a frame boundary — the
+    // claims at rows 64 are each session's fifth page-table entry, which
+    // without the admission-time `PagedAttnSession::reserve_rows`
+    // pre-size would reallocate the table mid-step — so a warmed paged
+    // serving tick allocates nothing even while claiming fresh frames.
     {
         use sparge::attention::PageAllocator;
         use sparge::coordinator::{SeqStream, SessionManager};
@@ -256,8 +259,8 @@ fn warmed_up_decode_steps_allocate_nothing() {
             let v = Tensor::randn(&[96, D], &mut rng);
             mgr.admit(i, SeqStream { q, k, v, prefill: 32 }, Instant::now());
         }
-        for _ in 0..40 {
-            mgr.tick(); // admission + prefill tick, then warmup decode ticks
+        for _ in 0..33 {
+            mgr.tick(); // admission + prefill tick, then warmup to cache row 64
         }
         let before = thread_allocations();
         for _ in 0..7 {
@@ -266,6 +269,8 @@ fn warmed_up_decode_steps_allocate_nothing() {
         }
         let delta = thread_allocations() - before;
         assert_eq!(delta, 0, "warmed paged serving tick allocated ({delta} / 7 ticks of 3 sessions)");
+        let ps = mgr.page_stats().expect("paged manager has page stats");
+        assert_eq!(ps.claims, 15, "the measured window claimed each session's fifth frame");
     }
 
     // -- Pool execution: workers' own arenas absorb the span scratch ----

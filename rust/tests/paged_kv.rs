@@ -244,6 +244,98 @@ fn prefix_sharing_saves_frames_and_keeps_outputs_bitwise() {
 }
 
 #[test]
+fn prefix_hit_requires_matching_query_rows() {
+    // Attention output is a function of Q: two prompts with identical
+    // K/V but different Q must NOT adopt each other's cached prefill
+    // output — the prefix key covers the query rows too, so the second
+    // prompt misses, computes its own (correct) rows, and registers a
+    // separate entry. A replay with the first prompt's exact Q still
+    // hits.
+    let d = 16;
+    let n = 20;
+    let (qa, k, v) = qkv(n, d, 941);
+    let mut rng = Pcg::seeded(942);
+    let qb = Tensor::randn(&[n, d], &mut rng);
+    let cfg = AttnConfig { bq: 8, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let engine = AttnEngine::builder().config(cfg).build();
+    let ma = engine.session().prefill(&qa, &k, &v);
+    let mb = engine.session().prefill(&qb, &k, &v);
+    assert_ne!(ma.out, mb.out, "distinct Q must give distinct baselines");
+
+    let mut alloc = PageAllocator::new(16, 8, d, d);
+    let mut reg = PrefixRegistry::new();
+    let mut s1 = engine.paged_session();
+    let mut s2 = engine.paged_session();
+    let r1 = s1.prefill_shared(&mut alloc, &mut reg, &qa, &k, &v).expect("frames");
+    let r2 = s2.prefill_shared(&mut alloc, &mut reg, &qb, &k, &v).expect("frames");
+    assert_eq!(r1.out, ma.out, "lender prefill bits");
+    assert_eq!(r2.out, mb.out, "same K/V with different Q must not adopt the lender's output");
+    assert_eq!(alloc.stats().prefix_hits, 0, "Q participates in the prefix key");
+    assert_eq!(reg.len(), 2, "the Q-mismatched prompt registers its own entry");
+
+    // bit-identical replay of the first prompt still shares
+    let mut s3 = engine.paged_session();
+    let r3 = s3.prefill_shared(&mut alloc, &mut reg, &qa, &k, &v).expect("frames");
+    assert_eq!(r3.out, ma.out);
+    assert_eq!(alloc.stats().prefix_hits, 1);
+
+    s1.release(&mut alloc);
+    s2.release(&mut alloc);
+    s3.release(&mut alloc);
+    reg.clear(&mut alloc);
+    assert_eq!(alloc.stats().frames_in_use, 0);
+}
+
+#[test]
+fn mid_tick_append_half_is_never_evicted() {
+    // Regression (high): under frame exhaustion the LRU eviction cascade
+    // must never spill a session that already ran its serial append half
+    // this tick — its batched compute half is still pending and would
+    // run `decode_step` over an empty page table. Construction: A and B
+    // share a two-frame prompt whose full first frame stays shared for
+    // both lifetimes (so `PrefixRegistry::shed` can't rescue the pool),
+    // C is admitted one tick later and its claims consume the admission
+    // slack; the unreserved CoW/boundary claims then exhaust the free
+    // list mid-tick and the cascade (A starves → evicts B → B's
+    // re-page-in starves → only mid-step sessions remain) must load-shed
+    // instead of evicting a session between its halves. Every stream
+    // must still retire with the sequential baseline's exact bits.
+    let cfg = AttnConfig { bq: 8, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let engine = AttnEngine::builder().config(cfg).build();
+    let shared = AttnStreamSpec { prefill: 12, decode: 8, d: 16, seed: 951 };
+    let other = AttnStreamSpec { prefill: 16, decode: 8, d: 16, seed: 952 };
+    let specs = [shared, shared, other];
+    let sequential: Vec<_> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| run_sequential(&engine, i as u64, &SeqStream::synth(s)))
+        .collect();
+
+    let mut mgr = SessionManager::new_paged(&engine, 16, PageAllocator::new(7, 8, 16, 16));
+    let t0 = Instant::now();
+    mgr.admit(0, SeqStream::synth(&specs[0]), t0);
+    mgr.admit(1, SeqStream::synth(&specs[1]), t0);
+    let mut done = mgr.tick(); // A prefills (2 frames), B prefix-hits
+    mgr.admit(2, SeqStream::synth(&specs[2]), t0);
+    for _ in 0..10_000 {
+        done.extend(mgr.tick());
+        if mgr.active() == 0 && mgr.pending() == 0 {
+            break;
+        }
+    }
+    assert!(mgr.active() == 0 && mgr.pending() == 0, "manager failed to drain under pressure");
+    done.sort_by_key(|r| r.id);
+    assert_eq!(done.len(), specs.len());
+    for (m, s) in done.iter().zip(&sequential) {
+        assert_eq!(m.out, s.out, "eviction cascade changed output bits (id {})", m.id);
+        assert_eq!(m.stats, s.stats, "eviction cascade changed stats (id {})", m.id);
+    }
+    let ps = mgr.page_stats().expect("page stats");
+    assert!(ps.evictions > 0, "the scenario must actually exercise LRU eviction");
+    assert!(ps.load_sheds > 0, "the cascade must shed when only mid-step sessions remain");
+}
+
+#[test]
 fn evict_and_repage_in_decode_is_bitwise() {
     // A session evicted mid-decode (frames spilled and released) must,
     // after transparent re-page-in, keep producing the exact bits of a
