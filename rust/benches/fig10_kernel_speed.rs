@@ -287,9 +287,9 @@ fn main() {
     let short_prefill = 128;
     let steps = 32;
     let mut ragged_specs =
-        vec![AttnStreamSpec { prefill: long_prefill, decode: steps, d: 64, seed: 1700 }];
+        vec![AttnStreamSpec { prefill: long_prefill, decode: steps, d: 64, seed: 1700, ..Default::default() }];
     for i in 0..7u64 {
-        ragged_specs.push(AttnStreamSpec { prefill: short_prefill, decode: steps, d: 64, seed: 1701 + i });
+        ragged_specs.push(AttnStreamSpec { prefill: short_prefill, decode: steps, d: 64, seed: 1701 + i, ..Default::default() });
     }
     println!(
         "\nragged-tail stragglers — 1 long (cache {long_prefill}) + 7 short (cache {short_prefill}) \

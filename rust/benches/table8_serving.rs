@@ -59,6 +59,19 @@ struct Run {
     ttft: Vec<f64>,
     tpot: Vec<f64>,
     wall: f64,
+    outcomes: Outcomes,
+}
+
+/// Fault-tier outcome counters for one schedule (all zero on a healthy
+/// run — the JSON schema carries them so a chaos-flagged serving
+/// regression is visible in the perf-trajectory artifact too).
+#[derive(Default)]
+struct Outcomes {
+    quarantined: u64,
+    deadline_cancelled: u64,
+    shed: u64,
+    injected_faults: u64,
+    drain_ms: f64,
 }
 
 fn summarize(label: &str, r: &Run, table: &mut Table, json: &mut Vec<Json>) {
@@ -88,6 +101,11 @@ fn summarize(label: &str, r: &Run, table: &mut Table, json: &mut Vec<Json>) {
         ("tpot_mean_s", Json::num(tpot_mean)),
         ("tpot_p95_s", Json::num(tpot_p95)),
         ("wall_s", Json::num(r.wall)),
+        ("quarantined", Json::num(r.outcomes.quarantined as f64)),
+        ("deadline_cancelled", Json::num(r.outcomes.deadline_cancelled as f64)),
+        ("shed", Json::num(r.outcomes.shed as f64)),
+        ("injected_faults", Json::num(r.outcomes.injected_faults as f64)),
+        ("drain_ms", Json::num(r.outcomes.drain_ms)),
     ]));
 }
 
@@ -111,7 +129,7 @@ fn sequential_run(opts: &ServeOptions, specs: &[AttnStreamSpec]) -> Run {
         tokens += r.tokens;
     }
     let wall = t0.elapsed().as_secs_f64();
-    Run { tokens_per_sec: tokens as f64 / wall, ttft, tpot, wall }
+    Run { tokens_per_sec: tokens as f64 / wall, ttft, tpot, wall, outcomes: Outcomes::default() }
 }
 
 fn continuous_run(opts: &ServeOptions, max_batch: usize, specs: &[AttnStreamSpec]) -> Run {
@@ -134,8 +152,24 @@ fn continuous_run(opts: &ServeOptions, max_batch: usize, specs: &[AttnStreamSpec
         tokens += r.tokens;
     }
     let wall = t0.elapsed().as_secs_f64();
+    // drain telemetry (drain duration, injected-fault count) is recorded
+    // by the serve loop on shutdown, so snapshot after joining it
+    let metrics = std::sync::Arc::clone(&c.metrics);
     c.shutdown();
-    Run { tokens_per_sec: tokens as f64 / wall, ttft, tpot: tpot_mean, wall }
+    let s = metrics.snapshot();
+    Run {
+        tokens_per_sec: tokens as f64 / wall,
+        ttft,
+        tpot: tpot_mean,
+        wall,
+        outcomes: Outcomes {
+            quarantined: s.quarantined,
+            deadline_cancelled: s.deadline_cancelled,
+            shed: s.shed,
+            injected_faults: s.injected_faults,
+            drain_ms: s.drain_duration * 1e3,
+        },
+    }
 }
 
 /// Decode-phase measurements for one schedule: throughput, per-session
@@ -214,13 +248,14 @@ fn main() {
         cfg: AttnConfig::causal(),
         threads,
         kv_split: KvSplit::Auto,
+        fault: None,
     };
     // mixed traffic: short, medium, and long prompts, all decode-heavy
     // enough that interleaving matters
     let mut specs = Vec::new();
     for i in 0..12u64 {
         let prefill = [256, 512, 1024][i as usize % 3] * scale;
-        specs.push(AttnStreamSpec { prefill, decode: 24, d: 64, seed: 900 + i });
+        specs.push(AttnStreamSpec { prefill, decode: 24, d: 64, seed: 900 + i, ..Default::default() });
     }
     println!(
         "Table 8 — serving: continuous batching vs sequential run_one \
@@ -251,7 +286,7 @@ fn main() {
     // size. Prefill is untimed; per-session sparsity must not move with
     // the schedule.
     let batch_specs: Vec<AttnStreamSpec> = (0..6u64)
-        .map(|i| AttnStreamSpec { prefill: 256 * scale, decode: 48, d: 64, seed: 950 + i })
+        .map(|i| AttnStreamSpec { prefill: 256 * scale, decode: 48, d: 64, seed: 950 + i, ..Default::default() })
         .collect();
     println!(
         "\ndecode-phase throughput — {} concurrent streams, prefill {} (untimed), 48 tokens each",
@@ -301,7 +336,7 @@ fn main() {
     // A lone decoding stream has no cross-session parallelism to offer;
     // split-KV is what lets its 1-row steps use the pool, by fanning
     // contiguous KV spans across workers.
-    let solo_spec = [AttnStreamSpec { prefill: 1024 * scale, decode: 32, d: 64, seed: 977 }];
+    let solo_spec = [AttnStreamSpec { prefill: 1024 * scale, decode: 32, d: 64, seed: 977, ..Default::default() }];
     println!(
         "\nsingle-session decode — cache {} keys, 32 steps: split-KV on vs off per pool size",
         1024 * scale
@@ -379,7 +414,7 @@ fn main() {
             // seeds 0,0,1,1,…: each odd admission replays the previous
             // prompt and should hit the prefix registry
             let spec =
-                AttnStreamSpec { prefill: paged_prefill, decode: 24, d: 64, seed: 980 + i / 2 };
+                AttnStreamSpec { prefill: paged_prefill, decode: 24, d: 64, seed: 980 + i / 2, ..Default::default() };
             mgr.admit(i, SeqStream::synth(&spec), Instant::now());
         }
         let mut done = Vec::new();

@@ -167,6 +167,10 @@ pub struct PageAllocator {
     prefix_hits: u64,
     evictions: u64,
     load_sheds: u64,
+    /// Remaining artificial claim denials (fault injection): while
+    /// nonzero, `claim` reports exhaustion and decrements. Always 0
+    /// outside injected-fault runs — one compare on the claim path.
+    deny_claims: u64,
 }
 
 impl PageAllocator {
@@ -196,6 +200,7 @@ impl PageAllocator {
             prefix_hits: 0,
             evictions: 0,
             load_sheds: 0,
+            deny_claims: 0,
         }
     }
 
@@ -264,10 +269,52 @@ impl PageAllocator {
         self.load_sheds += 1;
     }
 
+    /// Fault injection: deny the next `n` `claim` calls as if the pool
+    /// were exhausted (each denial takes the identical `None` path a
+    /// real dry pool takes). Cumulative; cleared as claims arrive.
+    pub fn inject_exhaustion(&mut self, n: u64) {
+        self.deny_claims += n;
+    }
+
+    /// Artificial denials still pending (nonzero only mid-injection).
+    pub fn pending_denials(&self) -> u64 {
+        self.deny_claims
+    }
+
+    /// Frame-leak check for tests and drain: every frame must be back on
+    /// the free list with refcount 0. Any leaked frame (or a
+    /// `PrefixRegistry` still holding a refcount) fails loudly with the
+    /// offending frame ids.
+    pub fn assert_all_free(&self) {
+        assert_eq!(
+            self.frames_in_use, 0,
+            "frame leak: {} frames still in use of {}",
+            self.frames_in_use,
+            self.capacity()
+        );
+        assert_eq!(
+            self.free.len(),
+            self.capacity(),
+            "frame leak: free list holds {} of {} frames",
+            self.free.len(),
+            self.capacity()
+        );
+        let held: Vec<usize> =
+            (0..self.rc.len()).filter(|&f| self.rc[f] != 0).collect();
+        assert!(held.is_empty(), "frame leak: frames {held:?} still refcounted");
+    }
+
     /// Claim one free frame (refcount 1, zeroed pooled state), or `None`
     /// when the pool is dry — exhaustion is a value, never a panic. Pops
     /// the preallocated free list: no allocation.
     pub fn claim(&mut self) -> Option<usize> {
+        if self.deny_claims > 0 {
+            // injected exhaustion: report a dry pool through the normal
+            // value path, so recovery machinery sees exactly what a real
+            // exhaustion produces
+            self.deny_claims -= 1;
+            return None;
+        }
         let f = self.free.pop()?;
         self.rc[f] = 1;
         self.prow[f] = 0;

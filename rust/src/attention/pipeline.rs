@@ -184,6 +184,49 @@ impl Exec<'_> {
             Exec::Pool(p) => p.run_ws(n, ws, &f),
         }
     }
+
+    /// [`Exec::for_each_ws`] for callers that own a fault domain: a
+    /// panicking index is *attributed* instead of re-raised. Returns the
+    /// sorted indices whose invocation panicked — empty on a clean run,
+    /// and an empty `Vec` never allocates, so the fault-free fan-out
+    /// stays zero-alloc. Every index still runs exactly once regardless
+    /// of other indices' failures, in every execution mode.
+    pub fn try_for_each_ws(
+        &self,
+        n: usize,
+        ws: &mut Workspace,
+        f: impl Fn(usize, &mut Workspace) + Sync,
+    ) -> Vec<usize> {
+        match self {
+            Exec::Inline => {
+                // sparge-lint: allow(hot-path-no-alloc) — empty Vec;
+                // grows only on the fault path (an index panicked)
+                let mut bad = Vec::new();
+                for i in 0..n {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, &mut *ws)));
+                    if r.is_err() {
+                        bad.push(i);
+                    }
+                }
+                bad
+            }
+            Exec::Threads(t) => {
+                // sparge-lint: allow(hot-path-no-alloc) — empty Vec;
+                // grows only on the fault path (an index panicked)
+                let bad = Mutex::new(Vec::new());
+                threadpool::parallel_for_ws(n, *t, |i, ws| {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, &mut *ws)));
+                    if r.is_err() {
+                        bad.lock().unwrap().push(i);
+                    }
+                });
+                let mut bad = bad.into_inner().unwrap();
+                bad.sort_unstable();
+                bad
+            }
+            Exec::Pool(p) => p.run_ws_caught(n, ws, &f),
+        }
+    }
 }
 
 /// Per-query-tile online-softmax state: running row maxima `m`, partition

@@ -1,0 +1,232 @@
+//! Deterministic fault injection for the serving loop.
+//!
+//! A [`FaultPlan`] is a seeded schedule of failures — worker-job panics,
+//! artificial frame exhaustion, slow-worker stalls, poisoned (NaN)
+//! decode inputs — that the `SessionManager` consults at tick
+//! boundaries. The plan is the *injection* seam only: the recovery
+//! machinery (quarantine, deadline cancellation, drain) is always
+//! compiled in and always armed; the plan merely makes the failure
+//! paths fire on demand so the chaos suite (`tests/chaos_serving.rs`)
+//! can drive hundreds of seeded schedules and assert the loop's
+//! invariants hold under every one.
+//!
+//! Contracts:
+//! - **Deterministic**: the same seed yields the same schedule, and the
+//!   manager applies events in a fixed order (event order within a
+//!   tick, session order within an event), so a chaos failure replays
+//!   exactly from its seed.
+//! - **Zero cost when absent**: the manager holds an
+//!   `Option<FaultPlan>`; with `None` the per-tick check is one branch
+//!   and the hot path allocates nothing (the `alloc_regression` tick
+//!   sections run with no plan installed and must not move).
+//! - **O(events) per tick, no allocation**: consulting the plan scans
+//!   the event list — faults are rare and schedules are small; there is
+//!   no per-tick index to build.
+
+use std::time::Duration;
+
+use crate::util::rng::Pcg;
+
+/// One kind of injected failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic inside the targeted session's decode job on the worker
+    /// that runs it — exercising the `WorkerPool` per-index attribution
+    /// path and the manager's quarantine recovery.
+    WorkerPanic,
+    /// Deny the next `claims` calls to `PageAllocator::claim`, as if the
+    /// pool were exhausted — exercising the defer/evict/shed machinery
+    /// mid-stream instead of only at admission.
+    FrameExhaustion { claims: u32 },
+    /// Sleep `micros` microseconds inside the targeted session's decode
+    /// job — a slow worker. Must never change any output bit; chunked
+    /// self-scheduling absorbs the straggler.
+    Stall { micros: u64 },
+    /// Overwrite the targeted session's next decode input row with NaN
+    /// — exercising the poison screen and quarantine path.
+    PoisonInput,
+}
+
+impl FaultKind {
+    /// Execute the hot-path effect of a worker-scoped fault, on the
+    /// thread running the faulted session's decode job. `WorkerPanic`
+    /// unwinds (the pool attributes it to its index; the manager
+    /// quarantines the session); `Stall` sleeps; the other kinds act at
+    /// tick boundaries instead and are no-ops here.
+    pub fn detonate(&self) {
+        match self {
+            FaultKind::WorkerPanic => {
+                // sparge-lint: allow(serving-no-panic)
+                panic!("injected fault: worker job panic");
+            }
+            FaultKind::Stall { micros } => std::thread::sleep(Duration::from_micros(*micros)),
+            FaultKind::FrameExhaustion { .. } | FaultKind::PoisonInput => {}
+        }
+    }
+
+    /// Poison a staged decode input row in place (the `PoisonInput`
+    /// effect): every element becomes NaN, which the manager's
+    /// tick-boundary screen must catch before the row reaches a kernel.
+    pub fn poison_row(row: &mut [f32]) {
+        for x in row.iter_mut() {
+            *x = f32::NAN;
+        }
+    }
+}
+
+/// One scheduled fault: fire `kind` at manager tick `at_tick` (0-based,
+/// counted per manager), scoped to one session or to every session
+/// active at that tick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub at_tick: u64,
+    /// `Some(id)`: only that session. `None`: every session active at
+    /// `at_tick` (for session-scoped kinds); irrelevant for
+    /// `FrameExhaustion`, which acts on the allocator.
+    pub session: Option<u64>,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of [`FaultEvent`]s, installed on a
+/// `SessionManager` via `set_fault_plan` (directly or through
+/// `ServeOptions::fault`).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// An explicit schedule. Events are kept in the given order; the
+    /// manager applies same-tick events first-to-last.
+    pub fn new(events: Vec<FaultEvent>) -> FaultPlan {
+        FaultPlan { events }
+    }
+
+    /// A seeded random schedule: `n` events over ticks `[0, ticks)`
+    /// targeting ids drawn from `sessions` (each event has a small
+    /// chance of broadcasting to all sessions). Deterministic in
+    /// (`seed`, `ticks`, `sessions`, `n`) — the chaos suite's whole
+    /// schedule replays from its seed.
+    pub fn seeded(seed: u64, ticks: u64, sessions: &[u64], n: usize) -> FaultPlan {
+        let mut rng = Pcg::new(seed, 0x0fa0_17de_ad5e_ed01);
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let at_tick = if ticks == 0 { 0 } else { rng.below(ticks) };
+            let session = if sessions.is_empty() || rng.chance(0.1) {
+                None
+            } else {
+                Some(sessions[rng.range(0, sessions.len())])
+            };
+            let kind = match rng.below(4) {
+                0 => FaultKind::WorkerPanic,
+                1 => FaultKind::FrameExhaustion { claims: 1 + rng.below(3) as u32 },
+                2 => FaultKind::Stall { micros: 1 + rng.below(200) },
+                _ => FaultKind::PoisonInput,
+            };
+            events.push(FaultEvent { at_tick, session, kind });
+        }
+        events.sort_by_key(|e| e.at_tick);
+        FaultPlan { events }
+    }
+
+    /// The full schedule, in application order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Total artificial claim denials scheduled for `tick` (the
+    /// `FrameExhaustion` budget the manager feeds to
+    /// `PageAllocator::inject_exhaustion` at the top of the tick).
+    pub fn exhaustion_at(&self, tick: u64) -> u64 {
+        let mut denials = 0u64;
+        for e in &self.events {
+            if e.at_tick == tick {
+                if let FaultKind::FrameExhaustion { claims } = e.kind {
+                    denials += claims as u64;
+                }
+            }
+        }
+        denials
+    }
+
+    /// The first session-scoped fault targeting `session` at `tick`
+    /// (`WorkerPanic`, `Stall`, or `PoisonInput`; exhaustion is
+    /// allocator-scoped and reported by [`FaultPlan::exhaustion_at`]).
+    /// First-match-wins keeps application order deterministic when a
+    /// schedule stacks several faults on one (tick, session).
+    pub fn fault_for(&self, tick: u64, session: u64) -> Option<FaultKind> {
+        self.events.iter().find_map(|e| {
+            let scoped = e.at_tick == tick
+                && e.session.is_none_or(|s| s == session)
+                && !matches!(e.kind, FaultKind::FrameExhaustion { .. });
+            scoped.then_some(e.kind)
+        })
+    }
+
+    /// True when the schedule has no event at or after `tick` — the
+    /// drain loop uses this to know no further injections can fire.
+    pub fn exhausted_after(&self, tick: u64) -> bool {
+        self.events.iter().all(|e| e.at_tick < tick)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plan_is_deterministic() {
+        let a = FaultPlan::seeded(42, 100, &[1, 2, 3], 16);
+        let b = FaultPlan::seeded(42, 100, &[1, 2, 3], 16);
+        assert_eq!(a.events(), b.events());
+        assert_eq!(a.events().len(), 16);
+        let c = FaultPlan::seeded(43, 100, &[1, 2, 3], 16);
+        assert_ne!(a.events(), c.events(), "different seeds must differ");
+    }
+
+    #[test]
+    fn exhaustion_sums_only_frame_events_at_the_tick() {
+        let plan = FaultPlan::new(vec![
+            FaultEvent { at_tick: 3, session: None, kind: FaultKind::FrameExhaustion { claims: 2 } },
+            FaultEvent { at_tick: 3, session: Some(7), kind: FaultKind::WorkerPanic },
+            FaultEvent { at_tick: 3, session: None, kind: FaultKind::FrameExhaustion { claims: 1 } },
+            FaultEvent { at_tick: 4, session: None, kind: FaultKind::FrameExhaustion { claims: 9 } },
+        ]);
+        assert_eq!(plan.exhaustion_at(3), 3);
+        assert_eq!(plan.exhaustion_at(4), 9);
+        assert_eq!(plan.exhaustion_at(5), 0);
+    }
+
+    #[test]
+    fn fault_for_scopes_by_tick_and_session() {
+        let plan = FaultPlan::new(vec![
+            FaultEvent { at_tick: 1, session: Some(5), kind: FaultKind::PoisonInput },
+            FaultEvent { at_tick: 2, session: None, kind: FaultKind::Stall { micros: 10 } },
+            FaultEvent { at_tick: 2, session: Some(5), kind: FaultKind::WorkerPanic },
+        ]);
+        assert_eq!(plan.fault_for(1, 5), Some(FaultKind::PoisonInput));
+        assert_eq!(plan.fault_for(1, 6), None);
+        // broadcast event hits every session; first match wins over the
+        // later session-specific event
+        assert_eq!(plan.fault_for(2, 5), Some(FaultKind::Stall { micros: 10 }));
+        assert_eq!(plan.fault_for(2, 9), Some(FaultKind::Stall { micros: 10 }));
+        assert!(plan.exhausted_after(3));
+        assert!(!plan.exhausted_after(2));
+    }
+
+    #[test]
+    fn poison_row_is_all_nan() {
+        let mut row = vec![1.0f32; 8];
+        FaultKind::poison_row(&mut row);
+        assert!(row.iter().all(|x| x.is_nan()));
+    }
+
+    #[test]
+    fn detonate_stall_and_tick_scoped_kinds_do_not_unwind() {
+        FaultKind::Stall { micros: 1 }.detonate();
+        FaultKind::FrameExhaustion { claims: 1 }.detonate();
+        FaultKind::PoisonInput.detonate();
+        let r = std::panic::catch_unwind(|| FaultKind::WorkerPanic.detonate());
+        assert!(r.is_err(), "WorkerPanic must unwind");
+    }
+}

@@ -23,6 +23,18 @@ struct Inner {
     /// Per-output-token latency samples (seconds) for tokens after the
     /// first — the continuous-batching loop's decode-tick cadence.
     tpot: Vec<f64>,
+    /// Streams retired by the quarantine path (worker-job panic or
+    /// poisoned input caught at a tick boundary).
+    quarantined: u64,
+    /// Streams cancelled because their per-request deadline expired.
+    deadline_cancelled: u64,
+    /// Streams shed terminally (unservable, or pending at drain).
+    shed: u64,
+    /// Faults the installed `FaultPlan` actually injected (0 without a
+    /// plan — production serving never increments this).
+    injected_faults: u64,
+    /// Wall-clock seconds the last graceful drain took.
+    drain_duration: f64,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -47,6 +59,16 @@ pub struct Snapshot {
     pub tpot_count: u64,
     pub tpot_p50: f64,
     pub tpot_p99: f64,
+    /// Streams quarantined (worker panic / poisoned input).
+    pub quarantined: u64,
+    /// Streams cancelled at their deadline.
+    pub deadline_cancelled: u64,
+    /// Streams shed terminally.
+    pub shed: u64,
+    /// Faults injected by an installed `FaultPlan` (0 in production).
+    pub injected_faults: u64,
+    /// Wall-clock seconds of the last graceful drain.
+    pub drain_duration: f64,
 }
 
 impl Metrics {
@@ -92,6 +114,31 @@ impl Metrics {
 
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
+    }
+
+    /// Record a terminal non-success stream outcome by its
+    /// `SeqOutcome::name()` string ("quarantined", "deadline_cancelled",
+    /// "shed"). Unknown names are ignored — `record_error` carries the
+    /// aggregate either way.
+    pub fn record_outcome(&self, outcome: &str) {
+        let mut g = self.inner.lock().unwrap();
+        match outcome {
+            "quarantined" => g.quarantined += 1,
+            "deadline_cancelled" => g.deadline_cancelled += 1,
+            "shed" => g.shed += 1,
+            _ => {}
+        }
+    }
+
+    /// Record the total faults a `FaultPlan` injected over a serve loop's
+    /// lifetime (taken once at drain).
+    pub fn record_injected_faults(&self, n: u64) {
+        self.inner.lock().unwrap().injected_faults += n;
+    }
+
+    /// Record how long a graceful drain took (seconds).
+    pub fn record_drain_duration(&self, seconds: f64) {
+        self.inner.lock().unwrap().drain_duration = seconds;
     }
 
     /// Record the serving loop's token-level timings for one retired
@@ -140,6 +187,11 @@ impl Metrics {
             tpot_count: g.tpot.len() as u64,
             tpot_p50: pct(&tpot, 0.5),
             tpot_p99: pct(&tpot, 0.99),
+            quarantined: g.quarantined,
+            deadline_cancelled: g.deadline_cancelled,
+            shed: g.shed,
+            injected_faults: g.injected_faults,
+            drain_duration: g.drain_duration,
         }
     }
 }
@@ -223,6 +275,24 @@ mod tests {
         assert_eq!(s.ttft_count, 0);
         assert_eq!(s.ttft_p50, 0.0);
         assert_eq!(s.tpot_p99, 0.0);
+    }
+
+    #[test]
+    fn outcome_counters_and_fault_telemetry() {
+        let m = Metrics::new();
+        m.record_outcome("quarantined");
+        m.record_outcome("quarantined");
+        m.record_outcome("deadline_cancelled");
+        m.record_outcome("shed");
+        m.record_outcome("completed"); // success is not an error counter
+        m.record_injected_faults(7);
+        m.record_drain_duration(0.25);
+        let s = m.snapshot();
+        assert_eq!(s.quarantined, 2);
+        assert_eq!(s.deadline_cancelled, 1);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.injected_faults, 7);
+        assert!((s.drain_duration - 0.25).abs() < 1e-12);
     }
 
     #[test]

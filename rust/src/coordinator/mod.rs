@@ -37,9 +37,29 @@
 //! streams through the serving loop instead. The TCP JSON-lines
 //! [`server`] is the external interface; [`metrics`] aggregates serving
 //! counters plus TTFT/TPOT reservoirs.
+//!
+//! ## Fault tolerance and graceful degradation
+//!
+//! The loop is built to degrade per-request, never per-loop. Every
+//! stream retires with exactly one [`session_manager::SeqOutcome`]:
+//! `Completed` (possibly truncated by a token budget),
+//! `DeadlineCancelled` (its [`request::RequestLimits`] deadline passed a
+//! tick boundary; partial output kept), `Quarantined` (a worker-job
+//! panic or a non-finite input row was contained to that session — its
+//! frames release through the same path an eviction uses, and the other
+//! residents' outputs stay bitwise identical), or `Shed` (terminally
+//! unservable or dropped at drain). [`SessionManager::drain`] is the
+//! shutdown half: stop admitting, finish or cancel every resident, and
+//! assert the paged pool returns to zero frames in use. The [`fault`]
+//! module is the *injection* seam only — a seeded [`fault::FaultPlan`]
+//! (installed via `ServeOptions::fault`) makes these paths fire on
+//! demand for the chaos suite (`tests/chaos_serving.rs`); the recovery
+//! machinery itself is always compiled in and costs one branch per tick
+//! when no plan is installed.
 
 pub mod batcher;
 pub mod engine;
+pub mod fault;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
@@ -48,7 +68,8 @@ pub mod session_manager;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::EngineHandle;
+pub use fault::{FaultEvent, FaultKind, FaultPlan};
 pub use metrics::Metrics;
-pub use request::{AttnMode, AttnStreamSpec, GenerateRequest, GenerateResponse, Payload};
+pub use request::{AttnMode, AttnStreamSpec, GenerateRequest, GenerateResponse, Payload, RequestLimits};
 pub use scheduler::{AttnProbeResult, Coordinator, DecodeProbeResult, ServeOptions};
-pub use session_manager::{run_sequential, SeqResult, SeqStream, SessionManager};
+pub use session_manager::{run_sequential, SeqOutcome, SeqResult, SeqStream, SessionManager};

@@ -27,9 +27,10 @@ use crate::util::threadpool::WorkerPool;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::EngineHandle;
+use super::fault::FaultPlan;
 use super::metrics::Metrics;
 use super::request::{AttnMode, AttnStreamSpec, GenerateRequest, GenerateResponse, Payload, QueuedRequest};
-use super::session_manager::{SeqResult, SeqStream, SessionManager};
+use super::session_manager::{SeqOutcome, SeqResult, SeqStream, SessionManager};
 
 /// Result of a kernel-level attention probe request.
 #[derive(Clone, Copy, Debug)]
@@ -83,6 +84,11 @@ pub struct ServeOptions {
     /// determinism across pool sizes (which split-KV preserves), not
     /// bitwise decode≡prefill parity (which it trades away).
     pub kv_split: KvSplit,
+    /// Optional fault-injection schedule for the serving loop (chaos
+    /// testing). `None` — the default, and the only sane production
+    /// value — costs one branch per tick; the recovery machinery
+    /// (quarantine, deadlines, drain) is always armed regardless.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ServeOptions {
@@ -93,6 +99,7 @@ impl Default for ServeOptions {
             cfg: AttnConfig::causal(),
             threads: crate::util::threadpool::default_threads(),
             kv_split: KvSplit::Auto,
+            fault: None,
         }
     }
 }
@@ -462,6 +469,7 @@ impl LmActive {
             ttft: self.ttft,
             tpot: tpot_mean,
             sparsity: None,
+            error: if self.failed { Some("generation failed".to_string()) } else { None },
             output: self.out,
         });
     }
@@ -474,20 +482,45 @@ struct PendingStream {
 }
 
 fn respond_stream(metrics: &Metrics, pending: PendingStream, res: SeqResult) {
-    let sparsity = res.stats.sparsity();
-    metrics.record(res.tokens, res.latency, res.compute, Some(sparsity));
-    metrics.record_token_latency(res.ttft, &res.tpot);
-    let _ = pending.respond.send(GenerateResponse {
-        id: res.id,
-        output: Vec::new(),
-        latency: res.latency,
-        compute: res.compute,
-        mode: pending.mode,
-        tokens: res.tokens,
-        ttft: Some(res.ttft),
-        tpot: if res.tpot.is_empty() { None } else { Some(res.tpot_mean()) },
-        sparsity: Some(sparsity),
-    });
+    match res.outcome {
+        SeqOutcome::Completed => {
+            let sparsity = res.stats.sparsity();
+            metrics.record(res.tokens, res.latency, res.compute, Some(sparsity));
+            metrics.record_token_latency(res.ttft, &res.tpot);
+            let _ = pending.respond.send(GenerateResponse {
+                id: res.id,
+                output: Vec::new(),
+                latency: res.latency,
+                compute: res.compute,
+                mode: pending.mode,
+                tokens: res.tokens,
+                ttft: Some(res.ttft),
+                tpot: if res.tpot.is_empty() { None } else { Some(res.tpot_mean()) },
+                sparsity: Some(sparsity),
+                error: None,
+            });
+        }
+        outcome => {
+            // terminal non-success: the stream was quarantined, cancelled
+            // at its deadline, or shed — report the outcome as a
+            // structured error instead of a silent drop, and keep any
+            // partial output stats it earned
+            metrics.record_error();
+            metrics.record_outcome(outcome.name());
+            let _ = pending.respond.send(GenerateResponse {
+                id: res.id,
+                output: Vec::new(),
+                latency: res.latency,
+                compute: res.compute,
+                mode: pending.mode,
+                tokens: res.tokens,
+                ttft: if res.tokens > 0 { Some(res.ttft) } else { None },
+                tpot: if res.tpot.is_empty() { None } else { Some(res.tpot_mean()) },
+                sparsity: None,
+                error: Some(format!("stream terminated: {}", outcome.name())),
+            });
+        }
+    }
 }
 
 /// The continuous-batching worker loop (see module docs). Runs until the
@@ -501,6 +534,7 @@ fn serve_loop(
     attn_engine: &AttnEngine,
 ) {
     let mut mgr = SessionManager::new(attn_engine, opts.chunk);
+    mgr.set_fault_plan(opts.fault.clone());
     let mut lm: Vec<LmActive> = Vec::new();
     let mut pending: HashMap<u64, PendingStream> = HashMap::new();
     loop {
@@ -535,11 +569,12 @@ fn serve_loop(
                             ttft: None,
                             tpot: None,
                             sparsity: None,
+                            error: Some("empty attention stream spec".to_string()),
                         });
                         continue;
                     }
                     pending.insert(req.id, PendingStream { mode: req.mode, respond });
-                    mgr.admit(req.id, SeqStream::synth(&spec), arrived);
+                    mgr.admit_with(req.id, SeqStream::synth(&spec), arrived, spec.limits);
                 }
             }
         }
@@ -559,6 +594,19 @@ fn serve_loop(
             }
         }
     }
+    // graceful drain: the batcher is closed, so nothing new can be
+    // admitted. The loop above only breaks once every resident retired,
+    // but drain() still runs the terminal invariants (shed anything the
+    // manager queued internally, release every frame, assert the paged
+    // pool is empty) and answers any straggler.
+    let t0 = Instant::now();
+    for res in mgr.drain() {
+        if let Some(p) = pending.remove(&res.id) {
+            respond_stream(metrics, p, res);
+        }
+    }
+    metrics.record_drain_duration(t0.elapsed().as_secs_f64());
+    metrics.record_injected_faults(mgr.faults_injected());
 }
 
 #[cfg(test)]

@@ -12,19 +12,26 @@
 //!         "per_step_sparsity":[...],"mean_step_sparsity":0.45,...}
 //!        (serving-path probe: AttnSession prefill + N single-row decode
 //!        steps, per-step sparsity observable end-to-end)
-//!   {"op":"attn","mode":"serve","sessions":4,"n":1024,"steps":32,"d":64}
+//!   {"op":"attn","mode":"serve","sessions":4,"n":1024,"steps":32,"d":64,
+//!    "deadline_ms":500,"token_budget":16}
 //!     -> {"mode":"serve","sessions":[{"id":..,"ttft_ms":..,"tpot_ms":..,
-//!         "sparsity":..},...],"wall_ms":...,"tokens_per_sec":...}
+//!         "sparsity":..,"error":null},...],"wall_ms":...,"tokens_per_sec":...}
 //!        (continuous-batching traffic: N seeded attention streams
 //!        submitted through the scheduler's serving loop — chunked
-//!        prefill + per-tick decode over the shared AttnEngine)
+//!        prefill + per-tick decode over the shared AttnEngine.
+//!        `deadline_ms`/`token_budget` are optional per-request limits;
+//!        a stream that misses its deadline or is quarantined reports a
+//!        non-null "error" with its terminal outcome)
 //!   {"op":"stats"} -> {"requests":...,"mean_sparsity":...,
-//!                      "ttft_p50_ms":...,"tpot_p50_ms":...,...}
+//!                      "ttft_p50_ms":...,"tpot_p50_ms":...,
+//!                      "quarantined":...,"deadline_cancelled":...,
+//!                      "shed":...,"injected_faults":...,"drain_ms":...}
 //!   {"op":"ping"}  -> {"ok":true}
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -33,6 +40,13 @@ use crate::util::threadpool::ThreadPool;
 
 use super::request::AttnMode;
 use super::scheduler::Coordinator;
+
+/// Per-connection socket read timeout: a client that stops sending
+/// mid-line cannot pin a connection worker forever.
+pub const CONN_READ_TIMEOUT: Duration = Duration::from_secs(30);
+/// Per-connection socket write timeout: a client that stops reading
+/// cannot wedge a worker in `write_all`.
+pub const CONN_WRITE_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// Serve forever on `addr` (e.g. "127.0.0.1:7071").
 pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<()> {
@@ -56,13 +70,32 @@ pub fn serve(coordinator: Arc<Coordinator>, addr: &str) -> Result<()> {
 }
 
 /// Handle one client connection (many requests per connection).
+///
+/// The socket gets read/write timeouts ([`CONN_READ_TIMEOUT`],
+/// [`CONN_WRITE_TIMEOUT`]) so a stalled or dead peer releases its
+/// connection worker, and a line that fails to read (invalid UTF-8,
+/// timeout, reset) gets a structured JSON error response before the
+/// connection closes — never a silent drop.
 pub fn handle_conn(coordinator: &Coordinator, stream: TcpStream) -> Result<()> {
     let peer = stream.peer_addr().ok();
     crate::log_debug!("client connected: {peer:?}");
+    stream.set_read_timeout(Some(CONN_READ_TIMEOUT)).context("set read timeout")?;
+    stream.set_write_timeout(Some(CONN_WRITE_TIMEOUT)).context("set write timeout")?;
     let reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     for line in reader.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => {
+                // malformed line (e.g. invalid UTF-8) or socket-level
+                // failure: answer with a structured error, then close
+                let err = Json::obj(vec![("error", Json::str(&format!("read failed: {e}")))]);
+                let _ = writer.write_all(err.dump().as_bytes());
+                let _ = writer.write_all(b"\n");
+                let _ = writer.flush();
+                return Err(e.into());
+            }
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -107,6 +140,12 @@ fn dispatch_inner(coordinator: &Coordinator, line: &str) -> Result<Json> {
                 ("tpot_count", Json::num(s.tpot_count as f64)),
                 ("tpot_p50_ms", Json::num(s.tpot_p50 * 1e3)),
                 ("tpot_p99_ms", Json::num(s.tpot_p99 * 1e3)),
+                // fault-tier outcome counters (graceful degradation)
+                ("quarantined", Json::num(s.quarantined as f64)),
+                ("deadline_cancelled", Json::num(s.deadline_cancelled as f64)),
+                ("shed", Json::num(s.shed as f64)),
+                ("injected_faults", Json::num(s.injected_faults as f64)),
+                ("drain_ms", Json::num(s.drain_duration * 1e3)),
             ]))
         }
         "attn" => {
@@ -174,6 +213,13 @@ fn dispatch_inner(coordinator: &Coordinator, line: &str) -> Result<Json> {
                     let steps = req.get("steps").and_then(|v| v.as_usize()).unwrap_or(16);
                     anyhow::ensure!((1..=64).contains(&sessions), "sessions out of range (1..=64)");
                     anyhow::ensure!(steps <= 1024, "steps out of range (0..=1024)");
+                    // per-request serving limits: enforced by the manager
+                    // at tick boundaries (deadline → cancelled with a
+                    // structured error; budget → truncated completion)
+                    let limits = crate::coordinator::request::RequestLimits {
+                        deadline_ms: req.get("deadline_ms").and_then(|v| v.as_usize()).map(|m| m as u64),
+                        token_budget: req.get("token_budget").and_then(|v| v.as_usize()),
+                    };
                     let t0 = std::time::Instant::now();
                     let rxs: Vec<_> = (0..sessions)
                         .map(|i| {
@@ -182,6 +228,7 @@ fn dispatch_inner(coordinator: &Coordinator, line: &str) -> Result<Json> {
                                 decode: steps,
                                 d,
                                 seed: seed.wrapping_add(i as u64),
+                                limits,
                             };
                             coordinator.submit_stream(spec, AttnMode::Sparge)
                         })
@@ -197,6 +244,10 @@ fn dispatch_inner(coordinator: &Coordinator, line: &str) -> Result<Json> {
                             ("tpot_ms", Json::num(r.tpot.unwrap_or(0.0) * 1e3)),
                             ("sparsity", Json::num(r.sparsity.unwrap_or(0.0))),
                             ("tokens", Json::num(r.tokens as f64)),
+                            (
+                                "error",
+                                r.error.as_deref().map_or(Json::Null, Json::str),
+                            ),
                         ]));
                     }
                     let wall = t0.elapsed().as_secs_f64();

@@ -67,6 +67,7 @@
 //! (including decode tokens/s vs pool size, split-KV on and off).
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
 use crate::attention::paged::{PageAllocator, PageStats, PagedAttnSession, PrefixRegistry};
@@ -75,7 +76,8 @@ use crate::attention::{AttnEngine, AttnSession, Exec, SkipStats, Workspace};
 use crate::tensor::Tensor;
 use crate::workloads::{synthetic, SyntheticSpec};
 
-use super::request::AttnStreamSpec;
+use super::fault::{FaultKind, FaultPlan};
+use super::request::{AttnStreamSpec, RequestLimits};
 
 /// The token stream a session consumes: `prefill` prompt rows of q/k/v,
 /// then one decode row per step until the rows run out.
@@ -113,6 +115,38 @@ impl SeqStream {
     }
 }
 
+/// How a managed sequence terminated. Every admitted request reaches
+/// **exactly one** of these (the chaos suite's core invariant): the
+/// happy path completes, a deadline cancels, a panicking or poisoned
+/// stream quarantines, and a stream the pool can never hold sheds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqOutcome {
+    /// Ran to the end of its stream (or its token budget — a budget is
+    /// a stop condition, not a failure).
+    Completed,
+    /// Cancelled at a tick boundary after its deadline passed; partial
+    /// output is kept, frames are released.
+    DeadlineCancelled,
+    /// Contained after a worker-job panic or a non-finite (NaN/Inf)
+    /// decode input: the session left the loop, its frames returned via
+    /// the eviction path, and no other stream was touched.
+    Quarantined,
+    /// Removed without running: its frame need exceeds what the pool
+    /// can ever offer, or it was still queued when the manager drained.
+    Shed,
+}
+
+impl SeqOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SeqOutcome::Completed => "completed",
+            SeqOutcome::DeadlineCancelled => "deadline_cancelled",
+            SeqOutcome::Quarantined => "quarantined",
+            SeqOutcome::Shed => "shed",
+        }
+    }
+}
+
 /// A retired sequence: everything the serving loop reports and records.
 #[derive(Clone, Debug)]
 pub struct SeqResult {
@@ -132,6 +166,8 @@ pub struct SeqResult {
     pub latency: f64,
     /// Summed kernel seconds across the session's chunks and steps.
     pub compute: f64,
+    /// How the sequence terminated (see [`SeqOutcome`]).
+    pub outcome: SeqOutcome,
 }
 
 impl SeqResult {
@@ -180,11 +216,29 @@ struct ActiveSeq<'e> {
     /// step, folded into the step's latency sample when the parallel
     /// compute half lands.
     pending_dt: f64,
+    /// Per-request deadline/budget, enforced at tick boundaries.
+    limits: RequestLimits,
+    /// Terminal state once decided — the session takes no further work
+    /// and retires at this tick's retirement scan.
+    outcome: Option<SeqOutcome>,
+    /// A worker-scoped injected fault ([`FaultKind::WorkerPanic`] /
+    /// [`FaultKind::Stall`]) armed for this session's next decode
+    /// compute; detonated (and cleared) inside the worker job.
+    injected: Option<FaultKind>,
 }
 
 impl ActiveSeq<'_> {
+    /// Decode steps this sequence will actually take: the stream's
+    /// length, clamped by any token budget.
+    fn target_steps(&self) -> usize {
+        match self.limits.token_budget {
+            Some(b) => self.stream.decode_steps().min(b),
+            None => self.stream.decode_steps(),
+        }
+    }
+
     fn finished(&self) -> bool {
-        self.prefilled == self.stream.prefill && self.decoded == self.stream.decode_steps()
+        self.prefilled == self.stream.prefill && self.decoded == self.target_steps()
     }
 
     /// Run one bounded prefill chunk (`chunk` rows, pre-aligned by the
@@ -257,6 +311,12 @@ impl ActiveSeq<'_> {
     /// row is copied into reusable staging tensors and the output row is
     /// written straight into the preallocated result buffer.
     fn advance_decode(&mut self, exec: Exec<'_>) {
+        if let Some(kind) = self.injected.take() {
+            // inside the worker job running this session's step: a
+            // WorkerPanic unwinds here (attributed to this index by the
+            // pool, quarantined by the tick), a Stall sleeps here
+            kind.detonate();
+        }
         let t0 = Instant::now();
         let t = self.stream.prefill + self.decoded;
         self.qrow.data_mut().copy_from_slice(self.stream.q.row(t));
@@ -316,6 +376,11 @@ impl ActiveSeq<'_> {
     /// tick fans many sessions over one borrow) and fold this tick's
     /// append seconds into the step's latency sample.
     fn finish_decode_paged(&mut self, alloc: &PageAllocator, exec: Exec<'_>) {
+        if let Some(kind) = self.injected.take() {
+            // the batched compute half is the paged worker job — see
+            // [`ActiveSeq::advance_decode`]
+            kind.detonate();
+        }
         let t0 = Instant::now();
         let dv = self.stream.v.dim(1);
         let base = self.out.len();
@@ -348,8 +413,15 @@ impl ActiveSeq<'_> {
             tpot: self.tpot,
             latency: self.arrived.elapsed().as_secs_f64(),
             compute: self.compute,
+            outcome: self.outcome.unwrap_or(SeqOutcome::Completed),
         }
     }
+}
+
+/// True when every element of row `r` is finite — the poison screen a
+/// decode input passes before it may reach a kernel.
+fn row_finite(t: &Tensor, r: usize) -> bool {
+    t.row(r).iter().all(|x| x.is_finite())
 }
 
 /// The paged manager's memory plane: the shared frame pool, the
@@ -360,7 +432,7 @@ struct PagedServing {
     /// Streams admitted by the caller but not yet holding frames —
     /// admission into `active` happens inside `tick`, keyed on the free
     /// list.
-    pending: VecDeque<(u64, SeqStream, Instant)>,
+    pending: VecDeque<(u64, SeqStream, Instant, RequestLimits)>,
     /// Ticks on which admission stalled with the queue non-empty even
     /// after LRU eviction (the load-shed signal).
     deferred: u64,
@@ -387,6 +459,13 @@ pub struct SessionManager<'e> {
     paging: Option<PagedServing>,
     /// Tick counter — the LRU stamp source for paged eviction.
     ticks: u64,
+    /// Injection schedule, if one is installed. `None` (the default and
+    /// every production path) costs one branch per tick; the recovery
+    /// machinery below is armed either way.
+    fault: Option<FaultPlan>,
+    /// Fault events applied so far (exhaustion counted per denied
+    /// claim) — exported through metrics as `injected_faults`.
+    faults_injected: u64,
 }
 
 impl<'e> SessionManager<'e> {
@@ -405,6 +484,8 @@ impl<'e> SessionManager<'e> {
             tick_ws: Workspace::default(),
             paging: None,
             ticks: 0,
+            fault: None,
+            faults_injected: 0,
         }
     }
 
@@ -456,13 +537,32 @@ impl<'e> SessionManager<'e> {
     /// managers only *enqueue* here — the frame-aware admission into the
     /// active set happens inside [`SessionManager::tick`].
     pub fn admit(&mut self, id: u64, stream: SeqStream, arrived: Instant) {
+        self.admit_with(id, stream, arrived, RequestLimits::default());
+    }
+
+    /// [`SessionManager::admit`] with per-request [`RequestLimits`]
+    /// (deadline / token budget), enforced at tick boundaries.
+    pub fn admit_with(&mut self, id: u64, stream: SeqStream, arrived: Instant, limits: RequestLimits) {
         assert!(!stream.is_empty(), "empty attention stream");
         if let Some(p) = self.paging.as_mut() {
-            p.pending.push_back((id, stream, arrived));
+            p.pending.push_back((id, stream, arrived, limits));
             return;
         }
         let session = SeqSession::Mono(self.engine.session());
-        self.push_active(id, stream, arrived, session);
+        self.push_active(id, stream, arrived, limits, session);
+    }
+
+    /// Install (or clear) a deterministic fault-injection schedule. The
+    /// plan only *injects*; recovery — quarantine, deadlines, drain —
+    /// is always armed. With `None` (the default) the tick pays one
+    /// branch and the zero-alloc contracts are untouched.
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
+        self.fault = plan;
+    }
+
+    /// Fault events applied so far (exhaustion counted per denied claim).
+    pub fn faults_injected(&self) -> u64 {
+        self.faults_injected
     }
 
     /// Streams enqueued on a paged manager but not yet holding frames.
@@ -489,7 +589,24 @@ impl<'e> SessionManager<'e> {
         }
     }
 
-    fn push_active(&mut self, id: u64, stream: SeqStream, arrived: Instant, session: SeqSession<'e>) {
+    /// Frame-leak check ([`PageAllocator::assert_all_free`]) on the paged
+    /// pool; fails loudly with the offending frame ids. No-op on
+    /// monolithic managers. Callers with live prefix-registry entries
+    /// must [`Self::release_prefixes`] first.
+    pub fn assert_frames_all_free(&self) {
+        if let Some(p) = self.paging.as_ref() {
+            p.alloc.assert_all_free();
+        }
+    }
+
+    fn push_active(
+        &mut self,
+        id: u64,
+        stream: SeqStream,
+        arrived: Instant,
+        limits: RequestLimits,
+        session: SeqSession<'e>,
+    ) {
         let d = stream.q.dim(1);
         let dv = stream.v.dim(1);
         let total = stream.len() * dv;
@@ -515,7 +632,87 @@ impl<'e> SessionManager<'e> {
             tpot: Vec::with_capacity(steps.saturating_sub(1)),
             last_advanced: self.ticks,
             pending_dt: 0.0,
+            limits,
+            outcome: None,
+            injected: None,
         });
+    }
+
+    /// A zero-output result for a request that terminates without ever
+    /// running (shed from the pending queue, or expired before
+    /// admission).
+    fn terminal_result(id: u64, stream: &SeqStream, arrived: Instant, outcome: SeqOutcome) -> SeqResult {
+        let dv = stream.v.dim(1);
+        SeqResult {
+            id,
+            out: Tensor::from_vec(&[0, dv], Vec::new()),
+            stats: SkipStats::default(),
+            tokens: 0,
+            ttft: 0.0,
+            tpot: Vec::new(),
+            latency: arrived.elapsed().as_secs_f64(),
+            compute: 0.0,
+            outcome,
+        }
+    }
+
+    /// Tick-boundary fault/limit pass, run before any session advances:
+    /// apply this tick's injected faults (poison lands in the stream
+    /// rows, worker-scoped faults arm on their session, exhaustion
+    /// lands on the allocator), then enforce deadlines and screen the
+    /// next decode inputs for non-finite values. Recovery is always
+    /// armed; with no plan installed this is one branch plus the
+    /// deadline/poison screens, none of which allocate.
+    fn apply_tick_boundary(&mut self) {
+        let tick = self.ticks;
+        if let Some(plan) = &self.fault {
+            let denials = plan.exhaustion_at(tick);
+            if denials > 0 {
+                if let Some(p) = self.paging.as_mut() {
+                    p.alloc.inject_exhaustion(denials);
+                    self.faults_injected += denials;
+                }
+            }
+            for seq in &mut self.active {
+                let Some(kind) = plan.fault_for(tick, seq.id) else { continue };
+                self.faults_injected += 1;
+                match kind {
+                    FaultKind::PoisonInput => {
+                        // poison the next decode input row; the screen
+                        // below catches it before it reaches a kernel
+                        if seq.decoded < seq.target_steps() && seq.stream.decode_steps() > 0 {
+                            let t = seq.stream.prefill + seq.decoded;
+                            FaultKind::poison_row(seq.stream.q.row_mut(t));
+                        }
+                    }
+                    FaultKind::WorkerPanic | FaultKind::Stall { .. } => {
+                        seq.injected = Some(kind);
+                    }
+                    FaultKind::FrameExhaustion { .. } => {} // allocator-scoped, handled above
+                }
+            }
+        }
+        for seq in &mut self.active {
+            if seq.outcome.is_some() {
+                continue;
+            }
+            if let Some(ms) = seq.limits.deadline_ms {
+                if seq.arrived.elapsed().as_millis() as u64 > ms {
+                    seq.outcome = Some(SeqOutcome::DeadlineCancelled);
+                    continue;
+                }
+            }
+            // poison screen: the row a decode step would stage this tick
+            if seq.prefilled == seq.stream.prefill && seq.decoded < seq.target_steps() {
+                let t = seq.stream.prefill + seq.decoded;
+                if !row_finite(&seq.stream.q, t)
+                    || !row_finite(&seq.stream.k, t)
+                    || !row_finite(&seq.stream.v, t)
+                {
+                    seq.outcome = Some(SeqOutcome::Quarantined);
+                }
+            }
+        }
     }
 
     /// Spill the least-recently-advanced resident decode-phase session
@@ -571,6 +768,7 @@ impl<'e> SessionManager<'e> {
     /// old serial loop.
     pub fn tick(&mut self) -> Vec<SeqResult> {
         self.ticks += 1;
+        self.apply_tick_boundary();
         if self.paging.is_some() {
             return self.tick_paged();
         }
@@ -580,25 +778,37 @@ impl<'e> SessionManager<'e> {
         self.decode_phase.clear();
         self.decode_phase.extend(self.active.iter().map(|s| s.prefilled == s.stream.prefill));
         for (seq, &decoding) in self.active.iter_mut().zip(&self.decode_phase) {
-            if !decoding {
+            if !decoding && seq.outcome.is_none() {
                 seq.advance_prefill(chunk);
             }
         }
         self.ready_idx.clear();
         for (i, (s, &d)) in self.active.iter().zip(&self.decode_phase).enumerate() {
-            if d && s.decoded < s.stream.decode_steps() {
+            if d && s.outcome.is_none() && s.decoded < s.target_steps() {
                 self.ready_idx.push(i);
             }
         }
         match self.ready_idx.len() {
             0 => {}
             // a lone decoder keeps the engine's executor: the engine's
-            // split-KV policy fans the step's KV spans across the pool
-            1 => self.active[self.ready_idx[0]].advance_decode(self.engine.exec()),
+            // split-KV policy fans the step's KV spans across the pool.
+            // A panic (injected or real) is contained here — the step
+            // either ran the whole engine fan-out or unwound before any
+            // other session was touched — and quarantines the session.
+            1 => {
+                let i = self.ready_idx[0];
+                let exec = self.engine.exec();
+                let seq = &mut self.active[i];
+                if catch_unwind(AssertUnwindSafe(|| seq.advance_decode(exec))).is_err() {
+                    seq.outcome = Some(SeqOutcome::Quarantined);
+                }
+            }
             // cross-session batch: one chunk-self-scheduled fan-out over
             // (session, step) pairs — the scheduler thread participates
             // with the manager's persistent workspace; each participant
-            // runs exactly one session's step inline
+            // runs exactly one session's step inline. Panicking steps
+            // are *attributed* (not re-raised): each failed index
+            // quarantines exactly its own session.
             _ => {
                 // Each fan-out item owns exactly one `ActiveSeq` slot;
                 // a duplicate index in `ready_idx` would alias a mutable
@@ -606,16 +816,23 @@ impl<'e> SessionManager<'e> {
                 debug_assert_disjoint_slots(self.ready_idx.len(), |t| (self.ready_idx[t], 1));
                 let base = SendPtr(self.active.as_mut_ptr());
                 let idx = &self.ready_idx;
-                self.engine.exec().for_each_ws(idx.len(), &mut self.tick_ws, |t, _ws| {
+                let bad = self.engine.exec().try_for_each_ws(idx.len(), &mut self.tick_ws, |t, _ws| {
                     // SAFETY: `ready_idx` holds distinct in-bounds indices
-                    // into `active`, and `for_each_ws` hands each `t` to
-                    // exactly one participant — so every `ActiveSeq` is
+                    // into `active`, and `try_for_each_ws` hands each `t`
+                    // to exactly one participant — so every `ActiveSeq` is
                     // mutably borrowed at most once, and never while
                     // `active` itself is touched (the fan-out returns
-                    // before the retirement scan below).
+                    // before the retirement scan below). A panicking
+                    // index unwinds out of its closure only — the borrow
+                    // ends with the unwind, and the index is reported,
+                    // never retried.
                     let seq = unsafe { &mut *base.0.add(idx[t]) };
                     seq.advance_decode(Exec::Inline);
                 });
+                for t in bad {
+                    let slot = self.ready_idx[t];
+                    self.active[slot].outcome = Some(SeqOutcome::Quarantined);
+                }
             }
         }
         // Retirement is rare (once per sequence) and returns ownership to
@@ -624,7 +841,7 @@ impl<'e> SessionManager<'e> {
         let mut done = Vec::new();
         let mut i = 0;
         while i < self.active.len() {
-            if self.active[i].finished() {
+            if self.active[i].finished() || self.active[i].outcome.is_some() {
                 done.push(self.active.remove(i).into_result());
             } else {
                 i += 1;
@@ -647,6 +864,10 @@ impl<'e> SessionManager<'e> {
         let chunk = self.chunk_rows();
         let bk = self.engine.config().bk;
         let tick = self.ticks;
+        // Terminal results can arise before any session runs (expired or
+        // unservable pending streams) — collect them with retirement.
+        // sparge-lint: allow(hot-path-no-alloc)
+        let mut done = Vec::new();
         // 1) frame-aware admission, oldest first. Every active paged
         // session carries a standing *reservation* for its worst-case
         // remaining frame need (full stream length in frames, minus the
@@ -662,7 +883,30 @@ impl<'e> SessionManager<'e> {
         loop {
             let Some(p) = self.paging.as_mut() else { break };
             let need = match p.pending.front() {
-                Some((_, stream, _)) => stream.len().div_ceil(bk),
+                Some((_, stream, arrived, limits)) => {
+                    // a queued stream can terminate without ever running:
+                    // its deadline passed while waiting, or its frame
+                    // need exceeds what the pool can EVER offer (without
+                    // this, an unservable stream defers forever and
+                    // wedges everything queued behind it)
+                    let expired = limits
+                        .deadline_ms
+                        .is_some_and(|ms| arrived.elapsed().as_millis() as u64 > ms);
+                    let need = stream.len().div_ceil(bk);
+                    if expired || need > p.alloc.capacity() {
+                        let outcome = if expired {
+                            SeqOutcome::DeadlineCancelled
+                        } else {
+                            p.alloc.note_load_shed();
+                            SeqOutcome::Shed
+                        };
+                        if let Some((id, stream, arrived, _)) = p.pending.pop_front() {
+                            done.push(Self::terminal_result(id, &stream, arrived, outcome));
+                        }
+                        continue;
+                    }
+                    need
+                }
                 None => break,
             };
             let outstanding: usize = self
@@ -685,20 +929,20 @@ impl<'e> SessionManager<'e> {
                 p.deferred += 1;
                 break;
             }
-            let Some((id, stream, arrived)) = p.pending.pop_front() else { break };
+            let Some((id, stream, arrived, limits)) = p.pending.pop_front() else { break };
             let mut paged = self.engine.paged_session();
             // page table + staged sims sized to the stream's worst case
             // now, so boundary-crossing decode claims stay zero-alloc
             paged.reserve_rows(&p.alloc, stream.len());
             let session = SeqSession::Paged(paged);
-            self.push_active(id, stream, arrived, session);
+            self.push_active(id, stream, arrived, limits, session);
         }
         // 2) phase snapshot + serial prefill (same structure as the
         // monolithic tick; a frame-starved chunk defers to next tick)
         self.decode_phase.clear();
         self.decode_phase.extend(self.active.iter().map(|s| s.prefilled == s.stream.prefill));
         for i in 0..self.active.len() {
-            if !self.decode_phase[i] {
+            if !self.decode_phase[i] && self.active[i].outcome.is_none() {
                 let Some(p) = self.paging.as_mut() else { break };
                 self.active[i].advance_prefill_paged(chunk, &mut p.alloc, &mut p.registry, tick);
             }
@@ -708,7 +952,7 @@ impl<'e> SessionManager<'e> {
         // out of this tick's batch untouched
         self.ready_idx.clear();
         for (i, (s, &d)) in self.active.iter().zip(&self.decode_phase).enumerate() {
-            if d && s.decoded < s.stream.decode_steps() {
+            if d && s.outcome.is_none() && s.decoded < s.target_steps() {
                 self.ready_idx.push(i);
             }
         }
@@ -750,7 +994,17 @@ impl<'e> SessionManager<'e> {
             0 => {}
             1 => {
                 if let Some(p) = self.paging.as_ref() {
-                    self.active[self.ready_idx[0]].finish_decode_paged(&p.alloc, self.engine.exec());
+                    let i = self.ready_idx[0];
+                    let alloc = &p.alloc;
+                    let exec = self.engine.exec();
+                    let seq = &mut self.active[i];
+                    // a panic here (injected or real) is contained to
+                    // this session — see the monolithic tick's lone arm
+                    if catch_unwind(AssertUnwindSafe(|| seq.finish_decode_paged(alloc, exec)))
+                        .is_err()
+                    {
+                        seq.outcome = Some(SeqOutcome::Quarantined);
+                    }
                 }
             }
             _ => {
@@ -759,28 +1013,35 @@ impl<'e> SessionManager<'e> {
                 let idx = &self.ready_idx;
                 if let Some(p) = self.paging.as_ref() {
                     let alloc = &p.alloc;
-                    self.engine.exec().for_each_ws(idx.len(), &mut self.tick_ws, |t, _ws| {
-                        // SAFETY: `ready_idx` holds distinct in-bounds
-                        // indices into `active`, and `for_each_ws` hands
-                        // each `t` to exactly one participant — so every
-                        // `ActiveSeq` is mutably borrowed at most once,
-                        // and never while `active` itself is touched. The
-                        // allocator is only *read* during the compute
-                        // halves (all `&mut` work happened in the serial
-                        // append phase above).
-                        let seq = unsafe { &mut *base.0.add(idx[t]) };
-                        seq.finish_decode_paged(alloc, Exec::Inline);
-                    });
+                    let bad =
+                        self.engine.exec().try_for_each_ws(idx.len(), &mut self.tick_ws, |t, _ws| {
+                            // SAFETY: `ready_idx` holds distinct in-bounds
+                            // indices into `active`, and `try_for_each_ws`
+                            // hands each `t` to exactly one participant —
+                            // so every `ActiveSeq` is mutably borrowed at
+                            // most once, and never while `active` itself
+                            // is touched. The allocator is only *read*
+                            // during the compute halves (all `&mut` work
+                            // happened in the serial append phase above).
+                            // A panicking index unwinds out of its closure
+                            // only; it is reported, never retried.
+                            let seq = unsafe { &mut *base.0.add(idx[t]) };
+                            seq.finish_decode_paged(alloc, Exec::Inline);
+                        });
+                    for t in bad {
+                        let slot = self.ready_idx[t];
+                        self.active[slot].outcome = Some(SeqOutcome::Quarantined);
+                    }
                 }
             }
         }
         // 4) retirement releases the session's frame references back to
-        // the pool before handing the result to the caller
-        // sparge-lint: allow(hot-path-no-alloc)
-        let mut done = Vec::new();
+        // the pool before handing the result to the caller — terminal
+        // outcomes (quarantine, deadline) take the same release path an
+        // eviction uses, so no frame outlives its stream
         let mut i = 0;
         while i < self.active.len() {
-            if self.active[i].finished() {
+            if self.active[i].finished() || self.active[i].outcome.is_some() {
                 let mut seq = self.active.remove(i);
                 if let (SeqSession::Paged(ps), Some(p)) = (&mut seq.session, self.paging.as_mut()) {
                     ps.release(&mut p.alloc);
@@ -789,6 +1050,38 @@ impl<'e> SessionManager<'e> {
             } else {
                 i += 1;
             }
+        }
+        done
+    }
+
+    /// Graceful drain: stop admitting (every still-pending stream sheds
+    /// terminally), tick until every resident finishes or cancels by
+    /// its limits, release the shared-prefix registry, and assert the
+    /// frame pool is whole — zero frames in use, every frame back on
+    /// the free list. Returns the terminal [`SeqResult`]s so the caller
+    /// can answer every in-flight request before shutdown.
+    pub fn drain(&mut self) -> Vec<SeqResult> {
+        let mut done = Vec::new();
+        if let Some(p) = self.paging.as_mut() {
+            while let Some((id, stream, arrived, _)) = p.pending.pop_front() {
+                p.alloc.note_load_shed();
+                done.push(Self::terminal_result(id, &stream, arrived, SeqOutcome::Shed));
+            }
+        }
+        // Every tick retires at least the sessions whose outcome is
+        // decided, and resident sessions always make progress once the
+        // pending queue is empty (admission pressure is gone, injected
+        // exhaustion budgets are finite) — the guard only trips on a
+        // genuine livelock bug.
+        let mut guard: u64 = 0;
+        while self.active() > 0 {
+            done.extend(self.tick());
+            guard += 1;
+            assert!(guard < 1_000_000, "SessionManager::drain failed to converge");
+        }
+        if let Some(p) = self.paging.as_mut() {
+            p.registry.clear(&mut p.alloc);
+            p.alloc.assert_all_free();
         }
         done
     }
@@ -846,6 +1139,7 @@ pub fn run_sequential(engine: &AttnEngine, id: u64, stream: &SeqStream) -> SeqRe
         tpot,
         latency: arrived.elapsed().as_secs_f64(),
         compute,
+        outcome: SeqOutcome::Completed,
     }
 }
 
@@ -856,7 +1150,7 @@ mod tests {
     use crate::sparge::SpargeParams;
 
     fn spec(prefill: usize, decode: usize, seed: u64) -> AttnStreamSpec {
-        AttnStreamSpec { prefill, decode, d: 16, seed }
+        AttnStreamSpec { prefill, decode, d: 16, seed, ..Default::default() }
     }
 
     fn serving_engine(bq: usize, bk: usize, pool: usize) -> AttnEngine {
@@ -1021,5 +1315,214 @@ mod tests {
         assert!(r0.ttft > 0.0);
         assert_eq!(r0.tokens, 0);
         assert!(r0.tpot.is_empty());
+    }
+
+    use crate::coordinator::fault::{FaultEvent, FaultPlan};
+
+    #[test]
+    fn injected_panic_quarantines_only_its_session() {
+        // Session 1 panics on tick 2's batched fan-out; sessions 0 and 2
+        // must complete bitwise-identically to a fault-free run.
+        let engine = serving_engine(8, 8, 2);
+        let specs = [spec(0, 6, 61), spec(0, 6, 62), spec(0, 6, 63)];
+        let clean: Vec<SeqResult> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| run_sequential(&engine, i as u64, &SeqStream::synth(s)))
+            .collect();
+        let mut mgr = SessionManager::new(&engine, 8);
+        mgr.set_fault_plan(Some(FaultPlan::new(vec![FaultEvent {
+            at_tick: 2,
+            session: Some(1),
+            kind: FaultKind::WorkerPanic,
+        }])));
+        for (i, s) in specs.iter().enumerate() {
+            mgr.admit(i as u64, SeqStream::synth(s), Instant::now());
+        }
+        let mut done = Vec::new();
+        while mgr.active() > 0 {
+            done.extend(mgr.tick());
+        }
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), 3, "every request reaches exactly one outcome");
+        assert_eq!(done[1].outcome, SeqOutcome::Quarantined);
+        assert_eq!(mgr.faults_injected(), 1);
+        for i in [0usize, 2] {
+            assert_eq!(done[i].outcome, SeqOutcome::Completed);
+            assert_eq!(done[i].out, clean[i].out, "survivor {i} diverged from fault-free run");
+            assert_eq!(done[i].stats, clean[i].stats);
+        }
+    }
+
+    #[test]
+    fn poisoned_input_is_screened_before_any_kernel() {
+        let engine = serving_engine(8, 8, 1);
+        let mut mgr = SessionManager::new(&engine, 8);
+        mgr.set_fault_plan(Some(FaultPlan::new(vec![FaultEvent {
+            at_tick: 3,
+            session: Some(0),
+            kind: FaultKind::PoisonInput,
+        }])));
+        mgr.admit(0, SeqStream::synth(&spec(0, 8, 71)), Instant::now());
+        let mut done = Vec::new();
+        while mgr.active() > 0 {
+            done.extend(mgr.tick());
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].outcome, SeqOutcome::Quarantined);
+        // the screen caught it at the tick boundary: the poisoned row
+        // never reached a kernel, so every produced row is finite
+        assert!(done[0].out.data().iter().all(|x| x.is_finite()));
+        assert!(done[0].tokens < 8);
+    }
+
+    #[test]
+    fn stall_fault_changes_no_bits() {
+        let engine = serving_engine(8, 8, 2);
+        let specs = [spec(0, 5, 81), spec(0, 5, 82)];
+        let clean: Vec<SeqResult> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| run_sequential(&engine, i as u64, &SeqStream::synth(s)))
+            .collect();
+        let mut mgr = SessionManager::new(&engine, 8);
+        mgr.set_fault_plan(Some(FaultPlan::new(vec![FaultEvent {
+            at_tick: 1,
+            session: None,
+            kind: FaultKind::Stall { micros: 300 },
+        }])));
+        for (i, s) in specs.iter().enumerate() {
+            mgr.admit(i as u64, SeqStream::synth(s), Instant::now());
+        }
+        let mut done = Vec::new();
+        while mgr.active() > 0 {
+            done.extend(mgr.tick());
+        }
+        done.sort_by_key(|r| r.id);
+        for (d, c) in done.iter().zip(&clean) {
+            assert_eq!(d.outcome, SeqOutcome::Completed);
+            assert_eq!(d.out, c.out, "a stall must never change output bits");
+        }
+    }
+
+    #[test]
+    fn token_budget_truncates_and_completes() {
+        let engine = serving_engine(8, 8, 1);
+        let mut mgr = SessionManager::new(&engine, 8);
+        let limits = RequestLimits { deadline_ms: None, token_budget: Some(3) };
+        mgr.admit_with(0, SeqStream::synth(&spec(16, 10, 91)), Instant::now(), limits);
+        let mut done = Vec::new();
+        while mgr.active() > 0 {
+            done.extend(mgr.tick());
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].outcome, SeqOutcome::Completed);
+        assert_eq!(done[0].tokens, 3, "budget is a stop condition");
+        // budgeted prefix is bitwise-identical to the unbudgeted run
+        let full = run_sequential(&engine, 0, &SeqStream::synth(&spec(16, 10, 91)));
+        assert_eq!(done[0].out.data(), &full.out.data()[..done[0].out.data().len()]);
+    }
+
+    #[test]
+    fn expired_deadline_cancels_at_tick_boundary() {
+        let engine = serving_engine(8, 8, 1);
+        let mut mgr = SessionManager::new(&engine, 8);
+        let limits = RequestLimits { deadline_ms: Some(0), token_budget: None };
+        // arrived in the past: already expired at the first tick boundary
+        mgr.admit_with(0, SeqStream::synth(&spec(8, 4, 92)), Instant::now(), limits);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let mut done = Vec::new();
+        while mgr.active() > 0 {
+            done.extend(mgr.tick());
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].outcome, SeqOutcome::DeadlineCancelled);
+        assert_eq!(done[0].tokens, 0, "cancelled before any decode step");
+    }
+
+    #[test]
+    fn drain_finishes_residents_and_sheds_pending() {
+        // Paged manager with a pool sized for one stream: drain must
+        // finish the resident, shed the queue, and leave zero frames.
+        let engine = serving_engine(8, 8, 1);
+        let alloc = PageAllocator::new(4, 8, 16, 16);
+        let mut mgr = SessionManager::new_paged(&engine, 8, alloc);
+        for i in 0..4u64 {
+            mgr.admit(i, SeqStream::synth(&spec(8, 4, 100 + i)), Instant::now());
+        }
+        // one tick: the first stream(s) go resident, the rest stay queued
+        let mut done = mgr.tick();
+        done.extend(mgr.drain());
+        assert_eq!(mgr.active(), 0);
+        assert_eq!(mgr.pending(), 0);
+        assert_eq!(done.len(), 4, "every admitted request terminated exactly once");
+        let stats = mgr.page_stats().expect("paged");
+        assert_eq!(stats.frames_in_use, 0, "drain returned every frame");
+        assert!(done.iter().all(|r| matches!(
+            r.outcome,
+            SeqOutcome::Completed | SeqOutcome::Shed
+        )));
+        assert!(done.iter().any(|r| r.outcome == SeqOutcome::Completed));
+    }
+
+    #[test]
+    fn unservable_stream_sheds_instead_of_wedging_the_queue() {
+        // A stream needing more frames than the pool owns must shed
+        // terminally — and the stream queued behind it must still run.
+        let engine = serving_engine(8, 8, 1);
+        let alloc = PageAllocator::new(2, 8, 16, 16); // 2 frames = 16 rows
+        let mut mgr = SessionManager::new_paged(&engine, 8, alloc);
+        mgr.admit(0, SeqStream::synth(&spec(32, 4, 110)), Instant::now()); // needs 5 frames
+        mgr.admit(1, SeqStream::synth(&spec(8, 2, 111)), Instant::now()); // fits
+        let mut done = Vec::new();
+        let mut guard = 0;
+        while mgr.active() > 0 || mgr.pending() > 0 {
+            done.extend(mgr.tick());
+            guard += 1;
+            assert!(guard < 1000, "queue wedged behind an unservable stream");
+        }
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].outcome, SeqOutcome::Shed);
+        assert_eq!(done[1].outcome, SeqOutcome::Completed);
+        mgr.release_prefixes();
+        let stats = mgr.page_stats().expect("paged");
+        assert_eq!(stats.frames_in_use, 0);
+    }
+
+    #[test]
+    fn injected_exhaustion_defers_but_never_breaks_the_paged_run() {
+        // Artificial claim denials mid-run: the defer/evict machinery
+        // absorbs them and the final outputs match the fault-free run.
+        let engine = serving_engine(8, 8, 1);
+        let mk = || PageAllocator::new(16, 8, 16, 16);
+        let specs = [spec(16, 4, 120), spec(16, 4, 121)];
+        let run = |plan: Option<FaultPlan>| {
+            let mut mgr = SessionManager::new_paged(&engine, 8, mk());
+            mgr.set_fault_plan(plan);
+            for (i, s) in specs.iter().enumerate() {
+                mgr.admit(i as u64, SeqStream::synth(s), Instant::now());
+            }
+            let mut done = Vec::new();
+            let mut guard = 0;
+            while mgr.active() > 0 || mgr.pending() > 0 {
+                done.extend(mgr.tick());
+                guard += 1;
+                assert!(guard < 10_000, "exhaustion wedged the loop");
+            }
+            done.sort_by_key(|r| r.id);
+            done
+        };
+        let clean = run(None);
+        let faulted = run(Some(FaultPlan::new(vec![
+            FaultEvent { at_tick: 2, session: None, kind: FaultKind::FrameExhaustion { claims: 3 } },
+            FaultEvent { at_tick: 4, session: None, kind: FaultKind::FrameExhaustion { claims: 2 } },
+        ])));
+        assert_eq!(clean.len(), faulted.len());
+        for (c, f) in clean.iter().zip(&faulted) {
+            assert_eq!(f.outcome, SeqOutcome::Completed);
+            assert_eq!(c.out, f.out, "exhaustion changed output bits (id {})", c.id);
+            assert_eq!(c.stats, f.stats);
+        }
     }
 }

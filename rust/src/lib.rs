@@ -77,6 +77,21 @@
 //! that loads and executes the artifacts. Python never runs on the
 //! request path.
 //!
+//! The serving loop also carries a **graceful-degradation tier**
+//! ([`coordinator::fault`]): faults degrade one request, never the
+//! loop. A worker-job panic or poisoned (NaN/Inf) decode input
+//! quarantines only its own stream (frames released through the normal
+//! eviction path, terminal error recorded); per-request deadlines and
+//! token budgets cancel or truncate at tick boundaries;
+//! `SessionManager::drain` finishes or sheds every resident and hands
+//! the frame pool back whole, wired into the TCP front end's shutdown
+//! along with per-connection read/write timeouts. A seeded
+//! [`coordinator::FaultPlan`] injects panics, frame exhaustion,
+//! stalls, and poisoned inputs on schedule; with no plan installed the
+//! recovery machinery costs one branch per tick and zero allocations.
+//! `tests/chaos_serving.rs` property-tests the whole tier over seeded
+//! random fault schedules.
+//!
 //! These contracts are machine-checked: `cargo run -p xtask -- lint`
 //! runs the repo-contract static-analysis pass (unsafe hygiene,
 //! fixed-order/no-FMA, hot-path/no-alloc, thread-spawn and serving-panic

@@ -211,20 +211,25 @@ struct PoolState {
     next: usize,
     /// Indices finished for the current job.
     finished: usize,
-    /// An index of the *current* job panicked; latched into
-    /// `panicked_epochs` when the job completes.
-    panicked: bool,
-    /// Epochs of completed jobs that had a panicking index, each awaiting
-    /// pickup by its own submitter. A *set* keyed by epoch — not a plain
-    /// flag — so that with concurrent submitters neither a queued
-    /// submitter installing the next job nor a second panicking job
-    /// completing first can erase a panic before the panicked job's own
-    /// submitter observes (and removes) its entry. Bounded by the number
-    /// of in-flight submitters: every installed epoch is awaited by
-    /// exactly one `run`, which consumes its entry. This propagates
-    /// worker panics like `std::thread::scope`'s join would, instead of
-    /// deadlocking the pool.
-    panicked_epochs: Vec<u64>,
+    /// Indices of the *current* job that panicked; latched into
+    /// `panicked_epochs` when the job completes. Empty on the clean path
+    /// (an empty `Vec` never allocates), so the zero-alloc decode
+    /// contract holds with no faults in flight.
+    panicked_idx: Vec<usize>,
+    /// Completed jobs that had panicking indices — `(epoch, indices)` —
+    /// each awaiting pickup by its own submitter. A *set* keyed by epoch
+    /// — not a plain flag — so that with concurrent submitters neither a
+    /// queued submitter installing the next job nor a second panicking
+    /// job completing first can erase a panic before the panicked job's
+    /// own submitter observes (and removes) its entry. Bounded by the
+    /// number of in-flight submitters: every installed epoch is awaited
+    /// by exactly one `run`, which consumes its entry. Carrying the
+    /// *indices* (not just the fact of a panic) lets a fault-owning
+    /// submitter quarantine exactly the failed sessions instead of
+    /// re-raising; `run_ws` still re-raises for callers without a fault
+    /// domain. This propagates worker panics like `std::thread::scope`'s
+    /// join would, instead of deadlocking the pool.
+    panicked_epochs: Vec<(u64, Vec<usize>)>,
     shutdown: bool,
 }
 
@@ -310,7 +315,51 @@ impl WorkerPool {
             f(0, ws);
             return;
         }
-        // Erase the borrow lifetime; `run_ws` does not return until all
+        let panicked = self.run_ws_protocol(n, ws, f);
+        assert!(panicked.is_empty(), "WorkerPool job panicked on a worker thread");
+    }
+
+    /// [`WorkerPool::run_ws`] for callers that own a fault domain: worker
+    /// panics are *attributed*, not re-raised. Returns the sorted indices
+    /// whose closure invocation panicked (empty on a clean run — and an
+    /// empty `Vec` never allocates, so the fault-free path stays
+    /// zero-alloc). Every index is still visited exactly once; a panic at
+    /// index `i` never prevents other indices from running, and the
+    /// per-epoch latch guarantees the indices land on *this* submitter
+    /// even with concurrent submitters interleaving on the shared pool
+    /// (see `PoolState::panicked_epochs`).
+    pub fn run_ws_caught(
+        &self,
+        n: usize,
+        ws: &mut Workspace,
+        f: &(dyn Fn(usize, &mut Workspace) + Sync),
+    ) -> Vec<usize> {
+        if n == 0 {
+            // sparge-lint: allow(hot-path-no-alloc) — empty, never allocates
+            return Vec::new();
+        }
+        if n == 1 {
+            // decode-shaped fast path: no locking, caller workspace
+            return match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0, ws))) {
+                // sparge-lint: allow(hot-path-no-alloc) — empty, never allocates
+                Ok(()) => Vec::new(),
+                // sparge-lint: allow(hot-path-no-alloc) — fault path only
+                Err(_) => vec![0],
+            };
+        }
+        self.run_ws_protocol(n, ws, f)
+    }
+
+    /// The shared submit/participate/await protocol behind [`run_ws`]
+    /// (which re-raises on any panicked index) and [`run_ws_caught`]
+    /// (which returns them). `n >= 2`.
+    fn run_ws_protocol(
+        &self,
+        n: usize,
+        ws: &mut Workspace,
+        f: &(dyn Fn(usize, &mut Workspace) + Sync),
+    ) -> Vec<usize> {
+        // Erase the borrow lifetime; this frame does not return until all
         // workers are done with the pointer (see [`JobPtr`]).
         let ptr: *const (dyn Fn(usize, &mut Workspace) + Sync + '_) = f;
         // SAFETY: the transmute only erases the borrow lifetime. Workers
@@ -328,7 +377,7 @@ impl WorkerPool {
         st.job = Some(job);
         st.next = 0;
         st.finished = 0;
-        st.panicked = false;
+        st.panicked_idx.clear();
         self.shared.work.notify_all();
         // Participate: claim chunks like a worker until the job's indices
         // are exhausted (or the job completed under our feet).
@@ -340,21 +389,19 @@ impl WorkerPool {
             let i1 = (i0 + claim_chunk(n - i0, self.shared.size + 1)).min(n);
             st.next = i1;
             drop(st);
-            let mut bad = false;
+            let mut bad = Vec::new();
             for i in i0..i1 {
                 if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, ws))).is_err() {
-                    bad = true;
+                    bad.push(i);
                 }
             }
             st = self.shared.state.lock().unwrap();
-            if bad {
-                st.panicked = true;
-            }
+            st.panicked_idx.extend_from_slice(&bad);
             st.finished += i1 - i0;
             if st.finished == n {
-                if st.panicked {
-                    st.panicked_epochs.push(epoch);
-                    st.panicked = false;
+                if !st.panicked_idx.is_empty() {
+                    let idx = std::mem::take(&mut st.panicked_idx);
+                    st.panicked_epochs.push((epoch, idx));
                 }
                 st.completed = epoch;
                 st.job = None;
@@ -367,15 +414,15 @@ impl WorkerPool {
         // per-epoch latch: immune to a queued submitter having already
         // installed the *next* job — or a later job having also panicked
         // — by the time this submitter wakes
-        let panicked = match st.panicked_epochs.iter().position(|&e| e == epoch) {
-            Some(pos) => {
-                st.panicked_epochs.swap_remove(pos);
-                true
-            }
-            None => false,
+        let mut panicked = match st.panicked_epochs.iter().position(|(e, _)| *e == epoch) {
+            Some(pos) => st.panicked_epochs.swap_remove(pos).1,
+            None => Vec::new(),
         };
         drop(st);
-        assert!(!panicked, "WorkerPool job panicked on a worker thread");
+        // scheduling decides recording order; the caller-visible order
+        // must not depend on it
+        panicked.sort_unstable();
+        panicked
     }
 
     /// Deterministic scoped map over the pool: results are collected per
@@ -469,21 +516,20 @@ fn worker_loop(shared: &PoolShared) {
         // `run_ws` (it cannot return before `finished == n`), so the
         // closure behind `job.f` is alive for this whole chunk.
         let func = unsafe { &*job.f };
-        let mut bad = false;
+        let mut bad = Vec::new();
         for i in i0..i1 {
             if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| func(i, &mut ws))).is_err() {
-                bad = true;
+                bad.push(i);
             }
         }
         st = shared.state.lock().unwrap();
-        if bad {
-            st.panicked = true;
-        }
+        st.panicked_idx.extend_from_slice(&bad);
         st.finished += i1 - i0;
         if st.finished == job.n {
-            if st.panicked {
-                st.panicked_epochs.push(st.epoch);
-                st.panicked = false;
+            if !st.panicked_idx.is_empty() {
+                let epoch = st.epoch;
+                let idx = std::mem::take(&mut st.panicked_idx);
+                st.panicked_epochs.push((epoch, idx));
             }
             st.completed = st.epoch;
             st.job = None;
@@ -771,6 +817,29 @@ mod tests {
         }));
         assert!(result.is_err(), "worker panic must propagate to the submitter");
         // the job slot was released; the pool keeps working
+        assert_eq!(pool.map(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn run_ws_caught_attributes_indices_without_reraising() {
+        let pool = WorkerPool::new(2);
+        let mut ws = Workspace::default();
+        // clean run: empty attribution, nothing raised
+        assert!(pool.run_ws_caught(8, &mut ws, &|_i, _ws| {}).is_empty());
+        // two failing indices out of 8: exactly those, sorted, and the
+        // remaining indices all still ran
+        let hits: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        let bad = pool.run_ws_caught(8, &mut ws, &|i, _ws| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+            if i == 2 || i == 5 {
+                panic!("boom");
+            }
+        });
+        assert_eq!(bad, vec![2, 5]);
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1), "an index was skipped");
+        // the pool survives and the n == 1 inline fast path attributes too
+        let bad = pool.run_ws_caught(1, &mut ws, &|_i, _ws| panic!("boom"));
+        assert_eq!(bad, vec![0]);
         assert_eq!(pool.map(3, |i| i), vec![0, 1, 2]);
     }
 

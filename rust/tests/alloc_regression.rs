@@ -202,7 +202,7 @@ fn warmed_up_decode_steps_allocate_nothing() {
             );
             assert_eq!(session.len(), 223);
             session.release(&mut alloc);
-            assert_eq!(alloc.stats().frames_in_use, 0);
+            alloc.assert_all_free();
         }
     }
 
@@ -271,6 +271,10 @@ fn warmed_up_decode_steps_allocate_nothing() {
         assert_eq!(delta, 0, "warmed paged serving tick allocated ({delta} / 7 ticks of 3 sessions)");
         let ps = mgr.page_stats().expect("paged manager has page stats");
         assert_eq!(ps.claims, 15, "the measured window claimed each session's fifth frame");
+        // finish the residents and prove the pool comes back whole
+        mgr.drain();
+        mgr.release_prefixes();
+        mgr.assert_frames_all_free();
     }
 
     // -- Pool execution: workers' own arenas absorb the span scratch ----

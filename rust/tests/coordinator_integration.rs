@@ -6,7 +6,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-use sparge::coordinator::{AttnMode, BatchPolicy, Coordinator, EngineHandle};
+use sparge::coordinator::{AttnMode, BatchPolicy, Coordinator, EngineHandle, ServeOptions};
 use sparge::runtime::Manifest;
 use sparge::util::json::Json;
 
@@ -110,6 +110,89 @@ fn tcp_server_json_protocol() {
 
     let bad = ask("this is not json");
     assert!(bad.get("error").is_some());
+
+    drop(client);
+    drop(reader);
+    server.join().unwrap();
+}
+
+#[test]
+fn connection_hardening_timeouts_and_structured_read_errors() {
+    // No artifact gate: a kernel-only coordinator exercises the server's
+    // connection hardening. `handle_conn` must (a) arm read/write
+    // timeouts on the accepted socket, (b) answer malformed JSON with a
+    // structured {"error": ...} line, and (c) answer a line that fails
+    // to *read* (invalid UTF-8) with a structured error before closing —
+    // never a silent drop.
+    let opts = ServeOptions {
+        chunk: 32,
+        params: sparge::sparge::SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false },
+        cfg: sparge::attention::AttnConfig {
+            bq: 16,
+            bk: 8,
+            causal: true,
+            scale: None,
+            cw: 2,
+            row_offset: 0,
+        },
+        threads: 1,
+        kv_split: sparge::attention::KvSplit::Auto,
+        fault: None,
+    };
+    let c = Arc::new(Coordinator::start_kernel(BatchPolicy::default(), opts));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let c2 = Arc::clone(&c);
+    let server = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        // a try_clone dups the fd but shares the socket, so the timeouts
+        // handle_conn arms are observable on the probe after it returns
+        let probe = stream.try_clone().unwrap();
+        let r = sparge::coordinator::server::handle_conn(&c2, stream);
+        assert_eq!(
+            probe.read_timeout().unwrap(),
+            Some(sparge::coordinator::server::CONN_READ_TIMEOUT),
+            "handle_conn must arm the read timeout"
+        );
+        assert_eq!(
+            probe.write_timeout().unwrap(),
+            Some(sparge::coordinator::server::CONN_WRITE_TIMEOUT),
+            "handle_conn must arm the write timeout"
+        );
+        assert!(r.is_err(), "an unreadable line must end the connection with an error");
+    });
+
+    let mut client = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(client.try_clone().unwrap());
+    let mut ask = |req: &[u8]| -> Json {
+        client.write_all(req).unwrap();
+        client.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    };
+
+    // sanity: the connection serves a valid op first
+    let pong = ask(br#"{"op":"ping"}"#);
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+
+    // malformed JSON: structured error, connection stays open
+    let bad = ask(b"this is not json");
+    assert!(
+        bad.get("error").and_then(|v| v.as_str()).is_some_and(|e| e.contains("bad json")),
+        "malformed JSON must get a structured error"
+    );
+    let pong = ask(br#"{"op":"ping"}"#);
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)), "connection survives a bad line");
+
+    // unreadable line (invalid UTF-8): structured error, then close
+    let err = ask(&[0xff, 0xfe, 0xfd]);
+    assert!(
+        err.get("error").and_then(|v| v.as_str()).is_some_and(|e| e.contains("read failed")),
+        "an unreadable line must get a structured error before the connection closes"
+    );
+    let mut rest = String::new();
+    assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "connection closes after a read failure");
 
     drop(client);
     drop(reader);

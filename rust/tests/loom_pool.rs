@@ -162,3 +162,39 @@ fn panic_latch_never_misattributes_across_submitters() {
         drop(pool);
     });
 }
+
+#[test]
+fn caught_fault_domain_delivers_to_its_own_epoch_only() {
+    // The serving fault tier's attribution contract: a tick that submits
+    // through `run_ws_caught` (the fault-domain entry — panics are
+    // collected per index instead of re-raised) must receive exactly the
+    // indices that panicked in ITS job, while a concurrent clean
+    // submitter's epoch consumes nothing — on every interleaving,
+    // including schedules where the faulting job's epoch latches around
+    // the clean submitter's wait. A single shared latch (rather than the
+    // epoch-keyed `panicked_epochs` set) would fail here by handing the
+    // clean epoch the foreign index or by double-delivering it.
+    quiet_expected_panics();
+    loom::model(|| {
+        let pool = Arc::new(WorkerPool::new(1));
+        let p = Arc::clone(&pool);
+        let faulter = loom::thread::spawn(move || {
+            let mut ws = Workspace::default();
+            let bad = p.run_ws_caught(2, &mut ws, &|i, _ws| {
+                if i == 1 {
+                    panic!("boom");
+                }
+            });
+            assert_eq!(bad, vec![1], "the faulting tick must collect exactly its own bad index");
+        });
+        let mut ws = Workspace::default();
+        let hits = AtomicUsize::new(0);
+        let clean = pool.run_ws_caught(2, &mut ws, &|_i, _ws| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(clean.is_empty(), "a clean epoch must never absorb a foreign panic");
+        assert_eq!(hits.load(Ordering::SeqCst), 2, "clean job must complete all indices");
+        faulter.join().expect("faulting submitter must not itself panic — run_ws_caught contains");
+        drop(pool);
+    });
+}

@@ -123,7 +123,7 @@ fn paged_matches_monolithic_bitwise_f32_all_compositions() {
                     assert_eq!(a.stats, b.stats, "{tag}: stats bits");
                     assert_eq!(a.mask, b.mask, "{tag}: stage-1 mask");
                 }
-                assert_eq!(alloc.stats().frames_in_use, 0, "release returned every frame");
+                alloc.assert_all_free();
             }
         }
     }
@@ -166,6 +166,7 @@ fn paged_int8_allclose_with_exact_stats() {
                 assert_eq!(a.stats, b.stats, "{tag}: stats must be exact");
                 assert_eq!(a.mask, b.mask, "{tag}: stage-1 mask must be exact");
             }
+            alloc.assert_all_free();
         }
     }
 }
@@ -240,7 +241,7 @@ fn prefix_sharing_saves_frames_and_keeps_outputs_bitwise() {
     s1.release(&mut alloc);
     s2.release(&mut alloc);
     reg.clear(&mut alloc);
-    assert_eq!(alloc.stats().frames_in_use, 0, "all frames recycled");
+    alloc.assert_all_free();
 }
 
 #[test]
@@ -283,7 +284,7 @@ fn prefix_hit_requires_matching_query_rows() {
     s2.release(&mut alloc);
     s3.release(&mut alloc);
     reg.clear(&mut alloc);
-    assert_eq!(alloc.stats().frames_in_use, 0);
+    alloc.assert_all_free();
 }
 
 #[test]
@@ -302,8 +303,8 @@ fn mid_tick_append_half_is_never_evicted() {
     // must still retire with the sequential baseline's exact bits.
     let cfg = AttnConfig { bq: 8, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
     let engine = AttnEngine::builder().config(cfg).build();
-    let shared = AttnStreamSpec { prefill: 12, decode: 8, d: 16, seed: 951 };
-    let other = AttnStreamSpec { prefill: 16, decode: 8, d: 16, seed: 952 };
+    let shared = AttnStreamSpec { prefill: 12, decode: 8, d: 16, seed: 951, ..Default::default() };
+    let other = AttnStreamSpec { prefill: 16, decode: 8, d: 16, seed: 952, ..Default::default() };
     let specs = [shared, shared, other];
     let sequential: Vec<_> = specs
         .iter()
@@ -333,6 +334,8 @@ fn mid_tick_append_half_is_never_evicted() {
     let ps = mgr.page_stats().expect("page stats");
     assert!(ps.evictions > 0, "the scenario must actually exercise LRU eviction");
     assert!(ps.load_sheds > 0, "the cascade must shed when only mid-step sessions remain");
+    mgr.release_prefixes();
+    mgr.assert_frames_all_free();
 }
 
 #[test]
@@ -377,6 +380,7 @@ fn evict_and_repage_in_decode_is_bitwise() {
         assert_eq!(a.mask, b.mask, "evicted run step {t} mask");
     }
     session.release(&mut alloc);
+    alloc.assert_all_free();
 
     // INT8: evicted vs never-evicted paged twins must agree exactly
     let engine8 = AttnEngine::builder().config(cfg).precision(Precision::Int8).build();
@@ -399,6 +403,9 @@ fn evict_and_repage_in_decode_is_bitwise() {
         assert_eq!(a.out, b.out, "int8 evict/repage step {t}: requantized payloads must match");
         assert_eq!(a.stats, b.stats);
     }
+    s8.release(&mut alloc_b);
+    alloc_a.assert_all_free();
+    alloc_b.assert_all_free();
 }
 
 #[test]
@@ -480,6 +487,7 @@ fn free_list_exhaustion_defers_and_never_corrupts() {
         if alloc.free_frames() != frames {
             return Err("free list incomplete".into());
         }
+        alloc.assert_all_free();
         Ok(())
     });
 }
@@ -512,7 +520,7 @@ fn paged_manager_matches_monolithic_manager_bitwise() {
     let params = SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false };
     let engine =
         AttnEngine::builder().config(cfg).sparge(&params).execution(Execution::Pool(2)).build();
-    let spec = |prefill, decode, seed| AttnStreamSpec { prefill, decode, d: 16, seed };
+    let spec = |prefill, decode, seed| AttnStreamSpec { prefill, decode, d: 16, seed, ..Default::default() };
     let specs = [
         spec(40, 8, 51),
         spec(16, 6, 52),
@@ -534,7 +542,7 @@ fn paged_manager_matches_monolithic_manager_bitwise() {
     let ps = paged_mgr.page_stats().expect("paged manager has page stats");
     assert_eq!(ps.prefix_hits, 1, "the duplicate prompt hits the registry");
     paged_mgr.release_prefixes();
-    assert_eq!(paged_mgr.page_stats().expect("stats").frames_in_use, 0, "drained manager frees the pool");
+    paged_mgr.assert_frames_all_free();
 }
 
 #[test]
@@ -545,7 +553,7 @@ fn paged_manager_defers_admission_under_frame_pressure() {
     // sequential baseline's bits.
     let cfg = AttnConfig { bq: 8, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
     let engine = AttnEngine::builder().config(cfg).build();
-    let spec = |seed| AttnStreamSpec { prefill: 16, decode: 8, d: 16, seed };
+    let spec = |seed| AttnStreamSpec { prefill: 16, decode: 8, d: 16, seed, ..Default::default() };
     let specs = [spec(61), spec(62), spec(63)];
     let sequential: Vec<_> = specs
         .iter()
@@ -563,4 +571,6 @@ fn paged_manager_defers_admission_under_frame_pressure() {
     let ps = mgr.page_stats().expect("page stats");
     assert!(ps.load_sheds > 0, "a 4-frame pool must shed under 3×3-frame load");
     assert!(ps.peak_frames <= 4, "admission never oversubscribed the pool");
+    mgr.release_prefixes();
+    mgr.assert_frames_all_free();
 }

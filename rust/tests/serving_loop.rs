@@ -22,11 +22,12 @@ fn opts() -> ServeOptions {
         cfg: AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 },
         threads: 2,
         kv_split: sparge::attention::KvSplit::Auto,
+        fault: None,
     }
 }
 
 fn spec(prefill: usize, decode: usize, seed: u64) -> AttnStreamSpec {
-    AttnStreamSpec { prefill, decode, d: 16, seed }
+    AttnStreamSpec { prefill, decode, d: 16, seed, ..Default::default() }
 }
 
 #[test]
