@@ -31,6 +31,12 @@
 //! the duplicate prefill), evictions, and load-shed (deferred)
 //! admissions once the traffic exceeds the pool.
 //!
+//! The **QoS** section runs mixed-priority traffic at 2x frame
+//! oversubscription with a memory offload tier installed and reports
+//! per-priority TTFT/TPOT p50/p99 plus the preempted / resumed /
+//! overload-transition counters (and asserts zero priority inversions)
+//! — the degradation-ordering half of the serving story.
+//!
 //! Run: `cargo bench --bench table8_serving`
 //! Pass `-- --json` to also write a `BENCH_table8.json` snapshot (the
 //! CI perf-trajectory artifact).
@@ -39,10 +45,11 @@
 
 use std::time::{Duration, Instant};
 
-use sparge::attention::{AttnConfig, AttnEngine, Execution, KvSplit, PageAllocator};
+use sparge::attention::{AttnConfig, AttnEngine, Execution, KvSplit, MemTier, PageAllocator};
+use sparge::coordinator::qos::PRIORITIES;
 use sparge::coordinator::{
-    run_sequential, AttnMode, AttnStreamSpec, BatchPolicy, Coordinator, SeqStream, ServeOptions,
-    SessionManager,
+    run_sequential, AttnMode, AttnStreamSpec, BatchPolicy, Coordinator, RequestLimits, SeqOutcome,
+    SeqStream, ServeOptions, SessionManager,
 };
 use sparge::experiments::{bench_threads, full_scale};
 use sparge::sparge::SpargeParams;
@@ -249,6 +256,7 @@ fn main() {
         threads,
         kv_split: KvSplit::Auto,
         fault: None,
+        paged: None,
     };
     // mixed traffic: short, medium, and long prompts, all decode-heavy
     // enough that interleaving matters
@@ -458,6 +466,116 @@ fn main() {
          retiring sessions return frames instead of growing the pool."
     );
 
+    // -- QoS under overload: per-priority latency at 2x oversubscription --
+    // Twice as many sessions as the pool covers, priorities mixed
+    // round-robin, a memory offload tier installed so preemption
+    // checkpoints instead of discarding. The overload detector should
+    // preempt/shed Low first: the spread between the High and Low TTFT
+    // p99 *is* the QoS mechanism, and the preempted/resumed counters
+    // below are the receipts. `priority_inversions` must print 0 — a
+    // higher-priority stream never waits on frames a lower one holds.
+    let qos_sessions = 8usize; // pool covers 4 => 2x frame oversubscription
+    println!(
+        "\nQoS serving — {qos_sessions} mixed-priority sessions over a {pool_frames}-frame pool \
+         (2x oversubscription), prefill {paged_prefill}, 24 tokens each"
+    );
+    let engine = AttnEngine::builder()
+        .config(opts.cfg)
+        .sparge(&opts.params)
+        .execution(Execution::Pool(threads))
+        .kv_split(KvSplit::Auto)
+        .build();
+    let mut mgr = SessionManager::new_paged(
+        &engine,
+        opts.chunk,
+        PageAllocator::new(pool_frames, opts.cfg.bk, 64, 64),
+    );
+    mgr.set_offload_tier(Box::new(MemTier::new()));
+    let t0 = Instant::now();
+    for i in 0..qos_sessions as u64 {
+        let spec = AttnStreamSpec {
+            prefill: paged_prefill,
+            decode: 24,
+            d: 64,
+            seed: 990 + i, // distinct prompts: no prefix sharing softens the pressure
+            ..Default::default()
+        };
+        mgr.admit_with(
+            i,
+            SeqStream::synth(&spec),
+            Instant::now(),
+            RequestLimits { priority: PRIORITIES[i as usize % 3], ..Default::default() },
+        );
+    }
+    let mut done = Vec::new();
+    let mut guard = 0usize;
+    while mgr.active() > 0 || mgr.pending() > 0 {
+        done.extend(mgr.tick());
+        guard += 1;
+        assert!(guard < 1_000_000, "qos serving failed to drain");
+    }
+    let qos_wall = t0.elapsed().as_secs_f64();
+    let (preempted, resumed, to_preempting, to_shedding, inversions) = mgr.qos_counters();
+    let mut qos_table = Table::new(
+        "per-priority latency under overload (preemption takes the lowest resident rank first)",
+        &["priority", "done", "TTFT p50", "TTFT p99", "TPOT p50", "TPOT p99"],
+    );
+    let mut qos_rows: Vec<Json> = Vec::new();
+    for p in PRIORITIES.iter().rev() {
+        // latency reservoirs cover completed streams only — a shed Low
+        // stream has no first token and would deflate the percentiles
+        let completed: Vec<_> = done
+            .iter()
+            .filter(|r| r.priority == *p && r.outcome == SeqOutcome::Completed)
+            .collect();
+        let mut ttft: Vec<f64> = completed.iter().map(|r| r.ttft).collect();
+        let mut tpot: Vec<f64> =
+            completed.iter().flat_map(|r| r.tpot.iter().copied()).collect();
+        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        tpot.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let count = completed.len();
+        // percentile_sorted asserts non-empty; an all-shed class reports 0
+        let pct = |v: &[f64], q: f64| if v.is_empty() { 0.0 } else { percentile_sorted(v, q) };
+        let (ttft_p50, ttft_p99) = (pct(&ttft, 0.50), pct(&ttft, 0.99));
+        let (tpot_p50, tpot_p99) = (pct(&tpot, 0.50), pct(&tpot, 0.99));
+        qos_table.row(&[
+            p.name().to_string(),
+            format!("{count}"),
+            format!("{} ms", fnum(ttft_p50 * 1e3, 1)),
+            format!("{} ms", fnum(ttft_p99 * 1e3, 1)),
+            format!("{} ms", fnum(tpot_p50 * 1e3, 2)),
+            format!("{} ms", fnum(tpot_p99 * 1e3, 2)),
+        ]);
+        qos_rows.push(Json::obj(vec![
+            ("priority", Json::str(p.name())),
+            ("done", Json::num(count as f64)),
+            ("ttft_p50_s", Json::num(ttft_p50)),
+            ("ttft_p99_s", Json::num(ttft_p99)),
+            ("tpot_p50_s", Json::num(tpot_p50)),
+            ("tpot_p99_s", Json::num(tpot_p99)),
+        ]));
+    }
+    qos_table.print();
+    println!(
+        "preempted {preempted}, resumed {resumed}, overload transitions \
+         {to_preempting} (-> preempting) / {to_shedding} (-> shedding), \
+         priority inversions {inversions} (must be 0), wall {} s",
+        fnum(qos_wall, 2)
+    );
+    assert_eq!(inversions, 0, "priority inversion under the bench schedule");
+    let qos_json = Json::obj(vec![
+        ("sessions", Json::num(qos_sessions as f64)),
+        ("pool_frames", Json::num(pool_frames as f64)),
+        ("oversubscription", Json::num(2.0)),
+        ("wall_s", Json::num(qos_wall)),
+        ("preempted", Json::num(preempted as f64)),
+        ("resumed", Json::num(resumed as f64)),
+        ("overload_to_preempting", Json::num(to_preempting as f64)),
+        ("overload_to_shedding", Json::num(to_shedding as f64)),
+        ("priority_inversions", Json::num(inversions as f64)),
+        ("by_priority", Json::Arr(qos_rows)),
+    ]);
+
     if json_mode {
         let doc = Json::obj(vec![
             ("bench", Json::str("table8_serving")),
@@ -467,6 +585,7 @@ fn main() {
             ("decode_phase", Json::Arr(batch_json)),
             ("solo_splitkv", Json::Arr(solo_json)),
             ("paged_serving", Json::Arr(paged_json)),
+            ("qos_serving", qos_json),
         ]);
         std::fs::write("BENCH_table8.json", doc.dump() + "\n").expect("write BENCH_table8.json");
         println!("\nwrote BENCH_table8.json");

@@ -54,8 +54,12 @@
 //! together. Frames are refcounted: identical prompts share their
 //! prefix frames copy-on-write ([`PagedAttnSession::prefill_shared`]),
 //! idle sessions spill and release ([`PagedAttnSession::evict`]) and
-//! transparently re-page-in on their next decode, and the serving loop
-//! admits work against the free-frame count instead of OOMing. The
+//! transparently re-page-in on their next decode, preempted sessions
+//! checkpoint through an [`offload`] tier
+//! ([`PagedAttnSession::suspend`]/[`PagedAttnSession::resume`] — in
+//! memory or checksummed on disk, byte-identical round-trips), and the
+//! serving loop admits work against the free-frame count instead of
+//! OOMing. The
 //! drivers are indifferent: both consume any [`KvSource`], and each
 //! `b_k`-aligned block request resolves to exactly one frame, so the
 //! paged path is bitwise-identical to the monolithic one for f32/λ-off
@@ -116,6 +120,7 @@
 pub mod dense;
 pub mod engine;
 pub mod flash;
+pub mod offload;
 pub mod paged;
 pub mod pipeline;
 pub mod types;
@@ -127,6 +132,7 @@ pub use engine::{
 };
 #[allow(deprecated)]
 pub use flash::{attention_flash, attention_flash_stats, attention_flash_stats_threads};
+pub use offload::{DiskTier, FrameCheckpoint, MemTier, OffloadError, OffloadTier};
 pub use paged::{prefix_hash, PageAllocator, PageStats, PagedAttnSession, PagedKv, PrefixRegistry};
 pub use pipeline::{
     run_tiled, run_tiled_into, run_tiled_into_kv, run_tiled_splitkv, run_tiled_splitkv_into,

@@ -1,0 +1,563 @@
+//! Tiered offload backends for checkpointed KV swap-out: where a
+//! preempted session's frame payload lives while its frames serve
+//! someone else.
+//!
+//! [`super::paged::PagedAttnSession::evict`] spills a session's frame
+//! contents into a session-owned buffer. This module generalizes that
+//! buffer into a seam: [`FrameCheckpoint`] is the spilled payload (K/V
+//! rows, the pooled stage-1 sums/sims, and — under INT8 — the per-frame
+//! quantized payload bytes), and an [`OffloadTier`] is anywhere such a
+//! payload can park:
+//!
+//! - [`MemTier`] — the in-memory tier the old private `Spill` buffer
+//!   grew into: checkpoints move in and out by pointer swap, no copy,
+//!   no serialization, cannot fail.
+//! - [`DiskTier`] — one file per checkpoint under a caller-chosen
+//!   directory, serialized with a trailing FNV-1a 64 checksum over
+//!   every preceding byte. A flipped bit, a truncated file, or a stale
+//!   format surfaces as [`OffloadError::Corrupt`] — **a value, never a
+//!   panic** — so the serving loop can quarantine the one stream whose
+//!   checkpoint rotted and keep running.
+//!
+//! ## Contracts
+//!
+//! **Byte-identical round-trips.** `store` then `load` returns the
+//! exact payload bits for every tier: f32 sections compare equal as
+//! bits (NaN payloads included) and INT8 payload bytes are bit-for-bit
+//! — the same spill/re-page-in contract the paged eviction tier pins in
+//! `tests/paged_kv.rs`, now holding across a serialization boundary
+//! (`tests/offload_tier.rs` sweeps random geometries × precisions
+//! through both tiers).
+//!
+//! **Corruption degrades, never detonates.** Every failure mode of a
+//! tier — missing key, IO error, checksum mismatch, malformed section
+//! lengths — is an [`OffloadError`]. This file is covered by
+//! sparge-lint's `serving-no-panic` rule: the serving loop calls into
+//! it on the preemption path and must keep degrading per-request.
+
+use std::path::PathBuf;
+
+/// Why a tier could not produce (or durably take) a checkpoint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OffloadError {
+    /// No payload is stored under the requested key.
+    Missing,
+    /// The payload failed verification (checksum, magic, or section
+    /// geometry) — treat the stream as lost and quarantine it.
+    Corrupt,
+    /// The backing store failed (disk IO). On `store` the payload is
+    /// still intact in the caller's checkpoint.
+    Io,
+}
+
+impl OffloadError {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OffloadError::Missing => "missing",
+            OffloadError::Corrupt => "corrupt",
+            OffloadError::Io => "io",
+        }
+    }
+}
+
+/// The spilled payload of one paged session: per-frame K/V rows, pooled
+/// stage-1 state, and (INT8 pools) the per-frame quantized payload —
+/// exactly the bytes a re-page-in needs to restore the session
+/// bit-for-bit. Buffers persist across checkpoint cycles (high-water
+/// sized), so refilling one allocates nothing once warm.
+#[derive(Clone, Debug, Default)]
+pub struct FrameCheckpoint {
+    /// K head dim the payload was captured with.
+    pub d: usize,
+    /// V dim the payload was captured with.
+    pub dv: usize,
+    /// K rows, concatenated per frame (`sum(prow) × d`).
+    pub k: Vec<f32>,
+    /// V rows, concatenated per frame (`sum(prow) × dv`).
+    pub v: Vec<f32>,
+    /// Pooled column sums, one `d`-vector per frame.
+    pub psum: Vec<f32>,
+    /// Rows held per frame.
+    pub prow: Vec<usize>,
+    /// Per-frame self-similarity.
+    pub sim: Vec<f32>,
+    /// Per-frame INT8 dequant scales (empty for f32-only pools).
+    pub qscale: Vec<f32>,
+    /// INT8 payload bytes, concatenated per frame (`sum(prow) × d`).
+    pub qdata: Vec<i8>,
+}
+
+impl FrameCheckpoint {
+    /// Frames the checkpoint spans.
+    pub fn frames(&self) -> usize {
+        self.prow.len()
+    }
+
+    /// Total K/V rows the checkpoint spans.
+    pub fn rows(&self) -> usize {
+        self.prow.iter().sum()
+    }
+
+    /// Whether the checkpoint holds no payload.
+    pub fn is_empty(&self) -> bool {
+        self.prow.is_empty()
+    }
+
+    /// Empty every section, retaining capacity (arena idiom).
+    pub fn clear(&mut self) {
+        self.k.clear();
+        self.v.clear();
+        self.psum.clear();
+        self.prow.clear();
+        self.sim.clear();
+        self.qscale.clear();
+        self.qdata.clear();
+    }
+
+    /// Internal-geometry check: every section length must agree with
+    /// the per-frame row counts (frames hold 1..=`bk` rows). A loaded
+    /// checkpoint that fails this must be treated as corrupt — indexing
+    /// it would walk off a section.
+    pub fn consistent(&self, bk: usize) -> bool {
+        let rows = self.rows();
+        let frames = self.prow.len();
+        self.prow.iter().all(|&r| r >= 1 && r <= bk)
+            && self.sim.len() == frames
+            && self.k.len() == rows.saturating_mul(self.d)
+            && self.v.len() == rows.saturating_mul(self.dv)
+            && self.psum.len() == frames.saturating_mul(self.d)
+            && (self.qscale.is_empty()
+                || (self.qscale.len() == frames && self.qdata.len() == rows.saturating_mul(self.d)))
+            && (!self.qscale.is_empty() || self.qdata.is_empty())
+    }
+}
+
+/// Somewhere a session's frame payload can park while its frames serve
+/// other streams. Implementations must round-trip byte-identically and
+/// report every failure as a value (see the module docs).
+pub trait OffloadTier {
+    /// Take `ckpt`'s payload under `key`, replacing any previous
+    /// payload stored there. On success the checkpoint is emptied
+    /// (capacity retained); on failure it is left untouched, so the
+    /// caller still holds the payload locally.
+    fn store(&mut self, key: u64, ckpt: &mut FrameCheckpoint) -> Result<(), OffloadError>;
+
+    /// Move the payload stored under `key` back into `into` (replacing
+    /// its contents) and drop it from the tier. Corruption and IO
+    /// failures come back as errors — the tier never panics on bad
+    /// bytes.
+    fn load(&mut self, key: u64, into: &mut FrameCheckpoint) -> Result<(), OffloadError>;
+
+    /// Drop any payload stored under `key` without loading it (session
+    /// retirement). Unknown keys are a no-op.
+    fn discard(&mut self, key: u64);
+
+    /// Checkpoints currently stored.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The in-memory tier: the old session-private `Spill` buffer,
+/// generalized to a keyed store. Checkpoints move by pointer swap —
+/// store/load never copy payload bytes and never fail.
+#[derive(Default)]
+pub struct MemTier {
+    slots: Vec<(u64, FrameCheckpoint)>,
+}
+
+impl MemTier {
+    pub fn new() -> MemTier {
+        MemTier::default()
+    }
+}
+
+impl OffloadTier for MemTier {
+    fn store(&mut self, key: u64, ckpt: &mut FrameCheckpoint) -> Result<(), OffloadError> {
+        if let Some(slot) = self.slots.iter_mut().find(|(k, _)| *k == key) {
+            std::mem::swap(&mut slot.1, ckpt);
+            ckpt.clear();
+        } else {
+            self.slots.push((key, std::mem::take(ckpt)));
+        }
+        Ok(())
+    }
+
+    fn load(&mut self, key: u64, into: &mut FrameCheckpoint) -> Result<(), OffloadError> {
+        let Some(i) = self.slots.iter().position(|(k, _)| *k == key) else {
+            return Err(OffloadError::Missing);
+        };
+        let (_, mut ckpt) = self.slots.swap_remove(i);
+        std::mem::swap(into, &mut ckpt);
+        Ok(())
+    }
+
+    fn discard(&mut self, key: u64) {
+        if let Some(i) = self.slots.iter().position(|(k, _)| *k == key) {
+            self.slots.swap_remove(i);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Header magic for the on-disk checkpoint format ("SPRGOFL1").
+const MAGIC: u64 = 0x5350_5247_4F46_4C31;
+
+/// FNV-1a 64 over raw bytes — the same hash family as
+/// [`super::paged::prefix_hash`], here guarding the serialized payload.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    bytes.iter().fold(OFFSET, |h, &b| (h ^ b as u64).wrapping_mul(PRIME))
+}
+
+/// The disk tier: one checksummed file per checkpoint under a
+/// caller-chosen directory. Every section is little-endian; the
+/// trailing u64 is the FNV-1a of every preceding byte, verified before
+/// a single section is parsed. Files are removed on load/discard; any
+/// leftovers are swept on drop (best-effort).
+pub struct DiskTier {
+    dir: PathBuf,
+    keys: Vec<u64>,
+    /// Reusable serialization buffer (high-water sized).
+    buf: Vec<u8>,
+}
+
+impl DiskTier {
+    /// Open a tier rooted at `dir`, creating the directory if needed.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<DiskTier, OffloadError> {
+        let dir = dir.into();
+        if std::fs::create_dir_all(&dir).is_err() {
+            return Err(OffloadError::Io);
+        }
+        Ok(DiskTier { dir, keys: Vec::new(), buf: Vec::new() })
+    }
+
+    /// A tier under the OS temp directory, namespaced by process id and
+    /// `tag` so concurrent test binaries never collide.
+    pub fn scratch(tag: &str) -> Result<DiskTier, OffloadError> {
+        let dir = std::env::temp_dir().join(format!("sparge-offload-{}-{tag}", std::process::id()));
+        DiskTier::new(dir)
+    }
+
+    /// Directory this tier stores under.
+    pub fn dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+
+    /// On-disk path of `key`'s checkpoint (exists only while stored).
+    pub fn path_for(&self, key: u64) -> PathBuf {
+        self.dir.join(format!("{key:016x}.ckpt"))
+    }
+
+    fn encode(buf: &mut Vec<u8>, ckpt: &FrameCheckpoint) {
+        buf.clear();
+        let mut w64 = |buf: &mut Vec<u8>, x: u64| buf.extend_from_slice(&x.to_le_bytes());
+        w64(buf, MAGIC);
+        w64(buf, ckpt.d as u64);
+        w64(buf, ckpt.dv as u64);
+        w64(buf, ckpt.prow.len() as u64);
+        w64(buf, ckpt.k.len() as u64);
+        w64(buf, ckpt.v.len() as u64);
+        w64(buf, ckpt.qscale.len() as u64);
+        w64(buf, ckpt.qdata.len() as u64);
+        for &r in &ckpt.prow {
+            buf.extend_from_slice(&(r as u64).to_le_bytes());
+        }
+        for &x in ckpt.sim.iter().chain(&ckpt.k).chain(&ckpt.v).chain(&ckpt.psum).chain(&ckpt.qscale) {
+            buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        for &b in &ckpt.qdata {
+            buf.push(b as u8);
+        }
+        let sum = fnv1a(buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+    }
+
+    fn decode(bytes: &[u8], into: &mut FrameCheckpoint) -> Result<(), OffloadError> {
+        // verify the trailing checksum before trusting a single byte
+        if bytes.len() < 8 * 9 {
+            return Err(OffloadError::Corrupt);
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let mut sum = [0u8; 8];
+        sum.copy_from_slice(tail);
+        if fnv1a(body) != u64::from_le_bytes(sum) {
+            return Err(OffloadError::Corrupt);
+        }
+        let mut off = 0usize;
+        let mut r64 = |body: &[u8]| -> Result<u64, OffloadError> {
+            let Some(chunk) = body.get(off..off + 8) else {
+                return Err(OffloadError::Corrupt);
+            };
+            let mut b = [0u8; 8];
+            b.copy_from_slice(chunk);
+            off += 8;
+            Ok(u64::from_le_bytes(b))
+        };
+        if r64(body)? != MAGIC {
+            return Err(OffloadError::Corrupt);
+        }
+        let to_usize = |x: u64| -> Result<usize, OffloadError> {
+            usize::try_from(x).map_err(|_| OffloadError::Corrupt)
+        };
+        let d = to_usize(r64(body)?)?;
+        let dv = to_usize(r64(body)?)?;
+        let frames = to_usize(r64(body)?)?;
+        let klen = to_usize(r64(body)?)?;
+        let vlen = to_usize(r64(body)?)?;
+        let qslen = to_usize(r64(body)?)?;
+        let qdlen = to_usize(r64(body)?)?;
+        // total size must match the header exactly: 8 header words, the
+        // per-frame u64 rows, the f32 sections, the i8 payload
+        let f32s = frames
+            .checked_add(klen)
+            .and_then(|x| x.checked_add(vlen))
+            .and_then(|x| x.checked_add(frames.checked_mul(d)?))
+            .and_then(|x| x.checked_add(qslen))
+            .ok_or(OffloadError::Corrupt)?;
+        let expect = (8usize + frames)
+            .checked_mul(8)
+            .and_then(|x| x.checked_add(f32s.checked_mul(4)?))
+            .and_then(|x| x.checked_add(qdlen))
+            .ok_or(OffloadError::Corrupt)?;
+        if body.len() != expect {
+            return Err(OffloadError::Corrupt);
+        }
+        into.clear();
+        into.d = d;
+        into.dv = dv;
+        for _ in 0..frames {
+            into.prow.push(to_usize(r64(body)?)?);
+        }
+        let mut rf32 = |out: &mut Vec<f32>, n: usize| -> Result<(), OffloadError> {
+            out.reserve(n);
+            for _ in 0..n {
+                let Some(chunk) = body.get(off..off + 4) else {
+                    return Err(OffloadError::Corrupt);
+                };
+                let mut b = [0u8; 4];
+                b.copy_from_slice(chunk);
+                off += 4;
+                out.push(f32::from_bits(u32::from_le_bytes(b)));
+            }
+            Ok(())
+        };
+        // the borrow of `off` moved into r64 ends before rf32 is built,
+        // so re-slice sections with explicit offsets instead
+        let _ = &mut rf32;
+        let mut pos = off;
+        let mut take_f32s = |out: &mut Vec<f32>, n: usize| -> Result<(), OffloadError> {
+            let Some(sect) = body.get(pos..pos + n * 4) else {
+                return Err(OffloadError::Corrupt);
+            };
+            out.reserve(n);
+            for chunk in sect.chunks_exact(4) {
+                let mut b = [0u8; 4];
+                b.copy_from_slice(chunk);
+                out.push(f32::from_bits(u32::from_le_bytes(b)));
+            }
+            pos += n * 4;
+            Ok(())
+        };
+        // sim | k | v | psum | qscale, then the i8 payload
+        let mut sim = std::mem::take(&mut into.sim);
+        let mut k = std::mem::take(&mut into.k);
+        let mut v = std::mem::take(&mut into.v);
+        let mut psum = std::mem::take(&mut into.psum);
+        let mut qscale = std::mem::take(&mut into.qscale);
+        let r = take_f32s(&mut sim, frames)
+            .and_then(|_| take_f32s(&mut k, klen))
+            .and_then(|_| take_f32s(&mut v, vlen))
+            .and_then(|_| take_f32s(&mut psum, frames * d))
+            .and_then(|_| take_f32s(&mut qscale, qslen));
+        into.sim = sim;
+        into.k = k;
+        into.v = v;
+        into.psum = psum;
+        into.qscale = qscale;
+        r?;
+        let Some(qsect) = body.get(pos..pos + qdlen) else {
+            return Err(OffloadError::Corrupt);
+        };
+        into.qdata.reserve(qdlen);
+        into.qdata.extend(qsect.iter().map(|&b| b as i8));
+        Ok(())
+    }
+}
+
+impl OffloadTier for DiskTier {
+    fn store(&mut self, key: u64, ckpt: &mut FrameCheckpoint) -> Result<(), OffloadError> {
+        let mut buf = std::mem::take(&mut self.buf);
+        Self::encode(&mut buf, ckpt);
+        let r = std::fs::write(self.path_for(key), &buf);
+        self.buf = buf;
+        if r.is_err() {
+            return Err(OffloadError::Io);
+        }
+        if !self.keys.contains(&key) {
+            self.keys.push(key);
+        }
+        ckpt.clear();
+        Ok(())
+    }
+
+    fn load(&mut self, key: u64, into: &mut FrameCheckpoint) -> Result<(), OffloadError> {
+        let path = self.path_for(key);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Err(OffloadError::Missing),
+            Err(_) => return Err(OffloadError::Io),
+        };
+        // the payload leaves the tier either way: a corrupt file is not
+        // worth a second read, and the key must not look resumable
+        let _ = std::fs::remove_file(&path);
+        if let Some(i) = self.keys.iter().position(|&k| k == key) {
+            self.keys.swap_remove(i);
+        }
+        Self::decode(&bytes, into)
+    }
+
+    fn discard(&mut self, key: u64) {
+        let _ = std::fs::remove_file(self.path_for(key));
+        if let Some(i) = self.keys.iter().position(|&k| k == key) {
+            self.keys.swap_remove(i);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.keys.len()
+    }
+}
+
+impl Drop for DiskTier {
+    fn drop(&mut self) {
+        // best-effort sweep: leftover checkpoints are garbage once the
+        // tier is gone; the dir itself goes too if we emptied it
+        for &key in &self.keys {
+            let _ = std::fs::remove_file(self.path_for(key));
+        }
+        let _ = std::fs::remove_dir(&self.dir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(seed: u64, frames: usize, d: usize, dv: usize, quant: bool) -> FrameCheckpoint {
+        let mut x = seed | 1;
+        let mut next = || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            (x as f64 / u64::MAX as f64) as f32 - 0.5
+        };
+        let bk = 8;
+        let mut c = FrameCheckpoint { d, dv, ..Default::default() };
+        for b in 0..frames {
+            let rows = if b + 1 == frames { 1 + (seed as usize % bk) } else { bk };
+            c.prow.push(rows);
+            c.sim.push(next());
+            for _ in 0..rows * d {
+                c.k.push(next());
+                c.qdata.push((seed as i8).wrapping_add(c.k.len() as i8));
+            }
+            for _ in 0..rows * dv {
+                c.v.push(next());
+            }
+            for _ in 0..d {
+                c.psum.push(next());
+            }
+            c.qscale.push(next().abs() + 1e-3);
+        }
+        if !quant {
+            c.qscale.clear();
+            c.qdata.clear();
+        }
+        c
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn assert_payload_eq(a: &FrameCheckpoint, b: &FrameCheckpoint) {
+        assert_eq!(a.d, b.d);
+        assert_eq!(a.dv, b.dv);
+        assert_eq!(a.prow, b.prow);
+        assert_eq!(bits(&a.sim), bits(&b.sim));
+        assert_eq!(bits(&a.k), bits(&b.k));
+        assert_eq!(bits(&a.v), bits(&b.v));
+        assert_eq!(bits(&a.psum), bits(&b.psum));
+        assert_eq!(bits(&a.qscale), bits(&b.qscale));
+        assert_eq!(a.qdata, b.qdata);
+    }
+
+    #[test]
+    fn mem_tier_swaps_payloads_byte_identically() {
+        let mut tier = MemTier::new();
+        let original = sample(11, 3, 8, 8, true);
+        let mut ckpt = original.clone();
+        tier.store(7, &mut ckpt).unwrap();
+        assert!(ckpt.is_empty(), "store must empty the caller's checkpoint");
+        assert_eq!(tier.len(), 1);
+        let mut back = FrameCheckpoint::default();
+        tier.load(7, &mut back).unwrap();
+        assert_payload_eq(&back, &original);
+        assert!(tier.is_empty());
+        assert_eq!(tier.load(7, &mut back), Err(OffloadError::Missing));
+    }
+
+    #[test]
+    fn disk_tier_round_trips_and_checksums() {
+        let mut tier = DiskTier::scratch("unit-roundtrip").unwrap();
+        let original = sample(23, 4, 16, 8, true);
+        let mut ckpt = original.clone();
+        tier.store(42, &mut ckpt).unwrap();
+        assert!(ckpt.is_empty());
+        assert!(tier.path_for(42).exists());
+        let mut back = FrameCheckpoint::default();
+        tier.load(42, &mut back).unwrap();
+        assert_payload_eq(&back, &original);
+        assert!(!tier.path_for(42).exists(), "load consumes the file");
+        assert_eq!(tier.load(42, &mut back), Err(OffloadError::Missing));
+    }
+
+    #[test]
+    fn disk_tier_flipped_byte_is_corrupt_not_panic() {
+        let mut tier = DiskTier::scratch("unit-corrupt").unwrap();
+        let mut ckpt = sample(5, 2, 8, 8, false);
+        tier.store(1, &mut ckpt).unwrap();
+        let path = tier.path_for(1);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let mut back = FrameCheckpoint::default();
+        assert_eq!(tier.load(1, &mut back), Err(OffloadError::Corrupt));
+        // truncation is corruption too, not an index panic
+        let mut ckpt2 = sample(6, 2, 8, 8, true);
+        tier.store(2, &mut ckpt2).unwrap();
+        let path2 = tier.path_for(2);
+        let bytes2 = std::fs::read(&path2).unwrap();
+        std::fs::write(&path2, &bytes2[..bytes2.len() / 3]).unwrap();
+        assert_eq!(tier.load(2, &mut back), Err(OffloadError::Corrupt));
+    }
+
+    #[test]
+    fn checkpoint_consistency_rejects_bad_geometry() {
+        let mut c = sample(9, 3, 8, 8, true);
+        assert!(c.consistent(8));
+        c.prow[0] = 9; // > bk
+        assert!(!c.consistent(8));
+        let mut c = sample(9, 3, 8, 8, true);
+        c.k.pop();
+        assert!(!c.consistent(8));
+    }
+}

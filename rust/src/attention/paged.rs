@@ -83,6 +83,21 @@
 //! INT8 payloads requantized from the restored rows (byte-identical —
 //! quantization is deterministic per block). Decode after re-page-in is
 //! therefore bitwise-equal to never having been evicted.
+//!
+//! ## Preemption: suspend / resume through an offload tier
+//!
+//! [`PagedAttnSession::suspend`] is eviction whose checkpoint leaves the
+//! session: the spilled payload (a [`FrameCheckpoint`], including the
+//! INT8 payload bytes verbatim) is handed to an [`OffloadTier`] — in
+//! memory or checksummed on disk, see [`super::offload`] — under the
+//! caller's key, so a preempted stream holds *zero* frames and no
+//! payload buffer while parked. [`PagedAttnSession::resume`] loads the
+//! checkpoint back and re-pages-in: a stream suspended mid-decode and
+//! later resumed decodes bitwise-identically to one that was never
+//! preempted (pinned by `tests/paged_kv.rs` across every exec mode and
+//! pool size). A tier that lost or corrupted the checkpoint surfaces as
+//! an [`OffloadError`] **value** — the session stays suspended and the
+//! serving loop quarantines that one stream; nothing panics.
 
 use crate::sparge::kernel::quant_score_block;
 use crate::sparge::predict::{cos_sim_with_backend, predict_decode_row_into, predict_pooled};
@@ -92,6 +107,7 @@ use crate::tensor::Tensor;
 use crate::util::threadpool::Workspace;
 
 use super::engine::{AttnEngine, AttnOutput, OffsetMaskFilter, Precision, RowMaskFilter, SparsityPolicy};
+use super::offload::{FrameCheckpoint, OffloadError, OffloadTier};
 use super::pipeline::{
     run_tiled_into_kv, run_tiled_splitkv_into_kv, score_block_slices, BlockFilter, DenseFilter,
     Exec, KvSource, MaskFilter, ScoreKernel, ScoreScratch, SpanPlan,
@@ -226,6 +242,12 @@ impl PageAllocator {
         self.bk
     }
 
+    /// Frame geometry: K head dim and V dim the pool was built with
+    /// (admission control screens stream shapes against these).
+    pub fn head_dims(&self) -> (usize, usize) {
+        (self.d, self.dv)
+    }
+
     /// Total frames in the pool.
     pub fn capacity(&self) -> usize {
         self.prow.len()
@@ -269,9 +291,11 @@ impl PageAllocator {
         self.load_sheds += 1;
     }
 
-    /// Fault injection: deny the next `n` `claim` calls as if the pool
-    /// were exhausted (each denial takes the identical `None` path a
-    /// real dry pool takes). Cumulative; cleared as claims arrive.
+    /// Fault injection: deny the next `n` claim attempts as if the pool
+    /// were exhausted — a [`PageAllocator::covers`] check fails (the
+    /// caller defers/evicts exactly as a dry pool forces) and a direct
+    /// [`PageAllocator::claim`] returns `None`. Cumulative; each denial
+    /// is consumed by whichever of the two sees it first.
     pub fn inject_exhaustion(&mut self, n: u64) {
         self.deny_claims += n;
     }
@@ -279,6 +303,25 @@ impl PageAllocator {
     /// Artificial denials still pending (nonzero only mid-injection).
     pub fn pending_denials(&self) -> u64 {
         self.deny_claims
+    }
+
+    /// Admission check for a sequence of `frames` claims: true when the
+    /// free list covers them all, so the session paths may
+    /// check-then-claim without re-testing each claim. A pending
+    /// injected denial is consumed *here* and fails the check — the
+    /// caller takes the identical defer/evict path a really-dry pool
+    /// forces, and the claims behind a passed check always succeed
+    /// (which is what the `expect`s on those claims assert). Zero-frame
+    /// requests pass without consuming anything: no claim will follow.
+    pub fn covers(&mut self, frames: usize) -> bool {
+        if frames == 0 {
+            return true;
+        }
+        if self.deny_claims > 0 {
+            self.deny_claims -= 1;
+            return false;
+        }
+        self.free.len() >= frames
     }
 
     /// Frame-leak check for tests and drain: every frame must be back on
@@ -701,18 +744,6 @@ impl PrefixRegistry {
     }
 }
 
-/// Spilled contents of an evicted session: the exact frame payloads,
-/// verbatim, so re-page-in restores bit-for-bit. Buffers persist across
-/// evict/restore cycles (high-water sized).
-#[derive(Default)]
-struct Spill {
-    k: Vec<f32>,
-    v: Vec<f32>,
-    psum: Vec<f32>,
-    prow: Vec<usize>,
-    sim: Vec<f32>,
-}
-
 /// Per-sequence state over a shared [`AttnEngine`] whose KV cache lives
 /// in [`PageAllocator`] frames instead of session-owned tensors. Append
 /// paths take `&mut PageAllocator` (they claim/write frames); compute
@@ -744,7 +775,14 @@ pub struct PagedAttnSession<'e> {
     plan: SpanPlan,
     steps: usize,
     evicted: bool,
-    spill: Spill,
+    /// Whether the checkpoint was handed to an [`OffloadTier`]
+    /// ([`PagedAttnSession::suspend`]) — resume must load it back before
+    /// re-page-in can run.
+    suspended: bool,
+    /// Spilled frame payload while evicted (the old session-private
+    /// `Spill` buffer, now the tier currency — see [`FrameCheckpoint`]).
+    /// Empty whenever the payload is parked in a tier instead.
+    ckpt: FrameCheckpoint,
 }
 
 impl<'e> PagedAttnSession<'e> {
@@ -771,7 +809,8 @@ impl<'e> PagedAttnSession<'e> {
             plan: SpanPlan::new(),
             steps: 0,
             evicted: false,
-            spill: Spill::default(),
+            suspended: false,
+            ckpt: FrameCheckpoint::default(),
         }
     }
 
@@ -798,6 +837,13 @@ impl<'e> PagedAttnSession<'e> {
     /// before the next append/compute).
     pub fn is_evicted(&self) -> bool {
         self.evicted
+    }
+
+    /// Whether the session's checkpoint is parked in an offload tier —
+    /// [`PagedAttnSession::resume`] must load it back before the session
+    /// can become resident again.
+    pub fn is_suspended(&self) -> bool {
+        self.suspended
     }
 
     /// Frames a sequence of `rows` rows occupies under this allocator
@@ -887,7 +933,7 @@ impl<'e> PagedAttnSession<'e> {
         assert_eq!(k.dim(1), self.d, "k head dim");
         assert_eq!(v.dim(1), self.dv, "v dim");
 
-        if alloc.free_frames() < self.frames_needed(alloc, k.dim(0)) {
+        if !alloc.covers(self.frames_needed(alloc, k.dim(0))) {
             return None;
         }
         self.append_rows(alloc, k, v, row0);
@@ -1023,7 +1069,7 @@ impl<'e> PagedAttnSession<'e> {
         assert_eq!(q.dim(1), self.d, "q head dim");
         assert_eq!(k.dim(1), self.d, "k head dim");
         assert_eq!(v.dim(1), self.dv, "v dim");
-        if alloc.free_frames() < self.frames_needed(alloc, 1) {
+        if !alloc.covers(self.frames_needed(alloc, 1)) {
             return false;
         }
         let bk = alloc.bk;
@@ -1164,18 +1210,23 @@ impl<'e> PagedAttnSession<'e> {
             return;
         }
         let (bk, d, dv) = (alloc.bk, alloc.d, alloc.dv);
-        self.spill.k.clear();
-        self.spill.v.clear();
-        self.spill.psum.clear();
-        self.spill.prow.clear();
-        self.spill.sim.clear();
+        self.ckpt.clear();
+        self.ckpt.d = d;
+        self.ckpt.dv = dv;
         for &f in &self.frames {
             let rows = alloc.prow[f];
-            self.spill.k.extend_from_slice(&alloc.k[f * bk * d..f * bk * d + rows * d]);
-            self.spill.v.extend_from_slice(&alloc.v[f * bk * dv..f * bk * dv + rows * dv]);
-            self.spill.psum.extend_from_slice(&alloc.psum[f * d..(f + 1) * d]);
-            self.spill.prow.push(rows);
-            self.spill.sim.push(alloc.sim[f]);
+            self.ckpt.k.extend_from_slice(&alloc.k[f * bk * d..f * bk * d + rows * d]);
+            self.ckpt.v.extend_from_slice(&alloc.v[f * bk * dv..f * bk * dv + rows * dv]);
+            self.ckpt.psum.extend_from_slice(&alloc.psum[f * d..(f + 1) * d]);
+            self.ckpt.prow.push(rows);
+            self.ckpt.sim.push(alloc.sim[f]);
+            if alloc.quant {
+                // carry the INT8 payload verbatim, so a checkpoint that
+                // round-trips an offload tier restores bit-for-bit
+                // without consulting the smoothing mean
+                self.ckpt.qscale.push(alloc.qk[f].scale);
+                self.ckpt.qdata.extend_from_slice(&alloc.qk[f].data);
+            }
         }
         for &f in &self.frames {
             alloc.release(f);
@@ -1186,29 +1237,45 @@ impl<'e> PagedAttnSession<'e> {
     }
 
     /// Re-page-in after an eviction: claim fresh frames and restore the
-    /// spilled contents bit-for-bit (INT8 payloads requantize from the
-    /// restored rows — byte-identical, quantization is deterministic).
-    /// `false` — nothing claimed — when the free list cannot cover it.
+    /// checkpointed contents bit-for-bit (INT8 payloads restore from the
+    /// checkpoint's own payload bytes; checkpoints captured without them
+    /// requantize from the restored rows — byte-identical either way,
+    /// quantization is deterministic). `false` — nothing claimed — when
+    /// the free list cannot cover it, or when the checkpoint is parked
+    /// in an offload tier ([`PagedAttnSession::resume`] loads it back).
     /// Resident sessions return `true` immediately.
     pub fn ensure_resident(&mut self, alloc: &mut PageAllocator) -> bool {
         if !self.evicted {
             return true;
         }
-        let nframes = self.spill.prow.len();
-        if alloc.free_frames() < nframes {
+        if self.suspended {
+            return false;
+        }
+        let nframes = self.ckpt.prow.len();
+        if !alloc.covers(nframes) {
             return false;
         }
         let (bk, d, dv) = (alloc.bk, alloc.d, alloc.dv);
+        let restore_quant = alloc.quant && self.ckpt.qscale.len() == nframes;
         let (mut ok, mut ov) = (0, 0);
         for b in 0..nframes {
             let f = alloc.claim().expect("free-frame check covers re-page-in claims");
-            let rows = self.spill.prow[b];
-            alloc.k[f * bk * d..f * bk * d + rows * d].copy_from_slice(&self.spill.k[ok..ok + rows * d]);
-            alloc.v[f * bk * dv..f * bk * dv + rows * dv].copy_from_slice(&self.spill.v[ov..ov + rows * dv]);
-            alloc.psum[f * d..(f + 1) * d].copy_from_slice(&self.spill.psum[b * d..(b + 1) * d]);
+            let rows = self.ckpt.prow[b];
+            alloc.k[f * bk * d..f * bk * d + rows * d].copy_from_slice(&self.ckpt.k[ok..ok + rows * d]);
+            alloc.v[f * bk * dv..f * bk * dv + rows * dv].copy_from_slice(&self.ckpt.v[ov..ov + rows * dv]);
+            alloc.psum[f * d..(f + 1) * d].copy_from_slice(&self.ckpt.psum[b * d..(b + 1) * d]);
             alloc.prow[f] = rows;
-            alloc.sim[f] = self.spill.sim[b];
-            if alloc.quant {
+            alloc.sim[f] = self.ckpt.sim[b];
+            if restore_quant {
+                // the checkpoint carries the INT8 payload verbatim
+                // (qdata frames are rows×d, so `ok` indexes both)
+                let qb = &mut alloc.qk[f];
+                qb.data.clear();
+                qb.data.extend_from_slice(&self.ckpt.qdata[ok..ok + rows * d]);
+                qb.rows = rows;
+                qb.d = d;
+                qb.scale = self.ckpt.qscale[b];
+            } else if alloc.quant {
                 let mean = self.kmean.as_deref().expect("kmean frozen at first append");
                 alloc.requantize_frame(f, mean, &mut self.ws.quant_f32);
             }
@@ -1220,14 +1287,71 @@ impl<'e> PagedAttnSession<'e> {
         true
     }
 
-    /// Release every frame reference (session retirement). The spill
-    /// buffer is dropped with the session.
+    /// Preempt this session: evict (if still resident) and hand the
+    /// checkpoint to `tier` under `key` — the swap-out half of
+    /// priority-aware preemption. On `true` the payload lives in the
+    /// tier and the session holds zero frames and zero payload bytes
+    /// until [`PagedAttnSession::resume`]. On `false` the tier refused
+    /// (e.g. disk IO failure) or the session had nothing to spill: the
+    /// payload — if any — stays session-local, exactly a plain
+    /// [`PagedAttnSession::evict`], so the normal re-page-in machinery
+    /// still heals the stream.
+    pub fn suspend(&mut self, alloc: &mut PageAllocator, key: u64, tier: &mut dyn OffloadTier) -> bool {
+        self.evict(alloc);
+        if !self.evicted || self.suspended {
+            return false;
+        }
+        match tier.store(key, &mut self.ckpt) {
+            Ok(()) => {
+                self.suspended = true;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Bring a suspended session back: load the checkpoint from `tier`
+    /// (when suspend parked it there) and re-page-in. `Ok(true)` — the
+    /// session is resident and decodes bitwise-identically to one that
+    /// was never preempted. `Ok(false)` — the payload is back
+    /// session-local but the free list cannot cover its frames yet; the
+    /// normal [`PagedAttnSession::ensure_resident`] path heals it on a
+    /// later tick. `Err` — the tier lost or corrupted the checkpoint;
+    /// the session stays suspended (permanently unservable) and the
+    /// caller should quarantine the stream. Bad tier bytes are values
+    /// here, never panics.
+    pub fn resume(
+        &mut self,
+        alloc: &mut PageAllocator,
+        key: u64,
+        tier: &mut dyn OffloadTier,
+    ) -> Result<bool, OffloadError> {
+        if self.suspended {
+            tier.load(key, &mut self.ckpt)?;
+            if !(self.ckpt.consistent(alloc.bk)
+                && self.ckpt.rows() == self.rows
+                && self.ckpt.d == self.d
+                && self.ckpt.dv == self.dv)
+            {
+                // a checkpoint that passed the tier's own verification
+                // but does not describe *this* session is still corrupt
+                return Err(OffloadError::Corrupt);
+            }
+            self.suspended = false;
+        }
+        Ok(self.ensure_resident(alloc))
+    }
+
+    /// Release every frame reference (session retirement). The local
+    /// checkpoint buffer is dropped with the session; a tier-resident
+    /// checkpoint is the caller's to discard under the same key.
     pub fn release(&mut self, alloc: &mut PageAllocator) {
         for &f in &self.frames {
             alloc.release(f);
         }
         self.frames.clear();
         self.evicted = false;
+        self.suspended = false;
     }
 
     /// Append a multi-row chunk frame by frame: top up the partial tail

@@ -93,13 +93,52 @@ pub struct FaultEvent {
 #[derive(Clone, Debug, Default)]
 pub struct FaultPlan {
     events: Vec<FaultEvent>,
+    /// Burst-arrival schedule for the chaos harness: `(at_tick, count)`
+    /// pairs telling the driver to submit `count` extra requests when
+    /// the manager reaches `at_tick`. Arrival shaping is driver-side —
+    /// the manager itself never consults this — so it lives in its own
+    /// field and leaves [`FaultPlan::seeded`]'s RNG stream untouched.
+    bursts: Vec<(u64, u32)>,
 }
 
 impl FaultPlan {
     /// An explicit schedule. Events are kept in the given order; the
     /// manager applies same-tick events first-to-last.
     pub fn new(events: Vec<FaultEvent>) -> FaultPlan {
-        FaultPlan { events }
+        FaultPlan { events, bursts: Vec::new() }
+    }
+
+    /// Attach a burst-arrival schedule (see the `bursts` field docs).
+    /// Pairs are kept in the given order; same-tick pairs accumulate.
+    pub fn with_bursts(mut self, bursts: Vec<(u64, u32)>) -> FaultPlan {
+        self.bursts = bursts;
+        self
+    }
+
+    /// A seeded burst schedule: `n` bursts over ticks `[0, ticks)`, each
+    /// of `1..=max` arrivals. Deterministic in every argument, and drawn
+    /// from its own RNG stream so composing it with [`FaultPlan::seeded`]
+    /// never perturbs the fault events of an existing seed.
+    pub fn seeded_bursts(seed: u64, ticks: u64, n: usize, max: u32) -> Vec<(u64, u32)> {
+        let mut rng = Pcg::new(seed, 0xb025_7a11_0f5e_ed02);
+        let mut bursts = Vec::with_capacity(n);
+        for _ in 0..n {
+            let at_tick = if ticks == 0 { 0 } else { rng.below(ticks) };
+            let count = 1 + rng.below(max.max(1) as u64) as u32;
+            bursts.push((at_tick, count));
+        }
+        bursts.sort_by_key(|&(t, _)| t);
+        bursts
+    }
+
+    /// The burst-arrival schedule, in application order.
+    pub fn bursts(&self) -> &[(u64, u32)] {
+        &self.bursts
+    }
+
+    /// Total extra arrivals the driver should submit at `tick`.
+    pub fn burst_at(&self, tick: u64) -> u32 {
+        self.bursts.iter().filter(|&&(t, _)| t == tick).map(|&(_, c)| c).sum()
     }
 
     /// A seeded random schedule: `n` events over ticks `[0, ticks)`
@@ -126,7 +165,7 @@ impl FaultPlan {
             events.push(FaultEvent { at_tick, session, kind });
         }
         events.sort_by_key(|e| e.at_tick);
-        FaultPlan { events }
+        FaultPlan { events, bursts: Vec::new() }
     }
 
     /// The full schedule, in application order.
@@ -212,6 +251,24 @@ mod tests {
         assert_eq!(plan.fault_for(2, 9), Some(FaultKind::Stall { micros: 10 }));
         assert!(plan.exhausted_after(3));
         assert!(!plan.exhausted_after(2));
+    }
+
+    #[test]
+    fn burst_schedule_is_deterministic_and_separate_from_events() {
+        // the burst stream must not perturb the fault-event stream: the
+        // same seed with and without bursts yields identical events
+        let plain = FaultPlan::seeded(42, 100, &[1, 2, 3], 16);
+        let bursts = FaultPlan::seeded_bursts(42, 100, 8, 4);
+        let with = FaultPlan::seeded(42, 100, &[1, 2, 3], 16).with_bursts(bursts.clone());
+        assert_eq!(plain.events(), with.events());
+        assert_eq!(FaultPlan::seeded_bursts(42, 100, 8, 4), bursts, "bursts replay from seed");
+        assert_eq!(with.bursts().len(), 8);
+        assert!(with.bursts().iter().all(|&(t, c)| t < 100 && (1..=4).contains(&c)));
+        // same-tick pairs accumulate
+        let p = FaultPlan::default().with_bursts(vec![(3, 2), (3, 1), (5, 4)]);
+        assert_eq!(p.burst_at(3), 3);
+        assert_eq!(p.burst_at(5), 4);
+        assert_eq!(p.burst_at(4), 0);
     }
 
     #[test]

@@ -1,6 +1,12 @@
-//! Serving metrics: thread-safe counters + latency reservoir.
+//! Serving metrics: thread-safe counters + latency reservoir, including
+//! per-priority TTFT/TPOT reservoirs and the QoS counters behind
+//! priority-aware preemption (preemptions, resumes, overload
+//! transitions) — exported through the `stats` op and
+//! `table8_serving --json`.
 
 use std::sync::Mutex;
+
+use super::qos::Priority;
 
 /// Registry of serving counters. Cheap to share behind an `Arc`.
 #[derive(Debug, Default)]
@@ -35,6 +41,24 @@ struct Inner {
     injected_faults: u64,
     /// Wall-clock seconds the last graceful drain took.
     drain_duration: f64,
+    /// Per-priority TTFT samples, indexed by `Priority::rank()` — the
+    /// observable half of priority-aware scheduling: `high` TTFT must
+    /// hold under overload while `low` degrades first.
+    ttft_by_priority: [Vec<f64>; 3],
+    /// Per-priority per-output-token samples, indexed like `ttft_by_priority`.
+    tpot_by_priority: [Vec<f64>; 3],
+    /// Sessions preempted to the offload tier.
+    preempted: u64,
+    /// Preempted sessions resumed from the tier.
+    resumed: u64,
+    /// Overload detector entries into `Preempting`.
+    overload_to_preempting: u64,
+    /// Overload detector entries into `Shedding`.
+    overload_to_shedding: u64,
+    /// Requests shed while a strictly lower-priority resident held
+    /// frames. Structurally 0 — exported so dashboards (and the chaos
+    /// suite) can pin the invariant.
+    priority_inversions: u64,
 }
 
 /// A point-in-time snapshot for reporting.
@@ -69,6 +93,26 @@ pub struct Snapshot {
     pub injected_faults: u64,
     /// Wall-clock seconds of the last graceful drain.
     pub drain_duration: f64,
+    /// Per-priority TTFT sample counts, indexed by `Priority::rank()`
+    /// (`[low, normal, high]`).
+    pub ttft_count_by_priority: [u64; 3],
+    pub ttft_p50_by_priority: [f64; 3],
+    pub ttft_p99_by_priority: [f64; 3],
+    /// Per-priority TPOT sample counts, indexed like the TTFT arrays.
+    pub tpot_count_by_priority: [u64; 3],
+    pub tpot_p50_by_priority: [f64; 3],
+    pub tpot_p99_by_priority: [f64; 3],
+    /// Sessions preempted to the offload tier.
+    pub preempted: u64,
+    /// Preempted sessions resumed from the tier.
+    pub resumed: u64,
+    /// Overload detector entries into `Preempting`.
+    pub overload_to_preempting: u64,
+    /// Overload detector entries into `Shedding`.
+    pub overload_to_shedding: u64,
+    /// Sheds that happened past a lower-priority resident (always 0; the
+    /// scheduler's preemption order forbids them).
+    pub priority_inversions: u64,
 }
 
 impl Metrics {
@@ -152,6 +196,43 @@ impl Metrics {
         Self::trim(&mut g.tpot);
     }
 
+    /// [`Metrics::record_token_latency`] attributed to a priority class:
+    /// feeds both the aggregate reservoirs and the per-priority ones, so
+    /// the aggregates stay exactly what they were for callers that never
+    /// set a priority.
+    pub fn record_token_latency_for(&self, priority: Priority, ttft: f64, tpot: &[f64]) {
+        let mut g = self.inner.lock().unwrap();
+        g.ttft.push(ttft);
+        g.tpot.extend_from_slice(tpot);
+        Self::trim(&mut g.ttft);
+        Self::trim(&mut g.tpot);
+        let r = priority.rank() as usize;
+        g.ttft_by_priority[r].push(ttft);
+        g.tpot_by_priority[r].extend_from_slice(tpot);
+        Self::trim(&mut g.ttft_by_priority[r]);
+        Self::trim(&mut g.tpot_by_priority[r]);
+    }
+
+    /// Fold in the session manager's lifetime QoS counters (taken once
+    /// at drain, like `record_injected_faults`): preemptions, resumes,
+    /// overload transitions, and the (structurally zero) priority
+    /// inversions.
+    pub fn record_qos(
+        &self,
+        preempted: u64,
+        resumed: u64,
+        to_preempting: u64,
+        to_shedding: u64,
+        inversions: u64,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.preempted += preempted;
+        g.resumed += resumed;
+        g.overload_to_preempting += to_preempting;
+        g.overload_to_shedding += to_shedding;
+        g.priority_inversions += inversions;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let sorted = |v: &[f64]| {
@@ -171,6 +252,22 @@ impl Metrics {
         let tpot = sorted(&g.tpot);
         let total_compute: f64 = g.compute.iter().sum();
         let total_sparsity: f64 = g.sparsity.iter().sum();
+        let mut ttft_count_by_priority = [0u64; 3];
+        let mut ttft_p50_by_priority = [0.0; 3];
+        let mut ttft_p99_by_priority = [0.0; 3];
+        let mut tpot_count_by_priority = [0u64; 3];
+        let mut tpot_p50_by_priority = [0.0; 3];
+        let mut tpot_p99_by_priority = [0.0; 3];
+        for r in 0..3 {
+            let t = sorted(&g.ttft_by_priority[r]);
+            ttft_count_by_priority[r] = t.len() as u64;
+            ttft_p50_by_priority[r] = pct(&t, 0.5);
+            ttft_p99_by_priority[r] = pct(&t, 0.99);
+            let t = sorted(&g.tpot_by_priority[r]);
+            tpot_count_by_priority[r] = t.len() as u64;
+            tpot_p50_by_priority[r] = pct(&t, 0.5);
+            tpot_p99_by_priority[r] = pct(&t, 0.99);
+        }
         Snapshot {
             requests: g.requests,
             tokens_out: g.tokens_out,
@@ -192,6 +289,17 @@ impl Metrics {
             shed: g.shed,
             injected_faults: g.injected_faults,
             drain_duration: g.drain_duration,
+            ttft_count_by_priority,
+            ttft_p50_by_priority,
+            ttft_p99_by_priority,
+            tpot_count_by_priority,
+            tpot_p50_by_priority,
+            tpot_p99_by_priority,
+            preempted: g.preempted,
+            resumed: g.resumed,
+            overload_to_preempting: g.overload_to_preempting,
+            overload_to_shedding: g.overload_to_shedding,
+            priority_inversions: g.priority_inversions,
         }
     }
 }
@@ -293,6 +401,25 @@ mod tests {
         assert_eq!(s.shed, 1);
         assert_eq!(s.injected_faults, 7);
         assert!((s.drain_duration - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_priority_reservoirs_and_qos_counters() {
+        let m = Metrics::new();
+        m.record_token_latency_for(Priority::High, 0.1, &[0.01, 0.02]);
+        m.record_token_latency_for(Priority::Low, 0.9, &[0.5]);
+        m.record_token_latency(0.4, &[]); // unattributed: aggregates only
+        m.record_qos(3, 2, 4, 1, 0);
+        let s = m.snapshot();
+        assert_eq!(s.ttft_count_by_priority, [1, 0, 1]);
+        assert_eq!(s.tpot_count_by_priority, [1, 0, 2]);
+        assert!(s.ttft_p99_by_priority[0] > s.ttft_p99_by_priority[2]);
+        assert_eq!(s.ttft_count, 3, "attributed samples also feed the aggregate");
+        assert_eq!(s.preempted, 3);
+        assert_eq!(s.resumed, 2);
+        assert_eq!(s.overload_to_preempting, 4);
+        assert_eq!(s.overload_to_shedding, 1);
+        assert_eq!(s.priority_inversions, 0);
     }
 
     #[test]

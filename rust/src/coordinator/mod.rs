@@ -61,6 +61,7 @@ pub mod batcher;
 pub mod engine;
 pub mod fault;
 pub mod metrics;
+pub mod qos;
 pub mod request;
 pub mod scheduler;
 pub mod server;
@@ -70,6 +71,7 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use engine::EngineHandle;
 pub use fault::{FaultEvent, FaultKind, FaultPlan};
 pub use metrics::Metrics;
+pub use qos::{OverloadDetector, OverloadState, Priority};
 pub use request::{AttnMode, AttnStreamSpec, GenerateRequest, GenerateResponse, Payload, RequestLimits};
-pub use scheduler::{AttnProbeResult, Coordinator, DecodeProbeResult, ServeOptions};
+pub use scheduler::{AttnProbeResult, Coordinator, DecodeProbeResult, PagedServe, ServeOptions};
 pub use session_manager::{run_sequential, SeqOutcome, SeqResult, SeqStream, SessionManager};

@@ -1,0 +1,294 @@
+//! Quality-of-service policy for the serving loop: per-request
+//! priorities, the hysteresis overload detector, and the backpressure
+//! hint math — the *decisions* behind priority-aware preemption, kept
+//! separate from the tick mechanics in [`super::session_manager`].
+//!
+//! ## Priorities
+//!
+//! Every request carries a [`Priority`] (default `Normal`, parsed off
+//! the serve op's `"priority"` field). Priorities order **degradation**,
+//! not throughput: under frame pressure the lowest-priority resident is
+//! preempted first (checkpointed through an offload tier, resumed later
+//! bitwise-identically), and when the loop must shed, it sheds the
+//! lowest-priority pending request — a high-priority stream never sheds
+//! while a strictly lower-priority resident is holding frames (the
+//! *no-priority-inversion* invariant, asserted for every chaos seed).
+//! Admission ages: a pending request gains one effective rank step per
+//! [`AGE_RANK_TICKS`] ticks waited, so low priority is served late,
+//! never starved.
+//!
+//! ## Hysteresis overload control
+//!
+//! The [`OverloadDetector`] folds three signals — free-frame watermarks,
+//! tick duration, and pending-queue depth — into three states:
+//!
+//! ```text
+//!            pending>0 && (free ≤ ¼ || slow tick)      free==0 && deep queue, twice
+//!   Normal ───────────────────────────► Preempting ─────────────────────► Shedding
+//!      ▲                                    │  ▲                              │
+//!      └──── pending==0 || free ≥ ½ ────────┘  └────── pressure clears ───────┘
+//! ```
+//!
+//! Enter and exit watermarks differ (¼ vs ½ free) so the state cannot
+//! flap on the boundary, and escalation to `Shedding` requires the deep
+//! signal to hold for consecutive observations — one slow tick degrades
+//! ordering, it does not drop traffic. All inputs are values the tick
+//! already has; `observe` allocates nothing and never panics (this file
+//! is under sparge-lint's `serving-no-panic`, and the observe call is a
+//! `hot_fns` entry).
+
+/// Per-request serving priority. Order is meaningful (`Low < Normal <
+/// High`): under pressure, lower ranks pay first.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+/// All priorities, indexable by [`Priority::rank`] (metrics reservoirs
+/// are per-priority arrays in this order).
+pub const PRIORITIES: [Priority; 3] = [Priority::Low, Priority::Normal, Priority::High];
+
+impl Priority {
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "low" => Some(Priority::Low),
+            "normal" => Some(Priority::Normal),
+            "high" => Some(Priority::High),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Numeric rank (`Low`=0 … `High`=2); also the per-priority metrics
+    /// index.
+    pub fn rank(&self) -> u8 {
+        *self as u8
+    }
+}
+
+/// Ticks a pending request must wait to gain one effective rank step at
+/// admission — the aging bound that keeps low priority from starving.
+/// Aging affects *admission order only*: preemption compares declared
+/// ranks, so an aged `Low` request never evicts anyone.
+pub const AGE_RANK_TICKS: u64 = 32;
+
+/// Admission-ordering rank: declared rank plus one step per
+/// [`AGE_RANK_TICKS`] ticks waited (unbounded — a request that waits
+/// long enough outranks fresh `High` arrivals and must be admitted
+/// next).
+pub fn effective_rank(p: Priority, waited_ticks: u64) -> u64 {
+    p.rank() as u64 + waited_ticks / AGE_RANK_TICKS
+}
+
+/// Overload posture of the serving loop, decided once per tick.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OverloadState {
+    /// Frames and ticks are healthy: prefill-first ordering (feed new
+    /// streams), no preemption.
+    #[default]
+    Normal,
+    /// Frame or tick pressure with work waiting: decode-first ordering
+    /// and preempt the lowest-priority resident to admit higher-priority
+    /// pending work.
+    Preempting,
+    /// Sustained deep pressure: additionally shed the lowest-priority
+    /// pending request (with a structured retry hint) instead of letting
+    /// the queue grow unboundedly.
+    Shedding,
+}
+
+impl OverloadState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverloadState::Normal => "normal",
+            OverloadState::Preempting => "preempting",
+            OverloadState::Shedding => "shedding",
+        }
+    }
+}
+
+/// Hysteresis overload detector (see the module docs for the state
+/// machine). One per serving loop; feed it once per tick.
+#[derive(Debug, Default)]
+pub struct OverloadDetector {
+    state: OverloadState,
+    /// Consecutive observations of the deep-pressure signal (gates the
+    /// escalation to `Shedding`).
+    deep_streak: u32,
+    to_preempting: u64,
+    to_shedding: u64,
+}
+
+impl OverloadDetector {
+    /// Free-frame fraction at or below which pressure *enters* (with
+    /// pending work).
+    pub const ENTER_FREE_FRAC: f64 = 0.25;
+    /// Free-frame fraction at or above which pressure *exits* — strictly
+    /// above the enter watermark, so the state cannot flap.
+    pub const EXIT_FREE_FRAC: f64 = 0.5;
+    /// A tick slower than this counts as pressure on its own.
+    pub const SLOW_TICK_SECS: f64 = 0.25;
+    /// Pending depth that (with zero free frames) counts as deep
+    /// pressure.
+    pub const DEEP_PENDING: usize = 8;
+    /// Consecutive deep observations required to escalate to shedding.
+    pub const DEEP_STREAK: u32 = 2;
+
+    pub fn new() -> OverloadDetector {
+        OverloadDetector::default()
+    }
+
+    /// Current posture (last `observe` result).
+    pub fn state(&self) -> OverloadState {
+        self.state
+    }
+
+    /// Lifetime transition counters: (entries into `Preempting` from
+    /// `Normal`, entries into `Shedding`).
+    pub fn transitions(&self) -> (u64, u64) {
+        (self.to_preempting, self.to_shedding)
+    }
+
+    /// Fold one tick's signals into the state machine and return the
+    /// posture the *next* tick should run under. Escalation requires
+    /// pending work: an idle loop with a full pool is saturated, not
+    /// overloaded. Zero-alloc, never panics.
+    pub fn observe(
+        &mut self,
+        free_frames: usize,
+        total_frames: usize,
+        pending: usize,
+        tick_secs: f64,
+    ) -> OverloadState {
+        let free_frac =
+            if total_frames == 0 { 1.0 } else { free_frames as f64 / total_frames as f64 };
+        let pressured = pending > 0
+            && (free_frac <= Self::ENTER_FREE_FRAC || tick_secs >= Self::SLOW_TICK_SECS);
+        let deep = free_frames == 0 && pending >= Self::DEEP_PENDING;
+        if deep {
+            self.deep_streak = self.deep_streak.saturating_add(1);
+        } else {
+            self.deep_streak = 0;
+        }
+        let next = match self.state {
+            OverloadState::Normal => {
+                if pressured {
+                    OverloadState::Preempting
+                } else {
+                    OverloadState::Normal
+                }
+            }
+            OverloadState::Preempting => {
+                if self.deep_streak >= Self::DEEP_STREAK {
+                    OverloadState::Shedding
+                } else if pending == 0 || free_frac >= Self::EXIT_FREE_FRAC {
+                    OverloadState::Normal
+                } else {
+                    OverloadState::Preempting
+                }
+            }
+            OverloadState::Shedding => {
+                if deep {
+                    OverloadState::Shedding
+                } else {
+                    OverloadState::Preempting
+                }
+            }
+        };
+        if next != self.state {
+            match (self.state, next) {
+                (OverloadState::Normal, OverloadState::Preempting) => self.to_preempting += 1,
+                (_, OverloadState::Shedding) => self.to_shedding += 1,
+                _ => {}
+            }
+        }
+        self.state = next;
+        next
+    }
+}
+
+/// Structured backpressure hint for a shed or rejected request: how long
+/// the client should wait before retrying, scaled by posture and queue
+/// depth. Paired with the raw `queue_depth` on the wire so clients can
+/// implement their own policy too.
+pub fn retry_after_ms(state: OverloadState, queue_depth: usize) -> u64 {
+    let base = match state {
+        OverloadState::Normal => 25,
+        OverloadState::Preempting => 100,
+        OverloadState::Shedding => 400,
+    };
+    base + 25 * queue_depth as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_parse_roundtrip_and_order() {
+        for p in PRIORITIES {
+            assert_eq!(Priority::parse(p.name()), Some(p));
+            assert_eq!(PRIORITIES[p.rank() as usize], p);
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+        assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
+        assert_eq!(Priority::default(), Priority::Normal);
+    }
+
+    #[test]
+    fn aging_lets_low_outrank_fresh_high() {
+        assert_eq!(effective_rank(Priority::Low, 0), 0);
+        assert!(effective_rank(Priority::Low, 0) < effective_rank(Priority::High, 0));
+        let aged = effective_rank(Priority::Low, 3 * AGE_RANK_TICKS);
+        assert!(aged > effective_rank(Priority::High, 0), "aged low must eventually win admission");
+    }
+
+    #[test]
+    fn detector_hysteresis_and_streak_gate() {
+        let mut det = OverloadDetector::new();
+        assert_eq!(det.state(), OverloadState::Normal);
+
+        // pressure without pending work is saturation, not overload
+        assert_eq!(det.observe(0, 16, 0, 0.0), OverloadState::Normal);
+
+        // frame pressure with pending work escalates
+        assert_eq!(det.observe(4, 16, 1, 0.0), OverloadState::Preempting);
+        // in the hysteresis band (between ¼ and ½ free): hold
+        assert_eq!(det.observe(6, 16, 1, 0.0), OverloadState::Preempting);
+        // above the exit watermark: recover
+        assert_eq!(det.observe(8, 16, 1, 0.0), OverloadState::Normal);
+        // a slow tick alone is pressure too
+        assert_eq!(det.observe(16, 16, 1, 1.0), OverloadState::Preempting);
+        assert_eq!(det.observe(16, 16, 0, 0.0), OverloadState::Normal);
+
+        // shedding needs the deep signal to hold for the streak
+        assert_eq!(det.observe(0, 16, 16, 0.0), OverloadState::Preempting);
+        assert_eq!(det.observe(0, 16, 16, 0.0), OverloadState::Shedding);
+        // deep pressure clears -> back to preempting, then normal
+        assert_eq!(det.observe(2, 16, 4, 0.0), OverloadState::Preempting);
+        assert_eq!(det.observe(12, 16, 4, 0.0), OverloadState::Normal);
+
+        let (to_p, to_s) = det.transitions();
+        assert_eq!(to_p, 3);
+        assert_eq!(to_s, 1);
+    }
+
+    #[test]
+    fn retry_hints_scale_with_posture_and_depth() {
+        assert!(retry_after_ms(OverloadState::Normal, 0) < retry_after_ms(OverloadState::Preempting, 0));
+        assert!(
+            retry_after_ms(OverloadState::Preempting, 0) < retry_after_ms(OverloadState::Shedding, 0)
+        );
+        assert!(retry_after_ms(OverloadState::Shedding, 9) > retry_after_ms(OverloadState::Shedding, 1));
+    }
+}

@@ -13,7 +13,7 @@
 //! tick, which is what caps time-to-first-token under mixed traffic.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -21,7 +21,8 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::attention::{AttnConfig, AttnEngine, Execution, KvSplit};
+use crate::attention::paged::PageAllocator;
+use crate::attention::{AttnConfig, AttnEngine, DiskTier, Execution, KvSplit};
 use crate::sparge::SpargeParams;
 use crate::util::threadpool::WorkerPool;
 
@@ -29,6 +30,7 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::engine::EngineHandle;
 use super::fault::FaultPlan;
 use super::metrics::Metrics;
+use super::qos::{retry_after_ms, OverloadState};
 use super::request::{AttnMode, AttnStreamSpec, GenerateRequest, GenerateResponse, Payload, QueuedRequest};
 use super::session_manager::{SeqOutcome, SeqResult, SeqStream, SessionManager};
 
@@ -89,6 +91,28 @@ pub struct ServeOptions {
     /// value — costs one branch per tick; the recovery machinery
     /// (quarantine, deadlines, drain) is always armed regardless.
     pub fault: Option<FaultPlan>,
+    /// Serve attention streams out of a shared paged KV frame pool
+    /// instead of per-session caches. Paged serving is what enables
+    /// frame-aware admission, priority-aware preemption through the
+    /// offload tier, and overload shedding with structured backpressure
+    /// on the wire. `None` (the default) keeps monolithic sessions.
+    pub paged: Option<PagedServe>,
+}
+
+/// Paged-serving composition (see [`ServeOptions::paged`]). Every
+/// admitted stream must match the pool's head dims — a mismatched spec
+/// fails its request with a structured error, never the loop.
+#[derive(Clone, Debug)]
+pub struct PagedServe {
+    /// Frames in the pool, each `cfg.bk` rows.
+    pub frames: usize,
+    /// K head dim of the pool.
+    pub d: usize,
+    /// V dim of the pool.
+    pub dv: usize,
+    /// Checkpoint preempted sessions to a checksummed on-disk tier
+    /// (under the OS temp dir) instead of the in-memory default.
+    pub spill_to_disk: bool,
 }
 
 impl Default for ServeOptions {
@@ -100,6 +124,7 @@ impl Default for ServeOptions {
             threads: crate::util::threadpool::default_threads(),
             kv_split: KvSplit::Auto,
             fault: None,
+            paged: None,
         }
     }
 }
@@ -131,6 +156,10 @@ pub struct Coordinator {
     attn_pool: Arc<WorkerPool>,
     next_id: AtomicU64,
     worker: Option<thread::JoinHandle<()>>,
+    /// Overload posture published by the scheduler thread once per tick
+    /// (`OverloadState` encoded 0/1/2) so submit-side rejections can
+    /// carry an honest, posture-scaled retry hint.
+    overload: Arc<AtomicU8>,
 }
 
 impl Coordinator {
@@ -165,13 +194,17 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::new());
         let attn_pool = WorkerPool::shared(opts.threads);
         let attn_engine = opts.build_engine(Arc::clone(&attn_pool));
+        let overload = Arc::new(AtomicU8::new(0));
         let worker = {
             let batcher = Arc::clone(&batcher);
             let metrics = Arc::clone(&metrics);
             let engine = engine.clone();
+            let overload = Arc::clone(&overload);
             thread::Builder::new()
                 .name("sparge-scheduler".into())
-                .spawn(move || serve_loop(&batcher, engine.as_ref(), &metrics, policy, &opts, &attn_engine))
+                .spawn(move || {
+                    serve_loop(&batcher, engine.as_ref(), &metrics, policy, &opts, &attn_engine, &overload)
+                })
                 .expect("spawn scheduler")
         };
         Coordinator {
@@ -181,7 +214,27 @@ impl Coordinator {
             attn_pool,
             next_id: AtomicU64::new(1),
             worker: Some(worker),
+            overload,
         }
+    }
+
+    /// Overload posture of the serving loop as of its last tick
+    /// (`Normal` until the loop has observed anything).
+    pub fn overload_state(&self) -> OverloadState {
+        match self.overload.load(Ordering::Relaxed) {
+            1 => OverloadState::Preempting,
+            2 => OverloadState::Shedding,
+            _ => OverloadState::Normal,
+        }
+    }
+
+    /// Structured backpressure for a rejected submit: `(retry_after_ms,
+    /// queue_depth)` scaled by the loop's posture and the batcher depth
+    /// at this instant — what the server puts on the wire next to a
+    /// "queue full" error.
+    pub fn retry_hint(&self) -> (u64, usize) {
+        let depth = self.batcher.depth();
+        (retry_after_ms(self.overload_state(), depth), depth)
     }
 
     fn enqueue(
@@ -470,6 +523,8 @@ impl LmActive {
             tpot: tpot_mean,
             sparsity: None,
             error: if self.failed { Some("generation failed".to_string()) } else { None },
+            retry_after_ms: None,
+            queue_depth: None,
             output: self.out,
         });
     }
@@ -481,12 +536,17 @@ struct PendingStream {
     respond: mpsc::Sender<GenerateResponse>,
 }
 
-fn respond_stream(metrics: &Metrics, pending: PendingStream, res: SeqResult) {
+fn respond_stream(
+    metrics: &Metrics,
+    pending: PendingStream,
+    res: SeqResult,
+    backpressure: (u64, usize),
+) {
     match res.outcome {
         SeqOutcome::Completed => {
             let sparsity = res.stats.sparsity();
             metrics.record(res.tokens, res.latency, res.compute, Some(sparsity));
-            metrics.record_token_latency(res.ttft, &res.tpot);
+            metrics.record_token_latency_for(res.priority, res.ttft, &res.tpot);
             let _ = pending.respond.send(GenerateResponse {
                 id: res.id,
                 output: Vec::new(),
@@ -498,15 +558,20 @@ fn respond_stream(metrics: &Metrics, pending: PendingStream, res: SeqResult) {
                 tpot: if res.tpot.is_empty() { None } else { Some(res.tpot_mean()) },
                 sparsity: Some(sparsity),
                 error: None,
+                retry_after_ms: None,
+                queue_depth: None,
             });
         }
         outcome => {
             // terminal non-success: the stream was quarantined, cancelled
             // at its deadline, or shed — report the outcome as a
             // structured error instead of a silent drop, and keep any
-            // partial output stats it earned
+            // partial output stats it earned. A shed stream additionally
+            // carries the backpressure pair: it was dropped for capacity,
+            // so the client is told when (and against what depth) to retry.
             metrics.record_error();
             metrics.record_outcome(outcome.name());
+            let shed = outcome == SeqOutcome::Shed;
             let _ = pending.respond.send(GenerateResponse {
                 id: res.id,
                 output: Vec::new(),
@@ -518,6 +583,8 @@ fn respond_stream(metrics: &Metrics, pending: PendingStream, res: SeqResult) {
                 tpot: if res.tpot.is_empty() { None } else { Some(res.tpot_mean()) },
                 sparsity: None,
                 error: Some(format!("stream terminated: {}", outcome.name())),
+                retry_after_ms: if shed { Some(backpressure.0) } else { None },
+                queue_depth: if shed { Some(backpressure.1) } else { None },
             });
         }
     }
@@ -532,8 +599,24 @@ fn serve_loop(
     policy: BatchPolicy,
     opts: &ServeOptions,
     attn_engine: &AttnEngine,
+    overload: &AtomicU8,
 ) {
-    let mut mgr = SessionManager::new(attn_engine, opts.chunk);
+    let mut mgr = match &opts.paged {
+        Some(pg) => SessionManager::new_paged(
+            attn_engine,
+            opts.chunk,
+            PageAllocator::new(pg.frames, opts.cfg.bk, pg.d, pg.dv),
+        ),
+        None => SessionManager::new(attn_engine, opts.chunk),
+    };
+    if opts.paged.as_ref().is_some_and(|pg| pg.spill_to_disk) {
+        match DiskTier::scratch("serve") {
+            Ok(tier) => mgr.set_offload_tier(Box::new(tier)),
+            // an unusable temp dir degrades to the in-memory tier — the
+            // loop must serve either way
+            Err(e) => crate::log_error!("disk offload tier unavailable ({}), using memory", e.name()),
+        }
+    }
     mgr.set_fault_plan(opts.fault.clone());
     let mut lm: Vec<LmActive> = Vec::new();
     let mut pending: HashMap<u64, PendingStream> = HashMap::new();
@@ -554,11 +637,22 @@ fn serve_loop(
                     lm.push(LmActive::new(req.id, req.mode, prompt, max_new_tokens, arrived, respond));
                 }
                 Payload::AttnStream(spec) => {
-                    // a degenerate spec must fail the request, not panic
-                    // the scheduler thread
-                    if spec.prefill + spec.decode == 0 || spec.d == 0 {
+                    // a degenerate or pool-mismatched spec must fail the
+                    // request, not panic the scheduler thread (paged
+                    // sessions assert their dims against the frame pool)
+                    let mismatch = opts
+                        .paged
+                        .as_ref()
+                        .map(|pg| spec.d != pg.d || spec.d != pg.dv)
+                        .unwrap_or(false);
+                    if spec.prefill + spec.decode == 0 || spec.d == 0 || mismatch {
+                        let what = if mismatch {
+                            "attention stream dims do not match the paged KV pool"
+                        } else {
+                            "empty attention stream spec"
+                        };
                         metrics.record_error();
-                        crate::log_error!("request {}: empty attention stream spec", req.id);
+                        crate::log_error!("request {}: {}", req.id, what);
                         let _ = respond.send(GenerateResponse {
                             id: req.id,
                             output: Vec::new(),
@@ -569,7 +663,9 @@ fn serve_loop(
                             ttft: None,
                             tpot: None,
                             sparsity: None,
-                            error: Some("empty attention stream spec".to_string()),
+                            error: Some(what.to_string()),
+                            retry_after_ms: None,
+                            queue_depth: None,
                         });
                         continue;
                     }
@@ -579,9 +675,16 @@ fn serve_loop(
             }
         }
         // advance every attention stream one chunk/token
-        for res in mgr.tick() {
+        let retired = mgr.tick();
+        // publish the posture the tick just computed, so submit-side
+        // rejections carry an honest retry hint; shed responses below use
+        // the same pair
+        let state = mgr.overload_state();
+        overload.store(state as u8, Ordering::Relaxed);
+        let bp = (mgr.retry_hint_ms(), mgr.pending() + batcher.depth());
+        for res in retired {
             if let Some(p) = pending.remove(&res.id) {
-                respond_stream(metrics, p, res);
+                respond_stream(metrics, p, res, bp);
             }
         }
         // advance every LM sequence one token
@@ -600,13 +703,17 @@ fn serve_loop(
     // manager queued internally, release every frame, assert the paged
     // pool is empty) and answers any straggler.
     let t0 = Instant::now();
-    for res in mgr.drain() {
+    let drained = mgr.drain();
+    let bp = (mgr.retry_hint_ms(), mgr.pending());
+    for res in drained {
         if let Some(p) = pending.remove(&res.id) {
-            respond_stream(metrics, p, res);
+            respond_stream(metrics, p, res, bp);
         }
     }
     metrics.record_drain_duration(t0.elapsed().as_secs_f64());
     metrics.record_injected_faults(mgr.faults_injected());
+    let (preempted, resumed, to_preempting, to_shedding, inversions) = mgr.qos_counters();
+    metrics.record_qos(preempted, resumed, to_preempting, to_shedding, inversions);
 }
 
 #[cfg(test)]

@@ -13,19 +13,26 @@
 //!        (serving-path probe: AttnSession prefill + N single-row decode
 //!        steps, per-step sparsity observable end-to-end)
 //!   {"op":"attn","mode":"serve","sessions":4,"n":1024,"steps":32,"d":64,
-//!    "deadline_ms":500,"token_budget":16}
+//!    "deadline_ms":500,"token_budget":16,"priority":"high"}
 //!     -> {"mode":"serve","sessions":[{"id":..,"ttft_ms":..,"tpot_ms":..,
 //!         "sparsity":..,"error":null},...],"wall_ms":...,"tokens_per_sec":...}
 //!        (continuous-batching traffic: N seeded attention streams
 //!        submitted through the scheduler's serving loop — chunked
 //!        prefill + per-tick decode over the shared AttnEngine.
 //!        `deadline_ms`/`token_budget` are optional per-request limits;
-//!        a stream that misses its deadline or is quarantined reports a
-//!        non-null "error" with its terminal outcome)
+//!        `priority` — "low"/"normal"/"high" — feeds QoS scheduling on a
+//!        paged coordinator. A stream that misses its deadline or is
+//!        quarantined reports a non-null "error" with its terminal
+//!        outcome; one shed under overload additionally carries
+//!        "retry_after_ms" and "queue_depth" so the client knows when to
+//!        come back — as does a submit rejected by queue backpressure)
 //!   {"op":"stats"} -> {"requests":...,"mean_sparsity":...,
 //!                      "ttft_p50_ms":...,"tpot_p50_ms":...,
+//!                      "ttft_p99_ms_by_priority":{"low":..,...},
 //!                      "quarantined":...,"deadline_cancelled":...,
-//!                      "shed":...,"injected_faults":...,"drain_ms":...}
+//!                      "shed":...,"injected_faults":...,"drain_ms":...,
+//!                      "preempted":...,"resumed":...,
+//!                      "overload_state":"normal",...}
 //!   {"op":"ping"}  -> {"ok":true}
 
 use std::io::{BufRead, BufReader, Write};
@@ -38,6 +45,7 @@ use anyhow::{Context, Result};
 use crate::util::json::Json;
 use crate::util::threadpool::ThreadPool;
 
+use super::qos::{Priority, PRIORITIES};
 use super::request::AttnMode;
 use super::scheduler::Coordinator;
 
@@ -107,6 +115,12 @@ pub fn handle_conn(coordinator: &Coordinator, stream: TcpStream) -> Result<()> {
     Ok(())
 }
 
+/// A per-priority triple (indexed by `Priority::rank`) as a JSON object
+/// keyed `"low"`/`"normal"`/`"high"`, each value scaled by `scale`.
+fn by_priority(vals: &[f64; 3], scale: f64) -> Json {
+    Json::obj(PRIORITIES.iter().map(|p| (p.name(), Json::num(vals[p.rank() as usize] * scale))).collect())
+}
+
 /// Parse and execute one request line (exposed for tests).
 pub fn dispatch(coordinator: &Coordinator, line: &str) -> Json {
     match dispatch_inner(coordinator, line) {
@@ -140,12 +154,28 @@ fn dispatch_inner(coordinator: &Coordinator, line: &str) -> Result<Json> {
                 ("tpot_count", Json::num(s.tpot_count as f64)),
                 ("tpot_p50_ms", Json::num(s.tpot_p50 * 1e3)),
                 ("tpot_p99_ms", Json::num(s.tpot_p99 * 1e3)),
+                // per-priority token latencies (QoS tier observability;
+                // keys "low"/"normal"/"high", all 0 until that tier has
+                // retired a stream)
+                ("ttft_count_by_priority", by_priority(&s.ttft_count_by_priority.map(|c| c as f64), 1.0)),
+                ("ttft_p50_ms_by_priority", by_priority(&s.ttft_p50_by_priority, 1e3)),
+                ("ttft_p99_ms_by_priority", by_priority(&s.ttft_p99_by_priority, 1e3)),
+                ("tpot_count_by_priority", by_priority(&s.tpot_count_by_priority.map(|c| c as f64), 1.0)),
+                ("tpot_p50_ms_by_priority", by_priority(&s.tpot_p50_by_priority, 1e3)),
+                ("tpot_p99_ms_by_priority", by_priority(&s.tpot_p99_by_priority, 1e3)),
                 // fault-tier outcome counters (graceful degradation)
                 ("quarantined", Json::num(s.quarantined as f64)),
                 ("deadline_cancelled", Json::num(s.deadline_cancelled as f64)),
                 ("shed", Json::num(s.shed as f64)),
                 ("injected_faults", Json::num(s.injected_faults as f64)),
                 ("drain_ms", Json::num(s.drain_duration * 1e3)),
+                // QoS / overload-control counters (preemption tier)
+                ("preempted", Json::num(s.preempted as f64)),
+                ("resumed", Json::num(s.resumed as f64)),
+                ("overload_to_preempting", Json::num(s.overload_to_preempting as f64)),
+                ("overload_to_shedding", Json::num(s.overload_to_shedding as f64)),
+                ("priority_inversions", Json::num(s.priority_inversions as f64)),
+                ("overload_state", Json::str(coordinator.overload_state().name())),
             ]))
         }
         "attn" => {
@@ -216,12 +246,18 @@ fn dispatch_inner(coordinator: &Coordinator, line: &str) -> Result<Json> {
                     // per-request serving limits: enforced by the manager
                     // at tick boundaries (deadline → cancelled with a
                     // structured error; budget → truncated completion)
+                    let priority = match req.get("priority").and_then(|v| v.as_str()) {
+                        Some(s) => Priority::parse(s)
+                            .with_context(|| format!("bad priority '{s}' (want low/normal/high)"))?,
+                        None => Priority::default(),
+                    };
                     let limits = crate::coordinator::request::RequestLimits {
                         deadline_ms: req.get("deadline_ms").and_then(|v| v.as_usize()).map(|m| m as u64),
                         token_budget: req.get("token_budget").and_then(|v| v.as_usize()),
+                        priority,
                     };
                     let t0 = std::time::Instant::now();
-                    let rxs: Vec<_> = (0..sessions)
+                    let submitted: Vec<_> = (0..sessions)
                         .map(|i| {
                             let spec = crate::coordinator::request::AttnStreamSpec {
                                 prefill: n,
@@ -232,13 +268,25 @@ fn dispatch_inner(coordinator: &Coordinator, line: &str) -> Result<Json> {
                             };
                             coordinator.submit_stream(spec, AttnMode::Sparge)
                         })
-                        .collect::<Result<_>>()?;
+                        .collect();
+                    if submitted.iter().any(|r| r.is_err()) {
+                        // queue backpressure: the batcher refused the
+                        // submit, so answer with the structured retry
+                        // hint instead of a bare error string
+                        let (retry_ms, depth) = coordinator.retry_hint();
+                        return Ok(Json::obj(vec![
+                            ("error", Json::str("queue full or closed (backpressure)")),
+                            ("retry_after_ms", Json::num(retry_ms as f64)),
+                            ("queue_depth", Json::num(depth as f64)),
+                        ]));
+                    }
+                    let rxs: Vec<_> = submitted.into_iter().flatten().collect();
                     let mut rows = Vec::with_capacity(sessions);
                     let mut tokens = 0usize;
                     for rx in rxs {
                         let r = rx.recv().map_err(|_| anyhow::anyhow!("stream dropped"))?;
                         tokens += r.tokens;
-                        rows.push(Json::obj(vec![
+                        let mut row = vec![
                             ("id", Json::num(r.id as f64)),
                             ("ttft_ms", Json::num(r.ttft.unwrap_or(0.0) * 1e3)),
                             ("tpot_ms", Json::num(r.tpot.unwrap_or(0.0) * 1e3)),
@@ -248,7 +296,16 @@ fn dispatch_inner(coordinator: &Coordinator, line: &str) -> Result<Json> {
                                 "error",
                                 r.error.as_deref().map_or(Json::Null, Json::str),
                             ),
-                        ]));
+                        ];
+                        // a stream shed under overload carries the retry
+                        // hint the loop computed the tick it was dropped
+                        if let Some(ms) = r.retry_after_ms {
+                            row.push(("retry_after_ms", Json::num(ms as f64)));
+                        }
+                        if let Some(depth) = r.queue_depth {
+                            row.push(("queue_depth", Json::num(depth as f64)));
+                        }
+                        rows.push(Json::obj(row));
                     }
                     let wall = t0.elapsed().as_secs_f64();
                     Ok(Json::obj(vec![

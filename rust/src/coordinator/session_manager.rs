@@ -70,6 +70,7 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
+use crate::attention::offload::{MemTier, OffloadTier};
 use crate::attention::paged::{PageAllocator, PageStats, PagedAttnSession, PrefixRegistry};
 use crate::attention::pipeline::{debug_assert_disjoint_slots, SendPtr};
 use crate::attention::{AttnEngine, AttnSession, Exec, SkipStats, Workspace};
@@ -77,6 +78,7 @@ use crate::tensor::Tensor;
 use crate::workloads::{synthetic, SyntheticSpec};
 
 use super::fault::{FaultKind, FaultPlan};
+use super::qos::{effective_rank, retry_after_ms, OverloadDetector, OverloadState, Priority};
 use super::request::{AttnStreamSpec, RequestLimits};
 
 /// The token stream a session consumes: `prefill` prompt rows of q/k/v,
@@ -168,6 +170,9 @@ pub struct SeqResult {
     pub compute: f64,
     /// How the sequence terminated (see [`SeqOutcome`]).
     pub outcome: SeqOutcome,
+    /// The request's declared serving priority (for per-priority
+    /// latency reservoirs and backpressure responses).
+    pub priority: Priority,
 }
 
 impl SeqResult {
@@ -239,6 +244,13 @@ impl ActiveSeq<'_> {
 
     fn finished(&self) -> bool {
         self.prefilled == self.stream.prefill && self.decoded == self.target_steps()
+    }
+
+    /// True when this is a paged session currently suspended to the
+    /// offload tier (frames released, payload checkpointed). Suspended
+    /// sessions take no tick work until the resume pass brings them back.
+    fn paged_suspended(&self) -> bool {
+        matches!(&self.session, SeqSession::Paged(ps) if ps.is_suspended())
     }
 
     /// Run one bounded prefill chunk (`chunk` rows, pre-aligned by the
@@ -414,6 +426,7 @@ impl ActiveSeq<'_> {
             latency: self.arrived.elapsed().as_secs_f64(),
             compute: self.compute,
             outcome: self.outcome.unwrap_or(SeqOutcome::Completed),
+            priority: self.limits.priority,
         }
     }
 }
@@ -424,18 +437,51 @@ fn row_finite(t: &Tensor, r: usize) -> bool {
     t.row(r).iter().all(|x| x.is_finite())
 }
 
+/// A stream enqueued on a paged manager, waiting for frame-aware
+/// admission.
+struct PendingSeq {
+    id: u64,
+    stream: SeqStream,
+    arrived: Instant,
+    limits: RequestLimits,
+    /// Manager tick at enqueue — the aging clock: admission order is
+    /// [`effective_rank`] over `ticks - queued_tick`, so low priority is
+    /// served late, never starved.
+    queued_tick: u64,
+}
+
 /// The paged manager's memory plane: the shared frame pool, the
-/// shared-prefix registry, and the frame-aware admission queue.
+/// shared-prefix registry, the aged-priority admission queue, and the
+/// QoS machinery behind preemption — the offload tier checkpoints spill
+/// through and the hysteresis overload detector that gates it all.
 struct PagedServing {
     alloc: PageAllocator,
     registry: PrefixRegistry,
     /// Streams admitted by the caller but not yet holding frames —
     /// admission into `active` happens inside `tick`, keyed on the free
-    /// list.
-    pending: VecDeque<(u64, SeqStream, Instant, RequestLimits)>,
+    /// list and ordered by aged priority.
+    pending: VecDeque<PendingSeq>,
     /// Ticks on which admission stalled with the queue non-empty even
     /// after LRU eviction (the load-shed signal).
     deferred: u64,
+    /// Where preempted sessions checkpoint their frame payloads
+    /// (in-memory by default; [`SessionManager::set_offload_tier`]
+    /// installs e.g. a checksummed [`crate::attention::DiskTier`]).
+    tier: Box<dyn OffloadTier + Send>,
+    /// Hysteresis overload detector; its posture orders each tick
+    /// (prefill-first vs decode-first) and gates preemption/shedding.
+    detector: OverloadDetector,
+    /// Wall-clock seconds the previous tick took — the tick-duration
+    /// signal fed to the detector at the top of the next tick.
+    last_tick_secs: f64,
+    /// Sessions preempted to the offload tier (lifetime counter).
+    preempted: u64,
+    /// Suspended sessions brought back from the tier (lifetime counter).
+    resumed: u64,
+    /// Times a request was shed while a strictly lower-priority resident
+    /// held frames. The preemption order makes this structurally
+    /// impossible; the chaos suite asserts it stays 0 under every seed.
+    inversions: u64,
 }
 
 /// N live [`AttnSession`]s over one shared engine; see the module docs.
@@ -507,8 +553,47 @@ impl<'e> SessionManager<'e> {
             registry: PrefixRegistry::new(),
             pending: VecDeque::new(),
             deferred: 0,
+            tier: Box::new(MemTier::new()),
+            detector: OverloadDetector::new(),
+            last_tick_secs: 0.0,
+            preempted: 0,
+            resumed: 0,
+            inversions: 0,
         });
         m
+    }
+
+    /// Install the offload tier preempted sessions checkpoint through
+    /// (replacing the in-memory default). Call before serving: a
+    /// checkpoint stored in the old tier is not visible to the new one.
+    /// No-op on monolithic managers.
+    pub fn set_offload_tier(&mut self, tier: Box<dyn OffloadTier + Send>) {
+        if let Some(p) = self.paging.as_mut() {
+            p.tier = tier;
+        }
+    }
+
+    /// Overload posture the next tick will run under (`Normal` for
+    /// monolithic managers, which have no frame pressure to detect).
+    pub fn overload_state(&self) -> OverloadState {
+        self.paging.as_ref().map_or(OverloadState::Normal, |p| p.detector.state())
+    }
+
+    /// QoS lifetime counters: (preempted, resumed, entries into
+    /// `Preempting`, entries into `Shedding`, priority inversions).
+    /// All zero for monolithic managers.
+    pub fn qos_counters(&self) -> (u64, u64, u64, u64, u64) {
+        self.paging.as_ref().map_or((0, 0, 0, 0, 0), |p| {
+            let (to_p, to_s) = p.detector.transitions();
+            (p.preempted, p.resumed, to_p, to_s, p.inversions)
+        })
+    }
+
+    /// Structured backpressure hint for a rejected/shed request right
+    /// now: retry-after milliseconds scaled by the current posture and
+    /// pending depth (see [`retry_after_ms`]).
+    pub fn retry_hint_ms(&self) -> u64 {
+        retry_after_ms(self.overload_state(), self.pending())
     }
 
     /// Live session count.
@@ -545,7 +630,8 @@ impl<'e> SessionManager<'e> {
     pub fn admit_with(&mut self, id: u64, stream: SeqStream, arrived: Instant, limits: RequestLimits) {
         assert!(!stream.is_empty(), "empty attention stream");
         if let Some(p) = self.paging.as_mut() {
-            p.pending.push_back((id, stream, arrived, limits));
+            let queued_tick = self.ticks;
+            p.pending.push_back(PendingSeq { id, stream, arrived, limits, queued_tick });
             return;
         }
         let session = SeqSession::Mono(self.engine.session());
@@ -641,7 +727,13 @@ impl<'e> SessionManager<'e> {
     /// A zero-output result for a request that terminates without ever
     /// running (shed from the pending queue, or expired before
     /// admission).
-    fn terminal_result(id: u64, stream: &SeqStream, arrived: Instant, outcome: SeqOutcome) -> SeqResult {
+    fn terminal_result(
+        id: u64,
+        stream: &SeqStream,
+        arrived: Instant,
+        priority: Priority,
+        outcome: SeqOutcome,
+    ) -> SeqResult {
         let dv = stream.v.dim(1);
         SeqResult {
             id,
@@ -653,6 +745,7 @@ impl<'e> SessionManager<'e> {
             latency: arrived.elapsed().as_secs_f64(),
             compute: 0.0,
             outcome,
+            priority,
         }
     }
 
@@ -850,12 +943,18 @@ impl<'e> SessionManager<'e> {
         done
     }
 
-    /// The paged tick: reservation-based frame-aware admission (shedding
-    /// unreferenced prefix frames under pressure, load-shedding when even
-    /// that is not enough), then the same phase structure as the
-    /// monolithic tick with each decode step split into a serial append
-    /// half (`&mut` allocator, LRU-evicting another resident session if
-    /// a CoW split outruns the free list) and a batched compute half
+    /// The paged tick: overload posture first (the hysteresis detector
+    /// over free-frame watermarks, the previous tick's duration, and
+    /// queue depth), then a resume pass for preempted sessions, then
+    /// reservation-based frame-aware admission over the *aged-priority*
+    /// queue — preempting the lowest-priority resident to the offload
+    /// tier and, under sustained deep pressure, shedding the lowest-
+    /// priority pending request. The session phases keep the monolithic
+    /// tick's structure, ordered prefill-first on healthy ticks (the
+    /// long-standing order, bit-for-bit) and decode-first under
+    /// pressure; each decode step splits into a serial append half
+    /// (`&mut` allocator, LRU-evicting another resident session if a
+    /// CoW split outruns the free list) and a batched compute half
     /// fanned over the shared `&` allocator.
     /// Sessions the free list cannot serve this tick are skipped, not
     /// failed — they retry next tick. A steady-state decode tick stays
@@ -864,95 +963,353 @@ impl<'e> SessionManager<'e> {
         let chunk = self.chunk_rows();
         let bk = self.engine.config().bk;
         let tick = self.ticks;
+        let t0 = Instant::now();
         // Terminal results can arise before any session runs (expired or
         // unservable pending streams) — collect them with retirement.
         // sparge-lint: allow(hot-path-no-alloc)
         let mut done = Vec::new();
-        // 1) frame-aware admission, oldest first. Every active paged
-        // session carries a standing *reservation* for its worst-case
-        // remaining frame need (full stream length in frames, minus the
-        // frames it already maps — evicted sessions reserve their full
-        // re-page-in), so a newcomer is admitted only when the free list
-        // covers its whole stream ON TOP of every resident session
-        // finishing. Without the reservation, several same-tick
-        // admissions would each pass a naive free-list check before any
-        // of them claims a frame — and the pool could wedge with every
-        // session starved and nothing left to retire. Unreferenced
-        // shared-prefix frames are reclaimed (least-hit first) before
-        // shedding load.
+        // 0) posture for THIS tick: every input is a value the tick
+        // already has, so the observe call is free; the result orders
+        // the passes below and gates preemption/shedding.
+        let state = match self.paging.as_mut() {
+            Some(p) => {
+                let (free, total) = (p.alloc.free_frames(), p.alloc.capacity());
+                let (pending, last) = (p.pending.len(), p.last_tick_secs);
+                p.detector.observe(free, total, pending, last)
+            }
+            None => return done,
+        };
+        // 1a) resume pass: preempted sessions re-page-in before anything
+        // else claims frames, highest declared rank first
+        self.resume_suspended(bk, tick);
+        // 1b) frame-aware admission over the aged-priority queue
+        self.admit_pending(bk, tick, state, &mut done);
+        // 2) phase snapshot (one unit of work per session per tick),
+        // then the two passes ordered by posture: healthy ticks feed new
+        // streams first (prefill-first — the long-standing order, kept
+        // bit-for-bit); pressured ticks finish in-flight tokens first
+        // (decode-first), so capacity freed by preemption drains work
+        // already holding frames before opening new fronts.
+        self.decode_phase.clear();
+        self.decode_phase.extend(self.active.iter().map(|s| s.prefilled == s.stream.prefill));
+        if state == OverloadState::Normal {
+            self.prefill_pass(chunk, tick);
+            self.decode_pass(tick);
+        } else {
+            self.decode_pass(tick);
+            self.prefill_pass(chunk, tick);
+        }
+        // 3) retirement releases the session's frame references back to
+        // the pool — and drops any checkpoint it left in the offload
+        // tier — before handing the result to the caller: terminal
+        // outcomes (quarantine, deadline) take the same release path an
+        // eviction uses, so neither a frame nor an offloaded checkpoint
+        // outlives its stream
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].finished() || self.active[i].outcome.is_some() {
+                let mut seq = self.active.remove(i);
+                if let (SeqSession::Paged(ps), Some(p)) = (&mut seq.session, self.paging.as_mut()) {
+                    ps.release(&mut p.alloc);
+                    p.tier.discard(seq.id);
+                }
+                done.push(seq.into_result());
+            } else {
+                i += 1;
+            }
+        }
+        if let Some(p) = self.paging.as_mut() {
+            p.last_tick_secs = t0.elapsed().as_secs_f64();
+        }
+        done
+    }
+
+    /// Resume pass: bring suspended (preempted) sessions back from the
+    /// offload tier while free frames cover their full re-page-in,
+    /// highest *declared* rank first. Strict rank order: when the
+    /// best-ranked suspended session does not fit, nothing below it
+    /// resumes either — frames free up as residents retire, and jumping
+    /// a smaller low-rank session ahead would be a priority inversion.
+    /// A tier load failure (lost or corrupt checkpoint) quarantines the
+    /// session: the payload is unrecoverable, never a panic.
+    fn resume_suspended(&mut self, bk: usize, tick: u64) {
         loop {
-            let Some(p) = self.paging.as_mut() else { break };
-            let need = match p.pending.front() {
-                Some((_, stream, arrived, limits)) => {
-                    // a queued stream can terminate without ever running:
-                    // its deadline passed while waiting, or its frame
-                    // need exceeds what the pool can EVER offer (without
-                    // this, an unservable stream defers forever and
-                    // wedges everything queued behind it)
-                    let expired = limits
-                        .deadline_ms
-                        .is_some_and(|ms| arrived.elapsed().as_millis() as u64 > ms);
-                    let need = stream.len().div_ceil(bk);
-                    if expired || need > p.alloc.capacity() {
-                        let outcome = if expired {
-                            SeqOutcome::DeadlineCancelled
-                        } else {
-                            p.alloc.note_load_shed();
-                            SeqOutcome::Shed
-                        };
-                        if let Some((id, stream, arrived, _)) = p.pending.pop_front() {
-                            done.push(Self::terminal_result(id, &stream, arrived, outcome));
+            let mut best: Option<usize> = None;
+            for (i, s) in self.active.iter().enumerate() {
+                if s.outcome.is_some() || !s.paged_suspended() {
+                    continue;
+                }
+                if best.map_or(true, |b| {
+                    s.limits.priority.rank() > self.active[b].limits.priority.rank()
+                }) {
+                    best = Some(i);
+                }
+            }
+            let Some(i) = best else { return };
+            let Some(p) = self.paging.as_mut() else { return };
+            let id = self.active[i].id;
+            let SeqSession::Paged(ps) = &mut self.active[i].session else { return };
+            if p.alloc.free_frames() < PagedAttnSession::frames_for_rows(ps.len(), bk) {
+                return;
+            }
+            match ps.resume(&mut p.alloc, id, p.tier.as_mut()) {
+                Ok(_) => {
+                    p.resumed += 1;
+                    // freshly resumed: stamped so it is not a preemption
+                    // candidate again this same tick
+                    self.active[i].last_advanced = tick;
+                }
+                Err(_) => {
+                    self.active[i].outcome = Some(SeqOutcome::Quarantined);
+                }
+            }
+        }
+    }
+
+    /// Outstanding worst-case frame reservations over the active set:
+    /// every paged session's full stream length in frames, minus what it
+    /// already maps (evicted sessions reserve their full re-page-in).
+    /// Suspended sessions are excluded — their frames are exactly the
+    /// capacity preemption freed, and they re-enter the sum on resume.
+    fn outstanding_frames(&self, bk: usize) -> usize {
+        self.active
+            .iter()
+            .map(|s| match &s.session {
+                SeqSession::Paged(ps) if !ps.is_suspended() => {
+                    s.stream.len().div_ceil(bk).saturating_sub(ps.frames_held())
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Frame-aware admission over the aged-priority queue. Every active
+    /// paged session carries a standing *reservation* for its worst-case
+    /// remaining frame need, so a newcomer is admitted only when the
+    /// free list covers its whole stream ON TOP of every resident
+    /// session finishing — without it, several same-tick admissions
+    /// would each pass a naive free-list check before any of them claims
+    /// a frame, and the pool could wedge with every session starved.
+    /// While the candidate is short, unreferenced shared-prefix frames
+    /// are reclaimed (least-hit first); under a pressured posture the
+    /// lowest resident strictly below the candidate's declared rank is
+    /// preempted to the offload tier; and a `Shedding` posture drops the
+    /// lowest-priority pending request (at most one per tick, never past
+    /// a strictly lower-priority resident still holding frames — the
+    /// no-priority-inversion invariant). Anything else defers: a
+    /// load-shed count, not a failure.
+    fn admit_pending(
+        &mut self,
+        bk: usize,
+        tick: u64,
+        state: OverloadState,
+        done: &mut Vec<SeqResult>,
+    ) {
+        // Screen the whole queue first: a queued stream can terminate
+        // without ever running — its deadline passed while waiting, or
+        // its frame need exceeds what the pool can EVER offer. Priority
+        // admission means the queue is no longer FIFO, so a doomed entry
+        // cannot be left to be noticed "when it reaches the front".
+        if let Some(p) = self.paging.as_mut() {
+            let mut qi = 0;
+            while qi < p.pending.len() {
+                let e = &p.pending[qi];
+                let expired = e
+                    .limits
+                    .deadline_ms
+                    .is_some_and(|ms| e.arrived.elapsed().as_millis() as u64 > ms);
+                let unservable = e.stream.len().div_ceil(bk) > p.alloc.capacity();
+                if !(expired || unservable) {
+                    qi += 1;
+                    continue;
+                }
+                let outcome = if expired {
+                    SeqOutcome::DeadlineCancelled
+                } else {
+                    p.alloc.note_load_shed();
+                    SeqOutcome::Shed
+                };
+                if let Some(e) = p.pending.remove(qi) {
+                    done.push(Self::terminal_result(
+                        e.id,
+                        &e.stream,
+                        e.arrived,
+                        e.limits.priority,
+                        outcome,
+                    ));
+                }
+            }
+        }
+        let mut shed_this_tick = false;
+        loop {
+            // candidate: highest effective (aged) rank; FIFO among
+            // equals — all-default-priority queues admit oldest-first,
+            // exactly the pre-QoS order
+            let Some(p) = self.paging.as_ref() else { return };
+            let mut best: Option<(usize, u64)> = None;
+            for (i, e) in p.pending.iter().enumerate() {
+                let er = effective_rank(e.limits.priority, tick.saturating_sub(e.queued_tick));
+                if best.map_or(true, |(_, b)| er > b) {
+                    best = Some((i, er));
+                }
+            }
+            let Some((ci, _)) = best else { return };
+            let need = p.pending[ci].stream.len().div_ceil(bk);
+            let crank = p.pending[ci].limits.priority.rank();
+            // cover the candidate: reclaim unreferenced prefix frames,
+            // then (under pressure) preempt strictly-lower residents.
+            // Each retry shrinks the registry or the resident frame
+            // holders, so the loop terminates.
+            let covered = loop {
+                let outstanding = self.outstanding_frames(bk);
+                let Some(p) = self.paging.as_mut() else { return };
+                if p.alloc.free_frames() >= need + outstanding {
+                    break true;
+                }
+                if p.registry.shed(&mut p.alloc) {
+                    continue;
+                }
+                if state != OverloadState::Normal {
+                    let PagedServing { alloc, tier, preempted, .. } = p;
+                    if Self::preempt_below(&mut self.active, alloc, tier.as_mut(), crank, tick) {
+                        *preempted += 1;
+                        continue;
+                    }
+                }
+                break false;
+            };
+            if covered {
+                let Some(p) = self.paging.as_mut() else { return };
+                let Some(e) = p.pending.remove(ci) else { return };
+                let mut paged = self.engine.paged_session();
+                // page table + staged sims sized to the stream's worst
+                // case now, so boundary-crossing decode claims stay
+                // zero-alloc
+                paged.reserve_rows(&p.alloc, e.stream.len());
+                self.push_active(e.id, e.stream, e.arrived, e.limits, SeqSession::Paged(paged));
+                continue;
+            }
+            // Shedding posture: drop the lowest-effective-rank pending
+            // request (at most one per tick) — unless a strictly
+            // lower-priority resident still holds frames, in which case
+            // shedding would invert priority: defer instead and let the
+            // preemption path free those frames on a later tick.
+            if state == OverloadState::Shedding && !shed_this_tick {
+                let Some(p) = self.paging.as_ref() else { return };
+                let mut vic: Option<(usize, u64)> = None;
+                for (i, e) in p.pending.iter().enumerate() {
+                    let er = effective_rank(e.limits.priority, tick.saturating_sub(e.queued_tick));
+                    if vic.map_or(true, |(_, b)| er < b) {
+                        vic = Some((i, er));
+                    }
+                }
+                if let Some((vi, _)) = vic {
+                    let vrank = p.pending[vi].limits.priority.rank();
+                    if !Self::holds_frames_below(&self.active, vrank) {
+                        let Some(p) = self.paging.as_mut() else { return };
+                        shed_this_tick = true;
+                        p.alloc.note_load_shed();
+                        if let Some(e) = p.pending.remove(vi) {
+                            done.push(Self::terminal_result(
+                                e.id,
+                                &e.stream,
+                                e.arrived,
+                                e.limits.priority,
+                                SeqOutcome::Shed,
+                            ));
                         }
                         continue;
                     }
-                    need
-                }
-                None => break,
-            };
-            let outstanding: usize = self
-                .active
-                .iter()
-                .map(|s| match &s.session {
-                    SeqSession::Paged(ps) => {
-                        s.stream.len().div_ceil(bk).saturating_sub(ps.frames_held())
-                    }
-                    SeqSession::Mono(_) => 0,
-                })
-                .sum();
-            while p.alloc.free_frames() < need + outstanding {
-                if !p.registry.shed(&mut p.alloc) {
-                    break;
                 }
             }
-            if p.alloc.free_frames() < need + outstanding {
-                p.alloc.note_load_shed();
-                p.deferred += 1;
-                break;
-            }
-            let Some((id, stream, arrived, limits)) = p.pending.pop_front() else { break };
-            let mut paged = self.engine.paged_session();
-            // page table + staged sims sized to the stream's worst case
-            // now, so boundary-crossing decode claims stay zero-alloc
-            paged.reserve_rows(&p.alloc, stream.len());
-            let session = SeqSession::Paged(paged);
-            self.push_active(id, stream, arrived, limits, session);
+            // defer: count one load-shed and stop admitting this tick
+            let Some(p) = self.paging.as_mut() else { return };
+            p.alloc.note_load_shed();
+            p.deferred += 1;
+            return;
         }
-        // 2) phase snapshot + serial prefill (same structure as the
-        // monolithic tick; a frame-starved chunk defers to next tick)
-        self.decode_phase.clear();
-        self.decode_phase.extend(self.active.iter().map(|s| s.prefilled == s.stream.prefill));
+    }
+
+    /// Preempt (suspend to the offload tier) the resident paged session
+    /// with the lowest declared rank strictly below `rank`, least-
+    /// recently-advanced within a rank. Never one mid-step this tick
+    /// (its pending compute half still needs its page table), never one
+    /// already suspended or holding no frames. Unlike
+    /// [`SessionManager::evict_lru`], mid-prompt sessions ARE eligible —
+    /// excluding them would let a low-priority prefill block a
+    /// high-priority admission, the exact inversion preemption exists to
+    /// prevent (a preempted prefill transparently re-pages-in on its
+    /// next chunk). `rank` is the admission candidate's *declared* rank:
+    /// aging affects admission order only, so an aged `Low` request
+    /// never evicts anyone, and equal-priority traffic never preempts
+    /// itself. True when a session's frames were actually freed.
+    fn preempt_below(
+        active: &mut [ActiveSeq<'_>],
+        alloc: &mut PageAllocator,
+        tier: &mut dyn OffloadTier,
+        rank: u8,
+        tick: u64,
+    ) -> bool {
+        let mut best: Option<usize> = None;
+        for (i, s) in active.iter().enumerate() {
+            if s.outcome.is_some() || s.limits.priority.rank() >= rank || s.last_advanced == tick {
+                continue;
+            }
+            let resident = matches!(&s.session, SeqSession::Paged(ps) if ps.frames_held() > 0);
+            if !resident {
+                continue;
+            }
+            if best.map_or(true, |b| {
+                (s.limits.priority.rank(), s.last_advanced)
+                    < (active[b].limits.priority.rank(), active[b].last_advanced)
+            }) {
+                best = Some(i);
+            }
+        }
+        let Some(i) = best else { return false };
+        let id = active[i].id;
+        let SeqSession::Paged(ps) = &mut active[i].session else { return false };
+        let held = ps.frames_held();
+        // a tier-store failure still freed the frames (the checkpoint
+        // stays session-local, a plain eviction) — the admission goal is
+        // met either way, so the return value only tracks the frames
+        ps.suspend(alloc, id, tier);
+        held > 0 && ps.frames_held() == 0
+    }
+
+    /// True when any live resident with declared rank strictly below
+    /// `rank` still holds frames — the no-priority-inversion guard
+    /// consulted before any shed.
+    fn holds_frames_below(active: &[ActiveSeq<'_>], rank: u8) -> bool {
+        active.iter().any(|s| {
+            s.outcome.is_none()
+                && s.limits.priority.rank() < rank
+                && matches!(&s.session, SeqSession::Paged(ps) if ps.frames_held() > 0)
+        })
+    }
+
+    /// The prefill pass of a paged tick: one bounded chunk per
+    /// mid-prompt session, serially (a chunk already fans its query-tile
+    /// rows across the pool). A frame-starved or suspended session is
+    /// left untouched and retries a later tick — deferral, not failure.
+    fn prefill_pass(&mut self, chunk: usize, tick: u64) {
         for i in 0..self.active.len() {
             if !self.decode_phase[i] && self.active[i].outcome.is_none() {
                 let Some(p) = self.paging.as_mut() else { break };
                 self.active[i].advance_prefill_paged(chunk, &mut p.alloc, &mut p.registry, tick);
             }
         }
-        // 3) decode — serial append halves first (frame claims need the
-        // allocator mutably); sessions whose claim cannot be covered drop
-        // out of this tick's batch untouched
+    }
+
+    /// The decode pass of a paged tick — serial append halves first
+    /// (frame claims need the allocator mutably); sessions whose claim
+    /// cannot be covered drop out of this tick's batch untouched, and
+    /// suspended sessions wait for the resume pass instead of churning
+    /// the eviction path.
+    fn decode_pass(&mut self, tick: u64) {
         self.ready_idx.clear();
         for (i, (s, &d)) in self.active.iter().zip(&self.decode_phase).enumerate() {
-            if d && s.outcome.is_none() && s.decoded < s.target_steps() {
+            if d && s.outcome.is_none() && s.decoded < s.target_steps() && !s.paged_suspended() {
                 self.ready_idx.push(i);
             }
         }
@@ -1035,23 +1392,6 @@ impl<'e> SessionManager<'e> {
                 }
             }
         }
-        // 4) retirement releases the session's frame references back to
-        // the pool before handing the result to the caller — terminal
-        // outcomes (quarantine, deadline) take the same release path an
-        // eviction uses, so no frame outlives its stream
-        let mut i = 0;
-        while i < self.active.len() {
-            if self.active[i].finished() || self.active[i].outcome.is_some() {
-                let mut seq = self.active.remove(i);
-                if let (SeqSession::Paged(ps), Some(p)) = (&mut seq.session, self.paging.as_mut()) {
-                    ps.release(&mut p.alloc);
-                }
-                done.push(seq.into_result());
-            } else {
-                i += 1;
-            }
-        }
-        done
     }
 
     /// Graceful drain: stop admitting (every still-pending stream sheds
@@ -1063,9 +1403,15 @@ impl<'e> SessionManager<'e> {
     pub fn drain(&mut self) -> Vec<SeqResult> {
         let mut done = Vec::new();
         if let Some(p) = self.paging.as_mut() {
-            while let Some((id, stream, arrived, _)) = p.pending.pop_front() {
+            while let Some(e) = p.pending.pop_front() {
                 p.alloc.note_load_shed();
-                done.push(Self::terminal_result(id, &stream, arrived, SeqOutcome::Shed));
+                done.push(Self::terminal_result(
+                    e.id,
+                    &e.stream,
+                    e.arrived,
+                    e.limits.priority,
+                    SeqOutcome::Shed,
+                ));
             }
         }
         // Every tick retires at least the sessions whose outcome is
@@ -1140,6 +1486,7 @@ pub fn run_sequential(engine: &AttnEngine, id: u64, stream: &SeqStream) -> SeqRe
         latency: arrived.elapsed().as_secs_f64(),
         compute,
         outcome: SeqOutcome::Completed,
+        priority: Priority::default(),
     }
 }
 
@@ -1409,7 +1756,7 @@ mod tests {
     fn token_budget_truncates_and_completes() {
         let engine = serving_engine(8, 8, 1);
         let mut mgr = SessionManager::new(&engine, 8);
-        let limits = RequestLimits { deadline_ms: None, token_budget: Some(3) };
+        let limits = RequestLimits { deadline_ms: None, token_budget: Some(3), ..Default::default() };
         mgr.admit_with(0, SeqStream::synth(&spec(16, 10, 91)), Instant::now(), limits);
         let mut done = Vec::new();
         while mgr.active() > 0 {
@@ -1427,7 +1774,7 @@ mod tests {
     fn expired_deadline_cancels_at_tick_boundary() {
         let engine = serving_engine(8, 8, 1);
         let mut mgr = SessionManager::new(&engine, 8);
-        let limits = RequestLimits { deadline_ms: Some(0), token_budget: None };
+        let limits = RequestLimits { deadline_ms: Some(0), token_budget: None, ..Default::default() };
         // arrived in the past: already expired at the first tick boundary
         mgr.admit_with(0, SeqStream::synth(&spec(8, 4, 92)), Instant::now(), limits);
         std::thread::sleep(std::time::Duration::from_millis(2));
@@ -1524,5 +1871,49 @@ mod tests {
             assert_eq!(c.out, f.out, "exhaustion changed output bits (id {})", c.id);
             assert_eq!(c.stats, f.stats);
         }
+    }
+
+    #[test]
+    fn high_priority_preempts_low_and_both_complete_bitwise() {
+        // Pool of 4 frames; a Low stream fills it (3 prefill chunks +
+        // one decode step), then a High stream arrives. The detector
+        // sees zero free frames with work pending and turns Preempting;
+        // the tick checkpoints Low to the offload tier, admits High,
+        // and resumes Low once High retires — both outputs must be
+        // bitwise-identical to uninterrupted sequential runs.
+        let engine = serving_engine(8, 8, 1);
+        let alloc = PageAllocator::new(4, 8, 16, 16);
+        let mut mgr = SessionManager::new_paged(&engine, 8, alloc);
+        let low = spec(24, 4, 210); // 28 rows = all 4 frames
+        let high = spec(16, 4, 211); // 20 rows = 3 frames
+        let lo = RequestLimits { priority: Priority::Low, ..Default::default() };
+        let hi = RequestLimits { priority: Priority::High, ..Default::default() };
+        mgr.admit_with(0, SeqStream::synth(&low), Instant::now(), lo);
+        for _ in 0..4 {
+            assert!(mgr.tick().is_empty(), "Low must still be mid-stream");
+        }
+        mgr.admit_with(1, SeqStream::synth(&high), Instant::now(), hi);
+        let mut done = Vec::new();
+        let mut guard = 0;
+        while mgr.active() > 0 || mgr.pending() > 0 {
+            done.extend(mgr.tick());
+            guard += 1;
+            assert!(guard < 1000, "preemption wedged the loop");
+        }
+        done.sort_by_key(|r| r.id);
+        let (preempted, resumed, to_preempting, _, inversions) = mgr.qos_counters();
+        assert_eq!(preempted, 1, "the Low resident is preempted exactly once");
+        assert_eq!(resumed, 1, "and resumed exactly once");
+        assert!(to_preempting >= 1, "the detector must have entered Preempting");
+        assert_eq!(inversions, 0);
+        assert_eq!(done.len(), 2);
+        for (i, s) in [low, high].iter().enumerate() {
+            let seq = run_sequential(&engine, i as u64, &SeqStream::synth(s));
+            assert_eq!(done[i].outcome, SeqOutcome::Completed, "id {i}");
+            assert_eq!(done[i].out, seq.out, "preempt/resume must stay bitwise (id {i})");
+            assert_eq!(done[i].stats, seq.stats, "id {i}");
+            assert_eq!(done[i].tokens, seq.tokens, "id {i}");
+        }
+        mgr.assert_frames_all_free();
     }
 }

@@ -11,7 +11,10 @@
 //! 4. every produced output row is finite, and every stream's output is
 //!    a **bitwise prefix** of its fault-free sequential run — faults may
 //!    truncate a stream, never corrupt it (stalls change no bits at
-//!    all; poison is screened before it reaches a kernel).
+//!    all; poison is screened before it reaches a kernel);
+//! 5. under burst-arrival overload of a tight pool (the QoS tier), the
+//!    no-priority-inversion counter stays 0 on every seed: a request is
+//!    never shed while a strictly lower-priority resident holds frames.
 //!
 //! Seed count comes from `SPARGE_CHAOS_SEEDS` (default 10 for local
 //! runs; CI's chaos job sweeps 64 in release).
@@ -22,8 +25,8 @@ use std::time::Instant;
 use sparge::attention::paged::PageAllocator;
 use sparge::attention::{AttnConfig, AttnEngine, Execution};
 use sparge::coordinator::{
-    run_sequential, AttnStreamSpec, FaultPlan, RequestLimits, SeqOutcome, SeqResult, SeqStream,
-    SessionManager,
+    run_sequential, AttnStreamSpec, FaultPlan, Priority, RequestLimits, SeqOutcome, SeqResult,
+    SeqStream, SessionManager,
 };
 use sparge::sparge::SpargeParams;
 use sparge::util::rng::Pcg;
@@ -85,6 +88,13 @@ fn schedule(seed: u64) -> Schedule {
                 None
             },
             token_budget: if rng.chance(0.3) { Some(1 + rng.below(4) as usize) } else { None },
+            // mixed QoS classes exercise priority admission order and
+            // (on tight paged pools) the preemption machinery
+            priority: match rng.below(3) {
+                0 => Priority::Low,
+                1 => Priority::High,
+                _ => Priority::Normal,
+            },
         };
         specs.push(AttnStreamSpec {
             prefill: 8 * rng.below(3) as usize, // 0, 8, or 16 rows
@@ -199,6 +209,75 @@ fn chaos_paged_schedules_hold_invariants() {
         // so a leak shows up with the seed attached
         let stats = mgr.page_stats().expect("paged manager");
         assert_eq!(stats.frames_in_use, 0, "seed {seed}: frame leak after drain");
+        let (_, _, _, _, inversions) = mgr.qos_counters();
+        assert_eq!(inversions, 0, "seed {seed}: priority inversion under faults");
+        mgr.assert_frames_all_free();
+    }
+}
+
+#[test]
+fn chaos_overload_bursts_hold_qos_invariants() {
+    // The QoS tier under burst-arrival overload: a deliberately tight
+    // pool (~2x oversubscribed once the bursts land) drives the
+    // hysteresis detector through Preempting/Shedding, and every seed
+    // must still satisfy: exactly one terminal outcome per arrival,
+    // survivors bitwise-faithful to their fault-free sequential run,
+    // zero priority inversions, and a whole pool after drain.
+    quiet_injected_panics();
+    let engine = engine(2);
+    for seed in 0..chaos_seeds() {
+        let mut rng = Pcg::new(seed, 0xb025_7d01_ce5e_ed03);
+        let plan = FaultPlan::default().with_bursts(FaultPlan::seeded_bursts(seed, 10, 3, 3));
+        let arrivals: u32 = plan.bursts().iter().map(|&(_, c)| c).sum();
+        let frames = 4 + rng.below(3) as usize;
+        let alloc = PageAllocator::new(frames, 8, 16, 16);
+        let mut mgr = SessionManager::new_paged(&engine, 8, alloc);
+        let n = 2 + arrivals as usize;
+        let mut specs = Vec::with_capacity(n);
+        for i in 0..n {
+            let limits = RequestLimits {
+                priority: match rng.below(3) {
+                    0 => Priority::Low,
+                    1 => Priority::High,
+                    _ => Priority::Normal,
+                },
+                ..Default::default()
+            };
+            specs.push(AttnStreamSpec {
+                prefill: 8 + 8 * rng.below(2) as usize, // 8 or 16 rows
+                decode: 1 + rng.below(6) as usize,      // 1..=6 steps
+                d: 16,
+                seed: seed.wrapping_mul(4096).wrapping_add(i as u64),
+                limits,
+            });
+        }
+        let sched = Schedule { specs, plan, pre_ticks: 0 };
+        // two base residents up front; the rest arrive mid-serve at
+        // their scheduled burst ticks
+        let mut next = 0usize;
+        let mut done = Vec::new();
+        for _ in 0..2 {
+            let s = &sched.specs[next];
+            mgr.admit_with(next as u64, SeqStream::synth(s), Instant::now(), s.limits);
+            next += 1;
+        }
+        for tick in 0..10u64 {
+            for _ in 0..sched.plan.burst_at(tick) {
+                let s = &sched.specs[next];
+                mgr.admit_with(next as u64, SeqStream::synth(s), Instant::now(), s.limits);
+                next += 1;
+            }
+            done.extend(mgr.tick());
+        }
+        assert_eq!(next, sched.specs.len(), "seed {seed}: burst schedule under-delivered");
+        done.extend(mgr.drain());
+        done.sort_by_key(|r| r.id);
+        assert_invariants(&engine, &sched, &done, seed);
+        let (_, _, _, _, inversions) = mgr.qos_counters();
+        assert_eq!(inversions, 0, "seed {seed}: priority inversion under overload");
+        assert_eq!(mgr.active(), 0, "seed {seed}: drain left residents");
+        assert_eq!(mgr.pending(), 0, "seed {seed}: drain left queued streams");
+        assert_eq!(mgr.prefix_entries(), 0, "seed {seed}: drain left registry entries");
         mgr.assert_frames_all_free();
     }
 }

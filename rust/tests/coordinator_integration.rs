@@ -138,6 +138,7 @@ fn connection_hardening_timeouts_and_structured_read_errors() {
         threads: 1,
         kv_split: sparge::attention::KvSplit::Auto,
         fault: None,
+        paged: None,
     };
     let c = Arc::new(Coordinator::start_kernel(BatchPolicy::default(), opts));
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -197,6 +198,72 @@ fn connection_hardening_timeouts_and_structured_read_errors() {
     drop(client);
     drop(reader);
     server.join().unwrap();
+}
+
+#[test]
+fn paged_serving_shed_carries_structured_backpressure() {
+    // Artifact-free: a kernel-only coordinator over a tiny paged frame
+    // pool. A stream whose KV footprint exceeds the whole pool is
+    // terminally unservable — it must retire as a structured shed whose
+    // response carries the retry hint, while a pool-sized stream served
+    // right after completes normally (the loop survives the shed).
+    use sparge::coordinator::{AttnStreamSpec, PagedServe};
+    let opts = ServeOptions {
+        chunk: 32,
+        params: sparge::sparge::SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false },
+        cfg: sparge::attention::AttnConfig {
+            bq: 16,
+            bk: 8,
+            causal: true,
+            scale: None,
+            cw: 2,
+            row_offset: 0,
+        },
+        threads: 1,
+        kv_split: sparge::attention::KvSplit::Auto,
+        fault: None,
+        paged: Some(PagedServe { frames: 4, d: 16, dv: 16, spill_to_disk: false }),
+    };
+    let c = Coordinator::start_kernel(BatchPolicy::default(), opts);
+    // pool-sized stream: 20 rows = 3 frames of 4, completes
+    let ok = c
+        .serve_stream(AttnStreamSpec { prefill: 16, decode: 4, d: 16, seed: 3, ..Default::default() })
+        .unwrap();
+    assert!(ok.error.is_none(), "pool-sized stream must complete: {:?}", ok.error);
+    assert_eq!(ok.tokens, 4);
+    assert!(ok.retry_after_ms.is_none(), "a completed stream carries no retry hint");
+    // 52 rows = 7 frames > the pool's 4: terminally unservable, shed
+    let shed = c
+        .serve_stream(AttnStreamSpec { prefill: 48, decode: 4, d: 16, seed: 4, ..Default::default() })
+        .unwrap();
+    assert_eq!(shed.error.as_deref(), Some("stream terminated: shed"));
+    assert!(shed.retry_after_ms.is_some(), "a shed stream must carry retry_after_ms");
+    assert!(shed.queue_depth.is_some(), "a shed stream must carry queue_depth");
+    // dims mismatched to the pool fail the request, never the loop
+    let bad = c
+        .serve_stream(AttnStreamSpec { prefill: 16, decode: 2, d: 32, seed: 5, ..Default::default() })
+        .unwrap();
+    assert!(
+        bad.error.as_deref().is_some_and(|e| e.contains("paged KV pool")),
+        "mismatched dims must get a structured error: {:?}",
+        bad.error
+    );
+    // the stats op exports the shed counter and the QoS keys
+    let stats = sparge::coordinator::server::dispatch(&c, r#"{"op":"stats"}"#);
+    assert!(stats.get("shed").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(stats.get("overload_state").and_then(|v| v.as_str()).is_some());
+    assert!(stats.get("ttft_p99_ms_by_priority").is_some());
+    assert!(stats.get("preempted").is_some());
+    // a bad priority string on the serve op is a structured error too
+    let err = sparge::coordinator::server::dispatch(
+        &c,
+        r#"{"op":"attn","mode":"serve","sessions":1,"n":16,"steps":2,"d":16,"priority":"urgent"}"#,
+    );
+    assert!(
+        err.get("error").and_then(|v| v.as_str()).is_some_and(|e| e.contains("bad priority")),
+        "unknown priority must be rejected"
+    );
+    c.shutdown();
 }
 
 #[test]

@@ -1,0 +1,233 @@
+//! Property suite for the offload-tier seam
+//! (`sparge::attention::offload`): random checkpoint geometries ×
+//! precisions round-trip **byte-identically** through both the
+//! in-memory and the checksummed on-disk tier (NaN payload bits
+//! included); any single flipped byte of an on-disk checkpoint surfaces
+//! as a quarantine value — never a panic; and every session-level
+//! scenario returns its frame pool to empty (`assert_all_free`).
+
+use sparge::attention::{
+    AttnConfig, AttnEngine, DiskTier, FrameCheckpoint, MemTier, OffloadError, OffloadTier,
+    PageAllocator, Precision,
+};
+use sparge::tensor::Tensor;
+use sparge::util::prop::Cases;
+use sparge::util::rng::Pcg;
+
+/// A random checkpoint with plausible per-frame geometry and adversarial
+/// payload bits: every f32 section occasionally gets a NaN with a
+/// payload, which must survive the round-trip as exact bits.
+fn random_ckpt(rng: &mut Pcg, quant: bool) -> (FrameCheckpoint, usize) {
+    let d = rng.range(1, 12);
+    let dv = rng.range(1, 12);
+    let bk = rng.range(1, 7);
+    let frames = rng.range(1, 7);
+    let mut adversarial = |rng: &mut Pcg| -> f32 {
+        if rng.chance(0.05) {
+            f32::from_bits(0x7fc0_0000 | rng.next_u32() & 0x003f_ffff)
+        } else {
+            rng.gauss()
+        }
+    };
+    let mut c = FrameCheckpoint { d, dv, ..Default::default() };
+    for _ in 0..frames {
+        let rows = rng.range(1, bk + 1);
+        c.prow.push(rows);
+        c.sim.push(adversarial(rng));
+        for _ in 0..rows * d {
+            c.k.push(adversarial(rng));
+            if quant {
+                c.qdata.push(rng.next_u32() as i8);
+            }
+        }
+        for _ in 0..rows * dv {
+            c.v.push(adversarial(rng));
+        }
+        for _ in 0..d {
+            c.psum.push(adversarial(rng));
+        }
+        if quant {
+            c.qscale.push(rng.f32().abs() + 1e-3);
+        }
+    }
+    (c, bk)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_payload_bits_eq(a: &FrameCheckpoint, b: &FrameCheckpoint, what: &str) {
+    assert_eq!(a.d, b.d, "{what}: d");
+    assert_eq!(a.dv, b.dv, "{what}: dv");
+    assert_eq!(a.prow, b.prow, "{what}: prow");
+    assert_eq!(bits(&a.sim), bits(&b.sim), "{what}: sim bits");
+    assert_eq!(bits(&a.k), bits(&b.k), "{what}: k bits");
+    assert_eq!(bits(&a.v), bits(&b.v), "{what}: v bits");
+    assert_eq!(bits(&a.psum), bits(&b.psum), "{what}: psum bits");
+    assert_eq!(bits(&a.qscale), bits(&b.qscale), "{what}: qscale bits");
+    assert_eq!(a.qdata, b.qdata, "{what}: qdata bytes");
+}
+
+#[test]
+fn random_checkpoints_round_trip_byte_identically_through_both_tiers() {
+    let mut disk = DiskTier::scratch("prop-roundtrip").expect("temp dir");
+    let mut mem = MemTier::new();
+    Cases::standard(1101).check(|rng| {
+        let quant = rng.chance(0.5);
+        let (original, bk) = random_ckpt(rng, quant);
+        assert!(original.consistent(bk), "generator must produce consistent geometry");
+        let key = rng.next_u64();
+        for (tier, label) in
+            [(&mut mem as &mut dyn OffloadTier, "mem"), (&mut disk as &mut dyn OffloadTier, "disk")]
+        {
+            let mut ckpt = original.clone();
+            tier.store(key, &mut ckpt).expect("store");
+            assert!(ckpt.is_empty(), "{label}: store must empty the caller's checkpoint");
+            let mut back = FrameCheckpoint::default();
+            tier.load(key, &mut back).expect("load");
+            assert_payload_bits_eq(&back, &original, label);
+            assert!(back.consistent(bk), "{label}: round-trip must stay consistent");
+            assert!(tier.is_empty(), "{label}: load consumes the stored payload");
+        }
+    });
+}
+
+#[test]
+fn any_flipped_byte_quarantines_never_panics() {
+    // Flip one byte at a RANDOM offset of a stored on-disk checkpoint:
+    // wherever it lands — magic, header lengths, payload, or the
+    // trailing checksum itself — the load must come back as a Corrupt
+    // value. A truncated file behaves the same.
+    let mut tier = DiskTier::scratch("prop-corrupt").expect("temp dir");
+    Cases::standard(1102).check(|rng| {
+        let quant = rng.chance(0.5);
+        let (original, _) = random_ckpt(rng, quant);
+        let key = rng.next_u64();
+        let mut ckpt = original.clone();
+        tier.store(key, &mut ckpt).expect("store");
+        let path = tier.path_for(key);
+        let mut bytes = std::fs::read(&path).expect("stored file");
+        if rng.chance(0.8) {
+            let at = rng.range(0, bytes.len());
+            let bit = 1u8 << rng.below(8);
+            bytes[at] ^= bit;
+            std::fs::write(&path, &bytes).expect("rewrite");
+        } else {
+            std::fs::write(&path, &bytes[..rng.range(0, bytes.len())]).expect("truncate");
+        }
+        let mut back = FrameCheckpoint::default();
+        assert_eq!(
+            tier.load(key, &mut back),
+            Err(OffloadError::Corrupt),
+            "a damaged checkpoint must quarantine as a value"
+        );
+        assert!(tier.is_empty(), "a corrupt load still consumes the key");
+    });
+}
+
+#[test]
+fn session_suspend_resume_scenarios_return_the_pool_to_empty() {
+    // Session-level property over random pool sizes × precisions: a
+    // paged session suspended to either tier mid-decode and resumed
+    // produces the exact bits of its never-suspended twin, and every
+    // scenario — including a corrupted-checkpoint quarantine — closes
+    // with `assert_all_free`.
+    Cases::standard(1103).check(|rng| {
+        let d = rng.range(2, 10);
+        let bk = rng.range(1, 5);
+        let frames = rng.range(2, 6);
+        let int8 = rng.chance(0.3);
+        let cfg = AttnConfig { bq: 4, bk, causal: true, scale: None, cw: 2, row_offset: 0 };
+        let engine = if int8 {
+            AttnEngine::builder().config(cfg).precision(Precision::Int8).build()
+        } else {
+            AttnEngine::builder().config(cfg).build()
+        };
+        let tokens = frames * bk;
+        let mut r = Pcg::seeded(rng.next_u64());
+        let q = Tensor::randn(&[tokens, d], &mut r);
+        let k = Tensor::randn(&[tokens, d], &mut r);
+        let v = Tensor::randn(&[tokens, d], &mut r);
+        let mk_alloc = |frames: usize| {
+            let a = PageAllocator::new(frames, bk, d, d);
+            if int8 {
+                a.with_quant()
+            } else {
+                a
+            }
+        };
+        // twin A: never suspended
+        let mut alloc_a = mk_alloc(frames);
+        let mut sa = engine.paged_session();
+        let mut plain = Vec::new();
+        for t in 0..tokens {
+            plain.push(
+                sa.decode(&mut alloc_a, &q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1))
+                    .expect("pool fits the stream"),
+            );
+        }
+        // twin B: suspended to a random tier mid-decode, then resumed
+        let mut tier: Box<dyn OffloadTier> = if rng.chance(0.5) {
+            Box::new(DiskTier::scratch("prop-session").expect("temp dir"))
+        } else {
+            Box::new(MemTier::new())
+        };
+        let cut = rng.range(1, tokens);
+        let mut alloc_b = mk_alloc(frames);
+        let mut sb = engine.paged_session();
+        let mut interrupted = Vec::new();
+        for t in 0..tokens {
+            if t == cut {
+                assert!(sb.suspend(&mut alloc_b, 9, tier.as_mut()), "suspend must checkpoint");
+                assert_eq!(alloc_b.stats().frames_in_use, 0, "suspension frees every frame");
+                assert!(
+                    sb.resume(&mut alloc_b, 9, tier.as_mut()).expect("tier load"),
+                    "the empty pool must cover the re-page-in"
+                );
+                tier.discard(9);
+            }
+            interrupted.push(
+                sb.decode(&mut alloc_b, &q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1))
+                    .expect("pool fits the stream"),
+            );
+        }
+        for (t, (a, b)) in plain.iter().zip(&interrupted).enumerate() {
+            assert_eq!(a.out, b.out, "step {t}: suspend/resume must stay bitwise");
+            assert_eq!(a.stats, b.stats, "step {t}: stats must stay bitwise");
+        }
+        sa.release(&mut alloc_a);
+        sb.release(&mut alloc_b);
+        alloc_a.assert_all_free();
+        alloc_b.assert_all_free();
+    });
+}
+
+#[test]
+fn corrupted_resume_quarantines_and_pool_stays_whole() {
+    // The quarantine path end-to-end at the session level: suspend to
+    // disk, rot the file, resume fails as a value, the session is
+    // permanently suspended, and the pool is already whole.
+    let cfg = AttnConfig { bq: 4, bk: 4, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let engine = AttnEngine::builder().config(cfg).build();
+    let mut r = Pcg::seeded(77);
+    let q = Tensor::randn(&[8, 6], &mut r);
+    let k = Tensor::randn(&[8, 6], &mut r);
+    let v = Tensor::randn(&[8, 6], &mut r);
+    let mut alloc = PageAllocator::new(4, 4, 6, 6);
+    let mut s = engine.paged_session();
+    for t in 0..8 {
+        s.decode(&mut alloc, &q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1)).expect("frames");
+    }
+    let mut tier = DiskTier::scratch("prop-quarantine").expect("temp dir");
+    assert!(s.suspend(&mut alloc, 3, &mut tier));
+    let path = tier.path_for(3);
+    let mut bytes = std::fs::read(&path).expect("stored file");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&path, &bytes).expect("rewrite");
+    assert_eq!(s.resume(&mut alloc, 3, &mut tier), Err(OffloadError::Corrupt));
+    assert!(s.is_suspended(), "a lost checkpoint leaves the session suspended");
+    s.release(&mut alloc);
+    alloc.assert_all_free();
+}

@@ -8,8 +8,8 @@
 use std::time::Instant;
 
 use sparge::attention::{
-    AttnConfig, AttnEngine, AttnOutput, BlockMask, Execution, KvSplit, PageAllocator, Precision,
-    PrefixRegistry, SparsityPolicy,
+    AttnConfig, AttnEngine, AttnOutput, BlockMask, DiskTier, Execution, KvSplit, MemTier,
+    OffloadTier, PageAllocator, Precision, PrefixRegistry, SparsityPolicy,
 };
 use sparge::coordinator::{run_sequential, AttnStreamSpec, SeqStream, SessionManager};
 use sparge::sparge::SpargeParams;
@@ -406,6 +406,84 @@ fn evict_and_repage_in_decode_is_bitwise() {
     s8.release(&mut alloc_b);
     alloc_a.assert_all_free();
     alloc_b.assert_all_free();
+}
+
+#[test]
+fn suspend_and_resume_mid_decode_is_bitwise() {
+    // The preemption tentpole contract: a session suspended mid-decode
+    // (payload checkpointed to an offload tier, every frame released)
+    // must, after resume, keep producing the exact bits of the
+    // monolithic baseline — for f32/λ-off across every executor, through
+    // both the in-memory tier and the checksummed on-disk tier.
+    let (q, k, v) = qkv(64, 16, 941);
+    let cfg = AttnConfig { bq: 16, bk: 8, causal: true, scale: None, cw: 2, row_offset: 0 };
+    let n0 = 32;
+    let predicted = SparsityPolicy::Predicted {
+        params: SpargeParams { tau: 0.9, theta: 0.3, lambda: None, quant: false }.predict_params(),
+        lambda: None,
+    };
+    let execs = [
+        Execution::Inline,
+        Execution::Threads(4),
+        Execution::Pool(1),
+        Execution::Pool(2),
+        Execution::Pool(8),
+    ];
+    for (ei, exec) in execs.into_iter().enumerate() {
+        let engine =
+            AttnEngine::builder().config(cfg).policy(predicted.clone()).execution(exec).build();
+        let mono = run_mono(&engine, &q, &k, &v, n0);
+        for disk in [false, true] {
+            let mut tier: Box<dyn OffloadTier> = if disk {
+                Box::new(DiskTier::scratch(&format!("pin-{ei}")).expect("temp dir"))
+            } else {
+                Box::new(MemTier::new())
+            };
+            // 8 frames holds the 64-row stream exactly; 16 is roomy
+            for frames in [8, 16] {
+                let mut alloc = PageAllocator::new(frames, 8, 16, 16);
+                let mut session = engine.paged_session();
+                let mut outs = Vec::new();
+                outs.push(
+                    session
+                        .prefill(&mut alloc, &q.rows(0, n0), &k.rows(0, n0), &v.rows(0, n0))
+                        .expect("frames"),
+                );
+                for t in n0..q.dim(0) {
+                    if t == n0 + 16 {
+                        assert!(
+                            session.suspend(&mut alloc, 7, tier.as_mut()),
+                            "suspend must checkpoint (disk={disk})"
+                        );
+                        assert!(session.is_suspended());
+                        assert_eq!(
+                            alloc.stats().frames_in_use,
+                            0,
+                            "suspension returns every frame"
+                        );
+                        assert!(
+                            session.resume(&mut alloc, 7, tier.as_mut()).expect("tier load"),
+                            "an empty pool must cover the re-page-in"
+                        );
+                        assert!(!session.is_suspended());
+                        tier.discard(7);
+                    }
+                    outs.push(
+                        session
+                            .decode(&mut alloc, &q.rows(t, t + 1), &k.rows(t, t + 1), &v.rows(t, t + 1))
+                            .expect("frames"),
+                    );
+                }
+                for (t, (a, b)) in mono.iter().zip(&outs).enumerate() {
+                    assert_eq!(a.out, b.out, "suspend/resume step {t} output bits (disk={disk})");
+                    assert_eq!(a.stats, b.stats, "suspend/resume step {t} stats (disk={disk})");
+                    assert_eq!(a.mask, b.mask, "suspend/resume step {t} mask (disk={disk})");
+                }
+                session.release(&mut alloc);
+                alloc.assert_all_free();
+            }
+        }
+    }
 }
 
 #[test]

@@ -23,6 +23,7 @@ fn opts() -> ServeOptions {
         threads: 2,
         kv_split: sparge::attention::KvSplit::Auto,
         fault: None,
+        paged: None,
     }
 }
 
